@@ -1,0 +1,86 @@
+//! Failover walkthrough: the two recovery paths of §5.3 / §5.4.
+//!
+//! ```bash
+//! cargo run --release --example failover_demo
+//! ```
+//!
+//! Scenario A — progress failover: nodes 4–6 of a 9-node chain are taken
+//! out after key exchange (exactly the paper's §6.3 methodology). The
+//! external monitor detects each stall and re-routes the chain; the final
+//! average covers the 6 survivors and costs 4(n−f) + 2f messages.
+//!
+//! Scenario B — initiator failover: the initiator crashes after posting
+//! its masked vector. Everyone times out, `should_initiate` elects a new
+//! initiator, the round restarts, and the dead initiator is later skipped
+//! by a progress failover on the second pass.
+
+use std::time::Duration;
+
+use safe_agg::config::SessionConfig;
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::{FailPoint, FaultPlan};
+use safe_agg::protocols::SafeSession;
+
+fn cfg(n: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features: 4,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 1024,
+        poll_time: Duration::from_millis(200),
+        aggregation_timeout: Duration::from_secs(3),
+        progress_timeout: Duration::from_millis(700),
+        monitor_interval: Duration::from_millis(100),
+        ..Default::default()
+    }
+}
+
+fn inputs(n: usize) -> Vec<Vec<f64>> {
+    (1..=n).map(|i| vec![i as f64; 4]).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("=== Scenario A: progress failover (nodes 4-6 down, §5.3) ===");
+    let session = SafeSession::new(cfg(9))?;
+    let result = session.run_round(&inputs(9), &FaultPlan::kill_range(4, 6))?;
+    let m = &result.metrics;
+    println!("  completed in {:.3}s", m.secs());
+    println!("  progress failovers: {} (expected 3)", m.progress_failovers);
+    println!("  contributors      : {} of 9", m.contributors);
+    // Note: with short long-poll windows each retry counts as a message;
+    // the §5.3 formula 4(n−f)+2f counts logical messages and is verified
+    // exactly (no-retry polling) in `cargo bench --bench microbench`.
+    println!(
+        "  messages          : {} incl. poll retries (logical formula 4(n−f)+2f = {})",
+        m.messages,
+        4 * 6 + 2 * 3
+    );
+    let expect = (1 + 2 + 3 + 7 + 8 + 9) as f64 / 6.0;
+    println!("  average           : {:.4} (expected {:.4})", m.average[0], expect);
+    assert!((m.average[0] - expect).abs() < 1e-6);
+    assert_eq!(m.contributors, 6);
+
+    println!("\n=== Scenario B: initiator failover (initiator crashes, §5.4) ===");
+    let session = SafeSession::new(cfg(5))?;
+    let faults = FaultPlan::none().kill(1, FailPoint::InitiatorAfterPost);
+    let result = session.run_round(&inputs(5), &faults)?;
+    let m = &result.metrics;
+    println!("  completed in {:.3}s (includes the {}s election timeout)", m.secs(), 3);
+    println!("  initiator failovers: {}", m.initiator_failovers);
+    println!("  contributors       : {} of 5", m.contributors);
+    let new_initiator = result
+        .outcomes
+        .iter()
+        .find(|o| !o.died && o.was_initiator)
+        .map(|o| o.node)
+        .unwrap();
+    println!("  new initiator      : node {new_initiator}");
+    let expect = (2 + 3 + 4 + 5) as f64 / 4.0;
+    println!("  average            : {:.4} (expected {:.4})", m.average[0], expect);
+    assert!((m.average[0] - expect).abs() < 1e-6);
+    assert!(m.initiator_failovers >= 1);
+    assert_ne!(new_initiator, 1);
+
+    println!("\nfailover_demo OK");
+    Ok(())
+}

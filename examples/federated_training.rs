@@ -1,0 +1,72 @@
+//! End-to-end driver (EXPERIMENTS.md E19): federated training of an MLP
+//! across 6 learners where every round's parameter averaging runs through
+//! a full SAFE secure-aggregation round — weighted by local sample counts
+//! (§5.6) and executed through the AOT-compiled PJRT train step when
+//! `make artifacts` has been run (pure-Rust oracle otherwise).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example federated_training
+//! ```
+//!
+//! Prints the validation-loss curve; EXPERIMENTS.md records a reference
+//! run. All three layers compose here: L1 Pallas matmuls inside the L2
+//! train step, loaded and executed from the L3 coordinator, with the
+//! parameters protected by the L3 chain protocol in between.
+
+use std::time::Duration;
+
+use safe_agg::config::SessionConfig;
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::fl::{self, FlConfig};
+
+fn main() -> anyhow::Result<()> {
+    let session_cfg = SessionConfig {
+        n_nodes: 6,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 1024,
+        poll_time: Duration::from_millis(300),
+        aggregation_timeout: Duration::from_secs(60),
+        progress_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    let fl_cfg = FlConfig {
+        rounds: 40,
+        local_steps: 4,
+        lr: 0.05,
+        rows_per_node: 512,
+        non_iid: true,
+        seed: 42,
+    };
+    let trainer = fl::default_trainer()?;
+    println!(
+        "federated training: {} nodes, {} rounds x {} local steps, trainer={} ({} params)",
+        session_cfg.n_nodes,
+        fl_cfg.rounds,
+        fl_cfg.local_steps,
+        trainer.name(),
+        trainer.param_count(),
+    );
+    println!("secure aggregation: SAFE hybrid encryption, weighted averaging (§5.6)\n");
+
+    let result = fl::run_federated(&session_cfg, &fl_cfg, trainer)?;
+
+    println!("round | val_loss | mean_local_loss | agg_secs | agg_msgs");
+    for r in &result.curve {
+        if r.round % 4 == 0 || r.round + 1 == result.curve.len() {
+            println!(
+                "{:>5} | {:>8.5} | {:>15.5} | {:>8.4} | {:>8}",
+                r.round, r.val_loss, r.mean_local_loss, r.agg_wall_secs, r.agg_messages
+            );
+        }
+    }
+    let first = result.curve.first().unwrap().val_loss;
+    let last = result.curve.last().unwrap().val_loss;
+    println!(
+        "\nvalidation loss {first:.5} → {last:.5} ({}x reduction) via {}",
+        first / last.max(1e-9),
+        result.trainer_name
+    );
+    assert!(last < first, "training must improve validation loss");
+    println!("federated_training OK");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Hierarchical federation (paper §5.10): two independent SAFE
+//! deployments (child controllers), each aggregating its own learner
+//! chain, post their anonymized averages up to a parent controller over
+//! HTTP; the parent releases the contributor-weighted global average.
+//!
+//! ```bash
+//! cargo run --release --example hierarchical
+//! ```
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use safe_agg::config::SessionConfig;
+use safe_agg::controller::{Controller, ControllerConfig};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::json::Value;
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::proto;
+use safe_agg::protocols::hierarchy::FederationBridge;
+use safe_agg::protocols::SafeSession;
+use safe_agg::transport::http::{HttpServer, HttpTransport};
+use safe_agg::transport::ClientTransport;
+
+fn child_cfg(n: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features: 3,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 1024,
+        seed: Some(n as u64), // different keys per child org
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // Parent controller serves real HTTP (the cross-organization link).
+    let parent = Arc::new(Controller::new(ControllerConfig {
+        poll_time: Duration::from_millis(300),
+        ..Default::default()
+    }));
+    let server = HttpServer::start("127.0.0.1:0", parent.clone())?;
+    println!("parent controller on {}", server.url());
+    let admin = HttpTransport::connect(&server.url())?;
+    admin.call(
+        proto::CONFIGURE,
+        &Value::object(vec![("fed_expected_children", Value::from(2u64))]),
+    )?;
+
+    // Two child organizations run their own SAFE chains in parallel.
+    let mut handles = Vec::new();
+    for (child_id, n) in [(1u64, 4usize), (2u64, 6usize)] {
+        let url = server.url();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<(u64, Vec<f64>)> {
+            let cfg = child_cfg(n);
+            let session = SafeSession::new(cfg.clone())?;
+            let inputs: Vec<Vec<f64>> = (1..=n)
+                .map(|i| vec![(child_id * 100 + i as u64) as f64; cfg.features])
+                .collect();
+            let result = session.run_round(&inputs, &FaultPlan::none())?;
+            println!(
+                "child {child_id}: {} learners aggregated in {:.3}s → {:?}",
+                n,
+                result.metrics.secs(),
+                &result.average()[..1]
+            );
+            // §5.10: post the (already anonymized) child average upward.
+            let parent_link: Arc<dyn ClientTransport> =
+                Arc::new(HttpTransport::connect(&url)?);
+            let bridge = FederationBridge::new(child_id, parent_link);
+            bridge.post_child_average(result.average(), result.metrics.contributors)?;
+            let (global, total) = bridge.get_global_average(Duration::from_secs(10))?;
+            println!("child {child_id}: received global average over {total} learners");
+            Ok((child_id, global))
+        }));
+    }
+    let mut globals = Vec::new();
+    for h in handles {
+        globals.push(h.join().unwrap()?);
+    }
+    // Both children converged on the same global average.
+    assert_eq!(globals[0].1, globals[1].1);
+    // Check the weighted math: child1 mean=102.5 (4 nodes), child2
+    // mean=203.5 (6 nodes) → global (102.5*4 + 203.5*6)/10 = 163.1.
+    let expect = (102.5 * 4.0 + 203.5 * 6.0) / 10.0;
+    println!("\nglobal average = {:.2} (expected {:.2})", globals[0].1[0], expect);
+    assert!((globals[0].1[0] - expect).abs() < 1e-6);
+    println!("hierarchical OK");
+    Ok(())
+}

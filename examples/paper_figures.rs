@@ -1,0 +1,53 @@
+//! Regenerate every figure in the paper's evaluation (§6 Figs 6–14, §7
+//! Figs 15–20) plus the headline BON/SAFE ratio table.
+//!
+//! ```bash
+//! cargo run --release --example paper_figures            # quick sweeps
+//! SAFE_BENCH_FULL=1 SAFE_BENCH_REPEATS=30 \
+//! cargo run --release --example paper_figures            # paper scale
+//! ```
+//!
+//! Tables print to stdout; CSVs land in bench_out/. EXPERIMENTS.md records
+//! a reference run with the paper-vs-measured comparison for every figure.
+
+use safe_agg::harness::figures as f;
+
+fn main() -> anyhow::Result<()> {
+    println!("regenerating paper figures (quick mode unless SAFE_BENCH_FULL=1)\n");
+
+    // ---- §6 edge platform ----
+    f::fig6()?.emit(None);
+    f::fig7()?.emit(None);
+    f::fig8()?.emit(None);
+    f::fig9()?.emit(None);
+    f::fig10()?.emit(None);
+    f::fig11()?.emit(None);
+    f::fig12()?.emit(None);
+
+    let fig13 = f::fig13()?;
+    fig13.emit(None);
+    f::fig14(&fig13).emit(None);
+
+    println!("── headline — BON/SAFE aggregation-time ratios (abstract, §6.3) ──");
+    println!("{:>15} {:>20} {:>20}", "completed", "no-failover", "with-failover");
+    for (x, plain, failover) in f::headline_ratios(&fig13) {
+        println!(
+            "{:>15} {:>19.1}x {:>19.1}x",
+            x,
+            plain.unwrap_or(f64::NAN),
+            failover.unwrap_or(f64::NAN)
+        );
+    }
+    println!("  (paper: 38x/42x at 24 completed nodes; 56x/70x at 36)\n");
+
+    // ---- §7 deep-edge platform (simulated Archer C7 profile) ----
+    f::deep_edge_nodes("fig15", "Deep-Edge. 1 Feature.", 1)?.emit(None);
+    f::deep_edge_nodes("fig16", "Deep-Edge. 20 Features.", 20)?.emit(None);
+    f::deep_edge_features("fig17", "Deep-Edge. 3 Nodes.", 3)?.emit(None);
+    f::deep_edge_features("fig18", "Deep-Edge. 12 Nodes.", 12)?.emit(None);
+    f::subgroup_figure("fig19", "Deep-Edge. 12 Nodes 1 Feature.", 1)?.emit(None);
+    f::subgroup_figure("fig20", "Deep-Edge. 12 Nodes 20 Features.", 20)?.emit(None);
+
+    println!("all figures written to bench_out/*.csv");
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Perf probe: instant-profile rounds isolate real code cost.
+use safe_agg::config::{DeviceProfile, SessionConfig};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::protocols::SafeSession;
+use std::time::{Duration, Instant};
+
+fn run(n: usize, feats: usize, reps: usize) -> f64 {
+    let cfg = SessionConfig {
+        n_nodes: n,
+        features: feats,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 1024,
+        profile: DeviceProfile::instant(),
+        poll_time: Duration::from_secs(5),
+        aggregation_timeout: Duration::from_secs(60),
+        progress_timeout: Duration::from_secs(30),
+        ..Default::default()
+    };
+    let session = SafeSession::new(cfg).unwrap();
+    let inputs: Vec<Vec<f64>> = (0..n).map(|i| (0..feats).map(|f| (i+f) as f64).collect()).collect();
+    session.run_round(&inputs, &FaultPlan::none()).unwrap(); // warm
+    let t = Instant::now();
+    for _ in 0..reps { session.run_round(&inputs, &FaultPlan::none()).unwrap(); }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    for (n, f, reps) in [(36usize, 1usize, 10usize), (36, 10_000, 5), (100, 1, 5), (100, 10_000, 3)] {
+        println!("SAFE n={n:<4} feats={f:<6}: {:.4}s", run(n, f, reps));
+    }
+}

@@ -1,0 +1,59 @@
+//! Quickstart: one SAFE secure-aggregation round with 5 learners.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds an in-process deployment (controller + 5 learner threads +
+//! progress monitor), exchanges RSA keys (round 0), then runs the chain
+//! aggregation: the initiator masks its vector, each learner adds its own
+//! under hybrid RSA+AES encryption, and the initiator publishes the
+//! average. The controller only ever sees ciphertext.
+
+use safe_agg::config::SessionConfig;
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::protocols::SafeSession;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SessionConfig {
+        n_nodes: 5,
+        features: 8,
+        mode: CipherMode::Hybrid, // "SAFE" — RSA-sealed AES key + compressed payload
+        rsa_bits: 1024,
+        ..Default::default()
+    };
+
+    println!("setting up: {} learners, {} features, hybrid encryption", cfg.n_nodes, cfg.features);
+    let session = SafeSession::new(cfg.clone())?;
+    println!("round 0 done: {} key-exchange messages\n", session.round0_messages);
+
+    // Each learner's private vector: node i contributes [i, i+0.1, ...].
+    let inputs: Vec<Vec<f64>> = (1..=cfg.n_nodes)
+        .map(|i| (0..cfg.features).map(|f| i as f64 + f as f64 / 10.0).collect())
+        .collect();
+
+    let result = session.run_round(&inputs, &FaultPlan::none())?;
+    let m = &result.metrics;
+
+    println!("aggregation complete in {:.3}s", m.secs());
+    println!("  messages      : {} (= 4n = {})", m.messages, 4 * cfg.n_nodes);
+    println!("  bytes on wire : {}", m.bytes_sent);
+    println!("  contributors  : {}", m.contributors);
+    println!("  average       : {:?}", &m.average[..4.min(m.average.len())]);
+
+    // Verify against the cleartext mean.
+    let expect: Vec<f64> = (0..cfg.features)
+        .map(|f| inputs.iter().map(|v| v[f]).sum::<f64>() / cfg.n_nodes as f64)
+        .collect();
+    let max_err = m
+        .average
+        .iter()
+        .zip(&expect)
+        .map(|(a, e)| (a - e).abs())
+        .fold(0.0f64, f64::max);
+    println!("  max error vs cleartext mean: {max_err:.2e}");
+    assert!(max_err < 1e-6);
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,97 @@
+"""AOT pipeline: lower the L2 graphs to HLO text under artifacts/.
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts`` (no-op when inputs are unchanged). Python
+never runs on the aggregation path — the Rust binary loads these files
+through PJRT.
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for the Rust
+    side's ``to_tuple`` unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, name: str, fn, example_args) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    args = parser.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    f64 = jnp.float64
+    total = 0
+
+    # Chain ops per bucket (f64 so Rust-side protocol math is exact).
+    for bucket in model.BUCKETS:
+        vec = jax.ShapeDtypeStruct((bucket,), f64)
+        scalar = jax.ShapeDtypeStruct((1,), f64)
+        total += emit(out_dir, f"chain_add_{bucket}", model.chain_add, (vec, vec))
+        total += emit(
+            out_dir, f"finalize_{bucket}", model.finalize, (vec, vec, scalar)
+        )
+        print(f"  chain ops bucket {bucket}: ok")
+
+    # Train step + loss (f32).
+    shapes = model.train_step_shapes()
+    total += emit(out_dir, "train_step", model.train_step_flat, shapes)
+    total += emit(out_dir, "predict_loss", model.predict_loss_flat, shapes[:6])
+    print("  train_step / predict_loss: ok")
+
+    manifest = {
+        "buckets": list(model.BUCKETS),
+        "dtype_chain": "f64",
+        "train_step": {
+            "in": model.DIM_IN,
+            "hidden": model.DIM_HIDDEN,
+            "out": model.DIM_OUT,
+            "batch": model.BATCH,
+            "dtype": "f32",
+            "params": model.DIM_IN * model.DIM_HIDDEN
+            + model.DIM_HIDDEN
+            + model.DIM_HIDDEN * model.DIM_OUT
+            + model.DIM_OUT,
+        },
+        "format": "hlo-text",
+        "jax_version": jax.__version__,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {total} chars of HLO + manifest.json to {out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

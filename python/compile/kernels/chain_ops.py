@@ -1,0 +1,95 @@
+"""L1 Pallas kernels for the SAFE chain's vector arithmetic.
+
+The aggregation hot path does three elementwise vector ops per learner per
+round (mask, chain-add, finalize). They are written as Pallas kernels with
+an explicit HBM→VMEM tiling schedule via ``BlockSpec`` so the same code
+lowers to an efficient TPU loop; on this CPU-only image they MUST run with
+``interpret=True`` (real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute — see /opt/xla-example/README.md).
+
+Hardware adaptation (DESIGN.md §2): the paper targets constrained CPUs, so
+there is no CUDA mapping to undo; the TPU tiling story is simply "stream
+the feature vector through VMEM in BLOCK-sized tiles". BLOCK=512 f64 lanes
+= 4 KiB/operand per tile, far under the ~16 MiB VMEM budget even with
+double buffering; the grid dimension covers arbitrarily long vectors.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile width (f64 lanes). 512×8 B = 4 KiB per operand per tile.
+BLOCK = 512
+
+
+def _add_kernel(a_ref, b_ref, o_ref):
+    """o = a + b, one VMEM tile at a time."""
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _finalize_kernel(agg_ref, mask_ref, div_ref, o_ref):
+    """o = (agg - mask) / divisor; divisor is a scalar broadcast."""
+    o_ref[...] = (agg_ref[...] - mask_ref[...]) / div_ref[0]
+
+
+def _grid(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK
+
+
+@functools.partial(jax.jit, static_argnames=())
+def chain_add(agg, x):
+    """Pallas chain-add: the non-initiator 'add my vector' step."""
+    n = agg.shape[0]
+    if n % BLOCK != 0:
+        # Pads are compiled into the artifact for bucket sizes; runtime
+        # buckets are multiples of BLOCK except the smallest — fall back
+        # to one whole-array tile for tiny vectors.
+        return pl.pallas_call(
+            _add_kernel,
+            out_shape=jax.ShapeDtypeStruct(agg.shape, agg.dtype),
+            interpret=True,
+        )(agg, x)
+    return pl.pallas_call(
+        _add_kernel,
+        grid=(_grid(n),),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(agg.shape, agg.dtype),
+        interpret=True,
+    )(agg, x)
+
+
+# Masking is the same elementwise add; exposed under the protocol name so
+# the L2 graph reads like the paper.
+mask_add = chain_add
+
+
+@jax.jit
+def finalize(agg, mask, divisor):
+    """Pallas finalize: (agg − R) / contributors (initiator step 4)."""
+    n = agg.shape[0]
+    div = jnp.reshape(divisor, (1,)).astype(agg.dtype)
+    if n % BLOCK != 0:
+        return pl.pallas_call(
+            _finalize_kernel,
+            out_shape=jax.ShapeDtypeStruct(agg.shape, agg.dtype),
+            interpret=True,
+        )(agg, mask, div)
+    return pl.pallas_call(
+        _finalize_kernel,
+        grid=(_grid(n),),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            # The scalar divisor is replicated to every tile.
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(agg.shape, agg.dtype),
+        interpret=True,
+    )(agg, mask, div)

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel for the learner-local MLP compute hot-spot.
+
+The FL workload's inner loop is the dense layer ``x @ w + b`` (forward and
+the matching transposed matmuls in backward). This kernel expresses it as
+an MXU-shaped tiled matmul: TILE_M×TILE_K and TILE_K×TILE_N VMEM tiles
+accumulated over the K grid dimension — the standard TPU schedule (the
+128×128 MXU systolic array wants ≥128-wide tiles; our model dims are
+smaller, so a single tile per axis suffices and the grid handles batch).
+
+interpret=True as everywhere (CPU-only image); the BlockSpec structure is
+what a real TPU build would compile via Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 32  # batch tile
+TILE_K = 32  # contraction tile
+TILE_N = 32  # output-feature tile
+
+
+def _matmul_bias_kernel(x_ref, w_ref, b_ref, o_ref, *, k_tiles):
+    """o[m, n] = sum_k x[m, k] w[k, n] + b[n], accumulated over grid dim 2."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.broadcast_to(b_ref[...], o_ref.shape)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+    del k_tiles
+
+
+def _pad_to(a, m, axis):
+    pad = (-a.shape[axis]) % m
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_bias(x, w, b):
+    """Tiled ``x @ w + b`` through Pallas (f32)."""
+    m0, k0 = x.shape
+    k0b, n0 = w.shape
+    assert k0 == k0b, "contraction mismatch"
+    xp = _pad_to(_pad_to(x, TILE_M, 0), TILE_K, 1)
+    wp = _pad_to(_pad_to(w, TILE_K, 0), TILE_N, 1)
+    bp = _pad_to(b, TILE_N, 0)
+    m, k = xp.shape
+    _, n = wp.shape
+    k_tiles = k // TILE_K
+    out = pl.pallas_call(
+        functools.partial(_matmul_bias_kernel, k_tiles=k_tiles),
+        grid=(m // TILE_M, n // TILE_N, k_tiles),
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_K), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_K, TILE_N), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((TILE_N,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m0, :n0]

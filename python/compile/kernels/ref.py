@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness signal).
+
+Each function here is the mathematical definition the kernels in
+``chain_ops.py`` / ``mlp.py`` must reproduce bit-for-bit (f64 chain ops)
+or to float tolerance (f32 MLP). pytest sweeps shapes and dtypes against
+these via hypothesis (``python/tests/test_kernels.py``).
+"""
+
+import jax.numpy as jnp
+
+
+def chain_add(agg, x):
+    """Non-initiator step: running aggregate + local vector (paper 5.1.2)."""
+    return agg + x
+
+
+def mask_add(x, mask):
+    """Initiator step: local vector + large random mask R (paper 5.1.1)."""
+    return x + mask
+
+
+def finalize(agg, mask, divisor):
+    """Initiator finish: subtract R, divide by contributor count."""
+    return (agg - mask) / divisor
+
+
+def weighted_encode(x, weight):
+    """Weighted averaging (5.6): [x*w, w] as one vector."""
+    return jnp.concatenate([x * weight, jnp.reshape(weight, (1,))])
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    """2-layer MLP: tanh hidden, linear output."""
+    h = jnp.tanh(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def mlp_loss(w1, b1, w2, b2, x, y):
+    out = mlp_forward(w1, b1, w2, b2, x)
+    return jnp.mean((out - y) ** 2)
+
+
+def sgd_step(w1, b1, w2, b2, x, y, lr):
+    """One SGD step on the MSE loss, returning updated params + loss.
+
+    Written out with manual gradients so the oracle is independent of
+    jax.grad (which the L2 model uses) — the two derivations must agree.
+    """
+    n = x.shape[0] * y.shape[1]
+    h_pre = x @ w1 + b1
+    h = jnp.tanh(h_pre)
+    out = h @ w2 + b2
+    diff = out - y
+    loss = jnp.mean(diff**2)
+    dout = 2.0 * diff / n
+    gw2 = h.T @ dout
+    gb2 = jnp.sum(dout, axis=0)
+    dh = (dout @ w2.T) * (1.0 - h**2)
+    gw1 = x.T @ dh
+    gb1 = jnp.sum(dh, axis=0)
+    return (
+        w1 - lr * gw1,
+        b1 - lr * gb1,
+        w2 - lr * gw2,
+        b2 - lr * gb2,
+        loss,
+    )

@@ -1,0 +1,131 @@
+"""L2: the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Two graph families, both calling the L1 Pallas kernels so they lower into
+the same HLO module:
+
+* **Chain ops** (f64) — ``chain_add`` / ``finalize`` over the bucket sizes
+  in ``BUCKETS``; the vector arithmetic on SAFE's aggregation hot path.
+* **Train step** (f32) — one SGD update of the learner-local 2-layer MLP
+  (tanh hidden, MSE loss). Forward matmuls run through the Pallas
+  ``matmul_bias`` kernel; the backward pass comes from ``jax.grad``
+  through the kernel (interpret-mode Pallas is differentiable).
+
+The architecture constants here are the single source of truth — aot.py
+writes them into ``artifacts/manifest.json`` and the Rust side
+(`runtime::xla_exec::TrainStepExecutable`) reads them back.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chain_ops
+from .kernels.mlp import matmul_bias
+
+# Feature-size buckets for the chain ops (must match
+# rust/src/runtime/xla_exec.rs::BUCKETS).
+BUCKETS = (16, 256, 4096, 16384)
+
+# MLP architecture (must match fl::trainer::NativeTrainer::default_arch).
+DIM_IN = 16
+DIM_HIDDEN = 32
+DIM_OUT = 4
+BATCH = 64
+
+
+def chain_add(agg, x):
+    """Non-initiator: running aggregate + local vector (paper 5.1.2)."""
+    return (chain_ops.chain_add(agg, x),)
+
+
+def finalize(agg, mask, divisor):
+    """Initiator: (agg − R) / contributors (paper 5.1.1 step 4)."""
+    return (chain_ops.finalize(agg, mask, divisor),)
+
+
+def mlp_forward(w1, b1, w2, b2, x):
+    h = jnp.tanh(matmul_bias(x, w1, b1))
+    return matmul_bias(h, w2, b2)
+
+
+def mlp_loss(w1, b1, w2, b2, x, y):
+    out = mlp_forward(w1, b1, w2, b2, x)
+    return jnp.mean((out - y) ** 2)
+
+
+def predict_loss(w1, b1, w2, b2, x, y):
+    """Loss-only graph (validation curves). Returns a 1-element tuple."""
+    return (jnp.reshape(mlp_loss(w1, b1, w2, b2, x, y), (1,)),)
+
+
+def train_step(w1, b1, w2, b2, x, y, lr):
+    """One SGD step; returns (w1', b1', w2', b2', loss[1]).
+
+    The backward pass is written out manually (same derivation as
+    ``kernels/ref.py::sgd_step``) rather than via ``jax.grad`` because
+    interpret-mode ``pallas_call`` with an accumulating grid is not
+    differentiable under this jax version; every matmul — forward AND
+    backward — still runs through the Pallas ``matmul_bias`` kernel.
+    """
+    n = jnp.asarray(x.shape[0] * y.shape[1], x.dtype)
+    zeros_h = jnp.zeros((w1.shape[1],), x.dtype)
+    zeros_o = jnp.zeros((w2.shape[1],), x.dtype)
+    zeros_i = jnp.zeros((w1.shape[0],), x.dtype)
+    h = jnp.tanh(matmul_bias(x, w1, b1))
+    out = matmul_bias(h, w2, b2)
+    diff = out - y
+    loss = jnp.mean(diff**2)
+    dout = 2.0 * diff / n
+    gw2 = matmul_bias(h.T, dout, zeros_o)
+    gb2 = jnp.sum(dout, axis=0)
+    dh = matmul_bias(dout, w2.T, zeros_h) * (1.0 - h**2)
+    gw1 = matmul_bias(x.T, dh, zeros_h)
+    gb1 = jnp.sum(dh, axis=0)
+    del zeros_i
+    lr = lr[0]
+    return (
+        w1 - lr * gw1,
+        b1 - lr * gb1,
+        w2 - lr * gw2,
+        b2 - lr * gb2,
+        jnp.reshape(loss, (1,)),
+    )
+
+
+def train_step_shapes():
+    """Example args for lowering train_step (flat f32 vectors reshaped
+    inside wrappers on the aot side keep the Rust call convention simple:
+    every argument is a rank-1 array)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((DIM_IN * DIM_HIDDEN,), f32),
+        jax.ShapeDtypeStruct((DIM_HIDDEN,), f32),
+        jax.ShapeDtypeStruct((DIM_HIDDEN * DIM_OUT,), f32),
+        jax.ShapeDtypeStruct((DIM_OUT,), f32),
+        jax.ShapeDtypeStruct((BATCH * DIM_IN,), f32),
+        jax.ShapeDtypeStruct((BATCH * DIM_OUT,), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+def train_step_flat(w1f, b1, w2f, b2, xf, yf, lr):
+    """Rank-1 calling convention wrapper around train_step."""
+    w1 = jnp.reshape(w1f, (DIM_IN, DIM_HIDDEN))
+    w2 = jnp.reshape(w2f, (DIM_HIDDEN, DIM_OUT))
+    x = jnp.reshape(xf, (BATCH, DIM_IN))
+    y = jnp.reshape(yf, (BATCH, DIM_OUT))
+    nw1, nb1, nw2, nb2, loss = train_step(w1, b1, w2, b2, x, y, lr)
+    return (
+        jnp.reshape(nw1, (-1,)),
+        nb1,
+        jnp.reshape(nw2, (-1,)),
+        nb2,
+        loss,
+    )
+
+
+def predict_loss_flat(w1f, b1, w2f, b2, xf, yf):
+    w1 = jnp.reshape(w1f, (DIM_IN, DIM_HIDDEN))
+    w2 = jnp.reshape(w2f, (DIM_HIDDEN, DIM_OUT))
+    x = jnp.reshape(xf, (BATCH, DIM_IN))
+    y = jnp.reshape(yf, (BATCH, DIM_OUT))
+    return predict_loss(w1, b1, w2, b2, x, y)

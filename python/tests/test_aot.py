@@ -1,0 +1,69 @@
+"""AOT pipeline checks: the emitted HLO text parses, has the expected
+entry computation shapes, and the manifest is consistent."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+
+def test_aot_emits_all_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    res = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        cwd=os.path.join(REPO, "python"),
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    names = sorted(p.name for p in out.iterdir())
+    for bucket in (16, 256, 4096, 16384):
+        assert f"chain_add_{bucket}.hlo.txt" in names
+        assert f"finalize_{bucket}.hlo.txt" in names
+    assert "train_step.hlo.txt" in names
+    assert "predict_loss.hlo.txt" in names
+    assert "manifest.json" in names
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["train_step"]["params"] == 676
+    assert manifest["format"] == "hlo-text"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_existing_artifacts_are_hlo_text():
+    for name in os.listdir(ARTIFACTS):
+        if not name.endswith(".hlo.txt"):
+            continue
+        text = open(os.path.join(ARTIFACTS, name)).read()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text, f"{name} missing entry computation"
+        # f64 chain ops carry f64 shapes; train step is f32.
+        if name.startswith(("chain_add", "finalize")):
+            assert "f64[" in text, f"{name} should be f64"
+        if name.startswith(("train_step", "predict_loss")):
+            assert "f32[" in text, f"{name} should be f32"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+def test_manifest_matches_model_constants():
+    from compile import model
+
+    manifest = json.loads(open(os.path.join(ARTIFACTS, "manifest.json")).read())
+    assert manifest["buckets"] == list(model.BUCKETS)
+    ts = manifest["train_step"]
+    assert ts["in"] == model.DIM_IN
+    assert ts["hidden"] == model.DIM_HIDDEN
+    assert ts["out"] == model.DIM_OUT
+    assert ts["batch"] == model.BATCH

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes and values; chain ops must match bit-for-bit in
+f64, the MLP kernel to f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import chain_ops, ref
+from compile.kernels.mlp import matmul_bias
+
+jax.config.update("jax_enable_x64", True)
+
+BUCKETS = [16, 256, 4096, 16384]
+ODD_SIZES = [1, 3, 7, 100, 513]
+
+
+def vec_strategy(n, lo=-1e6, hi=1e6):
+    return st.lists(
+        st.floats(min_value=lo, max_value=hi, allow_nan=False, width=64),
+        min_size=n,
+        max_size=n,
+    )
+
+
+@pytest.mark.parametrize("n", BUCKETS + ODD_SIZES)
+def test_chain_add_matches_ref_exact(n):
+    rng = np.random.default_rng(n)
+    agg = jnp.asarray(rng.uniform(-1e6, 1e6, n), dtype=jnp.float64)
+    x = jnp.asarray(rng.uniform(-1e3, 1e3, n), dtype=jnp.float64)
+    got = chain_ops.chain_add(agg, x)
+    want = ref.chain_add(agg, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", BUCKETS + ODD_SIZES)
+def test_finalize_matches_ref_exact(n):
+    rng = np.random.default_rng(n + 1)
+    agg = jnp.asarray(rng.uniform(-1e6, 1e6, n), dtype=jnp.float64)
+    mask = jnp.asarray(rng.uniform(-1e6, 1e6, n), dtype=jnp.float64)
+    div = jnp.asarray([7.0], dtype=jnp.float64)
+    got = chain_ops.finalize(agg, mask, div)
+    want = ref.finalize(agg, mask, div[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data(), n=st.sampled_from([4, 16, 100, 256]))
+def test_chain_add_hypothesis(data, n):
+    agg = jnp.asarray(data.draw(vec_strategy(n)), dtype=jnp.float64)
+    x = jnp.asarray(data.draw(vec_strategy(n, -1e3, 1e3)), dtype=jnp.float64)
+    got = chain_ops.chain_add(agg, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.chain_add(agg, x)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    data=st.data(),
+    n=st.sampled_from([4, 16, 100, 256]),
+    div=st.floats(min_value=1.0, max_value=100.0, allow_nan=False),
+)
+def test_finalize_hypothesis(data, n, div):
+    agg = jnp.asarray(data.draw(vec_strategy(n)), dtype=jnp.float64)
+    mask = jnp.asarray(data.draw(vec_strategy(n)), dtype=jnp.float64)
+    d = jnp.asarray([div], dtype=jnp.float64)
+    got = chain_ops.finalize(agg, mask, d)
+    want = ref.finalize(agg, mask, d[0])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mask_unmask_roundtrip_protocol_invariant():
+    """The SAFE invariant: finalize(mask(x)+Σothers, R, n) == mean."""
+    rng = np.random.default_rng(5)
+    n_feat, n_nodes = 256, 5
+    xs = [
+        jnp.asarray(rng.uniform(-2, 2, n_feat), dtype=jnp.float64)
+        for _ in range(n_nodes)
+    ]
+    mask = jnp.asarray(rng.uniform(-1e6, 1e6, n_feat), dtype=jnp.float64)
+    agg = chain_ops.mask_add(xs[0], mask)
+    for x in xs[1:]:
+        agg = chain_ops.chain_add(agg, x)
+    avg = chain_ops.finalize(agg, mask, jnp.asarray([float(n_nodes)]))
+    want = sum(np.asarray(x) for x in xs) / n_nodes
+    np.testing.assert_allclose(np.asarray(avg), want, atol=1e-9)
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(1, 1, 1), (4, 8, 2), (32, 32, 32), (64, 16, 32), (33, 17, 5), (64, 100, 40)]
+)
+def test_matmul_bias_matches_jnp(m, k, n):
+    rng = np.random.default_rng(m * 100 + k * 10 + n)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), dtype=jnp.float32)
+    got = matmul_bias(x, w, b)
+    want = x @ w + b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=70),
+    k=st.integers(min_value=1, max_value=70),
+    n=st.integers(min_value=1, max_value=70),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_matmul_bias_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), dtype=jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), dtype=jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), dtype=jnp.float32)
+    got = matmul_bias(x, w, b)
+    want = x @ w + b
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)

@@ -1,0 +1,99 @@
+"""L2 correctness: the train-step graph vs the manual-gradient oracle and
+vs jax.grad on a kernel-free forward (three independent derivations)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def init(seed=0):
+    rng = np.random.default_rng(seed)
+    f32 = jnp.float32
+    w1 = jnp.asarray(rng.standard_normal((model.DIM_IN, model.DIM_HIDDEN)) * 0.2, f32)
+    b1 = jnp.asarray(rng.standard_normal(model.DIM_HIDDEN) * 0.1, f32)
+    w2 = jnp.asarray(rng.standard_normal((model.DIM_HIDDEN, model.DIM_OUT)) * 0.2, f32)
+    b2 = jnp.asarray(rng.standard_normal(model.DIM_OUT) * 0.1, f32)
+    x = jnp.asarray(rng.standard_normal((model.BATCH, model.DIM_IN)), f32)
+    y = jnp.asarray(rng.standard_normal((model.BATCH, model.DIM_OUT)), f32)
+    return w1, b1, w2, b2, x, y
+
+
+def test_forward_matches_ref():
+    w1, b1, w2, b2, x, _ = init(1)
+    got = model.mlp_forward(w1, b1, w2, b2, x)
+    want = ref.mlp_forward(w1, b1, w2, b2, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_train_step_matches_manual_ref():
+    w1, b1, w2, b2, x, y = init(2)
+    lr = jnp.asarray([0.05], jnp.float32)
+    got = model.train_step(w1, b1, w2, b2, x, y, lr)
+    want = ref.sgd_step(w1, b1, w2, b2, x, y, lr[0])
+    for g, w in zip(got[:4], want[:4]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(got[4][0]), float(want[4]), rtol=1e-5)
+
+
+def test_train_step_matches_jax_grad():
+    """Third derivation: jax.grad on a plain-jnp forward."""
+    w1, b1, w2, b2, x, y = init(3)
+    lr = 0.05
+
+    def loss_fn(w1, b1, w2, b2):
+        return ref.mlp_loss(w1, b1, w2, b2, x, y)
+
+    grads = jax.grad(loss_fn, argnums=(0, 1, 2, 3))(w1, b1, w2, b2)
+    got = model.train_step(w1, b1, w2, b2, x, y, jnp.asarray([lr], jnp.float32))
+    for g, (p, gr) in zip(got[:4], zip((w1, b1, w2, b2), grads)):
+        want = p - lr * gr
+        np.testing.assert_allclose(np.asarray(g), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_flat_wrappers_roundtrip():
+    w1, b1, w2, b2, x, y = init(4)
+    lr = jnp.asarray([0.05], jnp.float32)
+    flat = model.train_step_flat(
+        jnp.reshape(w1, (-1,)),
+        b1,
+        jnp.reshape(w2, (-1,)),
+        b2,
+        jnp.reshape(x, (-1,)),
+        jnp.reshape(y, (-1,)),
+        lr,
+    )
+    full = model.train_step(w1, b1, w2, b2, x, y, lr)
+    np.testing.assert_allclose(
+        np.asarray(flat[0]), np.asarray(jnp.reshape(full[0], (-1,))), rtol=1e-6
+    )
+    np.testing.assert_allclose(np.asarray(flat[4]), np.asarray(full[4]), rtol=1e-6)
+
+
+def test_training_reduces_loss():
+    w1, b1, w2, b2, x, _ = init(5)
+    # Learnable target from a fixed teacher.
+    tw1, tb1, tw2, tb2, _, _ = init(99)
+    y = ref.mlp_forward(tw1, tb1, tw2, tb2, x)
+    lr = jnp.asarray([0.1], jnp.float32)
+    l0 = float(ref.mlp_loss(w1, b1, w2, b2, x, y))
+    for _ in range(60):
+        w1, b1, w2, b2, _ = model.train_step(w1, b1, w2, b2, x, y, lr)
+    l1 = float(ref.mlp_loss(w1, b1, w2, b2, x, y))
+    assert l1 < 0.5 * l0, f"loss {l0} -> {l1}"
+
+
+def test_manifest_constants_consistent():
+    """The Rust side depends on these exact numbers (manifest.json)."""
+    params = (
+        model.DIM_IN * model.DIM_HIDDEN
+        + model.DIM_HIDDEN
+        + model.DIM_HIDDEN * model.DIM_OUT
+        + model.DIM_OUT
+    )
+    assert params == 676
+    assert model.BUCKETS == (16, 256, 4096, 16384)

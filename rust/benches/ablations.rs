@@ -1,0 +1,92 @@
+//! Ablations (E20): design choices DESIGN.md calls out.
+//!  * vector engine: native loops vs AOT XLA kernels (by feature count);
+//!  * payload compression on/off at 10k features;
+//!  * long-poll vs staggered polling (§5.9).
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use safe_agg::config::{DeviceProfile, VectorEngine};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::harness::figures::edge_cfg;
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::protocols::SafeSession;
+use safe_agg::runtime::{ArtifactRuntime, NativeMath, VectorMath, XlaMath};
+
+fn engine_ablation() {
+    println!("── E20a: vector engine (native vs XLA artifacts) ──");
+    let dir = ArtifactRuntime::default_dir();
+    if !ArtifactRuntime::available(&dir) {
+        println!("  artifacts not built — run `make artifacts` (skipping)");
+        return;
+    }
+    let rt = Arc::new(ArtifactRuntime::new(dir).unwrap());
+    let xla = XlaMath::new(rt);
+    let native = NativeMath;
+    println!("{:>10} {:>14} {:>14}", "features", "native", "xla");
+    for n in [16usize, 256, 4096, 16384] {
+        let a: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let b = a.clone();
+        let iters = 200;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let mut acc = a.clone();
+            native.add_assign(&mut acc, &b);
+            std::hint::black_box(&acc);
+        }
+        let tn = t0.elapsed() / iters;
+        // warm compile
+        let _ = xla.mask(&a, &b);
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            let r = xla.mask(&a, &b);
+            std::hint::black_box(&r);
+        }
+        let tx = t1.elapsed() / iters;
+        println!("{:>10} {:>14.2?} {:>14.2?}", n, tn, tx);
+    }
+    println!();
+}
+
+fn compression_ablation() -> anyhow::Result<()> {
+    println!("── E20b: §5.7 compression, 10000 features, 8 nodes ──");
+    for (label, compress) in [("compress=on", true), ("compress=off", false)] {
+        let mut cfg = edge_cfg(8, 10_000);
+        cfg.mode = CipherMode::Hybrid;
+        cfg.compress = compress;
+        cfg.profile = DeviceProfile::instant();
+        let session = SafeSession::new(cfg)?;
+        let inputs: Vec<Vec<f64>> =
+            (0..8).map(|i| (0..10_000).map(|f| (i + f) as f64).collect()).collect();
+        let r = session.run_round(&inputs, &FaultPlan::none())?;
+        println!(
+            "  {label}: {:.4}s, {} bytes on wire",
+            r.metrics.secs(),
+            r.metrics.bytes_sent
+        );
+    }
+    println!();
+    Ok(())
+}
+
+fn engine_session_ablation() -> anyhow::Result<()> {
+    println!("── E20c: whole-round engine choice, 16384 features, 5 nodes ──");
+    for engine in [VectorEngine::Native, VectorEngine::Auto] {
+        let mut cfg = edge_cfg(5, 16_384);
+        cfg.engine = engine;
+        cfg.profile = DeviceProfile::instant();
+        cfg.poll_time = Duration::from_secs(5);
+        let session = SafeSession::new(cfg)?;
+        let inputs: Vec<Vec<f64>> =
+            (0..5).map(|i| (0..16_384).map(|f| (i + f) as f64 * 0.5).collect()).collect();
+        let r = session.run_round(&inputs, &FaultPlan::none())?;
+        println!("  {:?}: {:.4}s", engine, r.metrics.secs());
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    engine_ablation();
+    compression_ablation()?;
+    engine_session_ablation()?;
+    Ok(())
+}

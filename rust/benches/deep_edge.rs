@@ -1,0 +1,12 @@
+//! Paper Figs 15–18 (E11–E14): the simulated deep-edge (OpenWrt Archer
+//! C7) platform — §5.8 pre-negotiated keys, single-seed masking, device
+//! cost model from DESIGN.md §3.
+use safe_agg::harness::figures as f;
+
+fn main() -> anyhow::Result<()> {
+    f::deep_edge_nodes("fig15", "Deep-Edge. 1 Feature.", 1)?.emit(None);
+    f::deep_edge_nodes("fig16", "Deep-Edge. 20 Features.", 20)?.emit(None);
+    f::deep_edge_features("fig17", "Deep-Edge. 3 Nodes.", 3)?.emit(None);
+    f::deep_edge_features("fig18", "Deep-Edge. 12 Nodes.", 12)?.emit(None);
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Paper Figs 10–12: edge-platform feature scalability (E5–E7).
+//! Watch for the SAFE-vs-INSEC crossovers the paper reports: ~2000
+//! features at 15 nodes, ~100 features at 100 nodes.
+use safe_agg::harness::figures as f;
+
+fn main() -> anyhow::Result<()> {
+    f::fig10()?.emit(None);
+    f::fig11()?.emit(None);
+    f::fig12()?.emit(None);
+    Ok(())
+}

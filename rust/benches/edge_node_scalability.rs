@@ -1,0 +1,12 @@
+//! Paper Figs 6–9: edge-platform node scalability (E1–E4 in DESIGN.md).
+//! `SAFE_BENCH_FULL=1 SAFE_BENCH_REPEATS=30` reproduces the paper's exact
+//! sweeps; the default is a trimmed quick pass.
+use safe_agg::harness::figures as f;
+
+fn main() -> anyhow::Result<()> {
+    f::fig6()?.emit(None);
+    f::fig7()?.emit(None);
+    f::fig8()?.emit(None);
+    f::fig9()?.emit(None);
+    Ok(())
+}

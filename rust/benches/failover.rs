@@ -1,0 +1,21 @@
+//! Paper Figs 13–14 + the headline 70x/56x claim (E8–E10): SAFE vs BON
+//! aggregation time with and without node failures, following §6.3's
+//! normalization (n completed nodes vs n+3 nodes with 3 failures).
+use safe_agg::harness::figures as f;
+
+fn main() -> anyhow::Result<()> {
+    let fig13 = f::fig13()?;
+    fig13.emit(None);
+    f::fig14(&fig13).emit(None);
+    println!("── headline — BON/SAFE ratios ──");
+    for (x, plain, failover) in f::headline_ratios(&fig13) {
+        println!(
+            "{:>4} completed: {:>6.1}x no-failover, {:>6.1}x with-failover",
+            x,
+            plain.unwrap_or(f64::NAN),
+            failover.unwrap_or(f64::NAN)
+        );
+    }
+    println!("(paper: 38x/42x at 24; 56x/70x at 36)");
+    Ok(())
+}

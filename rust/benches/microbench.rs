@@ -1,0 +1,102 @@
+//! Microbenches (E17–E18): message-count formula verification across
+//! configurations, and the §4 crypto complexity sweep (RSA key size vs
+//! encrypt/decrypt cost; hybrid vs RSA-only envelope).
+use std::time::{Duration, Instant};
+
+use safe_agg::config::DeviceProfile;
+use safe_agg::crypto::envelope::{CipherMode, Envelope};
+use safe_agg::crypto::rng::DeterministicRng;
+use safe_agg::crypto::rsa::RsaKeyPair;
+use safe_agg::harness::figures::{edge_cfg, run_variant, Variant};
+use safe_agg::learner::faults::FaultPlan;
+
+fn messages_table() -> anyhow::Result<()> {
+    println!("── E17: message-count formulas (§5.2–§5.5) ──");
+    println!("{:>6} {:>3} {:>3} {:>10} {:>10}", "nodes", "f", "g", "measured", "formula");
+    for (n, fail, groups) in [
+        (5usize, 0u64, 1usize),
+        (8, 0, 1),
+        (12, 0, 1),
+        (8, 2, 1),
+        (12, 3, 1),
+        (12, 0, 3),
+        (12, 0, 4),
+    ] {
+        let mut cfg = edge_cfg(n, 1);
+        cfg.groups = groups;
+        cfg.profile = DeviceProfile::instant();
+        cfg.poll_time = Duration::from_secs(10);
+        cfg.progress_timeout = Duration::from_millis(400);
+        let faults = if fail > 0 {
+            FaultPlan::kill_range(4, 3 + fail)
+        } else {
+            FaultPlan::none()
+        };
+        let rounds = run_variant(Variant::Safe, cfg, &faults, 1)?;
+        let measured = rounds[0].messages;
+        // 4(n−f) + 2f (+g when subgrouped)
+        let formula =
+            4 * (n as u64 - fail) + 2 * fail + if groups > 1 { groups as u64 } else { 0 };
+        println!("{:>6} {:>3} {:>3} {:>10} {:>10}", n, fail, groups, measured, formula);
+        assert_eq!(measured, formula, "message formula violated");
+    }
+    println!();
+    Ok(())
+}
+
+fn crypto_table() {
+    println!("── E18: RSA complexity (§4: O(k²) encrypt / O(k³) decrypt) ──");
+    println!("{:>6} {:>12} {:>12} {:>12}", "bits", "keygen", "encrypt", "decrypt");
+    let mut rng = DeterministicRng::seed(7);
+    for bits in [512usize, 1024, 2048] {
+        let t0 = Instant::now();
+        let kp = RsaKeyPair::generate(bits, &mut rng);
+        let keygen = t0.elapsed();
+        let msg = vec![0x5au8; kp.public.max_block_payload()];
+        let iters = 20;
+        let t1 = Instant::now();
+        let mut blocks = Vec::new();
+        for _ in 0..iters {
+            blocks.push(kp.public.encrypt_block(&msg, &mut rng).unwrap());
+        }
+        let enc = t1.elapsed() / iters;
+        let t2 = Instant::now();
+        for b in &blocks {
+            kp.private.decrypt_block(b).unwrap();
+        }
+        let dec = t2.elapsed() / iters;
+        println!("{:>6} {:>12.2?} {:>12.2?} {:>12.2?}", bits, keygen, enc, dec);
+    }
+    println!();
+    println!("── E18b: envelope cost, 10000 features (hybrid §5.7 vs RSA-only) ──");
+    let mut rng = DeterministicRng::seed(8);
+    let kp = RsaKeyPair::generate(1024, &mut rng);
+    let vector: Vec<f64> = (0..10_000).map(|i| i as f64 * 0.01).collect();
+    for (label, mode, compress) in [
+        ("rsa-only", CipherMode::RsaOnly, false),
+        ("hybrid", CipherMode::Hybrid, false),
+        ("hybrid+deflate", CipherMode::Hybrid, true),
+    ] {
+        let t = Instant::now();
+        let iters = 5;
+        let mut wire = 0usize;
+        for _ in 0..iters {
+            let env =
+                Envelope::seal(&vector, mode, Some(&kp.public), None, compress, &mut rng).unwrap();
+            wire = env.wire_len();
+            env.open(Some(&kp.private), None).unwrap();
+        }
+        println!(
+            "{:>16}: {:>10.2?} per seal+open, {:>8} wire bytes",
+            label,
+            t.elapsed() / iters,
+            wire
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    messages_table()?;
+    crypto_table();
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! Paper Figs 19–20 (E15–E16): §5.5 subgrouping on 12 deep-edge nodes —
+//! 1×12 / 2×6 / 3×4 / 4×3 parallel chains.
+use safe_agg::harness::figures as f;
+
+fn main() -> anyhow::Result<()> {
+    let fig19 = f::subgroup_figure("fig19", "Deep-Edge. 12 Nodes 1 Feature.", 1)?;
+    fig19.emit(None);
+    let fig20 = f::subgroup_figure("fig20", "Deep-Edge. 12 Nodes 20 Features.", 20)?;
+    fig20.emit(None);
+    for (fig, label) in [(&fig19, "1 feature"), (&fig20, "20 features")] {
+        if let (Some(one), Some(four)) =
+            (fig.ratio_at("SAFE", "SAFE", 1.0), fig.ratio_at("SAFE", "SAFE", 4.0))
+        {
+            let _ = (one, four);
+        }
+        let s = &fig.series[0];
+        let t1 = s.points.iter().find(|p| p.x == 1.0).map(|p| p.stats.mean_secs);
+        let t4 = s.points.iter().find(|p| p.x == 4.0).map(|p| p.stats.mean_secs);
+        if let (Some(t1), Some(t4)) = (t1, t4) {
+            println!("{label}: 1x12 {t1:.3}s → 4x3 {t4:.3}s ({:.2}x speedup; paper ~2.2x)", t1 / t4);
+        }
+    }
+    Ok(())
+}

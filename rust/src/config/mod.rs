@@ -1,0 +1,271 @@
+//! Configuration system: session parameters, device profiles, CLI parsing.
+//!
+//! Everything a deployment needs in one typed struct, buildable from the
+//! CLI (`safe run --nodes 36 --features 1000 --mode safe ...`), from a
+//! JSON config file, or programmatically from the benches.
+
+pub mod profile;
+
+use std::time::Duration;
+
+use crate::crypto::envelope::CipherMode;
+pub use profile::DeviceProfile;
+
+/// How learners talk to the controller.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Direct in-process calls (paper's single-machine edge benchmark).
+    InProc,
+    /// Loopback/remote HTTP (the paper's REST deployment).
+    Http { url: String },
+}
+
+/// Which vector math engine learners use for `agg + x` etc.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VectorEngine {
+    /// Plain Rust loops.
+    Native,
+    /// AOT-compiled XLA executables via PJRT (L1/L2 artifacts).
+    Xla,
+    /// Pick per call: XLA for vectors ≥ threshold, native below.
+    Auto,
+}
+
+/// Full description of one aggregation session (one or more rounds).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Total number of learners.
+    pub n_nodes: usize,
+    /// Feature-vector length each learner contributes.
+    pub features: usize,
+    /// Number of subgroups (§5.5); nodes are split evenly, chain order
+    /// within a group follows node id.
+    pub groups: usize,
+    /// Payload protection (SAF / RSA / SAFE / pre-negotiated).
+    pub mode: CipherMode,
+    /// RSA modulus bits for learner keys.
+    pub rsa_bits: usize,
+    /// Compress payloads before sealing (§5.7/§6.2 — SAFE's compression).
+    pub compress: bool,
+    /// Weighted averaging (§5.6): the weight rides as an extra feature.
+    pub weighted: bool,
+    /// Device cost model (§6 edge vs §7 deep-edge).
+    pub profile: DeviceProfile,
+    /// Controller transport.
+    pub transport: TransportKind,
+    /// Vector math engine.
+    pub engine: VectorEngine,
+    /// Max single long-poll block at the controller.
+    pub poll_time: Duration,
+    /// Whole-aggregation timeout → initiator failover (§5.4).
+    pub aggregation_timeout: Duration,
+    /// Link-silence threshold → progress failover (§5.3).
+    pub progress_timeout: Duration,
+    /// How often the external monitor pings the controller.
+    pub monitor_interval: Duration,
+    /// Deterministic seed for data/keys (None → OS entropy).
+    pub seed: Option<u64>,
+    /// §5.9 staggered polling: node i delays its first `get_aggregate`
+    /// poll by `i × stagger_step` so the whole chain doesn't camp on the
+    /// controller's long-poll slots at once.
+    pub stagger_step: Duration,
+    /// Randomize the chain order between rounds (paper §8 discussion:
+    /// "randomize the order between each round to limit the likelihood of
+    /// two colluding nodes being able to get useful data").
+    pub shuffle_chain_each_round: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            n_nodes: 3,
+            features: 1,
+            groups: 1,
+            mode: CipherMode::Hybrid,
+            rsa_bits: 1024,
+            compress: true,
+            weighted: false,
+            profile: DeviceProfile::edge(),
+            transport: TransportKind::InProc,
+            engine: VectorEngine::Native,
+            poll_time: Duration::from_millis(250),
+            aggregation_timeout: Duration::from_secs(30),
+            progress_timeout: Duration::from_millis(1500),
+            monitor_interval: Duration::from_millis(200),
+            seed: Some(42),
+            stagger_step: Duration::ZERO,
+            shuffle_chain_each_round: false,
+        }
+    }
+}
+
+impl SessionConfig {
+    /// Split nodes 1..=n into `groups` chains round-robin-free (contiguous
+    /// blocks, like the paper's 2×6 / 3×4 / 4×3 groupings).
+    pub fn group_chains(&self) -> Vec<(u64, Vec<u64>)> {
+        let per = (self.n_nodes + self.groups - 1) / self.groups;
+        let mut out = Vec::new();
+        let mut next = 1u64;
+        for g in 0..self.groups {
+            let mut chain = Vec::new();
+            for _ in 0..per {
+                if next as usize > self.n_nodes {
+                    break;
+                }
+                chain.push(next);
+                next += 1;
+            }
+            if !chain.is_empty() {
+                out.push(((g + 1) as u64, chain));
+            }
+        }
+        out
+    }
+
+    /// Effective vector length on the wire (weighted adds one feature).
+    pub fn wire_features(&self) -> usize {
+        self.features + if self.weighted { 1 } else { 0 }
+    }
+}
+
+/// Tiny CLI argument parser (clap is not in the offline crate cache).
+/// Supports `--key value`, `--key=value` and boolean `--flag`.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.flags.insert(rest.to_string(), iter.next().unwrap());
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Build a session config from parsed flags (shared by CLI + examples).
+    pub fn to_session_config(&self) -> SessionConfig {
+        let mut cfg = SessionConfig::default();
+        cfg.n_nodes = self.get_usize("nodes", cfg.n_nodes);
+        cfg.features = self.get_usize("features", cfg.features);
+        cfg.groups = self.get_usize("groups", cfg.groups).max(1);
+        cfg.rsa_bits = self.get_usize("rsa-bits", cfg.rsa_bits);
+        cfg.weighted = self.get_bool("weighted");
+        if self.get_bool("no-compress") {
+            cfg.compress = false;
+        }
+        cfg.mode = match self.get("mode") {
+            Some("saf") => CipherMode::None,
+            Some("rsa") => CipherMode::RsaOnly,
+            Some("prenegotiated") | Some("preneg") => CipherMode::PreNegotiated,
+            _ => CipherMode::Hybrid,
+        };
+        cfg.profile = match self.get("profile") {
+            Some("deep-edge") | Some("deepedge") => DeviceProfile::deep_edge(),
+            _ => DeviceProfile::edge(),
+        };
+        cfg.engine = match self.get("engine") {
+            Some("xla") => VectorEngine::Xla,
+            Some("auto") => VectorEngine::Auto,
+            _ => VectorEngine::Native,
+        };
+        if let Some(url) = self.get("controller-url") {
+            cfg.transport = TransportKind::Http { url: url.to_string() };
+        }
+        if let Some(s) = self.get("seed") {
+            cfg.seed = s.parse().ok();
+        }
+        cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_chains_even_split() {
+        let mut cfg = SessionConfig::default();
+        cfg.n_nodes = 12;
+        cfg.groups = 4;
+        let chains = cfg.group_chains();
+        assert_eq!(chains.len(), 4);
+        assert_eq!(chains[0], (1, vec![1, 2, 3]));
+        assert_eq!(chains[3], (4, vec![10, 11, 12]));
+    }
+
+    #[test]
+    fn group_chains_uneven_split() {
+        let mut cfg = SessionConfig::default();
+        cfg.n_nodes = 7;
+        cfg.groups = 2;
+        let chains = cfg.group_chains();
+        assert_eq!(chains[0].1, vec![1, 2, 3, 4]);
+        assert_eq!(chains[1].1, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn single_group_is_whole_chain() {
+        let mut cfg = SessionConfig::default();
+        cfg.n_nodes = 5;
+        cfg.groups = 1;
+        let chains = cfg.group_chains();
+        assert_eq!(chains, vec![(1, vec![1, 2, 3, 4, 5])]);
+    }
+
+    #[test]
+    fn args_parsing() {
+        let a = Args::parse(
+            ["run", "--nodes", "36", "--mode=saf", "--weighted", "--seed", "7"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get_usize("nodes", 0), 36);
+        assert_eq!(a.get("mode"), Some("saf"));
+        assert!(a.get_bool("weighted"));
+        let cfg = a.to_session_config();
+        assert_eq!(cfg.n_nodes, 36);
+        assert_eq!(cfg.mode, CipherMode::None);
+        assert!(cfg.weighted);
+        assert_eq!(cfg.seed, Some(7));
+    }
+
+    #[test]
+    fn wire_features_weighted() {
+        let mut cfg = SessionConfig::default();
+        cfg.features = 10;
+        assert_eq!(cfg.wire_features(), 10);
+        cfg.weighted = true;
+        assert_eq!(cfg.wire_features(), 11);
+    }
+}

@@ -1,0 +1,428 @@
+//! BON baseline, server side — Bonawitz et al. 2017, "Practical Secure
+//! Aggregation for Privacy-Preserving Machine Learning".
+//!
+//! The paper's §2/§6 comparison target. Unlike SAFE's broker, the BON
+//! server *participates* in the aggregation: it collects masked inputs,
+//! gathers Shamir shares after dropouts, reconstructs self-mask seeds
+//! (for survivors) and DH secret keys (for dropped nodes), expands PRG
+//! masks, unmasks the sum and computes the average. This O(n²) mask
+//! structure and server-side crypto is exactly the overhead SAFE avoids.
+//!
+//! Rounds (matching §2's four-round description):
+//!  0. advertise   — each node posts its two DH public keys (c^PK, s^PK)
+//!  1. post_shares — Shamir shares of b_u and s_u^SK, one sealed blob per
+//!                   peer, routed through the server
+//!  2. post_masked — y_u = x_u + PRG(b_u) ± Σ PRG(s_{u,v})
+//!  3. post_unmask — survivors reveal shares; the server reconstructs and
+//!                   unmasks
+//!
+//! Sign convention for pairwise masks: for a pair (u, v) with u < v, node
+//! u ADDS PRG(s_{u,v}) and node v SUBTRACTS it.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+use super::Controller;
+use crate::crypto::bigint::BigUint;
+use crate::crypto::dh::DhGroup;
+use crate::crypto::rng::prg_expand_f64;
+use crate::crypto::shamir;
+use crate::json::Value;
+use crate::proto;
+
+pub struct BonState {
+    /// Expected participants (node ids).
+    pub expected: BTreeSet<u64>,
+    /// Shamir threshold t (default ⌈2n/3⌉).
+    pub threshold: usize,
+    /// DH group parameters shared by everyone.
+    pub group: DhGroup,
+    /// Round 0: node → (c_pk_hex, s_pk_hex).
+    pub keys: BTreeMap<u64, (String, String)>,
+    /// Round 1: recipient → sender → sealed share blob (opaque to server).
+    pub shares: BTreeMap<u64, BTreeMap<u64, String>>,
+    /// Round 2: node → masked input y_u.
+    pub masked: BTreeMap<u64, Vec<f64>>,
+    pub round2_closed: bool,
+    pub survivors: BTreeSet<u64>,
+    pub last_masked_at: Option<Instant>,
+    /// Round 3: shares of b_u for surviving u (node-being-reconstructed →
+    /// collected shares).
+    pub b_shares: BTreeMap<u64, Vec<shamir::Share>>,
+    /// Round 3: shares of s_d^SK for dropped d.
+    pub s_shares: BTreeMap<u64, Vec<shamir::Share>>,
+    pub average: Option<Vec<f64>>,
+}
+
+impl Default for BonState {
+    fn default() -> Self {
+        BonState {
+            expected: BTreeSet::new(),
+            threshold: 0,
+            group: DhGroup::standard(),
+            keys: BTreeMap::new(),
+            shares: BTreeMap::new(),
+            masked: BTreeMap::new(),
+            round2_closed: false,
+            survivors: BTreeSet::new(),
+            last_masked_at: None,
+            b_shares: BTreeMap::new(),
+            s_shares: BTreeMap::new(),
+            average: None,
+        }
+    }
+}
+
+impl BonState {
+    pub fn configure(&mut self, expected: BTreeSet<u64>) {
+        let n = expected.len();
+        *self = BonState {
+            expected,
+            threshold: (2 * n + 2) / 3, // ⌈2n/3⌉
+            ..BonState::default()
+        };
+    }
+
+    /// Close round 2 if everyone posted, or the timeout elapsed with at
+    /// least `threshold` inputs.
+    fn maybe_close_round2(&mut self, timeout: std::time::Duration) {
+        if self.round2_closed || self.expected.is_empty() {
+            return;
+        }
+        let all = self.masked.len() == self.expected.len();
+        let timed_out = self
+            .last_masked_at
+            .map_or(false, |t| t.elapsed() > timeout && self.masked.len() >= self.threshold);
+        if all || timed_out {
+            self.round2_closed = true;
+            self.survivors = self.masked.keys().copied().collect();
+        }
+    }
+
+    fn dropped(&self) -> Vec<u64> {
+        self.expected.iter().copied().filter(|n| !self.survivors.contains(n)).collect()
+    }
+
+    /// Try to unmask once all needed shares are in.
+    fn maybe_unmask(&mut self) {
+        if self.average.is_some() || !self.round2_closed || self.survivors.is_empty() {
+            return;
+        }
+        // Need ≥ t shares of b_u for every survivor u, and ≥ t shares of
+        // s_d^SK for every dropped d.
+        for u in &self.survivors {
+            if self.b_shares.get(u).map_or(0, |s| s.len()) < self.threshold {
+                return;
+            }
+        }
+        let dropped = self.dropped();
+        for d in &dropped {
+            if self.s_shares.get(d).map_or(0, |s| s.len()) < self.threshold {
+                return;
+            }
+        }
+        let n_feat = match self.masked.values().next() {
+            Some(v) => v.len(),
+            None => return,
+        };
+        // Sum masked inputs over survivors.
+        let mut sum = vec![0.0f64; n_feat];
+        for u in &self.survivors {
+            let y = &self.masked[u];
+            for (a, b) in sum.iter_mut().zip(y) {
+                *a += b;
+            }
+        }
+        // Subtract each survivor's self-mask PRG(b_u).
+        for u in &self.survivors {
+            let b_seed = match shamir::reconstruct_secret(&self.b_shares[u][..self.threshold]) {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let mask = prg_expand_f64(&b_seed, n_feat);
+            for (a, m) in sum.iter_mut().zip(&mask) {
+                *a -= m;
+            }
+        }
+        // Cancel residual pairwise masks involving dropped nodes.
+        for d in &dropped {
+            let sk_bytes = match shamir::reconstruct_secret(&self.s_shares[d][..self.threshold]) {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let s_sk = BigUint::from_bytes_be(&sk_bytes);
+            for v in &self.survivors {
+                let Some((_, spk_hex)) = self.keys.get(v) else { continue };
+                let Ok(spk) = BigUint::from_hex(spk_hex) else { continue };
+                // Recompute the pairwise seed exactly like the clients:
+                // KDF(spk_v ^ s_d^SK mod p).
+                let shared = spk.modpow(&s_sk, &self.group.p);
+                let seed = pairwise_seed(&shared);
+                let mask = prg_expand_f64(&seed, n_feat);
+                if *d < *v {
+                    // v subtracted PRG(s_{d,v}); add it back.
+                    for (a, m) in sum.iter_mut().zip(&mask) {
+                        *a += m;
+                    }
+                } else {
+                    // v added it; subtract.
+                    for (a, m) in sum.iter_mut().zip(&mask) {
+                        *a -= m;
+                    }
+                }
+            }
+        }
+        let k = self.survivors.len() as f64;
+        for a in sum.iter_mut() {
+            *a /= k;
+        }
+        self.average = Some(sum);
+    }
+}
+
+/// KDF from a DH shared value to a 32-byte PRG seed — must match the
+/// client side in `protocols::bon`.
+pub fn pairwise_seed(shared: &BigUint) -> [u8; 32] {
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    h.update(b"bon-pairwise");
+    h.update(shared.to_bytes_be());
+    h.finalize().into()
+}
+
+pub fn advertise(ctrl: &Controller, body: &Value) -> Value {
+    let node = match body.u64_of("node") {
+        Some(n) => n,
+        None => return proto::status("missing node"),
+    };
+    let (cpk, spk) = match (body.str_of("cpk"), body.str_of("spk")) {
+        (Some(c), Some(s)) => (c.to_string(), s.to_string()),
+        _ => return proto::status("missing keys"),
+    };
+    let mut inner = ctrl.inner.lock().unwrap();
+    inner.bon.keys.insert(node, (cpk, spk));
+    ctrl.cv.notify_all();
+    proto::status("ok")
+}
+
+pub fn get_keys(ctrl: &Controller, body: &Value) -> Value {
+    let _ = body;
+    let poll = ctrl.inner.lock().unwrap().config.poll_time;
+    let res = ctrl.wait_until(poll, |inner| {
+        if !inner.bon.expected.is_empty() && inner.bon.keys.len() == inner.bon.expected.len() {
+            Some(inner.bon.keys.clone())
+        } else {
+            None
+        }
+    });
+    match res {
+        Some(keys) => {
+            let mut obj = Value::obj();
+            for (node, (cpk, spk)) in keys {
+                obj.set(
+                    &node.to_string(),
+                    Value::object(vec![
+                        ("cpk", Value::from(cpk)),
+                        ("spk", Value::from(spk)),
+                    ]),
+                );
+            }
+            Value::object(vec![("status", Value::from("ok")), ("keys", obj)])
+        }
+        None => proto::status("empty"),
+    }
+}
+
+pub fn post_shares(ctrl: &Controller, body: &Value) -> Value {
+    let from = match body.u64_of("node") {
+        Some(n) => n,
+        None => return proto::status("missing node"),
+    };
+    let shares = match body.get("shares") {
+        Some(Value::Obj(m)) => m.clone(),
+        _ => return proto::status("missing shares"),
+    };
+    let mut inner = ctrl.inner.lock().unwrap();
+    for (to_str, blob) in shares {
+        if let (Ok(to), Some(b)) = (to_str.parse::<u64>(), blob.as_str()) {
+            inner.bon.shares.entry(to).or_default().insert(from, b.to_string());
+        }
+    }
+    ctrl.cv.notify_all();
+    proto::status("ok")
+}
+
+pub fn get_shares(ctrl: &Controller, body: &Value) -> Value {
+    let node = match body.u64_of("node") {
+        Some(n) => n,
+        None => return proto::status("missing node"),
+    };
+    let poll = ctrl.inner.lock().unwrap().config.poll_time;
+    let res = ctrl.wait_until(poll, |inner| {
+        let needed = inner.bon.expected.len().saturating_sub(1);
+        let got = inner.bon.shares.get(&node).map_or(0, |m| m.len());
+        if needed > 0 && got >= needed {
+            Some(inner.bon.shares.get(&node).cloned().unwrap_or_default())
+        } else {
+            None
+        }
+    });
+    match res {
+        Some(m) => {
+            let mut obj = Value::obj();
+            for (from, blob) in m {
+                obj.set(&from.to_string(), Value::from(blob));
+            }
+            Value::object(vec![("status", Value::from("ok")), ("shares", obj)])
+        }
+        None => proto::status("empty"),
+    }
+}
+
+pub fn post_masked(ctrl: &Controller, body: &Value) -> Value {
+    let node = match body.u64_of("node") {
+        Some(n) => n,
+        None => return proto::status("missing node"),
+    };
+    let y = match body.f64_arr_of("y") {
+        Some(v) => v,
+        None => return proto::status("missing y"),
+    };
+    let mut inner = ctrl.inner.lock().unwrap();
+    if inner.bon.round2_closed {
+        return proto::status("round_closed");
+    }
+    inner.bon.masked.insert(node, y);
+    inner.bon.last_masked_at = Some(Instant::now());
+    let timeout = inner.config.bon_round2_timeout;
+    inner.bon.maybe_close_round2(timeout);
+    ctrl.cv.notify_all();
+    proto::status("ok")
+}
+
+pub fn get_survivors(ctrl: &Controller, body: &Value) -> Value {
+    let _ = body;
+    let (poll, timeout) = {
+        let inner = ctrl.inner.lock().unwrap();
+        (inner.config.poll_time, inner.config.bon_round2_timeout)
+    };
+    let res = ctrl.wait_until(poll, |inner| {
+        inner.bon.maybe_close_round2(timeout);
+        if inner.bon.round2_closed {
+            Some((inner.bon.survivors.clone(), inner.bon.dropped()))
+        } else {
+            None
+        }
+    });
+    match res {
+        Some((survivors, dropped)) => Value::object(vec![
+            ("status", Value::from("ok")),
+            (
+                "survivors",
+                Value::Arr(survivors.iter().map(|&n| Value::from(n)).collect()),
+            ),
+            (
+                "dropped",
+                Value::Arr(dropped.iter().map(|&n| Value::from(n)).collect()),
+            ),
+        ]),
+        None => proto::status("empty"),
+    }
+}
+
+pub fn post_unmask(ctrl: &Controller, body: &Value) -> Value {
+    let node = match body.u64_of("node") {
+        Some(n) => n,
+        None => return proto::status("missing node"),
+    };
+    let _ = node;
+    let mut inner = ctrl.inner.lock().unwrap();
+    if let Some(Value::Obj(m)) = body.get("b_shares") {
+        for (about_str, share_v) in m {
+            if let (Ok(about), Ok(share)) =
+                (about_str.parse::<u64>(), shamir::Share::from_json(share_v))
+            {
+                inner.bon.b_shares.entry(about).or_default().push(share);
+            }
+        }
+    }
+    if let Some(Value::Obj(m)) = body.get("s_shares") {
+        for (about_str, share_v) in m {
+            if let (Ok(about), Ok(share)) =
+                (about_str.parse::<u64>(), shamir::Share::from_json(share_v))
+            {
+                inner.bon.s_shares.entry(about).or_default().push(share);
+            }
+        }
+    }
+    inner.bon.maybe_unmask();
+    ctrl.cv.notify_all();
+    proto::status("ok")
+}
+
+pub fn get_average(ctrl: &Controller, body: &Value) -> Value {
+    let _ = body;
+    let poll = ctrl.inner.lock().unwrap().config.poll_time;
+    match ctrl.wait_until(poll, |inner| {
+        inner.bon.maybe_unmask();
+        inner.bon.average.clone()
+    }) {
+        Some(avg) => Value::object(vec![
+            ("status", Value::from("ok")),
+            ("average", Value::from(avg)),
+        ]),
+        None => proto::status("empty"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_is_two_thirds_ceil() {
+        let mut s = BonState::default();
+        s.configure((1..=3u64).collect());
+        assert_eq!(s.threshold, 2);
+        s.configure((1..=8u64).collect());
+        assert_eq!(s.threshold, 6);
+        s.configure((1..=15u64).collect());
+        assert_eq!(s.threshold, 10);
+    }
+
+    #[test]
+    fn round2_closes_when_all_posted() {
+        let mut s = BonState::default();
+        s.configure((1..=3u64).collect());
+        for n in 1..=3u64 {
+            s.masked.insert(n, vec![1.0]);
+            s.last_masked_at = Some(Instant::now());
+        }
+        s.maybe_close_round2(std::time::Duration::from_secs(10));
+        assert!(s.round2_closed);
+        assert_eq!(s.survivors.len(), 3);
+        assert!(s.dropped().is_empty());
+    }
+
+    #[test]
+    fn round2_timeout_closes_with_threshold() {
+        let mut s = BonState::default();
+        s.configure((1..=3u64).collect());
+        s.masked.insert(1, vec![1.0]);
+        s.masked.insert(2, vec![2.0]);
+        s.last_masked_at = Some(Instant::now() - std::time::Duration::from_secs(5));
+        s.maybe_close_round2(std::time::Duration::from_millis(100));
+        assert!(s.round2_closed);
+        assert_eq!(s.dropped(), vec![3]);
+    }
+
+    #[test]
+    fn round2_does_not_close_below_threshold() {
+        let mut s = BonState::default();
+        s.configure((1..=6u64).collect()); // t = 4
+        s.masked.insert(1, vec![1.0]);
+        s.last_masked_at = Some(Instant::now() - std::time::Duration::from_secs(5));
+        s.maybe_close_round2(std::time::Duration::from_millis(100));
+        assert!(!s.round2_closed);
+    }
+}

@@ -1,0 +1,124 @@
+//! Hierarchical federation (paper §5.10): child controllers post their
+//! (already anonymized) aggregate averages to a parent controller, which
+//! combines them into a global average — "this posting does not have to be
+//! encrypted as it is already anonymized over learners, but it needs to be
+//! coordinated".
+//!
+//! The parent side lives here (two endpoints on the regular controller);
+//! the child side is a small client in `protocols::hierarchy` that bridges
+//! a completed local aggregation up one level.
+
+use std::collections::BTreeMap;
+
+use super::Controller;
+use crate::json::Value;
+use crate::proto;
+
+#[derive(Default)]
+pub struct FedState {
+    /// How many child controllers must report before the global average is
+    /// released.
+    pub expected_children: usize,
+    /// child id → (average, contributor count).
+    pub child_averages: BTreeMap<u64, (Vec<f64>, u64)>,
+}
+
+impl FedState {
+    /// Contributor-weighted global average across children.
+    fn global(&self) -> Option<(Vec<f64>, u64)> {
+        if self.expected_children == 0 || self.child_averages.len() < self.expected_children {
+            return None;
+        }
+        let mut total_w = 0u64;
+        let mut acc: Option<Vec<f64>> = None;
+        for (avg, w) in self.child_averages.values() {
+            let w = (*w).max(1);
+            total_w += w;
+            match &mut acc {
+                None => acc = Some(avg.iter().map(|x| x * w as f64).collect()),
+                Some(a) => {
+                    for (x, y) in a.iter_mut().zip(avg) {
+                        *x += y * w as f64;
+                    }
+                }
+            }
+        }
+        let mut avg = acc?;
+        for x in avg.iter_mut() {
+            *x /= total_w as f64;
+        }
+        Some((avg, total_w))
+    }
+}
+
+pub fn post_child_average(ctrl: &Controller, body: &Value) -> Value {
+    let child = match body.u64_of("child") {
+        Some(c) => c,
+        None => return proto::status("missing child"),
+    };
+    let avg = match body.f64_arr_of("average") {
+        Some(a) => a,
+        None => return proto::status("missing average"),
+    };
+    let contributors = body.u64_of("contributors").unwrap_or(1);
+    let mut inner = ctrl.inner.lock().unwrap();
+    inner.fed.child_averages.insert(child, (avg, contributors));
+    ctrl.cv.notify_all();
+    proto::status("ok")
+}
+
+pub fn get_global_average(ctrl: &Controller, body: &Value) -> Value {
+    let _ = body;
+    let poll = ctrl.inner.lock().unwrap().config.poll_time;
+    match ctrl.wait_until(poll, |inner| inner.fed.global()) {
+        Some((avg, total)) => Value::object(vec![
+            ("status", Value::from("ok")),
+            ("average", Value::from(avg)),
+            ("contributors", Value::from(total)),
+        ]),
+        None => proto::status("empty"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ControllerConfig;
+    use crate::transport::Handler;
+    use std::time::Duration;
+
+    #[test]
+    fn weighted_global_average() {
+        let c = Controller::new(ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            ..Default::default()
+        });
+        c.handle(
+            proto::CONFIGURE,
+            &Value::object(vec![("fed_expected_children", Value::from(2u64))]),
+        );
+        c.handle(
+            proto::FED_POST_CHILD_AVERAGE,
+            &Value::object(vec![
+                ("child", Value::from(1u64)),
+                ("average", Value::from(vec![1.0])),
+                ("contributors", Value::from(3u64)),
+            ]),
+        );
+        let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
+        assert_eq!(r.str_of("status"), Some("empty"));
+        c.handle(
+            proto::FED_POST_CHILD_AVERAGE,
+            &Value::object(vec![
+                ("child", Value::from(2u64)),
+                ("average", Value::from(vec![5.0])),
+                ("contributors", Value::from(1u64)),
+            ]),
+        );
+        let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
+        assert_eq!(r.str_of("status"), Some("ok"));
+        // (1*3 + 5*1) / 4 = 2
+        assert_eq!(r.f64_arr_of("average").unwrap(), vec![2.0]);
+        assert_eq!(r.u64_of("contributors"), Some(4));
+    }
+}

@@ -1,0 +1,169 @@
+//! INSEC baseline: the insecure central aggregator the paper benchmarks
+//! against (§6: "a benchmark approach that simply posts parameters to a
+//! central controller and retrieves averages").
+//!
+//! Each node posts its cleartext vector; when all expected nodes of a
+//! group have posted, the controller computes the group mean; the global
+//! mean is averaged across groups like SAFE's.
+
+use std::collections::BTreeMap;
+
+use super::Controller;
+use crate::json::Value;
+use crate::proto;
+
+#[derive(Default)]
+pub struct InsecState {
+    /// group → expected number of posts.
+    pub expected: BTreeMap<u64, usize>,
+    /// group → node → vector.
+    pub posts: BTreeMap<u64, BTreeMap<u64, Vec<f64>>>,
+    /// group → computed group average.
+    pub averages: BTreeMap<u64, Vec<f64>>,
+}
+
+impl InsecState {
+    pub fn configure_group(&mut self, group: u64, expected: usize) {
+        self.expected.insert(group, expected);
+        self.posts.remove(&group);
+        self.averages.remove(&group);
+    }
+
+    fn try_close(&mut self, group: u64) {
+        let Some(&expected) = self.expected.get(&group) else { return };
+        let Some(posts) = self.posts.get(&group) else { return };
+        if posts.len() < expected || self.averages.contains_key(&group) {
+            return;
+        }
+        let mut it = posts.values();
+        let first = it.next().expect("non-empty").clone();
+        let mut acc = first;
+        for v in it {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a /= posts.len() as f64;
+        }
+        self.averages.insert(group, acc);
+    }
+
+    fn global_average(&self) -> Option<(Vec<f64>, u64)> {
+        if self.expected.is_empty() || self.averages.len() < self.expected.len() {
+            return None;
+        }
+        let mut acc: Option<Vec<f64>> = None;
+        for avg in self.averages.values() {
+            match &mut acc {
+                None => acc = Some(avg.clone()),
+                Some(a) => {
+                    for (x, y) in a.iter_mut().zip(avg) {
+                        *x += y;
+                    }
+                }
+            }
+        }
+        let mut avg = acc?;
+        let g = self.averages.len();
+        for x in avg.iter_mut() {
+            *x /= g as f64;
+        }
+        Some((avg, g as u64))
+    }
+}
+
+pub fn post(ctrl: &Controller, body: &Value) -> Value {
+    let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
+        (Some(n), Some(g)) => (n, g),
+        _ => return proto::status("missing fields"),
+    };
+    let vector = match body.f64_arr_of("vector") {
+        Some(v) => v,
+        None => return proto::status("missing vector"),
+    };
+    let mut inner = ctrl.inner.lock().unwrap();
+    inner.insec.posts.entry(group).or_default().insert(node, vector);
+    inner.insec.try_close(group);
+    ctrl.cv.notify_all();
+    proto::status("ok")
+}
+
+pub fn get_average(ctrl: &Controller, body: &Value) -> Value {
+    let _ = body;
+    let poll = ctrl.inner.lock().unwrap().config.poll_time;
+    match ctrl.wait_until(poll, |inner| inner.insec.global_average()) {
+        Some((avg, groups)) => Value::object(vec![
+            ("status", Value::from("ok")),
+            ("average", Value::from(avg)),
+            ("groups", Value::from(groups)),
+        ]),
+        None => proto::status("empty"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ControllerConfig;
+    use crate::transport::Handler;
+    use std::time::Duration;
+
+    fn ctrl(groups: &[(u64, usize)]) -> Controller {
+        let c = Controller::new(ControllerConfig {
+            poll_time: Duration::from_millis(150),
+            ..Default::default()
+        });
+        {
+            let mut inner = c.inner.lock().unwrap();
+            for &(g, n) in groups {
+                inner.insec.configure_group(g, n);
+                inner.expected_groups.insert(g);
+            }
+        }
+        c
+    }
+
+    fn post_body(node: u64, group: u64, v: &[f64]) -> Value {
+        Value::object(vec![
+            ("node", Value::from(node)),
+            ("group", Value::from(group)),
+            ("vector", Value::from(v)),
+        ])
+    }
+
+    #[test]
+    fn averages_when_all_posted() {
+        let c = ctrl(&[(1, 3)]);
+        c.handle(proto::INSEC_POST, &post_body(1, 1, &[1.0, 10.0]));
+        c.handle(proto::INSEC_POST, &post_body(2, 1, &[2.0, 20.0]));
+        let r = c.handle(proto::INSEC_GET_AVERAGE, &Value::obj());
+        assert_eq!(r.str_of("status"), Some("empty"), "not all posted yet");
+        c.handle(proto::INSEC_POST, &post_body(3, 1, &[3.0, 30.0]));
+        let r = c.handle(proto::INSEC_GET_AVERAGE, &Value::obj());
+        assert_eq!(r.f64_arr_of("average").unwrap(), vec![2.0, 20.0]);
+    }
+
+    #[test]
+    fn duplicate_posts_overwrite_not_double_count() {
+        let c = ctrl(&[(1, 2)]);
+        c.handle(proto::INSEC_POST, &post_body(1, 1, &[0.0]));
+        c.handle(proto::INSEC_POST, &post_body(1, 1, &[4.0])); // resend
+        c.handle(proto::INSEC_POST, &post_body(2, 1, &[2.0]));
+        let r = c.handle(proto::INSEC_GET_AVERAGE, &Value::obj());
+        assert_eq!(r.f64_arr_of("average").unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn multi_group_global_average() {
+        let c = ctrl(&[(1, 2), (2, 2)]);
+        c.handle(proto::INSEC_POST, &post_body(1, 1, &[1.0]));
+        c.handle(proto::INSEC_POST, &post_body(2, 1, &[3.0]));
+        c.handle(proto::INSEC_POST, &post_body(3, 2, &[5.0]));
+        c.handle(proto::INSEC_POST, &post_body(4, 2, &[7.0]));
+        let r = c.handle(proto::INSEC_GET_AVERAGE, &Value::obj());
+        // group means 2 and 6 → global 4
+        assert_eq!(r.f64_arr_of("average").unwrap(), vec![4.0]);
+        assert_eq!(r.u64_of("groups"), Some(2));
+    }
+}

@@ -1,0 +1,835 @@
+//! The SAFE controller: a message broker + progress tracker.
+//!
+//! Paper §5.1.3: the controller (a) stores messages sent to target nodes
+//! until retrieved, (b) monitors progress and requests reposts around
+//! failed nodes, (c) distributes the computed average (averaging across
+//! subgroups when used), and (d) picks a new initiator when the current
+//! one fails. Crucially it never participates in the aggregation math and
+//! never sees a plaintext aggregate — reducing it to "a mere message
+//! broker".
+//!
+//! The controller also hosts the two baselines used throughout the paper's
+//! evaluation (§6): INSEC (cleartext post/average — [`insec`]) and the BON
+//! protocol of Bonawitz et al. ([`bon`]), where the server *does* have to
+//! do cryptographic work, which is exactly the overhead the paper measures.
+
+pub mod bon;
+pub mod hierarchy;
+pub mod insec;
+pub mod state;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicI64, Ordering as AtomicOrdering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::json::Value;
+use crate::proto;
+use crate::transport::Handler;
+use state::{CheckStatus, GroupState, PostedAggregate};
+
+/// Controller timing knobs (paper Appendix A: `poll_time`, `yield_time`,
+/// `aggregation_timeout`; §5.3's monitor adds `progress_timeout`).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Max time a single long-poll call blocks before returning "empty".
+    pub poll_time: Duration,
+    /// Whole-aggregation timeout triggering initiator failover (§5.4).
+    pub aggregation_timeout: Duration,
+    /// Per-link silence threshold before the monitor declares a node
+    /// failed (§5.3).
+    pub progress_timeout: Duration,
+    /// BON round-2 close timeout (dropout detection for the baseline).
+    pub bon_round2_timeout: Duration,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            poll_time: Duration::from_millis(500),
+            aggregation_timeout: Duration::from_secs(30),
+            progress_timeout: Duration::from_secs(2),
+            bon_round2_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+pub(crate) struct Inner {
+    pub groups: BTreeMap<u64, GroupState>,
+    pub expected_groups: BTreeSet<u64>,
+    /// Node → serialized RSA public key (round 0 registry).
+    pub keys: BTreeMap<u64, Value>,
+    /// (owner, for_node) → base64 RSA-sealed symmetric key (§5.8).
+    pub preneg: BTreeMap<(u64, u64), String>,
+    pub insec: insec::InsecState,
+    pub bon: bon::BonState,
+    pub fed: hierarchy::FedState,
+    pub config: ControllerConfig,
+}
+
+/// The controller service. Thread-safe; all ops go through [`Handler`].
+pub struct Controller {
+    pub(crate) inner: Mutex<Inner>,
+    pub(crate) cv: Condvar,
+    /// Currently-blocked long-poll calls (connection pressure, §5.9).
+    waiting: AtomicI64,
+    /// High-water mark of `waiting` since the last reset.
+    peak_waiting: AtomicI64,
+}
+
+impl Controller {
+    pub fn new(config: ControllerConfig) -> Self {
+        Controller {
+            inner: Mutex::new(Inner {
+                groups: BTreeMap::new(),
+                expected_groups: BTreeSet::new(),
+                keys: BTreeMap::new(),
+                preneg: BTreeMap::new(),
+                insec: insec::InsecState::default(),
+                bon: bon::BonState::default(),
+                fed: hierarchy::FedState::default(),
+                config,
+            }),
+            cv: Condvar::new(),
+            waiting: AtomicI64::new(0),
+            peak_waiting: AtomicI64::new(0),
+        }
+    }
+
+    /// Peak number of simultaneously-parked long-polls (the §5.9
+    /// connection-pressure metric; staggered polling lowers it).
+    pub fn peak_concurrent_polls(&self) -> i64 {
+        self.peak_waiting.load(AtomicOrdering::SeqCst)
+    }
+
+    pub fn reset_poll_gauge(&self) {
+        self.peak_waiting.store(0, AtomicOrdering::SeqCst);
+    }
+
+    /// Long-poll helper: evaluate `f` under the lock until it yields
+    /// `Some`, waking on every state change, up to `timeout`.
+    pub(crate) fn wait_until<T>(
+        &self,
+        timeout: Duration,
+        f: impl FnMut(&mut Inner) -> Option<T>,
+    ) -> Option<T> {
+        self.wait_until_inner(timeout, f, false)
+    }
+
+    /// Like `wait_until` but counted in the §5.9 connection-pressure gauge
+    /// (used by the aggregate-phase polls, which staggering targets).
+    pub(crate) fn wait_until_gauged<T>(
+        &self,
+        timeout: Duration,
+        f: impl FnMut(&mut Inner) -> Option<T>,
+    ) -> Option<T> {
+        self.wait_until_inner(timeout, f, true)
+    }
+
+    fn wait_until_inner<T>(
+        &self,
+        timeout: Duration,
+        mut f: impl FnMut(&mut Inner) -> Option<T>,
+        gauged: bool,
+    ) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.inner.lock().unwrap();
+        let mut counted = false;
+        let result = loop {
+            if let Some(v) = f(&mut guard) {
+                break Some(v);
+            }
+            if gauged && !counted {
+                counted = true;
+                let now_waiting = self.waiting.fetch_add(1, AtomicOrdering::SeqCst) + 1;
+                self.peak_waiting.fetch_max(now_waiting, AtomicOrdering::SeqCst);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break None;
+            }
+            let (g, _timeout) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        };
+        if counted {
+            self.waiting.fetch_sub(1, AtomicOrdering::SeqCst);
+        }
+        result
+    }
+
+    fn configure(&self, body: &Value) -> Value {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(Value::Obj(groups)) = body.get("groups") {
+            inner.groups.clear();
+            inner.expected_groups.clear();
+            for (gid_str, chain_v) in groups {
+                let gid: u64 = match gid_str.parse() {
+                    Ok(g) => g,
+                    Err(_) => return proto::status("bad group id"),
+                };
+                let chain: Vec<u64> = match chain_v.as_arr() {
+                    Some(arr) => arr.iter().filter_map(|v| v.as_u64()).collect(),
+                    None => return proto::status("bad chain"),
+                };
+                let mut gs = GroupState::new(chain.clone());
+                gs.initiator = chain.first().copied();
+                inner.groups.insert(gid, gs);
+                inner.expected_groups.insert(gid);
+                inner.insec.configure_group(gid, chain.len());
+            }
+        }
+        if let Some(ms) = body.u64_of("aggregation_timeout_ms") {
+            inner.config.aggregation_timeout = Duration::from_millis(ms);
+        }
+        if let Some(ms) = body.u64_of("progress_timeout_ms") {
+            inner.config.progress_timeout = Duration::from_millis(ms);
+        }
+        if let Some(ms) = body.u64_of("poll_time_ms") {
+            inner.config.poll_time = Duration::from_millis(ms);
+        }
+        if let Some(nodes) = body.get("bon_nodes").and_then(|v| v.as_arr()) {
+            let ids: BTreeSet<u64> = nodes.iter().filter_map(|v| v.as_u64()).collect();
+            inner.bon.configure(ids);
+        }
+        if let Some(ms) = body.u64_of("bon_round2_timeout_ms") {
+            inner.config.bon_round2_timeout = Duration::from_millis(ms);
+        }
+        if let Some(n) = body.u64_of("fed_expected_children") {
+            inner.fed.expected_children = n as usize;
+        }
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
+    fn reset(&self) -> Value {
+        let mut inner = self.inner.lock().unwrap();
+        inner.groups.clear();
+        inner.expected_groups.clear();
+        inner.keys.clear();
+        inner.preneg.clear();
+        inner.insec = insec::InsecState::default();
+        inner.bon = bon::BonState::default();
+        inner.fed = hierarchy::FedState::default();
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
+    // ---- SAFE core ops ----
+
+    fn post_aggregate(&self, body: &Value) -> Value {
+        let (from, to, group) = match (
+            body.u64_of("from_node"),
+            body.u64_of("to_node"),
+            body.u64_of("group"),
+        ) {
+            (Some(f), Some(t), Some(g)) => (f, t, g),
+            _ => return proto::status("missing fields"),
+        };
+        let agg = match body.str_of("aggregate") {
+            Some(a) => a.to_string(),
+            None => return proto::status("missing aggregate"),
+        };
+        let round_id = body.u64_of("round_id");
+        let mut inner = self.inner.lock().unwrap();
+        let gs = match inner.groups.get_mut(&group) {
+            Some(g) => g,
+            None => return proto::status("unknown group"),
+        };
+        // Reject posts from nodes already declared failed (late/stale posts
+        // after a repost was issued would double-count their contribution).
+        if gs.failed.contains(&from) {
+            return proto::status("stale");
+        }
+        // Reject posts from a previous round (pre-initiator-failover).
+        if let Some(r) = round_id {
+            if r != gs.round_id {
+                return proto::status("stale_round");
+            }
+        }
+        let now = Instant::now();
+        gs.mailbox.insert(
+            to,
+            PostedAggregate { aggregate: agg, from_node: from, posted_at: now },
+        );
+        gs.posters.insert(from);
+        // `from` has done its part: whoever is checking on `from` learns
+        // the chain advanced through it.
+        gs.check.insert(from, CheckStatus::Consumed);
+        gs.last_activity = now;
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
+    fn get_aggregate(&self, body: &Value) -> Value {
+        let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
+            (Some(n), Some(g)) => (n, g),
+            _ => return proto::status("missing fields"),
+        };
+        let poll = self.inner.lock().unwrap().config.poll_time;
+        let res = self.wait_until_gauged(poll, |inner| {
+            let gs = inner.groups.get_mut(&group)?;
+            let posted = gs.mailbox.remove(&node)?;
+            Some((posted, gs.posters.len() as u64, gs.round_id))
+        });
+        match res {
+            Some((posted, contributors, round_id)) => Value::object(vec![
+                ("status", Value::from("ok")),
+                ("aggregate", Value::from(posted.aggregate)),
+                ("from_node", Value::from(posted.from_node)),
+                ("posted", Value::from(contributors)),
+                ("round_id", Value::from(round_id)),
+            ]),
+            None => proto::status("empty"),
+        }
+    }
+
+    fn check_aggregate(&self, body: &Value) -> Value {
+        let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
+            (Some(n), Some(g)) => (n, g),
+            _ => return proto::status("missing fields"),
+        };
+        let poll = self.inner.lock().unwrap().config.poll_time;
+        let res = self.wait_until(poll, |inner| {
+            let gs = inner.groups.get_mut(&group)?;
+            gs.check.remove(&node)
+        });
+        match res {
+            Some(CheckStatus::Consumed) => proto::status("consumed"),
+            Some(CheckStatus::Repost { new_target }) => Value::object(vec![
+                ("status", Value::from("repost")),
+                ("to_node", Value::from(new_target)),
+            ]),
+            None => proto::status("empty"),
+        }
+    }
+
+    fn post_average(&self, body: &Value) -> Value {
+        let group = body.u64_of("group").unwrap_or(1);
+        let avg = match body.f64_arr_of("average") {
+            Some(a) => a,
+            None => return proto::status("missing average"),
+        };
+        let contributors = body.u64_of("contributors").unwrap_or(0);
+        let mut inner = self.inner.lock().unwrap();
+        let gs = match inner.groups.get_mut(&group) {
+            Some(g) => g,
+            None => return proto::status("unknown group"),
+        };
+        gs.average = Some(avg);
+        gs.average_contributors = contributors;
+        gs.last_activity = Instant::now();
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
+    fn get_average(&self, body: &Value) -> Value {
+        let poll = self.inner.lock().unwrap().config.poll_time;
+        let _ = body;
+        let res = self.wait_until(poll, |inner| {
+            // Global average is ready when every expected group posted its
+            // group average (§5.5 barrier). Equal-weight mean of means.
+            if inner.expected_groups.is_empty() {
+                return None;
+            }
+            let mut acc: Option<Vec<f64>> = None;
+            let mut count = 0usize;
+            for gid in &inner.expected_groups {
+                let gs = inner.groups.get(gid)?;
+                let avg = gs.average.as_ref()?;
+                match &mut acc {
+                    None => acc = Some(avg.clone()),
+                    Some(a) => {
+                        if a.len() != avg.len() {
+                            return None; // inconsistent; keep waiting
+                        }
+                        for (x, y) in a.iter_mut().zip(avg) {
+                            *x += y;
+                        }
+                    }
+                }
+                count += 1;
+            }
+            let mut avg = acc?;
+            for x in avg.iter_mut() {
+                *x /= count as f64;
+            }
+            Some((avg, count as u64))
+        });
+        match res {
+            Some((avg, groups)) => Value::object(vec![
+                ("status", Value::from("ok")),
+                ("average", Value::from(avg)),
+                ("groups", Value::from(groups)),
+            ]),
+            None => proto::status("empty"),
+        }
+    }
+
+    fn should_initiate(&self, body: &Value) -> Value {
+        let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
+            (Some(n), Some(g)) => (n, g),
+            _ => return proto::status("missing fields"),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        let timeout = inner.config.aggregation_timeout;
+        let gs = match inner.groups.get_mut(&group) {
+            Some(g) => g,
+            None => return proto::status("unknown group"),
+        };
+        if gs.failed.contains(&node) {
+            return Value::object(vec![("init", Value::from(false))]);
+        }
+        let elected = if gs.initiator.is_none() {
+            gs.initiator = Some(node);
+            gs.round_start = Instant::now();
+            true
+        } else if gs.average.is_none() && gs.round_start.elapsed() > timeout {
+            // Initiator failover (§5.4): first caller after the timeout
+            // wins and the whole round restarts.
+            gs.restart_round(node);
+            true
+        } else {
+            false
+        };
+        if elected {
+            self.cv.notify_all();
+        }
+        Value::object(vec![
+            ("init", Value::from(elected)),
+            ("round_id", Value::from(gs.round_id)),
+        ])
+    }
+
+    /// Monitor entry point (§5.3): detect stuck links and issue reposts.
+    /// Returns the actions taken so the monitor can log them.
+    fn progress_check(&self) -> Value {
+        let mut inner = self.inner.lock().unwrap();
+        let progress_timeout = inner.config.progress_timeout;
+        let mut actions = Vec::new();
+        for (gid, gs) in inner.groups.iter_mut() {
+            if gs.average.is_some() {
+                continue;
+            }
+            if gs.last_activity.elapsed() < progress_timeout {
+                continue;
+            }
+            let Some((checker, failed)) = gs.stuck_link() else { continue };
+            if Some(failed) == gs.initiator {
+                // Initiator failure is handled by the aggregation timeout
+                // (§5.4), not by chain re-routing.
+                continue;
+            }
+            if gs.live_count() <= 3 {
+                // Dropping below 3 live nodes would let neighbours infer
+                // each other's values (§5.3: need n − f ≥ 3).
+                actions.push(Value::object(vec![
+                    ("group", Value::from(*gid)),
+                    ("action", Value::from("abort_privacy_floor")),
+                    ("failed", Value::from(failed)),
+                ]));
+                continue;
+            }
+            gs.failed.insert(failed);
+            gs.mailbox.remove(&failed);
+            gs.check.remove(&failed);
+            if let Some(new_target) = gs.next_alive_after(failed) {
+                gs.check.insert(failed, CheckStatus::Repost { new_target });
+                gs.last_activity = Instant::now();
+                actions.push(Value::object(vec![
+                    ("group", Value::from(*gid)),
+                    ("action", Value::from("repost")),
+                    ("checker", Value::from(checker)),
+                    ("failed", Value::from(failed)),
+                    ("new_target", Value::from(new_target)),
+                ]));
+            }
+        }
+        if !actions.is_empty() {
+            self.cv.notify_all();
+        }
+        Value::object(vec![("actions", Value::Arr(actions))])
+    }
+
+    // ---- key registry (round 0) ----
+
+    fn register_key(&self, body: &Value) -> Value {
+        let node = match body.u64_of("node") {
+            Some(n) => n,
+            None => return proto::status("missing node"),
+        };
+        let key = match body.get("key") {
+            Some(k) => k.clone(),
+            None => return proto::status("missing key"),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        inner.keys.insert(node, key);
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
+    fn get_key(&self, body: &Value) -> Value {
+        let node = match body.u64_of("node") {
+            Some(n) => n,
+            None => return proto::status("missing node"),
+        };
+        let poll = self.inner.lock().unwrap().config.poll_time;
+        match self.wait_until(poll, |inner| inner.keys.get(&node).cloned()) {
+            Some(k) => Value::object(vec![("status", Value::from("ok")), ("key", k)]),
+            None => proto::status("empty"),
+        }
+    }
+
+    fn post_preneg_keys(&self, body: &Value) -> Value {
+        let owner = match body.u64_of("node") {
+            Some(n) => n,
+            None => return proto::status("missing node"),
+        };
+        let keys = match body.get("keys") {
+            Some(Value::Obj(m)) => m.clone(),
+            _ => return proto::status("missing keys"),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        for (to_str, blob) in keys {
+            if let (Ok(to), Some(b)) = (to_str.parse::<u64>(), blob.as_str()) {
+                inner.preneg.insert((owner, to), b.to_string());
+            }
+        }
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
+    fn get_preneg_key(&self, body: &Value) -> Value {
+        let (node, owner) = match (body.u64_of("node"), body.u64_of("owner")) {
+            (Some(n), Some(o)) => (n, o),
+            _ => return proto::status("missing fields"),
+        };
+        let poll = self.inner.lock().unwrap().config.poll_time;
+        match self.wait_until(poll, |inner| inner.preneg.get(&(owner, node)).cloned()) {
+            Some(k) => Value::object(vec![("status", Value::from("ok")), ("key", Value::from(k))]),
+            None => proto::status("empty"),
+        }
+    }
+
+    fn status(&self) -> Value {
+        let inner = self.inner.lock().unwrap();
+        let groups: Vec<Value> = inner
+            .groups
+            .iter()
+            .map(|(gid, gs)| {
+                Value::object(vec![
+                    ("group", Value::from(*gid)),
+                    ("chain_len", Value::from(gs.chain.len())),
+                    ("posters", Value::from(gs.posters.len())),
+                    ("failed", Value::from(gs.failed.len())),
+                    ("round_id", Value::from(gs.round_id)),
+                    ("average_ready", Value::from(gs.average.is_some())),
+                    (
+                        "initiator",
+                        gs.initiator.map(Value::from).unwrap_or(Value::Null),
+                    ),
+                ])
+            })
+            .collect();
+        Value::object(vec![
+            ("groups", Value::Arr(groups)),
+            ("keys_registered", Value::from(inner.keys.len())),
+        ])
+    }
+}
+
+impl Handler for Controller {
+    fn handle(&self, path: &str, body: &Value) -> Value {
+        match path {
+            proto::CONFIGURE => self.configure(body),
+            proto::RESET => self.reset(),
+            proto::POST_AGGREGATE => self.post_aggregate(body),
+            proto::GET_AGGREGATE => self.get_aggregate(body),
+            proto::CHECK_AGGREGATE => self.check_aggregate(body),
+            proto::POST_AVERAGE => self.post_average(body),
+            proto::GET_AVERAGE => self.get_average(body),
+            proto::SHOULD_INITIATE => self.should_initiate(body),
+            proto::PROGRESS_CHECK => self.progress_check(),
+            proto::REGISTER_KEY => self.register_key(body),
+            proto::GET_KEY => self.get_key(body),
+            proto::POST_PRENEG_KEYS => self.post_preneg_keys(body),
+            proto::GET_PRENEG_KEY => self.get_preneg_key(body),
+            proto::STATUS => self.status(),
+            proto::INSEC_POST => insec::post(self, body),
+            proto::INSEC_GET_AVERAGE => insec::get_average(self, body),
+            proto::BON_ADVERTISE => bon::advertise(self, body),
+            proto::BON_GET_KEYS => bon::get_keys(self, body),
+            proto::BON_POST_SHARES => bon::post_shares(self, body),
+            proto::BON_GET_SHARES => bon::get_shares(self, body),
+            proto::BON_POST_MASKED => bon::post_masked(self, body),
+            proto::BON_GET_SURVIVORS => bon::get_survivors(self, body),
+            proto::BON_POST_UNMASK => bon::post_unmask(self, body),
+            proto::BON_GET_AVERAGE => bon::get_average(self, body),
+            proto::FED_POST_CHILD_AVERAGE => hierarchy::post_child_average(self, body),
+            proto::FED_GET_GLOBAL_AVERAGE => hierarchy::get_global_average(self, body),
+            _ => proto::status("unknown op"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn controller() -> Arc<Controller> {
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(200),
+            aggregation_timeout: Duration::from_secs(5),
+            progress_timeout: Duration::from_millis(100),
+            bon_round2_timeout: Duration::from_millis(200),
+        };
+        let c = Arc::new(Controller::new(cfg));
+        let groups = Value::object(vec![(
+            "groups",
+            Value::object(vec![(
+                "1",
+                Value::Arr(vec![1u64.into(), 2u64.into(), 3u64.into()]),
+            )]),
+        )]);
+        c.handle(proto::CONFIGURE, &groups);
+        c
+    }
+
+    #[test]
+    fn post_then_get_aggregate_delivers() {
+        let c = controller();
+        let r = c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "blob", 1));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.str_of("aggregate"), Some("blob"));
+        assert_eq!(r.u64_of("from_node"), Some(1));
+        assert_eq!(r.u64_of("posted"), Some(1));
+        // Second get times out empty.
+        let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("empty"));
+    }
+
+    #[test]
+    fn check_aggregate_sees_consumed_after_forward() {
+        let c = controller();
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "a1", 1));
+        // node 2 forwards — that marks node 2 as consumed for node 1's check
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(2, 3, "a2", 1));
+        let r = c.handle(proto::CHECK_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("consumed"));
+    }
+
+    #[test]
+    fn long_poll_wakes_on_post() {
+        let c = controller();
+        let c2 = c.clone();
+        let t = std::thread::spawn(move || {
+            c2.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "late", 1));
+        let r = t.join().unwrap();
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.str_of("aggregate"), Some("late"));
+    }
+
+    #[test]
+    fn average_flow() {
+        let c = controller();
+        let avg = vec![1.0, 2.0];
+        c.handle(proto::POST_AVERAGE, &proto::post_average(1, 1, &avg, 3));
+        let r = c.handle(proto::GET_AVERAGE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.f64_arr_of("average").unwrap(), avg);
+        assert_eq!(r.u64_of("groups"), Some(1));
+    }
+
+    #[test]
+    fn multi_group_average_barrier() {
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(150),
+            ..Default::default()
+        };
+        let c = Controller::new(cfg);
+        c.handle(
+            proto::CONFIGURE,
+            &Value::object(vec![(
+                "groups",
+                Value::object(vec![
+                    ("1", Value::Arr(vec![1u64.into(), 2u64.into(), 3u64.into()])),
+                    ("2", Value::Arr(vec![4u64.into(), 5u64.into(), 6u64.into()])),
+                ]),
+            )]),
+        );
+        c.handle(proto::POST_AVERAGE, &proto::post_average(1, 1, &[2.0], 3));
+        // Only one group posted: still empty.
+        let r = c.handle(proto::GET_AVERAGE, &proto::node_op(1, 1));
+        assert_eq!(r.str_of("status"), Some("empty"));
+        c.handle(proto::POST_AVERAGE, &proto::post_average(4, 2, &[4.0], 3));
+        let r = c.handle(proto::GET_AVERAGE, &proto::node_op(1, 1));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.f64_arr_of("average").unwrap(), vec![3.0]); // mean of 2,4
+        assert_eq!(r.u64_of("groups"), Some(2));
+    }
+
+    #[test]
+    fn progress_failover_issues_repost() {
+        let c = controller();
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "a1", 1));
+        // Node 2 goes silent; wait past progress_timeout.
+        std::thread::sleep(Duration::from_millis(150));
+        let r = c.handle(proto::PROGRESS_CHECK, &Value::obj());
+        let actions = r.get("actions").unwrap().as_arr().unwrap();
+        // chain is 3 nodes; failing one leaves 2 < 3 → privacy abort
+        assert_eq!(actions.len(), 1);
+        assert_eq!(actions[0].str_of("action"), Some("abort_privacy_floor"));
+    }
+
+    #[test]
+    fn progress_failover_with_enough_nodes() {
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            progress_timeout: Duration::from_millis(80),
+            ..Default::default()
+        };
+        let c = Controller::new(cfg);
+        c.handle(
+            proto::CONFIGURE,
+            &Value::object(vec![(
+                "groups",
+                Value::object(vec![(
+                    "1",
+                    Value::Arr(vec![1u64.into(), 2u64.into(), 3u64.into(), 4u64.into(), 5u64.into()]),
+                )]),
+            )]),
+        );
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "a1", 1));
+        std::thread::sleep(Duration::from_millis(120));
+        let r = c.handle(proto::PROGRESS_CHECK, &Value::obj());
+        let actions = r.get("actions").unwrap().as_arr().unwrap();
+        assert_eq!(actions.len(), 1);
+        assert_eq!(actions[0].str_of("action"), Some("repost"));
+        assert_eq!(actions[0].u64_of("failed"), Some(2));
+        assert_eq!(actions[0].u64_of("new_target"), Some(3));
+        assert_eq!(actions[0].u64_of("checker"), Some(1));
+        // The checker (node 1) now sees the repost command.
+        let r = c.handle(proto::CHECK_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("repost"));
+        assert_eq!(r.u64_of("to_node"), Some(3));
+        // Stale post from the failed node is rejected.
+        let r = c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(2, 3, "late", 1));
+        assert_eq!(r.str_of("status"), Some("stale"));
+    }
+
+    #[test]
+    fn should_initiate_elects_once_after_timeout() {
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            aggregation_timeout: Duration::from_millis(80),
+            ..Default::default()
+        };
+        let c = Controller::new(cfg);
+        c.handle(
+            proto::CONFIGURE,
+            &Value::object(vec![(
+                "groups",
+                Value::object(vec![(
+                    "1",
+                    Value::Arr(vec![1u64.into(), 2u64.into(), 3u64.into()]),
+                )]),
+            )]),
+        );
+        // Initiator is configured as node 1; before timeout nobody else wins.
+        let r = c.handle(proto::SHOULD_INITIATE, &proto::node_op(2, 1));
+        assert_eq!(r.bool_of("init"), Some(false));
+        std::thread::sleep(Duration::from_millis(120));
+        let r2 = c.handle(proto::SHOULD_INITIATE, &proto::node_op(2, 1));
+        assert_eq!(r2.bool_of("init"), Some(true));
+        assert_eq!(r2.u64_of("round_id"), Some(1));
+        // Immediately after, another node does NOT win.
+        let r3 = c.handle(proto::SHOULD_INITIATE, &proto::node_op(3, 1));
+        assert_eq!(r3.bool_of("init"), Some(false));
+    }
+
+    #[test]
+    fn key_registry_roundtrip() {
+        let c = controller();
+        let key = Value::object(vec![("n", Value::from("abcd")), ("e", Value::from("10001"))]);
+        c.handle(
+            proto::REGISTER_KEY,
+            &Value::object(vec![("node", Value::from(2u64)), ("key", key.clone())]),
+        );
+        let r = c.handle(proto::GET_KEY, &Value::object(vec![("node", Value::from(2u64))]));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.get("key"), Some(&key));
+        // Unregistered key times out empty.
+        let r = c.handle(proto::GET_KEY, &Value::object(vec![("node", Value::from(9u64))]));
+        assert_eq!(r.str_of("status"), Some("empty"));
+    }
+
+    #[test]
+    fn preneg_key_store() {
+        let c = controller();
+        // Node 2 generates keys for its predecessors.
+        c.handle(
+            proto::POST_PRENEG_KEYS,
+            &Value::object(vec![
+                ("node", Value::from(2u64)),
+                (
+                    "keys",
+                    Value::object(vec![("1", Value::from("sealed-for-1"))]),
+                ),
+            ]),
+        );
+        let r = c.handle(
+            proto::GET_PRENEG_KEY,
+            &Value::object(vec![("node", Value::from(1u64)), ("owner", Value::from(2u64))]),
+        );
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.str_of("key"), Some("sealed-for-1"));
+    }
+
+    #[test]
+    fn stale_round_posts_rejected_after_restart() {
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            aggregation_timeout: Duration::from_millis(50),
+            ..Default::default()
+        };
+        let c = Controller::new(cfg);
+        c.handle(
+            proto::CONFIGURE,
+            &Value::object(vec![(
+                "groups",
+                Value::object(vec![(
+                    "1",
+                    Value::Arr(vec![1u64.into(), 2u64.into(), 3u64.into()]),
+                )]),
+            )]),
+        );
+        std::thread::sleep(Duration::from_millis(80));
+        let r = c.handle(proto::SHOULD_INITIATE, &proto::node_op(2, 1));
+        assert_eq!(r.bool_of("init"), Some(true));
+        // A message from round 0 arrives late.
+        let mut stale = proto::post_aggregate(1, 2, "old", 1);
+        stale.set("round_id", Value::from(0u64));
+        let r = c.handle(proto::POST_AGGREGATE, &stale);
+        assert_eq!(r.str_of("status"), Some("stale_round"));
+        // Current-round message is fine.
+        let mut fresh = proto::post_aggregate(2, 3, "new", 1);
+        fresh.set("round_id", Value::from(1u64));
+        let r = c.handle(proto::POST_AGGREGATE, &fresh);
+        assert_eq!(r.str_of("status"), Some("ok"));
+    }
+
+    #[test]
+    fn unknown_op_and_reset() {
+        let c = controller();
+        let r = c.handle("/nope", &Value::obj());
+        assert_eq!(r.str_of("status"), Some("unknown op"));
+        c.handle(proto::RESET, &Value::obj());
+        let st = c.handle(proto::STATUS, &Value::obj());
+        assert_eq!(st.get("groups").unwrap().as_arr().unwrap().len(), 0);
+    }
+}

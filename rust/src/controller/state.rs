@@ -1,0 +1,259 @@
+//! Controller state: the store-and-forward broker at the centre of SAFE.
+//!
+//! The controller never decrypts anything — it stores opaque `aggregate`
+//! strings, routes them between chain neighbours, tracks progress, elects
+//! replacement initiators and distributes the final (cleartext) average,
+//! exactly as in the paper's Flask reference (Appendix A) but with condvar
+//! wakeups instead of `sleep(yield_time)` spin-polling (see DESIGN §Perf).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::time::Instant;
+
+/// An aggregate parked for `to_node` until it polls.
+#[derive(Debug, Clone)]
+pub struct PostedAggregate {
+    pub aggregate: String,
+    pub from_node: u64,
+    pub posted_at: Instant,
+}
+
+/// Answer to `check_aggregate(node)`: has `node` progressed, or must the
+/// checker repost around it?
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckStatus {
+    /// `node` posted its own aggregate onward — chain advanced.
+    Consumed,
+    /// The progress monitor declared `node` failed; re-encrypt for
+    /// `new_target` and repost (paper §5.3, Fig 4 step 5).
+    Repost { new_target: u64 },
+}
+
+/// Per-group (per-chain) aggregation state. One SAFE chain per group
+/// (§5.5: subgroups aggregate in parallel with an initiator each).
+#[derive(Debug)]
+pub struct GroupState {
+    /// Chain order for this group (node ids, aggregation order).
+    pub chain: Vec<u64>,
+    /// Nodes declared failed by the monitor this round.
+    pub failed: BTreeSet<u64>,
+    /// Mailbox: to_node → parked aggregate.
+    pub mailbox: BTreeMap<u64, PostedAggregate>,
+    /// check_aggregate statuses keyed by the node being checked.
+    pub check: BTreeMap<u64, CheckStatus>,
+    /// Distinct nodes that posted an aggregate this round (contributors).
+    pub posters: BTreeSet<u64>,
+    /// The group average posted by this group's initiator.
+    pub average: Option<Vec<f64>>,
+    /// Contributor count reported with the average (for weighted schemes).
+    pub average_contributors: u64,
+    /// Current initiator (elected or configured).
+    pub initiator: Option<u64>,
+    /// When the current aggregation round started.
+    pub round_start: Instant,
+    /// Time of the last post_aggregate (progress tracking).
+    pub last_activity: Instant,
+    /// Monotonic round counter — bumped on initiator-failover restart.
+    pub round_id: u64,
+}
+
+impl GroupState {
+    pub fn new(chain: Vec<u64>) -> Self {
+        let now = Instant::now();
+        GroupState {
+            chain,
+            failed: BTreeSet::new(),
+            mailbox: BTreeMap::new(),
+            check: BTreeMap::new(),
+            posters: BTreeSet::new(),
+            average: None,
+            average_contributors: 0,
+            initiator: None,
+            round_start: now,
+            last_activity: now,
+            round_id: 0,
+        }
+    }
+
+    /// Reset for a fresh attempt (initiator failover, §5.4). The chain and
+    /// failure knowledge survive; mailbox/average state does not.
+    pub fn restart_round(&mut self, new_initiator: u64) {
+        self.mailbox.clear();
+        self.check.clear();
+        self.posters.clear();
+        self.average = None;
+        self.average_contributors = 0;
+        self.initiator = Some(new_initiator);
+        self.round_start = Instant::now();
+        self.last_activity = self.round_start;
+        self.round_id += 1;
+    }
+
+    /// Next node after `node` in chain order, skipping known-failed nodes.
+    /// Wraps around. Returns None if fewer than 2 live nodes remain.
+    pub fn next_alive_after(&self, node: u64) -> Option<u64> {
+        let pos = self.chain.iter().position(|&n| n == node)?;
+        let len = self.chain.len();
+        for step in 1..len {
+            let cand = self.chain[(pos + step) % len];
+            if !self.failed.contains(&cand) {
+                return Some(cand);
+            }
+        }
+        None
+    }
+
+    /// Number of live nodes in the chain.
+    pub fn live_count(&self) -> usize {
+        self.chain.iter().filter(|n| !self.failed.contains(n)).count()
+    }
+
+    /// The node whose silence is blocking the chain, if any: the recipient
+    /// of the most recent undelivered-or-unanswered post. Returns the
+    /// (checker, failed) pair the monitor needs.
+    pub fn stuck_link(&self) -> Option<(u64, u64)> {
+        // Find the most recent poster whose successor has not posted.
+        // The mailbox entry may or may not have been pulled already; what
+        // matters is that the recipient never posted onward.
+        let mut best: Option<(&PostedAggregate, u64)> = None;
+        for (to, posted) in &self.mailbox {
+            if best.as_ref().map_or(true, |(b, _)| posted.posted_at > b.posted_at) {
+                best = Some((posted, *to));
+            }
+        }
+        if let Some((posted, to)) = best {
+            if !self.posters.contains(&to) && self.average.is_none() {
+                return Some((posted.from_node, to));
+            }
+        }
+        // Mailbox already drained: recipient pulled the aggregate, then
+        // died without posting. Reconstruct from the poster set: the last
+        // poster in chain order whose successor is silent.
+        if self.average.is_some() || self.posters.is_empty() {
+            return None;
+        }
+        // Walk the chain from the initiator; find the last consecutive poster.
+        let init = self.initiator?;
+        let pos = self.chain.iter().position(|&n| n == init)?;
+        let len = self.chain.len();
+        let mut last_poster = None;
+        for step in 0..len {
+            let n = self.chain[(pos + step) % len];
+            if self.failed.contains(&n) {
+                continue;
+            }
+            if self.posters.contains(&n) {
+                last_poster = Some(n);
+            } else {
+                // First live node that hasn't posted: stuck on it — unless
+                // it's the initiator waiting to finish (step 0 handled by
+                // posters check).
+                if let Some(lp) = last_poster {
+                    return Some((lp, n));
+                }
+                return None;
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gs(chain: &[u64]) -> GroupState {
+        GroupState::new(chain.to_vec())
+    }
+
+    #[test]
+    fn next_alive_wraps_and_skips_failed() {
+        let mut g = gs(&[1, 2, 3, 4, 5]);
+        assert_eq!(g.next_alive_after(2), Some(3));
+        assert_eq!(g.next_alive_after(5), Some(1));
+        g.failed.insert(3);
+        assert_eq!(g.next_alive_after(2), Some(4));
+        g.failed.insert(4);
+        assert_eq!(g.next_alive_after(2), Some(5));
+        g.failed.insert(5);
+        g.failed.insert(1);
+        assert_eq!(g.next_alive_after(2), None);
+    }
+
+    #[test]
+    fn live_count_tracks_failures() {
+        let mut g = gs(&[1, 2, 3]);
+        assert_eq!(g.live_count(), 3);
+        g.failed.insert(2);
+        assert_eq!(g.live_count(), 2);
+    }
+
+    #[test]
+    fn stuck_link_via_mailbox() {
+        let mut g = gs(&[1, 2, 3]);
+        g.initiator = Some(1);
+        g.posters.insert(1);
+        g.mailbox.insert(
+            2,
+            PostedAggregate {
+                aggregate: "x".into(),
+                from_node: 1,
+                posted_at: Instant::now(),
+            },
+        );
+        // Node 2 never posted onward → stuck on 2, checker is 1.
+        assert_eq!(g.stuck_link(), Some((1, 2)));
+        // Once 2 posts, it's no longer stuck on 2.
+        g.posters.insert(2);
+        g.mailbox.remove(&2);
+        g.mailbox.insert(
+            3,
+            PostedAggregate {
+                aggregate: "y".into(),
+                from_node: 2,
+                posted_at: Instant::now(),
+            },
+        );
+        assert_eq!(g.stuck_link(), Some((2, 3)));
+    }
+
+    #[test]
+    fn stuck_link_after_mailbox_drained() {
+        // Node pulled the message then died before posting.
+        let mut g = gs(&[1, 2, 3, 4]);
+        g.initiator = Some(1);
+        g.posters.insert(1);
+        g.posters.insert(2);
+        // mailbox empty: 3 consumed but never posted.
+        assert_eq!(g.stuck_link(), Some((2, 3)));
+    }
+
+    #[test]
+    fn no_stuck_link_when_average_posted() {
+        let mut g = gs(&[1, 2, 3]);
+        g.initiator = Some(1);
+        g.posters.extend([1, 2, 3]);
+        g.average = Some(vec![1.0]);
+        assert_eq!(g.stuck_link(), None);
+    }
+
+    #[test]
+    fn restart_round_clears_transients_keeps_chain() {
+        let mut g = gs(&[1, 2, 3]);
+        g.posters.insert(1);
+        g.mailbox.insert(
+            2,
+            PostedAggregate { aggregate: "x".into(), from_node: 1, posted_at: Instant::now() },
+        );
+        g.average = Some(vec![0.5]);
+        g.failed.insert(2);
+        let old_round = g.round_id;
+        g.restart_round(3);
+        assert!(g.posters.is_empty());
+        assert!(g.mailbox.is_empty());
+        assert!(g.average.is_none());
+        assert_eq!(g.initiator, Some(3));
+        assert_eq!(g.round_id, old_round + 1);
+        assert!(g.failed.contains(&2), "failure knowledge survives restart");
+        assert_eq!(g.chain, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,185 @@
+//! AES-256-CTR + HMAC-SHA256 authenticated encryption (encrypt-then-MAC).
+//!
+//! The paper's §5.7 hybrid scheme: a random symmetric key encrypts the
+//! (large) feature-vector payload, while RSA only covers the small key.
+//! The `aes` RustCrypto crate (in the offline cache) provides the block
+//! cipher; CTR mode, key derivation and the MAC are built here.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes256;
+use anyhow::{bail, Result};
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+use super::rng::SecureRng;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Symmetric key material: 32-byte AES key + 32-byte MAC key, derived from
+/// one 32-byte master via SHA-256 domain separation.
+#[derive(Clone, PartialEq, Eq)]
+pub struct SymmetricKey {
+    pub master: [u8; 32],
+}
+
+impl std::fmt::Debug for SymmetricKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SymmetricKey(****)")
+    }
+}
+
+impl SymmetricKey {
+    pub fn generate(rng: &mut dyn SecureRng) -> Self {
+        let mut master = [0u8; 32];
+        rng.fill_bytes(&mut master);
+        SymmetricKey { master }
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Self> {
+        if b.len() != 32 {
+            bail!("symmetric key must be 32 bytes, got {}", b.len());
+        }
+        let mut master = [0u8; 32];
+        master.copy_from_slice(b);
+        Ok(SymmetricKey { master })
+    }
+
+    fn enc_key(&self) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(b"safe-enc");
+        h.update(self.master);
+        h.finalize().into()
+    }
+
+    fn mac_key(&self) -> [u8; 32] {
+        let mut h = Sha256::new();
+        h.update(b"safe-mac");
+        h.update(self.master);
+        h.finalize().into()
+    }
+
+    /// Encrypt-then-MAC. Output layout: nonce(16) || ciphertext || tag(32).
+    pub fn seal(&self, plaintext: &[u8], rng: &mut dyn SecureRng) -> Vec<u8> {
+        let mut nonce = [0u8; 16];
+        rng.fill_bytes(&mut nonce);
+        let mut out = Vec::with_capacity(16 + plaintext.len() + 32);
+        out.extend_from_slice(&nonce);
+        let mut ct = plaintext.to_vec();
+        ctr_xor(&self.enc_key(), &nonce, &mut ct);
+        out.extend_from_slice(&ct);
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.mac_key()).unwrap();
+        mac.update(&out);
+        let tag = mac.finalize().into_bytes();
+        out.extend_from_slice(&tag);
+        out
+    }
+
+    /// Verify MAC and decrypt. Errors on truncation or tampering.
+    pub fn open(&self, sealed: &[u8]) -> Result<Vec<u8>> {
+        if sealed.len() < 16 + 32 {
+            bail!("sealed blob too short ({} bytes)", sealed.len());
+        }
+        let (body, tag) = sealed.split_at(sealed.len() - 32);
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(&self.mac_key()).unwrap();
+        mac.update(body);
+        mac.verify_slice(tag).map_err(|_| anyhow::anyhow!("MAC verification failed"))?;
+        let (nonce, ct) = body.split_at(16);
+        let mut pt = ct.to_vec();
+        let nonce16: [u8; 16] = nonce.try_into().unwrap();
+        ctr_xor(&self.enc_key(), &nonce16, &mut pt);
+        Ok(pt)
+    }
+}
+
+/// AES-256 CTR keystream XOR, in place. The 16-byte nonce is the initial
+/// counter block; we increment the trailing 64 bits big-endian.
+fn ctr_xor(key: &[u8; 32], nonce: &[u8; 16], data: &mut [u8]) {
+    let cipher = Aes256::new_from_slice(key).unwrap();
+    let mut counter_block = *nonce;
+    let mut offset = 0usize;
+    let mut ctr: u64 = u64::from_be_bytes(nonce[8..16].try_into().unwrap());
+    while offset < data.len() {
+        counter_block[8..16].copy_from_slice(&ctr.to_be_bytes());
+        let mut ks = aes::Block::clone_from_slice(&counter_block);
+        cipher.encrypt_block(&mut ks);
+        let take = (data.len() - offset).min(16);
+        for i in 0..take {
+            data[offset + i] ^= ks[i];
+        }
+        offset += take;
+        ctr = ctr.wrapping_add(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let mut rng = DeterministicRng::seed(1);
+        let key = SymmetricKey::generate(&mut rng);
+        for len in [0usize, 1, 15, 16, 17, 1000, 65536] {
+            let msg: Vec<u8> = (0..len).map(|i| (i * 7 % 256) as u8).collect();
+            let sealed = key.seal(&msg, &mut rng);
+            assert_eq!(key.open(&sealed).unwrap(), msg, "len={}", len);
+        }
+    }
+
+    #[test]
+    fn tampering_detected() {
+        let mut rng = DeterministicRng::seed(2);
+        let key = SymmetricKey::generate(&mut rng);
+        let mut sealed = key.seal(b"attack at dawn", &mut rng);
+        for idx in [0usize, 16, sealed.len() - 1] {
+            sealed[idx] ^= 1;
+            assert!(key.open(&sealed).is_err(), "tamper at {}", idx);
+            sealed[idx] ^= 1;
+        }
+        assert!(key.open(&sealed).is_ok());
+    }
+
+    #[test]
+    fn wrong_key_rejected() {
+        let mut rng = DeterministicRng::seed(3);
+        let k1 = SymmetricKey::generate(&mut rng);
+        let k2 = SymmetricKey::generate(&mut rng);
+        let sealed = k1.seal(b"secret", &mut rng);
+        assert!(k2.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn nonce_randomized() {
+        let mut rng = DeterministicRng::seed(4);
+        let key = SymmetricKey::generate(&mut rng);
+        let s1 = key.seal(b"m", &mut rng);
+        let s2 = key.seal(b"m", &mut rng);
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let mut rng = DeterministicRng::seed(5);
+        let key = SymmetricKey::generate(&mut rng);
+        let sealed = key.seal(b"hello", &mut rng);
+        assert!(key.open(&sealed[..10]).is_err());
+        assert!(key.open(&[]).is_err());
+    }
+
+    #[test]
+    fn ctr_keystream_is_position_dependent() {
+        // Same plaintext at different offsets must not produce equal ct.
+        let key = [7u8; 32];
+        let nonce = [1u8; 16];
+        let mut a = vec![0u8; 32];
+        ctr_xor(&key, &nonce, &mut a);
+        assert_ne!(a[..16], a[16..]);
+    }
+
+    #[test]
+    fn key_from_bytes_validates_length() {
+        assert!(SymmetricKey::from_bytes(&[0u8; 31]).is_err());
+        assert!(SymmetricKey::from_bytes(&[0u8; 32]).is_ok());
+    }
+}

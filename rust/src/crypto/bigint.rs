@@ -1,0 +1,922 @@
+//! Arbitrary-precision unsigned integers — the bignum substrate for RSA/DH.
+//!
+//! The offline crate cache has no `num-bigint` or `rsa`, so SAFE's
+//! public-key layer (paper §4, §5.7) is built on this from-scratch
+//! implementation: little-endian `u64` limbs, schoolbook + Karatsuba
+//! multiplication, Knuth Algorithm-D division, and Montgomery (CIOS)
+//! modular exponentiation for the RSA/DH hot path.
+
+use std::cmp::Ordering;
+
+/// Unsigned big integer, little-endian `u64` limbs, no leading zero limbs
+/// (zero is an empty limb vector).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct BigUint {
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        BigUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        BigUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            BigUint { limbs: vec![v] }
+        }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut b = BigUint { limbs: vec![lo, hi] };
+        b.trim();
+        b
+    }
+
+    /// From big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len() / 8 + 1);
+        let mut chunk_iter = bytes.rchunks(8);
+        while let Some(chunk) = chunk_iter.next() {
+            let mut limb = 0u64;
+            for &b in chunk {
+                limb = (limb << 8) | b as u64;
+            }
+            limbs.push(limb);
+        }
+        let mut v = BigUint { limbs };
+        v.trim();
+        v
+    }
+
+    /// To big-endian bytes (minimal length; zero → empty).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        if self.is_zero() {
+            return vec![];
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for (i, &limb) in self.limbs.iter().enumerate().rev() {
+            let bytes = limb.to_be_bytes();
+            if i == self.limbs.len() - 1 {
+                // Skip leading zeros of the most significant limb.
+                let skip = bytes.iter().take_while(|&&b| b == 0).count();
+                out.extend_from_slice(&bytes[skip..]);
+            } else {
+                out.extend_from_slice(&bytes);
+            }
+        }
+        out
+    }
+
+    /// To big-endian bytes, left-padded with zeros to exactly `len` bytes.
+    /// Panics if the value doesn't fit.
+    pub fn to_bytes_be_padded(&self, len: usize) -> Vec<u8> {
+        let raw = self.to_bytes_be();
+        assert!(raw.len() <= len, "value too large for padded length");
+        let mut out = vec![0u8; len - raw.len()];
+        out.extend_from_slice(&raw);
+        out
+    }
+
+    /// Parse a hex string (no 0x prefix).
+    pub fn from_hex(s: &str) -> anyhow::Result<Self> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        let s = if s.len() % 2 == 1 { format!("0{}", s) } else { s };
+        Ok(Self::from_bytes_be(&crate::util::hex_decode(&s)?))
+    }
+
+    pub fn to_hex(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        crate::util::hex_encode(&self.to_bytes_be())
+            .trim_start_matches('0')
+            .to_string()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map_or(true, |l| l & 1 == 0)
+    }
+
+    /// Number of significant bits.
+    pub fn bit_length(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 64 + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Test bit `i` (0 = LSB).
+    pub fn bit(&self, i: usize) -> bool {
+        let limb = i / 64;
+        let off = i % 64;
+        self.limbs.get(limb).map_or(false, |l| (l >> off) & 1 == 1)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0]),
+            _ => None,
+        }
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn cmp(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn lt(&self, other: &BigUint) -> bool {
+        self.cmp(other) == Ordering::Less
+    }
+
+    pub fn ge(&self, other: &BigUint) -> bool {
+        self.cmp(other) != Ordering::Less
+    }
+
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let (long, short) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let b = short.get(i).copied().unwrap_or(0);
+            let (s1, c1) = long[i].overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        let mut v = BigUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    pub fn add_u64(&self, v: u64) -> BigUint {
+        self.add(&BigUint::from_u64(v))
+    }
+
+    /// self - other; panics if other > self.
+    pub fn sub(&self, other: &BigUint) -> BigUint {
+        assert!(self.ge(other), "BigUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = self.limbs[i].overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        let mut v = BigUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    pub fn sub_u64(&self, v: u64) -> BigUint {
+        self.sub(&BigUint::from_u64(v))
+    }
+
+    /// Karatsuba threshold in limbs (tuned in the perf pass; schoolbook wins
+    /// below ~32 limbs = 2048 bits on this CPU).
+    const KARATSUBA_THRESHOLD: usize = 32;
+
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        if self.limbs.len().min(other.limbs.len()) >= Self::KARATSUBA_THRESHOLD {
+            return self.mul_karatsuba(other);
+        }
+        self.mul_schoolbook(other)
+    }
+
+    fn mul_schoolbook(&self, other: &BigUint) -> BigUint {
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        let mut v = BigUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    fn mul_karatsuba(&self, other: &BigUint) -> BigUint {
+        let n = self.limbs.len().max(other.limbs.len());
+        let half = n / 2;
+        let (a0, a1) = self.split_at(half);
+        let (b0, b1) = other.split_at(half);
+        let z0 = a0.mul(&b0);
+        let z2 = a1.mul(&b1);
+        let z1 = a0.add(&a1).mul(&b0.add(&b1)).sub(&z0).sub(&z2);
+        // result = z2 << (2*half*64) + z1 << (half*64) + z0
+        z2.shl_limbs(2 * half).add(&z1.shl_limbs(half)).add(&z0)
+    }
+
+    fn split_at(&self, k: usize) -> (BigUint, BigUint) {
+        if self.limbs.len() <= k {
+            (self.clone(), BigUint::zero())
+        } else {
+            let mut lo = BigUint { limbs: self.limbs[..k].to_vec() };
+            lo.trim();
+            let mut hi = BigUint { limbs: self.limbs[k..].to_vec() };
+            hi.trim();
+            (lo, hi)
+        }
+    }
+
+    fn shl_limbs(&self, k: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut limbs = vec![0u64; k];
+        limbs.extend_from_slice(&self.limbs);
+        BigUint { limbs }
+    }
+
+    pub fn mul_u64(&self, v: u64) -> BigUint {
+        if v == 0 || self.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() + 1);
+        let mut carry = 0u128;
+        for &a in &self.limbs {
+            let cur = (a as u128) * (v as u128) + carry;
+            out.push(cur as u64);
+            carry = cur >> 64;
+        }
+        if carry > 0 {
+            out.push(carry as u64);
+        }
+        let mut r = BigUint { limbs: out };
+        r.trim();
+        r
+    }
+
+    /// Left shift by `bits`.
+    pub fn shl(&self, bits: usize) -> BigUint {
+        if self.is_zero() {
+            return BigUint::zero();
+        }
+        let limb_shift = bits / 64;
+        let bit_shift = bits % 64;
+        let mut limbs = vec![0u64; limb_shift];
+        if bit_shift == 0 {
+            limbs.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                limbs.push((l << bit_shift) | carry);
+                carry = l >> (64 - bit_shift);
+            }
+            if carry > 0 {
+                limbs.push(carry);
+            }
+        }
+        let mut v = BigUint { limbs };
+        v.trim();
+        v
+    }
+
+    /// Right shift by `bits`.
+    pub fn shr(&self, bits: usize) -> BigUint {
+        let limb_shift = bits / 64;
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let bit_shift = bits % 64;
+        let src = &self.limbs[limb_shift..];
+        let mut limbs = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            limbs.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let hi = src.get(i + 1).copied().unwrap_or(0);
+                limbs.push((src[i] >> bit_shift) | (hi << (64 - bit_shift)));
+            }
+        }
+        let mut v = BigUint { limbs };
+        v.trim();
+        v
+    }
+
+    /// Division with remainder (Knuth Algorithm D). Returns (quotient,
+    /// remainder). Panics on division by zero.
+    pub fn div_rem(&self, divisor: &BigUint) -> (BigUint, BigUint) {
+        assert!(!divisor.is_zero(), "division by zero");
+        if self.lt(divisor) {
+            return (BigUint::zero(), self.clone());
+        }
+        if divisor.limbs.len() == 1 {
+            let (q, r) = self.div_rem_u64(divisor.limbs[0]);
+            return (q, BigUint::from_u64(r));
+        }
+        // Normalize: shift so divisor's top limb has its high bit set.
+        let shift = divisor.limbs.last().unwrap().leading_zeros() as usize;
+        let u = self.shl(shift);
+        let v = divisor.shl(shift);
+        let n = v.limbs.len();
+        let m = u.limbs.len() - n;
+        let mut un = u.limbs.clone();
+        un.push(0); // extra limb for the algorithm
+        let vn = &v.limbs;
+        let mut q = vec![0u64; m + 1];
+
+        let vtop = vn[n - 1] as u128;
+        let vsecond = vn[n - 2] as u128;
+
+        for j in (0..=m).rev() {
+            // Estimate q̂ = (u[j+n]·B + u[j+n-1]) / v[n-1]
+            let num = ((un[j + n] as u128) << 64) | (un[j + n - 1] as u128);
+            let mut qhat = num / vtop;
+            let mut rhat = num % vtop;
+            // Correct q̂ (at most 2 decrements).
+            while qhat >= (1u128 << 64)
+                || qhat * vsecond > ((rhat << 64) | (un[j + n - 2] as u128))
+            {
+                qhat -= 1;
+                rhat += vtop;
+                if rhat >= (1u128 << 64) {
+                    break;
+                }
+            }
+            // Multiply-subtract: u[j..j+n] -= q̂ * v
+            let mut borrow = 0i128;
+            let mut carry = 0u128;
+            for i in 0..n {
+                let p = qhat * (vn[i] as u128) + carry;
+                carry = p >> 64;
+                let sub = (un[j + i] as i128) - ((p as u64) as i128) + borrow;
+                un[j + i] = sub as u64;
+                borrow = sub >> 64;
+            }
+            let sub = (un[j + n] as i128) - (carry as i128) + borrow;
+            un[j + n] = sub as u64;
+            borrow = sub >> 64;
+
+            q[j] = qhat as u64;
+            if borrow < 0 {
+                // q̂ was one too large: add v back.
+                q[j] -= 1;
+                let mut carry = 0u128;
+                for i in 0..n {
+                    let s = (un[j + i] as u128) + (vn[i] as u128) + carry;
+                    un[j + i] = s as u64;
+                    carry = s >> 64;
+                }
+                un[j + n] = un[j + n].wrapping_add(carry as u64);
+            }
+        }
+
+        let mut quot = BigUint { limbs: q };
+        quot.trim();
+        let mut rem = BigUint { limbs: un[..n].to_vec() };
+        rem.trim();
+        (quot, rem.shr(shift))
+    }
+
+    pub fn div_rem_u64(&self, d: u64) -> (BigUint, u64) {
+        assert!(d != 0, "division by zero");
+        let mut out = vec![0u64; self.limbs.len()];
+        let mut rem = 0u128;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 64) | self.limbs[i] as u128;
+            out[i] = (cur / d as u128) as u64;
+            rem = cur % d as u128;
+        }
+        let mut q = BigUint { limbs: out };
+        q.trim();
+        (q, rem as u64)
+    }
+
+    pub fn rem(&self, m: &BigUint) -> BigUint {
+        self.div_rem(m).1
+    }
+
+    /// (self + other) mod m — inputs must already be < m.
+    pub fn addmod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        let s = self.add(other);
+        if s.ge(m) {
+            s.sub(m)
+        } else {
+            s
+        }
+    }
+
+    /// (self - other) mod m — inputs must already be < m.
+    pub fn submod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        if self.ge(other) {
+            self.sub(other)
+        } else {
+            self.add(m).sub(other)
+        }
+    }
+
+    pub fn mulmod(&self, other: &BigUint, m: &BigUint) -> BigUint {
+        self.mul(other).rem(m)
+    }
+
+    /// Modular exponentiation. Uses Montgomery CIOS when the modulus is odd
+    /// (the RSA/DH case), falling back to square-and-multiply otherwise.
+    pub fn modpow(&self, exp: &BigUint, modulus: &BigUint) -> BigUint {
+        assert!(!modulus.is_zero(), "modpow: zero modulus");
+        if modulus.is_one() {
+            return BigUint::zero();
+        }
+        if !modulus.is_even() {
+            return MontgomeryCtx::new(modulus).modpow(self, exp);
+        }
+        // Generic path for even moduli (rare; not on the RSA hot path).
+        let mut base = self.rem(modulus);
+        let mut result = BigUint::one();
+        for i in 0..exp.bit_length() {
+            if exp.bit(i) {
+                result = result.mulmod(&base, modulus);
+            }
+            base = base.mulmod(&base, modulus);
+        }
+        result
+    }
+
+    pub fn gcd(&self, other: &BigUint) -> BigUint {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    /// Modular inverse via extended Euclid. Returns None if gcd != 1.
+    pub fn modinv(&self, m: &BigUint) -> Option<BigUint> {
+        // Track signed Bezout coefficients as (sign, magnitude).
+        let mut r0 = m.clone();
+        let mut r1 = self.rem(m);
+        let mut t0: (bool, BigUint) = (false, BigUint::zero()); // 0
+        let mut t1: (bool, BigUint) = (false, BigUint::one()); // 1
+        while !r1.is_zero() {
+            let (q, r2) = r0.div_rem(&r1);
+            // t2 = t0 - q*t1
+            let qt = q.mul(&t1.1);
+            let t2 = signed_sub(t0.clone(), (t1.0, qt));
+            r0 = r1;
+            r1 = r2;
+            t0 = t1;
+            t1 = t2;
+        }
+        if !r0.is_one() {
+            return None;
+        }
+        let inv = if t0.0 {
+            m.sub(&t0.1.rem(m))
+        } else {
+            t0.1.rem(m)
+        };
+        Some(inv.rem(m))
+    }
+
+    /// Uniform random integer in [0, bound) using rejection sampling.
+    pub fn random_below(bound: &BigUint, rng: &mut dyn crate::crypto::rng::SecureRng) -> BigUint {
+        assert!(!bound.is_zero());
+        let bits = bound.bit_length();
+        let bytes = (bits + 7) / 8;
+        loop {
+            let mut buf = vec![0u8; bytes];
+            rng.fill_bytes(&mut buf);
+            // Mask off excess high bits.
+            let excess = bytes * 8 - bits;
+            if excess > 0 {
+                buf[0] &= 0xffu8 >> excess;
+            }
+            let v = BigUint::from_bytes_be(&buf);
+            if v.lt(bound) {
+                return v;
+            }
+        }
+    }
+
+    /// Random integer with exactly `bits` bits (MSB set).
+    pub fn random_bits(bits: usize, rng: &mut dyn crate::crypto::rng::SecureRng) -> BigUint {
+        assert!(bits > 0);
+        let bytes = (bits + 7) / 8;
+        let mut buf = vec![0u8; bytes];
+        rng.fill_bytes(&mut buf);
+        let excess = bytes * 8 - bits;
+        buf[0] &= 0xffu8 >> excess;
+        buf[0] |= 0x80u8 >> excess; // force MSB
+        BigUint::from_bytes_be(&buf)
+    }
+}
+
+/// (sign, magnitude) subtraction: a - b.
+fn signed_sub(a: (bool, BigUint), b: (bool, BigUint)) -> (bool, BigUint) {
+    match (a.0, b.0) {
+        (false, true) => (false, a.1.add(&b.1)),  // a - (-b) = a + b
+        (true, false) => (true, a.1.add(&b.1)),   // -a - b = -(a+b)
+        (false, false) => {
+            if a.1.ge(&b.1) {
+                (false, a.1.sub(&b.1))
+            } else {
+                (true, b.1.sub(&a.1))
+            }
+        }
+        (true, true) => {
+            // -a - (-b) = b - a
+            if b.1.ge(&a.1) {
+                (false, b.1.sub(&a.1))
+            } else {
+                (true, a.1.sub(&b.1))
+            }
+        }
+    }
+}
+
+/// Montgomery context for a fixed odd modulus (CIOS multiplication).
+/// This is the RSA/DH hot path: one context per exponentiation, reused
+/// across all the squarings/multiplications.
+pub struct MontgomeryCtx {
+    n: Vec<u64>,     // modulus limbs
+    n0inv: u64,      // -n^{-1} mod 2^64
+    rr: Vec<u64>,    // R^2 mod n (R = 2^(64*len))
+    modulus: BigUint,
+}
+
+impl MontgomeryCtx {
+    pub fn new(modulus: &BigUint) -> Self {
+        assert!(!modulus.is_even() && !modulus.is_zero());
+        let n = modulus.limbs.clone();
+        let n0inv = inv64(n[0]).wrapping_neg();
+        // R^2 mod n where R = 2^(64*len)
+        let r2 = BigUint::one().shl(n.len() * 64 * 2).rem(modulus);
+        let mut rr = r2.limbs.clone();
+        rr.resize(n.len(), 0);
+        MontgomeryCtx { n, n0inv, rr, modulus: modulus.clone() }
+    }
+
+    /// CIOS Montgomery multiplication: returns a*b*R^{-1} mod n.
+    fn mont_mul(&self, a: &[u64], b: &[u64]) -> Vec<u64> {
+        let len = self.n.len();
+        let mut t = vec![0u64; len + 2];
+        for i in 0..len {
+            // t += a[i] * b
+            let ai = a[i] as u128;
+            let mut carry = 0u128;
+            for j in 0..len {
+                let cur = t[j] as u128 + ai * (b[j] as u128) + carry;
+                t[j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[len] as u128 + carry;
+            t[len] = cur as u64;
+            t[len + 1] = (cur >> 64) as u64;
+
+            // m = t[0] * n0inv mod 2^64
+            let m = t[0].wrapping_mul(self.n0inv) as u128;
+            // t += m * n; then shift right one limb
+            let cur = t[0] as u128 + m * (self.n[0] as u128);
+            let mut carry = cur >> 64;
+            for j in 1..len {
+                let cur = t[j] as u128 + m * (self.n[j] as u128) + carry;
+                t[j - 1] = cur as u64;
+                carry = cur >> 64;
+            }
+            let cur = t[len] as u128 + carry;
+            t[len - 1] = cur as u64;
+            t[len] = t[len + 1] + ((cur >> 64) as u64);
+            t[len + 1] = 0;
+        }
+        // Final conditional subtraction.
+        let needs_sub = t[len] > 0 || ge_limbs(&t[..len], &self.n);
+        if needs_sub {
+            let mut borrow = 0u64;
+            for j in 0..len {
+                let (d1, b1) = t[j].overflowing_sub(self.n[j]);
+                let (d2, b2) = d1.overflowing_sub(borrow);
+                t[j] = d2;
+                borrow = (b1 as u64) + (b2 as u64);
+            }
+        }
+        t.truncate(len);
+        t
+    }
+
+    fn to_mont(&self, a: &BigUint) -> Vec<u64> {
+        let mut al = a.rem(&self.modulus).limbs;
+        al.resize(self.n.len(), 0);
+        self.mont_mul(&al, &self.rr)
+    }
+
+    fn from_mont(&self, a: &[u64]) -> BigUint {
+        let one = {
+            let mut v = vec![0u64; self.n.len()];
+            v[0] = 1;
+            v
+        };
+        let out = self.mont_mul(a, &one);
+        let mut v = BigUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    /// Left-to-right 4-bit windowed exponentiation.
+    pub fn modpow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        if exp.is_zero() {
+            return BigUint::one().rem(&self.modulus);
+        }
+        let bm = self.to_mont(base);
+        // Precompute odd powers table: bm^1, bm^2, ..., bm^15
+        let mut table = Vec::with_capacity(16);
+        let one_m = self.to_mont(&BigUint::one());
+        table.push(one_m.clone());
+        table.push(bm.clone());
+        for i in 2..16 {
+            table.push(self.mont_mul(&table[i - 1], &bm));
+        }
+        let bits = exp.bit_length();
+        let mut acc = one_m;
+        let mut i = bits as isize - 1;
+        while i >= 0 {
+            // Take up to 4 bits.
+            let take = (i + 1).min(4) as usize;
+            let mut window = 0usize;
+            for _ in 0..take {
+                acc = self.mont_mul(&acc, &acc);
+                window = (window << 1) | (exp.bit(i as usize) as usize);
+                i -= 1;
+            }
+            if window != 0 {
+                acc = self.mont_mul(&acc, &table[window]);
+            }
+        }
+        self.from_mont(&acc)
+    }
+}
+
+fn ge_limbs(a: &[u64], b: &[u64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    for i in (0..a.len()).rev() {
+        if a[i] != b[i] {
+            return a[i] > b[i];
+        }
+    }
+    true
+}
+
+/// Inverse of odd x mod 2^64 (Newton iteration).
+fn inv64(x: u64) -> u64 {
+    debug_assert!(x & 1 == 1);
+    let mut inv = x; // 3 bits correct
+    for _ in 0..5 {
+        inv = inv.wrapping_mul(2u64.wrapping_sub(x.wrapping_mul(inv)));
+    }
+    debug_assert_eq!(x.wrapping_mul(inv), 1);
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+
+    fn n(v: u64) -> BigUint {
+        BigUint::from_u64(v)
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![1],
+            vec![0xff; 8],
+            vec![1, 0, 0, 0, 0, 0, 0, 0, 0], // 2^64
+            (1..=33).collect(),
+        ];
+        for c in cases {
+            let v = BigUint::from_bytes_be(&c);
+            let back = v.to_bytes_be();
+            // Leading zeros are not preserved.
+            let stripped: Vec<u8> = c.iter().copied().skip_while(|&b| b == 0).collect();
+            assert_eq!(back, stripped);
+        }
+    }
+
+    #[test]
+    fn add_sub_identities() {
+        let mut rng = DeterministicRng::seed(42);
+        for _ in 0..50 {
+            let a = BigUint::random_bits(200, &mut rng);
+            let b = BigUint::random_bits(150, &mut rng);
+            assert_eq!(a.add(&b).sub(&b), a);
+            assert_eq!(a.add(&b).sub(&a), b);
+            assert_eq!(a.add(&BigUint::zero()), a);
+        }
+    }
+
+    #[test]
+    fn mul_div_identities() {
+        let mut rng = DeterministicRng::seed(7);
+        for bits in [10usize, 64, 65, 128, 500, 2000] {
+            let a = BigUint::random_bits(bits, &mut rng);
+            let b = BigUint::random_bits(bits / 2 + 1, &mut rng);
+            let p = a.mul(&b);
+            let (q, r) = p.div_rem(&b);
+            assert_eq!(q, a, "bits={}", bits);
+            assert!(r.is_zero());
+            // (a*b + c) / b == a rem c  when c < b
+            let c = BigUint::random_below(&b, &mut rng);
+            let (q2, r2) = p.add(&c).div_rem(&b);
+            assert_eq!(q2, a);
+            assert_eq!(r2, c);
+        }
+    }
+
+    #[test]
+    fn karatsuba_matches_schoolbook() {
+        let mut rng = DeterministicRng::seed(99);
+        for _ in 0..5 {
+            let a = BigUint::random_bits(64 * 80, &mut rng);
+            let b = BigUint::random_bits(64 * 70, &mut rng);
+            assert_eq!(a.mul_karatsuba(&b), a.mul_schoolbook(&b));
+        }
+    }
+
+    #[test]
+    fn shifts() {
+        let a = BigUint::from_hex("123456789abcdef0123456789abcdef").unwrap();
+        assert_eq!(a.shl(64).shr(64), a);
+        assert_eq!(a.shl(3).shr(3), a);
+        assert_eq!(a.shl(127).shr(127), a);
+        assert_eq!(n(1).shl(64), BigUint::from_u128(1u128 << 64));
+    }
+
+    #[test]
+    fn known_division() {
+        // 2^128 / (2^64 + 1) = 2^64 - 1 rem 1
+        let a = BigUint::one().shl(128);
+        let b = BigUint::from_u128((1u128 << 64) + 1);
+        let (q, r) = a.div_rem(&b);
+        assert_eq!(q, n(u64::MAX));
+        assert_eq!(r, n(1));
+    }
+
+    #[test]
+    fn modpow_small_cases() {
+        // 3^4 mod 7 = 4 ; 5^0 mod 11 = 1 ; 2^10 mod 1024+1 ...
+        assert_eq!(n(3).modpow(&n(4), &n(7)), n(4));
+        assert_eq!(n(5).modpow(&n(0), &n(11)), n(1));
+        assert_eq!(n(2).modpow(&n(10), &n(1025)), n(1024 % 1025));
+        // Fermat: a^(p-1) = 1 mod p for prime p
+        let p = n(1_000_000_007);
+        for a in [2u64, 3, 12345, 999999999] {
+            assert_eq!(n(a).modpow(&p.sub_u64(1), &p), n(1));
+        }
+    }
+
+    #[test]
+    fn modpow_matches_naive_big() {
+        let mut rng = DeterministicRng::seed(123);
+        // odd modulus (Montgomery path) vs naive mulmod loop
+        for _ in 0..5 {
+            let mut m = BigUint::random_bits(192, &mut rng);
+            if m.is_even() {
+                m = m.add_u64(1);
+            }
+            let b = BigUint::random_below(&m, &mut rng);
+            let e = BigUint::random_bits(24, &mut rng);
+            // naive
+            let mut expect = BigUint::one();
+            for i in (0..e.bit_length()).rev() {
+                expect = expect.mulmod(&expect, &m);
+                if e.bit(i) {
+                    expect = expect.mulmod(&b, &m);
+                }
+            }
+            assert_eq!(b.modpow(&e, &m), expect);
+        }
+    }
+
+    #[test]
+    fn modpow_even_modulus() {
+        assert_eq!(n(3).modpow(&n(5), &n(100)), n(43)); // 243 mod 100
+        assert_eq!(n(7).modpow(&n(2), &n(48)), n(1));
+    }
+
+    #[test]
+    fn modinv_works() {
+        let m = n(1_000_000_007);
+        for a in [2u64, 3, 999, 123456] {
+            let inv = n(a).modinv(&m).unwrap();
+            assert_eq!(n(a).mulmod(&inv, &m), n(1));
+        }
+        // No inverse when gcd != 1
+        assert!(n(6).modinv(&n(9)).is_none());
+        // Big case
+        let mut rng = DeterministicRng::seed(5);
+        let m = BigUint::random_bits(256, &mut rng).add_u64(1);
+        let a = BigUint::random_below(&m, &mut rng);
+        if a.gcd(&m).is_one() {
+            let inv = a.modinv(&m).unwrap();
+            assert_eq!(a.mulmod(&inv, &m), BigUint::one());
+        }
+    }
+
+    #[test]
+    fn gcd_works() {
+        assert_eq!(n(48).gcd(&n(18)), n(6));
+        assert_eq!(n(17).gcd(&n(13)), n(1));
+        assert_eq!(n(0).gcd(&n(5)), n(5));
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let h = "deadbeef00112233445566778899aabbccddeeff";
+        let v = BigUint::from_hex(h).unwrap();
+        assert_eq!(v.to_hex(), h);
+    }
+
+    #[test]
+    fn bit_length_and_bits() {
+        assert_eq!(BigUint::zero().bit_length(), 0);
+        assert_eq!(n(1).bit_length(), 1);
+        assert_eq!(n(255).bit_length(), 8);
+        assert_eq!(n(256).bit_length(), 9);
+        assert_eq!(BigUint::one().shl(1000).bit_length(), 1001);
+        let v = n(0b1010);
+        assert!(!v.bit(0));
+        assert!(v.bit(1));
+        assert!(!v.bit(2));
+        assert!(v.bit(3));
+        assert!(!v.bit(100));
+    }
+
+    #[test]
+    fn random_below_in_range() {
+        let mut rng = DeterministicRng::seed(1);
+        let bound = n(1000);
+        for _ in 0..100 {
+            let v = BigUint::random_below(&bound, &mut rng);
+            assert!(v.lt(&bound));
+        }
+    }
+
+    #[test]
+    fn random_bits_exact() {
+        let mut rng = DeterministicRng::seed(2);
+        for bits in [1usize, 7, 8, 64, 65, 1024] {
+            let v = BigUint::random_bits(bits, &mut rng);
+            assert_eq!(v.bit_length(), bits);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Diffie–Hellman key agreement over the RFC 3526 2048-bit MODP group.
+//!
+//! This is a BON-baseline substrate: Bonawitz et al. Round 0 has every
+//! client advertise two DH public keys (c_u^PK for pairwise channel
+//! encryption, s_u^PK for pairwise mask agreement). The shared secret is
+//! hashed to a 32-byte seed used as a PRG seed / symmetric key.
+
+use once_cell::sync::Lazy;
+use sha2::{Digest, Sha256};
+
+use super::bigint::BigUint;
+use super::rng::SecureRng;
+
+/// RFC 3526 group 14 prime (2048-bit MODP), generator g = 2.
+const MODP_2048_HEX: &str = concat!(
+    "FFFFFFFFFFFFFFFFC90FDAA22168C234C4C6628B80DC1CD1",
+    "29024E088A67CC74020BBEA63B139B22514A08798E3404DD",
+    "EF9519B3CD3A431B302B0A6DF25F14374FE1356D6D51C245",
+    "E485B576625E7EC6F44C42E9A637ED6B0BFF5CB6F406B7ED",
+    "EE386BFB5A899FA5AE9F24117C4B1FE649286651ECE45B3D",
+    "C2007CB8A163BF0598DA48361C55D39A69163FA8FD24CF5F",
+    "83655D23DCA3AD961C62F356208552BB9ED529077096966D",
+    "670C354E4ABC9804F1746C08CA18217C32905E462E36CE3B",
+    "E39E772C180E86039B2783A2EC07A28FB5C55DF06F4C52C9",
+    "DE2BCBF6955817183995497CEA956AE515D2261898FA0510",
+    "15728E5A8AACAA68FFFFFFFFFFFFFFFF"
+);
+
+static MODP_2048: Lazy<BigUint> =
+    Lazy::new(|| BigUint::from_hex(MODP_2048_HEX).expect("constant prime parses"));
+
+/// A DH group (prime modulus + generator). `standard()` is the production
+/// group; `small_for_tests` trades security for speed in unit tests.
+#[derive(Debug, Clone)]
+pub struct DhGroup {
+    pub p: BigUint,
+    pub g: BigUint,
+    /// Private exponent size in bits (256 is plenty for a 2048-bit group).
+    pub exp_bits: usize,
+}
+
+impl DhGroup {
+    pub fn standard() -> Self {
+        DhGroup { p: MODP_2048.clone(), g: BigUint::from_u64(2), exp_bits: 256 }
+    }
+
+    /// A 256-bit random group for fast tests (NOT secure).
+    pub fn small_for_tests(rng: &mut dyn SecureRng) -> Self {
+        let p = super::prime::gen_prime_3mod4(256, rng);
+        DhGroup { p, g: BigUint::from_u64(2), exp_bits: 128 }
+    }
+}
+
+/// A DH keypair within a group.
+#[derive(Debug, Clone)]
+pub struct DhKeyPair {
+    pub secret: BigUint,
+    pub public: BigUint,
+}
+
+impl DhKeyPair {
+    pub fn generate(group: &DhGroup, rng: &mut dyn SecureRng) -> Self {
+        let secret = BigUint::random_bits(group.exp_bits, rng);
+        let public = group.g.modpow(&secret, &group.p);
+        DhKeyPair { secret, public }
+    }
+
+    /// Compute the shared secret with a peer's public value and hash it to
+    /// a 32-byte seed.
+    pub fn agree(&self, group: &DhGroup, peer_public: &BigUint) -> [u8; 32] {
+        let shared = peer_public.modpow(&self.secret, &group.p);
+        let mut h = Sha256::new();
+        h.update(b"safe-dh-kdf");
+        h.update(shared.to_bytes_be());
+        h.finalize().into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+
+    #[test]
+    fn agreement_is_symmetric_small_group() {
+        let mut rng = DeterministicRng::seed(1);
+        let group = DhGroup::small_for_tests(&mut rng);
+        let a = DhKeyPair::generate(&group, &mut rng);
+        let b = DhKeyPair::generate(&group, &mut rng);
+        assert_eq!(a.agree(&group, &b.public), b.agree(&group, &a.public));
+    }
+
+    #[test]
+    fn different_peers_different_secrets() {
+        let mut rng = DeterministicRng::seed(2);
+        let group = DhGroup::small_for_tests(&mut rng);
+        let a = DhKeyPair::generate(&group, &mut rng);
+        let b = DhKeyPair::generate(&group, &mut rng);
+        let c = DhKeyPair::generate(&group, &mut rng);
+        assert_ne!(a.agree(&group, &b.public), a.agree(&group, &c.public));
+    }
+
+    #[test]
+    fn standard_group_loads_and_agrees() {
+        let mut rng = DeterministicRng::seed(3);
+        let group = DhGroup::standard();
+        assert_eq!(group.p.bit_length(), 2048);
+        let a = DhKeyPair::generate(&group, &mut rng);
+        let b = DhKeyPair::generate(&group, &mut rng);
+        assert_eq!(a.agree(&group, &b.public), b.agree(&group, &a.public));
+    }
+}

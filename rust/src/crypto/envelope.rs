@@ -1,0 +1,325 @@
+//! Payload envelopes — how a learner protects an aggregate for the next
+//! node on the chain.
+//!
+//! Four modes, exactly the paper's design space:
+//!  * [`CipherMode::None`] — the **SAF** variant (§6: "with (SAFE) and
+//!    without (SAF) encryption"). Payload is the serialized vector.
+//!  * [`CipherMode::RsaOnly`] — every byte RSA-encrypted in k−11 chunks.
+//!    Kept as an ablation; this is what §5.7 calls too slow for large
+//!    payloads.
+//!  * [`CipherMode::Hybrid`] — **SAFE** (§5.7): random AES key sealed with
+//!    the receiver's RSA public key; payload DEFLATE-compressed then
+//!    AES-CTR+HMAC sealed. Compression is why SAFE beats INSEC at large
+//!    feature counts (§6.2).
+//!  * [`CipherMode::PreNegotiated`] — §5.8: payload sealed with a symmetric
+//!    key agreed out-of-band; no RSA on the aggregation path at all
+//!    (the deep-edge/OpenWrt configuration).
+//!
+//! Vectors are serialized as little-endian f64 (8 bytes/feature) — compact
+//! and exact, mirroring the paper's opaque-JSON-payload contract.
+
+use anyhow::{bail, Context, Result};
+use flate2::read::DeflateDecoder;
+use flate2::write::DeflateEncoder;
+use flate2::Compression;
+use std::io::{Read, Write};
+
+use super::aescipher::SymmetricKey;
+use super::rng::SecureRng;
+use super::rsa::{RsaPrivateKey, RsaPublicKey};
+
+/// Which protection to apply to chain payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CipherMode {
+    /// No encryption (paper's SAF).
+    None,
+    /// Chunked RSA over the whole payload (pre-§5.7 strawman, ablation).
+    RsaOnly,
+    /// RSA-sealed AES key + compressed AES payload (paper's SAFE, §5.7).
+    Hybrid,
+    /// Pre-negotiated symmetric key (§5.8, deep-edge devices).
+    PreNegotiated,
+}
+
+impl CipherMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CipherMode::None => "saf",
+            CipherMode::RsaOnly => "rsa",
+            CipherMode::Hybrid => "safe",
+            CipherMode::PreNegotiated => "prenegotiated",
+        }
+    }
+}
+
+/// Serialize an f64 vector as little-endian bytes.
+pub fn vec_to_bytes(v: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 8);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize little-endian f64 bytes.
+pub fn bytes_to_vec(b: &[u8]) -> Result<Vec<f64>> {
+    if b.len() % 8 != 0 {
+        bail!("payload length {} not a multiple of 8", b.len());
+    }
+    Ok(b
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(data).expect("in-memory deflate cannot fail");
+    enc.finish().expect("in-memory deflate cannot fail")
+}
+
+pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
+    let mut dec = DeflateDecoder::new(data);
+    let mut out = Vec::new();
+    dec.read_to_end(&mut out).context("deflate decompression failed")?;
+    Ok(out)
+}
+
+/// Wire envelope: mode tag + opaque body, carried as base64 inside the JSON
+/// `aggregate` field (the controller never inspects it — §6.2 "the
+/// aggregation payload is opaque to the controller").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub mode: CipherMode,
+    /// For Hybrid: RSA-sealed symmetric key.
+    pub sealed_key: Vec<u8>,
+    /// Payload bytes (possibly sealed/compressed per mode).
+    pub body: Vec<u8>,
+}
+
+impl Envelope {
+    /// Protect `vector` for the holder of `recipient` / `preneg` key.
+    pub fn seal(
+        vector: &[f64],
+        mode: CipherMode,
+        recipient: Option<&RsaPublicKey>,
+        preneg: Option<&SymmetricKey>,
+        compress_payload: bool,
+        rng: &mut dyn SecureRng,
+    ) -> Result<Envelope> {
+        let raw = vec_to_bytes(vector);
+        match mode {
+            CipherMode::None => {
+                // SAF sends cleartext — and like the paper's bash/python
+                // clients, the cleartext wire format is JSON float text
+                // (larger than binary; §6.2's compression argument).
+                let body = crate::json::Value::from(vector).to_string().into_bytes();
+                Ok(Envelope { mode, sealed_key: vec![], body })
+            }
+            CipherMode::RsaOnly => {
+                let pk = recipient.context("RsaOnly mode requires recipient public key")?;
+                Ok(Envelope { mode, sealed_key: vec![], body: pk.encrypt_blob(&raw, rng)? })
+            }
+            CipherMode::Hybrid => {
+                let pk = recipient.context("Hybrid mode requires recipient public key")?;
+                let key = SymmetricKey::generate(rng);
+                let sealed_key = pk.encrypt_block(&key.master, rng)?;
+                let payload = if compress_payload { compress(&raw) } else { raw };
+                let mut body = Vec::with_capacity(payload.len() + 49);
+                body.push(compress_payload as u8);
+                body.extend_from_slice(&key.seal(&payload, rng));
+                Ok(Envelope { mode, sealed_key, body })
+            }
+            CipherMode::PreNegotiated => {
+                let key = preneg.context("PreNegotiated mode requires a shared key")?;
+                let payload = if compress_payload { compress(&raw) } else { raw };
+                let mut body = Vec::with_capacity(payload.len() + 49);
+                body.push(compress_payload as u8);
+                body.extend_from_slice(&key.seal(&payload, rng));
+                Ok(Envelope { mode, sealed_key: vec![], body })
+            }
+        }
+    }
+
+    /// Recover the vector using our private / pre-negotiated key.
+    pub fn open(
+        &self,
+        our_key: Option<&RsaPrivateKey>,
+        preneg: Option<&SymmetricKey>,
+    ) -> Result<Vec<f64>> {
+        match self.mode {
+            CipherMode::None => {
+                let text = std::str::from_utf8(&self.body).context("SAF body not UTF-8")?;
+                let v = crate::json::parse(text)?;
+                v.as_arr()
+                    .context("SAF body not an array")?
+                    .iter()
+                    .map(|e| e.as_f64().context("SAF element not a number"))
+                    .collect()
+            }
+            CipherMode::RsaOnly => {
+                let sk = our_key.context("RsaOnly envelope requires our private key")?;
+                bytes_to_vec(&sk.decrypt_blob(&self.body)?)
+            }
+            CipherMode::Hybrid => {
+                let sk = our_key.context("Hybrid envelope requires our private key")?;
+                let master = sk.decrypt_block(&self.sealed_key)?;
+                let key = SymmetricKey::from_bytes(&master)?;
+                self.open_symmetric(&key)
+            }
+            CipherMode::PreNegotiated => {
+                let key = preneg.context("PreNegotiated envelope requires the shared key")?;
+                self.open_symmetric(key)
+            }
+        }
+    }
+
+    fn open_symmetric(&self, key: &SymmetricKey) -> Result<Vec<f64>> {
+        if self.body.is_empty() {
+            bail!("empty envelope body");
+        }
+        let compressed = self.body[0] != 0;
+        let payload = key.open(&self.body[1..])?;
+        let raw = if compressed { decompress(&payload)? } else { payload };
+        bytes_to_vec(&raw)
+    }
+
+    /// Encode for the JSON `aggregate` field: `mode:keyB64:bodyB64`.
+    pub fn encode(&self) -> String {
+        format!(
+            "{}:{}:{}",
+            self.mode.name(),
+            crate::util::b64_encode(&self.sealed_key),
+            crate::util::b64_encode(&self.body)
+        )
+    }
+
+    pub fn decode(s: &str) -> Result<Envelope> {
+        let mut parts = s.splitn(3, ':');
+        let mode = match parts.next().context("missing mode")? {
+            "saf" => CipherMode::None,
+            "rsa" => CipherMode::RsaOnly,
+            "safe" => CipherMode::Hybrid,
+            "prenegotiated" => CipherMode::PreNegotiated,
+            other => bail!("unknown envelope mode {:?}", other),
+        };
+        let sealed_key = crate::util::b64_decode(parts.next().context("missing key part")?)?;
+        let body = crate::util::b64_decode(parts.next().context("missing body part")?)?;
+        Ok(Envelope { mode, sealed_key, body })
+    }
+
+    /// Wire size in bytes of the encoded envelope.
+    pub fn wire_len(&self) -> usize {
+        self.encode().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+    use crate::crypto::rsa::RsaKeyPair;
+
+    fn vecf(n: usize) -> Vec<f64> {
+        (0..n).map(|i| (i as f64) * 0.5 - 3.0).collect()
+    }
+
+    #[test]
+    fn vec_bytes_roundtrip() {
+        let v = vec![0.0, -1.5, f64::MAX, f64::MIN_POSITIVE, 1e-300];
+        assert_eq!(bytes_to_vec(&vec_to_bytes(&v)).unwrap(), v);
+        assert!(bytes_to_vec(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn compression_roundtrip_and_shrinks_redundant() {
+        let data = vec![42u8; 10_000];
+        let c = compress(&data);
+        assert!(c.len() < data.len() / 10);
+        assert_eq!(decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn saf_mode_roundtrip() {
+        let mut rng = DeterministicRng::seed(1);
+        let v = vecf(17);
+        let env = Envelope::seal(&v, CipherMode::None, None, None, false, &mut rng).unwrap();
+        assert_eq!(env.open(None, None).unwrap(), v);
+    }
+
+    #[test]
+    fn hybrid_mode_roundtrip() {
+        let mut rng = DeterministicRng::seed(2);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let v = vecf(100);
+        let env =
+            Envelope::seal(&v, CipherMode::Hybrid, Some(&kp.public), None, true, &mut rng).unwrap();
+        assert_eq!(env.open(Some(&kp.private), None).unwrap(), v);
+        // Encoded roundtrip too.
+        let enc = env.encode();
+        let dec = Envelope::decode(&enc).unwrap();
+        assert_eq!(dec.open(Some(&kp.private), None).unwrap(), v);
+    }
+
+    #[test]
+    fn rsa_only_mode_roundtrip() {
+        let mut rng = DeterministicRng::seed(3);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let v = vecf(40); // forces multiple RSA blocks at 512-bit modulus
+        let env =
+            Envelope::seal(&v, CipherMode::RsaOnly, Some(&kp.public), None, false, &mut rng)
+                .unwrap();
+        assert_eq!(env.open(Some(&kp.private), None).unwrap(), v);
+    }
+
+    #[test]
+    fn preneg_mode_roundtrip() {
+        let mut rng = DeterministicRng::seed(4);
+        let key = SymmetricKey::generate(&mut rng);
+        let v = vecf(33);
+        let env =
+            Envelope::seal(&v, CipherMode::PreNegotiated, None, Some(&key), true, &mut rng)
+                .unwrap();
+        assert_eq!(env.open(None, Some(&key)).unwrap(), v);
+    }
+
+    #[test]
+    fn hybrid_rejects_wrong_private_key() {
+        let mut rng = DeterministicRng::seed(5);
+        let kp1 = RsaKeyPair::generate(512, &mut rng);
+        let kp2 = RsaKeyPair::generate(512, &mut rng);
+        let v = vecf(10);
+        let env =
+            Envelope::seal(&v, CipherMode::Hybrid, Some(&kp1.public), None, true, &mut rng)
+                .unwrap();
+        assert!(env.open(Some(&kp2.private), None).is_err());
+    }
+
+    #[test]
+    fn missing_key_material_errors() {
+        let mut rng = DeterministicRng::seed(6);
+        let v = vecf(3);
+        assert!(Envelope::seal(&v, CipherMode::Hybrid, None, None, true, &mut rng).is_err());
+        assert!(Envelope::seal(&v, CipherMode::PreNegotiated, None, None, true, &mut rng).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Envelope::decode("not-an-envelope").is_err());
+        assert!(Envelope::decode("bogus:AA==:AA==").is_err());
+    }
+
+    #[test]
+    fn hybrid_compression_beats_uncompressed_for_large_vectors() {
+        // The §6.2 claim: encryption-with-compression shrinks big payloads.
+        let mut rng = DeterministicRng::seed(7);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let v = vec![1.0f64; 10_000];
+        let comp =
+            Envelope::seal(&v, CipherMode::Hybrid, Some(&kp.public), None, true, &mut rng).unwrap();
+        let raw =
+            Envelope::seal(&v, CipherMode::Hybrid, Some(&kp.public), None, false, &mut rng)
+                .unwrap();
+        assert!(comp.wire_len() < raw.wire_len() / 4);
+    }
+}

@@ -1,0 +1,30 @@
+//! Cryptographic substrate for SAFE and the BON baseline.
+//!
+//! Everything here is built from scratch (or on the few RustCrypto
+//! primitives present in the offline crate cache) because the sandbox has
+//! no `rsa`, `num-bigint`, `ring`, or `openssl` equivalents:
+//!
+//! * [`bigint`] — arbitrary-precision integers (Montgomery modpow).
+//! * [`prime`] — Miller–Rabin and prime generation.
+//! * [`rsa`] — RSA keygen / PKCS#1 v1.5 block + blob encryption (paper §4).
+//! * [`aescipher`] — AES-256-CTR + HMAC-SHA256 envelope (paper §5.7).
+//! * [`envelope`] — the four payload protection modes (SAF/RSA/SAFE/§5.8).
+//! * [`dh`] — Diffie–Hellman (RFC 3526) for the BON baseline.
+//! * [`shamir`] — t-of-n secret sharing over GF(2^61−1) for BON.
+//! * [`rng`] — ChaCha20 CSPRNG, OS entropy, deterministic test RNG, and the
+//!   PRG mask expansion BON uses.
+
+pub mod aescipher;
+pub mod bigint;
+pub mod dh;
+pub mod envelope;
+pub mod prime;
+pub mod rng;
+pub mod rsa;
+pub mod shamir;
+
+pub use aescipher::SymmetricKey;
+pub use bigint::BigUint;
+pub use envelope::{CipherMode, Envelope};
+pub use rng::{DeterministicRng, SecureRng, SystemRng};
+pub use rsa::{RsaKeyPair, RsaPrivateKey, RsaPublicKey};

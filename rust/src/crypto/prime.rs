@@ -1,0 +1,137 @@
+//! Prime generation for RSA keygen: trial division + Miller–Rabin.
+
+use super::bigint::BigUint;
+use super::rng::SecureRng;
+
+/// Small primes for fast trial-division pre-filtering.
+const SMALL_PRIMES: [u64; 54] = [
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
+    97, 101, 103, 107, 109, 113, 127, 131, 137, 139, 149, 151, 157, 163, 167, 173, 179, 181, 191,
+    193, 197, 199, 211, 223, 227, 229, 233, 239, 241, 251,
+];
+
+/// Miller–Rabin probabilistic primality test with `rounds` random bases.
+/// For the key sizes we generate (512–2048 bit primes) 32 rounds gives a
+/// failure probability < 2^-64.
+pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut dyn SecureRng) -> bool {
+    if n.is_zero() || n.is_one() {
+        return false;
+    }
+    if let Some(v) = n.as_u64() {
+        if v < 4 {
+            return v == 2 || v == 3;
+        }
+    }
+    if n.is_even() {
+        return false;
+    }
+    for &p in &SMALL_PRIMES {
+        let pb = BigUint::from_u64(p);
+        if n.cmp(&pb) == std::cmp::Ordering::Equal {
+            return true;
+        }
+        let (_, r) = n.div_rem_u64(p);
+        if r == 0 {
+            return false;
+        }
+    }
+    // Write n-1 = d * 2^s with d odd.
+    let n_minus_1 = n.sub_u64(1);
+    let mut d = n_minus_1.clone();
+    let mut s = 0usize;
+    while d.is_even() {
+        d = d.shr(1);
+        s += 1;
+    }
+    let two = BigUint::from_u64(2);
+    let n_minus_3 = n.sub_u64(3);
+    'witness: for _ in 0..rounds {
+        // a in [2, n-2]
+        let a = BigUint::random_below(&n_minus_3, rng).add(&two);
+        let mut x = a.modpow(&d, n);
+        if x.is_one() || x == n_minus_1 {
+            continue 'witness;
+        }
+        for _ in 0..s - 1 {
+            x = x.modpow(&two, n);
+            if x == n_minus_1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate a random prime with exactly `bits` bits.
+pub fn gen_prime(bits: usize, rng: &mut dyn SecureRng) -> BigUint {
+    assert!(bits >= 16, "prime too small for RSA use");
+    loop {
+        let mut cand = BigUint::random_bits(bits, rng);
+        if cand.is_even() {
+            cand = cand.add_u64(1);
+        }
+        if is_probable_prime(&cand, 32, rng) {
+            return cand;
+        }
+    }
+}
+
+/// Generate a "safe-ish" prime p where p ≡ 3 (mod 4); used for DH test
+/// groups (production DH uses the fixed RFC 3526 group).
+pub fn gen_prime_3mod4(bits: usize, rng: &mut dyn SecureRng) -> BigUint {
+    loop {
+        let p = gen_prime(bits, rng);
+        let (_, r) = p.div_rem_u64(4);
+        if r == 3 {
+            return p;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+
+    #[test]
+    fn small_primes_detected() {
+        let mut rng = DeterministicRng::seed(1);
+        for p in [2u64, 3, 5, 7, 11, 97, 251, 257, 65537, 1_000_000_007] {
+            assert!(is_probable_prime(&BigUint::from_u64(p), 16, &mut rng), "{}", p);
+        }
+        for c in [0u64, 1, 4, 6, 9, 15, 91, 561, 65536, 1_000_000_000] {
+            assert!(!is_probable_prime(&BigUint::from_u64(c), 16, &mut rng), "{}", c);
+        }
+    }
+
+    #[test]
+    fn carmichael_numbers_rejected() {
+        let mut rng = DeterministicRng::seed(2);
+        // 561, 1105, 1729, 2465, 2821, 6601 are Carmichael (fool Fermat).
+        for c in [561u64, 1105, 1729, 2465, 2821, 6601, 8911] {
+            assert!(!is_probable_prime(&BigUint::from_u64(c), 16, &mut rng), "{}", c);
+        }
+    }
+
+    #[test]
+    fn known_large_prime() {
+        let mut rng = DeterministicRng::seed(3);
+        // 2^127 - 1 is a Mersenne prime.
+        let m127 = BigUint::one().shl(127).sub_u64(1);
+        assert!(is_probable_prime(&m127, 16, &mut rng));
+        // 2^128 - 1 is composite.
+        let m128 = BigUint::one().shl(128).sub_u64(1);
+        assert!(!is_probable_prime(&m128, 16, &mut rng));
+    }
+
+    #[test]
+    fn gen_prime_has_exact_bits_and_is_odd() {
+        let mut rng = DeterministicRng::seed(4);
+        for bits in [64usize, 128, 256] {
+            let p = gen_prime(bits, &mut rng);
+            assert_eq!(p.bit_length(), bits);
+            assert!(!p.is_even());
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Random number generation: ChaCha20-based CSPRNG + OS entropy.
+//!
+//! Three layers:
+//!  * [`ChaCha20Core`] — the raw ChaCha20 block function (RFC 8439), used as
+//!    a PRG. BON expands pairwise/self-mask seeds into full mask vectors with
+//!    it (paper §2: "PRG(s_{u,v})").
+//!  * [`SystemRng`] — OS entropy via `getrandom`, reseeding a ChaCha20
+//!    stream. Used for RSA/DH keygen and the SAFE initiator mask `R`.
+//!  * [`DeterministicRng`] — seedable, for reproducible tests/benches.
+
+/// Minimal trait so bigint/RSA can take any of our RNGs via dyn dispatch.
+pub trait SecureRng {
+    fn fill_bytes(&mut self, dest: &mut [u8]);
+
+    fn next_u64(&mut self) -> u64 {
+        let mut b = [0u8; 8];
+        self.fill_bytes(&mut b);
+        u64::from_le_bytes(b)
+    }
+
+    /// Uniform f64 in [0, 1).
+    fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform usize in [0, bound).
+    fn next_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        // Rejection sampling to avoid modulo bias.
+        let zone = usize::MAX - (usize::MAX % bound);
+        loop {
+            let v = self.next_u64() as usize;
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+}
+
+/// The ChaCha20 block function (RFC 8439).
+pub struct ChaCha20Core {
+    state: [u32; 16],
+    buf: [u8; 64],
+    buf_pos: usize,
+}
+
+const CHACHA_CONST: [u32; 4] = [0x61707865, 0x3320646e, 0x79622d32, 0x6b206574];
+
+impl ChaCha20Core {
+    /// Create from a 32-byte key and 12-byte nonce.
+    pub fn new(key: &[u8; 32], nonce: &[u8; 12]) -> Self {
+        let mut state = [0u32; 16];
+        state[..4].copy_from_slice(&CHACHA_CONST);
+        for i in 0..8 {
+            state[4 + i] = u32::from_le_bytes(key[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        state[12] = 0; // counter
+        for i in 0..3 {
+            state[13 + i] = u32::from_le_bytes(nonce[i * 4..i * 4 + 4].try_into().unwrap());
+        }
+        ChaCha20Core { state, buf: [0; 64], buf_pos: 64 }
+    }
+
+    /// Create from an arbitrary-length seed (hashed to key material).
+    pub fn from_seed(seed: &[u8]) -> Self {
+        use sha2::{Digest, Sha256};
+        let key: [u8; 32] = Sha256::digest(seed).into();
+        Self::new(&key, &[0u8; 12])
+    }
+
+    fn quarter_round(s: &mut [u32; 16], a: usize, b: usize, c: usize, d: usize) {
+        s[a] = s[a].wrapping_add(s[b]);
+        s[d] = (s[d] ^ s[a]).rotate_left(16);
+        s[c] = s[c].wrapping_add(s[d]);
+        s[b] = (s[b] ^ s[c]).rotate_left(12);
+        s[a] = s[a].wrapping_add(s[b]);
+        s[d] = (s[d] ^ s[a]).rotate_left(8);
+        s[c] = s[c].wrapping_add(s[d]);
+        s[b] = (s[b] ^ s[c]).rotate_left(7);
+    }
+
+    fn refill(&mut self) {
+        let mut working = self.state;
+        for _ in 0..10 {
+            // column rounds
+            Self::quarter_round(&mut working, 0, 4, 8, 12);
+            Self::quarter_round(&mut working, 1, 5, 9, 13);
+            Self::quarter_round(&mut working, 2, 6, 10, 14);
+            Self::quarter_round(&mut working, 3, 7, 11, 15);
+            // diagonal rounds
+            Self::quarter_round(&mut working, 0, 5, 10, 15);
+            Self::quarter_round(&mut working, 1, 6, 11, 12);
+            Self::quarter_round(&mut working, 2, 7, 8, 13);
+            Self::quarter_round(&mut working, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            let v = working[i].wrapping_add(self.state[i]);
+            self.buf[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        self.state[12] = self.state[12].wrapping_add(1);
+        self.buf_pos = 0;
+    }
+}
+
+impl SecureRng for ChaCha20Core {
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        let mut written = 0;
+        while written < dest.len() {
+            if self.buf_pos >= 64 {
+                self.refill();
+            }
+            let take = (64 - self.buf_pos).min(dest.len() - written);
+            dest[written..written + take]
+                .copy_from_slice(&self.buf[self.buf_pos..self.buf_pos + take]);
+            self.buf_pos += take;
+            written += take;
+        }
+    }
+}
+
+/// OS-seeded CSPRNG (getrandom → ChaCha20 stream).
+pub struct SystemRng {
+    core: ChaCha20Core,
+}
+
+impl SystemRng {
+    pub fn new() -> Self {
+        let mut key = [0u8; 32];
+        let mut nonce = [0u8; 12];
+        getrandom::fill(&mut key).expect("OS entropy unavailable");
+        getrandom::fill(&mut nonce).expect("OS entropy unavailable");
+        SystemRng { core: ChaCha20Core::new(&key, &nonce) }
+    }
+}
+
+impl Default for SystemRng {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SecureRng for SystemRng {
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        self.core.fill_bytes(dest)
+    }
+}
+
+/// Seedable deterministic RNG for tests and reproducible benchmarks.
+pub struct DeterministicRng {
+    core: ChaCha20Core,
+}
+
+impl DeterministicRng {
+    pub fn seed(seed: u64) -> Self {
+        DeterministicRng { core: ChaCha20Core::from_seed(&seed.to_le_bytes()) }
+    }
+
+    pub fn from_bytes(seed: &[u8]) -> Self {
+        DeterministicRng { core: ChaCha20Core::from_seed(seed) }
+    }
+}
+
+impl SecureRng for DeterministicRng {
+    fn fill_bytes(&mut self, dest: &mut [u8]) {
+        self.core.fill_bytes(dest)
+    }
+}
+
+/// PRG expansion used by the BON baseline: expand a 32-byte seed into `n`
+/// pseudo-random f64 mask values in a fixed range. Both parties expanding
+/// the same seed get identical masks, so pairwise masks cancel.
+pub fn prg_expand_f64(seed: &[u8], n: usize) -> Vec<f64> {
+    let mut core = ChaCha20Core::from_seed(seed);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        // Masks in [-2^20, 2^20): large relative to model weights but exact
+        // in f64 so that masks cancel to the last bit when summed in the
+        // same order.
+        let v = core.next_u64() >> 32; // 32 bits
+        let signed = v as i64 - (1i64 << 31);
+        out.push(signed as f64 / 2048.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::hex_encode;
+
+    #[test]
+    fn chacha20_rfc8439_vector() {
+        // RFC 8439 §2.3.2 test vector: key = 00..1f, nonce 000000090000004a00000000,
+        // counter=1. Our stream starts at counter 0 so skip the first block.
+        let key: [u8; 32] = (0u8..32).collect::<Vec<_>>().try_into().unwrap();
+        let nonce: [u8; 12] = [0, 0, 0, 9, 0, 0, 0, 0x4a, 0, 0, 0, 0];
+        let mut core = ChaCha20Core::new(&key, &nonce);
+        let mut block0 = [0u8; 64];
+        core.fill_bytes(&mut block0);
+        let mut block1 = [0u8; 64];
+        core.fill_bytes(&mut block1);
+        assert_eq!(
+            hex_encode(&block1[..32]),
+            "10f1e7e4d13b5915500fdd1fa32071c4c7d1f4c733c068030422aa9ac3d46c4e"
+        );
+    }
+
+    #[test]
+    fn deterministic_rng_reproducible() {
+        let mut a = DeterministicRng::seed(1234);
+        let mut b = DeterministicRng::seed(1234);
+        for _ in 0..10 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = DeterministicRng::seed(1235);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn system_rng_nonconstant() {
+        let mut r = SystemRng::new();
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, b); // astronomically unlikely to fail
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = DeterministicRng::seed(9);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_range() {
+        let mut r = DeterministicRng::seed(10);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            seen[r.next_below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn prg_expand_deterministic_and_cancelling() {
+        let seed = [7u8; 32];
+        let a = prg_expand_f64(&seed, 100);
+        let b = prg_expand_f64(&seed, 100);
+        assert_eq!(a, b);
+        // Masks cancel exactly: x + m - m == x for representable values.
+        for (x, m) in a.iter().zip(b.iter()) {
+            let v = 3.25f64 + x - m;
+            assert_eq!(v, 3.25);
+        }
+        let c = prg_expand_f64(&[8u8; 32], 100);
+        assert_ne!(a, c);
+    }
+}

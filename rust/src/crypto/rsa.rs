@@ -1,0 +1,303 @@
+//! RSA public-key cryptography (from scratch on our bignum substrate).
+//!
+//! The paper (§4) encrypts every chain message with the receiver's public
+//! key and analyses RSA complexity explicitly (O(k²) encrypt / O(k³)
+//! decrypt for a k-bit modulus). We implement:
+//!
+//!  * key generation (two random primes, e = 65537, CRT parameters),
+//!  * PKCS#1 v1.5 type-2 style padding for encryption blocks,
+//!  * CRT-accelerated decryption (~4× faster than plain d exponentiation),
+//!  * chunked blob encryption so the RSA-only mode can carry feature
+//!    vectors larger than one block (what SAF→SAFE §5.7 improves on).
+
+use super::bigint::BigUint;
+use super::rng::SecureRng;
+use anyhow::{bail, Context, Result};
+
+/// RSA public key (n, e).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RsaPublicKey {
+    pub n: BigUint,
+    pub e: BigUint,
+}
+
+/// RSA private key with CRT parameters.
+#[derive(Debug, Clone)]
+pub struct RsaPrivateKey {
+    pub n: BigUint,
+    pub e: BigUint,
+    pub d: BigUint,
+    pub p: BigUint,
+    pub q: BigUint,
+    pub dp: BigUint,   // d mod (p-1)
+    pub dq: BigUint,   // d mod (q-1)
+    pub qinv: BigUint, // q^{-1} mod p
+}
+
+/// A full keypair.
+#[derive(Debug, Clone)]
+pub struct RsaKeyPair {
+    pub public: RsaPublicKey,
+    pub private: RsaPrivateKey,
+}
+
+impl RsaPublicKey {
+    /// Modulus size in bytes.
+    pub fn modulus_len(&self) -> usize {
+        (self.n.bit_length() + 7) / 8
+    }
+
+    /// Max plaintext bytes per block under PKCS#1 v1.5 (k - 11).
+    pub fn max_block_payload(&self) -> usize {
+        self.modulus_len().saturating_sub(11)
+    }
+
+    /// Encrypt one block (PKCS#1 v1.5 type 2 padding).
+    pub fn encrypt_block(&self, msg: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
+        let k = self.modulus_len();
+        if msg.len() > k - 11 {
+            bail!("message too long for RSA block: {} > {}", msg.len(), k - 11);
+        }
+        // EM = 0x00 || 0x02 || PS (nonzero random) || 0x00 || M
+        let ps_len = k - 3 - msg.len();
+        let mut em = Vec::with_capacity(k);
+        em.push(0x00);
+        em.push(0x02);
+        for _ in 0..ps_len {
+            // non-zero random byte
+            loop {
+                let mut b = [0u8; 1];
+                rng.fill_bytes(&mut b);
+                if b[0] != 0 {
+                    em.push(b[0]);
+                    break;
+                }
+            }
+        }
+        em.push(0x00);
+        em.extend_from_slice(msg);
+        let m = BigUint::from_bytes_be(&em);
+        let c = m.modpow(&self.e, &self.n);
+        Ok(c.to_bytes_be_padded(k))
+    }
+
+    /// Encrypt an arbitrary-length blob by chunking into blocks.
+    /// This is the "RSA-only" mode whose cost motivates §5.7.
+    pub fn encrypt_blob(&self, data: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
+        let chunk = self.max_block_payload();
+        let mut out = Vec::new();
+        for part in data.chunks(chunk.max(1)) {
+            out.extend_from_slice(&self.encrypt_block(part, rng)?);
+        }
+        Ok(out)
+    }
+
+    /// Serialize as JSON-friendly hex.
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::Value::object(vec![
+            ("n", crate::json::Value::from(self.n.to_hex())),
+            ("e", crate::json::Value::from(self.e.to_hex())),
+        ])
+    }
+
+    pub fn from_json(v: &crate::json::Value) -> Result<Self> {
+        let n = BigUint::from_hex(v.str_of("n").context("missing n")?)?;
+        let e = BigUint::from_hex(v.str_of("e").context("missing e")?)?;
+        Ok(RsaPublicKey { n, e })
+    }
+}
+
+impl RsaPrivateKey {
+    pub fn modulus_len(&self) -> usize {
+        (self.n.bit_length() + 7) / 8
+    }
+
+    /// RSA-CRT exponentiation: m = c^d mod n via the two half-size moduli.
+    fn decrypt_raw(&self, c: &BigUint) -> BigUint {
+        let m1 = c.rem(&self.p).modpow(&self.dp, &self.p);
+        let m2 = c.rem(&self.q).modpow(&self.dq, &self.q);
+        // h = qinv * (m1 - m2) mod p
+        let diff = m1.submod(&m2.rem(&self.p), &self.p);
+        let h = self.qinv.mulmod(&diff, &self.p);
+        m2.add(&h.mul(&self.q))
+    }
+
+    /// Decrypt one PKCS#1 v1.5 block.
+    pub fn decrypt_block(&self, block: &[u8]) -> Result<Vec<u8>> {
+        let k = self.modulus_len();
+        if block.len() != k {
+            bail!("ciphertext block length {} != modulus length {}", block.len(), k);
+        }
+        let c = BigUint::from_bytes_be(block);
+        if c.ge(&self.n) {
+            bail!("ciphertext out of range");
+        }
+        let m = self.decrypt_raw(&c);
+        let em = m.to_bytes_be_padded(k);
+        if em[0] != 0x00 || em[1] != 0x02 {
+            bail!("invalid PKCS#1 padding header");
+        }
+        let sep = em[2..]
+            .iter()
+            .position(|&b| b == 0)
+            .context("missing PKCS#1 separator")?;
+        if sep < 8 {
+            bail!("PKCS#1 padding string too short");
+        }
+        Ok(em[2 + sep + 1..].to_vec())
+    }
+
+    /// Decrypt a chunked blob produced by [`RsaPublicKey::encrypt_blob`].
+    pub fn decrypt_blob(&self, data: &[u8]) -> Result<Vec<u8>> {
+        let k = self.modulus_len();
+        if data.len() % k != 0 {
+            bail!("blob length {} not a multiple of block size {}", data.len(), k);
+        }
+        let mut out = Vec::with_capacity(data.len());
+        for block in data.chunks(k) {
+            out.extend_from_slice(&self.decrypt_block(block)?);
+        }
+        Ok(out)
+    }
+}
+
+impl RsaKeyPair {
+    /// Generate a keypair with a `bits`-bit modulus and e = 65537.
+    pub fn generate(bits: usize, rng: &mut dyn SecureRng) -> Self {
+        assert!(bits >= 128, "modulus too small");
+        let e = BigUint::from_u64(65537);
+        loop {
+            let p = super::prime::gen_prime(bits / 2, rng);
+            let q = super::prime::gen_prime(bits - bits / 2, rng);
+            if p == q {
+                continue;
+            }
+            let n = p.mul(&q);
+            if n.bit_length() != bits {
+                continue;
+            }
+            let p1 = p.sub_u64(1);
+            let q1 = q.sub_u64(1);
+            let phi = p1.mul(&q1);
+            let d = match e.modinv(&phi) {
+                Some(d) => d,
+                None => continue, // gcd(e, phi) != 1; re-draw primes
+            };
+            let dp = d.rem(&p1);
+            let dq = d.rem(&q1);
+            let qinv = match q.modinv(&p) {
+                Some(v) => v,
+                None => continue,
+            };
+            return RsaKeyPair {
+                public: RsaPublicKey { n: n.clone(), e: e.clone() },
+                private: RsaPrivateKey { n, e: e.clone(), d, p, q, dp, dq, qinv },
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+
+    fn test_keypair(bits: usize, seed: u64) -> RsaKeyPair {
+        let mut rng = DeterministicRng::seed(seed);
+        RsaKeyPair::generate(bits, &mut rng)
+    }
+
+    #[test]
+    fn keygen_properties() {
+        let kp = test_keypair(512, 1);
+        assert_eq!(kp.public.n.bit_length(), 512);
+        assert_eq!(kp.private.p.mul(&kp.private.q), kp.public.n);
+        // e*d ≡ 1 mod phi
+        let phi = kp.private.p.sub_u64(1).mul(&kp.private.q.sub_u64(1));
+        assert!(kp.public.e.mulmod(&kp.private.d, &phi).is_one());
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let kp = test_keypair(512, 2);
+        let mut rng = DeterministicRng::seed(3);
+        for msg in [&b""[..], b"x", b"hello world", &[0u8, 1, 2, 0, 0, 255]] {
+            let c = kp.public.encrypt_block(msg, &mut rng).unwrap();
+            assert_eq!(c.len(), kp.public.modulus_len());
+            let m = kp.private.decrypt_block(&c).unwrap();
+            assert_eq!(m, msg);
+        }
+    }
+
+    #[test]
+    fn ciphertext_is_randomized() {
+        let kp = test_keypair(512, 4);
+        let mut rng = DeterministicRng::seed(5);
+        let c1 = kp.public.encrypt_block(b"same message", &mut rng).unwrap();
+        let c2 = kp.public.encrypt_block(b"same message", &mut rng).unwrap();
+        assert_ne!(c1, c2, "PKCS#1 v1.5 must be randomized");
+    }
+
+    #[test]
+    fn blob_roundtrip_multiblock() {
+        let kp = test_keypair(512, 6);
+        let mut rng = DeterministicRng::seed(7);
+        let data: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let blob = kp.public.encrypt_blob(&data, &mut rng).unwrap();
+        assert!(blob.len() > data.len());
+        assert_eq!(kp.private.decrypt_blob(&blob).unwrap(), data);
+    }
+
+    #[test]
+    fn oversize_block_rejected() {
+        let kp = test_keypair(512, 8);
+        let mut rng = DeterministicRng::seed(9);
+        let too_big = vec![1u8; kp.public.max_block_payload() + 1];
+        assert!(kp.public.encrypt_block(&too_big, &mut rng).is_err());
+    }
+
+    #[test]
+    fn tampered_ciphertext_detected() {
+        let kp = test_keypair(512, 10);
+        let mut rng = DeterministicRng::seed(11);
+        let mut c = kp.public.encrypt_block(b"secret", &mut rng).unwrap();
+        c[10] ^= 0xff;
+        // Either padding fails or the plaintext differs.
+        match kp.private.decrypt_block(&c) {
+            Err(_) => {}
+            Ok(m) => assert_ne!(m, b"secret"),
+        }
+    }
+
+    #[test]
+    fn wrong_key_cannot_decrypt() {
+        let kp1 = test_keypair(512, 12);
+        let kp2 = test_keypair(512, 13);
+        let mut rng = DeterministicRng::seed(14);
+        let c = kp1.public.encrypt_block(b"for kp1 only", &mut rng).unwrap();
+        match kp2.private.decrypt_block(&c) {
+            Err(_) => {}
+            Ok(m) => assert_ne!(m, b"for kp1 only"),
+        }
+    }
+
+    #[test]
+    fn public_key_json_roundtrip() {
+        let kp = test_keypair(256, 15);
+        let j = kp.public.to_json();
+        let back = RsaPublicKey::from_json(&j).unwrap();
+        assert_eq!(back, kp.public);
+    }
+
+    #[test]
+    fn crt_matches_plain_exponentiation() {
+        let kp = test_keypair(512, 16);
+        let mut rng = DeterministicRng::seed(17);
+        let m = BigUint::random_below(&kp.public.n, &mut rng);
+        let c = m.modpow(&kp.public.e, &kp.public.n);
+        let plain = c.modpow(&kp.private.d, &kp.private.n);
+        let crt = kp.private.decrypt_raw(&c);
+        assert_eq!(plain, crt);
+        assert_eq!(plain, m);
+    }
+}

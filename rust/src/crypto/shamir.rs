@@ -1,0 +1,316 @@
+//! Shamir t-of-n secret sharing over GF(2^61 − 1).
+//!
+//! BON-baseline substrate (paper §2: "no k-of-n secret sharing is
+//! necessary [in SAFE]" — but BON needs it). Bonawitz Round 1 shares each
+//! client's self-mask seed `b_u` and DH secret key `s_u^SK` among all
+//! peers so the server can recover them after dropouts.
+//!
+//! Secrets are byte strings; we split them into 7-byte (56-bit) chunks,
+//! each shared independently over the Mersenne field p = 2^61 − 1 where
+//! `u128` arithmetic gives exact mulmod.
+
+use anyhow::{bail, Result};
+
+use super::rng::SecureRng;
+
+/// Field modulus: Mersenne prime 2^61 - 1.
+pub const P: u64 = (1u64 << 61) - 1;
+
+/// Reduce a u128 modulo 2^61-1 using the Mersenne identity
+/// x = (x >> 61) + (x & P) (mod P).
+#[inline]
+fn reduce(mut x: u128) -> u64 {
+    while x >= (1u128 << 61) {
+        x = (x >> 61) + (x & P as u128);
+    }
+    let v = x as u64;
+    if v >= P {
+        v - P
+    } else {
+        v
+    }
+}
+
+#[inline]
+pub fn add(a: u64, b: u64) -> u64 {
+    reduce(a as u128 + b as u128)
+}
+
+#[inline]
+pub fn sub(a: u64, b: u64) -> u64 {
+    add(a, P - (b % P))
+}
+
+#[inline]
+pub fn mul(a: u64, b: u64) -> u64 {
+    reduce(a as u128 * b as u128)
+}
+
+/// Fermat inverse: a^(p-2) mod p.
+pub fn inv(a: u64) -> u64 {
+    assert!(a % P != 0, "no inverse of zero");
+    pow(a, P - 2)
+}
+
+pub fn pow(mut base: u64, mut e: u64) -> u64 {
+    base %= P;
+    let mut acc = 1u64;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul(acc, base);
+        }
+        base = mul(base, base);
+        e >>= 1;
+    }
+    acc
+}
+
+/// One share: the evaluation point x (= participant id, non-zero) and the
+/// polynomial evaluations for every secret chunk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Share {
+    pub x: u64,
+    pub ys: Vec<u64>,
+}
+
+impl Share {
+    /// Serialize as hex chunks for the wire.
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::Value::object(vec![
+            ("x", crate::json::Value::from(self.x)),
+            (
+                "ys",
+                crate::json::Value::Arr(
+                    self.ys.iter().map(|&y| crate::json::Value::from(format!("{:x}", y))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &crate::json::Value) -> Result<Share> {
+        let x = v.u64_of("x").ok_or_else(|| anyhow::anyhow!("share missing x"))?;
+        let ys = v
+            .get("ys")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("share missing ys"))?
+            .iter()
+            .map(|e| {
+                e.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("bad ys entry"))
+                    .and_then(|s| u64::from_str_radix(s, 16).map_err(|e| anyhow::anyhow!("{e}")))
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        Ok(Share { x, ys })
+    }
+}
+
+const CHUNK: usize = 7; // 56-bit chunks fit comfortably below 2^61-1
+
+/// Split `secret` into `n` shares with threshold `t` (any `t` reconstruct).
+/// `xs` are the n distinct non-zero evaluation points (participant ids).
+pub fn share_secret(
+    secret: &[u8],
+    t: usize,
+    xs: &[u64],
+    rng: &mut dyn SecureRng,
+) -> Result<Vec<Share>> {
+    if t == 0 || xs.len() < t {
+        bail!("invalid threshold {} for {} participants", t, xs.len());
+    }
+    for &x in xs {
+        if x == 0 || x >= P {
+            bail!("evaluation points must be in [1, P)");
+        }
+    }
+    {
+        let mut sorted: Vec<u64> = xs.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != xs.len() {
+            bail!("duplicate evaluation points");
+        }
+    }
+    // Prefix the secret with its length so reconstruction can strip padding.
+    let mut padded = Vec::with_capacity(secret.len() + 4);
+    padded.extend_from_slice(&(secret.len() as u32).to_le_bytes());
+    padded.extend_from_slice(secret);
+    while padded.len() % CHUNK != 0 {
+        padded.push(0);
+    }
+    let chunks: Vec<u64> = padded
+        .chunks(CHUNK)
+        .map(|c| {
+            let mut v = [0u8; 8];
+            v[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(v)
+        })
+        .collect();
+
+    let mut shares: Vec<Share> =
+        xs.iter().map(|&x| Share { x, ys: Vec::with_capacity(chunks.len()) }).collect();
+
+    for &chunk in &chunks {
+        // Random degree-(t-1) polynomial with constant term = chunk.
+        let mut coeffs = Vec::with_capacity(t);
+        coeffs.push(chunk % P);
+        for _ in 1..t {
+            coeffs.push(rng.next_u64() % P);
+        }
+        for share in shares.iter_mut() {
+            // Horner evaluation at x.
+            let mut acc = 0u64;
+            for &c in coeffs.iter().rev() {
+                acc = add(mul(acc, share.x), c);
+            }
+            share.ys.push(acc);
+        }
+    }
+    Ok(shares)
+}
+
+/// Reconstruct the secret from ≥ t shares (Lagrange interpolation at 0).
+pub fn reconstruct_secret(shares: &[Share]) -> Result<Vec<u8>> {
+    if shares.is_empty() {
+        bail!("no shares provided");
+    }
+    let n_chunks = shares[0].ys.len();
+    if shares.iter().any(|s| s.ys.len() != n_chunks) {
+        bail!("shares have inconsistent chunk counts");
+    }
+    {
+        let mut sorted: Vec<u64> = shares.iter().map(|s| s.x).collect();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != shares.len() {
+            bail!("duplicate share points");
+        }
+    }
+    // Lagrange basis at 0: L_i = Π_{j≠i} x_j / (x_j - x_i)
+    let xs: Vec<u64> = shares.iter().map(|s| s.x).collect();
+    let mut lagrange = Vec::with_capacity(xs.len());
+    for i in 0..xs.len() {
+        let mut num = 1u64;
+        let mut den = 1u64;
+        for j in 0..xs.len() {
+            if i == j {
+                continue;
+            }
+            num = mul(num, xs[j]);
+            den = mul(den, sub(xs[j], xs[i]));
+        }
+        lagrange.push(mul(num, inv(den)));
+    }
+
+    let mut padded = Vec::with_capacity(n_chunks * CHUNK);
+    for c in 0..n_chunks {
+        let mut v = 0u64;
+        for (share, &l) in shares.iter().zip(lagrange.iter()) {
+            v = add(v, mul(share.ys[c], l));
+        }
+        let bytes = v.to_le_bytes();
+        padded.extend_from_slice(&bytes[..CHUNK]);
+    }
+    if padded.len() < 4 {
+        bail!("reconstructed data too short");
+    }
+    let len = u32::from_le_bytes(padded[..4].try_into().unwrap()) as usize;
+    if padded.len() < 4 + len {
+        bail!("reconstructed length {} exceeds data", len);
+    }
+    Ok(padded[4..4 + len].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::rng::DeterministicRng;
+
+    #[test]
+    fn field_arithmetic_basics() {
+        assert_eq!(add(P - 1, 1), 0);
+        assert_eq!(sub(0, 1), P - 1);
+        assert_eq!(mul(2, P - 1), P - 2); // 2(P-1) = 2P-2 ≡ P-2
+        for a in [1u64, 2, 12345, P - 1] {
+            assert_eq!(mul(a, inv(a)), 1, "a={}", a);
+        }
+        assert_eq!(pow(3, 4), 81);
+    }
+
+    #[test]
+    fn share_reconstruct_exact_threshold() {
+        let mut rng = DeterministicRng::seed(1);
+        let secret = b"the initiator's 32-byte mask key";
+        let xs: Vec<u64> = (1..=5).collect();
+        let shares = share_secret(secret, 3, &xs, &mut rng).unwrap();
+        // Any 3 of 5 reconstruct.
+        let rec = reconstruct_secret(&shares[..3]).unwrap();
+        assert_eq!(rec, secret);
+        let rec = reconstruct_secret(&[shares[0].clone(), shares[2].clone(), shares[4].clone()])
+            .unwrap();
+        assert_eq!(rec, secret);
+        // All 5 also fine.
+        assert_eq!(reconstruct_secret(&shares).unwrap(), secret);
+    }
+
+    #[test]
+    fn below_threshold_gives_garbage() {
+        let mut rng = DeterministicRng::seed(2);
+        let secret = b"super secret";
+        let xs: Vec<u64> = (1..=4).collect();
+        let shares = share_secret(secret, 3, &xs, &mut rng).unwrap();
+        // 2 < t shares: reconstruction must NOT yield the secret.
+        match reconstruct_secret(&shares[..2]) {
+            Ok(rec) => assert_ne!(rec, secret),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn odd_lengths_and_empty() {
+        let mut rng = DeterministicRng::seed(3);
+        let xs: Vec<u64> = (1..=3).collect();
+        for secret in [&b""[..], b"a", b"abcdefg", b"abcdefgh", &[0u8; 100]] {
+            let shares = share_secret(secret, 2, &xs, &mut rng).unwrap();
+            assert_eq!(reconstruct_secret(&shares[..2]).unwrap(), secret);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        let mut rng = DeterministicRng::seed(4);
+        assert!(share_secret(b"s", 0, &[1, 2], &mut rng).is_err());
+        assert!(share_secret(b"s", 3, &[1, 2], &mut rng).is_err());
+        assert!(share_secret(b"s", 2, &[0, 1], &mut rng).is_err());
+        assert!(share_secret(b"s", 2, &[1, 1], &mut rng).is_err());
+        assert!(reconstruct_secret(&[]).is_err());
+    }
+
+    #[test]
+    fn share_json_roundtrip() {
+        let mut rng = DeterministicRng::seed(5);
+        let xs: Vec<u64> = (1..=3).collect();
+        let shares = share_secret(b"wire format", 2, &xs, &mut rng).unwrap();
+        let j = shares[0].to_json();
+        let back = Share::from_json(&j).unwrap();
+        assert_eq!(back, shares[0]);
+    }
+
+    #[test]
+    fn t_of_n_many_combinations() {
+        let mut rng = DeterministicRng::seed(6);
+        let secret = b"bonawitz b_u seed 0123456789abcdef";
+        let xs: Vec<u64> = (1..=8).collect();
+        let t = 6; // ceil(2n/3) for n=8
+        let shares = share_secret(secret, t, &xs, &mut rng).unwrap();
+        // Drop any two shares: still reconstructs.
+        for drop1 in 0..8 {
+            let subset: Vec<Share> = shares
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| *i != drop1 && *i != (drop1 + 3) % 8)
+                .map(|(_, s)| s.clone())
+                .collect();
+            assert_eq!(reconstruct_secret(&subset).unwrap(), secret);
+        }
+    }
+}

@@ -1,0 +1,265 @@
+//! Local learner training engines.
+//!
+//! [`XlaTrainer`] executes the AOT-compiled L2 train step through PJRT —
+//! the production path (Python never runs at training time).
+//! [`NativeTrainer`] is a pure-Rust implementation of the *same* MLP
+//! forward/backward used (a) as a fallback when artifacts are not built
+//! and (b) as an independent cross-check oracle in the integration tests.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::runtime::{ArtifactRuntime, TrainStepExecutable};
+
+/// A model trainer over flattened parameter vectors.
+pub trait Trainer: Send + Sync {
+    fn dim_in(&self) -> usize;
+    fn dim_out(&self) -> usize;
+    fn batch(&self) -> usize;
+    fn param_count(&self) -> usize;
+    /// One SGD step; returns (updated params, batch loss).
+    fn step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)>;
+    /// Loss without update.
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32>;
+    fn name(&self) -> &'static str;
+}
+
+/// PJRT-backed trainer (the L2/L1 path).
+pub struct XlaTrainer {
+    exe: TrainStepExecutable,
+}
+
+impl XlaTrainer {
+    pub fn load(rt: Arc<ArtifactRuntime>) -> Result<XlaTrainer> {
+        Ok(XlaTrainer { exe: TrainStepExecutable::load(rt)? })
+    }
+}
+
+impl Trainer for XlaTrainer {
+    fn dim_in(&self) -> usize {
+        self.exe.dim_in
+    }
+    fn dim_out(&self) -> usize {
+        self.exe.dim_out
+    }
+    fn batch(&self) -> usize {
+        self.exe.batch
+    }
+    fn param_count(&self) -> usize {
+        self.exe.param_count()
+    }
+    fn step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        self.exe.step(params, x, y, lr)
+    }
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        self.exe.loss(params, x, y)
+    }
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Pure-Rust MLP (in→hidden tanh→out, MSE) mirroring
+/// `python/compile/model.py` exactly; serves as the oracle.
+pub struct NativeTrainer {
+    pub dim_in: usize,
+    pub dim_hidden: usize,
+    pub dim_out: usize,
+    pub batch_size: usize,
+}
+
+impl NativeTrainer {
+    pub fn new(dim_in: usize, dim_hidden: usize, dim_out: usize, batch: usize) -> NativeTrainer {
+        NativeTrainer { dim_in, dim_hidden, dim_out, batch_size: batch }
+    }
+
+    /// Same architecture the artifacts use (manifest defaults).
+    pub fn default_arch() -> NativeTrainer {
+        NativeTrainer::new(16, 32, 4, 64)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn forward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (i, h, o, b) = (self.dim_in, self.dim_hidden, self.dim_out, self.batch_size);
+        let w1 = &params[..i * h];
+        let b1 = &params[i * h..i * h + h];
+        let w2 = &params[i * h + h..i * h + h + h * o];
+        let b2 = &params[i * h + h + h * o..];
+        let mut hid = vec![0.0f32; b * h];
+        for r in 0..b {
+            for j in 0..h {
+                let mut acc = b1[j];
+                for k in 0..i {
+                    acc += x[r * i + k] * w1[k * h + j];
+                }
+                hid[r * h + j] = acc.tanh();
+            }
+        }
+        let mut out = vec![0.0f32; b * o];
+        for r in 0..b {
+            for c in 0..o {
+                let mut acc = b2[c];
+                for j in 0..h {
+                    acc += hid[r * h + j] * w2[j * o + c];
+                }
+                out[r * o + c] = acc;
+            }
+        }
+        (hid, out)
+    }
+}
+
+impl Trainer for NativeTrainer {
+    fn dim_in(&self) -> usize {
+        self.dim_in
+    }
+    fn dim_out(&self) -> usize {
+        self.dim_out
+    }
+    fn batch(&self) -> usize {
+        self.batch_size
+    }
+    fn param_count(&self) -> usize {
+        self.dim_in * self.dim_hidden
+            + self.dim_hidden
+            + self.dim_hidden * self.dim_out
+            + self.dim_out
+    }
+
+    fn step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        let (i, h, o, b) = (self.dim_in, self.dim_hidden, self.dim_out, self.batch_size);
+        let (hid, out) = self.forward(params, x);
+        let w1 = &params[..i * h];
+        let w2 = &params[i * h + h..i * h + h + h * o];
+        let n = (b * o) as f32;
+        // loss = mean((out - y)^2); dL/dout = 2(out - y)/n
+        let mut loss = 0.0f32;
+        let mut dout = vec![0.0f32; b * o];
+        for idx in 0..b * o {
+            let d = out[idx] - y[idx];
+            loss += d * d;
+            dout[idx] = 2.0 * d / n;
+        }
+        loss /= n;
+        // Grads.
+        let mut gw2 = vec![0.0f32; h * o];
+        let mut gb2 = vec![0.0f32; o];
+        for r in 0..b {
+            for c in 0..o {
+                let g = dout[r * o + c];
+                gb2[c] += g;
+                for j in 0..h {
+                    gw2[j * o + c] += hid[r * h + j] * g;
+                }
+            }
+        }
+        // dhid = dout·W2ᵀ ⊙ (1 − hid²)
+        let mut gw1 = vec![0.0f32; i * h];
+        let mut gb1 = vec![0.0f32; h];
+        for r in 0..b {
+            for j in 0..h {
+                let mut g = 0.0f32;
+                for c in 0..o {
+                    g += dout[r * o + c] * w2[j * o + c];
+                }
+                let hv = hid[r * h + j];
+                g *= 1.0 - hv * hv;
+                gb1[j] += g;
+                for k in 0..i {
+                    gw1[k * h + j] += x[r * i + k] * g;
+                }
+            }
+        }
+        let _ = w1;
+        // SGD update on the flattened layout [W1|b1|W2|b2].
+        let mut new = params.to_vec();
+        let mut cursor = 0;
+        for g in gw1 {
+            new[cursor] -= lr * g;
+            cursor += 1;
+        }
+        for g in gb1 {
+            new[cursor] -= lr * g;
+            cursor += 1;
+        }
+        for g in gw2 {
+            new[cursor] -= lr * g;
+            cursor += 1;
+        }
+        for g in gb2 {
+            new[cursor] -= lr * g;
+            cursor += 1;
+        }
+        Ok((new, loss))
+    }
+
+    fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        let (_, out) = self.forward(params, x);
+        let n = out.len() as f32;
+        Ok(out.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum::<f32>() / n)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Initialize a parameter vector (uniform ±scale), deterministic per seed.
+pub fn init_params(count: usize, scale: f32, seed: u64) -> Vec<f32> {
+    use crate::crypto::rng::SecureRng;
+    let mut rng = crate::crypto::DeterministicRng::seed(seed);
+    (0..count).map(|_| ((rng.next_f64() as f32) - 0.5) * 2.0 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::dataset::SyntheticTask;
+
+    #[test]
+    fn native_trainer_learns() {
+        let t = NativeTrainer::default_arch();
+        let task = SyntheticTask::new(t.dim_in, t.dim_out, 11);
+        let shard = &task.shards(1, 256, false, 5)[0];
+        let mut params = init_params(t.param_count(), 0.15, 42);
+        let (x0, y0) = shard.batch(t.dim_in, t.dim_out, t.batch_size, 0);
+        let l0 = t.loss(&params, &x0, &y0).unwrap();
+        for step in 0..120 {
+            let (x, y) = shard.batch(t.dim_in, t.dim_out, t.batch_size, step);
+            let (p, _l) = t.step(&params, &x, &y, 0.05).unwrap();
+            params = p;
+        }
+        let l1 = t.loss(&params, &x0, &y0).unwrap();
+        assert!(l1 < l0 * 0.5, "loss {l0} -> {l1} did not halve");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let t = NativeTrainer::new(3, 4, 2, 8);
+        let task = SyntheticTask::new(3, 2, 13);
+        let shard = &task.shards(1, 8, false, 1)[0];
+        let (x, y) = shard.batch(3, 2, 8, 0);
+        let params = init_params(t.param_count(), 0.3, 9);
+        let (updated, _) = t.step(&params, &x, &y, 1.0).unwrap();
+        // grad = params - updated (lr = 1)
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, t.param_count() / 2, t.param_count() - 1] {
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let lp = t.loss(&pp, &x, &y).unwrap();
+            pp[idx] -= 2.0 * eps;
+            let lm = t.loss(&pp, &x, &y).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            let analytic = params[idx] - updated[idx];
+            assert!(
+                (fd - analytic).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs analytic {analytic}"
+            );
+        }
+    }
+}

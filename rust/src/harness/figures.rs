@@ -1,0 +1,399 @@
+//! Figure generators: one function per paper figure (6–20) plus the
+//! headline ratio table. Shared by the `cargo bench` targets and the
+//! `paper_figures` example so both print identical series.
+//!
+//! Quick mode (default) uses trimmed sweeps and `SAFE_BENCH_REPEATS`
+//! (default 5) repeats; `SAFE_BENCH_FULL=1` restores the paper's exact
+//! sweeps (30 repeats edge / 5 deep-edge, 100-node maxima).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::{bench_repeats, full_scale, Figure};
+use crate::config::{DeviceProfile, SessionConfig};
+use crate::crypto::envelope::CipherMode;
+use crate::learner::faults::FaultPlan;
+use crate::metrics::RoundMetrics;
+use crate::protocols::bon::BonSession;
+use crate::protocols::insec::InsecSession;
+use crate::protocols::SafeSession;
+
+/// Which protocol/variant a series runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Insec,
+    Saf,  // SAFE minus encryption
+    Safe, // hybrid encryption
+    Bon,
+}
+
+impl Variant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Insec => "INSEC",
+            Variant::Saf => "SAF",
+            Variant::Safe => "SAFE",
+            Variant::Bon => "BON",
+        }
+    }
+}
+
+/// Base session config for the edge platform (§6).
+pub fn edge_cfg(n: usize, features: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features,
+        rsa_bits: 1024,
+        profile: DeviceProfile::edge(),
+        poll_time: Duration::from_millis(400),
+        aggregation_timeout: Duration::from_secs(120),
+        progress_timeout: Duration::from_secs(30),
+        monitor_interval: Duration::from_millis(200),
+        seed: Some(42),
+        ..Default::default()
+    }
+}
+
+/// Base config for the simulated deep-edge platform (§7).
+pub fn deep_edge_cfg(n: usize, features: usize) -> SessionConfig {
+    SessionConfig {
+        profile: DeviceProfile::deep_edge(),
+        mode: CipherMode::PreNegotiated,
+        ..edge_cfg(n, features)
+    }
+}
+
+/// Run `repeats` rounds of `variant` and return the metrics.
+pub fn run_variant(
+    variant: Variant,
+    mut cfg: SessionConfig,
+    faults: &FaultPlan,
+    repeats: usize,
+) -> Result<Vec<RoundMetrics>> {
+    let inputs: Vec<Vec<f64>> = (0..cfg.n_nodes)
+        .map(|i| (0..cfg.features).map(|f| (i + 1) as f64 + 0.001 * f as f64).collect())
+        .collect();
+    match variant {
+        Variant::Insec => {
+            let session = InsecSession::new(cfg)?;
+            (0..repeats).map(|_| session.run_round(&inputs, faults)).collect()
+        }
+        Variant::Saf => {
+            cfg.mode = CipherMode::None;
+            let session = SafeSession::new(cfg)?;
+            (0..repeats)
+                .map(|_| session.run_round(&inputs, faults).map(|r| r.metrics))
+                .collect()
+        }
+        Variant::Safe => {
+            if cfg.profile.name != "deep-edge" {
+                cfg.mode = CipherMode::Hybrid;
+            }
+            let session = SafeSession::new(cfg)?;
+            (0..repeats)
+                .map(|_| session.run_round(&inputs, faults).map(|r| r.metrics))
+                .collect()
+        }
+        Variant::Bon => {
+            let session = BonSession::new(cfg)?;
+            (0..repeats).map(|_| session.run_round(&inputs, faults)).collect()
+        }
+    }
+}
+
+fn node_sweep_small() -> Vec<usize> {
+    if full_scale() {
+        vec![3, 4, 5, 6, 8, 10, 12, 15]
+    } else {
+        vec![3, 5, 8, 10, 15]
+    }
+}
+
+fn node_sweep_large() -> Vec<usize> {
+    if full_scale() {
+        vec![3, 10, 25, 50, 75, 100]
+    } else {
+        vec![3, 10, 20, 36]
+    }
+}
+
+fn feature_sweep() -> Vec<usize> {
+    if full_scale() {
+        vec![1, 10, 100, 1000, 2000, 5000, 10000]
+    } else {
+        vec![1, 10, 100, 1000, 10000]
+    }
+}
+
+fn node_sweep_figure(
+    id: &str,
+    title: &str,
+    nodes: &[usize],
+    features: usize,
+    variants: &[Variant],
+    repeats: usize,
+) -> Result<Figure> {
+    let mut fig = Figure::new(id, title, "nodes", 3.0);
+    for &n in nodes {
+        for &v in variants {
+            let cfg = edge_cfg(n, features);
+            let rounds = run_variant(v, cfg, &FaultPlan::none(), repeats)?;
+            fig.push_point(v.label(), n as f64, &rounds);
+        }
+    }
+    Ok(fig)
+}
+
+/// Fig 6 — Edge, 1 feature, 3–15 nodes, INSEC/SAF/SAFE/BON.
+pub fn fig6() -> Result<Figure> {
+    node_sweep_figure(
+        "fig6",
+        "Edge. BON 1 Feature.",
+        &node_sweep_small(),
+        1,
+        &[Variant::Insec, Variant::Saf, Variant::Safe, Variant::Bon],
+        bench_repeats(5),
+    )
+}
+
+/// Fig 7 — Edge, 1 feature, up to 100 nodes, INSEC/SAF/SAFE.
+pub fn fig7() -> Result<Figure> {
+    node_sweep_figure(
+        "fig7",
+        "Edge. 1 Feature.",
+        &node_sweep_large(),
+        1,
+        &[Variant::Insec, Variant::Saf, Variant::Safe],
+        bench_repeats(5),
+    )
+}
+
+/// Fig 8 — Edge, 10000 features, 3–15 nodes incl. BON.
+pub fn fig8() -> Result<Figure> {
+    node_sweep_figure(
+        "fig8",
+        "Edge. BON 10000 Features.",
+        &node_sweep_small(),
+        10_000,
+        &[Variant::Insec, Variant::Saf, Variant::Safe, Variant::Bon],
+        bench_repeats(3),
+    )
+}
+
+/// Fig 9 — Edge, 10000 features, up to 100 nodes.
+pub fn fig9() -> Result<Figure> {
+    node_sweep_figure(
+        "fig9",
+        "Edge. 10000 Features.",
+        &node_sweep_large(),
+        10_000,
+        &[Variant::Insec, Variant::Saf, Variant::Safe],
+        bench_repeats(3),
+    )
+}
+
+fn feature_sweep_figure(
+    id: &str,
+    title: &str,
+    n: usize,
+    variants: &[Variant],
+    repeats: usize,
+) -> Result<Figure> {
+    let mut fig = Figure::new(id, title, "features", 3.0);
+    for &f in &feature_sweep() {
+        for &v in variants {
+            let cfg = edge_cfg(n, f);
+            let rounds = run_variant(v, cfg, &FaultPlan::none(), repeats)?;
+            fig.push_point(v.label(), f as f64, &rounds);
+        }
+    }
+    Ok(fig)
+}
+
+/// Fig 10 — Edge, 3 nodes, feature sweep incl. BON.
+pub fn fig10() -> Result<Figure> {
+    feature_sweep_figure(
+        "fig10",
+        "Edge. BON 3 Nodes.",
+        3,
+        &[Variant::Insec, Variant::Saf, Variant::Safe, Variant::Bon],
+        bench_repeats(3),
+    )
+}
+
+/// Fig 11 — Edge, 15 nodes, feature sweep incl. BON (crossover ~2000).
+pub fn fig11() -> Result<Figure> {
+    feature_sweep_figure(
+        "fig11",
+        "Edge. BON 15 Nodes.",
+        15,
+        &[Variant::Insec, Variant::Saf, Variant::Safe, Variant::Bon],
+        bench_repeats(3),
+    )
+}
+
+/// Fig 12 — Edge, 100 nodes (36 quick), feature sweep (crossover ~100).
+pub fn fig12() -> Result<Figure> {
+    let n = if full_scale() { 100 } else { 36 };
+    feature_sweep_figure(
+        "fig12",
+        "Edge. 100 Nodes.",
+        n,
+        &[Variant::Insec, Variant::Saf, Variant::Safe],
+        bench_repeats(3),
+    )
+}
+
+/// Failover node sweep used by Figs 13/14 and the headline table.
+/// Follows §6.3: compare `n` completed nodes without failures against
+/// `n + 3` nodes where nodes 4–6 fail, so contributor counts match.
+pub fn failover_points() -> Vec<usize> {
+    if full_scale() {
+        vec![9, 15, 21, 27, 33]
+    } else {
+        vec![9, 21, 33]
+    }
+}
+
+/// §6.3 timeout budgets (paper: predicted completion + safety margin,
+/// with ΣSAFE per-node timeouts == BON global timeout).
+pub const SAFE_NODE_TIMEOUT: Duration = Duration::from_millis(200);
+pub const BON_GLOBAL_TIMEOUT: Duration = Duration::from_millis(600);
+
+/// Fig 13 — aggregation time vs completed nodes, SAFE/BON ± failover.
+pub fn fig13() -> Result<Figure> {
+    let repeats = bench_repeats(3);
+    let mut fig = Figure::new("fig13", "Edge. Failover.", "completed_nodes", 3.0);
+    for &completed in &failover_points() {
+        // No-failure runs with exactly `completed` nodes.
+        let safe = run_variant(Variant::Safe, edge_cfg(completed, 1), &FaultPlan::none(), repeats)?;
+        fig.push_point("SAFE", completed as f64, &safe);
+        let bon = run_variant(Variant::Bon, edge_cfg(completed, 1), &FaultPlan::none(), repeats)?;
+        fig.push_point("BON", completed as f64, &bon);
+        // Failure runs with completed+3 nodes, killing 4..6 (§6.3). The
+        // paper's apples-to-apples rule: "we kept the sum of all failed
+        // node timeouts in SAFE the same as the global BON timeout" —
+        // SAFE gets 3 × 200 ms per-node progress timeouts, BON one 600 ms
+        // round-2 close timeout.
+        let faults = FaultPlan::kill_range(4, 6);
+        let mut cfg = edge_cfg(completed + 3, 1);
+        cfg.progress_timeout = SAFE_NODE_TIMEOUT;
+        cfg.monitor_interval = Duration::from_millis(50);
+        let safe_f = run_variant(Variant::Safe, cfg, &faults, repeats)?;
+        fig.push_point("SAFE+failover", completed as f64, &safe_f);
+        let mut cfg = edge_cfg(completed + 3, 1);
+        cfg.progress_timeout = BON_GLOBAL_TIMEOUT;
+        let bon_f = run_variant(Variant::Bon, cfg, &faults, repeats)?;
+        fig.push_point("BON+failover", completed as f64, &bon_f);
+    }
+    Ok(fig)
+}
+
+/// Fig 14 — failover *overhead*: failure-run time minus the failure
+/// timeout budget (§6.3 subtracts the expected timeout wait).
+pub fn fig14(fig13: &Figure) -> Figure {
+    let mut fig = Figure::new(
+        "fig14",
+        "Edge. Failover Overhead.",
+        "completed_nodes",
+        3.0,
+    );
+    // Timeout budget: SAFE waits progress_timeout per failed node; BON
+    // waits one round-2 close timeout. Subtract those from the failover
+    // series to isolate protocol overhead, like the paper (§6.3: "we
+    // subtract the expected failure timeout time ... from the overall
+    // aggregation time").
+    let safe_budget = SAFE_NODE_TIMEOUT.as_secs_f64() * 3.0;
+    let bon_budget = BON_GLOBAL_TIMEOUT.as_secs_f64();
+    for series in &fig13.series {
+        let (label, budget) = match series.label.as_str() {
+            "SAFE+failover" => ("SAFE overhead", safe_budget),
+            "BON+failover" => ("BON overhead", bon_budget),
+            _ => continue,
+        };
+        for p in &series.points {
+            let mut stats = p.stats.clone();
+            stats.mean_secs = (stats.mean_secs - budget).max(0.0);
+            fig.series
+                .iter_mut()
+                .find(|s| s.label == label)
+                .map(|s| s.points.push(super::SeriesPoint { x: p.x, stats: stats.clone() }))
+                .unwrap_or_else(|| {
+                    fig.series.push(super::Series {
+                        label: label.to_string(),
+                        points: vec![super::SeriesPoint { x: p.x, stats }],
+                    })
+                });
+        }
+    }
+    fig
+}
+
+/// Deep-edge node sweep (Figs 15/16): SAFE = pre-negotiated symmetric.
+pub fn deep_edge_nodes(id: &str, title: &str, features: usize) -> Result<Figure> {
+    let repeats = bench_repeats(3);
+    let mut fig = Figure::new(id, title, "nodes", 4.0);
+    let nodes: Vec<usize> = if full_scale() { vec![3, 6, 9, 12] } else { vec![3, 6, 12] };
+    for &n in &nodes {
+        for v in [Variant::Insec, Variant::Saf, Variant::Safe] {
+            let mut cfg = deep_edge_cfg(n, features);
+            if v == Variant::Saf {
+                cfg.mode = CipherMode::None;
+            }
+            let rounds = run_variant(v, cfg, &FaultPlan::none(), repeats)?;
+            fig.push_point(v.label(), n as f64, &rounds);
+        }
+    }
+    Ok(fig)
+}
+
+/// Deep-edge feature sweep (Figs 17/18).
+pub fn deep_edge_features(id: &str, title: &str, n: usize) -> Result<Figure> {
+    let repeats = bench_repeats(3);
+    let mut fig = Figure::new(id, title, "features", 4.0);
+    for &f in &[1usize, 5, 10, 20] {
+        for v in [Variant::Saf, Variant::Safe] {
+            let mut cfg = deep_edge_cfg(n, f);
+            if v == Variant::Saf {
+                cfg.mode = CipherMode::None;
+            }
+            let rounds = run_variant(v, cfg, &FaultPlan::none(), repeats)?;
+            fig.push_point(v.label(), f as f64, &rounds);
+        }
+    }
+    Ok(fig)
+}
+
+/// Subgrouping figures (19/20): 12 deep-edge nodes, 1×12 → 4×3.
+pub fn subgroup_figure(id: &str, title: &str, features: usize) -> Result<Figure> {
+    let repeats = bench_repeats(3);
+    let mut fig = Figure::new(id, title, "groups", 4.0);
+    for groups in [1usize, 2, 3, 4] {
+        let mut cfg = deep_edge_cfg(12, features);
+        cfg.groups = groups;
+        let rounds = run_variant(Variant::Safe, cfg, &FaultPlan::none(), repeats)?;
+        fig.push_point("SAFE", groups as f64, &rounds);
+    }
+    Ok(fig)
+}
+
+/// The headline claim (abstract / §6.3): BON/SAFE time ratios at 24 and
+/// 36 nodes, with and without failover. Returns rows of
+/// (completed_nodes, ratio_no_failover, ratio_failover).
+pub fn headline_ratios(fig13: &Figure) -> Vec<(f64, Option<f64>, Option<f64>)> {
+    let xs: Vec<f64> = fig13
+        .series
+        .first()
+        .map(|s| s.points.iter().map(|p| p.x).collect())
+        .unwrap_or_default();
+    xs.into_iter()
+        .map(|x| {
+            (
+                x,
+                fig13.ratio_at("BON", "SAFE", x),
+                fig13.ratio_at("BON+failover", "SAFE+failover", x),
+            )
+        })
+        .collect()
+}

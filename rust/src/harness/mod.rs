@@ -1,0 +1,223 @@
+//! Benchmark harness (criterion is not in the offline crate cache).
+//!
+//! Runs each condition for a configured number of repeats, reports mean ±
+//! k·σ exactly like the paper's figures (30 repeats / 3σ edge, 5 repeats /
+//! 4σ deep-edge), prints aligned tables to stdout and appends CSV rows to
+//! `bench_out/` for regeneration of every figure.
+
+pub mod figures;
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use crate::metrics::{RepeatStats, RoundMetrics};
+
+/// One measured condition (a point on a paper figure).
+#[derive(Debug, Clone)]
+pub struct SeriesPoint {
+    /// x value (nodes or features).
+    pub x: f64,
+    pub stats: RepeatStats,
+}
+
+/// A labelled line on a figure (e.g. "SAFE", "BON", "INSEC").
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<SeriesPoint>,
+}
+
+/// A whole figure: title + x-axis label + one or more series.
+#[derive(Debug, Clone, Default)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub x_label: String,
+    pub sigma_band: f64,
+    pub series: Vec<Series>,
+}
+
+impl Figure {
+    pub fn new(id: &str, title: &str, x_label: &str, sigma_band: f64) -> Figure {
+        Figure {
+            id: id.to_string(),
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            sigma_band,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push_point(&mut self, label: &str, x: f64, rounds: &[RoundMetrics]) {
+        let stats = RepeatStats::from_rounds(rounds);
+        if let Some(s) = self.series.iter_mut().find(|s| s.label == label) {
+            s.points.push(SeriesPoint { x, stats });
+        } else {
+            self.series.push(Series {
+                label: label.to_string(),
+                points: vec![SeriesPoint { x, stats }],
+            });
+        }
+    }
+
+    /// Render as an aligned text table (the "rows the paper reports").
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "── {} — {} ──", self.id, self.title);
+        let _ = write!(out, "{:>10}", self.x_label);
+        for s in &self.series {
+            let _ = write!(out, "  {:>22}", s.label);
+        }
+        let _ = writeln!(out);
+        // Collect the x values from the longest series.
+        let xs: Vec<f64> = self
+            .series
+            .iter()
+            .max_by_key(|s| s.points.len())
+            .map(|s| s.points.iter().map(|p| p.x).collect())
+            .unwrap_or_default();
+        for x in xs {
+            let _ = write!(out, "{:>10}", x);
+            for s in &self.series {
+                match s.points.iter().find(|p| p.x == x) {
+                    Some(p) => {
+                        let _ = write!(
+                            out,
+                            "  {:>12.4}s ±{:>7.4}",
+                            p.stats.mean_secs,
+                            p.stats.band(self.sigma_band)
+                        );
+                    }
+                    None => {
+                        let _ = write!(out, "  {:>22}", "—");
+                    }
+                }
+            }
+            let _ = writeln!(out);
+        }
+        out
+    }
+
+    /// CSV rows: figure,series,x,mean_secs,stddev_secs,band,mean_messages,repeats
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "figure,series,x,mean_secs,stddev_secs,band,mean_messages,repeats\n",
+        );
+        for s in &self.series {
+            for p in &s.points {
+                let _ = writeln!(
+                    out,
+                    "{},{},{},{:.6},{:.6},{:.6},{:.1},{}",
+                    self.id,
+                    s.label,
+                    p.x,
+                    p.stats.mean_secs,
+                    p.stats.stddev_secs,
+                    p.stats.band(self.sigma_band),
+                    p.stats.mean_messages,
+                    p.stats.repeats
+                );
+            }
+        }
+        out
+    }
+
+    /// Write CSV under `bench_out/<id>.csv` and print the table.
+    pub fn emit(&self, out_dir: Option<&str>) {
+        println!("{}", self.to_table());
+        let dir = PathBuf::from(out_dir.unwrap_or("bench_out"));
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{}.csv", self.id));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+            }
+        }
+    }
+
+    /// Ratio of two series' means at a given x (e.g. BON/SAFE at 36 nodes).
+    pub fn ratio_at(&self, numerator: &str, denominator: &str, x: f64) -> Option<f64> {
+        let get = |label: &str| {
+            self.series
+                .iter()
+                .find(|s| s.label == label)?
+                .points
+                .iter()
+                .find(|p| p.x == x)
+                .map(|p| p.stats.mean_secs)
+        };
+        Some(get(numerator)? / get(denominator)?)
+    }
+}
+
+/// Repeat a round-producing closure `repeats` times.
+pub fn repeat_rounds(
+    repeats: usize,
+    mut f: impl FnMut(usize) -> anyhow::Result<RoundMetrics>,
+) -> anyhow::Result<Vec<RoundMetrics>> {
+    let mut out = Vec::with_capacity(repeats);
+    for i in 0..repeats {
+        out.push(f(i)?);
+    }
+    Ok(out)
+}
+
+/// Bench-wide knobs from the environment so `cargo bench` stays fast by
+/// default but can reproduce the paper's full repeat counts:
+/// `SAFE_BENCH_REPEATS` (default 5), `SAFE_BENCH_FULL=1` (paper scale).
+pub fn bench_repeats(default: usize) -> usize {
+    std::env::var("SAFE_BENCH_REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+pub fn full_scale() -> bool {
+    std::env::var("SAFE_BENCH_FULL").map_or(false, |v| v == "1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn rounds(secs: &[f64]) -> Vec<RoundMetrics> {
+        secs.iter()
+            .map(|&s| RoundMetrics {
+                wall_time: Duration::from_secs_f64(s),
+                messages: 12,
+                bytes_sent: 0,
+                average: vec![],
+                contributors: 3,
+                progress_failovers: 0,
+                initiator_failovers: 0,
+                per_path: Default::default(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn figure_table_and_csv() {
+        let mut fig = Figure::new("fig6", "Edge. BON 1 Feature.", "nodes", 3.0);
+        fig.push_point("SAFE", 3.0, &rounds(&[0.1, 0.12, 0.11]));
+        fig.push_point("SAFE", 5.0, &rounds(&[0.2, 0.21, 0.19]));
+        fig.push_point("BON", 3.0, &rounds(&[0.5, 0.55, 0.52]));
+        let table = fig.to_table();
+        assert!(table.contains("fig6"));
+        assert!(table.contains("SAFE"));
+        assert!(table.contains("BON"));
+        let csv = fig.to_csv();
+        assert_eq!(csv.lines().count(), 4); // header + 3 rows
+        assert!(csv.contains("fig6,SAFE,3,"));
+    }
+
+    #[test]
+    fn ratio_at_works() {
+        let mut fig = Figure::new("f", "t", "nodes", 3.0);
+        fig.push_point("BON", 36.0, &rounds(&[5.6]));
+        fig.push_point("SAFE", 36.0, &rounds(&[0.1]));
+        let r = fig.ratio_at("BON", "SAFE", 36.0).unwrap();
+        assert!((r - 56.0).abs() < 1e-9);
+        assert!(fig.ratio_at("BON", "SAFE", 99.0).is_none());
+    }
+}

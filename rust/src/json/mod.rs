@@ -1,0 +1,566 @@
+//! From-scratch JSON codec — the SAFE wire format.
+//!
+//! The paper's controller is a Flask app exchanging JSON bodies
+//! (`{"from_node": 1, "to_node": 2, "aggregate": "..."}`); we reproduce the
+//! same wire format. `serde`/`serde_json` are not in the offline crate
+//! cache, so this is a complete hand-rolled recursive-descent parser and
+//! serializer covering the full JSON grammar (RFC 8259): objects, arrays,
+//! strings with escapes (incl. `\uXXXX` surrogate pairs), numbers, bools,
+//! null.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Object keys are ordered (BTreeMap) for deterministic
+/// serialization — handy for tests and cache keys.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn obj() -> Value {
+        Value::Obj(BTreeMap::new())
+    }
+
+    /// Build an object from key/value pairs.
+    pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+        let mut m = BTreeMap::new();
+        for (k, v) in pairs {
+            m.insert(k.to_string(), v);
+        }
+        Value::Obj(m)
+    }
+
+    pub fn set(&mut self, key: &str, v: Value) {
+        if let Value::Obj(m) = self {
+            m.insert(key.to_string(), v);
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().and_then(|n| {
+            if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 {
+                Some(n as u64)
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|n| n as usize)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Convenience: `get(key)` then `as_str`.
+    pub fn str_of(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(|v| v.as_str())
+    }
+
+    pub fn u64_of(&self, key: &str) -> Option<u64> {
+        self.get(key).and_then(|v| v.as_u64())
+    }
+
+    pub fn f64_of(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn bool_of(&self, key: &str) -> Option<bool> {
+        self.get(key).and_then(|v| v.as_bool())
+    }
+
+    /// Parse an f64 array field.
+    pub fn f64_arr_of(&self, key: &str) -> Option<Vec<f64>> {
+        let arr = self.get(key)?.as_arr()?;
+        arr.iter().map(|v| v.as_f64()).collect()
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Num(n) => write_num(*n, out),
+            Value::Str(s) => write_str(s, out),
+            Value::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Value::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_str(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl From<Vec<f64>> for Value {
+    fn from(v: Vec<f64>) -> Self {
+        Value::Arr(v.into_iter().map(Value::Num).collect())
+    }
+}
+impl From<&[f64]> for Value {
+    fn from(v: &[f64]) -> Self {
+        Value::Arr(v.iter().copied().map(Value::Num).collect())
+    }
+}
+
+fn write_num(n: f64, out: &mut String) {
+    use std::fmt::Write;
+    if n.is_nan() || n.is_infinite() {
+        // JSON has no NaN/Inf; encode as null like most tolerant encoders.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.007199254740992e15 {
+        // write! straight into the buffer — no per-element String alloc
+        // (hot for the 10k-float average responses; see EXPERIMENTS §Perf).
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        // {:?} on f64 is Rust's shortest round-trippable representation.
+        let _ = write!(out, "{:?}", n);
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    use std::fmt::Write;
+    out.push('"');
+    // Fast path: copy maximal runs of chars that need no escaping in one
+    // push_str (envelope payloads are long base64 strings — per-char
+    // pushes dominated the serializer before this; see EXPERIMENTS §Perf).
+    let bytes = s.as_bytes();
+    let mut start = 0;
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if b == b'"' || b == b'\\' || b < 0x20 {
+            out.push_str(&s[start..i]);
+            match b {
+                b'"' => out.push_str("\\\""),
+                b'\\' => out.push_str("\\\\"),
+                b'\n' => out.push_str("\\n"),
+                b'\r' => out.push_str("\\r"),
+                b'\t' => out.push_str("\\t"),
+                0x08 => out.push_str("\\b"),
+                0x0c => out.push_str("\\f"),
+                c => {
+                    let _ = write!(out, "\\u{:04x}", c);
+                }
+            }
+            i += 1;
+            start = i;
+        } else {
+            i += 1;
+        }
+    }
+    out.push_str(&s[start..]);
+    out.push('"');
+}
+
+/// Parse a JSON document. Trailing whitespace allowed; trailing garbage is
+/// an error.
+pub fn parse(input: &str) -> anyhow::Result<Value> {
+    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.parse_value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        anyhow::bail!("trailing characters at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn bump(&mut self) -> anyhow::Result<u8> {
+        let b = self.peek().ok_or_else(|| anyhow::anyhow!("unexpected end of JSON"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.peek() {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> anyhow::Result<()> {
+        let b = self.bump()?;
+        if b != c {
+            anyhow::bail!("expected {:?} at byte {}, found {:?}", c as char, self.pos - 1, b as char);
+        }
+        Ok(())
+    }
+
+    fn parse_value(&mut self) -> anyhow::Result<Value> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.parse_obj(),
+            Some(b'[') => self.parse_arr(),
+            Some(b'"') => Ok(Value::Str(self.parse_string()?)),
+            Some(b't') => self.parse_lit("true", Value::Bool(true)),
+            Some(b'f') => self.parse_lit("false", Value::Bool(false)),
+            Some(b'n') => self.parse_lit("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.parse_num(),
+            Some(c) => anyhow::bail!("unexpected character {:?} at byte {}", c as char, self.pos),
+            None => anyhow::bail!("unexpected end of JSON"),
+        }
+    }
+
+    fn parse_lit(&mut self, lit: &str, v: Value) -> anyhow::Result<Value> {
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn parse_obj(&mut self) -> anyhow::Result<Value> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.parse_string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.parse_value()?;
+            m.insert(key, val);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b'}' => break,
+                c => anyhow::bail!("expected ',' or '}}' at byte {}, found {:?}", self.pos - 1, c as char),
+            }
+        }
+        Ok(Value::Obj(m))
+    }
+
+    fn parse_arr(&mut self) -> anyhow::Result<Value> {
+        self.expect(b'[')?;
+        let mut a = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Arr(a));
+        }
+        loop {
+            let v = self.parse_value()?;
+            a.push(v);
+            self.skip_ws();
+            match self.bump()? {
+                b',' => continue,
+                b']' => break,
+                c => anyhow::bail!("expected ',' or ']' at byte {}, found {:?}", self.pos - 1, c as char),
+            }
+        }
+        Ok(Value::Arr(a))
+    }
+
+    fn parse_string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut s = String::new();
+        loop {
+            // Fast path: bulk-copy the maximal clean run (no quote,
+            // escape, or control byte). Long base64 payloads take this
+            // branch almost exclusively.
+            let run_start = self.pos;
+            while let Some(&b) = self.bytes.get(self.pos) {
+                if b == b'"' || b == b'\\' || b < 0x20 || b >= 0x80 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            if self.pos > run_start {
+                // ASCII-only run — valid UTF-8 by construction.
+                s.push_str(unsafe {
+                    std::str::from_utf8_unchecked(&self.bytes[run_start..self.pos])
+                });
+            }
+            let b = self.bump()?;
+            match b {
+                b'"' => break,
+                b'\\' => {
+                    let e = self.bump()?;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'b' => s.push('\x08'),
+                        b'f' => s.push('\x0c'),
+                        b'n' => s.push('\n'),
+                        b'r' => s.push('\r'),
+                        b't' => s.push('\t'),
+                        b'u' => {
+                            let cp = self.parse_u4()?;
+                            // Handle UTF-16 surrogate pairs.
+                            if (0xD800..0xDC00).contains(&cp) {
+                                self.expect(b'\\')?;
+                                self.expect(b'u')?;
+                                let lo = self.parse_u4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    anyhow::bail!("invalid low surrogate");
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                s.push(char::from_u32(c).ok_or_else(|| anyhow::anyhow!("bad codepoint"))?);
+                            } else if (0xDC00..0xE000).contains(&cp) {
+                                anyhow::bail!("unexpected low surrogate");
+                            } else {
+                                s.push(char::from_u32(cp).ok_or_else(|| anyhow::anyhow!("bad codepoint"))?);
+                            }
+                        }
+                        c => anyhow::bail!("invalid escape \\{}", c as char),
+                    }
+                }
+                _ => {
+                    // Collect the full UTF-8 sequence starting at pos-1.
+                    let start = self.pos - 1;
+                    let len = utf8_len(b)?;
+                    self.pos = start + len;
+                    if self.pos > self.bytes.len() {
+                        anyhow::bail!("truncated UTF-8 sequence");
+                    }
+                    let chunk = std::str::from_utf8(&self.bytes[start..self.pos])?;
+                    s.push_str(chunk);
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    fn parse_u4(&mut self) -> anyhow::Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let c = self.bump()?;
+            let d = match c {
+                b'0'..=b'9' => (c - b'0') as u32,
+                b'a'..=b'f' => (c - b'a') as u32 + 10,
+                b'A'..=b'F' => (c - b'A') as u32 + 10,
+                _ => anyhow::bail!("invalid \\u escape"),
+            };
+            v = (v << 4) | d;
+        }
+        Ok(v)
+    }
+
+    fn parse_num(&mut self) -> anyhow::Result<Value> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        let n: f64 = text.parse().map_err(|e| anyhow::anyhow!("bad number {:?}: {}", text, e))?;
+        Ok(Value::Num(n))
+    }
+}
+
+fn utf8_len(first: u8) -> anyhow::Result<usize> {
+    match first {
+        0x00..=0x7f => Ok(1),
+        0xc0..=0xdf => Ok(2),
+        0xe0..=0xef => Ok(3),
+        0xf0..=0xf7 => Ok(4),
+        _ => anyhow::bail!("invalid UTF-8 lead byte {:#x}", first),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_basic_types() {
+        assert_eq!(parse("null").unwrap(), Value::Null);
+        assert_eq!(parse("true").unwrap(), Value::Bool(true));
+        assert_eq!(parse("false").unwrap(), Value::Bool(false));
+        assert_eq!(parse("42").unwrap(), Value::Num(42.0));
+        assert_eq!(parse("-3.5e2").unwrap(), Value::Num(-350.0));
+        assert_eq!(parse("\"hi\"").unwrap(), Value::Str("hi".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let v = parse(r#"{"a": [1, 2, {"b": null}], "c": "x"}"#).unwrap();
+        assert_eq!(v.get("c").unwrap().as_str(), Some("x"));
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].get("b"), Some(&Value::Null));
+    }
+
+    #[test]
+    fn roundtrip_compact() {
+        let src = r#"{"agg":"AbC+/=","from_node":1,"to_node":2,"vec":[1,2.5,-3]}"#;
+        let v = parse(src).unwrap();
+        let out = v.to_string();
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#""a\nb\t\"q\"Aé""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nb\t\"q\"Aé"));
+        // Surrogate pair: U+1F600
+        let v = parse(r#""😀""#).unwrap();
+        assert_eq!(v.as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn escape_roundtrip() {
+        let s = "line1\nline2\t\"quoted\" \\slash\\ unicode é 😀 \u{1}";
+        let v = Value::Str(s.to_string());
+        assert_eq!(parse(&v.to_string()).unwrap().as_str(), Some(s));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1,]").is_err());
+        assert!(parse("{\"a\" 1}").is_err());
+        assert!(parse("tru").is_err());
+        assert!(parse("1 2").is_err());
+    }
+
+    #[test]
+    fn big_float_roundtrip() {
+        let n = 1.2345678901234567e-12;
+        let v = Value::Num(n);
+        let parsed = parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.as_f64(), Some(n));
+    }
+
+    #[test]
+    fn f64_vec_field() {
+        let v = Value::object(vec![("average", Value::from(vec![1.0, 2.0, 3.0]))]);
+        assert_eq!(v.f64_arr_of("average").unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Failure injection — how the §6.3 failover experiments kill nodes.
+//!
+//! The paper simulates failure by "complet[ing] the public key exchange
+//! step for all nodes before taking out nodes 4 to 6 in the chain and
+//! starting the aggregation process". [`FailPoint::NeverStart`] is exactly
+//! that; the other points kill a learner mid-protocol to exercise the
+//! harder recovery paths (consumed-then-died, initiator crash).
+
+use std::collections::BTreeMap;
+
+/// Where in its state machine a learner dies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailPoint {
+    /// Completes key exchange, then never participates (paper §6.3).
+    NeverStart,
+    /// Pulls its aggregate from the controller, then dies before adding
+    /// and reposting (mailbox already drained — the hard monitor case).
+    AfterGet,
+    /// Adds its value and posts onward, then dies (still counted as a
+    /// contributor; chain proceeds, node misses the average).
+    AfterPost,
+    /// Initiator-only: posts the masked start, then dies before the
+    /// finalize step (§5.4 — forces initiator failover).
+    InitiatorAfterPost,
+}
+
+/// Which nodes fail and where.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub faults: BTreeMap<u64, FailPoint>,
+}
+
+impl FaultPlan {
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// The §6.3 scenario: nodes 4..=6 (or any range) never start.
+    pub fn kill_range(from: u64, to: u64) -> Self {
+        let mut plan = FaultPlan::default();
+        for n in from..=to {
+            plan.faults.insert(n, FailPoint::NeverStart);
+        }
+        plan
+    }
+
+    pub fn kill(mut self, node: u64, at: FailPoint) -> Self {
+        self.faults.insert(node, at);
+        self
+    }
+
+    pub fn point(&self, node: u64) -> Option<FailPoint> {
+        self.faults.get(&node).copied()
+    }
+
+    pub fn fails_at(&self, node: u64, at: FailPoint) -> bool {
+        self.point(node) == Some(at)
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.faults.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_range_marks_never_start() {
+        let p = FaultPlan::kill_range(4, 6);
+        assert_eq!(p.failed_count(), 3);
+        for n in 4..=6 {
+            assert!(p.fails_at(n, FailPoint::NeverStart));
+        }
+        assert!(p.point(3).is_none());
+    }
+
+    #[test]
+    fn builder_composes() {
+        let p = FaultPlan::none()
+            .kill(1, FailPoint::InitiatorAfterPost)
+            .kill(5, FailPoint::AfterGet);
+        assert!(p.fails_at(1, FailPoint::InitiatorAfterPost));
+        assert!(p.fails_at(5, FailPoint::AfterGet));
+        assert!(!p.fails_at(5, FailPoint::AfterPost));
+    }
+}

@@ -1,0 +1,435 @@
+//! Learner state machines — the client side of the SAFE chain (§5.1–5.4).
+//!
+//! A learner is either the *initiator* (masks its vector with random `R`,
+//! starts the chain, unmasks and publishes the average) or a
+//! *non-initiator* (pull → decrypt → add → re-encrypt → push). Both roles
+//! handle the two failover paths:
+//!
+//! * **progress failover** (§5.3): a `check_aggregate` poll answers
+//!   `repost` → re-encrypt the same aggregate for the node after the
+//!   failed one and post again;
+//! * **initiator failover** (§5.4): the whole-aggregation timeout expires
+//!   → ask `should_initiate`; the first asker becomes the new initiator
+//!   and everyone restarts their steps.
+
+pub mod faults;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::profile::{DeviceProfile, OpKind};
+use crate::crypto::envelope::{CipherMode, Envelope};
+use crate::crypto::rng::SecureRng;
+use crate::crypto::rsa::{RsaKeyPair, RsaPublicKey};
+use crate::crypto::SymmetricKey;
+use crate::json::Value;
+use crate::proto;
+use crate::runtime::vector::VectorMath;
+use crate::transport::ClientTransport;
+use faults::{FailPoint, FaultPlan};
+
+/// Everything one learner needs to participate in aggregations.
+pub struct LearnerContext {
+    pub node: u64,
+    pub group: u64,
+    /// Chain order of this learner's group (node ids).
+    pub chain: Vec<u64>,
+    /// Total learners across all groups (chain.len() < this ⇒ subgroups).
+    pub expected_total_nodes: usize,
+    pub keys: RsaKeyPair,
+    /// Public keys of the peers in this group (fetched in round 0).
+    pub peer_keys: BTreeMap<u64, RsaPublicKey>,
+    /// §5.8 pre-negotiated keys: `send_keys[to]` = key the receiver `to`
+    /// generated for us; `recv_keys[from]` = key we generated for `from`.
+    pub send_keys: BTreeMap<u64, SymmetricKey>,
+    pub recv_keys: BTreeMap<u64, SymmetricKey>,
+    pub mode: CipherMode,
+    pub compress: bool,
+    pub profile: DeviceProfile,
+    pub transport: Arc<dyn ClientTransport>,
+    pub math: Arc<dyn VectorMath>,
+    pub rng: std::sync::Mutex<Box<dyn SecureRng + Send>>,
+    /// Whole-aggregation timeout (→ initiator failover, §5.4).
+    pub aggregation_timeout: Duration,
+    /// §7: constrained devices draw one random seed regardless of feature
+    /// count ("only a single seed is used regardless of the number of
+    /// features aggregated").
+    pub single_seed_mask: bool,
+    /// The initiator configured for round 0 (the chain head).
+    pub initial_initiator: u64,
+    /// §5.9 staggered polling: how long this node holds off before its
+    /// first `get_aggregate` poll ("the nodes at the end of the chain only
+    /// need to engage at the very end of the aggregation").
+    pub stagger_delay: Duration,
+}
+
+/// What a learner reports after an aggregation completes.
+#[derive(Debug, Clone)]
+pub struct LearnerOutcome {
+    pub node: u64,
+    pub average: Vec<f64>,
+    pub was_initiator: bool,
+    /// Times this learner re-posted around a failed successor.
+    pub reposts: u64,
+    /// Initiator-failover restarts this learner went through.
+    pub restarts: u64,
+    /// Contributor count the initiator divided by (0 for non-initiators).
+    pub contributors: u64,
+    /// The learner died at an injected fault point before finishing.
+    pub died: bool,
+}
+
+impl LearnerOutcome {
+    fn dead(node: u64) -> Self {
+        LearnerOutcome {
+            node,
+            average: vec![],
+            was_initiator: false,
+            reposts: 0,
+            restarts: 0,
+            contributors: 0,
+            died: true,
+        }
+    }
+}
+
+impl LearnerContext {
+    fn successor(&self, of: u64) -> u64 {
+        let pos = self.chain.iter().position(|&n| n == of).unwrap_or(0);
+        self.chain[(pos + 1) % self.chain.len()]
+    }
+
+    fn multi_group(&self) -> bool {
+        self.chain.len() < self.expected_total_nodes
+    }
+
+    /// Generate the initiator mask vector (charged to the device profile).
+    fn gen_mask(&self, len: usize) -> Vec<f64> {
+        let mut rng = self.rng.lock().unwrap();
+        if self.single_seed_mask {
+            // Deep-edge: one random draw, replicated (paper §7).
+            self.profile.charge(OpKind::RandomBytes, 8);
+            let r = mask_value(rng.next_u64());
+            vec![r; len]
+        } else {
+            self.profile.charge(OpKind::RandomBytes, len * 8);
+            (0..len).map(|_| mask_value(rng.next_u64())).collect()
+        }
+    }
+
+    /// Seal `vector` for `to`, honouring cipher mode and device profile.
+    fn seal_for(&self, vector: &[f64], to: u64) -> Result<Envelope> {
+        let mut rng = self.rng.lock().unwrap();
+        let payload_bytes = vector.len() * 8;
+        match self.mode {
+            CipherMode::None => {}
+            CipherMode::RsaOnly => {
+                let k = self
+                    .peer_keys
+                    .get(&to)
+                    .map(|p| p.max_block_payload().max(1))
+                    .unwrap_or(1);
+                let blocks = (payload_bytes + k - 1) / k;
+                for _ in 0..blocks {
+                    self.profile.charge(OpKind::RsaPublic, 0);
+                }
+            }
+            CipherMode::Hybrid => {
+                self.profile.charge(OpKind::RsaPublic, 0); // seal the AES key
+                self.profile.charge(OpKind::Aes, payload_bytes);
+            }
+            CipherMode::PreNegotiated => {
+                self.profile.charge(OpKind::Aes, payload_bytes);
+            }
+        }
+        Envelope::seal(
+            vector,
+            self.mode,
+            self.peer_keys.get(&to),
+            self.send_keys.get(&to),
+            self.compress,
+            rng.as_mut(),
+        )
+    }
+
+    /// Open an envelope received from `from`.
+    fn open_from(&self, env: &Envelope, from: u64) -> Result<Vec<f64>> {
+        let payload_bytes = env.body.len();
+        match self.mode {
+            CipherMode::None => {}
+            CipherMode::RsaOnly => {
+                let k = self.keys.public.modulus_len().max(1);
+                let blocks = (payload_bytes + k - 1) / k;
+                for _ in 0..blocks {
+                    self.profile.charge(OpKind::RsaPrivate, 0);
+                }
+            }
+            CipherMode::Hybrid => {
+                self.profile.charge(OpKind::RsaPrivate, 0); // unseal the AES key
+                self.profile.charge(OpKind::Aes, payload_bytes);
+            }
+            CipherMode::PreNegotiated => {
+                self.profile.charge(OpKind::Aes, payload_bytes);
+            }
+        }
+        env.open(Some(&self.keys.private), self.recv_keys.get(&from))
+    }
+
+    fn call(&self, path: &str, body: &Value) -> Result<Value> {
+        self.transport.call(path, body)
+    }
+
+    /// Long-poll wrapper: repeat `path` until status != empty or deadline.
+    fn wait_for(&self, path: &str, body: &Value, deadline: Instant) -> Result<Option<Value>> {
+        loop {
+            let resp = self.call(path, body)?;
+            if !proto::is_empty_status(&resp) {
+                return Ok(Some(resp));
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+        }
+    }
+}
+
+/// Map a u64 to a "large random number" mask: a value in ±2^20 quantized
+/// to 1/1024. Large relative to model weights (which are O(1)), yet small
+/// enough that f64 masking cancels to ≤2^20·ε ≈ 2.3e-10 absolute error.
+pub fn mask_value(raw: u64) -> f64 {
+    let v = (raw >> 33) as i64 - (1i64 << 30);
+    v as f64 / 1024.0
+}
+
+/// Run one learner to completion (possibly across initiator-failover
+/// restarts). `local` is this node's feature-vector contribution.
+pub fn run_learner(
+    ctx: &LearnerContext,
+    local: &[f64],
+    faults: &FaultPlan,
+) -> Result<LearnerOutcome> {
+    if faults.fails_at(ctx.node, FailPoint::NeverStart) {
+        return Ok(LearnerOutcome::dead(ctx.node));
+    }
+    let mut restarts = 0u64;
+    let mut reposts = 0u64;
+    let mut round_id = 0u64;
+    let mut is_initiator = ctx.node == ctx.initial_initiator;
+    // Safety net so a protocol bug can't hang the test suite.
+    let hard_deadline = Instant::now() + ctx.aggregation_timeout * 8 + Duration::from_secs(5);
+
+    loop {
+        if Instant::now() > hard_deadline {
+            bail!("learner {} exceeded hard deadline", ctx.node);
+        }
+        let result = if is_initiator {
+            run_initiator(ctx, local, faults, round_id, &mut reposts)?
+        } else {
+            run_non_initiator(ctx, local, faults, round_id, &mut reposts)?
+        };
+        match result {
+            StepResult::Done { average, contributors } => {
+                return Ok(LearnerOutcome {
+                    node: ctx.node,
+                    average,
+                    was_initiator: is_initiator,
+                    reposts,
+                    restarts,
+                    contributors,
+                    died: false,
+                });
+            }
+            StepResult::Died => return Ok(LearnerOutcome::dead(ctx.node)),
+            StepResult::Restart { elected, new_round } => {
+                restarts += 1;
+                is_initiator = elected;
+                round_id = new_round;
+            }
+        }
+    }
+}
+
+enum StepResult {
+    Done { average: Vec<f64>, contributors: u64 },
+    Died,
+    Restart { elected: bool, new_round: u64 },
+}
+
+/// Ask the controller whether we should take over as initiator (§5.4).
+fn election(ctx: &LearnerContext) -> Result<StepResult> {
+    let resp = ctx.call(proto::SHOULD_INITIATE, &proto::node_op(ctx.node, ctx.group))?;
+    let elected = resp.bool_of("init").unwrap_or(false);
+    let new_round = resp.u64_of("round_id").unwrap_or(0);
+    Ok(StepResult::Restart { elected, new_round })
+}
+
+fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64) -> Result<Value> {
+    let mut body = proto::post_aggregate(ctx.node, to, &env.encode(), ctx.group);
+    body.set("round_id", Value::from(round_id));
+    ctx.call(proto::POST_AGGREGATE, &body)
+}
+
+/// Post to `to`, then watch `check_aggregate(to)` until the chain advances
+/// past it, reposting around failures (§5.3). Returns Ok(false) if the
+/// aggregation deadline passed (→ initiator-failover election).
+fn post_and_watch(
+    ctx: &LearnerContext,
+    vector: &[f64],
+    mut to: u64,
+    round_id: u64,
+    reposts: &mut u64,
+    deadline: Instant,
+) -> Result<bool> {
+    let env = ctx.seal_for(vector, to)?;
+    post_with_round(ctx, to, &env, round_id)?;
+    loop {
+        match ctx.wait_for(proto::CHECK_AGGREGATE, &proto::node_op(to, ctx.group), deadline)? {
+            None => return Ok(false),
+            Some(resp) => match resp.str_of("status") {
+                Some("consumed") => return Ok(true),
+                Some("repost") => {
+                    // §5.3: re-encrypt for the node after the failed one.
+                    let new_target = resp
+                        .u64_of("to_node")
+                        .context("repost response missing to_node")?;
+                    *reposts += 1;
+                    let env = ctx.seal_for(vector, new_target)?;
+                    post_with_round(ctx, new_target, &env, round_id)?;
+                    to = new_target;
+                }
+                other => bail!("unexpected check_aggregate status {:?}", other),
+            },
+        }
+    }
+}
+
+fn run_initiator(
+    ctx: &LearnerContext,
+    local: &[f64],
+    faults: &FaultPlan,
+    round_id: u64,
+    reposts: &mut u64,
+) -> Result<StepResult> {
+    let deadline = Instant::now() + ctx.aggregation_timeout;
+    // 1. Mask the local vector with the big random number R (§5.1.1).
+    let mask = ctx.gen_mask(local.len());
+    let masked = ctx.math.mask(local, &mask);
+    // 2. Encrypt for the next node in the chain and post.
+    let next = ctx.successor(ctx.node);
+    if !post_and_watch(ctx, &masked, next, round_id, reposts, deadline)? {
+        return election(ctx);
+    }
+    if faults.fails_at(ctx.node, FailPoint::InitiatorAfterPost) {
+        return Ok(StepResult::Died);
+    }
+    // 3. Wait for the final aggregate from the last node in the chain.
+    let resp =
+        match ctx.wait_for(proto::GET_AGGREGATE, &proto::node_op(ctx.node, ctx.group), deadline)? {
+            Some(r) => r,
+            None => return election(ctx),
+        };
+    let agg_str = resp.str_of("aggregate").context("missing aggregate")?;
+    let contributors = resp.u64_of("posted").unwrap_or(ctx.chain.len() as u64);
+    let from = resp.u64_of("from_node").unwrap_or(0);
+    let env = Envelope::decode(agg_str)?;
+    let agg = ctx.open_from(&env, from)?;
+    // 4. Unmask, divide by the contributor count the controller reported
+    //    (n, or n−f after progress failovers), publish (§5.1.1, §5.3).
+    let average = ctx.math.finalize(&agg, &mask, contributors as f64);
+    ctx.call(
+        proto::POST_AVERAGE,
+        &proto::post_average(ctx.node, ctx.group, &average, contributors),
+    )?;
+    // With subgroups the initiator also pulls the global cross-group
+    // average (§5.5 — the "+g" message in the formula).
+    let final_avg = if ctx.multi_group() {
+        match ctx.wait_for(proto::GET_AVERAGE, &proto::node_op(ctx.node, ctx.group), deadline)? {
+            Some(r) => r.f64_arr_of("average").context("missing average")?,
+            None => return election(ctx),
+        }
+    } else {
+        average
+    };
+    Ok(StepResult::Done { average: final_avg, contributors })
+}
+
+fn run_non_initiator(
+    ctx: &LearnerContext,
+    local: &[f64],
+    faults: &FaultPlan,
+    round_id: u64,
+    reposts: &mut u64,
+) -> Result<StepResult> {
+    let deadline = Instant::now() + ctx.aggregation_timeout;
+    // §5.9: hold off engaging the controller until roughly our turn,
+    // keeping the concurrent long-poll count low.
+    if !ctx.stagger_delay.is_zero() {
+        std::thread::sleep(ctx.stagger_delay);
+    }
+    // 1. Wait for the previous node's aggregate (§5.1.2).
+    let resp =
+        match ctx.wait_for(proto::GET_AGGREGATE, &proto::node_op(ctx.node, ctx.group), deadline)? {
+            Some(r) => r,
+            None => return election(ctx),
+        };
+    if faults.fails_at(ctx.node, FailPoint::AfterGet) {
+        return Ok(StepResult::Died);
+    }
+    let agg_str = resp.str_of("aggregate").context("missing aggregate")?;
+    let from = resp.u64_of("from_node").unwrap_or(0);
+    let msg_round = resp.u64_of("round_id").unwrap_or(round_id);
+    let env = Envelope::decode(agg_str)?;
+    let mut agg = ctx.open_from(&env, from)?;
+    // 2. Add the local vector, re-encrypt for our successor, post, watch.
+    ctx.math.add_assign(&mut agg, local);
+    let next = ctx.successor(ctx.node);
+    if !post_and_watch(ctx, &agg, next, msg_round, reposts, deadline)? {
+        return election(ctx);
+    }
+    if faults.fails_at(ctx.node, FailPoint::AfterPost) {
+        return Ok(StepResult::Died);
+    }
+    // 3. Wait for the published average (§5.1.2 step 4).
+    match ctx.wait_for(proto::GET_AVERAGE, &proto::node_op(ctx.node, ctx.group), deadline)? {
+        Some(r) => {
+            let avg = r.f64_arr_of("average").context("missing average")?;
+            Ok(StepResult::Done { average: avg, contributors: 0 })
+        }
+        None => election(ctx),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_values_are_large_and_quantized() {
+        let mut rng = crate::crypto::DeterministicRng::seed(1);
+        let mut seen_large = false;
+        for _ in 0..100 {
+            let m = mask_value(rng.next_u64());
+            assert!(m.abs() <= (1u64 << 20) as f64 + 1.0);
+            // Quantized to 1/1024 → multiplying by 1024 gives an integer.
+            assert_eq!((m * 1024.0).fract(), 0.0);
+            if m.abs() > 1000.0 {
+                seen_large = true;
+            }
+        }
+        assert!(seen_large, "masks should usually dwarf O(1) weights");
+    }
+
+    #[test]
+    fn mask_cancels_to_tiny_error() {
+        let mut rng = crate::crypto::DeterministicRng::seed(2);
+        for _ in 0..1000 {
+            let m = mask_value(rng.next_u64());
+            let x = 0.123456789;
+            let err = ((x + m) - m - x).abs();
+            assert!(err < 1e-9, "err={}", err);
+        }
+    }
+}

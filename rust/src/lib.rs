@@ -1,0 +1,46 @@
+//! # SAFE: Secure Aggregation with Failover and Encryption
+//!
+//! Full-system reproduction of Sandholm, Mukherjee & Huberman (2021),
+//! "SAFE: Secure Aggregation with Failover and Encryption" (CableLabs).
+//!
+//! SAFE organizes federated-learning participants in an ordered circular
+//! chain. An *initiator* masks its local feature vector with a large random
+//! number, encrypts it with the next node's public key and posts it to a
+//! *controller* that acts as a mere message broker. Each *non-initiator*
+//! decrypts, adds its local vector, re-encrypts for the next node, and posts.
+//! The initiator finally unmasks and publishes the average. Failures are
+//! handled by an external *progress monitor* (chain re-routing) and an
+//! aggregation timeout (initiator re-election).
+//!
+//! The crate is a three-layer system:
+//!  * **L3 (this crate)** — the coordination contribution: controller broker,
+//!    learner state machines, progress monitor, subgrouping, hierarchical
+//!    federation, failover, plus the INSEC and BON (Bonawitz et al. 2017)
+//!    baselines and every substrate they need (JSON codec, HTTP transport,
+//!    bignum RSA, Shamir sharing, Diffie-Hellman, PRG).
+//!  * **L2 (python/compile/model.py)** — JAX compute graphs for learner-local
+//!    training and the aggregation vector math, AOT-lowered to HLO text.
+//!  * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!    hot-spots, lowered inside the L2 graphs (interpret mode on CPU).
+//!
+//! Python never runs on the aggregation path: `rust/src/runtime` loads the
+//! AOT artifacts through PJRT and executes them from Rust.
+
+pub mod util;
+pub mod json;
+pub mod crypto;
+pub mod transport;
+pub mod proto;
+pub mod controller;
+pub mod learner;
+pub mod monitor;
+pub mod protocols;
+pub mod runtime;
+pub mod fl;
+pub mod metrics;
+pub mod config;
+pub mod harness;
+pub mod testkit;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,213 @@
+//! `safe` — the SAFE secure-aggregation CLI / launcher.
+//!
+//! Subcommands:
+//!   controller  — serve the controller over HTTP
+//!   run         — run one SAFE aggregation round in-process, print metrics
+//!   insec       — same for the INSEC baseline
+//!   bon         — same for the BON (Bonawitz) baseline
+//!   train       — federated training with SAFE aggregation (E19)
+//!   help        — this text
+
+use std::sync::Arc;
+
+use safe_agg::config::{Args, SessionConfig};
+use safe_agg::controller::{Controller, ControllerConfig};
+use safe_agg::fl::{self, FlConfig};
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::protocols::bon::BonSession;
+use safe_agg::protocols::insec::InsecSession;
+use safe_agg::protocols::SafeSession;
+use safe_agg::transport::http::HttpServer;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "controller" => cmd_controller(&args),
+        "run" => cmd_run(&args),
+        "insec" => cmd_insec(&args),
+        "bon" => cmd_bon(&args),
+        "train" => cmd_train(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "safe — SAFE: Secure Aggregation with Failover and Encryption\n\
+         \n\
+         USAGE: safe <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+           controller --listen ADDR       serve the controller over HTTP\n\
+           run     --nodes N --features F --mode saf|safe|rsa|preneg\n\
+                   [--groups G] [--profile edge|deep-edge] [--weighted]\n\
+                   [--fail-from A --fail-to B] [--engine native|xla|auto]\n\
+           insec   --nodes N --features F   INSEC baseline round\n\
+           bon     --nodes N --features F   BON (Bonawitz) baseline round\n\
+           train   --nodes N --rounds R [--local-steps S] [--lr LR]\n\
+                   federated training with SAFE aggregation each round\n"
+    );
+}
+
+fn cmd_controller(args: &Args) -> i32 {
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7464");
+    let ctrl = Arc::new(Controller::new(ControllerConfig::default()));
+    match HttpServer::start(listen, ctrl) {
+        Ok(server) => {
+            println!("controller listening on {}", server.url());
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Err(e) => {
+            eprintln!("failed to start controller: {e:#}");
+            1
+        }
+    }
+}
+
+fn inputs_for(cfg: &SessionConfig) -> Vec<Vec<f64>> {
+    (0..cfg.n_nodes)
+        .map(|i| {
+            (0..cfg.wire_features())
+                .map(|f| (i + 1) as f64 + 0.01 * f as f64)
+                .collect()
+        })
+        .collect()
+}
+
+fn faults_from(args: &Args) -> FaultPlan {
+    match (args.get("fail-from"), args.get("fail-to")) {
+        (Some(a), Some(b)) => {
+            FaultPlan::kill_range(a.parse().unwrap_or(0), b.parse().unwrap_or(0))
+        }
+        _ => FaultPlan::none(),
+    }
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let cfg = args.to_session_config();
+    let faults = faults_from(args);
+    println!(
+        "SAFE round: {} nodes × {} features, mode={}, groups={}, profile={}",
+        cfg.n_nodes,
+        cfg.features,
+        cfg.mode.name(),
+        cfg.groups,
+        cfg.profile.name
+    );
+    match SafeSession::new(cfg.clone()).and_then(|s| s.run_round(&inputs_for(&cfg), &faults)) {
+        Ok(result) => {
+            let m = &result.metrics;
+            println!(
+                "ok: {:.4}s, {} messages ({} bytes), contributors={}, \
+                 progress_failovers={}, initiator_failovers={}",
+                m.secs(),
+                m.messages,
+                m.bytes_sent,
+                m.contributors,
+                m.progress_failovers,
+                m.initiator_failovers
+            );
+            println!(
+                "average[0..{}] = {:?}",
+                m.average.len().min(4),
+                &m.average[..m.average.len().min(4)]
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("SAFE round failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_insec(args: &Args) -> i32 {
+    let cfg = args.to_session_config();
+    match InsecSession::new(cfg.clone())
+        .and_then(|s| s.run_round(&inputs_for(&cfg), &faults_from(args)))
+    {
+        Ok(m) => {
+            println!(
+                "INSEC: {:.4}s, {} messages, contributors={}",
+                m.secs(),
+                m.messages,
+                m.contributors
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("INSEC round failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_bon(args: &Args) -> i32 {
+    let cfg = args.to_session_config();
+    match BonSession::new(cfg.clone())
+        .and_then(|s| s.run_round(&inputs_for(&cfg), &faults_from(args)))
+    {
+        Ok(m) => {
+            println!(
+                "BON: {:.4}s, {} messages, contributors={}",
+                m.secs(),
+                m.messages,
+                m.contributors
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("BON round failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let mut cfg = args.to_session_config();
+    cfg.n_nodes = args.get_usize("nodes", 4);
+    let fl_cfg = FlConfig {
+        rounds: args.get_usize("rounds", 20),
+        local_steps: args.get_usize("local-steps", 4),
+        lr: args.get("lr").and_then(|v| v.parse().ok()).unwrap_or(0.05),
+        seed: args.get_u64("seed", 42),
+        ..Default::default()
+    };
+    let trainer = match fl::default_trainer() {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trainer init failed: {e:#}");
+            return 1;
+        }
+    };
+    println!(
+        "federated training: {} nodes, {} rounds, trainer={}",
+        cfg.n_nodes,
+        fl_cfg.rounds,
+        trainer.name()
+    );
+    match fl::run_federated(&cfg, &fl_cfg, trainer) {
+        Ok(result) => {
+            println!("round,val_loss,mean_local_loss,agg_secs,agg_messages");
+            for r in &result.curve {
+                println!(
+                    "{},{:.5},{:.5},{:.4},{}",
+                    r.round, r.val_loss, r.mean_local_loss, r.agg_wall_secs, r.agg_messages
+                );
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("federated training failed: {e:#}");
+            1
+        }
+    }
+}

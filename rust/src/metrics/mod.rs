@@ -1,0 +1,94 @@
+//! Metrics: what every run reports — aggregation wall time, message
+//! counts (to verify the paper's `4n`-family formulas), bytes moved, and
+//! failure bookkeeping.
+
+use std::time::Duration;
+
+/// Result of one aggregation round as observed by the session driver.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    /// Wall time from round start to every node holding the average.
+    pub wall_time: Duration,
+    /// Logical protocol messages (one REST call = one message, as in §5.2).
+    pub messages: u64,
+    /// Request-body bytes sent by all learners.
+    pub bytes_sent: u64,
+    /// The final average every node received.
+    pub average: Vec<f64>,
+    /// Distinct nodes whose values are in the average.
+    pub contributors: u64,
+    /// Progress failovers that occurred (f in `4n + 2f`).
+    pub progress_failovers: u64,
+    /// Initiator failovers that occurred (i in `(i+1)(4n+2f+in)`).
+    pub initiator_failovers: u64,
+    /// Messages by path (for the message-accounting tests).
+    pub per_path: std::collections::BTreeMap<String, u64>,
+}
+
+impl RoundMetrics {
+    pub fn secs(&self) -> f64 {
+        self.wall_time.as_secs_f64()
+    }
+}
+
+/// Aggregated statistics over repeated rounds (the paper plots mean with
+/// 3σ/4σ bands over 30/5 repeats).
+#[derive(Debug, Clone)]
+pub struct RepeatStats {
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub mean_messages: f64,
+    pub repeats: usize,
+}
+
+impl RepeatStats {
+    pub fn from_rounds(rounds: &[RoundMetrics]) -> RepeatStats {
+        let secs: Vec<f64> = rounds.iter().map(|r| r.secs()).collect();
+        let msgs: Vec<f64> = rounds.iter().map(|r| r.messages as f64).collect();
+        RepeatStats {
+            mean_secs: crate::util::mean(&secs),
+            stddev_secs: crate::util::stddev(&secs),
+            min_secs: secs.iter().copied().fold(f64::INFINITY, f64::min),
+            max_secs: secs.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            mean_messages: crate::util::mean(&msgs),
+            repeats: rounds.len(),
+        }
+    }
+
+    /// `k`-sigma band half-width (the paper displays 3σ edge / 4σ deep).
+    pub fn band(&self, k: f64) -> f64 {
+        self.stddev_secs * k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rm(secs: f64, msgs: u64) -> RoundMetrics {
+        RoundMetrics {
+            wall_time: Duration::from_secs_f64(secs),
+            messages: msgs,
+            bytes_sent: 0,
+            average: vec![],
+            contributors: 0,
+            progress_failovers: 0,
+            initiator_failovers: 0,
+            per_path: Default::default(),
+        }
+    }
+
+    #[test]
+    fn repeat_stats_basics() {
+        let rounds = vec![rm(1.0, 12), rm(2.0, 12), rm(3.0, 12)];
+        let s = RepeatStats::from_rounds(&rounds);
+        assert_eq!(s.mean_secs, 2.0);
+        assert_eq!(s.min_secs, 1.0);
+        assert_eq!(s.max_secs, 3.0);
+        assert_eq!(s.mean_messages, 12.0);
+        assert_eq!(s.repeats, 3);
+        assert!(s.band(3.0) > s.band(1.0));
+    }
+}

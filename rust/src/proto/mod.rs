@@ -1,0 +1,104 @@
+//! Wire protocol: REST paths and JSON body builders.
+//!
+//! One place that defines every operation name in the system, mirroring the
+//! paper's controller API (§5.1.3 + Appendix A) plus the key-registry,
+//! pre-negotiation (§5.8), INSEC and BON baseline endpoints.
+
+use crate::json::Value;
+
+// ---- SAFE controller ops (paper §5.1.3 / Appendix A) ----
+pub const POST_AGGREGATE: &str = "/post_aggregate";
+pub const CHECK_AGGREGATE: &str = "/check_aggregate";
+pub const GET_AGGREGATE: &str = "/get_aggregate";
+pub const POST_AVERAGE: &str = "/post_average";
+pub const GET_AVERAGE: &str = "/get_average";
+pub const SHOULD_INITIATE: &str = "/should_initiate";
+
+// ---- key management (§5.1 Round 0, §5.8) ----
+pub const REGISTER_KEY: &str = "/register_key";
+pub const GET_KEY: &str = "/get_key";
+pub const POST_PRENEG_KEYS: &str = "/post_preneg_keys";
+pub const GET_PRENEG_KEY: &str = "/get_preneg_key";
+
+// ---- session management ----
+pub const CONFIGURE: &str = "/configure";
+pub const RESET: &str = "/reset";
+pub const PROGRESS_CHECK: &str = "/progress_check";
+pub const STATUS: &str = "/status";
+
+// ---- INSEC baseline ----
+pub const INSEC_POST: &str = "/insec/post";
+pub const INSEC_GET_AVERAGE: &str = "/insec/get_average";
+
+// ---- BON (Bonawitz et al. 2017) baseline ----
+pub const BON_ADVERTISE: &str = "/bon/advertise";
+pub const BON_GET_KEYS: &str = "/bon/get_keys";
+pub const BON_POST_SHARES: &str = "/bon/post_shares";
+pub const BON_GET_SHARES: &str = "/bon/get_shares";
+pub const BON_POST_MASKED: &str = "/bon/post_masked";
+pub const BON_GET_SURVIVORS: &str = "/bon/get_survivors";
+pub const BON_POST_UNMASK: &str = "/bon/post_unmask";
+pub const BON_GET_AVERAGE: &str = "/bon/get_average";
+
+// ---- hierarchical federation (§5.10) ----
+pub const FED_POST_CHILD_AVERAGE: &str = "/fed/post_child_average";
+pub const FED_GET_GLOBAL_AVERAGE: &str = "/fed/get_global_average";
+
+/// Body for `post_aggregate(from, to, aggregate)`.
+pub fn post_aggregate(from_node: u64, to_node: u64, aggregate: &str, group: u64) -> Value {
+    Value::object(vec![
+        ("from_node", Value::from(from_node)),
+        ("to_node", Value::from(to_node)),
+        ("aggregate", Value::from(aggregate)),
+        ("group", Value::from(group)),
+    ])
+}
+
+/// Body for the node-scoped polling ops (`check_aggregate`, `get_aggregate`,
+/// `get_average`, `should_initiate`).
+pub fn node_op(node: u64, group: u64) -> Value {
+    Value::object(vec![("node", Value::from(node)), ("group", Value::from(group))])
+}
+
+pub fn post_average(node: u64, group: u64, average: &[f64], contributors: u64) -> Value {
+    Value::object(vec![
+        ("node", Value::from(node)),
+        ("group", Value::from(group)),
+        ("average", Value::from(average)),
+        ("contributors", Value::from(contributors)),
+    ])
+}
+
+/// Response helpers.
+pub fn status(s: &str) -> Value {
+    Value::object(vec![("status", Value::from(s))])
+}
+
+pub fn is_empty_status(v: &Value) -> bool {
+    v.str_of("status") == Some("empty")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bodies_have_expected_fields() {
+        let b = post_aggregate(1, 2, "safe:k:b", 1);
+        assert_eq!(b.u64_of("from_node"), Some(1));
+        assert_eq!(b.u64_of("to_node"), Some(2));
+        assert_eq!(b.str_of("aggregate"), Some("safe:k:b"));
+        let n = node_op(7, 2);
+        assert_eq!(n.u64_of("node"), Some(7));
+        assert_eq!(n.u64_of("group"), Some(2));
+        let a = post_average(1, 1, &[1.5, 2.5], 3);
+        assert_eq!(a.f64_arr_of("average").unwrap(), vec![1.5, 2.5]);
+        assert_eq!(a.u64_of("contributors"), Some(3));
+    }
+
+    #[test]
+    fn status_helpers() {
+        assert!(is_empty_status(&status("empty")));
+        assert!(!is_empty_status(&status("consumed")));
+    }
+}

@@ -1,0 +1,364 @@
+//! BON baseline, client side — the full Bonawitz et al. 2017 protocol
+//! (see `controller::bon` for the server half and the round summary).
+//!
+//! Per client u:
+//!  * Round 0: generate DH keypairs (c_u, s_u); advertise both publics.
+//!  * Round 1: draw self-mask seed b_u; Shamir-share b_u and s_u^SK with
+//!    threshold t among all n peers; seal each peer's share pair with the
+//!    pairwise channel key KDF(c_u^SK · c_v^PK); route through the server.
+//!  * Round 2: post y_u = x_u + PRG(b_u) + Σ_{u<v} PRG(s_{u,v})
+//!    − Σ_{v<u} PRG(s_{u,v}).
+//!  * Round 3: learn the survivor set; reveal b-shares of survivors and
+//!    s^SK-shares of dropped nodes; poll the unmasked average.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{SessionConfig, TransportKind};
+use crate::controller::bon::pairwise_seed;
+use crate::controller::{Controller, ControllerConfig};
+use crate::crypto::bigint::BigUint;
+use crate::crypto::dh::{DhGroup, DhKeyPair};
+use crate::crypto::rng::{prg_expand_f64, DeterministicRng, SecureRng, SystemRng};
+use crate::crypto::shamir;
+use crate::crypto::SymmetricKey;
+use crate::json::Value;
+use crate::learner::faults::FaultPlan;
+use crate::metrics::RoundMetrics;
+use crate::proto;
+use crate::transport::{ClientTransport, InProcTransport, MessageStats};
+use crate::util::{b64_decode, b64_encode, Stopwatch};
+
+pub struct BonSession {
+    pub cfg: SessionConfig,
+    pub controller: Arc<Controller>,
+    stats: Arc<MessageStats>,
+    group: DhGroup,
+}
+
+impl BonSession {
+    pub fn new(cfg: SessionConfig) -> Result<BonSession> {
+        if !matches!(cfg.transport, TransportKind::InProc) {
+            bail!("BonSession currently drives the in-proc transport only");
+        }
+        let controller = Arc::new(Controller::new(ControllerConfig {
+            poll_time: cfg.poll_time,
+            bon_round2_timeout: cfg.progress_timeout,
+            ..Default::default()
+        }));
+        let stats = Arc::new(MessageStats::default());
+        Ok(BonSession { cfg, controller, stats, group: DhGroup::standard() })
+    }
+
+    fn transport(&self) -> Arc<dyn ClientTransport> {
+        Arc::new(InProcTransport::with_costs(
+            self.controller.clone(),
+            self.stats.clone(),
+            self.cfg.profile.network_hop,
+            self.cfg.profile.network_per_kib,
+        ))
+    }
+
+    pub fn run_round(&self, inputs: &[Vec<f64>], faults: &FaultPlan) -> Result<RoundMetrics> {
+        if inputs.len() != self.cfg.n_nodes {
+            bail!("need {} inputs", self.cfg.n_nodes);
+        }
+        let n = self.cfg.n_nodes as u64;
+        // Configure expected participant set.
+        let setup = self.transport();
+        setup.call(
+            proto::CONFIGURE,
+            &Value::object(vec![
+                (
+                    "bon_nodes",
+                    Value::Arr((1..=n).map(Value::from).collect()),
+                ),
+                (
+                    "bon_round2_timeout_ms",
+                    Value::from(self.cfg.progress_timeout.as_millis() as u64),
+                ),
+            ]),
+        )?;
+        let threshold = (2 * self.cfg.n_nodes + 2) / 3;
+
+        let baseline = self.stats.total();
+        let baseline_bytes = self.stats.bytes();
+        let watch = Stopwatch::start();
+        let mut handles = Vec::new();
+        for node in 1..=n {
+            // A node that "fails" in BON completes the share distribution
+            // (round 1) but never posts its masked input — the §6.3
+            // dropout scenario that triggers mask recovery. NeverStart
+            // nodes behave that way too: in BON there is no chain, so the
+            // first three rounds are the key exchange being normalized
+            // away; dying before round 2 is the comparable failure.
+            let dies_before_round2 = faults.point(node).is_some();
+            let transport = self.transport();
+            let x = inputs[(node - 1) as usize].clone();
+            let group = self.group.clone();
+            let seed = self.cfg.seed;
+            let poll_budget = self.cfg.aggregation_timeout;
+            handles.push(std::thread::spawn(move || -> Result<Option<Vec<f64>>> {
+                bon_client(
+                    node,
+                    n,
+                    threshold,
+                    &x,
+                    &group,
+                    seed,
+                    transport,
+                    dies_before_round2,
+                    poll_budget,
+                )
+            }));
+        }
+        let mut averages = Vec::new();
+        for h in handles {
+            if let Some(avg) = h.join().map_err(|_| anyhow::anyhow!("bon node panicked"))?? {
+                averages.push(avg);
+            }
+        }
+        let wall_time = watch.elapsed();
+        if averages.is_empty() {
+            bail!("no surviving BON participants");
+        }
+        let reference = averages[0].clone();
+        for a in &averages[1..] {
+            for (x, y) in a.iter().zip(&reference) {
+                if (x - y).abs() > 1e-9 {
+                    bail!("BON participants disagree on the average");
+                }
+            }
+        }
+        Ok(RoundMetrics {
+            wall_time,
+            messages: self.stats.total() - baseline,
+            bytes_sent: self.stats.bytes() - baseline_bytes,
+            average: reference,
+            contributors: averages.len() as u64,
+            progress_failovers: faults.failed_count() as u64,
+            initiator_failovers: 0,
+            per_path: Default::default(),
+        })
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn bon_client(
+    node: u64,
+    n: u64,
+    threshold: usize,
+    x: &[f64],
+    group: &DhGroup,
+    seed: Option<u64>,
+    transport: Arc<dyn ClientTransport>,
+    dies_before_round2: bool,
+    poll_budget: Duration,
+) -> Result<Option<Vec<f64>>> {
+    let mut rng: Box<dyn SecureRng + Send> = match seed {
+        Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(node * 65537))),
+        None => Box::new(SystemRng::new()),
+    };
+    let deadline = std::time::Instant::now() + poll_budget;
+    let wait = |path: &str, body: &Value| -> Result<Value> {
+        loop {
+            let resp = transport.call(path, body)?;
+            if !proto::is_empty_status(&resp) {
+                return Ok(resp);
+            }
+            if std::time::Instant::now() > deadline {
+                bail!("BON node {node} timed out waiting on {path}");
+            }
+        }
+    };
+
+    // ---- Round 0: advertise DH public keys ----
+    let c_pair = DhKeyPair::generate(group, rng.as_mut());
+    let s_pair = DhKeyPair::generate(group, rng.as_mut());
+    transport.call(
+        proto::BON_ADVERTISE,
+        &Value::object(vec![
+            ("node", Value::from(node)),
+            ("cpk", Value::from(c_pair.public.to_hex())),
+            ("spk", Value::from(s_pair.public.to_hex())),
+        ]),
+    )?;
+    let keys_resp = wait(proto::BON_GET_KEYS, &Value::object(vec![("node", Value::from(node))]))?;
+    let keys_obj = keys_resp.get("keys").context("missing keys")?;
+    let mut peer_cpk = BTreeMap::new();
+    let mut peer_spk = BTreeMap::new();
+    for v in 1..=n {
+        if v == node {
+            continue;
+        }
+        let entry = keys_obj.get(&v.to_string()).context("peer keys missing")?;
+        peer_cpk.insert(v, BigUint::from_hex(entry.str_of("cpk").context("cpk")?)?);
+        peer_spk.insert(v, BigUint::from_hex(entry.str_of("spk").context("spk")?)?);
+    }
+
+    // ---- Round 1: Shamir-share b_u and s_u^SK to every peer ----
+    let mut b_seed = [0u8; 32];
+    rng.fill_bytes(&mut b_seed);
+    let xs: Vec<u64> = (1..=n).collect();
+    let b_shares = shamir::share_secret(&b_seed, threshold, &xs, rng.as_mut())?;
+    let s_sk_bytes = s_pair.secret.to_bytes_be();
+    let s_shares = shamir::share_secret(&s_sk_bytes, threshold, &xs, rng.as_mut())?;
+    let mut shares_obj = Value::obj();
+    for v in 1..=n {
+        if v == node {
+            continue;
+        }
+        // Pairwise channel key: KDF(c_v^PK ^ c_u^SK).
+        let chan = c_pair.agree(group, &peer_cpk[&v]);
+        let key = SymmetricKey::from_bytes(&chan)?;
+        let payload = Value::object(vec![
+            ("b", b_shares[(v - 1) as usize].to_json()),
+            ("s", s_shares[(v - 1) as usize].to_json()),
+        ])
+        .to_string();
+        let sealed = key.seal(payload.as_bytes(), rng.as_mut());
+        shares_obj.set(&v.to_string(), Value::from(b64_encode(&sealed)));
+    }
+    transport.call(
+        proto::BON_POST_SHARES,
+        &Value::object(vec![("node", Value::from(node)), ("shares", shares_obj)]),
+    )?;
+    let got =
+        wait(proto::BON_GET_SHARES, &Value::object(vec![("node", Value::from(node))]))?;
+    let shares_in = got.get("shares").context("missing shares")?;
+    // Decrypt & store the shares peers sent us (for round 3 reveals).
+    let mut held_b: BTreeMap<u64, shamir::Share> = BTreeMap::new();
+    let mut held_s: BTreeMap<u64, shamir::Share> = BTreeMap::new();
+    // Our own shares of our own secrets (index node-1):
+    held_b.insert(node, b_shares[(node - 1) as usize].clone());
+    held_s.insert(node, s_shares[(node - 1) as usize].clone());
+    for v in 1..=n {
+        if v == node {
+            continue;
+        }
+        let Some(blob_b64) = shares_in.str_of(&v.to_string()) else { continue };
+        let chan = c_pair.agree(group, &peer_cpk[&v]);
+        let key = SymmetricKey::from_bytes(&chan)?;
+        let opened = key.open(&b64_decode(blob_b64)?)?;
+        let payload = crate::json::parse(std::str::from_utf8(&opened)?)?;
+        held_b.insert(v, shamir::Share::from_json(payload.get("b").context("b share")?)?);
+        held_s.insert(v, shamir::Share::from_json(payload.get("s").context("s share")?)?);
+    }
+
+    if dies_before_round2 {
+        return Ok(None);
+    }
+
+    // ---- Round 2: masked input ----
+    let feat = x.len();
+    let mut y = x.to_vec();
+    let self_mask = prg_expand_f64(&b_seed, feat);
+    for (a, m) in y.iter_mut().zip(&self_mask) {
+        *a += m;
+    }
+    for v in 1..=n {
+        if v == node {
+            continue;
+        }
+        let shared = peer_spk[&v].modpow(&s_pair.secret, &group.p);
+        let seed = pairwise_seed(&shared);
+        let mask = prg_expand_f64(&seed, feat);
+        if node < v {
+            for (a, m) in y.iter_mut().zip(&mask) {
+                *a += m;
+            }
+        } else {
+            for (a, m) in y.iter_mut().zip(&mask) {
+                *a -= m;
+            }
+        }
+    }
+    transport.call(
+        proto::BON_POST_MASKED,
+        &Value::object(vec![("node", Value::from(node)), ("y", Value::from(&y[..]))]),
+    )?;
+
+    // ---- Round 3: unmasking ----
+    let surv = wait(proto::BON_GET_SURVIVORS, &Value::object(vec![("node", Value::from(node))]))?;
+    let survivors: Vec<u64> = surv
+        .get("survivors")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_u64()).collect())
+        .unwrap_or_default();
+    let dropped: Vec<u64> = surv
+        .get("dropped")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|v| v.as_u64()).collect())
+        .unwrap_or_default();
+    let mut b_obj = Value::obj();
+    for u in &survivors {
+        if let Some(share) = held_b.get(u) {
+            b_obj.set(&u.to_string(), share.to_json());
+        }
+    }
+    let mut s_obj = Value::obj();
+    for d in &dropped {
+        if let Some(share) = held_s.get(d) {
+            s_obj.set(&d.to_string(), share.to_json());
+        }
+    }
+    transport.call(
+        proto::BON_POST_UNMASK,
+        &Value::object(vec![
+            ("node", Value::from(node)),
+            ("b_shares", b_obj),
+            ("s_shares", s_obj),
+        ]),
+    )?;
+    let avg = wait(proto::BON_GET_AVERAGE, &Value::object(vec![("node", Value::from(node))]))?;
+    Ok(Some(avg.f64_arr_of("average").context("missing average")?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+
+    fn cfg(n: usize, features: usize) -> SessionConfig {
+        SessionConfig {
+            n_nodes: n,
+            features,
+            profile: DeviceProfile::instant(),
+            poll_time: Duration::from_millis(200),
+            aggregation_timeout: Duration::from_secs(30),
+            progress_timeout: Duration::from_millis(700),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn bon_full_round_no_failures() {
+        let s = BonSession::new(cfg(4, 3)).unwrap();
+        let inputs: Vec<Vec<f64>> =
+            (1..=4).map(|i| (0..3).map(|f| i as f64 + f as f64).collect()).collect();
+        let m = s.run_round(&inputs, &FaultPlan::none()).unwrap();
+        assert_eq!(m.contributors, 4);
+        let expect = vec![2.5, 3.5, 4.5];
+        for (a, e) in m.average.iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn bon_recovers_from_dropout() {
+        let s = BonSession::new(cfg(5, 2)).unwrap();
+        let inputs: Vec<Vec<f64>> =
+            (1..=5).map(|i| vec![i as f64, 2.0 * i as f64]).collect();
+        // Node 4 drops after share distribution (the BON dropout case).
+        let m = s.run_round(&inputs, &FaultPlan::kill_range(4, 4)).unwrap();
+        assert_eq!(m.contributors, 4);
+        // Mean over 1,2,3,5.
+        let expect = vec![(1.0 + 2.0 + 3.0 + 5.0) / 4.0, (2.0 + 4.0 + 6.0 + 10.0) / 4.0];
+        for (a, e) in m.average.iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Hierarchical federation client (§5.10): after a local SAFE aggregation
+//! completes, a bridge posts the (already anonymized) child average to a
+//! parent controller and fetches the global cross-controller average.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Value;
+use crate::proto;
+use crate::transport::ClientTransport;
+
+/// Bridge one child controller's result up to the parent.
+pub struct FederationBridge {
+    pub child_id: u64,
+    pub parent: Arc<dyn ClientTransport>,
+}
+
+impl FederationBridge {
+    pub fn new(child_id: u64, parent: Arc<dyn ClientTransport>) -> Self {
+        FederationBridge { child_id, parent }
+    }
+
+    /// Post this child's average (cleartext — it is already anonymized
+    /// over ≥3 learners) with its contributor weight.
+    pub fn post_child_average(&self, average: &[f64], contributors: u64) -> Result<()> {
+        let resp = self.parent.call(
+            proto::FED_POST_CHILD_AVERAGE,
+            &Value::object(vec![
+                ("child", Value::from(self.child_id)),
+                ("average", Value::from(average)),
+                ("contributors", Value::from(contributors)),
+            ]),
+        )?;
+        if resp.str_of("status") != Some("ok") {
+            bail!("parent rejected child average: {resp}");
+        }
+        Ok(())
+    }
+
+    /// Poll the parent for the global average.
+    pub fn get_global_average(&self, timeout: Duration) -> Result<(Vec<f64>, u64)> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let resp = self.parent.call(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj())?;
+            if !proto::is_empty_status(&resp) {
+                let avg = resp.f64_arr_of("average").context("missing average")?;
+                let total = resp.u64_of("contributors").unwrap_or(0);
+                return Ok((avg, total));
+            }
+            if Instant::now() > deadline {
+                bail!("global average not available within {timeout:?}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{Controller, ControllerConfig};
+    use crate::transport::{Handler, InProcTransport};
+
+    #[test]
+    fn two_children_federate() {
+        let parent = Arc::new(Controller::new(ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            ..Default::default()
+        }));
+        parent.handle(
+            proto::CONFIGURE,
+            &Value::object(vec![("fed_expected_children", Value::from(2u64))]),
+        );
+        let t1: Arc<dyn ClientTransport> = Arc::new(InProcTransport::new(parent.clone()));
+        let t2: Arc<dyn ClientTransport> = Arc::new(InProcTransport::new(parent.clone()));
+        let b1 = FederationBridge::new(1, t1);
+        let b2 = FederationBridge::new(2, t2);
+        b1.post_child_average(&[10.0], 4).unwrap();
+        b2.post_child_average(&[20.0], 6).unwrap();
+        let (avg, total) = b1.get_global_average(Duration::from_secs(2)).unwrap();
+        assert_eq!(total, 10);
+        assert!((avg[0] - 16.0).abs() < 1e-12); // (10*4 + 20*6)/10
+    }
+}

@@ -1,0 +1,168 @@
+//! INSEC baseline session driver (§6): every node posts its cleartext
+//! vector to the controller and polls for the average — 2 messages per
+//! node, no privacy.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{SessionConfig, TransportKind};
+use crate::controller::{Controller, ControllerConfig};
+use crate::json::Value;
+use crate::learner::faults::{FailPoint, FaultPlan};
+use crate::metrics::RoundMetrics;
+use crate::proto;
+use crate::transport::{ClientTransport, InProcTransport, MessageStats};
+use crate::util::Stopwatch;
+
+pub struct InsecSession {
+    pub cfg: SessionConfig,
+    pub controller: Arc<Controller>,
+    stats: Arc<MessageStats>,
+}
+
+impl InsecSession {
+    pub fn new(cfg: SessionConfig) -> Result<InsecSession> {
+        if !matches!(cfg.transport, TransportKind::InProc) {
+            bail!("InsecSession currently drives the in-proc transport only");
+        }
+        let controller = Arc::new(Controller::new(ControllerConfig {
+            poll_time: cfg.poll_time,
+            ..Default::default()
+        }));
+        let stats = Arc::new(MessageStats::default());
+        Ok(InsecSession { cfg, controller, stats })
+    }
+
+    fn transport(&self) -> Arc<dyn ClientTransport> {
+        Arc::new(InProcTransport::with_costs(
+            self.controller.clone(),
+            self.stats.clone(),
+            self.cfg.profile.network_hop,
+            self.cfg.profile.network_per_kib,
+        ))
+    }
+
+    pub fn run_round(&self, inputs: &[Vec<f64>], faults: &FaultPlan) -> Result<RoundMetrics> {
+        if inputs.len() != self.cfg.n_nodes {
+            bail!("need {} inputs", self.cfg.n_nodes);
+        }
+        // (Re)configure groups — resets insec state for the round.
+        let chains = self.cfg.group_chains();
+        let mut groups_obj = Value::obj();
+        for (gid, chain) in &chains {
+            groups_obj.set(
+                &gid.to_string(),
+                Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
+            );
+        }
+        let setup = self.transport();
+        setup.call(proto::CONFIGURE, &Value::object(vec![("groups", groups_obj.clone())]))?;
+        // INSEC has no failover: a dead node means the controller waits
+        // forever, so the expected count must exclude planned failures
+        // (the paper normalizes the same way in §6.3).
+        if faults.failed_count() > 0 {
+            let mut inner = self.controller.inner.lock().unwrap();
+            for (gid, chain) in &chains {
+                let alive = chain.iter().filter(|n| faults.point(**n).is_none()).count();
+                inner.insec.configure_group(*gid, alive);
+            }
+        }
+
+        let baseline = self.stats.total();
+        let baseline_bytes = self.stats.bytes();
+        let watch = Stopwatch::start();
+        let mut handles = Vec::new();
+        for (gid, chain) in &chains {
+            for &node in chain {
+                if faults.fails_at(node, FailPoint::NeverStart) {
+                    continue;
+                }
+                let transport = self.transport();
+                let vector = inputs[(node - 1) as usize].clone();
+                let gid = *gid;
+                let poll_deadline = self.cfg.aggregation_timeout;
+                handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+                    transport.call(
+                        proto::INSEC_POST,
+                        &Value::object(vec![
+                            ("node", Value::from(node)),
+                            ("group", Value::from(gid)),
+                            ("vector", Value::from(&vector[..])),
+                        ]),
+                    )?;
+                    let deadline = std::time::Instant::now() + poll_deadline;
+                    loop {
+                        let resp = transport.call(proto::INSEC_GET_AVERAGE, &Value::obj())?;
+                        if !proto::is_empty_status(&resp) {
+                            return resp.f64_arr_of("average").context("missing average");
+                        }
+                        if std::time::Instant::now() > deadline {
+                            bail!("INSEC aggregation timed out");
+                        }
+                    }
+                }));
+            }
+        }
+        let mut averages = Vec::new();
+        for h in handles {
+            averages.push(h.join().map_err(|_| anyhow::anyhow!("insec node panicked"))??);
+        }
+        let wall_time = watch.elapsed();
+        let reference = averages[0].clone();
+        for a in &averages {
+            if a != &reference {
+                bail!("INSEC nodes disagree on the average");
+            }
+        }
+        Ok(RoundMetrics {
+            wall_time,
+            messages: self.stats.total() - baseline,
+            bytes_sent: self.stats.bytes() - baseline_bytes,
+            average: reference,
+            contributors: averages.len() as u64,
+            progress_failovers: 0,
+            initiator_failovers: 0,
+            per_path: Default::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+    use std::time::Duration;
+
+    fn cfg(n: usize, features: usize) -> SessionConfig {
+        SessionConfig {
+            n_nodes: n,
+            features,
+            profile: DeviceProfile::instant(),
+            poll_time: Duration::from_millis(200),
+            aggregation_timeout: Duration::from_secs(5),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn insec_basic_average() {
+        let s = InsecSession::new(cfg(4, 2)).unwrap();
+        let inputs: Vec<Vec<f64>> =
+            (1..=4).map(|i| vec![i as f64, 10.0 * i as f64]).collect();
+        let m = s.run_round(&inputs, &FaultPlan::none()).unwrap();
+        assert_eq!(m.average, vec![2.5, 25.0]);
+        assert_eq!(m.contributors, 4);
+        // 2 messages per node when polls don't retry.
+        assert!(m.messages >= 8);
+    }
+
+    #[test]
+    fn insec_with_failed_nodes_normalized() {
+        let s = InsecSession::new(cfg(5, 1)).unwrap();
+        let inputs: Vec<Vec<f64>> = (1..=5).map(|i| vec![i as f64]).collect();
+        let m = s.run_round(&inputs, &FaultPlan::kill_range(4, 5)).unwrap();
+        assert_eq!(m.contributors, 3);
+        assert_eq!(m.average, vec![2.0]); // mean of 1,2,3
+    }
+}

@@ -1,0 +1,18 @@
+//! Protocol session drivers: one module per protocol the paper evaluates.
+//!
+//! * [`safe`] — the paper's contribution (chain aggregation, §5), covering
+//!   SAF (no encryption), SAFE (hybrid encryption), RSA-only and §5.8
+//!   pre-negotiated variants via [`crate::crypto::CipherMode`].
+//! * [`insec`] — the cleartext post-to-controller baseline (§6).
+//! * [`bon`] — Bonawitz et al. 2017 secure aggregation (client side; the
+//!   server half lives in `controller::bon`).
+//! * [`hierarchy`] — §5.10 child→parent controller bridging.
+//! * [`weighted`] — §5.6 weighted-averaging vector encoding helpers.
+
+pub mod bon;
+pub mod hierarchy;
+pub mod insec;
+pub mod safe;
+pub mod weighted;
+
+pub use safe::{SafeRoundResult, SafeSession};

@@ -1,0 +1,634 @@
+//! SAFE session driver: builds the deployment (controller + learners +
+//! monitor), performs round 0 (key exchange, §5.1 / pre-negotiation §5.8)
+//! and runs aggregation rounds, measuring the paper's metrics.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+use once_cell::sync::Lazy;
+
+use crate::config::{SessionConfig, TransportKind, VectorEngine};
+use crate::controller::{Controller, ControllerConfig};
+use crate::crypto::envelope::CipherMode;
+use crate::crypto::rng::{DeterministicRng, SecureRng, SystemRng};
+use crate::crypto::rsa::{RsaKeyPair, RsaPublicKey};
+use crate::crypto::SymmetricKey;
+use crate::json::Value;
+use crate::learner::faults::FaultPlan;
+use crate::learner::{run_learner, LearnerContext, LearnerOutcome};
+use crate::metrics::RoundMetrics;
+use crate::monitor::ProgressMonitor;
+use crate::proto;
+use crate::runtime::vector::{NativeMath, VectorMath};
+use crate::runtime::{ArtifactRuntime, XlaMath};
+use crate::transport::http::{HttpServer, HttpTransport};
+use crate::transport::{ClientTransport, InProcTransport, MessageStats};
+use crate::util::Stopwatch;
+
+/// RSA keygen is the expensive part of round 0; benches re-create sessions
+/// hundreds of times, so deterministic keypairs are cached process-wide
+/// (sound: generation is a pure function of (seed, node, bits)).
+static KEY_CACHE: Lazy<Mutex<BTreeMap<(u64, u64, usize), RsaKeyPair>>> =
+    Lazy::new(|| Mutex::new(BTreeMap::new()));
+
+pub fn keypair_for(seed: Option<u64>, node: u64, bits: usize) -> RsaKeyPair {
+    match seed {
+        Some(seed) => {
+            let key = (seed, node, bits);
+            let mut cache = KEY_CACHE.lock().unwrap();
+            if let Some(kp) = cache.get(&key) {
+                return kp.clone();
+            }
+            let mut rng = DeterministicRng::seed(seed ^ (node.wrapping_mul(0x9e3779b97f4a7c15)));
+            let kp = RsaKeyPair::generate(bits, &mut rng);
+            cache.insert(key, kp.clone());
+            kp
+        }
+        None => {
+            let mut rng = SystemRng::new();
+            RsaKeyPair::generate(bits, &mut rng)
+        }
+    }
+}
+
+/// One fully-wired SAFE deployment.
+pub struct SafeSession {
+    pub cfg: SessionConfig,
+    pub controller: Arc<Controller>,
+    stats: Arc<MessageStats>,
+    contexts: Vec<Arc<LearnerContext>>,
+    monitor_transport: Arc<dyn ClientTransport>,
+    /// Keep the loopback HTTP server alive for HTTP transport sessions.
+    _http_server: Option<HttpServer>,
+    /// Messages spent on round 0 (key exchange) — reported separately,
+    /// like the paper (footnote 3: key exchange is not per-aggregation).
+    pub round0_messages: u64,
+    /// Aggregation rounds run so far (drives per-round chain shuffling).
+    rounds_run: std::sync::atomic::AtomicU64,
+}
+
+/// Outcome of one aggregation round across all learners.
+#[derive(Debug)]
+pub struct SafeRoundResult {
+    pub metrics: RoundMetrics,
+    pub outcomes: Vec<LearnerOutcome>,
+}
+
+impl SafeRoundResult {
+    /// The agreed average (validated identical across survivors).
+    pub fn average(&self) -> &[f64] {
+        &self.survivors()[0].average
+    }
+
+    pub fn survivors(&self) -> Vec<&LearnerOutcome> {
+        self.outcomes.iter().filter(|o| !o.died).collect()
+    }
+}
+
+impl SafeSession {
+    /// Build the deployment and run round 0 (key exchange).
+    pub fn new(cfg: SessionConfig) -> Result<SafeSession> {
+        let ctrl_cfg = ControllerConfig {
+            poll_time: cfg.poll_time,
+            aggregation_timeout: cfg.aggregation_timeout,
+            progress_timeout: cfg.progress_timeout,
+            bon_round2_timeout: cfg.progress_timeout,
+        };
+        let controller = Arc::new(Controller::new(ctrl_cfg));
+        let stats = Arc::new(MessageStats::default());
+
+        // Transport factory per node (+ one for the monitor).
+        let mut http_server = None;
+        let make_transport: Box<dyn Fn() -> Result<Arc<dyn ClientTransport>>> = match &cfg
+            .transport
+        {
+            TransportKind::InProc => {
+                let ctrl = controller.clone();
+                let stats = stats.clone();
+                let hop = cfg.profile.network_hop;
+                let per_kib = cfg.profile.network_per_kib;
+                Box::new(move || {
+                    Ok(Arc::new(InProcTransport::with_costs(
+                        ctrl.clone(),
+                        stats.clone(),
+                        hop,
+                        per_kib,
+                    )) as Arc<dyn ClientTransport>)
+                })
+            }
+            TransportKind::Http { url } => {
+                let url = if url == "spawn" {
+                    // Spawn a loopback server serving this controller.
+                    let server = HttpServer::start("127.0.0.1:0", controller.clone())?;
+                    let u = server.url();
+                    http_server = Some(server);
+                    u
+                } else {
+                    url.clone()
+                };
+                Box::new(move || {
+                    Ok(Arc::new(HttpTransport::connect(&url)?) as Arc<dyn ClientTransport>)
+                })
+            }
+        };
+
+        // Vector engine.
+        let math: Arc<dyn VectorMath> = match cfg.engine {
+            VectorEngine::Native => Arc::new(NativeMath),
+            VectorEngine::Xla | VectorEngine::Auto => {
+                let dir = ArtifactRuntime::default_dir();
+                if ArtifactRuntime::available(&dir) {
+                    Arc::new(XlaMath::new(Arc::new(ArtifactRuntime::new(dir)?)))
+                } else if matches!(cfg.engine, VectorEngine::Auto) {
+                    Arc::new(NativeMath)
+                } else {
+                    bail!("VectorEngine::Xla requested but artifacts/ not built");
+                }
+            }
+        };
+
+        // Configure the controller with the group chains.
+        let chains = cfg.group_chains();
+        for (_, chain) in &chains {
+            if chain.len() < 3 {
+                bail!(
+                    "SAFE requires >= 3 nodes per group for privacy (got {})",
+                    chain.len()
+                );
+            }
+        }
+        let mut groups_obj = Value::obj();
+        for (gid, chain) in &chains {
+            groups_obj.set(
+                &gid.to_string(),
+                Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
+            );
+        }
+        let setup_transport = make_transport()?;
+        setup_transport.call(
+            proto::CONFIGURE,
+            &Value::object(vec![
+                ("groups", groups_obj),
+                (
+                    "aggregation_timeout_ms",
+                    Value::from(cfg.aggregation_timeout.as_millis() as u64),
+                ),
+                (
+                    "progress_timeout_ms",
+                    Value::from(cfg.progress_timeout.as_millis() as u64),
+                ),
+                ("poll_time_ms", Value::from(cfg.poll_time.as_millis() as u64)),
+            ]),
+        )?;
+
+        // ---- Round 0: key generation + registry (§5.1, footnote 3) ----
+        let mut node_keys: BTreeMap<u64, RsaKeyPair> = BTreeMap::new();
+        for (_, chain) in &chains {
+            for &node in chain {
+                node_keys.insert(node, keypair_for(cfg.seed, node, cfg.rsa_bits));
+            }
+        }
+        for (&node, kp) in &node_keys {
+            setup_transport.call(
+                proto::REGISTER_KEY,
+                &Value::object(vec![
+                    ("node", Value::from(node)),
+                    ("key", kp.public.to_json()),
+                ]),
+            )?;
+        }
+
+        // Build learner contexts: fetch peer keys (and §5.8 symmetric
+        // pre-negotiation when configured).
+        let mut contexts = Vec::new();
+        for (gid, chain) in &chains {
+            for &node in chain {
+                let transport = make_transport()?;
+                let mut peer_keys = BTreeMap::new();
+                for &peer in chain {
+                    if peer == node {
+                        continue;
+                    }
+                    let resp = transport
+                        .call(proto::GET_KEY, &Value::object(vec![("node", Value::from(peer))]))?;
+                    let key_json = resp.get("key").context("peer key missing")?;
+                    peer_keys.insert(peer, RsaPublicKey::from_json(key_json)?);
+                }
+                let rng: Box<dyn SecureRng + Send> = match cfg.seed {
+                    Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(node * 7919))),
+                    None => Box::new(SystemRng::new()),
+                };
+                contexts.push(Arc::new(LearnerContext {
+                    node,
+                    group: *gid,
+                    chain: chain.clone(),
+                    expected_total_nodes: cfg.n_nodes,
+                    keys: node_keys[&node].clone(),
+                    peer_keys,
+                    send_keys: BTreeMap::new(),
+                    recv_keys: BTreeMap::new(),
+                    mode: cfg.mode,
+                    compress: cfg.compress,
+                    profile: cfg.profile.clone(),
+                    transport,
+                    math: math.clone(),
+                    rng: Mutex::new(rng),
+                    aggregation_timeout: cfg.aggregation_timeout,
+                    single_seed_mask: cfg.profile.name == "deep-edge",
+                    initial_initiator: chain[0],
+                    stagger_delay: cfg
+                        .stagger_step
+                        .mul_f64(chain.iter().position(|&c| c == node).unwrap_or(0) as f64),
+                }));
+            }
+        }
+
+        // §5.8 pre-negotiation: every node generates one symmetric key per
+        // group peer (keys it will use to *receive* from that peer), seals
+        // each with the peer's RSA public key, posts; peers pull + unseal.
+        if cfg.mode == CipherMode::PreNegotiated {
+            let mut generated: BTreeMap<u64, BTreeMap<u64, SymmetricKey>> = BTreeMap::new();
+            for ctx in &contexts {
+                let mut keys_obj = Value::obj();
+                let mut mine = BTreeMap::new();
+                {
+                    let mut rng = ctx.rng.lock().unwrap();
+                    for &peer in &ctx.chain {
+                        if peer == ctx.node {
+                            continue;
+                        }
+                        let k = SymmetricKey::generate(rng.as_mut());
+                        let sealed = ctx.peer_keys[&peer].encrypt_block(&k.master, rng.as_mut())?;
+                        keys_obj.set(&peer.to_string(), Value::from(crate::util::b64_encode(&sealed)));
+                        mine.insert(peer, k);
+                    }
+                }
+                ctx.transport.call(
+                    proto::POST_PRENEG_KEYS,
+                    &Value::object(vec![("node", Value::from(ctx.node)), ("keys", keys_obj)]),
+                )?;
+                generated.insert(ctx.node, mine);
+            }
+            // Pull: send_keys[to] = key that `to` generated for me.
+            for ctx in Vec::from_iter(contexts.iter().cloned()) {
+                let mut send_keys = BTreeMap::new();
+                for &peer in &ctx.chain {
+                    if peer == ctx.node {
+                        continue;
+                    }
+                    let resp = ctx.transport.call(
+                        proto::GET_PRENEG_KEY,
+                        &Value::object(vec![
+                            ("node", Value::from(ctx.node)),
+                            ("owner", Value::from(peer)),
+                        ]),
+                    )?;
+                    let blob = crate::util::b64_decode(
+                        resp.str_of("key").context("preneg key missing")?,
+                    )?;
+                    let master = ctx.keys.private.decrypt_block(&blob)?;
+                    send_keys.insert(peer, SymmetricKey::from_bytes(&master)?);
+                }
+                // Contexts are shared Arcs; rebuild with key maps filled.
+                let idx = contexts.iter().position(|c| c.node == ctx.node).unwrap();
+                let old = contexts[idx].clone();
+                contexts[idx] = Arc::new(LearnerContext {
+                    node: old.node,
+                    group: old.group,
+                    chain: old.chain.clone(),
+                    expected_total_nodes: old.expected_total_nodes,
+                    keys: old.keys.clone(),
+                    peer_keys: old.peer_keys.clone(),
+                    send_keys,
+                    recv_keys: generated.remove(&old.node).unwrap_or_default(),
+                    mode: old.mode,
+                    compress: old.compress,
+                    profile: old.profile.clone(),
+                    transport: old.transport.clone(),
+                    math: math.clone(),
+                    rng: Mutex::new(match cfg.seed {
+                        Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(old.node * 104729)))
+                            as Box<dyn SecureRng + Send>,
+                        None => Box::new(SystemRng::new()),
+                    }),
+                    aggregation_timeout: old.aggregation_timeout,
+                    single_seed_mask: old.single_seed_mask,
+                    initial_initiator: old.initial_initiator,
+                    stagger_delay: old.stagger_delay,
+                });
+            }
+        }
+
+        let round0_messages = stats.total();
+        let monitor_transport = make_transport()?;
+        Ok(SafeSession {
+            cfg,
+            controller,
+            stats,
+            contexts,
+            monitor_transport,
+            _http_server: http_server,
+            round0_messages,
+            rounds_run: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Chain order for a given round: the configured order, or a
+    /// deterministic per-round permutation within each group when
+    /// `shuffle_chain_each_round` is set (paper §8: randomizing the order
+    /// limits what colluding neighbours can learn across rounds).
+    fn chains_for_round(&self, round: u64) -> Vec<(u64, Vec<u64>)> {
+        let mut chains = self.cfg.group_chains();
+        if self.cfg.shuffle_chain_each_round && round > 0 {
+            for (gid, chain) in chains.iter_mut() {
+                let mut rng = DeterministicRng::seed(
+                    self.cfg.seed.unwrap_or(0) ^ (round << 20) ^ *gid,
+                );
+                for i in (1..chain.len()).rev() {
+                    let j = rng.next_below(i + 1);
+                    chain.swap(i, j);
+                }
+            }
+        }
+        chains
+    }
+
+    /// Run one aggregation round. `inputs[i]` is node i+1's local vector
+    /// (all must have `cfg.wire_features()` length).
+    pub fn run_round(&self, inputs: &[Vec<f64>], faults: &FaultPlan) -> Result<SafeRoundResult> {
+        if inputs.len() != self.cfg.n_nodes {
+            bail!("need {} input vectors, got {}", self.cfg.n_nodes, inputs.len());
+        }
+        let round = self
+            .rounds_run
+            .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        // Reset per-round chain state (configure clears group state but
+        // keeps the key registry).
+        let chains = self.chains_for_round(round);
+        let mut groups_obj = Value::obj();
+        for (gid, chain) in &chains {
+            groups_obj.set(
+                &gid.to_string(),
+                Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
+            );
+        }
+        self.monitor_transport
+            .call(proto::CONFIGURE, &Value::object(vec![("groups", groups_obj)]))?;
+
+        let baseline_msgs = self.stats.total();
+        let baseline_bytes = self.stats.bytes();
+        let per_path_before = self.stats.per_path();
+
+        let mut monitor =
+            ProgressMonitor::start(self.monitor_transport.clone(), self.cfg.monitor_interval);
+
+        let watch = Stopwatch::start();
+        let mut handles = Vec::new();
+        for ctx in &self.contexts {
+            let ctx = if self.cfg.shuffle_chain_each_round {
+                // Rebuild this learner's view with the round's chain order.
+                let (_, chain) = chains
+                    .iter()
+                    .find(|(_, c)| c.contains(&ctx.node))
+                    .context("node missing from round chains")?
+                    .clone();
+                let pos = chain.iter().position(|&c| c == ctx.node).unwrap_or(0);
+                Arc::new(LearnerContext {
+                    node: ctx.node,
+                    group: ctx.group,
+                    chain: chain.clone(),
+                    expected_total_nodes: ctx.expected_total_nodes,
+                    keys: ctx.keys.clone(),
+                    peer_keys: ctx.peer_keys.clone(),
+                    send_keys: ctx.send_keys.clone(),
+                    recv_keys: ctx.recv_keys.clone(),
+                    mode: ctx.mode,
+                    compress: ctx.compress,
+                    profile: ctx.profile.clone(),
+                    transport: ctx.transport.clone(),
+                    math: ctx.math.clone(),
+                    rng: Mutex::new(Box::new(DeterministicRng::seed(
+                        self.cfg.seed.unwrap_or(0) ^ (round << 24) ^ ctx.node,
+                    )) as Box<dyn SecureRng + Send>),
+                    aggregation_timeout: ctx.aggregation_timeout,
+                    single_seed_mask: ctx.single_seed_mask,
+                    initial_initiator: chain[0],
+                    stagger_delay: self.cfg.stagger_step.mul_f64(pos as f64),
+                })
+            } else {
+                ctx.clone()
+            };
+            let local = inputs[(ctx.node - 1) as usize].clone();
+            let faults = faults.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("learner-{}", ctx.node))
+                    .spawn(move || run_learner(&ctx, &local, &faults))?,
+            );
+        }
+        let mut outcomes = Vec::new();
+        for h in handles {
+            outcomes.push(h.join().map_err(|_| anyhow::anyhow!("learner panicked"))??);
+        }
+        let wall_time = watch.elapsed();
+        monitor.stop();
+
+        // Validate agreement: every survivor holds the same average.
+        let survivors: Vec<&LearnerOutcome> = outcomes.iter().filter(|o| !o.died).collect();
+        if survivors.is_empty() {
+            bail!("no surviving learners");
+        }
+        let reference = &survivors[0].average;
+        for s in &survivors[1..] {
+            if s.average.len() != reference.len() {
+                bail!("learners disagree on average length");
+            }
+            for (a, b) in s.average.iter().zip(reference) {
+                if (a - b).abs() > 1e-9 {
+                    bail!("learners disagree on the average: {a} vs {b}");
+                }
+            }
+        }
+
+        let per_path_after = self.stats.per_path();
+        let mut per_path = BTreeMap::new();
+        for (k, v) in per_path_after {
+            let before = per_path_before.get(&k).copied().unwrap_or(0);
+            if v > before {
+                per_path.insert(k, v - before);
+            }
+        }
+        // The monitor's periodic pings are operational, not protocol,
+        // traffic — exclude them from the message count like the paper's
+        // formulas do.
+        let monitor_msgs = per_path.remove(proto::PROGRESS_CHECK).unwrap_or(0);
+        let messages = self.stats.total() - baseline_msgs - monitor_msgs;
+
+        // Each group's initiator reports its group's contributor count;
+        // sum across groups (one initiator per group).
+        let initiator_sum: u64 = survivors
+            .iter()
+            .filter(|o| o.was_initiator)
+            .map(|o| o.contributors)
+            .sum();
+        let contributors = if initiator_sum > 0 {
+            initiator_sum
+        } else {
+            survivors.len() as u64
+        };
+
+        let metrics = RoundMetrics {
+            wall_time,
+            messages,
+            bytes_sent: self.stats.bytes() - baseline_bytes,
+            average: reference.clone(),
+            contributors,
+            progress_failovers: monitor.reposts(),
+            initiator_failovers: outcomes.iter().map(|o| o.restarts).max().unwrap_or(0),
+            per_path,
+        };
+        Ok(SafeRoundResult { metrics, outcomes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceProfile;
+    use std::time::Duration;
+
+    fn quick_cfg(n: usize, features: usize, mode: CipherMode) -> SessionConfig {
+        SessionConfig {
+            n_nodes: n,
+            features,
+            mode,
+            rsa_bits: 512, // fast for tests
+            profile: DeviceProfile::instant(),
+            poll_time: Duration::from_millis(100),
+            aggregation_timeout: Duration::from_secs(10),
+            progress_timeout: Duration::from_millis(400),
+            monitor_interval: Duration::from_millis(50),
+            ..Default::default()
+        }
+    }
+
+    fn inputs(n: usize, features: usize) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|i| (0..features).map(|f| (i + 1) as f64 + f as f64 * 0.1).collect())
+            .collect()
+    }
+
+    fn expected_average(inputs: &[Vec<f64>]) -> Vec<f64> {
+        let n = inputs.len() as f64;
+        let mut avg = vec![0.0; inputs[0].len()];
+        for v in inputs {
+            for (a, x) in avg.iter_mut().zip(v) {
+                *a += x;
+            }
+        }
+        avg.iter_mut().for_each(|a| *a /= n);
+        avg
+    }
+
+    #[test]
+    fn basic_round_all_modes() {
+        for mode in [
+            CipherMode::None,
+            CipherMode::Hybrid,
+            CipherMode::RsaOnly,
+            CipherMode::PreNegotiated,
+        ] {
+            let session = SafeSession::new(quick_cfg(4, 3, mode)).unwrap();
+            let ins = inputs(4, 3);
+            let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
+            let expect = expected_average(&ins);
+            for (a, e) in result.average().iter().zip(&expect) {
+                assert!((a - e).abs() < 1e-6, "{mode:?}: {a} vs {e}");
+            }
+            assert_eq!(result.metrics.contributors, 4, "{mode:?}");
+            assert_eq!(result.metrics.progress_failovers, 0, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn message_count_is_4n_without_failures() {
+        // §5.2: "an aggregation requires 4n messages". Long polls must not
+        // retry for this to hold exactly, so poll_time is generous.
+        let mut cfg = quick_cfg(5, 1, CipherMode::Hybrid);
+        cfg.poll_time = Duration::from_secs(5);
+        let session = SafeSession::new(cfg).unwrap();
+        let ins = inputs(5, 1);
+        let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
+        assert_eq!(result.metrics.messages, 4 * 5);
+    }
+
+    #[test]
+    fn progress_failover_recovers_and_costs_2f_messages() {
+        let mut cfg = quick_cfg(6, 2, CipherMode::Hybrid);
+        cfg.poll_time = Duration::from_secs(5);
+        cfg.progress_timeout = Duration::from_millis(300);
+        let session = SafeSession::new(cfg).unwrap();
+        let ins = inputs(6, 2);
+        let faults = FaultPlan::kill_range(4, 4); // node 4 never starts
+        let result = session.run_round(&ins, &faults).unwrap();
+        // 5 contributors: all but node 4.
+        assert_eq!(result.metrics.contributors, 5);
+        assert_eq!(result.metrics.progress_failovers, 1);
+        // Average over the 5 survivors' inputs.
+        let mut expect = vec![0.0; 2];
+        for (i, v) in ins.iter().enumerate() {
+            if i + 1 == 4 {
+                continue;
+            }
+            for (a, x) in expect.iter_mut().zip(v) {
+                *a += x;
+            }
+        }
+        expect.iter_mut().for_each(|a| *a /= 5.0);
+        for (a, e) in result.average().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+        // §5.3: 4n + 2f — dead node sends nothing, so 4(n−1) + 2·1.
+        assert_eq!(result.metrics.messages, 4 * 5 + 2);
+    }
+
+    #[test]
+    fn subgroups_aggregate_in_parallel() {
+        let mut cfg = quick_cfg(9, 2, CipherMode::Hybrid);
+        cfg.groups = 3;
+        cfg.poll_time = Duration::from_secs(5);
+        let session = SafeSession::new(cfg).unwrap();
+        let ins = inputs(9, 2);
+        let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
+        // Equal group sizes ⇒ mean of group means == global mean.
+        let expect = expected_average(&ins);
+        for (a, e) in result.average().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+        // §5.5: one extra message per group (initiators pull the global
+        // average): (4n) + g.
+        assert_eq!(result.metrics.messages, 4 * 9 + 3);
+    }
+
+    #[test]
+    fn initiator_failover_elects_new_initiator() {
+        let mut cfg = quick_cfg(4, 1, CipherMode::Hybrid);
+        cfg.poll_time = Duration::from_millis(100);
+        cfg.aggregation_timeout = Duration::from_millis(900);
+        cfg.progress_timeout = Duration::from_millis(500);
+        let session = SafeSession::new(cfg).unwrap();
+        let ins = inputs(4, 1);
+        let faults = FaultPlan::none().kill(1, crate::learner::faults::FailPoint::InitiatorAfterPost);
+        let result = session.run_round(&ins, &faults).unwrap();
+        assert!(result.metrics.initiator_failovers >= 1);
+        let survivors = result.survivors();
+        assert_eq!(survivors.len(), 3);
+        // A new initiator emerged among 2..4.
+        assert!(survivors.iter().any(|o| o.was_initiator && o.node != 1));
+        // The average covers the 3 survivors (initiator's value lost with
+        // it; it is skipped via progress failover on the second pass).
+        let expect: f64 = (2.0 + 3.0 + 4.0) / 3.0;
+        assert!((result.average()[0] - expect).abs() < 1e-6);
+    }
+}

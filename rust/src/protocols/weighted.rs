@@ -1,0 +1,65 @@
+//! Weighted averaging (§5.6): each learner contributes `x·w` plus its
+//! weight `w` as one extra feature. The aggregation then yields
+//! (mean(x·w), mean(w)); dividing recovers the true sample-weighted
+//! average without revealing any node's sample count.
+
+use anyhow::{bail, Result};
+
+/// Encode a local average `x` computed from `weight` samples into the
+/// wire vector: `[x₀·w, x₁·w, …, w]`.
+pub fn encode(x: &[f64], weight: f64) -> Vec<f64> {
+    assert!(weight > 0.0, "weight must be positive");
+    let mut v: Vec<f64> = x.iter().map(|a| a * weight).collect();
+    v.push(weight);
+    v
+}
+
+/// Decode the aggregated average-of-encodings back into the weighted
+/// average: `avg[i] = mean(xᵢ·w) / mean(w)`.
+pub fn decode(agg: &[f64]) -> Result<Vec<f64>> {
+    if agg.len() < 2 {
+        bail!("weighted aggregate needs at least 2 features");
+    }
+    let mean_w = agg[agg.len() - 1];
+    if mean_w <= 0.0 {
+        bail!("non-positive mean weight {mean_w}");
+    }
+    Ok(agg[..agg.len() - 1].iter().map(|a| a / mean_w).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_correctness() {
+        // §5.6's example: one node averages 1000 samples, another 10000.
+        // Node A: local mean 2.0 over 1000; Node B: local mean 5.0 over
+        // 10000. True mean = (2*1000 + 5*10000) / 11000.
+        let a = encode(&[2.0], 1000.0);
+        let b = encode(&[5.0], 10000.0);
+        // The chain computes the plain mean of the encoded vectors.
+        let agg: Vec<f64> = a.iter().zip(&b).map(|(x, y)| (x + y) / 2.0).collect();
+        let avg = decode(&agg).unwrap();
+        let expect = (2.0 * 1000.0 + 5.0 * 10000.0) / 11000.0;
+        assert!((avg[0] - expect).abs() < 1e-9, "{} vs {}", avg[0], expect);
+    }
+
+    #[test]
+    fn equal_weights_reduce_to_plain_mean() {
+        let vs = [vec![1.0, 4.0], vec![3.0, 8.0]];
+        let encoded: Vec<Vec<f64>> = vs.iter().map(|v| encode(v, 7.0)).collect();
+        let agg: Vec<f64> = (0..3)
+            .map(|i| (encoded[0][i] + encoded[1][i]) / 2.0)
+            .collect();
+        let avg = decode(&agg).unwrap();
+        assert!((avg[0] - 2.0).abs() < 1e-12);
+        assert!((avg[1] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        assert!(decode(&[1.0]).is_err());
+        assert!(decode(&[1.0, 0.0]).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: load the AOT-compiled L1/L2 artifacts and execute them
+//! from the Rust hot path.
+//!
+//! `python/compile/aot.py` lowers the JAX/Pallas compute graphs to HLO
+//! *text* (xla_extension 0.5.1 rejects jax≥0.5 serialized protos — see
+//! /opt/xla-example/README.md) under `artifacts/`. This module compiles
+//! them once per process on the PJRT CPU client and exposes:
+//!
+//! * [`vector::VectorMath`] implementations — `NativeMath` (plain loops)
+//!   and [`XlaMath`] (chain ops through the compiled kernels, bucketed by
+//!   power-of-two feature size with zero padding);
+//! * [`TrainStepExecutable`] — the L2 MLP train step used by the
+//!   federated-learning harness (`fl`), so Python never runs at training
+//!   time.
+
+pub mod vector;
+pub mod xla_exec;
+
+pub use vector::{NativeMath, VectorMath};
+pub use xla_exec::{ArtifactRuntime, TrainStepExecutable, XlaMath};

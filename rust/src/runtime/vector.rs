@@ -1,0 +1,89 @@
+//! Vector math engine used on the aggregation hot path.
+//!
+//! Learners do three vector operations per round: mask the local vector
+//! (initiator), add the local vector into the running aggregate
+//! (non-initiators), and unmask-and-divide (initiator finalize). The
+//! engine trait lets the coordinator run these either natively or through
+//! the AOT-compiled XLA artifacts (L1 Pallas kernels lowered by
+//! `python/compile/aot.py`) — `runtime::xla` provides the latter, and the
+//! `ablations` bench compares the two.
+
+/// Engine for the chain's vector arithmetic.
+pub trait VectorMath: Send + Sync {
+    /// acc[i] += x[i]
+    fn add_assign(&self, acc: &mut [f64], x: &[f64]);
+
+    /// out[i] = x[i] + mask[i]  (initiator masking step)
+    fn mask(&self, x: &[f64], mask: &[f64]) -> Vec<f64>;
+
+    /// out[i] = (agg[i] − mask[i]) / divisor  (initiator finalize step)
+    fn finalize(&self, agg: &[f64], mask: &[f64], divisor: f64) -> Vec<f64>;
+
+    /// Human-readable engine name (for bench labels).
+    fn name(&self) -> &'static str;
+}
+
+/// Plain Rust loops — the baseline engine.
+pub struct NativeMath;
+
+impl VectorMath for NativeMath {
+    fn add_assign(&self, acc: &mut [f64], x: &[f64]) {
+        assert_eq!(acc.len(), x.len(), "vector length mismatch");
+        for (a, b) in acc.iter_mut().zip(x) {
+            *a += b;
+        }
+    }
+
+    fn mask(&self, x: &[f64], mask: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), mask.len(), "vector length mismatch");
+        x.iter().zip(mask).map(|(a, b)| a + b).collect()
+    }
+
+    fn finalize(&self, agg: &[f64], mask: &[f64], divisor: f64) -> Vec<f64> {
+        assert_eq!(agg.len(), mask.len(), "vector length mismatch");
+        assert!(divisor != 0.0, "divide by zero contributors");
+        agg.iter().zip(mask).map(|(a, m)| (a - m) / divisor).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_ops() {
+        let m = NativeMath;
+        let mut acc = vec![1.0, 2.0, 3.0];
+        m.add_assign(&mut acc, &[10.0, 20.0, 30.0]);
+        assert_eq!(acc, vec![11.0, 22.0, 33.0]);
+        let masked = m.mask(&[1.0, 2.0], &[100.0, 200.0]);
+        assert_eq!(masked, vec![101.0, 202.0]);
+        let fin = m.finalize(&[103.0, 206.0], &[100.0, 200.0], 3.0);
+        assert_eq!(fin, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn mask_then_finalize_is_identity_average() {
+        // The protocol invariant: masking cancels exactly.
+        let m = NativeMath;
+        let x1 = vec![1.5, -2.0, 0.25];
+        let x2 = vec![0.5, 4.0, 0.75];
+        let mask = vec![9.9e9, -3.3e8, 1.1e7];
+        let mut agg = m.mask(&x1, &mask);
+        m.add_assign(&mut agg, &x2);
+        let avg = m.finalize(&agg, &mask, 2.0);
+        for (a, e) in avg.iter().zip([1.0, 1.0, 0.5]) {
+            assert!((a - e).abs() < 1e-6, "{} vs {}", a, e);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn length_mismatch_panics() {
+        NativeMath.add_assign(&mut [1.0][..].to_vec(), &[1.0, 2.0]);
+    }
+}

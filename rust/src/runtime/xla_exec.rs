@@ -1,0 +1,438 @@
+//! XLA artifact loading and execution (the L3↔L2 bridge).
+//!
+//! Artifacts are HLO text files produced once by `make artifacts`
+//! (`python/compile/aot.py`); this module compiles them on the PJRT CPU
+//! client at first use and caches the loaded executables. Feature vectors
+//! are padded to the next bucket size because PJRT executables are
+//! fixed-shape (see DESIGN.md §2).
+//!
+//! Threading: the `xla` crate's client/executable handles are `Rc`-based
+//! and not `Send`/`Sync`, so a dedicated executor thread owns them; the
+//! public [`ArtifactRuntime`] is a thread-safe facade that ships requests
+//! over a channel. Execution is therefore serialized per runtime — one
+//! more reason the learner-side [`XlaMath`] engine only wins for large
+//! vectors (measured in the `ablations` bench).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::vector::VectorMath;
+
+/// Feature-size buckets compiled by aot.py (f64 chain ops).
+pub const BUCKETS: [usize; 4] = [16, 256, 4096, 16384];
+
+/// Smallest bucket that fits `n` features, or None if it exceeds the max
+/// bucket (callers then chunk by the max bucket).
+pub fn bucket_for(n: usize) -> Option<usize> {
+    BUCKETS.iter().copied().find(|&b| b >= n)
+}
+
+enum Request {
+    ExecF64 {
+        name: String,
+        inputs: Vec<Vec<f64>>,
+        reply: mpsc::SyncSender<Result<Vec<Vec<f64>>>>,
+    },
+    ExecF32 {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::SyncSender<Result<Vec<Vec<f32>>>>,
+    },
+    Warm {
+        name: String,
+        reply: mpsc::SyncSender<Result<()>>,
+    },
+}
+
+/// Thread-safe handle to the PJRT executor thread.
+pub struct ArtifactRuntime {
+    tx: Mutex<mpsc::Sender<Request>>,
+    dir: PathBuf,
+}
+
+struct Executor {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                bail!("artifact {:?} not found — run `make artifacts`", path);
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse HLO {:?}: {e}", path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {:?}: {e}", path))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    fn exec_literals(
+        &mut self,
+        name: &str,
+        literals: Vec<xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync {name}: {e}"))?;
+        result.to_tuple().map_err(|e| anyhow::anyhow!("tuple {name}: {e}"))
+    }
+
+    fn serve(mut self, rx: mpsc::Receiver<Request>) {
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::ExecF64 { name, inputs, reply } => {
+                    let literals: Vec<xla::Literal> =
+                        inputs.iter().map(|v| xla::Literal::vec1(&v[..])).collect();
+                    let out = self.exec_literals(&name, literals).and_then(|parts| {
+                        parts
+                            .into_iter()
+                            .map(|l| {
+                                l.to_vec::<f64>().map_err(|e| anyhow::anyhow!("read {name}: {e}"))
+                            })
+                            .collect()
+                    });
+                    let _ = reply.send(out);
+                }
+                Request::ExecF32 { name, inputs, reply } => {
+                    let literals: Vec<xla::Literal> =
+                        inputs.iter().map(|v| xla::Literal::vec1(&v[..])).collect();
+                    let out = self.exec_literals(&name, literals).and_then(|parts| {
+                        parts
+                            .into_iter()
+                            .map(|l| {
+                                l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("read {name}: {e}"))
+                            })
+                            .collect()
+                    });
+                    let _ = reply.send(out);
+                }
+                Request::Warm { name, reply } => {
+                    let _ = reply.send(self.load(&name).map(|_| ()));
+                }
+            }
+        }
+    }
+}
+
+impl ArtifactRuntime {
+    /// Create a runtime rooted at `dir` (usually `artifacts/`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let (tx, rx) = mpsc::channel();
+        let (ready_tx, ready_rx) = mpsc::sync_channel(1);
+        let dir2 = dir.clone();
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || match xla::PjRtClient::cpu() {
+                Ok(client) => {
+                    let _ = ready_tx.send(Ok(()));
+                    Executor { client, dir: dir2, cache: HashMap::new() }.serve(rx);
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("PJRT CPU client: {e}")));
+                }
+            })
+            .context("spawn pjrt executor")?;
+        ready_rx.recv().context("executor thread died")??;
+        Ok(ArtifactRuntime { tx: Mutex::new(tx), dir })
+    }
+
+    /// True if `dir` looks like a built artifacts directory.
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.json").exists()
+    }
+
+    /// Locate the artifacts dir: `$SAFE_ARTIFACTS`, else `artifacts/`
+    /// under the crate root.
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("SAFE_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn manifest(&self) -> Result<crate::json::Value> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.json"))
+            .context("read artifacts/manifest.json — run `make artifacts` first")?;
+        crate::json::parse(&text)
+    }
+
+    fn send(&self, req: Request) {
+        self.tx.lock().unwrap().send(req).expect("pjrt executor thread is gone");
+    }
+
+    /// Compile `name` now so later calls never hit compilation.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::Warm { name: name.to_string(), reply });
+        rx.recv().context("executor dropped warm request")?
+    }
+
+    /// Execute `name` with f64 vector inputs; returns the flattened f64
+    /// outputs of the result tuple.
+    pub fn exec_f64(&self, name: &str, inputs: &[&[f64]]) -> Result<Vec<Vec<f64>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::ExecF64 {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|v| v.to_vec()).collect(),
+            reply,
+        });
+        rx.recv().context("executor dropped exec request")?
+    }
+
+    /// Execute `name` with f32 inputs; returns flattened f32 outputs.
+    pub fn exec_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.send(Request::ExecF32 {
+            name: name.to_string(),
+            inputs: inputs.iter().map(|v| v.to_vec()).collect(),
+            reply,
+        });
+        rx.recv().context("executor dropped exec request")?
+    }
+}
+
+/// [`VectorMath`] engine backed by the AOT Pallas kernels.
+pub struct XlaMath {
+    rt: Arc<ArtifactRuntime>,
+}
+
+impl XlaMath {
+    pub fn new(rt: Arc<ArtifactRuntime>) -> Self {
+        XlaMath { rt }
+    }
+
+    /// elementwise a+b through the chain_add kernel, chunked by bucket.
+    fn add_vec(&self, a: &[f64], b: &[f64]) -> Vec<f64> {
+        assert_eq!(a.len(), b.len(), "vector length mismatch");
+        let mut out = Vec::with_capacity(a.len());
+        let max = *BUCKETS.last().unwrap();
+        for (ca, cb) in a.chunks(max).zip(b.chunks(max)) {
+            let bucket = bucket_for(ca.len()).unwrap_or(max);
+            let mut pa = ca.to_vec();
+            let mut pb = cb.to_vec();
+            pa.resize(bucket, 0.0);
+            pb.resize(bucket, 0.0);
+            let res = self
+                .rt
+                .exec_f64(&format!("chain_add_{bucket}"), &[&pa, &pb])
+                .expect("chain_add artifact execution");
+            out.extend_from_slice(&res[0][..ca.len()]);
+        }
+        out
+    }
+}
+
+impl VectorMath for XlaMath {
+    fn add_assign(&self, acc: &mut [f64], x: &[f64]) {
+        let r = self.add_vec(acc, x);
+        acc.copy_from_slice(&r);
+    }
+
+    fn mask(&self, x: &[f64], mask: &[f64]) -> Vec<f64> {
+        self.add_vec(x, mask)
+    }
+
+    fn finalize(&self, agg: &[f64], mask: &[f64], divisor: f64) -> Vec<f64> {
+        assert_eq!(agg.len(), mask.len(), "vector length mismatch");
+        assert!(divisor != 0.0);
+        let mut out = Vec::with_capacity(agg.len());
+        let max = *BUCKETS.last().unwrap();
+        let div = [divisor];
+        for (ca, cm) in agg.chunks(max).zip(mask.chunks(max)) {
+            let bucket = bucket_for(ca.len()).unwrap_or(max);
+            let mut pa = ca.to_vec();
+            let mut pm = cm.to_vec();
+            pa.resize(bucket, 0.0);
+            pm.resize(bucket, 0.0);
+            let res = self
+                .rt
+                .exec_f64(&format!("finalize_{bucket}"), &[&pa, &pm, &div])
+                .expect("finalize artifact execution");
+            out.extend_from_slice(&res[0][..ca.len()]);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// The L2 train step (one SGD update of the 2-layer MLP in
+/// `python/compile/model.py`), executed through PJRT.
+pub struct TrainStepExecutable {
+    rt: Arc<ArtifactRuntime>,
+    pub dim_in: usize,
+    pub dim_hidden: usize,
+    pub dim_out: usize,
+    pub batch: usize,
+}
+
+impl TrainStepExecutable {
+    pub fn load(rt: Arc<ArtifactRuntime>) -> Result<TrainStepExecutable> {
+        let man = rt.manifest()?;
+        let ts = man.get("train_step").context("manifest missing train_step")?;
+        let dim_in = ts.u64_of("in").context("in")? as usize;
+        let dim_hidden = ts.u64_of("hidden").context("hidden")? as usize;
+        let dim_out = ts.u64_of("out").context("out")? as usize;
+        let batch = ts.u64_of("batch").context("batch")? as usize;
+        // Force compilation now so the hot loop never compiles.
+        rt.warm("train_step")?;
+        rt.warm("predict_loss")?;
+        Ok(TrainStepExecutable { rt, dim_in, dim_hidden, dim_out, batch })
+    }
+
+    /// Total parameter count (the feature-vector length SAFE aggregates).
+    pub fn param_count(&self) -> usize {
+        self.dim_in * self.dim_hidden
+            + self.dim_hidden
+            + self.dim_hidden * self.dim_out
+            + self.dim_out
+    }
+
+    fn split_params<'a>(&self, p: &'a [f32]) -> Vec<&'a [f32]> {
+        let s1 = self.dim_in * self.dim_hidden;
+        let s2 = s1 + self.dim_hidden;
+        let s3 = s2 + self.dim_hidden * self.dim_out;
+        let s4 = s3 + self.dim_out;
+        vec![&p[..s1], &p[s1..s2], &p[s2..s3], &p[s3..s4]]
+    }
+
+    /// One SGD step: returns (updated params, batch loss).
+    pub fn step(&self, params: &[f32], x: &[f32], y: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        assert_eq!(params.len(), self.param_count(), "param vector length");
+        assert_eq!(x.len(), self.batch * self.dim_in, "x shape");
+        assert_eq!(y.len(), self.batch * self.dim_out, "y shape");
+        let lr_in = [lr];
+        let mut inputs: Vec<&[f32]> = self.split_params(params);
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(&lr_in);
+        let out = self.rt.exec_f32("train_step", &inputs)?;
+        if out.len() != 5 {
+            bail!("train_step returned {} outputs, expected 5", out.len());
+        }
+        let mut new_params = Vec::with_capacity(self.param_count());
+        for part in &out[..4] {
+            new_params.extend_from_slice(part);
+        }
+        Ok((new_params, out[4][0]))
+    }
+
+    /// Evaluate loss without updating (for validation curves).
+    pub fn loss(&self, params: &[f32], x: &[f32], y: &[f32]) -> Result<f32> {
+        let mut inputs: Vec<&[f32]> = self.split_params(params);
+        inputs.push(x);
+        inputs.push(y);
+        let out = self.rt.exec_f32("predict_loss", &inputs)?;
+        Ok(out[0][0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Arc<ArtifactRuntime>> {
+        let dir = ArtifactRuntime::default_dir();
+        if !ArtifactRuntime::available(&dir) {
+            eprintln!("artifacts not built; skipping XLA runtime test");
+            return None;
+        }
+        Some(Arc::new(ArtifactRuntime::new(dir).unwrap()))
+    }
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(1), Some(16));
+        assert_eq!(bucket_for(16), Some(16));
+        assert_eq!(bucket_for(17), Some(256));
+        assert_eq!(bucket_for(10_000), Some(16384));
+        assert_eq!(bucket_for(20_000), None);
+    }
+
+    #[test]
+    fn xla_math_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let xla = XlaMath::new(rt);
+        let native = super::super::vector::NativeMath;
+        for n in [1usize, 7, 16, 100, 5000, 20000] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 3.0).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64).sin() * 100.0).collect();
+            let mut acc1 = a.clone();
+            xla.add_assign(&mut acc1, &b);
+            let mut acc2 = a.clone();
+            native.add_assign(&mut acc2, &b);
+            assert_eq!(acc1, acc2, "add n={n}");
+            let f1 = xla.finalize(&a, &b, 7.0);
+            let f2 = native.finalize(&a, &b, 7.0);
+            for (x, y) in f1.iter().zip(&f2) {
+                assert!((x - y).abs() < 1e-12, "finalize n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn xla_math_usable_from_many_threads() {
+        let Some(rt) = runtime() else { return };
+        let xla = Arc::new(XlaMath::new(rt));
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let xla = xla.clone();
+                std::thread::spawn(move || {
+                    let a = vec![t as f64; 100];
+                    let b = vec![1.0; 100];
+                    let r = xla.mask(&a, &b);
+                    assert_eq!(r[0], t as f64 + 1.0);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let Some(rt) = runtime() else { return };
+        let ts = TrainStepExecutable::load(rt).unwrap();
+        let mut rng = crate::crypto::DeterministicRng::seed(3);
+        use crate::crypto::rng::SecureRng;
+        let mut params: Vec<f32> =
+            (0..ts.param_count()).map(|_| (rng.next_f64() as f32 - 0.5) * 0.2).collect();
+        let x: Vec<f32> = (0..ts.batch * ts.dim_in).map(|_| rng.next_f64() as f32).collect();
+        // Learnable target: y = mean(x) per row replicated.
+        let y: Vec<f32> = (0..ts.batch)
+            .flat_map(|r| {
+                let m: f32 =
+                    x[r * ts.dim_in..(r + 1) * ts.dim_in].iter().sum::<f32>() / ts.dim_in as f32;
+                vec![m; ts.dim_out]
+            })
+            .collect();
+        let l0 = ts.loss(&params, &x, &y).unwrap();
+        for _ in 0..50 {
+            let (p, _l) = ts.step(&params, &x, &y, 0.1).unwrap();
+            params = p;
+        }
+        let l1 = ts.loss(&params, &x, &y).unwrap();
+        assert!(l1 < l0 * 0.5, "loss did not decrease: {l0} -> {l1}");
+    }
+}

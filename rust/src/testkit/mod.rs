@@ -1,0 +1,136 @@
+//! Property-testing mini-framework.
+//!
+//! `proptest` is not in the offline crate cache, so this provides the
+//! subset the suite needs: seeded generators, N-case property checks with
+//! the failing seed printed for reproduction, and a crude shrink loop for
+//! vector-shaped inputs (halve until the property passes).
+
+use crate::crypto::rng::{DeterministicRng, SecureRng};
+
+/// Run `prop` on `cases` generated inputs. Panics on the first failure,
+/// printing the case index and generator seed so the failure replays.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut DeterministicRng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let base_seed = 0x5AFE_0000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let mut rng = DeterministicRng::seed(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}); input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but shrinks failing `Vec` inputs by halving before
+/// reporting, to print a smaller counterexample.
+pub fn check_vec<E: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut DeterministicRng) -> Vec<E>,
+    mut prop: impl FnMut(&[E]) -> bool,
+) {
+    let base_seed = 0x5AFE_1000u64;
+    for case in 0..cases {
+        let seed = base_seed + case as u64;
+        let mut rng = DeterministicRng::seed(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Shrink: try halves repeatedly.
+            let mut smallest = input.clone();
+            let mut cur = input;
+            loop {
+                let half = cur.len() / 2;
+                if half == 0 {
+                    break;
+                }
+                let lo = cur[..half].to_vec();
+                let hi = cur[half..].to_vec();
+                if !prop(&lo) {
+                    smallest = lo.clone();
+                    cur = lo;
+                } else if !prop(&hi) {
+                    smallest = hi.clone();
+                    cur = hi;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed at case {case} (seed {seed:#x}); shrunk input ({} elems): {smallest:?}",
+                smallest.len()
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use super::*;
+
+    pub fn f64_vec(rng: &mut DeterministicRng, max_len: usize) -> Vec<f64> {
+        let len = 1 + rng.next_below(max_len.max(1));
+        (0..len).map(|_| (rng.next_f64() - 0.5) * 2000.0).collect()
+    }
+
+    pub fn bytes(rng: &mut DeterministicRng, max_len: usize) -> Vec<u8> {
+        let len = rng.next_below(max_len + 1);
+        let mut v = vec![0u8; len];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    pub fn ascii_string(rng: &mut DeterministicRng, max_len: usize) -> String {
+        let len = rng.next_below(max_len + 1);
+        (0..len)
+            .map(|_| (32 + rng.next_below(95) as u8) as char)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_valid_property() {
+        check("add-commutes", 50, |r| (r.next_u64() % 1000, r.next_u64() % 1000), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-false\" failed")]
+    fn check_reports_failure() {
+        check("always-false", 5, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn check_vec_shrinks() {
+        check_vec(
+            "no-big-values",
+            5,
+            |r| gen::bytes(r, 64),
+            |v| v.iter().all(|&b| b < 250),
+        );
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = DeterministicRng::seed(1);
+        for _ in 0..100 {
+            let v = gen::f64_vec(&mut rng, 10);
+            assert!((1..=10).contains(&v.len()));
+            let s = gen::ascii_string(&mut rng, 20);
+            assert!(s.len() <= 20);
+            assert!(s.chars().all(|c| c.is_ascii() && !c.is_ascii_control()));
+        }
+    }
+}

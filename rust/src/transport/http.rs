@@ -1,0 +1,387 @@
+//! Minimal HTTP/1.1 server and client over `std::net`.
+//!
+//! A deliberate substrate: the offline crate cache has no tokio/hyper, and
+//! the paper's controller is a plain REST server. We implement exactly what
+//! the protocol needs:
+//!
+//! * POST with `Content-Length` bodies (JSON), responses `200 OK`.
+//! * Keep-alive connections (one learner holds one connection).
+//! * Thread-per-connection server — correct for long-polling handlers that
+//!   block inside the controller (a blocked poll only parks its own thread).
+//! * Graceful shutdown via a poison connection.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::{ClientTransport, Handler, MessageStats};
+use crate::json::Value;
+
+/// Threaded HTTP server wrapping a [`Handler`].
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` (use port 0 for an ephemeral port) and start serving.
+    pub fn start(addr: &str, handler: Arc<dyn Handler>) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let shutdown2 = shutdown.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if shutdown2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let h = handler.clone();
+                            let sd = shutdown2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("http-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(s, h, sd);
+                                });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(HttpServer { addr: local, shutdown, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Poke the accept loop so it notices the flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    handler: Arc<dyn Handler>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let req = match read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean EOF
+            Err(e) => {
+                let _ = write_response(&mut stream, 400, &format!("{{\"error\":\"{e}\"}}"));
+                return Ok(());
+            }
+        };
+        let body_json = if req.body.is_empty() {
+            Value::obj()
+        } else {
+            match crate::json::parse(std::str::from_utf8(&req.body).unwrap_or("")) {
+                Ok(v) => v,
+                Err(e) => {
+                    write_response(&mut stream, 400, &format!("{{\"error\":\"bad json: {e}\"}}"))?;
+                    continue;
+                }
+            }
+        };
+        let resp = handler.handle(&req.path, &body_json);
+        write_response(&mut stream, 200, &resp.to_string())?;
+        if !req.keep_alive {
+            return Ok(());
+        }
+    }
+}
+
+struct Request {
+    path: String,
+    body: Vec<u8>,
+    keep_alive: bool,
+}
+
+fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let path = parts.next().context("missing path")?.to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1").to_string();
+    if method != "POST" && method != "GET" {
+        bail!("unsupported method {method}");
+    }
+    let mut content_length = 0usize;
+    let mut keep_alive = version.ends_with("1.1");
+    loop {
+        let mut h = String::new();
+        let n = reader.read_line(&mut h)?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim();
+            if k == "content-length" {
+                content_length = v.parse().context("bad content-length")?;
+            } else if k == "connection" {
+                keep_alive = !v.eq_ignore_ascii_case("close");
+            }
+        }
+    }
+    const MAX_BODY: usize = 256 << 20; // 256 MiB guard
+    if content_length > MAX_BODY {
+        bail!("body too large: {content_length}");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(Request { path, body, keep_alive }))
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// HTTP client transport with a persistent keep-alive connection.
+pub struct HttpTransport {
+    addr: SocketAddr,
+    conn: Mutex<Option<TcpStream>>,
+    stats: Arc<MessageStats>,
+    /// Read timeout; must exceed the controller's long-poll window.
+    pub read_timeout: Duration,
+}
+
+impl HttpTransport {
+    pub fn connect(url: &str) -> Result<HttpTransport> {
+        let addr_str = url.strip_prefix("http://").unwrap_or(url);
+        let addr: SocketAddr = addr_str.parse().with_context(|| format!("bad address {url}"))?;
+        Ok(HttpTransport {
+            addr,
+            conn: Mutex::new(None),
+            stats: Arc::new(MessageStats::default()),
+            read_timeout: Duration::from_secs(600),
+        })
+    }
+
+    pub fn stats(&self) -> Arc<MessageStats> {
+        self.stats.clone()
+    }
+
+    fn request_once(&self, stream: &mut TcpStream, path: &str, body: &str) -> Result<Value> {
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            self.addr,
+            body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body.as_bytes())?;
+        stream.flush()?;
+
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        if status_line.is_empty() {
+            bail!("server closed connection");
+        }
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .context("bad status line")?
+            .parse()
+            .context("bad status code")?;
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            let n = reader.read_line(&mut h)?;
+            if n == 0 {
+                bail!("connection closed mid-headers");
+            }
+            if h.trim_end().is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.trim_end().split_once(':') {
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = v.trim().parse().context("bad content-length")?;
+                }
+            }
+        }
+        let mut resp_body = vec![0u8; content_length];
+        reader.read_exact(&mut resp_body)?;
+        if status != 200 {
+            bail!("HTTP {status}: {}", String::from_utf8_lossy(&resp_body));
+        }
+        crate::json::parse(std::str::from_utf8(&resp_body)?)
+    }
+}
+
+impl ClientTransport for HttpTransport {
+    fn call(&self, path: &str, body: &Value) -> Result<Value> {
+        let body_str = body.to_string();
+        self.stats.record(path, body_str.len());
+        let mut guard = self.conn.lock().unwrap();
+        // Try on the cached connection first, reconnect once on failure.
+        for attempt in 0..2 {
+            if guard.is_none() {
+                let s = TcpStream::connect(self.addr)
+                    .with_context(|| format!("connect {}", self.addr))?;
+                s.set_nodelay(true).ok();
+                s.set_read_timeout(Some(self.read_timeout)).ok();
+                *guard = Some(s);
+            }
+            let stream = guard.as_mut().unwrap();
+            match self.request_once(stream, path, &body_str) {
+                Ok(v) => return Ok(v),
+                Err(e) if attempt == 0 => {
+                    *guard = None; // drop stale connection and retry
+                    let _ = e;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        unreachable!()
+    }
+
+    fn message_count(&self) -> u64 {
+        self.stats.total()
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.stats.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Handler for Echo {
+        fn handle(&self, path: &str, body: &Value) -> Value {
+            Value::object(vec![("path", Value::from(path)), ("echo", body.clone())])
+        }
+    }
+
+    struct SlowHandler;
+    impl Handler for SlowHandler {
+        fn handle(&self, _path: &str, _body: &Value) -> Value {
+            std::thread::sleep(Duration::from_millis(150));
+            Value::object(vec![("done", Value::from(true))])
+        }
+    }
+
+    #[test]
+    fn http_roundtrip() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let client = HttpTransport::connect(&server.url()).unwrap();
+        let body = Value::object(vec![("node", Value::from(3u64)), ("agg", Value::from("x:y:z"))]);
+        let resp = client.call("/post_aggregate", &body).unwrap();
+        assert_eq!(resp.str_of("path"), Some("/post_aggregate"));
+        assert_eq!(resp.get("echo"), Some(&body));
+    }
+
+    #[test]
+    fn http_keepalive_multiple_requests() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let client = HttpTransport::connect(&server.url()).unwrap();
+        for i in 0..20u64 {
+            let resp = client
+                .call("/x", &Value::object(vec![("i", Value::from(i))]))
+                .unwrap();
+            assert_eq!(resp.get("echo").unwrap().u64_of("i"), Some(i));
+        }
+        assert_eq!(client.message_count(), 20);
+    }
+
+    #[test]
+    fn http_concurrent_clients_with_blocking_handler() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(SlowHandler)).unwrap();
+        let url = server.url();
+        let start = std::time::Instant::now();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let url = url.clone();
+                std::thread::spawn(move || {
+                    let client = HttpTransport::connect(&url).unwrap();
+                    client.call("/slow", &Value::obj()).unwrap()
+                })
+            })
+            .collect();
+        for t in threads {
+            let resp = t.join().unwrap();
+            assert_eq!(resp.bool_of("done"), Some(true));
+        }
+        // Thread-per-connection: 8 × 150 ms handlers must overlap.
+        assert!(start.elapsed() < Duration::from_millis(800), "handlers did not run concurrently");
+    }
+
+    #[test]
+    fn http_large_body() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let client = HttpTransport::connect(&server.url()).unwrap();
+        let big: Vec<f64> = (0..50_000).map(|i| i as f64).collect();
+        let resp = client
+            .call("/big", &Value::object(vec![("v", Value::from(big.clone()))]))
+            .unwrap();
+        assert_eq!(resp.get("echo").unwrap().f64_arr_of("v").unwrap(), big);
+    }
+
+    #[test]
+    fn server_survives_bad_requests() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        // Send garbage on a raw socket.
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        s.write_all(b"NONSENSE\r\n\r\n").unwrap();
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        // Server should still answer proper requests afterwards.
+        let client = HttpTransport::connect(&server.url()).unwrap();
+        let resp = client.call("/ok", &Value::obj()).unwrap();
+        assert_eq!(resp.str_of("path"), Some("/ok"));
+    }
+}

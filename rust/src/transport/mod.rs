@@ -1,0 +1,211 @@
+//! Transport substrate: how learners reach the controller.
+//!
+//! The paper runs REST/HTTPS between multi-threaded clients and a Flask
+//! server (§2, §6). We provide two interchangeable transports behind the
+//! same request/response interface:
+//!
+//! * [`InProcTransport`] — learners call the controller service directly
+//!   (one OS thread per learner, exactly like the paper's edge benchmark
+//!   where "each learner node is run concurrently in separate threads").
+//!   Optionally injects a per-message latency to model the REST hop.
+//! * [`http::HttpTransport`] / [`http::HttpServer`] — a from-scratch
+//!   HTTP/1.1 client/server over `std::net` (tokio is not in the offline
+//!   crate cache), with keep-alive and long-poll friendly blocking
+//!   handlers. Used by the integration tests, the `safe` CLI processes and
+//!   the hierarchical-federation example.
+//!
+//! Every call is counted so the benches can verify the paper's message
+//! complexity formulas (`4n`, `4n + 2f`, `(i+1)(4n+2f+in)`, `+g`).
+
+pub mod http;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::json::Value;
+
+/// Server-side request handler (the controller implements this).
+/// Handlers may block (long-polling `get_*`/`check_*` ops).
+pub trait Handler: Send + Sync {
+    fn handle(&self, path: &str, body: &Value) -> Value;
+}
+
+/// Client-side view of the wire.
+pub trait ClientTransport: Send + Sync {
+    fn call(&self, path: &str, body: &Value) -> anyhow::Result<Value>;
+    /// Messages sent through this transport so far.
+    fn message_count(&self) -> u64;
+    /// Bytes sent (request bodies) through this transport so far.
+    fn bytes_sent(&self) -> u64;
+}
+
+/// Per-path message counters shared by the transports.
+#[derive(Default)]
+pub struct MessageStats {
+    total: AtomicU64,
+    bytes: AtomicU64,
+    per_path: Mutex<BTreeMap<String, u64>>,
+}
+
+impl MessageStats {
+    pub fn record(&self, path: &str, bytes: usize) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        let mut map = self.per_path.lock().unwrap();
+        *map.entry(path.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn per_path(&self) -> BTreeMap<String, u64> {
+        self.per_path.lock().unwrap().clone()
+    }
+
+    pub fn reset(&self) {
+        self.total.store(0, Ordering::Relaxed);
+        self.bytes.store(0, Ordering::Relaxed);
+        self.per_path.lock().unwrap().clear();
+    }
+}
+
+/// Direct in-process transport: the default for benchmarks (deterministic,
+/// no socket noise) — mirrors the paper's single-machine edge setup.
+pub struct InProcTransport {
+    handler: Arc<dyn Handler>,
+    stats: Arc<MessageStats>,
+    /// Simulated one-way network latency applied to each call (the REST
+    /// hop the paper's numbers include). Zero by default.
+    pub latency: Duration,
+    /// Simulated transfer cost per KiB of body (request + response) —
+    /// models the REST stack's per-byte handling.
+    pub per_kib: Duration,
+}
+
+impl InProcTransport {
+    pub fn new(handler: Arc<dyn Handler>) -> Self {
+        InProcTransport {
+            handler,
+            stats: Arc::new(MessageStats::default()),
+            latency: Duration::ZERO,
+            per_kib: Duration::ZERO,
+        }
+    }
+
+    pub fn with_latency(handler: Arc<dyn Handler>, latency: Duration) -> Self {
+        InProcTransport {
+            handler,
+            stats: Arc::new(MessageStats::default()),
+            latency,
+            per_kib: Duration::ZERO,
+        }
+    }
+
+    pub fn with_shared_stats(
+        handler: Arc<dyn Handler>,
+        stats: Arc<MessageStats>,
+        latency: Duration,
+    ) -> Self {
+        InProcTransport { handler, stats, latency, per_kib: Duration::ZERO }
+    }
+
+    /// Full cost model: fixed hop latency + per-KiB transfer cost.
+    pub fn with_costs(
+        handler: Arc<dyn Handler>,
+        stats: Arc<MessageStats>,
+        latency: Duration,
+        per_kib: Duration,
+    ) -> Self {
+        InProcTransport { handler, stats, latency, per_kib }
+    }
+
+    fn charge(&self, bytes: usize) {
+        let mut d = self.latency;
+        if !self.per_kib.is_zero() {
+            d += self.per_kib.mul_f64(bytes as f64 / 1024.0);
+        }
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+
+    pub fn stats(&self) -> Arc<MessageStats> {
+        self.stats.clone()
+    }
+}
+
+impl ClientTransport for InProcTransport {
+    fn call(&self, path: &str, body: &Value) -> anyhow::Result<Value> {
+        // Faithful to the REST deployment: the body really crosses a
+        // JSON boundary in both directions (client serialize → server
+        // parse, and back), so INSEC's big cleartext float arrays pay
+        // their true serialization cost — that asymmetry is what drives
+        // the paper's Figs 9/12 crossovers.
+        let encoded = body.to_string();
+        self.stats.record(path, encoded.len());
+        self.charge(encoded.len());
+        let decoded = crate::json::parse(&encoded)?;
+        let resp = self.handler.handle(path, &decoded);
+        let resp_encoded = resp.to_string();
+        self.charge(resp_encoded.len());
+        crate::json::parse(&resp_encoded)
+    }
+
+    fn message_count(&self) -> u64 {
+        self.stats.total()
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.stats.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl Handler for Echo {
+        fn handle(&self, path: &str, body: &Value) -> Value {
+            Value::object(vec![("path", Value::from(path)), ("echo", body.clone())])
+        }
+    }
+
+    #[test]
+    fn inproc_roundtrip_and_counting() {
+        let t = InProcTransport::new(Arc::new(Echo));
+        let body = Value::object(vec![("x", Value::from(1u64))]);
+        let resp = t.call("/post_aggregate", &body).unwrap();
+        assert_eq!(resp.str_of("path"), Some("/post_aggregate"));
+        assert_eq!(resp.get("echo"), Some(&body));
+        assert_eq!(t.message_count(), 1);
+        assert!(t.bytes_sent() > 0);
+        t.call("/get_average", &body).unwrap();
+        assert_eq!(t.message_count(), 2);
+        let per = t.stats().per_path();
+        assert_eq!(per.get("/post_aggregate"), Some(&1));
+        assert_eq!(per.get("/get_average"), Some(&1));
+    }
+
+    #[test]
+    fn shared_stats_accumulate_across_clients() {
+        let stats = Arc::new(MessageStats::default());
+        let h: Arc<dyn Handler> = Arc::new(Echo);
+        let t1 = InProcTransport::with_shared_stats(h.clone(), stats.clone(), Duration::ZERO);
+        let t2 = InProcTransport::with_shared_stats(h, stats.clone(), Duration::ZERO);
+        t1.call("/a", &Value::obj()).unwrap();
+        t2.call("/a", &Value::obj()).unwrap();
+        t2.call("/b", &Value::obj()).unwrap();
+        assert_eq!(stats.total(), 3);
+        assert_eq!(stats.per_path().get("/a"), Some(&2));
+        stats.reset();
+        assert_eq!(stats.total(), 0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Failure-injection matrix: every fault point × position combination the
+//! protocol must survive (§5.3/§5.4), plus multi-failure and adjacent-
+//! failure cases the paper calls out as the hard ones.
+
+use std::time::Duration;
+
+use safe_agg::config::{DeviceProfile, SessionConfig};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::{FailPoint, FaultPlan};
+use safe_agg::protocols::SafeSession;
+
+fn cfg(n: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features: 2,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        poll_time: Duration::from_millis(120),
+        aggregation_timeout: Duration::from_secs(2),
+        progress_timeout: Duration::from_millis(400),
+        monitor_interval: Duration::from_millis(60),
+        ..Default::default()
+    }
+}
+
+fn inputs(n: usize) -> Vec<Vec<f64>> {
+    (1..=n).map(|i| vec![i as f64, 10.0 * i as f64]).collect()
+}
+
+fn expect_mean(n: usize, dead: &[u64]) -> f64 {
+    let alive: Vec<f64> = (1..=n as u64)
+        .filter(|i| !dead.contains(i))
+        .map(|i| i as f64)
+        .collect();
+    alive.iter().sum::<f64>() / alive.len() as f64
+}
+
+fn run_case(n: usize, faults: FaultPlan, dead_contributors: &[u64]) {
+    let session = SafeSession::new(cfg(n)).unwrap();
+    let result = session.run_round(&inputs(n), &faults).unwrap();
+    let expect = expect_mean(n, dead_contributors);
+    assert!(
+        (result.average()[0] - expect).abs() < 1e-6,
+        "n={n} faults={faults:?}: got {} want {expect}",
+        result.average()[0]
+    );
+    assert_eq!(
+        result.metrics.contributors,
+        (n - dead_contributors.len()) as u64,
+        "contributor count for {faults:?}"
+    );
+}
+
+#[test]
+fn single_failure_every_noninitiator_position() {
+    // A node at each non-initiator position dies before starting.
+    for pos in 2..=6u64 {
+        run_case(6, FaultPlan::none().kill(pos, FailPoint::NeverStart), &[pos]);
+    }
+}
+
+#[test]
+fn failure_after_get_is_recovered() {
+    // The hard case from §5.3: the mailbox was already drained when the
+    // node died, so the monitor must reconstruct the stuck link from the
+    // poster set.
+    for pos in 2..=5u64 {
+        run_case(6, FaultPlan::none().kill(pos, FailPoint::AfterGet), &[pos]);
+    }
+}
+
+#[test]
+fn failure_after_post_keeps_contribution() {
+    // Dying after posting: the value IS in the aggregate; only the dead
+    // node misses the result. Average must cover all n nodes.
+    let n = 5;
+    let session = SafeSession::new(cfg(n)).unwrap();
+    let faults = FaultPlan::none().kill(3, FailPoint::AfterPost);
+    let result = session.run_round(&inputs(n), &faults).unwrap();
+    let expect = (1..=5).sum::<i32>() as f64 / 5.0;
+    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert_eq!(result.metrics.contributors, 5);
+    // The dead node has no average; survivors do.
+    assert_eq!(result.survivors().len(), 4);
+}
+
+#[test]
+fn two_adjacent_failures() {
+    // §5.3 explicitly worries about "two nodes next to each other on the
+    // chain fail simultaneously".
+    run_case(
+        7,
+        FaultPlan::none()
+            .kill(3, FailPoint::NeverStart)
+            .kill(4, FailPoint::NeverStart),
+        &[3, 4],
+    );
+}
+
+#[test]
+fn three_failures_spread_out() {
+    run_case(
+        9,
+        FaultPlan::none()
+            .kill(2, FailPoint::NeverStart)
+            .kill(5, FailPoint::AfterGet)
+            .kill(8, FailPoint::NeverStart),
+        &[2, 5, 8],
+    );
+}
+
+#[test]
+fn last_node_failure() {
+    // The failed node is the one that would close the loop back to the
+    // initiator — repost must wrap around the chain end.
+    run_case(5, FaultPlan::none().kill(5, FailPoint::NeverStart), &[5]);
+}
+
+#[test]
+fn initiator_crash_recovers_with_new_initiator() {
+    let n = 5;
+    let session = SafeSession::new(cfg(n)).unwrap();
+    let faults = FaultPlan::none().kill(1, FailPoint::InitiatorAfterPost);
+    let result = session.run_round(&inputs(n), &faults).unwrap();
+    assert!(result.metrics.initiator_failovers >= 1);
+    let expect = (2 + 3 + 4 + 5) as f64 / 4.0;
+    assert!((result.average()[0] - expect).abs() < 1e-6);
+    let new_init = result
+        .outcomes
+        .iter()
+        .find(|o| !o.died && o.was_initiator)
+        .unwrap()
+        .node;
+    assert_ne!(new_init, 1);
+}
+
+#[test]
+fn initiator_crash_plus_noninitiator_failure() {
+    // Compound: the initiator dies AND node 4 never starts.
+    let n = 6;
+    let session = SafeSession::new(cfg(n)).unwrap();
+    let faults = FaultPlan::none()
+        .kill(1, FailPoint::InitiatorAfterPost)
+        .kill(4, FailPoint::NeverStart);
+    let result = session.run_round(&inputs(n), &faults).unwrap();
+    let expect = (2 + 3 + 5 + 6) as f64 / 4.0;
+    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert_eq!(result.metrics.contributors, 4);
+}
+
+#[test]
+fn subgroup_failure_isolated_to_one_group() {
+    // §5.5: "a single node failure does not break the entire aggregation,
+    // just a single subgroup". 8 nodes in 2 groups; node 6 (group 2) dies.
+    let mut c = cfg(8);
+    c.groups = 2;
+    let session = SafeSession::new(c).unwrap();
+    let faults = FaultPlan::none().kill(6, FailPoint::NeverStart);
+    let result = session.run_round(&inputs(8), &faults).unwrap();
+    // Group 1 average: (1+2+3+4)/4 = 2.5; group 2: (5+7+8)/3 = 6.667;
+    // global = mean of group means.
+    let expect = (2.5 + (5.0 + 7.0 + 8.0) / 3.0) / 2.0;
+    assert!((result.average()[0] - expect).abs() < 1e-6);
+}

@@ -1,0 +1,87 @@
+//! Integration: the full SAFE protocol over the real HTTP transport —
+//! controller served on a loopback socket, learners as HTTP clients,
+//! exactly the paper's REST deployment shape.
+
+use std::time::Duration;
+
+use safe_agg::config::{DeviceProfile, SessionConfig, TransportKind};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::{FailPoint, FaultPlan};
+use safe_agg::protocols::SafeSession;
+
+fn http_cfg(n: usize, features: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        transport: TransportKind::Http { url: "spawn".into() },
+        poll_time: Duration::from_millis(150),
+        aggregation_timeout: Duration::from_secs(15),
+        progress_timeout: Duration::from_millis(800),
+        monitor_interval: Duration::from_millis(100),
+        ..Default::default()
+    }
+}
+
+fn inputs(n: usize, features: usize) -> Vec<Vec<f64>> {
+    (1..=n)
+        .map(|i| (0..features).map(|f| i as f64 * 2.0 + f as f64 * 0.25).collect())
+        .collect()
+}
+
+#[test]
+fn safe_round_over_http() {
+    let cfg = http_cfg(4, 3);
+    let session = SafeSession::new(cfg).unwrap();
+    let ins = inputs(4, 3);
+    let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
+    // mean of 2,4,6,8 = 5 for feature 0
+    assert!((result.average()[0] - 5.0).abs() < 1e-6);
+    assert_eq!(result.metrics.contributors, 4);
+}
+
+#[test]
+fn safe_http_with_progress_failover() {
+    let cfg = http_cfg(6, 2);
+    let session = SafeSession::new(cfg).unwrap();
+    let ins = inputs(6, 2);
+    let result = session
+        .run_round(&ins, &FaultPlan::none().kill(3, FailPoint::AfterGet))
+        .unwrap();
+    // Node 3 consumed then died: 5 contributors.
+    assert_eq!(result.metrics.contributors, 5);
+    assert!(result.metrics.progress_failovers >= 1);
+    let expect = (2.0 + 4.0 + 8.0 + 10.0 + 12.0) / 5.0;
+    assert!((result.average()[0] - expect).abs() < 1e-6);
+}
+
+#[test]
+fn safe_http_large_vectors() {
+    let cfg = http_cfg(3, 5000);
+    let session = SafeSession::new(cfg).unwrap();
+    let ins = inputs(3, 5000);
+    let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
+    assert_eq!(result.average().len(), 5000);
+    // spot-check a few features
+    for f in [0usize, 1234, 4999] {
+        let expect = (ins[0][f] + ins[1][f] + ins[2][f]) / 3.0;
+        assert!((result.average()[f] - expect).abs() < 1e-6, "feature {f}");
+    }
+}
+
+#[test]
+fn repeated_rounds_reuse_session() {
+    // Key exchange happens once; aggregation rounds repeat (paper
+    // footnote 3). Runs 3 rounds on one session over HTTP.
+    let cfg = http_cfg(4, 2);
+    let session = SafeSession::new(cfg).unwrap();
+    for round in 0..3 {
+        let ins: Vec<Vec<f64>> =
+            (1..=4).map(|i| vec![(i * (round + 1)) as f64; 2]).collect();
+        let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
+        let expect = (1 + 2 + 3 + 4) as f64 * (round + 1) as f64 / 4.0;
+        assert!((result.average()[0] - expect).abs() < 1e-6, "round {round}");
+    }
+}

@@ -1,0 +1,309 @@
+//! Property-based tests on protocol invariants, using the in-house
+//! testkit (proptest is not in the offline crate cache).
+//!
+//! Invariants covered:
+//!  * masking cancels: SAFE's average equals the cleartext mean for any
+//!    inputs, any node count, any cipher mode;
+//!  * SAFE, INSEC and BON all converge to the same mean on the same data;
+//!  * weighted encode/decode inverts for arbitrary weights;
+//!  * Shamir share → reconstruct is the identity at ≥ t shares;
+//!  * envelope seal/open roundtrips for every mode under arbitrary data;
+//!  * chain routing: next_alive skips any failed set and stays in chain.
+
+use std::time::Duration;
+
+use safe_agg::config::{DeviceProfile, SessionConfig};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::crypto::rng::{DeterministicRng, SecureRng};
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::protocols::bon::BonSession;
+use safe_agg::protocols::insec::InsecSession;
+use safe_agg::protocols::{weighted, SafeSession};
+use safe_agg::testkit;
+
+fn quick_cfg(n: usize, features: usize, seed: u64) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        poll_time: Duration::from_millis(150),
+        aggregation_timeout: Duration::from_secs(15),
+        progress_timeout: Duration::from_secs(4),
+        seed: Some(seed),
+        ..Default::default()
+    }
+}
+
+fn mean(inputs: &[Vec<f64>]) -> Vec<f64> {
+    let n = inputs.len() as f64;
+    let mut out = vec![0.0; inputs[0].len()];
+    for v in inputs {
+        for (a, x) in out.iter_mut().zip(v) {
+            *a += x;
+        }
+    }
+    out.iter_mut().for_each(|a| *a /= n);
+    out
+}
+
+fn random_inputs(rng: &mut DeterministicRng, n: usize, features: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..features).map(|_| (rng.next_f64() - 0.5) * 200.0).collect())
+        .collect()
+}
+
+#[test]
+fn prop_safe_average_equals_cleartext_mean() {
+    testkit::check(
+        "safe-mean",
+        6,
+        |rng| {
+            let n = 3 + rng.next_below(4); // 3..6 nodes
+            let features = 1 + rng.next_below(16);
+            let inputs = random_inputs(rng, n, features);
+            (n, features, inputs, rng.next_u64())
+        },
+        |(n, features, inputs, seed)| {
+            let session = SafeSession::new(quick_cfg(*n, *features, *seed)).unwrap();
+            let result = session.run_round(inputs, &FaultPlan::none()).unwrap();
+            let expect = mean(inputs);
+            result
+                .average()
+                .iter()
+                .zip(&expect)
+                .all(|(a, e)| (a - e).abs() < 1e-6)
+        },
+    );
+}
+
+#[test]
+fn prop_all_protocols_agree() {
+    testkit::check(
+        "protocols-agree",
+        3,
+        |rng| {
+            let n = 3 + rng.next_below(3);
+            let inputs = random_inputs(rng, n, 4);
+            (n, inputs, rng.next_u64())
+        },
+        |(n, inputs, seed)| {
+            let expect = mean(inputs);
+            let safe = SafeSession::new(quick_cfg(*n, 4, *seed))
+                .unwrap()
+                .run_round(inputs, &FaultPlan::none())
+                .unwrap();
+            let insec = InsecSession::new(quick_cfg(*n, 4, *seed))
+                .unwrap()
+                .run_round(inputs, &FaultPlan::none())
+                .unwrap();
+            let mut bon_cfg = quick_cfg(*n, 4, *seed);
+            bon_cfg.progress_timeout = Duration::from_millis(500);
+            let bon = BonSession::new(bon_cfg)
+                .unwrap()
+                .run_round(inputs, &FaultPlan::none())
+                .unwrap();
+            let close = |v: &[f64], tol: f64| {
+                v.iter().zip(&expect).all(|(a, e)| (a - e).abs() < tol)
+            };
+            close(safe.average(), 1e-6) && close(&insec.average, 1e-9) && close(&bon.average, 1e-5)
+        },
+    );
+}
+
+#[test]
+fn prop_weighted_encode_decode_inverts() {
+    testkit::check(
+        "weighted-inverse",
+        200,
+        |rng| {
+            let features = 1 + rng.next_below(20);
+            let x: Vec<f64> =
+                (0..features).map(|_| (rng.next_f64() - 0.5) * 100.0).collect();
+            let w = 1.0 + rng.next_f64() * 10_000.0;
+            (x, w)
+        },
+        |(x, w)| {
+            let enc = weighted::encode(x, *w);
+            let dec = weighted::decode(&enc).unwrap();
+            dec.iter().zip(x).all(|(a, b)| (a - b).abs() < 1e-9 * (1.0 + b.abs()))
+        },
+    );
+}
+
+#[test]
+fn prop_shamir_roundtrip() {
+    use safe_agg::crypto::shamir;
+    testkit::check(
+        "shamir-roundtrip",
+        100,
+        |rng| {
+            let secret = testkit::gen::bytes(rng, 64);
+            let n = 3 + rng.next_below(8);
+            let t = 2 + rng.next_below(n - 1);
+            (secret, n as u64, t)
+        },
+        |(secret, n, t)| {
+            let mut rng = DeterministicRng::seed(1);
+            let xs: Vec<u64> = (1..=*n).collect();
+            let shares = shamir::share_secret(secret, *t, &xs, &mut rng).unwrap();
+            // Reconstruct from exactly t shares taken from the tail.
+            let subset = &shares[shares.len() - *t..];
+            shamir::reconstruct_secret(subset).unwrap() == *secret
+        },
+    );
+}
+
+#[test]
+fn prop_envelope_roundtrip_all_modes() {
+    use safe_agg::crypto::envelope::Envelope;
+    use safe_agg::crypto::rsa::RsaKeyPair;
+    use safe_agg::crypto::SymmetricKey;
+    let mut keyrng = DeterministicRng::seed(99);
+    let kp = RsaKeyPair::generate(512, &mut keyrng);
+    let sym = SymmetricKey::generate(&mut keyrng);
+    testkit::check(
+        "envelope-roundtrip",
+        60,
+        |rng| {
+            let v = testkit::gen::f64_vec(rng, 300);
+            let mode = match rng.next_below(4) {
+                0 => CipherMode::None,
+                1 => CipherMode::RsaOnly,
+                2 => CipherMode::Hybrid,
+                _ => CipherMode::PreNegotiated,
+            };
+            let compress = rng.next_below(2) == 0;
+            (v, mode, compress)
+        },
+        |(v, mode, compress)| {
+            let mut rng = DeterministicRng::seed(7);
+            let env = Envelope::seal(v, *mode, Some(&kp.public), Some(&sym), *compress, &mut rng)
+                .unwrap();
+            // Wire roundtrip too.
+            let decoded = Envelope::decode(&env.encode()).unwrap();
+            decoded.open(Some(&kp.private), Some(&sym)).unwrap() == *v
+        },
+    );
+}
+
+#[test]
+fn prop_next_alive_routing() {
+    use safe_agg::controller::state::GroupState;
+    testkit::check(
+        "next-alive",
+        300,
+        |rng| {
+            let n = 3 + rng.next_below(30);
+            let chain: Vec<u64> = (1..=n as u64).collect();
+            let mut failed = std::collections::BTreeSet::new();
+            for node in &chain {
+                if rng.next_below(4) == 0 {
+                    failed.insert(*node);
+                }
+            }
+            let from = chain[rng.next_below(n)];
+            (chain, failed, from)
+        },
+        |(chain, failed, from)| {
+            let mut gs = GroupState::new(chain.clone());
+            gs.failed = failed.clone();
+            match gs.next_alive_after(*from) {
+                Some(next) => {
+                    // Must be in chain, not failed, not self (unless only
+                    // survivor), and the *nearest* live successor.
+                    if !chain.contains(&next) || failed.contains(&next) {
+                        return false;
+                    }
+                    let pos = chain.iter().position(|n| n == from).unwrap();
+                    for step in 1..chain.len() {
+                        let cand = chain[(pos + step) % chain.len()];
+                        if !failed.contains(&cand) {
+                            return cand == next;
+                        }
+                    }
+                    false
+                }
+                None => {
+                    // Correct only when every other node failed.
+                    chain.iter().all(|n| n == from || failed.contains(n))
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn weighted_full_protocol_run() {
+    // End-to-end §5.6: three learners with very different sample counts.
+    let mut cfg = quick_cfg(3, 2, 5);
+    cfg.weighted = true;
+    let session = SafeSession::new(cfg).unwrap();
+    let xs = [vec![2.0, -1.0], vec![5.0, 3.0], vec![8.0, 1.0]];
+    let ws = [1000.0, 10000.0, 100.0];
+    let inputs: Vec<Vec<f64>> =
+        xs.iter().zip(&ws).map(|(x, &w)| weighted::encode(x, w)).collect();
+    let result = session.run_round(&inputs, &FaultPlan::none()).unwrap();
+    let avg = weighted::decode(result.average()).unwrap();
+    let total_w: f64 = ws.iter().sum();
+    for f in 0..2 {
+        let expect: f64 =
+            xs.iter().zip(&ws).map(|(x, &w)| x[f] * w).sum::<f64>() / total_w;
+        assert!((avg[f] - expect).abs() < 1e-6, "feature {f}: {} vs {}", avg[f], expect);
+    }
+}
+
+#[test]
+fn shuffled_chains_still_average_correctly() {
+    // §8 discussion: chain order randomized between rounds; correctness
+    // must be order-independent and the initiator must rotate.
+    let mut cfg = quick_cfg(6, 3, 77);
+    cfg.shuffle_chain_each_round = true;
+    let session = SafeSession::new(cfg).unwrap();
+    let inputs: Vec<Vec<f64>> = (1..=6).map(|i| vec![i as f64; 3]).collect();
+    let expect = mean(&inputs);
+    let mut initiators = std::collections::BTreeSet::new();
+    for _ in 0..4 {
+        let result = session.run_round(&inputs, &FaultPlan::none()).unwrap();
+        for (a, e) in result.average().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6);
+        }
+        initiators.insert(
+            result.outcomes.iter().find(|o| o.was_initiator).unwrap().node,
+        );
+    }
+    assert!(
+        initiators.len() > 1,
+        "shuffling should rotate the initiator across rounds: {initiators:?}"
+    );
+}
+
+#[test]
+fn staggered_polling_reduces_concurrent_polls() {
+    // §5.9: staggering first polls lowers the controller's long-poll
+    // connection pressure without breaking the protocol.
+    let inputs: Vec<Vec<f64>> = (1..=8).map(|i| vec![i as f64]).collect();
+    let expect = mean(&inputs);
+    let run = |stagger: Duration| {
+        let mut cfg = quick_cfg(8, 1, 3);
+        // A small per-hop latency slows the chain enough that unstaggered
+        // nodes reliably all park in get_aggregate before it reaches them.
+        cfg.profile = DeviceProfile::edge();
+        cfg.profile.network_hop = Duration::from_millis(4);
+        cfg.stagger_step = stagger;
+        let session = SafeSession::new(cfg).unwrap();
+        session.controller.reset_poll_gauge();
+        let result = session.run_round(&inputs, &FaultPlan::none()).unwrap();
+        for (a, e) in result.average().iter().zip(&expect) {
+            assert!((a - e).abs() < 1e-6);
+        }
+        session.controller.peak_concurrent_polls()
+    };
+    let peak_unstaggered = run(Duration::ZERO);
+    let peak_staggered = run(Duration::from_millis(60));
+    assert!(
+        peak_staggered < peak_unstaggered,
+        "staggering should lower poll pressure: {peak_staggered} vs {peak_unstaggered}"
+    );
+}
