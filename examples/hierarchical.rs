@@ -57,17 +57,20 @@ fn main() -> anyhow::Result<()> {
                 .map(|i| vec![(child_id * 100 + i as u64) as f64; cfg.features])
                 .collect();
             let result = session.run_round(&inputs, &FaultPlan::none())?;
+            let child_avg = result
+                .average()
+                .ok_or_else(|| anyhow::anyhow!("no surviving learners"))?;
             println!(
                 "child {child_id}: {} learners aggregated in {:.3}s → {:?}",
                 n,
                 result.metrics.secs(),
-                &result.average()[..1]
+                &child_avg[..1]
             );
             // §5.10: post the (already anonymized) child average upward.
             let parent_link: Arc<dyn ClientTransport> =
                 Arc::new(HttpTransport::connect(&url)?);
             let bridge = FederationBridge::new(child_id, parent_link);
-            bridge.post_child_average(result.average(), result.metrics.contributors)?;
+            bridge.post_child_average(child_avg, result.metrics.contributors)?;
             let (global, total) = bridge.get_global_average(Duration::from_secs(10))?;
             println!("child {child_id}: received global average over {total} learners");
             Ok((child_id, global))

@@ -1,0 +1,130 @@
+//! Wire-codec bench (E21): JSON vs binary codec — encode/decode cost for
+//! the hot message shapes, and whole-round wire-size ratios at growing
+//! feature counts. The JSON column is the paper-parity default; the
+//! binary column is what a deployment that controls both endpoints can
+//! switch on with `SessionConfig::wire`.
+use std::time::Instant;
+
+use safe_agg::config::{DeviceProfile, SessionConfig, WireFormat};
+use safe_agg::harness::bench_repeats;
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::proto;
+use safe_agg::proto::codec::{BinaryCodec, JsonCodec, WireCodec};
+use safe_agg::protocols::SafeSession;
+use safe_agg::util::b64_encode;
+
+fn encode_decode_table() {
+    println!("── E21a: codec encode+decode cost (post_average shape) ──");
+    println!(
+        "{:>9} {:>12} {:>12} {:>10} {:>10} {:>7}",
+        "features", "json", "binary", "json B", "bin B", "ratio"
+    );
+    for features in [64usize, 1024, 10_000, 100_000] {
+        let avg: Vec<f64> = (0..features).map(|i| i as f64 * 0.12345 + 0.67).collect();
+        let msg = proto::PostAverage { node: 1, group: 1, average: avg, contributors: 15 }
+            .to_value();
+        let iters = (1_000_000 / features.max(1)).clamp(3, 200) as u32;
+        let t = Instant::now();
+        let mut jlen = 0;
+        for _ in 0..iters {
+            let bytes = JsonCodec.encode(&msg);
+            jlen = bytes.len();
+            JsonCodec.decode(&bytes).unwrap();
+        }
+        let json_cost = t.elapsed() / iters;
+        let t = Instant::now();
+        let mut blen = 0;
+        for _ in 0..iters {
+            let bytes = BinaryCodec.encode(&msg);
+            blen = bytes.len();
+            BinaryCodec.decode(&bytes).unwrap();
+        }
+        let bin_cost = t.elapsed() / iters;
+        println!(
+            "{:>9} {:>12.2?} {:>12.2?} {:>10} {:>10} {:>6.2}x",
+            features,
+            json_cost,
+            bin_cost,
+            jlen,
+            blen,
+            jlen as f64 / blen as f64
+        );
+    }
+    // The ciphertext-carrying path: a sealed aggregate rides as a string
+    // either way; binary drops the JSON quoting/field framing.
+    let payload = vec![0x5au8; 8192];
+    let agg = proto::PostAggregate {
+        from_node: 1,
+        to_node: 2,
+        group: 1,
+        aggregate: format!("safe:{}:{}", b64_encode(&payload[..64]), b64_encode(&payload)),
+        round_id: Some(0),
+    }
+    .to_value();
+    let j = JsonCodec.encode(&agg).len();
+    let b = BinaryCodec.encode(&agg).len();
+    println!("post_aggregate (1024-feature sealed payload): json {j} B, binary {b} B");
+    println!();
+}
+
+fn session_ratio_table() -> anyhow::Result<()> {
+    println!("── E21b: whole-round wire bytes, SAFE 4 nodes (json vs binary) ──");
+    println!(
+        "{:>9} {:>12} {:>12} {:>7} {:>9}",
+        "features", "json B", "binary B", "ratio", "messages"
+    );
+    let repeats = bench_repeats(1).max(1);
+    for features in [64usize, 1024, 10_000] {
+        let mut totals = [0u64; 2];
+        let mut msgs = [0u64; 2];
+        for (i, wire) in [WireFormat::Json, WireFormat::Binary].into_iter().enumerate() {
+            let cfg = SessionConfig {
+                n_nodes: 4,
+                features,
+                rsa_bits: 512,
+                profile: DeviceProfile::instant(),
+                poll_time: std::time::Duration::from_secs(5),
+                // Keep failover out of the picture so message counts stay
+                // comparable even on a loaded machine.
+                progress_timeout: std::time::Duration::from_secs(30),
+                aggregation_timeout: std::time::Duration::from_secs(60),
+                wire,
+                ..Default::default()
+            };
+            let session = SafeSession::new(cfg)?;
+            // Full-mantissa inputs: realistic model weights serialize at
+            // ~17 significant digits as JSON, which is what raw-f64
+            // binary framing is up against.
+            let inputs: Vec<Vec<f64>> = (1..=4)
+                .map(|n| {
+                    (0..features)
+                        .map(|f| n as f64 + f as f64 * 0.707_106_781_186_547_6)
+                        .collect()
+                })
+                .collect();
+            for _ in 0..repeats {
+                let round = session.run_round(&inputs, &FaultPlan::none())?;
+                totals[i] += round.metrics.bytes_sent + round.metrics.bytes_received;
+                msgs[i] = round.metrics.messages;
+            }
+            // Sanity: all traffic was attributed to the session's codec.
+            assert!(session.stats().codec_bytes(wire) > 0);
+        }
+        println!(
+            "{:>9} {:>12} {:>12} {:>6.2}x {:>9}",
+            features,
+            totals[0],
+            totals[1],
+            totals[0] as f64 / totals[1] as f64,
+            msgs[1]
+        );
+        assert_eq!(msgs[0], msgs[1], "codec must not change message counts");
+        assert!(totals[1] < totals[0], "binary must ship fewer bytes");
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    encode_decode_table();
+    session_ratio_table()
+}

@@ -9,6 +9,7 @@ pub mod profile;
 use std::time::Duration;
 
 use crate::crypto::envelope::CipherMode;
+pub use crate::proto::codec::WireFormat;
 pub use profile::DeviceProfile;
 
 /// How learners talk to the controller.
@@ -53,6 +54,9 @@ pub struct SessionConfig {
     pub profile: DeviceProfile,
     /// Controller transport.
     pub transport: TransportKind,
+    /// Wire codec for message bodies (JSON = paper parity, the default;
+    /// binary = length-prefixed fields + raw little-endian f64 vectors).
+    pub wire: WireFormat,
     /// Vector math engine.
     pub engine: VectorEngine,
     /// Max single long-poll block at the controller.
@@ -87,6 +91,7 @@ impl Default for SessionConfig {
             weighted: false,
             profile: DeviceProfile::edge(),
             transport: TransportKind::InProc,
+            wire: WireFormat::Json,
             engine: VectorEngine::Native,
             poll_time: Duration::from_millis(250),
             aggregation_timeout: Duration::from_secs(30),
@@ -201,6 +206,9 @@ impl Args {
         if let Some(url) = self.get("controller-url") {
             cfg.transport = TransportKind::Http { url: url.to_string() };
         }
+        if let Some(w) = self.get("wire").and_then(WireFormat::from_name) {
+            cfg.wire = w;
+        }
         if let Some(s) = self.get("seed") {
             cfg.seed = s.parse().ok();
         }
@@ -258,6 +266,16 @@ mod tests {
         assert_eq!(cfg.mode, CipherMode::None);
         assert!(cfg.weighted);
         assert_eq!(cfg.seed, Some(7));
+    }
+
+    #[test]
+    fn wire_flag_selects_codec() {
+        let a = Args::parse(["run", "--wire", "binary"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().wire, WireFormat::Binary);
+        let a = Args::parse(["run"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().wire, WireFormat::Json);
+        let a = Args::parse(["run", "--wire", "bogus"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().wire, WireFormat::Json);
     }
 
     #[test]

@@ -191,16 +191,12 @@ pub fn pairwise_seed(shared: &BigUint) -> [u8; 32] {
 }
 
 pub fn advertise(ctrl: &Controller, body: &Value) -> Value {
-    let node = match body.u64_of("node") {
-        Some(n) => n,
-        None => return proto::status("missing node"),
-    };
-    let (cpk, spk) = match (body.str_of("cpk"), body.str_of("spk")) {
-        (Some(c), Some(s)) => (c.to_string(), s.to_string()),
-        _ => return proto::status("missing keys"),
+    let req = match proto::BonAdvertise::from_value(body) {
+        Ok(r) => r,
+        Err(e) => return proto::status(&e.to_string()),
     };
     let mut inner = ctrl.inner.lock().unwrap();
-    inner.bon.keys.insert(node, (cpk, spk));
+    inner.bon.keys.insert(req.node, (req.cpk, req.spk));
     ctrl.cv.notify_all();
     proto::status("ok")
 }
@@ -280,19 +276,15 @@ pub fn get_shares(ctrl: &Controller, body: &Value) -> Value {
 }
 
 pub fn post_masked(ctrl: &Controller, body: &Value) -> Value {
-    let node = match body.u64_of("node") {
-        Some(n) => n,
-        None => return proto::status("missing node"),
-    };
-    let y = match body.f64_arr_of("y") {
-        Some(v) => v,
-        None => return proto::status("missing y"),
+    let req = match proto::BonPostMasked::from_value(body) {
+        Ok(r) => r,
+        Err(e) => return proto::status(&e.to_string()),
     };
     let mut inner = ctrl.inner.lock().unwrap();
     if inner.bon.round2_closed {
         return proto::status("round_closed");
     }
-    inner.bon.masked.insert(node, y);
+    inner.bon.masked.insert(req.node, req.y);
     inner.bon.last_masked_at = Some(Instant::now());
     let timeout = inner.config.bon_round2_timeout;
     inner.bon.maybe_close_round2(timeout);

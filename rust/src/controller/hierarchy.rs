@@ -52,17 +52,15 @@ impl FedState {
 }
 
 pub fn post_child_average(ctrl: &Controller, body: &Value) -> Value {
-    let child = match body.u64_of("child") {
-        Some(c) => c,
-        None => return proto::status("missing child"),
+    let req = match proto::FedChildAverage::from_value(body) {
+        Ok(r) => r,
+        Err(e) => return proto::status(&e.to_string()),
     };
-    let avg = match body.f64_arr_of("average") {
-        Some(a) => a,
-        None => return proto::status("missing average"),
-    };
-    let contributors = body.u64_of("contributors").unwrap_or(1);
     let mut inner = ctrl.inner.lock().unwrap();
-    inner.fed.child_averages.insert(child, (avg, contributors));
+    inner
+        .fed
+        .child_averages
+        .insert(req.child, (req.average, req.contributors));
     ctrl.cv.notify_all();
     proto::status("ok")
 }
@@ -71,11 +69,9 @@ pub fn get_global_average(ctrl: &Controller, body: &Value) -> Value {
     let _ = body;
     let poll = ctrl.inner.lock().unwrap().config.poll_time;
     match ctrl.wait_until(poll, |inner| inner.fed.global()) {
-        Some((avg, total)) => Value::object(vec![
-            ("status", Value::from("ok")),
-            ("average", Value::from(avg)),
-            ("contributors", Value::from(total)),
-        ]),
+        Some((avg, total)) => {
+            proto::FedGlobalAverage { average: avg, contributors: total }.into_value()
+        }
         None => proto::status("empty"),
     }
 }

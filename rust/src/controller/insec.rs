@@ -74,17 +74,13 @@ impl InsecState {
 }
 
 pub fn post(ctrl: &Controller, body: &Value) -> Value {
-    let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
-        (Some(n), Some(g)) => (n, g),
-        _ => return proto::status("missing fields"),
-    };
-    let vector = match body.f64_arr_of("vector") {
-        Some(v) => v,
-        None => return proto::status("missing vector"),
+    let req = match proto::InsecPost::from_value(body) {
+        Ok(r) => r,
+        Err(e) => return proto::status(&e.to_string()),
     };
     let mut inner = ctrl.inner.lock().unwrap();
-    inner.insec.posts.entry(group).or_default().insert(node, vector);
-    inner.insec.try_close(group);
+    inner.insec.posts.entry(req.group).or_default().insert(req.node, req.vector);
+    inner.insec.try_close(req.group);
     ctrl.cv.notify_all();
     proto::status("ok")
 }
@@ -93,11 +89,7 @@ pub fn get_average(ctrl: &Controller, body: &Value) -> Value {
     let _ = body;
     let poll = ctrl.inner.lock().unwrap().config.poll_time;
     match ctrl.wait_until(poll, |inner| inner.insec.global_average()) {
-        Some((avg, groups)) => Value::object(vec![
-            ("status", Value::from("ok")),
-            ("average", Value::from(avg)),
-            ("groups", Value::from(groups)),
-        ]),
+        Some((avg, groups)) => proto::AverageReady { average: avg, groups }.into_value(),
         None => proto::status("empty"),
     }
 }

@@ -217,106 +217,94 @@ impl Controller {
     // ---- SAFE core ops ----
 
     fn post_aggregate(&self, body: &Value) -> Value {
-        let (from, to, group) = match (
-            body.u64_of("from_node"),
-            body.u64_of("to_node"),
-            body.u64_of("group"),
-        ) {
-            (Some(f), Some(t), Some(g)) => (f, t, g),
-            _ => return proto::status("missing fields"),
+        let req = match proto::PostAggregate::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
         };
-        let agg = match body.str_of("aggregate") {
-            Some(a) => a.to_string(),
-            None => return proto::status("missing aggregate"),
-        };
-        let round_id = body.u64_of("round_id");
         let mut inner = self.inner.lock().unwrap();
-        let gs = match inner.groups.get_mut(&group) {
+        let gs = match inner.groups.get_mut(&req.group) {
             Some(g) => g,
             None => return proto::status("unknown group"),
         };
         // Reject posts from nodes already declared failed (late/stale posts
         // after a repost was issued would double-count their contribution).
-        if gs.failed.contains(&from) {
+        if gs.failed.contains(&req.from_node) {
             return proto::status("stale");
         }
         // Reject posts from a previous round (pre-initiator-failover).
-        if let Some(r) = round_id {
+        if let Some(r) = req.round_id {
             if r != gs.round_id {
                 return proto::status("stale_round");
             }
         }
         let now = Instant::now();
         gs.mailbox.insert(
-            to,
-            PostedAggregate { aggregate: agg, from_node: from, posted_at: now },
+            req.to_node,
+            PostedAggregate { aggregate: req.aggregate, from_node: req.from_node, posted_at: now },
         );
-        gs.posters.insert(from);
+        gs.posters.insert(req.from_node);
         // `from` has done its part: whoever is checking on `from` learns
         // the chain advanced through it.
-        gs.check.insert(from, CheckStatus::Consumed);
+        gs.check.insert(req.from_node, CheckStatus::Consumed);
         gs.last_activity = now;
         self.cv.notify_all();
         proto::status("ok")
     }
 
     fn get_aggregate(&self, body: &Value) -> Value {
-        let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
-            (Some(n), Some(g)) => (n, g),
-            _ => return proto::status("missing fields"),
+        let op = match proto::NodeOp::from_value(body) {
+            Ok(o) => o,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
         let res = self.wait_until_gauged(poll, |inner| {
-            let gs = inner.groups.get_mut(&group)?;
-            let posted = gs.mailbox.remove(&node)?;
+            let gs = inner.groups.get_mut(&op.group)?;
+            let posted = gs.mailbox.remove(&op.node)?;
             Some((posted, gs.posters.len() as u64, gs.round_id))
         });
         match res {
-            Some((posted, contributors, round_id)) => Value::object(vec![
-                ("status", Value::from("ok")),
-                ("aggregate", Value::from(posted.aggregate)),
-                ("from_node", Value::from(posted.from_node)),
-                ("posted", Value::from(contributors)),
-                ("round_id", Value::from(round_id)),
-            ]),
+            Some((posted, contributors, round_id)) => proto::AggregateDelivery {
+                aggregate: posted.aggregate,
+                from_node: posted.from_node,
+                posted: Some(contributors),
+                round_id: Some(round_id),
+            }
+            .into_value(),
             None => proto::status("empty"),
         }
     }
 
     fn check_aggregate(&self, body: &Value) -> Value {
-        let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
-            (Some(n), Some(g)) => (n, g),
-            _ => return proto::status("missing fields"),
+        let op = match proto::NodeOp::from_value(body) {
+            Ok(o) => o,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
         let res = self.wait_until(poll, |inner| {
-            let gs = inner.groups.get_mut(&group)?;
-            gs.check.remove(&node)
+            let gs = inner.groups.get_mut(&op.group)?;
+            gs.check.remove(&op.node)
         });
         match res {
-            Some(CheckStatus::Consumed) => proto::status("consumed"),
-            Some(CheckStatus::Repost { new_target }) => Value::object(vec![
-                ("status", Value::from("repost")),
-                ("to_node", Value::from(new_target)),
-            ]),
+            Some(CheckStatus::Consumed) => proto::CheckOutcome::Consumed.to_value(),
+            Some(CheckStatus::Repost { new_target }) => {
+                proto::CheckOutcome::Repost { to_node: new_target }.to_value()
+            }
             None => proto::status("empty"),
         }
     }
 
     fn post_average(&self, body: &Value) -> Value {
-        let group = body.u64_of("group").unwrap_or(1);
-        let avg = match body.f64_arr_of("average") {
-            Some(a) => a,
-            None => return proto::status("missing average"),
+        let req = match proto::PostAverage::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
         };
-        let contributors = body.u64_of("contributors").unwrap_or(0);
         let mut inner = self.inner.lock().unwrap();
-        let gs = match inner.groups.get_mut(&group) {
+        let gs = match inner.groups.get_mut(&req.group) {
             Some(g) => g,
             None => return proto::status("unknown group"),
         };
-        gs.average = Some(avg);
-        gs.average_contributors = contributors;
+        gs.average = Some(req.average);
+        gs.average_contributors = req.contributors;
         gs.last_activity = Instant::now();
         self.cv.notify_all();
         proto::status("ok")
@@ -356,37 +344,33 @@ impl Controller {
             Some((avg, count as u64))
         });
         match res {
-            Some((avg, groups)) => Value::object(vec![
-                ("status", Value::from("ok")),
-                ("average", Value::from(avg)),
-                ("groups", Value::from(groups)),
-            ]),
+            Some((avg, groups)) => proto::AverageReady { average: avg, groups }.into_value(),
             None => proto::status("empty"),
         }
     }
 
     fn should_initiate(&self, body: &Value) -> Value {
-        let (node, group) = match (body.u64_of("node"), body.u64_of("group")) {
-            (Some(n), Some(g)) => (n, g),
-            _ => return proto::status("missing fields"),
+        let op = match proto::NodeOp::from_value(body) {
+            Ok(o) => o,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let mut inner = self.inner.lock().unwrap();
         let timeout = inner.config.aggregation_timeout;
-        let gs = match inner.groups.get_mut(&group) {
+        let gs = match inner.groups.get_mut(&op.group) {
             Some(g) => g,
             None => return proto::status("unknown group"),
         };
-        if gs.failed.contains(&node) {
-            return Value::object(vec![("init", Value::from(false))]);
+        if gs.failed.contains(&op.node) {
+            return proto::InitiateDecision { init: false, round_id: gs.round_id }.to_value();
         }
         let elected = if gs.initiator.is_none() {
-            gs.initiator = Some(node);
+            gs.initiator = Some(op.node);
             gs.round_start = Instant::now();
             true
         } else if gs.average.is_none() && gs.round_start.elapsed() > timeout {
             // Initiator failover (§5.4): first caller after the timeout
             // wins and the whole round restarts.
-            gs.restart_round(node);
+            gs.restart_round(op.node);
             true
         } else {
             false
@@ -394,10 +378,7 @@ impl Controller {
         if elected {
             self.cv.notify_all();
         }
-        Value::object(vec![
-            ("init", Value::from(elected)),
-            ("round_id", Value::from(gs.round_id)),
-        ])
+        proto::InitiateDecision { init: elected, round_id: gs.round_id }.to_value()
     }
 
     /// Monitor entry point (§5.3): detect stuck links and issue reposts.
@@ -453,59 +434,49 @@ impl Controller {
     // ---- key registry (round 0) ----
 
     fn register_key(&self, body: &Value) -> Value {
-        let node = match body.u64_of("node") {
-            Some(n) => n,
-            None => return proto::status("missing node"),
-        };
-        let key = match body.get("key") {
-            Some(k) => k.clone(),
-            None => return proto::status("missing key"),
+        let req = match proto::RegisterKey::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let mut inner = self.inner.lock().unwrap();
-        inner.keys.insert(node, key);
+        inner.keys.insert(req.node, req.key);
         self.cv.notify_all();
         proto::status("ok")
     }
 
     fn get_key(&self, body: &Value) -> Value {
-        let node = match body.u64_of("node") {
-            Some(n) => n,
-            None => return proto::status("missing node"),
+        let req = match proto::GetKey::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
-        match self.wait_until(poll, |inner| inner.keys.get(&node).cloned()) {
-            Some(k) => Value::object(vec![("status", Value::from("ok")), ("key", k)]),
+        match self.wait_until(poll, |inner| inner.keys.get(&req.node).cloned()) {
+            Some(k) => proto::KeyDelivery { key: k }.to_value(),
             None => proto::status("empty"),
         }
     }
 
     fn post_preneg_keys(&self, body: &Value) -> Value {
-        let owner = match body.u64_of("node") {
-            Some(n) => n,
-            None => return proto::status("missing node"),
-        };
-        let keys = match body.get("keys") {
-            Some(Value::Obj(m)) => m.clone(),
-            _ => return proto::status("missing keys"),
+        let req = match proto::PostPrenegKeys::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let mut inner = self.inner.lock().unwrap();
-        for (to_str, blob) in keys {
-            if let (Ok(to), Some(b)) = (to_str.parse::<u64>(), blob.as_str()) {
-                inner.preneg.insert((owner, to), b.to_string());
-            }
+        for (to, blob) in req.keys {
+            inner.preneg.insert((req.node, to), blob);
         }
         self.cv.notify_all();
         proto::status("ok")
     }
 
     fn get_preneg_key(&self, body: &Value) -> Value {
-        let (node, owner) = match (body.u64_of("node"), body.u64_of("owner")) {
-            (Some(n), Some(o)) => (n, o),
-            _ => return proto::status("missing fields"),
+        let req = match proto::GetPrenegKey::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
-        match self.wait_until(poll, |inner| inner.preneg.get(&(owner, node)).cloned()) {
-            Some(k) => Value::object(vec![("status", Value::from("ok")), ("key", Value::from(k))]),
+        match self.wait_until(poll, |inner| inner.preneg.get(&(req.owner, req.node)).cloned()) {
+            Some(k) => proto::PrenegKeyDelivery { key: k }.to_value(),
             None => proto::status("empty"),
         }
     }

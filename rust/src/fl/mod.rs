@@ -111,7 +111,8 @@ pub fn run_federated(
         }
         // SAFE aggregation round (weighted by sample counts, §5.6).
         let result = session.run_round(&locals, &FaultPlan::none())?;
-        let global = weighted::decode(&result.average())?;
+        let agreed = result.average().context("no surviving learners")?;
+        let global = weighted::decode(agreed)?;
         params = global.iter().map(|&v| v as f32).collect();
 
         // Validation loss on the shared model.

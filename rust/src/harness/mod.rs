@@ -187,6 +187,7 @@ mod tests {
                 wall_time: Duration::from_secs_f64(s),
                 messages: 12,
                 bytes_sent: 0,
+                bytes_received: 0,
                 average: vec![],
                 contributors: 3,
                 progress_failovers: 0,

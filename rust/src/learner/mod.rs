@@ -18,7 +18,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::config::profile::{DeviceProfile, OpKind};
 use crate::crypto::envelope::{CipherMode, Envelope};
@@ -260,15 +260,23 @@ enum StepResult {
 
 /// Ask the controller whether we should take over as initiator (§5.4).
 fn election(ctx: &LearnerContext) -> Result<StepResult> {
-    let resp = ctx.call(proto::SHOULD_INITIATE, &proto::node_op(ctx.node, ctx.group))?;
-    let elected = resp.bool_of("init").unwrap_or(false);
-    let new_round = resp.u64_of("round_id").unwrap_or(0);
-    Ok(StepResult::Restart { elected, new_round })
+    let resp = ctx.call(
+        proto::SHOULD_INITIATE,
+        &proto::NodeOp::new(ctx.node, ctx.group).to_value(),
+    )?;
+    let decision = proto::InitiateDecision::from_value(&resp)?;
+    Ok(StepResult::Restart { elected: decision.init, new_round: decision.round_id })
 }
 
 fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64) -> Result<Value> {
-    let mut body = proto::post_aggregate(ctx.node, to, &env.encode(), ctx.group);
-    body.set("round_id", Value::from(round_id));
+    let body = proto::PostAggregate {
+        from_node: ctx.node,
+        to_node: to,
+        group: ctx.group,
+        aggregate: env.encode(),
+        round_id: Some(round_id),
+    }
+    .to_value();
     ctx.call(proto::POST_AGGREGATE, &body)
 }
 
@@ -286,21 +294,18 @@ fn post_and_watch(
     let env = ctx.seal_for(vector, to)?;
     post_with_round(ctx, to, &env, round_id)?;
     loop {
-        match ctx.wait_for(proto::CHECK_AGGREGATE, &proto::node_op(to, ctx.group), deadline)? {
+        let check_body = proto::NodeOp::new(to, ctx.group).to_value();
+        match ctx.wait_for(proto::CHECK_AGGREGATE, &check_body, deadline)? {
             None => return Ok(false),
-            Some(resp) => match resp.str_of("status") {
-                Some("consumed") => return Ok(true),
-                Some("repost") => {
+            Some(resp) => match proto::CheckOutcome::from_value(&resp)? {
+                proto::CheckOutcome::Consumed => return Ok(true),
+                proto::CheckOutcome::Repost { to_node: new_target } => {
                     // §5.3: re-encrypt for the node after the failed one.
-                    let new_target = resp
-                        .u64_of("to_node")
-                        .context("repost response missing to_node")?;
                     *reposts += 1;
                     let env = ctx.seal_for(vector, new_target)?;
                     post_with_round(ctx, new_target, &env, round_id)?;
                     to = new_target;
                 }
-                other => bail!("unexpected check_aggregate status {:?}", other),
             },
         }
     }
@@ -326,28 +331,27 @@ fn run_initiator(
         return Ok(StepResult::Died);
     }
     // 3. Wait for the final aggregate from the last node in the chain.
-    let resp =
-        match ctx.wait_for(proto::GET_AGGREGATE, &proto::node_op(ctx.node, ctx.group), deadline)? {
-            Some(r) => r,
-            None => return election(ctx),
-        };
-    let agg_str = resp.str_of("aggregate").context("missing aggregate")?;
-    let contributors = resp.u64_of("posted").unwrap_or(ctx.chain.len() as u64);
-    let from = resp.u64_of("from_node").unwrap_or(0);
-    let env = Envelope::decode(agg_str)?;
-    let agg = ctx.open_from(&env, from)?;
+    let poll_body = proto::NodeOp::new(ctx.node, ctx.group).to_value();
+    let resp = match ctx.wait_for(proto::GET_AGGREGATE, &poll_body, deadline)? {
+        Some(r) => r,
+        None => return election(ctx),
+    };
+    let delivery = proto::AggregateDelivery::from_value(&resp)?;
+    let contributors = delivery.posted.unwrap_or(ctx.chain.len() as u64);
+    let env = Envelope::decode(&delivery.aggregate)?;
+    let agg = ctx.open_from(&env, delivery.from_node)?;
     // 4. Unmask, divide by the contributor count the controller reported
     //    (n, or n−f after progress failovers), publish (§5.1.1, §5.3).
     let average = ctx.math.finalize(&agg, &mask, contributors as f64);
     ctx.call(
         proto::POST_AVERAGE,
-        &proto::post_average(ctx.node, ctx.group, &average, contributors),
+        &proto::PostAverage::body(ctx.node, ctx.group, &average, contributors),
     )?;
     // With subgroups the initiator also pulls the global cross-group
     // average (§5.5 — the "+g" message in the formula).
     let final_avg = if ctx.multi_group() {
-        match ctx.wait_for(proto::GET_AVERAGE, &proto::node_op(ctx.node, ctx.group), deadline)? {
-            Some(r) => r.f64_arr_of("average").context("missing average")?,
+        match ctx.wait_for(proto::GET_AVERAGE, &poll_body, deadline)? {
+            Some(r) => proto::AverageReady::from_value(&r)?.average,
             None => return election(ctx),
         }
     } else {
@@ -370,19 +374,18 @@ fn run_non_initiator(
         std::thread::sleep(ctx.stagger_delay);
     }
     // 1. Wait for the previous node's aggregate (§5.1.2).
-    let resp =
-        match ctx.wait_for(proto::GET_AGGREGATE, &proto::node_op(ctx.node, ctx.group), deadline)? {
-            Some(r) => r,
-            None => return election(ctx),
-        };
+    let poll_body = proto::NodeOp::new(ctx.node, ctx.group).to_value();
+    let resp = match ctx.wait_for(proto::GET_AGGREGATE, &poll_body, deadline)? {
+        Some(r) => r,
+        None => return election(ctx),
+    };
     if faults.fails_at(ctx.node, FailPoint::AfterGet) {
         return Ok(StepResult::Died);
     }
-    let agg_str = resp.str_of("aggregate").context("missing aggregate")?;
-    let from = resp.u64_of("from_node").unwrap_or(0);
-    let msg_round = resp.u64_of("round_id").unwrap_or(round_id);
-    let env = Envelope::decode(agg_str)?;
-    let mut agg = ctx.open_from(&env, from)?;
+    let delivery = proto::AggregateDelivery::from_value(&resp)?;
+    let msg_round = delivery.round_id.unwrap_or(round_id);
+    let env = Envelope::decode(&delivery.aggregate)?;
+    let mut agg = ctx.open_from(&env, delivery.from_node)?;
     // 2. Add the local vector, re-encrypt for our successor, post, watch.
     ctx.math.add_assign(&mut agg, local);
     let next = ctx.successor(ctx.node);
@@ -393,9 +396,9 @@ fn run_non_initiator(
         return Ok(StepResult::Died);
     }
     // 3. Wait for the published average (§5.1.2 step 4).
-    match ctx.wait_for(proto::GET_AVERAGE, &proto::node_op(ctx.node, ctx.group), deadline)? {
+    match ctx.wait_for(proto::GET_AVERAGE, &poll_body, deadline)? {
         Some(r) => {
-            let avg = r.f64_arr_of("average").context("missing average")?;
+            let avg = proto::AverageReady::from_value(&r)?.average;
             Ok(StepResult::Done { average: avg, contributors: 0 })
         }
         None => election(ctx),

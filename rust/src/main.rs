@@ -48,6 +48,7 @@ fn print_help() {
            run     --nodes N --features F --mode saf|safe|rsa|preneg\n\
                    [--groups G] [--profile edge|deep-edge] [--weighted]\n\
                    [--fail-from A --fail-to B] [--engine native|xla|auto]\n\
+                   [--wire json|binary]   wire codec (default json)\n\
            insec   --nodes N --features F   INSEC baseline round\n\
            bon     --nodes N --features F   BON (Bonawitz) baseline round\n\
            train   --nodes N --rounds R [--local-steps S] [--lr LR]\n\
@@ -95,12 +96,13 @@ fn cmd_run(args: &Args) -> i32 {
     let cfg = args.to_session_config();
     let faults = faults_from(args);
     println!(
-        "SAFE round: {} nodes × {} features, mode={}, groups={}, profile={}",
+        "SAFE round: {} nodes × {} features, mode={}, groups={}, profile={}, wire={}",
         cfg.n_nodes,
         cfg.features,
         cfg.mode.name(),
         cfg.groups,
-        cfg.profile.name
+        cfg.profile.name,
+        cfg.wire.name()
     );
     match SafeSession::new(cfg.clone()).and_then(|s| s.run_round(&inputs_for(&cfg), &faults)) {
         Ok(result) => {

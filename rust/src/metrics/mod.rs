@@ -13,6 +13,8 @@ pub struct RoundMetrics {
     pub messages: u64,
     /// Request-body bytes sent by all learners.
     pub bytes_sent: u64,
+    /// Response-body bytes received by all learners.
+    pub bytes_received: u64,
     /// The final average every node received.
     pub average: Vec<f64>,
     /// Distinct nodes whose values are in the average.
@@ -72,6 +74,7 @@ mod tests {
             wall_time: Duration::from_secs_f64(secs),
             messages: msgs,
             bytes_sent: 0,
+            bytes_received: 0,
             average: vec![],
             contributors: 0,
             progress_failovers: 0,

@@ -1,8 +1,33 @@
-//! Wire protocol: REST paths and JSON body builders.
+//! Wire protocol: REST paths, typed messages, and pluggable codecs.
 //!
-//! One place that defines every operation name in the system, mirroring the
+//! One place that defines every operation in the system, mirroring the
 //! paper's controller API (§5.1.3 + Appendix A) plus the key-registry,
-//! pre-negotiation (§5.8), INSEC and BON baseline endpoints.
+//! pre-negotiation (§5.8), INSEC, BON and hierarchical-federation
+//! endpoints. Three layers:
+//!
+//! * **Paths** — the `&'static str` operation names (`/post_aggregate`,
+//!   …). One REST call = one protocol message, as counted by §5.2's
+//!   formulas.
+//! * **Typed messages** — request/response structs ([`PostAggregate`],
+//!   [`NodeOp`], [`PostAverage`], [`AggregateDelivery`], …) with
+//!   `to_value`/`from_value` conversions. The controller's dispatch and
+//!   the learner state machines build and parse these instead of poking
+//!   at ad-hoc JSON fields, so a message's shape is declared exactly once.
+//! * **Codecs** — [`codec::WireCodec`] turns the shared [`Value`] message
+//!   model into bytes: [`codec::JsonCodec`] (the paper's REST format, the
+//!   default) or [`codec::BinaryCodec`] (length-prefixed fields, raw
+//!   little-endian `f64` vectors). Transports select the codec per
+//!   [`codec::WireFormat`]; see `transport` for the plumbing.
+//!
+//! The legacy builder functions ([`post_aggregate`], [`node_op`],
+//! [`post_average`]) remain as thin wrappers over the typed structs for
+//! tests and tooling.
+
+pub mod codec;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
 
 use crate::json::Value;
 
@@ -44,29 +69,539 @@ pub const BON_GET_AVERAGE: &str = "/bon/get_average";
 pub const FED_POST_CHILD_AVERAGE: &str = "/fed/post_child_average";
 pub const FED_GET_GLOBAL_AVERAGE: &str = "/fed/get_global_average";
 
+// =====================================================================
+// Typed requests
+// =====================================================================
+
+/// `post_aggregate(from, to, aggregate)` — park an (opaque, possibly
+/// encrypted) aggregate for the next node on the chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PostAggregate {
+    pub from_node: u64,
+    pub to_node: u64,
+    pub group: u64,
+    /// Envelope text (`mode:keyB64:bodyB64`) — opaque to the controller.
+    pub aggregate: String,
+    /// Round the message belongs to; stale rounds are rejected (§5.4).
+    pub round_id: Option<u64>,
+}
+
+impl PostAggregate {
+    pub fn to_value(&self) -> Value {
+        let mut v = Value::object(vec![
+            ("from_node", Value::from(self.from_node)),
+            ("to_node", Value::from(self.to_node)),
+            ("group", Value::from(self.group)),
+            ("aggregate", Value::from(self.aggregate.as_str())),
+        ]);
+        if let Some(r) = self.round_id {
+            v.set("round_id", Value::from(r));
+        }
+        v
+    }
+
+    pub fn from_value(v: &Value) -> Result<PostAggregate> {
+        Ok(PostAggregate {
+            from_node: v.u64_of("from_node").context("missing from_node")?,
+            to_node: v.u64_of("to_node").context("missing to_node")?,
+            group: v.u64_of("group").context("missing group")?,
+            aggregate: v.str_of("aggregate").context("missing aggregate")?.to_string(),
+            round_id: v.u64_of("round_id"),
+        })
+    }
+}
+
+/// Node-scoped polling ops (`check_aggregate`, `get_aggregate`,
+/// `get_average`, `should_initiate`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeOp {
+    pub node: u64,
+    pub group: u64,
+}
+
+impl NodeOp {
+    pub fn new(node: u64, group: u64) -> NodeOp {
+        NodeOp { node, group }
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("group", Value::from(self.group)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<NodeOp> {
+        Ok(NodeOp {
+            node: v.u64_of("node").context("missing node")?,
+            group: v.u64_of("group").context("missing group")?,
+        })
+    }
+}
+
+/// `post_average` — the initiator publishes its group's unmasked average.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PostAverage {
+    pub node: u64,
+    pub group: u64,
+    pub average: Vec<f64>,
+    pub contributors: u64,
+}
+
+impl PostAverage {
+    /// Build the wire body straight from a borrowed average — the hot
+    /// path (initiators publish every round) skips the intermediate
+    /// `Vec` an owned struct would need.
+    pub fn body(node: u64, group: u64, average: &[f64], contributors: u64) -> Value {
+        Value::object(vec![
+            ("node", Value::from(node)),
+            ("group", Value::from(group)),
+            ("average", Value::from(average)),
+            ("contributors", Value::from(contributors)),
+        ])
+    }
+
+    pub fn to_value(&self) -> Value {
+        Self::body(self.node, self.group, &self.average, self.contributors)
+    }
+
+    pub fn from_value(v: &Value) -> Result<PostAverage> {
+        Ok(PostAverage {
+            node: v.u64_of("node").unwrap_or(0),
+            group: v.u64_of("group").unwrap_or(1),
+            average: v.f64_arr_of("average").context("missing average")?,
+            contributors: v.u64_of("contributors").unwrap_or(0),
+        })
+    }
+}
+
+/// `register_key` — round-0 public key registration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisterKey {
+    pub node: u64,
+    /// Serialized public key (opaque JSON object, e.g. RSA `{n, e}`).
+    pub key: Value,
+}
+
+impl RegisterKey {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("key", self.key.clone()),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<RegisterKey> {
+        Ok(RegisterKey {
+            node: v.u64_of("node").context("missing node")?,
+            key: v.get("key").context("missing key")?.clone(),
+        })
+    }
+}
+
+/// `get_key` — fetch a peer's registered public key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GetKey {
+    pub node: u64,
+}
+
+impl GetKey {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![("node", Value::from(self.node))])
+    }
+
+    pub fn from_value(v: &Value) -> Result<GetKey> {
+        Ok(GetKey { node: v.u64_of("node").context("missing node")? })
+    }
+}
+
+/// `post_preneg_keys` (§5.8) — one RSA-sealed symmetric key per peer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PostPrenegKeys {
+    pub node: u64,
+    /// peer node → base64 RSA-sealed key material.
+    pub keys: BTreeMap<u64, String>,
+}
+
+impl PostPrenegKeys {
+    pub fn to_value(&self) -> Value {
+        let mut keys = Value::obj();
+        for (peer, blob) in &self.keys {
+            keys.set(&peer.to_string(), Value::from(blob.as_str()));
+        }
+        Value::object(vec![("node", Value::from(self.node)), ("keys", keys)])
+    }
+
+    pub fn from_value(v: &Value) -> Result<PostPrenegKeys> {
+        let node = v.u64_of("node").context("missing node")?;
+        let mut keys = BTreeMap::new();
+        match v.get("keys") {
+            Some(Value::Obj(m)) => {
+                for (peer_str, blob) in m {
+                    if let (Ok(peer), Some(b)) = (peer_str.parse::<u64>(), blob.as_str()) {
+                        keys.insert(peer, b.to_string());
+                    }
+                }
+            }
+            _ => bail!("missing keys"),
+        }
+        Ok(PostPrenegKeys { node, keys })
+    }
+}
+
+/// `get_preneg_key` — fetch the key `owner` generated for `node`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GetPrenegKey {
+    pub node: u64,
+    pub owner: u64,
+}
+
+impl GetPrenegKey {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("owner", Value::from(self.owner)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<GetPrenegKey> {
+        Ok(GetPrenegKey {
+            node: v.u64_of("node").context("missing node")?,
+            owner: v.u64_of("owner").context("missing owner")?,
+        })
+    }
+}
+
+/// `insec/post` — the cleartext baseline's vector upload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InsecPost {
+    pub node: u64,
+    pub group: u64,
+    pub vector: Vec<f64>,
+}
+
+impl InsecPost {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("group", Value::from(self.group)),
+            ("vector", Value::from(&self.vector[..])),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<InsecPost> {
+        Ok(InsecPost {
+            node: v.u64_of("node").context("missing node")?,
+            group: v.u64_of("group").context("missing group")?,
+            vector: v.f64_arr_of("vector").context("missing vector")?,
+        })
+    }
+}
+
+/// `fed/post_child_average` (§5.10) — a child controller reports upward.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FedChildAverage {
+    pub child: u64,
+    pub average: Vec<f64>,
+    pub contributors: u64,
+}
+
+impl FedChildAverage {
+    /// Borrowed-average builder (see [`PostAverage::body`]).
+    pub fn body(child: u64, average: &[f64], contributors: u64) -> Value {
+        Value::object(vec![
+            ("child", Value::from(child)),
+            ("average", Value::from(average)),
+            ("contributors", Value::from(contributors)),
+        ])
+    }
+
+    pub fn to_value(&self) -> Value {
+        Self::body(self.child, &self.average, self.contributors)
+    }
+
+    pub fn from_value(v: &Value) -> Result<FedChildAverage> {
+        Ok(FedChildAverage {
+            child: v.u64_of("child").context("missing child")?,
+            average: v.f64_arr_of("average").context("missing average")?,
+            contributors: v.u64_of("contributors").unwrap_or(1),
+        })
+    }
+}
+
+/// `bon/advertise` — a BON participant's two DH public keys (round 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BonAdvertise {
+    pub node: u64,
+    pub cpk: String,
+    pub spk: String,
+}
+
+impl BonAdvertise {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("cpk", Value::from(self.cpk.as_str())),
+            ("spk", Value::from(self.spk.as_str())),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<BonAdvertise> {
+        Ok(BonAdvertise {
+            node: v.u64_of("node").context("missing node")?,
+            cpk: v.str_of("cpk").context("missing cpk")?.to_string(),
+            spk: v.str_of("spk").context("missing spk")?.to_string(),
+        })
+    }
+}
+
+/// `bon/post_masked` — a BON participant's masked input y_u (round 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BonPostMasked {
+    pub node: u64,
+    pub y: Vec<f64>,
+}
+
+impl BonPostMasked {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("y", Value::from(&self.y[..])),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<BonPostMasked> {
+        Ok(BonPostMasked {
+            node: v.u64_of("node").context("missing node")?,
+            y: v.f64_arr_of("y").context("missing y")?,
+        })
+    }
+}
+
+// =====================================================================
+// Typed responses
+// =====================================================================
+
+/// `get_aggregate` success: the parked aggregate plus chain bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AggregateDelivery {
+    pub aggregate: String,
+    pub from_node: u64,
+    /// Distinct posters so far (the contributor count the initiator will
+    /// divide by).
+    pub posted: Option<u64>,
+    pub round_id: Option<u64>,
+}
+
+impl AggregateDelivery {
+    /// Consuming conversion — moves the (potentially large) sealed
+    /// aggregate string into the response instead of copying it. The
+    /// controller serves one of these per node per round.
+    pub fn into_value(self) -> Value {
+        let mut v = Value::object(vec![
+            ("status", Value::from("ok")),
+            ("aggregate", Value::from(self.aggregate)),
+            ("from_node", Value::from(self.from_node)),
+        ]);
+        if let Some(p) = self.posted {
+            v.set("posted", Value::from(p));
+        }
+        if let Some(r) = self.round_id {
+            v.set("round_id", Value::from(r));
+        }
+        v
+    }
+
+    pub fn to_value(&self) -> Value {
+        self.clone().into_value()
+    }
+
+    pub fn from_value(v: &Value) -> Result<AggregateDelivery> {
+        Ok(AggregateDelivery {
+            aggregate: v.str_of("aggregate").context("missing aggregate")?.to_string(),
+            from_node: v.u64_of("from_node").unwrap_or(0),
+            posted: v.u64_of("posted"),
+            round_id: v.u64_of("round_id"),
+        })
+    }
+}
+
+/// `check_aggregate` non-empty outcomes (§5.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckOutcome {
+    /// The checked node posted onward — the chain advanced through it.
+    Consumed,
+    /// The checked node was declared failed; re-encrypt for `to_node` and
+    /// repost around it.
+    Repost { to_node: u64 },
+}
+
+impl CheckOutcome {
+    pub fn to_value(&self) -> Value {
+        match self {
+            CheckOutcome::Consumed => status("consumed"),
+            CheckOutcome::Repost { to_node } => Value::object(vec![
+                ("status", Value::from("repost")),
+                ("to_node", Value::from(*to_node)),
+            ]),
+        }
+    }
+
+    pub fn from_value(v: &Value) -> Result<CheckOutcome> {
+        match v.str_of("status") {
+            Some("consumed") => Ok(CheckOutcome::Consumed),
+            Some("repost") => Ok(CheckOutcome::Repost {
+                to_node: v.u64_of("to_node").context("repost response missing to_node")?,
+            }),
+            other => bail!("unexpected check_aggregate status {:?}", other),
+        }
+    }
+}
+
+/// `get_average` / `insec/get_average` success: the published average.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AverageReady {
+    pub average: Vec<f64>,
+    /// Groups folded into the mean (§5.5 barrier).
+    pub groups: u64,
+}
+
+impl AverageReady {
+    /// Consuming conversion — moves the float vector into the response
+    /// (the controller serves one per polling learner per round).
+    pub fn into_value(self) -> Value {
+        Value::object(vec![
+            ("status", Value::from("ok")),
+            ("average", Value::from(self.average)),
+            ("groups", Value::from(self.groups)),
+        ])
+    }
+
+    pub fn to_value(&self) -> Value {
+        self.clone().into_value()
+    }
+
+    pub fn from_value(v: &Value) -> Result<AverageReady> {
+        Ok(AverageReady {
+            average: v.f64_arr_of("average").context("missing average")?,
+            groups: v.u64_of("groups").unwrap_or(1),
+        })
+    }
+}
+
+/// `should_initiate` verdict (§5.4 initiator failover election).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InitiateDecision {
+    pub init: bool,
+    pub round_id: u64,
+}
+
+impl InitiateDecision {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("init", Value::from(self.init)),
+            ("round_id", Value::from(self.round_id)),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<InitiateDecision> {
+        Ok(InitiateDecision {
+            init: v.bool_of("init").unwrap_or(false),
+            round_id: v.u64_of("round_id").unwrap_or(0),
+        })
+    }
+}
+
+/// `get_key` success.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeyDelivery {
+    pub key: Value,
+}
+
+impl KeyDelivery {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![("status", Value::from("ok")), ("key", self.key.clone())])
+    }
+
+    pub fn from_value(v: &Value) -> Result<KeyDelivery> {
+        Ok(KeyDelivery { key: v.get("key").context("peer key missing")?.clone() })
+    }
+}
+
+/// `get_preneg_key` success.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrenegKeyDelivery {
+    pub key: String,
+}
+
+impl PrenegKeyDelivery {
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("status", Value::from("ok")),
+            ("key", Value::from(self.key.as_str())),
+        ])
+    }
+
+    pub fn from_value(v: &Value) -> Result<PrenegKeyDelivery> {
+        Ok(PrenegKeyDelivery {
+            key: v.str_of("key").context("preneg key missing")?.to_string(),
+        })
+    }
+}
+
+/// `fed/get_global_average` success (§5.10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FedGlobalAverage {
+    pub average: Vec<f64>,
+    pub contributors: u64,
+}
+
+impl FedGlobalAverage {
+    /// Consuming conversion — moves the float vector into the response.
+    pub fn into_value(self) -> Value {
+        Value::object(vec![
+            ("status", Value::from("ok")),
+            ("average", Value::from(self.average)),
+            ("contributors", Value::from(self.contributors)),
+        ])
+    }
+
+    pub fn to_value(&self) -> Value {
+        self.clone().into_value()
+    }
+
+    pub fn from_value(v: &Value) -> Result<FedGlobalAverage> {
+        Ok(FedGlobalAverage {
+            average: v.f64_arr_of("average").context("missing average")?,
+            contributors: v.u64_of("contributors").unwrap_or(0),
+        })
+    }
+}
+
+// =====================================================================
+// Legacy builders + status helpers
+// =====================================================================
+
 /// Body for `post_aggregate(from, to, aggregate)`.
 pub fn post_aggregate(from_node: u64, to_node: u64, aggregate: &str, group: u64) -> Value {
-    Value::object(vec![
-        ("from_node", Value::from(from_node)),
-        ("to_node", Value::from(to_node)),
-        ("aggregate", Value::from(aggregate)),
-        ("group", Value::from(group)),
-    ])
+    PostAggregate {
+        from_node,
+        to_node,
+        group,
+        aggregate: aggregate.to_string(),
+        round_id: None,
+    }
+    .to_value()
 }
 
 /// Body for the node-scoped polling ops (`check_aggregate`, `get_aggregate`,
 /// `get_average`, `should_initiate`).
 pub fn node_op(node: u64, group: u64) -> Value {
-    Value::object(vec![("node", Value::from(node)), ("group", Value::from(group))])
+    NodeOp::new(node, group).to_value()
 }
 
 pub fn post_average(node: u64, group: u64, average: &[f64], contributors: u64) -> Value {
-    Value::object(vec![
-        ("node", Value::from(node)),
-        ("group", Value::from(group)),
-        ("average", Value::from(average)),
-        ("contributors", Value::from(contributors)),
-    ])
+    PostAverage::body(node, group, average, contributors)
 }
 
 /// Response helpers.
@@ -100,5 +635,57 @@ mod tests {
     fn status_helpers() {
         assert!(is_empty_status(&status("empty")));
         assert!(!is_empty_status(&status("consumed")));
+    }
+
+    #[test]
+    fn typed_messages_roundtrip_via_value() {
+        let pa = PostAggregate {
+            from_node: 3,
+            to_node: 4,
+            group: 2,
+            aggregate: "safe:QQ==:Ug==".into(),
+            round_id: Some(7),
+        };
+        assert_eq!(PostAggregate::from_value(&pa.to_value()).unwrap(), pa);
+
+        let no = NodeOp::new(5, 1);
+        assert_eq!(NodeOp::from_value(&no.to_value()).unwrap(), no);
+
+        let pv = PostAverage { node: 1, group: 1, average: vec![0.5, -2.0], contributors: 4 };
+        assert_eq!(PostAverage::from_value(&pv.to_value()).unwrap(), pv);
+
+        let del = AggregateDelivery {
+            aggregate: "x".into(),
+            from_node: 2,
+            posted: Some(3),
+            round_id: Some(0),
+        };
+        assert_eq!(AggregateDelivery::from_value(&del.to_value()).unwrap(), del);
+
+        let co = CheckOutcome::Repost { to_node: 9 };
+        assert_eq!(CheckOutcome::from_value(&co.to_value()).unwrap(), co);
+        assert_eq!(
+            CheckOutcome::from_value(&CheckOutcome::Consumed.to_value()).unwrap(),
+            CheckOutcome::Consumed
+        );
+        assert!(CheckOutcome::from_value(&status("empty")).is_err());
+    }
+
+    #[test]
+    fn typed_messages_reject_missing_fields() {
+        assert!(PostAggregate::from_value(&Value::obj()).is_err());
+        assert!(NodeOp::from_value(&Value::object(vec![("node", Value::from(1u64))])).is_err());
+        assert!(PostAverage::from_value(&Value::obj()).is_err());
+        assert!(InsecPost::from_value(&Value::obj()).is_err());
+        assert!(BonAdvertise::from_value(&Value::obj()).is_err());
+    }
+
+    #[test]
+    fn preneg_keys_roundtrip() {
+        let mut keys = BTreeMap::new();
+        keys.insert(1u64, "sealed-a".to_string());
+        keys.insert(3u64, "sealed-b".to_string());
+        let pk = PostPrenegKeys { node: 2, keys };
+        assert_eq!(PostPrenegKeys::from_value(&pk.to_value()).unwrap(), pk);
     }
 }

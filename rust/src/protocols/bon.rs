@@ -54,12 +54,15 @@ impl BonSession {
     }
 
     fn transport(&self) -> Arc<dyn ClientTransport> {
-        Arc::new(InProcTransport::with_costs(
-            self.controller.clone(),
-            self.stats.clone(),
-            self.cfg.profile.network_hop,
-            self.cfg.profile.network_per_kib,
-        ))
+        Arc::new(
+            InProcTransport::with_costs(
+                self.controller.clone(),
+                self.stats.clone(),
+                self.cfg.profile.network_hop,
+                self.cfg.profile.network_per_kib,
+            )
+            .with_wire_format(self.cfg.wire),
+        )
     }
 
     pub fn run_round(&self, inputs: &[Vec<f64>], faults: &FaultPlan) -> Result<RoundMetrics> {
@@ -86,6 +89,7 @@ impl BonSession {
 
         let baseline = self.stats.total();
         let baseline_bytes = self.stats.bytes();
+        let baseline_recv = self.stats.bytes_received();
         let watch = Stopwatch::start();
         let mut handles = Vec::new();
         for node in 1..=n {
@@ -137,6 +141,7 @@ impl BonSession {
             wall_time,
             messages: self.stats.total() - baseline,
             bytes_sent: self.stats.bytes() - baseline_bytes,
+            bytes_received: self.stats.bytes_received() - baseline_recv,
             average: reference,
             contributors: averages.len() as u64,
             progress_failovers: faults.failed_count() as u64,
@@ -180,11 +185,12 @@ fn bon_client(
     let s_pair = DhKeyPair::generate(group, rng.as_mut());
     transport.call(
         proto::BON_ADVERTISE,
-        &Value::object(vec![
-            ("node", Value::from(node)),
-            ("cpk", Value::from(c_pair.public.to_hex())),
-            ("spk", Value::from(s_pair.public.to_hex())),
-        ]),
+        &proto::BonAdvertise {
+            node,
+            cpk: c_pair.public.to_hex(),
+            spk: s_pair.public.to_hex(),
+        }
+        .to_value(),
     )?;
     let keys_resp = wait(proto::BON_GET_KEYS, &Value::object(vec![("node", Value::from(node))]))?;
     let keys_obj = keys_resp.get("keys").context("missing keys")?;
@@ -276,10 +282,7 @@ fn bon_client(
             }
         }
     }
-    transport.call(
-        proto::BON_POST_MASKED,
-        &Value::object(vec![("node", Value::from(node)), ("y", Value::from(&y[..]))]),
-    )?;
+    transport.call(proto::BON_POST_MASKED, &proto::BonPostMasked { node, y }.to_value())?;
 
     // ---- Round 3: unmasking ----
     let surv = wait(proto::BON_GET_SURVIVORS, &Value::object(vec![("node", Value::from(node))]))?;

@@ -5,7 +5,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::json::Value;
 use crate::proto;
@@ -27,11 +27,7 @@ impl FederationBridge {
     pub fn post_child_average(&self, average: &[f64], contributors: u64) -> Result<()> {
         let resp = self.parent.call(
             proto::FED_POST_CHILD_AVERAGE,
-            &Value::object(vec![
-                ("child", Value::from(self.child_id)),
-                ("average", Value::from(average)),
-                ("contributors", Value::from(contributors)),
-            ]),
+            &proto::FedChildAverage::body(self.child_id, average, contributors),
         )?;
         if resp.str_of("status") != Some("ok") {
             bail!("parent rejected child average: {resp}");
@@ -45,9 +41,8 @@ impl FederationBridge {
         loop {
             let resp = self.parent.call(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj())?;
             if !proto::is_empty_status(&resp) {
-                let avg = resp.f64_arr_of("average").context("missing average")?;
-                let total = resp.u64_of("contributors").unwrap_or(0);
-                return Ok((avg, total));
+                let global = proto::FedGlobalAverage::from_value(&resp)?;
+                return Ok((global.average, global.contributors));
             }
             if Instant::now() > deadline {
                 bail!("global average not available within {timeout:?}");

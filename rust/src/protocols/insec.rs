@@ -4,7 +4,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::config::{SessionConfig, TransportKind};
 use crate::controller::{Controller, ControllerConfig};
@@ -35,12 +35,15 @@ impl InsecSession {
     }
 
     fn transport(&self) -> Arc<dyn ClientTransport> {
-        Arc::new(InProcTransport::with_costs(
-            self.controller.clone(),
-            self.stats.clone(),
-            self.cfg.profile.network_hop,
-            self.cfg.profile.network_per_kib,
-        ))
+        Arc::new(
+            InProcTransport::with_costs(
+                self.controller.clone(),
+                self.stats.clone(),
+                self.cfg.profile.network_hop,
+                self.cfg.profile.network_per_kib,
+            )
+            .with_wire_format(self.cfg.wire),
+        )
     }
 
     pub fn run_round(&self, inputs: &[Vec<f64>], faults: &FaultPlan) -> Result<RoundMetrics> {
@@ -71,6 +74,7 @@ impl InsecSession {
 
         let baseline = self.stats.total();
         let baseline_bytes = self.stats.bytes();
+        let baseline_recv = self.stats.bytes_received();
         let watch = Stopwatch::start();
         let mut handles = Vec::new();
         for (gid, chain) in &chains {
@@ -85,17 +89,13 @@ impl InsecSession {
                 handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
                     transport.call(
                         proto::INSEC_POST,
-                        &Value::object(vec![
-                            ("node", Value::from(node)),
-                            ("group", Value::from(gid)),
-                            ("vector", Value::from(&vector[..])),
-                        ]),
+                        &proto::InsecPost { node, group: gid, vector }.to_value(),
                     )?;
                     let deadline = std::time::Instant::now() + poll_deadline;
                     loop {
                         let resp = transport.call(proto::INSEC_GET_AVERAGE, &Value::obj())?;
                         if !proto::is_empty_status(&resp) {
-                            return resp.f64_arr_of("average").context("missing average");
+                            return Ok(proto::AverageReady::from_value(&resp)?.average);
                         }
                         if std::time::Instant::now() > deadline {
                             bail!("INSEC aggregation timed out");
@@ -119,6 +119,7 @@ impl InsecSession {
             wall_time,
             messages: self.stats.total() - baseline,
             bytes_sent: self.stats.bytes() - baseline_bytes,
+            bytes_received: self.stats.bytes_received() - baseline_recv,
             average: reference,
             contributors: averages.len() as u64,
             progress_failovers: 0,

@@ -76,9 +76,14 @@ pub struct SafeRoundResult {
 }
 
 impl SafeRoundResult {
-    /// The agreed average (validated identical across survivors).
-    pub fn average(&self) -> &[f64] {
-        &self.survivors()[0].average
+    /// The agreed average (validated identical across survivors), or
+    /// `None` when every learner died — reachable via [`FaultPlan`], so
+    /// callers must not assume a survivor exists.
+    pub fn average(&self) -> Option<&[f64]> {
+        self.outcomes
+            .iter()
+            .find(|o| !o.died)
+            .map(|o| o.average.as_slice())
     }
 
     pub fn survivors(&self) -> Vec<&LearnerOutcome> {
@@ -87,6 +92,12 @@ impl SafeRoundResult {
 }
 
 impl SafeSession {
+    /// Shared message statistics (in-proc transports; HTTP clients keep
+    /// their own counters).
+    pub fn stats(&self) -> Arc<MessageStats> {
+        self.stats.clone()
+    }
+
     /// Build the deployment and run round 0 (key exchange).
     pub fn new(cfg: SessionConfig) -> Result<SafeSession> {
         let ctrl_cfg = ControllerConfig {
@@ -108,13 +119,12 @@ impl SafeSession {
                 let stats = stats.clone();
                 let hop = cfg.profile.network_hop;
                 let per_kib = cfg.profile.network_per_kib;
+                let wire = cfg.wire;
                 Box::new(move || {
-                    Ok(Arc::new(InProcTransport::with_costs(
-                        ctrl.clone(),
-                        stats.clone(),
-                        hop,
-                        per_kib,
-                    )) as Arc<dyn ClientTransport>)
+                    Ok(Arc::new(
+                        InProcTransport::with_costs(ctrl.clone(), stats.clone(), hop, per_kib)
+                            .with_wire_format(wire),
+                    ) as Arc<dyn ClientTransport>)
                 })
             }
             TransportKind::Http { url } => {
@@ -127,8 +137,10 @@ impl SafeSession {
                 } else {
                     url.clone()
                 };
+                let wire = cfg.wire;
                 Box::new(move || {
-                    Ok(Arc::new(HttpTransport::connect(&url)?) as Arc<dyn ClientTransport>)
+                    Ok(Arc::new(HttpTransport::connect(&url)?.with_wire_format(wire))
+                        as Arc<dyn ClientTransport>)
                 })
             }
         };
@@ -192,10 +204,7 @@ impl SafeSession {
         for (&node, kp) in &node_keys {
             setup_transport.call(
                 proto::REGISTER_KEY,
-                &Value::object(vec![
-                    ("node", Value::from(node)),
-                    ("key", kp.public.to_json()),
-                ]),
+                &proto::RegisterKey { node, key: kp.public.to_json() }.to_value(),
             )?;
         }
 
@@ -210,10 +219,10 @@ impl SafeSession {
                     if peer == node {
                         continue;
                     }
-                    let resp = transport
-                        .call(proto::GET_KEY, &Value::object(vec![("node", Value::from(peer))]))?;
-                    let key_json = resp.get("key").context("peer key missing")?;
-                    peer_keys.insert(peer, RsaPublicKey::from_json(key_json)?);
+                    let resp =
+                        transport.call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
+                    let delivery = proto::KeyDelivery::from_value(&resp)?;
+                    peer_keys.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
                 }
                 let rng: Box<dyn SecureRng + Send> = match cfg.seed {
                     Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(node * 7919))),
@@ -250,7 +259,7 @@ impl SafeSession {
         if cfg.mode == CipherMode::PreNegotiated {
             let mut generated: BTreeMap<u64, BTreeMap<u64, SymmetricKey>> = BTreeMap::new();
             for ctx in &contexts {
-                let mut keys_obj = Value::obj();
+                let mut sealed_keys = BTreeMap::new();
                 let mut mine = BTreeMap::new();
                 {
                     let mut rng = ctx.rng.lock().unwrap();
@@ -260,13 +269,13 @@ impl SafeSession {
                         }
                         let k = SymmetricKey::generate(rng.as_mut());
                         let sealed = ctx.peer_keys[&peer].encrypt_block(&k.master, rng.as_mut())?;
-                        keys_obj.set(&peer.to_string(), Value::from(crate::util::b64_encode(&sealed)));
+                        sealed_keys.insert(peer, crate::util::b64_encode(&sealed));
                         mine.insert(peer, k);
                     }
                 }
                 ctx.transport.call(
                     proto::POST_PRENEG_KEYS,
-                    &Value::object(vec![("node", Value::from(ctx.node)), ("keys", keys_obj)]),
+                    &proto::PostPrenegKeys { node: ctx.node, keys: sealed_keys }.to_value(),
                 )?;
                 generated.insert(ctx.node, mine);
             }
@@ -279,14 +288,10 @@ impl SafeSession {
                     }
                     let resp = ctx.transport.call(
                         proto::GET_PRENEG_KEY,
-                        &Value::object(vec![
-                            ("node", Value::from(ctx.node)),
-                            ("owner", Value::from(peer)),
-                        ]),
+                        &proto::GetPrenegKey { node: ctx.node, owner: peer }.to_value(),
                     )?;
-                    let blob = crate::util::b64_decode(
-                        resp.str_of("key").context("preneg key missing")?,
-                    )?;
+                    let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
+                    let blob = crate::util::b64_decode(&delivery.key)?;
                     let master = ctx.keys.private.decrypt_block(&blob)?;
                     send_keys.insert(peer, SymmetricKey::from_bytes(&master)?);
                 }
@@ -378,6 +383,7 @@ impl SafeSession {
 
         let baseline_msgs = self.stats.total();
         let baseline_bytes = self.stats.bytes();
+        let baseline_recv = self.stats.bytes_received();
         let per_path_before = self.stats.per_path();
 
         let mut monitor =
@@ -482,6 +488,7 @@ impl SafeSession {
             wall_time,
             messages,
             bytes_sent: self.stats.bytes() - baseline_bytes,
+            bytes_received: self.stats.bytes_received() - baseline_recv,
             average: reference.clone(),
             contributors,
             progress_failovers: monitor.reposts(),
@@ -543,7 +550,7 @@ mod tests {
             let ins = inputs(4, 3);
             let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
             let expect = expected_average(&ins);
-            for (a, e) in result.average().iter().zip(&expect) {
+            for (a, e) in result.average().unwrap().iter().zip(&expect) {
                 assert!((a - e).abs() < 1e-6, "{mode:?}: {a} vs {e}");
             }
             assert_eq!(result.metrics.contributors, 4, "{mode:?}");
@@ -586,7 +593,7 @@ mod tests {
             }
         }
         expect.iter_mut().for_each(|a| *a /= 5.0);
-        for (a, e) in result.average().iter().zip(&expect) {
+        for (a, e) in result.average().unwrap().iter().zip(&expect) {
             assert!((a - e).abs() < 1e-6, "{a} vs {e}");
         }
         // §5.3: 4n + 2f — dead node sends nothing, so 4(n−1) + 2·1.
@@ -603,7 +610,7 @@ mod tests {
         let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
         // Equal group sizes ⇒ mean of group means == global mean.
         let expect = expected_average(&ins);
-        for (a, e) in result.average().iter().zip(&expect) {
+        for (a, e) in result.average().unwrap().iter().zip(&expect) {
             assert!((a - e).abs() < 1e-6, "{a} vs {e}");
         }
         // §5.5: one extra message per group (initiators pull the global
@@ -629,6 +636,6 @@ mod tests {
         // The average covers the 3 survivors (initiator's value lost with
         // it; it is skipped via progress failover on the second pass).
         let expect: f64 = (2.0 + 3.0 + 4.0) / 3.0;
-        assert!((result.average()[0] - expect).abs() < 1e-6);
+        assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
     }
 }

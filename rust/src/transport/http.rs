@@ -4,7 +4,12 @@
 //! the paper's controller is a plain REST server. We implement exactly what
 //! the protocol needs:
 //!
-//! * POST with `Content-Length` bodies (JSON), responses `200 OK`.
+//! * POST with `Content-Length` bodies, responses `200 OK`.
+//! * Per-request codec negotiation: bodies are JSON
+//!   (`application/json`, the paper's format and the default) or the
+//!   compact binary codec (`application/x-safe-binary`). The server
+//!   decodes by the request's `Content-Type` and answers in the same
+//!   format, so mixed-codec clients can share one controller.
 //! * Keep-alive connections (one learner holds one connection).
 //! * Thread-per-connection server — correct for long-polling handlers that
 //!   block inside the controller (a blocked poll only parks its own thread).
@@ -20,6 +25,7 @@ use anyhow::{bail, Context, Result};
 
 use super::{ClientTransport, Handler, MessageStats};
 use crate::json::Value;
+use crate::proto::codec::{WireCodec, WireFormat, CONTENT_TYPE_JSON};
 
 /// Threaded HTTP server wrapping a [`Handler`].
 pub struct HttpServer {
@@ -99,23 +105,41 @@ fn serve_connection(
             Ok(Some(r)) => r,
             Ok(None) => return Ok(()), // clean EOF
             Err(e) => {
-                let _ = write_response(&mut stream, 400, &format!("{{\"error\":\"{e}\"}}"));
+                let _ = write_response(
+                    &mut stream,
+                    400,
+                    format!("{{\"error\":\"{e}\"}}").as_bytes(),
+                    CONTENT_TYPE_JSON,
+                );
                 return Ok(());
             }
         };
-        let body_json = if req.body.is_empty() {
+        // Negotiate the codec from the request's Content-Type; the
+        // response is written in the same format.
+        let format = req
+            .content_type
+            .as_deref()
+            .map(WireFormat::from_content_type)
+            .unwrap_or(WireFormat::Json);
+        let codec = format.codec();
+        let body_value = if req.body.is_empty() {
             Value::obj()
         } else {
-            match crate::json::parse(std::str::from_utf8(&req.body).unwrap_or("")) {
+            match codec.decode(&req.body) {
                 Ok(v) => v,
                 Err(e) => {
-                    write_response(&mut stream, 400, &format!("{{\"error\":\"bad json: {e}\"}}"))?;
+                    write_response(
+                        &mut stream,
+                        400,
+                        format!("{{\"error\":\"bad body: {e}\"}}").as_bytes(),
+                        CONTENT_TYPE_JSON,
+                    )?;
                     continue;
                 }
             }
         };
-        let resp = handler.handle(&req.path, &body_json);
-        write_response(&mut stream, 200, &resp.to_string())?;
+        let resp = handler.handle(&req.path, &body_value);
+        write_response(&mut stream, 200, &codec.encode(&resp), codec.content_type())?;
         if !req.keep_alive {
             return Ok(());
         }
@@ -126,6 +150,7 @@ struct Request {
     path: String,
     body: Vec<u8>,
     keep_alive: bool,
+    content_type: Option<String>,
 }
 
 fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
@@ -142,6 +167,7 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
         bail!("unsupported method {method}");
     }
     let mut content_length = 0usize;
+    let mut content_type = None;
     let mut keep_alive = version.ends_with("1.1");
     loop {
         let mut h = String::new();
@@ -160,6 +186,8 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
                 content_length = v.parse().context("bad content-length")?;
             } else if k == "connection" {
                 keep_alive = !v.eq_ignore_ascii_case("close");
+            } else if k == "content-type" {
+                content_type = Some(v.to_string());
             }
         }
     }
@@ -169,21 +197,26 @@ fn read_request(reader: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
     }
     let mut body = vec![0u8; content_length];
     reader.read_exact(&mut body)?;
-    Ok(Some(Request { path, body, keep_alive }))
+    Ok(Some(Request { path, body, keep_alive, content_type }))
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &[u8],
+    content_type: &str,
+) -> Result<()> {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
         _ => "Error",
     };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
         body.len()
     );
     stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    stream.write_all(body)?;
     stream.flush()?;
     Ok(())
 }
@@ -193,6 +226,7 @@ pub struct HttpTransport {
     addr: SocketAddr,
     conn: Mutex<Option<TcpStream>>,
     stats: Arc<MessageStats>,
+    codec: &'static dyn WireCodec,
     /// Read timeout; must exceed the controller's long-poll window.
     pub read_timeout: Duration,
 }
@@ -205,22 +239,30 @@ impl HttpTransport {
             addr,
             conn: Mutex::new(None),
             stats: Arc::new(MessageStats::default()),
+            codec: WireFormat::Json.codec(),
             read_timeout: Duration::from_secs(600),
         })
+    }
+
+    /// Select the wire codec (builder-style; JSON is the default).
+    pub fn with_wire_format(mut self, format: WireFormat) -> Self {
+        self.codec = format.codec();
+        self
     }
 
     pub fn stats(&self) -> Arc<MessageStats> {
         self.stats.clone()
     }
 
-    fn request_once(&self, stream: &mut TcpStream, path: &str, body: &str) -> Result<Value> {
+    fn request_once(&self, stream: &mut TcpStream, path: &str, body: &[u8]) -> Result<Value> {
         let head = format!(
-            "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n",
+            "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n\r\n",
             self.addr,
+            self.codec.content_type(),
             body.len()
         );
         stream.write_all(head.as_bytes())?;
-        stream.write_all(body.as_bytes())?;
+        stream.write_all(body)?;
         stream.flush()?;
 
         let mut reader = BufReader::new(stream.try_clone()?);
@@ -236,6 +278,7 @@ impl HttpTransport {
             .parse()
             .context("bad status code")?;
         let mut content_length = 0usize;
+        let mut content_type: Option<String> = None;
         loop {
             let mut h = String::new();
             let n = reader.read_line(&mut h)?;
@@ -246,8 +289,11 @@ impl HttpTransport {
                 break;
             }
             if let Some((k, v)) = h.trim_end().split_once(':') {
-                if k.trim().eq_ignore_ascii_case("content-length") {
+                let k = k.trim();
+                if k.eq_ignore_ascii_case("content-length") {
                     content_length = v.trim().parse().context("bad content-length")?;
+                } else if k.eq_ignore_ascii_case("content-type") {
+                    content_type = Some(v.trim().to_string());
                 }
             }
         }
@@ -256,14 +302,27 @@ impl HttpTransport {
         if status != 200 {
             bail!("HTTP {status}: {}", String::from_utf8_lossy(&resp_body));
         }
-        crate::json::parse(std::str::from_utf8(&resp_body)?)
+        // The server mirrors the request codec, but decode by the actual
+        // response Content-Type so mixed deployments stay interoperable.
+        let resp_format = content_type
+            .as_deref()
+            .map(WireFormat::from_content_type)
+            .unwrap_or(WireFormat::Json);
+        let v = resp_format.codec().decode(&resp_body)?;
+        // Record only after a successful decode: a failed attempt is
+        // retried by call(), and recording it would double-count
+        // bytes_received/codec bytes against a single message.
+        self.stats.record_response(resp_body.len());
+        self.stats.record_codec(resp_format, resp_body.len());
+        Ok(v)
     }
 }
 
 impl ClientTransport for HttpTransport {
     fn call(&self, path: &str, body: &Value) -> Result<Value> {
-        let body_str = body.to_string();
-        self.stats.record(path, body_str.len());
+        let body_bytes = self.codec.encode(body);
+        self.stats.record(path, body_bytes.len());
+        self.stats.record_codec(self.codec.format(), body_bytes.len());
         let mut guard = self.conn.lock().unwrap();
         // Try on the cached connection first, reconnect once on failure.
         for attempt in 0..2 {
@@ -275,7 +334,7 @@ impl ClientTransport for HttpTransport {
                 *guard = Some(s);
             }
             let stream = guard.as_mut().unwrap();
-            match self.request_once(stream, path, &body_str) {
+            match self.request_once(stream, path, &body_bytes) {
                 Ok(v) => return Ok(v),
                 Err(e) if attempt == 0 => {
                     *guard = None; // drop stale connection and retry
@@ -293,6 +352,10 @@ impl ClientTransport for HttpTransport {
 
     fn bytes_sent(&self) -> u64 {
         self.stats.bytes()
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.stats.bytes_received()
     }
 }
 
@@ -323,6 +386,39 @@ mod tests {
         let resp = client.call("/post_aggregate", &body).unwrap();
         assert_eq!(resp.str_of("path"), Some("/post_aggregate"));
         assert_eq!(resp.get("echo"), Some(&body));
+    }
+
+    #[test]
+    fn http_binary_codec_roundtrip() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let client = HttpTransport::connect(&server.url())
+            .unwrap()
+            .with_wire_format(WireFormat::Binary);
+        let vec: Vec<f64> = (0..256).map(|i| i as f64 * 0.375 - 10.0).collect();
+        let body = Value::object(vec![
+            ("node", Value::from(3u64)),
+            ("vector", Value::from(vec.clone())),
+        ]);
+        let resp = client.call("/insec/post", &body).unwrap();
+        assert_eq!(resp.get("echo").unwrap().f64_arr_of("vector").unwrap(), vec);
+        assert!(client.stats().codec_bytes(WireFormat::Binary) > 0);
+    }
+
+    #[test]
+    fn http_mixed_codec_clients_share_one_server() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        let json_client = HttpTransport::connect(&server.url()).unwrap();
+        let bin_client = HttpTransport::connect(&server.url())
+            .unwrap()
+            .with_wire_format(WireFormat::Binary);
+        // Full-mantissa floats (raw f64 beats decimal text only when the
+        // decimals are long, as real aggregation output is).
+        let v: Vec<f64> = (0..64).map(|i| i as f64 * 0.707_106_781_186_547_6).collect();
+        let body = Value::object(vec![("v", Value::from(v))]);
+        let rj = json_client.call("/x", &body).unwrap();
+        let rb = bin_client.call("/x", &body).unwrap();
+        assert_eq!(rj, rb);
+        assert!(bin_client.bytes_sent() < json_client.bytes_sent());
     }
 
     #[test]

@@ -14,8 +14,23 @@
 //!   handlers. Used by the integration tests, the `safe` CLI processes and
 //!   the hierarchical-federation example.
 //!
+//! **Wire codecs.** Every body *really* crosses a serialization boundary
+//! in both directions (client encode → server decode, and back), even
+//! in-process — that keeps the measured cost faithful to the REST
+//! deployment, where the serialization tax drives the paper's Figs 9/12
+//! crossovers. The byte format is a pluggable policy
+//! ([`proto::codec::WireCodec`]): [`JsonCodec`](crate::proto::codec::JsonCodec)
+//! is the default (paper parity), [`BinaryCodec`](crate::proto::codec::BinaryCodec)
+//! ships raw little-endian `f64` vectors and length-prefixed fields. The
+//! HTTP pair negotiates the codec per request via `Content-Type`; the
+//! in-proc transport encodes/decodes with whichever codec the session
+//! configured.
+//!
 //! Every call is counted so the benches can verify the paper's message
-//! complexity formulas (`4n`, `4n + 2f`, `(i+1)(4n+2f+in)`, `+g`).
+//! complexity formulas (`4n`, `4n + 2f`, `(i+1)(4n+2f+in)`, `+g`), and
+//! [`MessageStats`] now tracks request *and* response bytes, per-codec
+//! byte totals (for JSON-vs-binary wire-ratio reporting) and a sharded
+//! per-path message map kept off the hot path's single-lock contention.
 
 pub mod http;
 
@@ -25,6 +40,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::json::Value;
+use crate::proto::codec::{WireCodec, WireFormat};
 
 /// Server-side request handler (the controller implements this).
 /// Handlers may block (long-polling `get_*`/`check_*` ops).
@@ -39,22 +55,67 @@ pub trait ClientTransport: Send + Sync {
     fn message_count(&self) -> u64;
     /// Bytes sent (request bodies) through this transport so far.
     fn bytes_sent(&self) -> u64;
+    /// Bytes received (response bodies) through this transport so far.
+    fn bytes_received(&self) -> u64;
 }
 
-/// Per-path message counters shared by the transports.
+/// Number of per-path shards. Paths hash across shards so many learner
+/// threads recording concurrently rarely contend on the same lock.
+const PATH_SHARDS: usize = 8;
+
+/// Message/byte counters shared by the transports.
+///
+/// Totals are relaxed atomics (hot path); the per-path message map is
+/// sharded by path hash so it stays accurate for the §5.2 formula tests
+/// without serializing every learner thread through one mutex.
 #[derive(Default)]
 pub struct MessageStats {
     total: AtomicU64,
     bytes: AtomicU64,
-    per_path: Mutex<BTreeMap<String, u64>>,
+    bytes_received: AtomicU64,
+    /// Request+response bytes that crossed the wire per codec.
+    json_bytes: AtomicU64,
+    binary_bytes: AtomicU64,
+    per_path: [Mutex<BTreeMap<String, u64>>; PATH_SHARDS],
 }
 
 impl MessageStats {
+    fn shard(path: &str) -> usize {
+        // FNV-1a: cheap and stable; paths are short static strings.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &b in path.as_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        (h as usize) % PATH_SHARDS
+    }
+
+    /// Record one sent request of `bytes` body bytes on `path`.
     pub fn record(&self, path: &str, bytes: usize) {
         self.total.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
-        let mut map = self.per_path.lock().unwrap();
-        *map.entry(path.to_string()).or_insert(0) += 1;
+        let mut map = self.per_path[Self::shard(path)].lock().unwrap();
+        match map.get_mut(path) {
+            Some(c) => *c += 1,
+            None => {
+                map.insert(path.to_string(), 1);
+            }
+        }
+    }
+
+    /// Record one received response body of `bytes` bytes.
+    pub fn record_response(&self, bytes: usize) {
+        self.bytes_received.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Attribute `bytes` wire bytes (either direction) to a codec, so
+    /// benches can report the JSON-vs-binary wire-size ratio.
+    pub fn record_codec(&self, format: WireFormat, bytes: usize) {
+        let counter = match format {
+            WireFormat::Json => &self.json_bytes,
+            WireFormat::Binary => &self.binary_bytes,
+        };
+        counter.fetch_add(bytes as u64, Ordering::Relaxed);
     }
 
     pub fn total(&self) -> u64 {
@@ -65,14 +126,36 @@ impl MessageStats {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_received.load(Ordering::Relaxed)
+    }
+
+    pub fn codec_bytes(&self, format: WireFormat) -> u64 {
+        match format {
+            WireFormat::Json => self.json_bytes.load(Ordering::Relaxed),
+            WireFormat::Binary => self.binary_bytes.load(Ordering::Relaxed),
+        }
+    }
+
     pub fn per_path(&self) -> BTreeMap<String, u64> {
-        self.per_path.lock().unwrap().clone()
+        let mut merged = BTreeMap::new();
+        for shard in &self.per_path {
+            for (k, v) in shard.lock().unwrap().iter() {
+                *merged.entry(k.clone()).or_insert(0) += v;
+            }
+        }
+        merged
     }
 
     pub fn reset(&self) {
         self.total.store(0, Ordering::Relaxed);
         self.bytes.store(0, Ordering::Relaxed);
-        self.per_path.lock().unwrap().clear();
+        self.bytes_received.store(0, Ordering::Relaxed);
+        self.json_bytes.store(0, Ordering::Relaxed);
+        self.binary_bytes.store(0, Ordering::Relaxed);
+        for shard in &self.per_path {
+            shard.lock().unwrap().clear();
+        }
     }
 }
 
@@ -81,6 +164,7 @@ impl MessageStats {
 pub struct InProcTransport {
     handler: Arc<dyn Handler>,
     stats: Arc<MessageStats>,
+    codec: &'static dyn WireCodec,
     /// Simulated one-way network latency applied to each call (the REST
     /// hop the paper's numbers include). Zero by default.
     pub latency: Duration,
@@ -94,18 +178,14 @@ impl InProcTransport {
         InProcTransport {
             handler,
             stats: Arc::new(MessageStats::default()),
+            codec: WireFormat::Json.codec(),
             latency: Duration::ZERO,
             per_kib: Duration::ZERO,
         }
     }
 
     pub fn with_latency(handler: Arc<dyn Handler>, latency: Duration) -> Self {
-        InProcTransport {
-            handler,
-            stats: Arc::new(MessageStats::default()),
-            latency,
-            per_kib: Duration::ZERO,
-        }
+        InProcTransport { latency, ..InProcTransport::new(handler) }
     }
 
     pub fn with_shared_stats(
@@ -113,7 +193,7 @@ impl InProcTransport {
         stats: Arc<MessageStats>,
         latency: Duration,
     ) -> Self {
-        InProcTransport { handler, stats, latency, per_kib: Duration::ZERO }
+        InProcTransport { stats, latency, ..InProcTransport::new(handler) }
     }
 
     /// Full cost model: fixed hop latency + per-KiB transfer cost.
@@ -123,7 +203,13 @@ impl InProcTransport {
         latency: Duration,
         per_kib: Duration,
     ) -> Self {
-        InProcTransport { handler, stats, latency, per_kib }
+        InProcTransport { stats, latency, per_kib, ..InProcTransport::new(handler) }
+    }
+
+    /// Select the wire codec (builder-style; JSON is the default).
+    pub fn with_wire_format(mut self, format: WireFormat) -> Self {
+        self.codec = format.codec();
+        self
     }
 
     fn charge(&self, bytes: usize) {
@@ -143,19 +229,22 @@ impl InProcTransport {
 
 impl ClientTransport for InProcTransport {
     fn call(&self, path: &str, body: &Value) -> anyhow::Result<Value> {
-        // Faithful to the REST deployment: the body really crosses a
-        // JSON boundary in both directions (client serialize → server
-        // parse, and back), so INSEC's big cleartext float arrays pay
-        // their true serialization cost — that asymmetry is what drives
-        // the paper's Figs 9/12 crossovers.
-        let encoded = body.to_string();
+        // Faithful to the REST deployment: the body really crosses the
+        // configured codec's boundary in both directions (client encode →
+        // server decode, and back), so INSEC's big cleartext float arrays
+        // pay their true serialization cost — that asymmetry is what
+        // drives the paper's Figs 9/12 crossovers.
+        let encoded = self.codec.encode(body);
         self.stats.record(path, encoded.len());
+        self.stats.record_codec(self.codec.format(), encoded.len());
         self.charge(encoded.len());
-        let decoded = crate::json::parse(&encoded)?;
+        let decoded = self.codec.decode(&encoded)?;
         let resp = self.handler.handle(path, &decoded);
-        let resp_encoded = resp.to_string();
+        let resp_encoded = self.codec.encode(&resp);
+        self.stats.record_response(resp_encoded.len());
+        self.stats.record_codec(self.codec.format(), resp_encoded.len());
         self.charge(resp_encoded.len());
-        crate::json::parse(&resp_encoded)
+        self.codec.decode(&resp_encoded)
     }
 
     fn message_count(&self) -> u64 {
@@ -164,6 +253,10 @@ impl ClientTransport for InProcTransport {
 
     fn bytes_sent(&self) -> u64 {
         self.stats.bytes()
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.stats.bytes_received()
     }
 }
 
@@ -187,6 +280,7 @@ mod tests {
         assert_eq!(resp.get("echo"), Some(&body));
         assert_eq!(t.message_count(), 1);
         assert!(t.bytes_sent() > 0);
+        assert!(t.bytes_received() > 0);
         t.call("/get_average", &body).unwrap();
         assert_eq!(t.message_count(), 2);
         let per = t.stats().per_path();
@@ -207,5 +301,64 @@ mod tests {
         assert_eq!(stats.per_path().get("/a"), Some(&2));
         stats.reset();
         assert_eq!(stats.total(), 0);
+        assert_eq!(stats.bytes_received(), 0);
+    }
+
+    #[test]
+    fn binary_codec_transport_roundtrips_and_counts_codec_bytes() {
+        let t = InProcTransport::new(Arc::new(Echo)).with_wire_format(WireFormat::Binary);
+        let body = Value::object(vec![(
+            "vec",
+            Value::from((0..64).map(|i| i as f64 * 0.5 + 0.25).collect::<Vec<f64>>()),
+        )]);
+        let resp = t.call("/x", &body).unwrap();
+        assert_eq!(resp.get("echo"), Some(&body));
+        let stats = t.stats();
+        assert!(stats.codec_bytes(WireFormat::Binary) > 0);
+        assert_eq!(stats.codec_bytes(WireFormat::Json), 0);
+    }
+
+    #[test]
+    fn json_and_binary_transports_agree_on_responses() {
+        let h: Arc<dyn Handler> = Arc::new(Echo);
+        let tj = InProcTransport::new(h.clone());
+        let tb = InProcTransport::new(h).with_wire_format(WireFormat::Binary);
+        // Full-mantissa floats, like real aggregation output (masking
+        // noise makes averages ~17 significant digits as JSON text; raw
+        // 8-byte f64s only beat decimal text for such vectors).
+        let avg: Vec<f64> = (0..48).map(|i| i as f64 * 0.707_106_781_186_547_6 + 0.1).collect();
+        let body = Value::object(vec![
+            ("avg", Value::from(avg)),
+            ("node", Value::from(7u64)),
+            ("tag", Value::from("x:y")),
+        ]);
+        let rj = tj.call("/p", &body).unwrap();
+        let rb = tb.call("/p", &body).unwrap();
+        assert_eq!(rj, rb);
+        // Binary ships fewer bytes for the same message.
+        assert!(tb.bytes_sent() < tj.bytes_sent());
+    }
+
+    #[test]
+    fn per_path_counts_survive_concurrent_recording() {
+        let stats = Arc::new(MessageStats::default());
+        let threads: Vec<_> = (0..8)
+            .map(|i| {
+                let stats = stats.clone();
+                std::thread::spawn(move || {
+                    let path = if i % 2 == 0 { "/even" } else { "/odd" };
+                    for _ in 0..100 {
+                        stats.record(path, 3);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(stats.total(), 800);
+        assert_eq!(stats.per_path().get("/even"), Some(&400));
+        assert_eq!(stats.per_path().get("/odd"), Some(&400));
+        assert_eq!(stats.bytes(), 2400);
     }
 }

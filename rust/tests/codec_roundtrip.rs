@@ -1,0 +1,379 @@
+//! Wire-codec properties: `decode ∘ encode = id` for every typed proto
+//! message under both codecs, plus cross-codec session equivalence (same
+//! seeded SAFE round over JSON and binary → identical averages and
+//! message counts, strictly fewer binary bytes).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use safe_agg::config::{DeviceProfile, SessionConfig, WireFormat};
+use safe_agg::crypto::rng::{DeterministicRng, SecureRng};
+use safe_agg::json::Value;
+use safe_agg::learner::faults::FaultPlan;
+use safe_agg::proto;
+use safe_agg::proto::codec::{BinaryCodec, JsonCodec, WireCodec};
+use safe_agg::protocols::SafeSession;
+use safe_agg::testkit::{self, gen};
+use safe_agg::util::b64_encode;
+
+/// Push `v` through both codecs and assert each roundtrips to identity.
+fn value_roundtrips(v: &Value) -> bool {
+    let bin = BinaryCodec.decode(&BinaryCodec.encode(v)).expect("binary decode");
+    let json = JsonCodec.decode(&JsonCodec.encode(v)).expect("json decode");
+    bin == *v && json == *v
+}
+
+fn b64_blob(rng: &mut DeterministicRng, max_len: usize) -> String {
+    b64_encode(&gen::bytes(rng, max_len))
+}
+
+#[test]
+fn prop_post_aggregate_roundtrip() {
+    testkit::check(
+        "codec-post-aggregate",
+        60,
+        |rng| proto::PostAggregate {
+            from_node: rng.next_below(1000) as u64,
+            to_node: rng.next_below(1000) as u64,
+            group: 1 + rng.next_below(8) as u64,
+            aggregate: format!("safe:{}:{}", b64_blob(rng, 64), b64_blob(rng, 2000)),
+            round_id: if rng.next_below(2) == 0 { None } else { Some(rng.next_u64() >> 40) },
+        },
+        |msg| {
+            let v = msg.to_value();
+            value_roundtrips(&v)
+                && proto::PostAggregate::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&v)).unwrap(),
+                )
+                .unwrap()
+                    == *msg
+        },
+    );
+}
+
+#[test]
+fn prop_node_op_and_decisions_roundtrip() {
+    testkit::check(
+        "codec-node-op",
+        60,
+        |rng| {
+            (
+                proto::NodeOp::new(rng.next_u64() >> 40, 1 + rng.next_below(8) as u64),
+                proto::InitiateDecision {
+                    init: rng.next_below(2) == 0,
+                    round_id: rng.next_below(100) as u64,
+                },
+                if rng.next_below(2) == 0 {
+                    proto::CheckOutcome::Consumed
+                } else {
+                    proto::CheckOutcome::Repost { to_node: rng.next_below(100) as u64 }
+                },
+            )
+        },
+        |(op, dec, chk)| {
+            let (ov, dv, cv) = (op.to_value(), dec.to_value(), chk.to_value());
+            value_roundtrips(&ov)
+                && value_roundtrips(&dv)
+                && value_roundtrips(&cv)
+                && proto::NodeOp::from_value(&BinaryCodec.decode(&BinaryCodec.encode(&ov)).unwrap())
+                    .unwrap()
+                    == *op
+                && proto::InitiateDecision::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&dv)).unwrap(),
+                )
+                .unwrap()
+                    == *dec
+                && proto::CheckOutcome::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&cv)).unwrap(),
+                )
+                .unwrap()
+                    == *chk
+        },
+    );
+}
+
+#[test]
+fn prop_averages_roundtrip() {
+    testkit::check(
+        "codec-averages",
+        60,
+        |rng| {
+            let avg = gen::f64_vec(rng, 256);
+            (
+                proto::PostAverage {
+                    node: 1 + rng.next_below(50) as u64,
+                    group: 1 + rng.next_below(4) as u64,
+                    average: avg.clone(),
+                    contributors: 1 + rng.next_below(50) as u64,
+                },
+                proto::AverageReady { average: avg.clone(), groups: 1 + rng.next_below(4) as u64 },
+                proto::AggregateDelivery {
+                    aggregate: b64_blob(rng, 500),
+                    from_node: rng.next_below(50) as u64,
+                    posted: Some(rng.next_below(50) as u64),
+                    round_id: Some(rng.next_below(10) as u64),
+                },
+            )
+        },
+        |(pa, ar, del)| {
+            let (pv, av, dv) = (pa.to_value(), ar.to_value(), del.to_value());
+            value_roundtrips(&pv)
+                && value_roundtrips(&av)
+                && value_roundtrips(&dv)
+                && proto::PostAverage::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&pv)).unwrap(),
+                )
+                .unwrap()
+                    == *pa
+                && proto::AverageReady::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&av)).unwrap(),
+                )
+                .unwrap()
+                    == *ar
+                && proto::AggregateDelivery::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&dv)).unwrap(),
+                )
+                .unwrap()
+                    == *del
+        },
+    );
+}
+
+#[test]
+fn prop_key_registry_roundtrip() {
+    testkit::check(
+        "codec-key-registry",
+        40,
+        |rng| {
+            let key = Value::object(vec![
+                ("n", Value::from(b64_blob(rng, 128))),
+                ("e", Value::from("10001")),
+            ]);
+            let mut keys = BTreeMap::new();
+            for peer in 1..=(1 + rng.next_below(5) as u64) {
+                keys.insert(peer, b64_blob(rng, 64));
+            }
+            (
+                proto::RegisterKey { node: 1 + rng.next_below(100) as u64, key: key.clone() },
+                proto::GetKey { node: 1 + rng.next_below(100) as u64 },
+                proto::KeyDelivery { key },
+                proto::PostPrenegKeys { node: 1 + rng.next_below(100) as u64, keys },
+                proto::GetPrenegKey {
+                    node: 1 + rng.next_below(100) as u64,
+                    owner: 1 + rng.next_below(100) as u64,
+                },
+                proto::PrenegKeyDelivery { key: b64_blob(rng, 64) },
+            )
+        },
+        |(reg, get, del, post, getp, delp)| {
+            for v in [
+                reg.to_value(),
+                get.to_value(),
+                del.to_value(),
+                post.to_value(),
+                getp.to_value(),
+                delp.to_value(),
+            ] {
+                if !value_roundtrips(&v) {
+                    return false;
+                }
+            }
+            proto::RegisterKey::from_value(
+                &BinaryCodec.decode(&BinaryCodec.encode(&reg.to_value())).unwrap(),
+            )
+            .unwrap()
+                == *reg
+                && proto::PostPrenegKeys::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&post.to_value())).unwrap(),
+                )
+                .unwrap()
+                    == *post
+        },
+    );
+}
+
+#[test]
+fn prop_baseline_ops_roundtrip() {
+    testkit::check(
+        "codec-baseline-ops",
+        40,
+        |rng| {
+            (
+                proto::InsecPost {
+                    node: 1 + rng.next_below(100) as u64,
+                    group: 1 + rng.next_below(4) as u64,
+                    vector: gen::f64_vec(rng, 128),
+                },
+                proto::FedChildAverage {
+                    child: 1 + rng.next_below(10) as u64,
+                    average: gen::f64_vec(rng, 64),
+                    contributors: 1 + rng.next_below(20) as u64,
+                },
+                proto::FedGlobalAverage {
+                    average: gen::f64_vec(rng, 64),
+                    contributors: 1 + rng.next_below(100) as u64,
+                },
+                proto::BonAdvertise {
+                    node: 1 + rng.next_below(100) as u64,
+                    cpk: b64_blob(rng, 96),
+                    spk: b64_blob(rng, 96),
+                },
+                proto::BonPostMasked {
+                    node: 1 + rng.next_below(100) as u64,
+                    y: gen::f64_vec(rng, 128),
+                },
+            )
+        },
+        |(insec, fca, fga, adv, masked)| {
+            let checks = [
+                insec.to_value(),
+                fca.to_value(),
+                fga.to_value(),
+                adv.to_value(),
+                masked.to_value(),
+            ];
+            if !checks.iter().all(value_roundtrips) {
+                return false;
+            }
+            proto::InsecPost::from_value(
+                &BinaryCodec.decode(&BinaryCodec.encode(&insec.to_value())).unwrap(),
+            )
+            .unwrap()
+                == *insec
+                && proto::BonPostMasked::from_value(
+                    &BinaryCodec.decode(&BinaryCodec.encode(&masked.to_value())).unwrap(),
+                )
+                .unwrap()
+                    == *masked
+        },
+    );
+}
+
+#[test]
+fn prop_arbitrary_values_roundtrip_binary() {
+    // Beyond the typed messages: any JSON-model value the system could
+    // ever put on the wire must survive the binary codec.
+    testkit::check(
+        "codec-arbitrary-values",
+        80,
+        |rng| random_value(rng, 3),
+        value_roundtrips,
+    );
+}
+
+fn random_value(rng: &mut DeterministicRng, depth: usize) -> Value {
+    match rng.next_below(if depth == 0 { 5 } else { 7 }) {
+        0 => Value::Null,
+        1 => Value::Bool(rng.next_below(2) == 0),
+        2 => Value::Num((rng.next_f64() - 0.5) * 1e6),
+        3 => Value::Num(rng.next_below(100_000) as f64),
+        4 => Value::Str(gen::ascii_string(rng, 40)),
+        5 => Value::Arr((0..rng.next_below(6)).map(|_| random_value(rng, depth - 1)).collect()),
+        _ => {
+            let mut obj = Value::obj();
+            for i in 0..rng.next_below(6) {
+                obj.set(&format!("k{i}"), random_value(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-codec session equivalence + wire-size acceptance
+// ---------------------------------------------------------------------
+
+fn session_cfg(wire: WireFormat, features: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: 4,
+        features,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        poll_time: Duration::from_secs(5),
+        aggregation_timeout: Duration::from_secs(60),
+        // Generous failure thresholds: a descheduled learner thread on a
+        // loaded CI box must never trigger a repost, or the two sessions'
+        // message counts would legitimately diverge.
+        progress_timeout: Duration::from_secs(30),
+        monitor_interval: Duration::from_millis(200),
+        wire,
+        ..Default::default()
+    }
+}
+
+fn inputs(n: usize, features: usize) -> Vec<Vec<f64>> {
+    // Full-mantissa values, like real model weights — their JSON text is
+    // ~17 significant digits, the regime the binary codec targets.
+    (1..=n)
+        .map(|i| {
+            (0..features)
+                .map(|f| i as f64 * 1.25 + f as f64 * 0.707_106_781_186_547_6)
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn cross_codec_rounds_are_equivalent() {
+    let features = 1024;
+    let ins = inputs(4, features);
+
+    let json_session = SafeSession::new(session_cfg(WireFormat::Json, features)).unwrap();
+    let json_round = json_session.run_round(&ins, &FaultPlan::none()).unwrap();
+
+    let bin_session = SafeSession::new(session_cfg(WireFormat::Binary, features)).unwrap();
+    let bin_round = bin_session.run_round(&ins, &FaultPlan::none()).unwrap();
+
+    // Byte-identical averages.
+    let ja = json_round.average().unwrap();
+    let ba = bin_round.average().unwrap();
+    assert_eq!(ja.len(), ba.len());
+    for (a, b) in ja.iter().zip(ba) {
+        assert_eq!(a.to_bits(), b.to_bits(), "averages must be byte-identical");
+    }
+    // Identical message counts (the protocol is codec-agnostic).
+    assert_eq!(json_round.metrics.messages, bin_round.metrics.messages);
+    assert_eq!(json_round.metrics.per_path, bin_round.metrics.per_path);
+    // Binary ships strictly fewer bytes in both directions.
+    assert!(
+        bin_round.metrics.bytes_sent < json_round.metrics.bytes_sent,
+        "binary sent {} vs json {}",
+        bin_round.metrics.bytes_sent,
+        json_round.metrics.bytes_sent
+    );
+    assert!(
+        bin_round.metrics.bytes_received < json_round.metrics.bytes_received,
+        "binary recv {} vs json {}",
+        bin_round.metrics.bytes_received,
+        json_round.metrics.bytes_received
+    );
+    // Per-codec accounting matches the direction each session used.
+    assert_eq!(json_session.stats().codec_bytes(WireFormat::Binary), 0);
+    assert_eq!(bin_session.stats().codec_bytes(WireFormat::Json), 0);
+    assert!(bin_session.stats().codec_bytes(WireFormat::Binary) > 0);
+}
+
+#[test]
+fn binary_strictly_smaller_on_hot_paths_at_1024_features() {
+    // The acceptance bullet: post_aggregate / post_average messages for
+    // ≥1024-feature vectors must be strictly smaller under BinaryCodec.
+    let mut rng = DeterministicRng::seed(99);
+    let mut payload = vec![0u8; 1024 * 8];
+    rng.fill_bytes(&mut payload);
+    let post_agg = proto::PostAggregate {
+        from_node: 3,
+        to_node: 4,
+        group: 1,
+        aggregate: format!("safe:{}:{}", b64_encode(&payload[..64]), b64_encode(&payload)),
+        round_id: Some(0),
+    }
+    .to_value();
+    let avg: Vec<f64> = (0..1024).map(|i| (i as f64) * 0.3711 + 0.017).collect();
+    let post_avg = proto::PostAverage { node: 1, group: 1, average: avg, contributors: 4 }
+        .to_value();
+    for (label, msg) in [("post_aggregate", &post_agg), ("post_average", &post_avg)] {
+        let b = BinaryCodec.encode(msg).len();
+        let j = JsonCodec.encode(msg).len();
+        assert!(b < j, "{label}: binary {b} must be < json {j}");
+    }
+}

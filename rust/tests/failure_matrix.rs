@@ -41,9 +41,9 @@ fn run_case(n: usize, faults: FaultPlan, dead_contributors: &[u64]) {
     let result = session.run_round(&inputs(n), &faults).unwrap();
     let expect = expect_mean(n, dead_contributors);
     assert!(
-        (result.average()[0] - expect).abs() < 1e-6,
+        (result.average().unwrap()[0] - expect).abs() < 1e-6,
         "n={n} faults={faults:?}: got {} want {expect}",
-        result.average()[0]
+        result.average().unwrap()[0]
     );
     assert_eq!(
         result.metrics.contributors,
@@ -79,7 +79,7 @@ fn failure_after_post_keeps_contribution() {
     let faults = FaultPlan::none().kill(3, FailPoint::AfterPost);
     let result = session.run_round(&inputs(n), &faults).unwrap();
     let expect = (1..=5).sum::<i32>() as f64 / 5.0;
-    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
     assert_eq!(result.metrics.contributors, 5);
     // The dead node has no average; survivors do.
     assert_eq!(result.survivors().len(), 4);
@@ -125,7 +125,7 @@ fn initiator_crash_recovers_with_new_initiator() {
     let result = session.run_round(&inputs(n), &faults).unwrap();
     assert!(result.metrics.initiator_failovers >= 1);
     let expect = (2 + 3 + 4 + 5) as f64 / 4.0;
-    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
     let new_init = result
         .outcomes
         .iter()
@@ -145,7 +145,7 @@ fn initiator_crash_plus_noninitiator_failure() {
         .kill(4, FailPoint::NeverStart);
     let result = session.run_round(&inputs(n), &faults).unwrap();
     let expect = (2 + 3 + 5 + 6) as f64 / 4.0;
-    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
     assert_eq!(result.metrics.contributors, 4);
 }
 
@@ -161,5 +161,5 @@ fn subgroup_failure_isolated_to_one_group() {
     // Group 1 average: (1+2+3+4)/4 = 2.5; group 2: (5+7+8)/3 = 6.667;
     // global = mean of group means.
     let expect = (2.5 + (5.0 + 7.0 + 8.0) / 3.0) / 2.0;
-    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
 }

@@ -38,7 +38,7 @@ fn safe_round_over_http() {
     let ins = inputs(4, 3);
     let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
     // mean of 2,4,6,8 = 5 for feature 0
-    assert!((result.average()[0] - 5.0).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - 5.0).abs() < 1e-6);
     assert_eq!(result.metrics.contributors, 4);
 }
 
@@ -54,7 +54,7 @@ fn safe_http_with_progress_failover() {
     assert_eq!(result.metrics.contributors, 5);
     assert!(result.metrics.progress_failovers >= 1);
     let expect = (2.0 + 4.0 + 8.0 + 10.0 + 12.0) / 5.0;
-    assert!((result.average()[0] - expect).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
 }
 
 #[test]
@@ -63,11 +63,11 @@ fn safe_http_large_vectors() {
     let session = SafeSession::new(cfg).unwrap();
     let ins = inputs(3, 5000);
     let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
-    assert_eq!(result.average().len(), 5000);
+    assert_eq!(result.average().unwrap().len(), 5000);
     // spot-check a few features
     for f in [0usize, 1234, 4999] {
         let expect = (ins[0][f] + ins[1][f] + ins[2][f]) / 3.0;
-        assert!((result.average()[f] - expect).abs() < 1e-6, "feature {f}");
+        assert!((result.average().unwrap()[f] - expect).abs() < 1e-6, "feature {f}");
     }
 }
 
@@ -82,6 +82,6 @@ fn repeated_rounds_reuse_session() {
             (1..=4).map(|i| vec![(i * (round + 1)) as f64; 2]).collect();
         let result = session.run_round(&ins, &FaultPlan::none()).unwrap();
         let expect = (1 + 2 + 3 + 4) as f64 * (round + 1) as f64 / 4.0;
-        assert!((result.average()[0] - expect).abs() < 1e-6, "round {round}");
+        assert!((result.average().unwrap()[0] - expect).abs() < 1e-6, "round {round}");
     }
 }

@@ -69,11 +69,8 @@ fn prop_safe_average_equals_cleartext_mean() {
             let session = SafeSession::new(quick_cfg(*n, *features, *seed)).unwrap();
             let result = session.run_round(inputs, &FaultPlan::none()).unwrap();
             let expect = mean(inputs);
-            result
-                .average()
-                .iter()
-                .zip(&expect)
-                .all(|(a, e)| (a - e).abs() < 1e-6)
+            let avg = result.average().unwrap();
+            avg.iter().zip(&expect).all(|(a, e)| (a - e).abs() < 1e-6)
         },
     );
 }
@@ -107,7 +104,9 @@ fn prop_all_protocols_agree() {
             let close = |v: &[f64], tol: f64| {
                 v.iter().zip(&expect).all(|(a, e)| (a - e).abs() < tol)
             };
-            close(safe.average(), 1e-6) && close(&insec.average, 1e-9) && close(&bon.average, 1e-5)
+            close(safe.average().unwrap(), 1e-6)
+                && close(&insec.average, 1e-9)
+                && close(&bon.average, 1e-5)
         },
     );
 }
@@ -245,7 +244,7 @@ fn weighted_full_protocol_run() {
     let inputs: Vec<Vec<f64>> =
         xs.iter().zip(&ws).map(|(x, &w)| weighted::encode(x, w)).collect();
     let result = session.run_round(&inputs, &FaultPlan::none()).unwrap();
-    let avg = weighted::decode(result.average()).unwrap();
+    let avg = weighted::decode(result.average().unwrap()).unwrap();
     let total_w: f64 = ws.iter().sum();
     for f in 0..2 {
         let expect: f64 =
@@ -266,7 +265,7 @@ fn shuffled_chains_still_average_correctly() {
     let mut initiators = std::collections::BTreeSet::new();
     for _ in 0..4 {
         let result = session.run_round(&inputs, &FaultPlan::none()).unwrap();
-        for (a, e) in result.average().iter().zip(&expect) {
+        for (a, e) in result.average().unwrap().iter().zip(&expect) {
             assert!((a - e).abs() < 1e-6);
         }
         initiators.insert(
@@ -295,7 +294,7 @@ fn staggered_polling_reduces_concurrent_polls() {
         let session = SafeSession::new(cfg).unwrap();
         session.controller.reset_poll_gauge();
         let result = session.run_round(&inputs, &FaultPlan::none()).unwrap();
-        for (a, e) in result.average().iter().zip(&expect) {
+        for (a, e) in result.average().unwrap().iter().zip(&expect) {
             assert!((a - e).abs() < 1e-6);
         }
         session.controller.peak_concurrent_polls()

@@ -239,7 +239,7 @@ fn controller_never_sees_plaintext_aggregates() {
     // And the full-session average was still correct.
     let expect0 =
         secret_inputs.iter().map(|v| v[0]).sum::<f64>() / secret_inputs.len() as f64;
-    assert!((result.average()[0] - expect0).abs() < 1e-6);
+    assert!((result.average().unwrap()[0] - expect0).abs() < 1e-6);
 }
 
 // ---- HTTP long-poll behaviour ----
