@@ -80,17 +80,22 @@ fn crypto_table() {
         let t = Instant::now();
         let iters = 5;
         let mut wire = 0usize;
+        let mut legacy = 0usize;
         for _ in 0..iters {
             let env =
                 Envelope::seal(&vector, mode, Some(&kp.public), None, compress, &mut rng).unwrap();
-            wire = env.wire_len();
+            // What actually ships since the blob framing landed; the
+            // legacy base64-text size is the pre-PR-2 comparison column.
+            wire = env.blob_len();
+            legacy = env.wire_len();
             env.open(Some(&kp.private), None).unwrap();
         }
         println!(
-            "{:>16}: {:>10.2?} per seal+open, {:>8} wire bytes",
+            "{:>16}: {:>10.2?} per seal+open, {:>8} wire bytes ({:>8} as legacy b64 text)",
             label,
             t.elapsed() / iters,
-            wire
+            wire,
+            legacy
         );
     }
 }

@@ -1,83 +1,142 @@
-//! Wire-codec bench (E21): JSON vs binary codec — encode/decode cost for
-//! the hot message shapes, and whole-round wire-size ratios at growing
-//! feature counts. The JSON column is the paper-parity default; the
-//! binary column is what a deployment that controls both endpoints can
-//! switch on with `SessionConfig::wire`.
+//! Wire-codec bench (E21): the four codec stacks — json, binary,
+//! json+deflate, binary+deflate — compared on encode/decode cost for the
+//! hot message shapes, on the aggregate-path framing (raw blob vs PR 1's
+//! base64 text), and on whole-round wire bytes broken down by endpoint.
+//!
+//! Emits a machine-readable `BENCH_wire.json` (bytes/round and
+//! encode/decode ns per codec) so the perf trajectory is tracked across
+//! PRs. The JSON column is the paper-parity default; the other stacks are
+//! what a deployment that controls both endpoints can switch on with
+//! `SessionConfig::wire` / `--wire`.
+
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use safe_agg::config::{DeviceProfile, SessionConfig, WireFormat};
+use safe_agg::crypto::envelope::{CipherMode, Envelope};
 use safe_agg::harness::bench_repeats;
+use safe_agg::json::Value;
 use safe_agg::learner::faults::FaultPlan;
 use safe_agg::proto;
-use safe_agg::proto::codec::{BinaryCodec, JsonCodec, WireCodec};
+use safe_agg::proto::codec::{BinaryCodec, WireCodec};
 use safe_agg::protocols::SafeSession;
-use safe_agg::util::b64_encode;
 
-fn encode_decode_table() {
+/// Per-codec measurement of one message shape.
+struct CodecCost {
+    encode_ns: f64,
+    decode_ns: f64,
+    bytes: usize,
+}
+
+fn measure(codec: &dyn WireCodec, msg: &Value, iters: u32) -> CodecCost {
+    let mut bytes = 0usize;
+    let t = Instant::now();
+    let mut encoded = Vec::new();
+    for _ in 0..iters {
+        encoded = codec.encode(msg);
+        bytes = encoded.len();
+    }
+    let encode_ns = t.elapsed().as_nanos() as f64 / iters as f64;
+    let t = Instant::now();
+    for _ in 0..iters {
+        codec.decode(&encoded).unwrap();
+    }
+    let decode_ns = t.elapsed().as_nanos() as f64 / iters as f64;
+    CodecCost { encode_ns, decode_ns, bytes }
+}
+
+fn encode_decode_table(report: &mut Value) {
     println!("── E21a: codec encode+decode cost (post_average shape) ──");
     println!(
-        "{:>9} {:>12} {:>12} {:>10} {:>10} {:>7}",
-        "features", "json", "binary", "json B", "bin B", "ratio"
+        "{:>9} {:>15} {:>13} {:>10} {:>8}",
+        "features", "codec", "enc+dec ns", "bytes", "vs json"
     );
+    let mut shapes = Value::obj();
     for features in [64usize, 1024, 10_000, 100_000] {
         let avg: Vec<f64> = (0..features).map(|i| i as f64 * 0.12345 + 0.67).collect();
         let msg = proto::PostAverage { node: 1, group: 1, average: avg, contributors: 15 }
             .to_value();
         let iters = (1_000_000 / features.max(1)).clamp(3, 200) as u32;
-        let t = Instant::now();
-        let mut jlen = 0;
-        for _ in 0..iters {
-            let bytes = JsonCodec.encode(&msg);
-            jlen = bytes.len();
-            JsonCodec.decode(&bytes).unwrap();
+        let mut json_bytes = 0usize;
+        let mut row = Value::obj();
+        for fmt in WireFormat::ALL {
+            let cost = measure(fmt.codec(), &msg, iters);
+            if fmt == WireFormat::Json {
+                json_bytes = cost.bytes;
+            }
+            println!(
+                "{:>9} {:>15} {:>13.0} {:>10} {:>7.2}x",
+                features,
+                fmt.name(),
+                cost.encode_ns + cost.decode_ns,
+                cost.bytes,
+                json_bytes as f64 / cost.bytes as f64
+            );
+            row.set(
+                fmt.name(),
+                Value::object(vec![
+                    ("encode_ns", Value::from(cost.encode_ns)),
+                    ("decode_ns", Value::from(cost.decode_ns)),
+                    ("bytes", Value::from(cost.bytes)),
+                ]),
+            );
         }
-        let json_cost = t.elapsed() / iters;
-        let t = Instant::now();
-        let mut blen = 0;
-        for _ in 0..iters {
-            let bytes = BinaryCodec.encode(&msg);
-            blen = bytes.len();
-            BinaryCodec.decode(&bytes).unwrap();
-        }
-        let bin_cost = t.elapsed() / iters;
-        println!(
-            "{:>9} {:>12.2?} {:>12.2?} {:>10} {:>10} {:>6.2}x",
-            features,
-            json_cost,
-            bin_cost,
-            jlen,
-            blen,
-            jlen as f64 / blen as f64
-        );
+        shapes.set(&features.to_string(), row);
     }
-    // The ciphertext-carrying path: a sealed aggregate rides as a string
-    // either way; binary drops the JSON quoting/field framing.
-    let payload = vec![0x5au8; 8192];
-    let agg = proto::PostAggregate {
-        from_node: 1,
-        to_node: 2,
-        group: 1,
-        aggregate: format!("safe:{}:{}", b64_encode(&payload[..64]), b64_encode(&payload)),
-        round_id: Some(0),
-    }
-    .to_value();
-    let j = JsonCodec.encode(&agg).len();
-    let b = BinaryCodec.encode(&agg).len();
-    println!("post_aggregate (1024-feature sealed payload): json {j} B, binary {b} B");
+    report.set("post_average_codec_cost", shapes);
     println!();
 }
 
-fn session_ratio_table() -> anyhow::Result<()> {
-    println!("── E21b: whole-round wire bytes, SAFE 4 nodes (json vs binary) ──");
+/// The aggregate path itself: a sealed 1024-feature payload as the new raw
+/// blob framing vs PR 1's `mode:keyB64:bodyB64` text framing, both under
+/// the binary codec.
+fn aggregate_framing_table(report: &mut Value) {
+    println!("── E21a': aggregate framing, raw blob vs PR 1 base64 text ──");
+    let mut rng = safe_agg::crypto::rng::DeterministicRng::seed(7);
+    let mut payload = vec![0u8; 1024 * 8];
+    use safe_agg::crypto::rng::SecureRng;
+    rng.fill_bytes(&mut payload);
+    let env = Envelope {
+        mode: CipherMode::Hybrid,
+        sealed_key: payload[..64].to_vec(),
+        body: payload.clone(),
+    };
+    let new_field = BinaryCodec.encode(&Value::Bytes(env.to_blob())).len();
+    let pr1_field = BinaryCodec.encode(&Value::from(env.encode())).len();
+    let reduction = 100.0 * (1.0 - new_field as f64 / pr1_field as f64);
     println!(
-        "{:>9} {:>12} {:>12} {:>7} {:>9}",
-        "features", "json B", "binary B", "ratio", "messages"
+        "aggregate field (1024-feature sealed payload): raw {new_field} B vs \
+         base64-text {pr1_field} B ({reduction:.1}% fewer)"
+    );
+    assert!(
+        new_field * 4 <= pr1_field * 3,
+        "raw framing must be ≥25% below PR 1's base64 framing"
+    );
+    report.set(
+        "aggregate_framing",
+        Value::object(vec![
+            ("raw_blob_bytes", Value::from(new_field)),
+            ("pr1_base64_bytes", Value::from(pr1_field)),
+            ("reduction_pct", Value::from(reduction)),
+        ]),
+    );
+    println!();
+}
+
+fn session_ratio_table(report: &mut Value) -> anyhow::Result<()> {
+    println!("── E21b: whole-round wire bytes, SAFE 4 nodes (all codec stacks) ──");
+    println!(
+        "{:>9} {:>15} {:>12} {:>7} {:>9}",
+        "features", "codec", "bytes", "ratio", "messages"
     );
     let repeats = bench_repeats(1).max(1);
+    let mut sessions_out = Value::obj();
     for features in [64usize, 1024, 10_000] {
-        let mut totals = [0u64; 2];
-        let mut msgs = [0u64; 2];
-        for (i, wire) in [WireFormat::Json, WireFormat::Binary].into_iter().enumerate() {
+        let mut json_total = 0u64;
+        let mut ref_msgs: Option<u64> = None;
+        let mut per_endpoint: BTreeMap<&'static str, BTreeMap<String, u64>> = BTreeMap::new();
+        let mut row = Value::obj();
+        for fmt in WireFormat::ALL {
             let cfg = SessionConfig {
                 n_nodes: 4,
                 features,
@@ -88,7 +147,7 @@ fn session_ratio_table() -> anyhow::Result<()> {
                 // comparable even on a loaded machine.
                 progress_timeout: std::time::Duration::from_secs(30),
                 aggregation_timeout: std::time::Duration::from_secs(60),
-                wire,
+                wire: fmt,
                 ..Default::default()
             };
             let session = SafeSession::new(cfg)?;
@@ -102,29 +161,105 @@ fn session_ratio_table() -> anyhow::Result<()> {
                         .collect()
                 })
                 .collect();
+            let before = session.stats().per_path_stats();
+            let mut total = 0u64;
+            let mut msgs = 0u64;
             for _ in 0..repeats {
                 let round = session.run_round(&inputs, &FaultPlan::none())?;
-                totals[i] += round.metrics.bytes_sent + round.metrics.bytes_received;
-                msgs[i] = round.metrics.messages;
+                total += round.metrics.bytes_sent + round.metrics.bytes_received;
+                msgs = round.metrics.messages;
             }
+            let after = session.stats().per_path_stats();
             // Sanity: all traffic was attributed to the session's codec.
-            assert!(session.stats().codec_bytes(wire) > 0);
+            assert!(session.stats().codec_bytes(fmt) > 0);
+            if fmt == WireFormat::Json {
+                json_total = total;
+            }
+            match ref_msgs {
+                None => ref_msgs = Some(msgs),
+                Some(m) => assert_eq!(m, msgs, "codec must not change message counts"),
+            }
+            println!(
+                "{:>9} {:>15} {:>12} {:>6.2}x {:>9}",
+                features,
+                fmt.name(),
+                total,
+                json_total as f64 / total as f64,
+                msgs
+            );
+            if fmt != WireFormat::Json {
+                assert!(total < json_total, "{} must ship fewer bytes than json", fmt.name());
+            }
+            // Per-endpoint byte deltas (sent + received) for the breakdown.
+            let mut eps = BTreeMap::new();
+            for (path, stat) in &after {
+                let b = before.get(path).copied().unwrap_or_default();
+                let bytes = (stat.bytes_sent - b.bytes_sent)
+                    + (stat.bytes_received - b.bytes_received);
+                if bytes > 0 {
+                    eps.insert(path.clone(), bytes);
+                }
+            }
+            per_endpoint.insert(fmt.name(), eps);
+            row.set(fmt.name(), Value::from(total));
         }
-        println!(
-            "{:>9} {:>12} {:>12} {:>6.2}x {:>9}",
-            features,
-            totals[0],
-            totals[1],
-            totals[0] as f64 / totals[1] as f64,
-            msgs[1]
-        );
-        assert_eq!(msgs[0], msgs[1], "codec must not change message counts");
-        assert!(totals[1] < totals[0], "binary must ship fewer bytes");
+        sessions_out.set(&features.to_string(), row);
+
+        // Endpoint breakdown at this feature count (the per-path byte
+        // counters in MessageStats, surfaced per codec).
+        println!("  per-endpoint bytes (sent+received, {features} features):");
+        let mut all_paths: Vec<String> = Vec::new();
+        for eps in per_endpoint.values() {
+            for p in eps.keys() {
+                if !all_paths.contains(p) {
+                    all_paths.push(p.clone());
+                }
+            }
+        }
+        all_paths.sort();
+        print!("  {:>20}", "path");
+        for fmt in WireFormat::ALL {
+            print!(" {:>15}", fmt.name());
+        }
+        println!();
+        for p in &all_paths {
+            print!("  {:>20}", p);
+            for fmt in WireFormat::ALL {
+                let v = per_endpoint
+                    .get(fmt.name())
+                    .and_then(|eps| eps.get(p))
+                    .copied()
+                    .unwrap_or(0);
+                print!(" {:>15}", v);
+            }
+            println!();
+        }
+        println!();
+
+        if features == 1024 {
+            let mut per_path_json = Value::obj();
+            for (codec, eps) in &per_endpoint {
+                let mut obj = Value::obj();
+                for (p, b) in eps {
+                    obj.set(p, Value::from(*b));
+                }
+                per_path_json.set(codec, obj);
+            }
+            report.set("per_path_bytes_1024_features", per_path_json);
+        }
     }
+    report.set("session_bytes", sessions_out);
+    report.set("repeats", Value::from(repeats));
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
-    encode_decode_table();
-    session_ratio_table()
+    let mut report = Value::obj();
+    encode_decode_table(&mut report);
+    aggregate_framing_table(&mut report);
+    session_ratio_table(&mut report)?;
+    let path = "BENCH_wire.json";
+    std::fs::write(path, report.to_string())?;
+    println!("wrote {path}");
+    Ok(())
 }

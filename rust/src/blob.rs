@@ -1,0 +1,101 @@
+//! [`Blob`] — a cheaply-cloneable, immutable byte buffer for opaque wire
+//! payloads (sealed aggregates, sealed symmetric keys, SMPC share blobs).
+//!
+//! The controller is "a mere message broker": the hottest thing it does is
+//! store a ciphertext and hand it back out. `Blob` is an `Arc<[u8]>`, so
+//! that store-and-forward path clones a pointer, never the payload — the
+//! bytes decoded off the wire are the very same allocation delivered to
+//! the next node (`Blob::ptr_eq` lets tests assert exactly that). Codecs
+//! decide the byte representation: raw length-prefixed bytes under the
+//! binary codec, base64 text only at the JSON boundary (see
+//! `proto::codec`).
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Immutable shared bytes. Equality is by content; `ptr_eq` checks
+/// whether two blobs share one allocation (the zero-copy property).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Blob(Arc<[u8]>);
+
+impl Blob {
+    pub fn new(bytes: Vec<u8>) -> Blob {
+        Blob(Arc::from(bytes))
+    }
+
+    pub fn from_slice(bytes: &[u8]) -> Blob {
+        Blob(Arc::from(bytes))
+    }
+
+    pub fn empty() -> Blob {
+        Blob(Arc::from(Vec::new()))
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.0
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// True iff both blobs are the same allocation (not merely equal
+    /// bytes) — the controller pass-through guarantee.
+    pub fn ptr_eq(a: &Blob, b: &Blob) -> bool {
+        Arc::ptr_eq(&a.0, &b.0)
+    }
+}
+
+impl Deref for Blob {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl From<Vec<u8>> for Blob {
+    fn from(bytes: Vec<u8>) -> Blob {
+        Blob::new(bytes)
+    }
+}
+
+impl From<&[u8]> for Blob {
+    fn from(bytes: &[u8]) -> Blob {
+        Blob::from_slice(bytes)
+    }
+}
+
+impl std::fmt::Debug for Blob {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Blob({} bytes)", self.0.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equality_is_by_content_ptr_eq_by_allocation() {
+        let a = Blob::new(vec![1, 2, 3]);
+        let b = Blob::from_slice(&[1, 2, 3]);
+        assert_eq!(a, b);
+        assert!(!Blob::ptr_eq(&a, &b));
+        let c = a.clone();
+        assert!(Blob::ptr_eq(&a, &c), "clone must share the allocation");
+    }
+
+    #[test]
+    fn deref_and_len() {
+        let b = Blob::from_slice(b"xyz");
+        assert_eq!(&b[..], b"xyz");
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert!(Blob::empty().is_empty());
+    }
+}

@@ -55,7 +55,9 @@ pub struct SessionConfig {
     /// Controller transport.
     pub transport: TransportKind,
     /// Wire codec for message bodies (JSON = paper parity, the default;
-    /// binary = length-prefixed fields + raw little-endian f64 vectors).
+    /// binary = length-prefixed fields, raw little-endian f64 vectors and
+    /// raw ciphertext framing; `json+deflate` / `binary+deflate` wrap the
+    /// inner codec in transparent DEFLATE compression).
     pub wire: WireFormat,
     /// Vector math engine.
     pub engine: VectorEngine,
@@ -272,6 +274,12 @@ mod tests {
     fn wire_flag_selects_codec() {
         let a = Args::parse(["run", "--wire", "binary"].iter().map(|s| s.to_string()));
         assert_eq!(a.to_session_config().wire, WireFormat::Binary);
+        let a = Args::parse(
+            ["run", "--wire", "binary+deflate"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(a.to_session_config().wire, WireFormat::BinaryDeflate);
+        let a = Args::parse(["run", "--wire=json+deflate"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().wire, WireFormat::JsonDeflate);
         let a = Args::parse(["run"].iter().map(|s| s.to_string()));
         assert_eq!(a.to_session_config().wire, WireFormat::Json);
         let a = Args::parse(["run", "--wire", "bogus"].iter().map(|s| s.to_string()));

@@ -23,6 +23,7 @@ use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 use super::Controller;
+use crate::blob::Blob;
 use crate::crypto::bigint::BigUint;
 use crate::crypto::dh::DhGroup;
 use crate::crypto::rng::prg_expand_f64;
@@ -39,8 +40,9 @@ pub struct BonState {
     pub group: DhGroup,
     /// Round 0: node → (c_pk_hex, s_pk_hex).
     pub keys: BTreeMap<u64, (String, String)>,
-    /// Round 1: recipient → sender → sealed share blob (opaque to server).
-    pub shares: BTreeMap<u64, BTreeMap<u64, String>>,
+    /// Round 1: recipient → sender → sealed share blob (opaque to the
+    /// server, stored and forwarded as the posted allocation).
+    pub shares: BTreeMap<u64, BTreeMap<u64, Blob>>,
     /// Round 2: node → masked input y_u.
     pub masked: BTreeMap<u64, Vec<f64>>,
     pub round2_closed: bool,
@@ -240,8 +242,8 @@ pub fn post_shares(ctrl: &Controller, body: &Value) -> Value {
     };
     let mut inner = ctrl.inner.lock().unwrap();
     for (to_str, blob) in shares {
-        if let (Ok(to), Some(b)) = (to_str.parse::<u64>(), blob.as_str()) {
-            inner.bon.shares.entry(to).or_default().insert(from, b.to_string());
+        if let (Ok(to), Some(b)) = (to_str.parse::<u64>(), blob.as_blob()) {
+            inner.bon.shares.entry(to).or_default().insert(from, b);
         }
     }
     ctrl.cv.notify_all();
@@ -267,7 +269,7 @@ pub fn get_shares(ctrl: &Controller, body: &Value) -> Value {
         Some(m) => {
             let mut obj = Value::obj();
             for (from, blob) in m {
-                obj.set(&from.to_string(), Value::from(blob));
+                obj.set(&from.to_string(), Value::Bytes(blob));
             }
             Value::object(vec![("status", Value::from("ok")), ("shares", obj)])
         }

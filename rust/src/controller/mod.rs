@@ -23,6 +23,7 @@ use std::sync::atomic::{AtomicI64, Ordering as AtomicOrdering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::blob::Blob;
 use crate::json::Value;
 use crate::proto;
 use crate::transport::Handler;
@@ -59,8 +60,9 @@ pub(crate) struct Inner {
     pub expected_groups: BTreeSet<u64>,
     /// Node → serialized RSA public key (round 0 registry).
     pub keys: BTreeMap<u64, Value>,
-    /// (owner, for_node) → base64 RSA-sealed symmetric key (§5.8).
-    pub preneg: BTreeMap<(u64, u64), String>,
+    /// (owner, for_node) → RSA-sealed symmetric key blob (§5.8). Stored
+    /// encoded, handed back as the same allocation.
+    pub preneg: BTreeMap<(u64, u64), Blob>,
     pub insec: insec::InsecState,
     pub bon: bon::BonState,
     pub fed: hierarchy::FedState,
@@ -569,11 +571,11 @@ mod tests {
     #[test]
     fn post_then_get_aggregate_delivers() {
         let c = controller();
-        let r = c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "blob", 1));
+        let r = c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"blob", 1));
         assert_eq!(r.str_of("status"), Some("ok"));
         let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
         assert_eq!(r.str_of("status"), Some("ok"));
-        assert_eq!(r.str_of("aggregate"), Some("blob"));
+        assert_eq!(r.blob_of("aggregate").unwrap().as_bytes(), b"blob");
         assert_eq!(r.u64_of("from_node"), Some(1));
         assert_eq!(r.u64_of("posted"), Some(1));
         // Second get times out empty.
@@ -582,11 +584,37 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_pass_through_shares_the_posted_allocation() {
+        // The "mere message broker" guarantee, mechanically: the blob the
+        // controller delivers from get_aggregate is the very allocation
+        // that arrived in post_aggregate — stored and forwarded with Arc
+        // clones, never decoded, copied or re-encoded.
+        let c = controller();
+        let blob = Blob::new(vec![0xa5u8; 4096]);
+        let body = proto::PostAggregate {
+            from_node: 1,
+            to_node: 2,
+            group: 1,
+            aggregate: blob.clone(),
+            round_id: None,
+        }
+        .to_value();
+        c.handle(proto::POST_AGGREGATE, &body);
+        let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        let delivered = match r.get("aggregate") {
+            Some(Value::Bytes(b)) => b.clone(),
+            other => panic!("expected Bytes aggregate, got {other:?}"),
+        };
+        assert!(Blob::ptr_eq(&blob, &delivered), "controller must not copy the blob");
+    }
+
+    #[test]
     fn check_aggregate_sees_consumed_after_forward() {
         let c = controller();
-        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "a1", 1));
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));
         // node 2 forwards — that marks node 2 as consumed for node 1's check
-        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(2, 3, "a2", 1));
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(2, 3, b"a2", 1));
         let r = c.handle(proto::CHECK_AGGREGATE, &proto::node_op(2, 1));
         assert_eq!(r.str_of("status"), Some("consumed"));
     }
@@ -599,10 +627,10 @@ mod tests {
             c2.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1))
         });
         std::thread::sleep(Duration::from_millis(30));
-        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "late", 1));
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"late", 1));
         let r = t.join().unwrap();
         assert_eq!(r.str_of("status"), Some("ok"));
-        assert_eq!(r.str_of("aggregate"), Some("late"));
+        assert_eq!(r.blob_of("aggregate").unwrap().as_bytes(), b"late");
     }
 
     #[test]
@@ -647,7 +675,7 @@ mod tests {
     #[test]
     fn progress_failover_issues_repost() {
         let c = controller();
-        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "a1", 1));
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));
         // Node 2 goes silent; wait past progress_timeout.
         std::thread::sleep(Duration::from_millis(150));
         let r = c.handle(proto::PROGRESS_CHECK, &Value::obj());
@@ -675,7 +703,7 @@ mod tests {
                 )]),
             )]),
         );
-        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "a1", 1));
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));
         std::thread::sleep(Duration::from_millis(120));
         let r = c.handle(proto::PROGRESS_CHECK, &Value::obj());
         let actions = r.get("actions").unwrap().as_arr().unwrap();
@@ -689,7 +717,7 @@ mod tests {
         assert_eq!(r.str_of("status"), Some("repost"));
         assert_eq!(r.u64_of("to_node"), Some(3));
         // Stale post from the failed node is rejected.
-        let r = c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(2, 3, "late", 1));
+        let r = c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(2, 3, b"late", 1));
         assert_eq!(r.str_of("status"), Some("stale"));
     }
 
@@ -743,13 +771,14 @@ mod tests {
     fn preneg_key_store() {
         let c = controller();
         // Node 2 generates keys for its predecessors.
+        let sealed = Blob::from_slice(b"sealed-for-1");
         c.handle(
             proto::POST_PRENEG_KEYS,
             &Value::object(vec![
                 ("node", Value::from(2u64)),
                 (
                     "keys",
-                    Value::object(vec![("1", Value::from("sealed-for-1"))]),
+                    Value::object(vec![("1", Value::Bytes(sealed.clone()))]),
                 ),
             ]),
         );
@@ -758,7 +787,11 @@ mod tests {
             &Value::object(vec![("node", Value::from(1u64)), ("owner", Value::from(2u64))]),
         );
         assert_eq!(r.str_of("status"), Some("ok"));
-        assert_eq!(r.str_of("key"), Some("sealed-for-1"));
+        let delivered = r.blob_of("key").unwrap();
+        assert_eq!(delivered, sealed);
+        // Zero-copy pass-through: the delivered blob is the allocation we
+        // posted, not a re-encoded copy.
+        assert!(Blob::ptr_eq(&sealed, &delivered));
     }
 
     #[test]
@@ -783,12 +816,12 @@ mod tests {
         let r = c.handle(proto::SHOULD_INITIATE, &proto::node_op(2, 1));
         assert_eq!(r.bool_of("init"), Some(true));
         // A message from round 0 arrives late.
-        let mut stale = proto::post_aggregate(1, 2, "old", 1);
+        let mut stale = proto::post_aggregate(1, 2, b"old", 1);
         stale.set("round_id", Value::from(0u64));
         let r = c.handle(proto::POST_AGGREGATE, &stale);
         assert_eq!(r.str_of("status"), Some("stale_round"));
         // Current-round message is fine.
-        let mut fresh = proto::post_aggregate(2, 3, "new", 1);
+        let mut fresh = proto::post_aggregate(2, 3, b"new", 1);
         fresh.set("round_id", Value::from(1u64));
         let r = c.handle(proto::POST_AGGREGATE, &fresh);
         assert_eq!(r.str_of("status"), Some("ok"));

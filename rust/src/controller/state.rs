@@ -9,10 +9,15 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
-/// An aggregate parked for `to_node` until it polls.
+use crate::blob::Blob;
+
+/// An aggregate parked for `to_node` until it polls. The blob is the
+/// encoded envelope exactly as posted — stored and later delivered as the
+/// same shared allocation, never decoded or re-encoded (the zero-copy
+/// pass-through the paper's "mere message broker" implies).
 #[derive(Debug, Clone)]
 pub struct PostedAggregate {
-    pub aggregate: String,
+    pub aggregate: Blob,
     pub from_node: u64,
     pub posted_at: Instant,
 }
@@ -195,7 +200,7 @@ mod tests {
         g.mailbox.insert(
             2,
             PostedAggregate {
-                aggregate: "x".into(),
+                aggregate: Blob::from_slice(b"x"),
                 from_node: 1,
                 posted_at: Instant::now(),
             },
@@ -208,7 +213,7 @@ mod tests {
         g.mailbox.insert(
             3,
             PostedAggregate {
-                aggregate: "y".into(),
+                aggregate: Blob::from_slice(b"y"),
                 from_node: 2,
                 posted_at: Instant::now(),
             },
@@ -242,7 +247,7 @@ mod tests {
         g.posters.insert(1);
         g.mailbox.insert(
             2,
-            PostedAggregate { aggregate: "x".into(), from_node: 1, posted_at: Instant::now() },
+            PostedAggregate { aggregate: Blob::from_slice(b"x"), from_node: 1, posted_at: Instant::now() },
         );
         g.average = Some(vec![0.5]);
         g.failed.insert(2);

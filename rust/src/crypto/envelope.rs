@@ -19,14 +19,15 @@
 //! and exact, mirroring the paper's opaque-JSON-payload contract.
 
 use anyhow::{bail, Context, Result};
-use flate2::read::DeflateDecoder;
-use flate2::write::DeflateEncoder;
-use flate2::Compression;
-use std::io::{Read, Write};
 
 use super::aescipher::SymmetricKey;
 use super::rng::SecureRng;
 use super::rsa::{RsaPrivateKey, RsaPublicKey};
+use crate::blob::Blob;
+
+// Deflate helpers live in `util` (shared with the codec-layer
+// `CompressedCodec` wrapper); re-exported here for the existing callers.
+pub use crate::util::{compress, decompress};
 
 /// Which protection to apply to chain payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -72,22 +73,12 @@ pub fn bytes_to_vec(b: &[u8]) -> Result<Vec<f64>> {
         .collect())
 }
 
-pub fn compress(data: &[u8]) -> Vec<u8> {
-    let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(data).expect("in-memory deflate cannot fail");
-    enc.finish().expect("in-memory deflate cannot fail")
-}
-
-pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
-    let mut dec = DeflateDecoder::new(data);
-    let mut out = Vec::new();
-    dec.read_to_end(&mut out).context("deflate decompression failed")?;
-    Ok(out)
-}
-
-/// Wire envelope: mode tag + opaque body, carried as base64 inside the JSON
-/// `aggregate` field (the controller never inspects it — §6.2 "the
-/// aggregation payload is opaque to the controller").
+/// Wire envelope: mode tag + sealed key + opaque body. On the wire it is a
+/// [`Blob`] in the compact binary framing of [`Envelope::to_blob`] (raw
+/// ciphertext, no base64 — the codec layer base64s only at a JSON
+/// boundary); the legacy `mode:keyB64:bodyB64` text form remains for
+/// paper-parity tooling. Either way the controller never inspects it —
+/// §6.2 "the aggregation payload is opaque to the controller".
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
     pub mode: CipherMode,
@@ -184,7 +175,8 @@ impl Envelope {
         bytes_to_vec(&raw)
     }
 
-    /// Encode for the JSON `aggregate` field: `mode:keyB64:bodyB64`.
+    /// Legacy text encoding (the paper's JSON `aggregate` field):
+    /// `mode:keyB64:bodyB64`.
     pub fn encode(&self) -> String {
         format!(
             "{}:{}:{}",
@@ -208,9 +200,80 @@ impl Envelope {
         Ok(Envelope { mode, sealed_key, body })
     }
 
-    /// Wire size in bytes of the encoded envelope.
+    /// One-byte mode tag for the binary framing. Values stay below 0x20 so
+    /// a framed blob can never be confused with the text encoding (whose
+    /// first byte is an ASCII mode letter).
+    fn mode_tag(&self) -> u8 {
+        match self.mode {
+            CipherMode::None => 0,
+            CipherMode::RsaOnly => 1,
+            CipherMode::Hybrid => 2,
+            CipherMode::PreNegotiated => 3,
+        }
+    }
+
+    /// Compact binary framing: `mode tag + varint key length + sealed key
+    /// + body` (the body runs to the end of the blob — no length needed).
+    /// This is the raw ciphertext framing the wire carries: zero base64,
+    /// ~3 bytes of header on top of the ciphertext itself.
+    pub fn to_blob(&self) -> Blob {
+        let mut out = Vec::with_capacity(1 + 5 + self.sealed_key.len() + self.body.len());
+        out.push(self.mode_tag());
+        crate::util::write_varint(self.sealed_key.len() as u64, &mut out);
+        out.extend_from_slice(&self.sealed_key);
+        out.extend_from_slice(&self.body);
+        Blob::new(out)
+    }
+
+    /// Parse either wire form: the binary framing of [`Envelope::to_blob`]
+    /// (first byte is a sub-0x20 mode tag) or the legacy UTF-8 text
+    /// encoding (first byte is an ASCII letter).
+    pub fn from_blob(blob: &Blob) -> Result<Envelope> {
+        let b = blob.as_bytes();
+        match b.first() {
+            None => bail!("empty envelope blob"),
+            Some(&tag) if tag < 0x20 => {
+                let mode = match tag {
+                    0 => CipherMode::None,
+                    1 => CipherMode::RsaOnly,
+                    2 => CipherMode::Hybrid,
+                    3 => CipherMode::PreNegotiated,
+                    other => bail!("unknown envelope mode tag {other:#x}"),
+                };
+                let mut pos = 1usize;
+                let key_len = crate::util::read_varint(b, &mut pos)
+                    .context("envelope key length")? as usize;
+                if key_len > b.len() - pos {
+                    bail!(
+                        "envelope key length {key_len} exceeds remaining {} bytes",
+                        b.len() - pos
+                    );
+                }
+                let sealed_key = b[pos..pos + key_len].to_vec();
+                let body = b[pos + key_len..].to_vec();
+                Ok(Envelope { mode, sealed_key, body })
+            }
+            _ => Envelope::decode(
+                std::str::from_utf8(b).context("text envelope not UTF-8")?,
+            ),
+        }
+    }
+
+    /// Wire size in bytes of the legacy text encoding — computed
+    /// arithmetically (base64 is ⌈n/3⌉·4 per part plus the mode word and
+    /// two colons), never by materializing the encoding just to measure it.
     pub fn wire_len(&self) -> usize {
-        self.encode().len()
+        fn b64_len(n: usize) -> usize {
+            (n + 2) / 3 * 4
+        }
+        self.mode.name().len() + 2 + b64_len(self.sealed_key.len()) + b64_len(self.body.len())
+    }
+
+    /// Wire size in bytes of the binary framing of [`Envelope::to_blob`].
+    pub fn blob_len(&self) -> usize {
+        1 + crate::util::varint_len(self.sealed_key.len() as u64)
+            + self.sealed_key.len()
+            + self.body.len()
     }
 }
 
@@ -307,6 +370,83 @@ mod tests {
     fn decode_rejects_garbage() {
         assert!(Envelope::decode("not-an-envelope").is_err());
         assert!(Envelope::decode("bogus:AA==:AA==").is_err());
+    }
+
+    #[test]
+    fn blob_framing_roundtrips_all_modes() {
+        let mut rng = DeterministicRng::seed(11);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let key = SymmetricKey::generate(&mut rng);
+        let v = vecf(64);
+        for (mode, pk, sym) in [
+            (CipherMode::None, None, None),
+            (CipherMode::RsaOnly, Some(&kp.public), None),
+            (CipherMode::Hybrid, Some(&kp.public), None),
+            (CipherMode::PreNegotiated, None, Some(&key)),
+        ] {
+            let env = Envelope::seal(&v, mode, pk, sym, true, &mut rng).unwrap();
+            let blob = env.to_blob();
+            let back = Envelope::from_blob(&blob).unwrap();
+            assert_eq!(back, env, "{mode:?} framing roundtrip");
+            assert_eq!(blob.len(), env.blob_len(), "{mode:?} blob_len");
+            // And the framed envelope still opens.
+            assert_eq!(back.open(Some(&kp.private), Some(&key)).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn from_blob_accepts_legacy_text_encoding() {
+        let mut rng = DeterministicRng::seed(12);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let v = vecf(8);
+        let env =
+            Envelope::seal(&v, CipherMode::Hybrid, Some(&kp.public), None, true, &mut rng)
+                .unwrap();
+        let text_blob = crate::blob::Blob::new(env.encode().into_bytes());
+        assert_eq!(Envelope::from_blob(&text_blob).unwrap(), env);
+        // Garbage is rejected either way.
+        assert!(Envelope::from_blob(&crate::blob::Blob::empty()).is_err());
+        assert!(Envelope::from_blob(&crate::blob::Blob::from_slice(&[9, 0])).is_err());
+        assert!(Envelope::from_blob(&crate::blob::Blob::from_slice(b"bogus:AA==:AA==")).is_err());
+        // Truncated binary framing: declared key length exceeds the blob.
+        assert!(Envelope::from_blob(&crate::blob::Blob::from_slice(&[2, 50, 1, 2])).is_err());
+    }
+
+    #[test]
+    fn blob_framing_beats_text_by_a_third() {
+        // The point of raw framing: the text form pays 4/3 base64 on both
+        // parts; the binary form pays a ~3-byte header.
+        let mut rng = DeterministicRng::seed(13);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let v = vecf(1024);
+        let env =
+            Envelope::seal(&v, CipherMode::Hybrid, Some(&kp.public), None, false, &mut rng)
+                .unwrap();
+        assert!(
+            env.blob_len() * 4 <= env.wire_len() * 3 + 64,
+            "blob {} vs text {}",
+            env.blob_len(),
+            env.wire_len()
+        );
+    }
+
+    #[test]
+    fn wire_len_is_arithmetic_not_materialized() {
+        // Exercise every length-mod-3 combination of key/body.
+        for key_len in 0..5usize {
+            for body_len in [0usize, 1, 2, 3, 47, 48, 49, 1000] {
+                let env = Envelope {
+                    mode: CipherMode::Hybrid,
+                    sealed_key: vec![0xab; key_len],
+                    body: vec![0xcd; body_len],
+                };
+                assert_eq!(
+                    env.wire_len(),
+                    env.encode().len(),
+                    "key={key_len} body={body_len}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -11,9 +11,20 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+pub use crate::blob::Blob;
+
 /// A JSON value. Object keys are ordered (BTreeMap) for deterministic
 /// serialization — handy for tests and cache keys.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// [`Value::Bytes`] extends the strict JSON grammar with an opaque binary
+/// payload ([`Blob`]): the JSON serializer emits it as base64 text (the
+/// paper's REST contract — ciphertext crosses a JSON wire as base64), the
+/// binary codec ships it as raw length-prefixed bytes with no base64 at
+/// all. The JSON parser has no way to tell base64 text from any other
+/// string, so a decoded `Bytes` comes back as `Str`; equality treats the
+/// two representations of the same bytes as equal so `decode ∘ encode`
+/// stays an identity under every codec.
+#[derive(Debug, Clone)]
 pub enum Value {
     Null,
     Bool(bool),
@@ -21,6 +32,27 @@ pub enum Value {
     Str(String),
     Arr(Vec<Value>),
     Obj(BTreeMap<String, Value>),
+    /// Opaque bytes: base64 text on a JSON wire, raw bytes on a binary one.
+    Bytes(Blob),
+}
+
+impl PartialEq for Value {
+    fn eq(&self, other: &Value) -> bool {
+        match (self, other) {
+            (Value::Null, Value::Null) => true,
+            (Value::Bool(a), Value::Bool(b)) => a == b,
+            (Value::Num(a), Value::Num(b)) => a == b,
+            (Value::Str(a), Value::Str(b)) => a == b,
+            (Value::Arr(a), Value::Arr(b)) => a == b,
+            (Value::Obj(a), Value::Obj(b)) => a == b,
+            (Value::Bytes(a), Value::Bytes(b)) => a == b,
+            // Same wire value, two in-memory shapes (see the enum docs).
+            (Value::Bytes(b), Value::Str(s)) | (Value::Str(s), Value::Bytes(b)) => {
+                crate::util::b64_encode(b.as_bytes()) == *s
+            }
+            _ => false,
+        }
+    }
 }
 
 impl Value {
@@ -92,6 +124,22 @@ impl Value {
         }
     }
 
+    /// The value as an opaque byte blob. `Bytes` clones the `Arc` (no
+    /// byte copy); `Str` is treated as base64 — the only way bytes arrive
+    /// off a JSON wire.
+    pub fn as_blob(&self) -> Option<Blob> {
+        match self {
+            Value::Bytes(b) => Some(b.clone()),
+            Value::Str(s) => crate::util::b64_decode(s).ok().map(Blob::new),
+            _ => None,
+        }
+    }
+
+    /// Convenience: `get(key)` then `as_blob`.
+    pub fn blob_of(&self, key: &str) -> Option<Blob> {
+        self.get(key).and_then(|v| v.as_blob())
+    }
+
     /// Convenience: `get(key)` then `as_str`.
     pub fn str_of(&self, key: &str) -> Option<&str> {
         self.get(key).and_then(|v| v.as_str())
@@ -151,6 +199,13 @@ impl Value {
                 }
                 out.push('}');
             }
+            Value::Bytes(b) => {
+                // Base64 needs no JSON escaping — push the quoted text
+                // straight into the buffer.
+                out.push('"');
+                out.push_str(&crate::util::b64_encode(b.as_bytes()));
+                out.push('"');
+            }
         }
     }
 }
@@ -189,6 +244,11 @@ impl From<&str> for Value {
 impl From<String> for Value {
     fn from(s: String) -> Self {
         Value::Str(s)
+    }
+}
+impl From<Blob> for Value {
+    fn from(b: Blob) -> Self {
+        Value::Bytes(b)
     }
 }
 impl From<Vec<f64>> for Value {
@@ -562,5 +622,30 @@ mod tests {
     fn f64_vec_field() {
         let v = Value::object(vec![("average", Value::from(vec![1.0, 2.0, 3.0]))]);
         assert_eq!(v.f64_arr_of("average").unwrap(), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bytes_serialize_as_base64_and_roundtrip() {
+        let b = Value::Bytes(Blob::from_slice(b"foobar"));
+        assert_eq!(b.to_string(), "\"Zm9vYmFy\"");
+        // The parser yields Str (base64 text is indistinguishable from any
+        // other string), but equality bridges the two shapes.
+        let parsed = parse(&b.to_string()).unwrap();
+        assert_eq!(parsed, b);
+        assert_eq!(b, parsed);
+        assert_eq!(parsed.as_blob().unwrap().as_bytes(), b"foobar");
+        assert_ne!(b, Value::Str("Zm9v".into()));
+    }
+
+    #[test]
+    fn blob_of_reads_both_shapes() {
+        let raw = vec![0u8, 255, 7, 128];
+        let v = Value::object(vec![("agg", Value::Bytes(Blob::new(raw.clone())))]);
+        let rt = parse(&v.to_string()).unwrap();
+        assert_eq!(rt, v);
+        assert_eq!(rt.blob_of("agg").unwrap().as_bytes(), &raw[..]);
+        assert_eq!(v.blob_of("agg").unwrap().as_bytes(), &raw[..]);
+        // Non-base64 strings are not blobs.
+        assert!(Value::from("not base64!").as_blob().is_none());
     }
 }

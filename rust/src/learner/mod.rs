@@ -273,7 +273,9 @@ fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64)
         from_node: ctx.node,
         to_node: to,
         group: ctx.group,
-        aggregate: env.encode(),
+        // Compact binary framing — raw ciphertext on a binary wire;
+        // base64 happens only inside JsonCodec, if at all.
+        aggregate: env.to_blob(),
         round_id: Some(round_id),
     }
     .to_value();
@@ -338,7 +340,7 @@ fn run_initiator(
     };
     let delivery = proto::AggregateDelivery::from_value(&resp)?;
     let contributors = delivery.posted.unwrap_or(ctx.chain.len() as u64);
-    let env = Envelope::decode(&delivery.aggregate)?;
+    let env = Envelope::from_blob(&delivery.aggregate)?;
     let agg = ctx.open_from(&env, delivery.from_node)?;
     // 4. Unmask, divide by the contributor count the controller reported
     //    (n, or n−f after progress failovers), publish (§5.1.1, §5.3).
@@ -384,7 +386,7 @@ fn run_non_initiator(
     }
     let delivery = proto::AggregateDelivery::from_value(&resp)?;
     let msg_round = delivery.round_id.unwrap_or(round_id);
-    let env = Envelope::decode(&delivery.aggregate)?;
+    let env = Envelope::from_blob(&delivery.aggregate)?;
     let mut agg = ctx.open_from(&env, delivery.from_node)?;
     // 2. Add the local vector, re-encrypt for our successor, post, watch.
     ctx.math.add_assign(&mut agg, local);

@@ -27,6 +27,7 @@
 //! AOT artifacts through PJRT and executes them from Rust.
 
 pub mod util;
+pub mod blob;
 pub mod json;
 pub mod crypto;
 pub mod transport;

@@ -48,7 +48,8 @@ fn print_help() {
            run     --nodes N --features F --mode saf|safe|rsa|preneg\n\
                    [--groups G] [--profile edge|deep-edge] [--weighted]\n\
                    [--fail-from A --fail-to B] [--engine native|xla|auto]\n\
-                   [--wire json|binary]   wire codec (default json)\n\
+                   [--wire json|binary|json+deflate|binary+deflate]\n\
+                                          wire codec (default json)\n\
            insec   --nodes N --features F   INSEC baseline round\n\
            bon     --nodes N --features F   BON (Bonawitz) baseline round\n\
            train   --nodes N --rounds R [--local-steps S] [--lr LR]\n\

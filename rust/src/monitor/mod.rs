@@ -122,7 +122,7 @@ mod tests {
             )]),
         );
         // Initiator posts; node 2 goes silent.
-        ctrl.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "x", 1));
+        ctrl.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"x", 1));
         let transport: Arc<dyn ClientTransport> =
             Arc::new(InProcTransport::new(ctrl.clone()));
         let mut mon = ProgressMonitor::start(transport, Duration::from_millis(20));

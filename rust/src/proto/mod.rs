@@ -15,9 +15,11 @@
 //!   at ad-hoc JSON fields, so a message's shape is declared exactly once.
 //! * **Codecs** — [`codec::WireCodec`] turns the shared [`Value`] message
 //!   model into bytes: [`codec::JsonCodec`] (the paper's REST format, the
-//!   default) or [`codec::BinaryCodec`] (length-prefixed fields, raw
-//!   little-endian `f64` vectors). Transports select the codec per
-//!   [`codec::WireFormat`]; see `transport` for the plumbing.
+//!   default), [`codec::BinaryCodec`] (length-prefixed fields, raw
+//!   little-endian `f64` vectors, raw [`Blob`] ciphertext framing) or
+//!   either wrapped in [`codec::CompressedCodec`] for transparent DEFLATE.
+//!   Transports select the codec per [`codec::WireFormat`]; see
+//!   `transport` for the plumbing.
 //!
 //! The legacy builder functions ([`post_aggregate`], [`node_op`],
 //! [`post_average`]) remain as thin wrappers over the typed structs for
@@ -29,6 +31,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
+pub use crate::blob::Blob;
 use crate::json::Value;
 
 // ---- SAFE controller ops (paper §5.1.3 / Appendix A) ----
@@ -80,8 +83,10 @@ pub struct PostAggregate {
     pub from_node: u64,
     pub to_node: u64,
     pub group: u64,
-    /// Envelope text (`mode:keyB64:bodyB64`) — opaque to the controller.
-    pub aggregate: String,
+    /// Framed envelope bytes (`Envelope::to_blob`) — opaque to the
+    /// controller, which stores and forwards the same allocation. Raw on a
+    /// binary wire; base64 only at the JSON boundary.
+    pub aggregate: Blob,
     /// Round the message belongs to; stale rounds are rejected (§5.4).
     pub round_id: Option<u64>,
 }
@@ -92,7 +97,7 @@ impl PostAggregate {
             ("from_node", Value::from(self.from_node)),
             ("to_node", Value::from(self.to_node)),
             ("group", Value::from(self.group)),
-            ("aggregate", Value::from(self.aggregate.as_str())),
+            ("aggregate", Value::Bytes(self.aggregate.clone())),
         ]);
         if let Some(r) = self.round_id {
             v.set("round_id", Value::from(r));
@@ -105,10 +110,53 @@ impl PostAggregate {
             from_node: v.u64_of("from_node").context("missing from_node")?,
             to_node: v.u64_of("to_node").context("missing to_node")?,
             group: v.u64_of("group").context("missing group")?,
-            aggregate: v.str_of("aggregate").context("missing aggregate")?.to_string(),
+            aggregate: aggregate_blob(v).context("missing aggregate")?,
             round_id: v.u64_of("round_id"),
         })
     }
+}
+
+/// Read an `aggregate` field as a blob. Modern senders put a framed blob
+/// here (raw bytes on a binary wire, base64 text on JSON). A legacy
+/// paper/PR-1 JSON client instead sends the envelope's
+/// `mode:keyB64:bodyB64` text, which is never valid base64 (the colons);
+/// fall back to its raw UTF-8 bytes so `Envelope::from_blob` can sniff
+/// and parse the text form — old clients keep working against the new
+/// controller.
+fn aggregate_blob(v: &Value) -> Option<Blob> {
+    v.blob_of("aggregate")
+        .or_else(|| v.str_of("aggregate").map(|s| Blob::from_slice(s.as_bytes())))
+}
+
+/// Render an aggregate blob for a response. The modern framed blob stays
+/// an opaque [`Value::Bytes`] (zero-copy); a stored legacy text envelope
+/// goes back out as a string so a legacy JSON poller can parse it.
+fn aggregate_value(blob: Blob) -> Value {
+    if looks_like_text_envelope(blob.as_bytes()) {
+        if let Ok(s) = String::from_utf8(blob.as_bytes().to_vec()) {
+            return Value::Str(s);
+        }
+    }
+    Value::Bytes(blob)
+}
+
+/// Legacy text envelopes start with a mode word and a colon; the binary
+/// framing starts with a sub-0x20 tag byte, so the forms cannot collide.
+/// The mode words come from [`CipherMode::name`] so this stays in sync
+/// with the envelope layer.
+fn looks_like_text_envelope(b: &[u8]) -> bool {
+    use crate::crypto::envelope::CipherMode;
+    [
+        CipherMode::None,
+        CipherMode::RsaOnly,
+        CipherMode::Hybrid,
+        CipherMode::PreNegotiated,
+    ]
+    .iter()
+    .any(|m| {
+        let name = m.name().as_bytes();
+        b.len() > name.len() && b.starts_with(name) && b[name.len()] == b':'
+    })
 }
 
 /// Node-scoped polling ops (`check_aggregate`, `get_aggregate`,
@@ -219,15 +267,15 @@ impl GetKey {
 #[derive(Debug, Clone, PartialEq)]
 pub struct PostPrenegKeys {
     pub node: u64,
-    /// peer node → base64 RSA-sealed key material.
-    pub keys: BTreeMap<u64, String>,
+    /// peer node → RSA-sealed key material (raw ciphertext bytes).
+    pub keys: BTreeMap<u64, Blob>,
 }
 
 impl PostPrenegKeys {
     pub fn to_value(&self) -> Value {
         let mut keys = Value::obj();
         for (peer, blob) in &self.keys {
-            keys.set(&peer.to_string(), Value::from(blob.as_str()));
+            keys.set(&peer.to_string(), Value::Bytes(blob.clone()));
         }
         Value::object(vec![("node", Value::from(self.node)), ("keys", keys)])
     }
@@ -238,8 +286,8 @@ impl PostPrenegKeys {
         match v.get("keys") {
             Some(Value::Obj(m)) => {
                 for (peer_str, blob) in m {
-                    if let (Ok(peer), Some(b)) = (peer_str.parse::<u64>(), blob.as_str()) {
-                        keys.insert(peer, b.to_string());
+                    if let (Ok(peer), Some(b)) = (peer_str.parse::<u64>(), blob.as_blob()) {
+                        keys.insert(peer, b);
                     }
                 }
             }
@@ -385,7 +433,9 @@ impl BonPostMasked {
 /// `get_aggregate` success: the parked aggregate plus chain bookkeeping.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AggregateDelivery {
-    pub aggregate: String,
+    /// The framed envelope, shared with the controller's mailbox — the
+    /// same allocation that was posted (zero-copy pass-through).
+    pub aggregate: Blob,
     pub from_node: u64,
     /// Distinct posters so far (the contributor count the initiator will
     /// divide by).
@@ -394,13 +444,16 @@ pub struct AggregateDelivery {
 }
 
 impl AggregateDelivery {
-    /// Consuming conversion — moves the (potentially large) sealed
-    /// aggregate string into the response instead of copying it. The
-    /// controller serves one of these per node per round.
+    /// Consuming conversion — moves the sealed aggregate blob into the
+    /// response (an `Arc` move, no byte copy). The controller serves one
+    /// of these per node per round. A legacy text envelope (stored
+    /// verbatim from a paper/PR-1 JSON client) is re-emitted as the text
+    /// it arrived as, so legacy pollers can parse what they receive —
+    /// compat is symmetric, at the cost of one copy on that path only.
     pub fn into_value(self) -> Value {
         let mut v = Value::object(vec![
             ("status", Value::from("ok")),
-            ("aggregate", Value::from(self.aggregate)),
+            ("aggregate", aggregate_value(self.aggregate)),
             ("from_node", Value::from(self.from_node)),
         ]);
         if let Some(p) = self.posted {
@@ -418,7 +471,7 @@ impl AggregateDelivery {
 
     pub fn from_value(v: &Value) -> Result<AggregateDelivery> {
         Ok(AggregateDelivery {
-            aggregate: v.str_of("aggregate").context("missing aggregate")?.to_string(),
+            aggregate: aggregate_blob(v).context("missing aggregate")?,
             from_node: v.u64_of("from_node").unwrap_or(0),
             posted: v.u64_of("posted"),
             round_id: v.u64_of("round_id"),
@@ -531,20 +584,21 @@ impl KeyDelivery {
 /// `get_preneg_key` success.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PrenegKeyDelivery {
-    pub key: String,
+    /// RSA-sealed symmetric key, raw ciphertext bytes.
+    pub key: Blob,
 }
 
 impl PrenegKeyDelivery {
     pub fn to_value(&self) -> Value {
         Value::object(vec![
             ("status", Value::from("ok")),
-            ("key", Value::from(self.key.as_str())),
+            ("key", Value::Bytes(self.key.clone())),
         ])
     }
 
     pub fn from_value(v: &Value) -> Result<PrenegKeyDelivery> {
         Ok(PrenegKeyDelivery {
-            key: v.str_of("key").context("preneg key missing")?.to_string(),
+            key: v.blob_of("key").context("preneg key missing")?,
         })
     }
 }
@@ -583,12 +637,12 @@ impl FedGlobalAverage {
 // =====================================================================
 
 /// Body for `post_aggregate(from, to, aggregate)`.
-pub fn post_aggregate(from_node: u64, to_node: u64, aggregate: &str, group: u64) -> Value {
+pub fn post_aggregate(from_node: u64, to_node: u64, aggregate: &[u8], group: u64) -> Value {
     PostAggregate {
         from_node,
         to_node,
         group,
-        aggregate: aggregate.to_string(),
+        aggregate: Blob::from_slice(aggregate),
         round_id: None,
     }
     .to_value()
@@ -619,10 +673,10 @@ mod tests {
 
     #[test]
     fn bodies_have_expected_fields() {
-        let b = post_aggregate(1, 2, "safe:k:b", 1);
+        let b = post_aggregate(1, 2, b"sealed-bytes", 1);
         assert_eq!(b.u64_of("from_node"), Some(1));
         assert_eq!(b.u64_of("to_node"), Some(2));
-        assert_eq!(b.str_of("aggregate"), Some("safe:k:b"));
+        assert_eq!(b.blob_of("aggregate").unwrap().as_bytes(), b"sealed-bytes");
         let n = node_op(7, 2);
         assert_eq!(n.u64_of("node"), Some(7));
         assert_eq!(n.u64_of("group"), Some(2));
@@ -643,7 +697,7 @@ mod tests {
             from_node: 3,
             to_node: 4,
             group: 2,
-            aggregate: "safe:QQ==:Ug==".into(),
+            aggregate: Blob::from_slice(&[2, 4, 0xde, 0xad, 0xbe, 0xef]),
             round_id: Some(7),
         };
         assert_eq!(PostAggregate::from_value(&pa.to_value()).unwrap(), pa);
@@ -655,7 +709,7 @@ mod tests {
         assert_eq!(PostAverage::from_value(&pv.to_value()).unwrap(), pv);
 
         let del = AggregateDelivery {
-            aggregate: "x".into(),
+            aggregate: Blob::from_slice(b"x"),
             from_node: 2,
             posted: Some(3),
             round_id: Some(0),
@@ -681,10 +735,48 @@ mod tests {
     }
 
     #[test]
+    fn legacy_text_envelope_still_accepted_on_the_aggregate_field() {
+        // A paper/PR-1 JSON client sends `mode:keyB64:bodyB64` text. The
+        // colons make it invalid base64, so the fallback hands the raw
+        // text bytes through — and Envelope::from_blob sniffs the text
+        // form on the receiving side.
+        let body = Value::object(vec![
+            ("from_node", Value::from(1u64)),
+            ("to_node", Value::from(2u64)),
+            ("group", Value::from(1u64)),
+            ("aggregate", Value::from("safe:QQ==:Ug==")),
+        ]);
+        let req = PostAggregate::from_value(&body).unwrap();
+        let env = crate::crypto::envelope::Envelope::from_blob(&req.aggregate).unwrap();
+        assert_eq!(env.mode, crate::crypto::envelope::CipherMode::Hybrid);
+        assert_eq!(env.sealed_key, b"A".to_vec());
+        assert_eq!(env.body, b"R".to_vec());
+        // And the compat is symmetric: delivering that stored blob back
+        // re-emits the text form, which a legacy poller can parse.
+        let delivered = AggregateDelivery {
+            aggregate: req.aggregate,
+            from_node: 1,
+            posted: Some(1),
+            round_id: None,
+        }
+        .into_value();
+        assert_eq!(delivered.str_of("aggregate"), Some("safe:QQ==:Ug=="));
+        // Modern framed blobs stay opaque bytes.
+        let modern = AggregateDelivery {
+            aggregate: env.to_blob(),
+            from_node: 1,
+            posted: Some(1),
+            round_id: None,
+        }
+        .into_value();
+        assert!(matches!(modern.get("aggregate"), Some(Value::Bytes(_))));
+    }
+
+    #[test]
     fn preneg_keys_roundtrip() {
         let mut keys = BTreeMap::new();
-        keys.insert(1u64, "sealed-a".to_string());
-        keys.insert(3u64, "sealed-b".to_string());
+        keys.insert(1u64, Blob::from_slice(b"sealed-a"));
+        keys.insert(3u64, Blob::from_slice(&[0u8, 1, 254, 255]));
         let pk = PostPrenegKeys { node: 2, keys };
         assert_eq!(PostPrenegKeys::from_value(&pk.to_value()).unwrap(), pk);
     }

@@ -30,7 +30,7 @@ use crate::learner::faults::FaultPlan;
 use crate::metrics::RoundMetrics;
 use crate::proto;
 use crate::transport::{ClientTransport, InProcTransport, MessageStats};
-use crate::util::{b64_decode, b64_encode, Stopwatch};
+use crate::util::Stopwatch;
 
 pub struct BonSession {
     pub cfg: SessionConfig,
@@ -226,7 +226,7 @@ fn bon_client(
         ])
         .to_string();
         let sealed = key.seal(payload.as_bytes(), rng.as_mut());
-        shares_obj.set(&v.to_string(), Value::from(b64_encode(&sealed)));
+        shares_obj.set(&v.to_string(), Value::Bytes(crate::blob::Blob::new(sealed)));
     }
     transport.call(
         proto::BON_POST_SHARES,
@@ -245,10 +245,12 @@ fn bon_client(
         if v == node {
             continue;
         }
-        let Some(blob_b64) = shares_in.str_of(&v.to_string()) else { continue };
+        let Some(blob) = shares_in.get(&v.to_string()).and_then(|b| b.as_blob()) else {
+            continue;
+        };
         let chan = c_pair.agree(group, &peer_cpk[&v]);
         let key = SymmetricKey::from_bytes(&chan)?;
-        let opened = key.open(&b64_decode(blob_b64)?)?;
+        let opened = key.open(blob.as_bytes())?;
         let payload = crate::json::parse(std::str::from_utf8(&opened)?)?;
         held_b.insert(v, shamir::Share::from_json(payload.get("b").context("b share")?)?);
         held_s.insert(v, shamir::Share::from_json(payload.get("s").context("s share")?)?);

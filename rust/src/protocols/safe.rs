@@ -269,7 +269,7 @@ impl SafeSession {
                         }
                         let k = SymmetricKey::generate(rng.as_mut());
                         let sealed = ctx.peer_keys[&peer].encrypt_block(&k.master, rng.as_mut())?;
-                        sealed_keys.insert(peer, crate::util::b64_encode(&sealed));
+                        sealed_keys.insert(peer, crate::blob::Blob::new(sealed));
                         mine.insert(peer, k);
                     }
                 }
@@ -291,8 +291,7 @@ impl SafeSession {
                         &proto::GetPrenegKey { node: ctx.node, owner: peer }.to_value(),
                     )?;
                     let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
-                    let blob = crate::util::b64_decode(&delivery.key)?;
-                    let master = ctx.keys.private.decrypt_block(&blob)?;
+                    let master = ctx.keys.private.decrypt_block(delivery.key.as_bytes())?;
                     send_keys.insert(peer, SymmetricKey::from_bytes(&master)?);
                 }
                 // Contexts are shared Arcs; rebuild with key maps filled.

@@ -312,7 +312,7 @@ impl HttpTransport {
         // Record only after a successful decode: a failed attempt is
         // retried by call(), and recording it would double-count
         // bytes_received/codec bytes against a single message.
-        self.stats.record_response(resp_body.len());
+        self.stats.record_response(path, resp_body.len());
         self.stats.record_codec(resp_format, resp_body.len());
         Ok(v)
     }
@@ -419,6 +419,23 @@ mod tests {
         let rb = bin_client.call("/x", &body).unwrap();
         assert_eq!(rj, rb);
         assert!(bin_client.bytes_sent() < json_client.bytes_sent());
+    }
+
+    #[test]
+    fn http_deflate_codec_negotiation() {
+        let server = HttpServer::start("127.0.0.1:0", Arc::new(Echo)).unwrap();
+        for fmt in [WireFormat::JsonDeflate, WireFormat::BinaryDeflate] {
+            let client = HttpTransport::connect(&server.url())
+                .unwrap()
+                .with_wire_format(fmt);
+            let body = Value::object(vec![
+                ("node", Value::from(3u64)),
+                ("blob", Value::Bytes(crate::blob::Blob::new(vec![0xe7u8; 512]))),
+            ]);
+            let resp = client.call("/x", &body).unwrap();
+            assert_eq!(resp.get("echo"), Some(&body), "{}", fmt.name());
+            assert!(client.stats().codec_bytes(fmt) > 0);
+        }
     }
 
     #[test]

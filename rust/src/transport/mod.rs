@@ -28,9 +28,11 @@
 //!
 //! Every call is counted so the benches can verify the paper's message
 //! complexity formulas (`4n`, `4n + 2f`, `(i+1)(4n+2f+in)`, `+g`), and
-//! [`MessageStats`] now tracks request *and* response bytes, per-codec
-//! byte totals (for JSON-vs-binary wire-ratio reporting) and a sharded
-//! per-path message map kept off the hot path's single-lock contention.
+//! [`MessageStats`] tracks request *and* response bytes, per-codec byte
+//! totals (for wire-ratio reporting across all four codec stacks) and a
+//! sharded per-path map carrying message counts **and byte totals per
+//! direction** ([`PathStat`]) so ratio tables can be broken down by
+//! endpoint — all kept off the hot path's single-lock contention.
 
 pub mod http;
 
@@ -63,20 +65,32 @@ pub trait ClientTransport: Send + Sync {
 /// threads recording concurrently rarely contend on the same lock.
 const PATH_SHARDS: usize = 8;
 
+/// Per-endpoint traffic totals: message count plus body bytes in each
+/// direction, so wire-ratio tables can be broken down by endpoint.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PathStat {
+    pub messages: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
 /// Message/byte counters shared by the transports.
 ///
-/// Totals are relaxed atomics (hot path); the per-path message map is
-/// sharded by path hash so it stays accurate for the §5.2 formula tests
-/// without serializing every learner thread through one mutex.
+/// Totals are relaxed atomics (hot path); the per-path map is sharded by
+/// path hash so it stays accurate for the §5.2 formula tests without
+/// serializing every learner thread through one mutex. Each entry carries
+/// a full [`PathStat`] — message counts *and* byte totals per direction.
 #[derive(Default)]
 pub struct MessageStats {
     total: AtomicU64,
     bytes: AtomicU64,
     bytes_received: AtomicU64,
-    /// Request+response bytes that crossed the wire per codec.
+    /// Request+response bytes that crossed the wire per codec stack.
     json_bytes: AtomicU64,
     binary_bytes: AtomicU64,
-    per_path: [Mutex<BTreeMap<String, u64>>; PATH_SHARDS],
+    json_deflate_bytes: AtomicU64,
+    binary_deflate_bytes: AtomicU64,
+    per_path: [Mutex<BTreeMap<String, PathStat>>; PATH_SHARDS],
 }
 
 impl MessageStats {
@@ -90,30 +104,43 @@ impl MessageStats {
         (h as usize) % PATH_SHARDS
     }
 
-    /// Record one sent request of `bytes` body bytes on `path`.
-    pub fn record(&self, path: &str, bytes: usize) {
-        self.total.fetch_add(1, Ordering::Relaxed);
-        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+    fn with_path_stat(&self, path: &str, f: impl FnOnce(&mut PathStat)) {
         let mut map = self.per_path[Self::shard(path)].lock().unwrap();
         match map.get_mut(path) {
-            Some(c) => *c += 1,
+            Some(s) => f(s),
             None => {
-                map.insert(path.to_string(), 1);
+                let mut s = PathStat::default();
+                f(&mut s);
+                map.insert(path.to_string(), s);
             }
         }
     }
 
-    /// Record one received response body of `bytes` bytes.
-    pub fn record_response(&self, bytes: usize) {
+    /// Record one sent request of `bytes` body bytes on `path`.
+    pub fn record(&self, path: &str, bytes: usize) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.with_path_stat(path, |s| {
+            s.messages += 1;
+            s.bytes_sent += bytes as u64;
+        });
+    }
+
+    /// Record one received response body of `bytes` bytes, attributed to
+    /// the request's `path`.
+    pub fn record_response(&self, path: &str, bytes: usize) {
         self.bytes_received.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.with_path_stat(path, |s| s.bytes_received += bytes as u64);
     }
 
     /// Attribute `bytes` wire bytes (either direction) to a codec, so
-    /// benches can report the JSON-vs-binary wire-size ratio.
+    /// benches can report wire-size ratios across codec stacks.
     pub fn record_codec(&self, format: WireFormat, bytes: usize) {
         let counter = match format {
             WireFormat::Json => &self.json_bytes,
             WireFormat::Binary => &self.binary_bytes,
+            WireFormat::JsonDeflate => &self.json_deflate_bytes,
+            WireFormat::BinaryDeflate => &self.binary_deflate_bytes,
         };
         counter.fetch_add(bytes as u64, Ordering::Relaxed);
     }
@@ -134,14 +161,31 @@ impl MessageStats {
         match format {
             WireFormat::Json => self.json_bytes.load(Ordering::Relaxed),
             WireFormat::Binary => self.binary_bytes.load(Ordering::Relaxed),
+            WireFormat::JsonDeflate => self.json_deflate_bytes.load(Ordering::Relaxed),
+            WireFormat::BinaryDeflate => self.binary_deflate_bytes.load(Ordering::Relaxed),
         }
     }
 
+    /// Message counts per path (the §5.2 formula view).
     pub fn per_path(&self) -> BTreeMap<String, u64> {
         let mut merged = BTreeMap::new();
         for shard in &self.per_path {
             for (k, v) in shard.lock().unwrap().iter() {
-                *merged.entry(k.clone()).or_insert(0) += v;
+                *merged.entry(k.clone()).or_insert(0) += v.messages;
+            }
+        }
+        merged
+    }
+
+    /// Full per-path traffic stats: messages + bytes per direction.
+    pub fn per_path_stats(&self) -> BTreeMap<String, PathStat> {
+        let mut merged: BTreeMap<String, PathStat> = BTreeMap::new();
+        for shard in &self.per_path {
+            for (k, v) in shard.lock().unwrap().iter() {
+                let e = merged.entry(k.clone()).or_default();
+                e.messages += v.messages;
+                e.bytes_sent += v.bytes_sent;
+                e.bytes_received += v.bytes_received;
             }
         }
         merged
@@ -153,6 +197,8 @@ impl MessageStats {
         self.bytes_received.store(0, Ordering::Relaxed);
         self.json_bytes.store(0, Ordering::Relaxed);
         self.binary_bytes.store(0, Ordering::Relaxed);
+        self.json_deflate_bytes.store(0, Ordering::Relaxed);
+        self.binary_deflate_bytes.store(0, Ordering::Relaxed);
         for shard in &self.per_path {
             shard.lock().unwrap().clear();
         }
@@ -241,7 +287,7 @@ impl ClientTransport for InProcTransport {
         let decoded = self.codec.decode(&encoded)?;
         let resp = self.handler.handle(path, &decoded);
         let resp_encoded = self.codec.encode(&resp);
-        self.stats.record_response(resp_encoded.len());
+        self.stats.record_response(path, resp_encoded.len());
         self.stats.record_codec(self.codec.format(), resp_encoded.len());
         self.charge(resp_encoded.len());
         self.codec.decode(&resp_encoded)
@@ -360,5 +406,45 @@ mod tests {
         assert_eq!(stats.per_path().get("/even"), Some(&400));
         assert_eq!(stats.per_path().get("/odd"), Some(&400));
         assert_eq!(stats.bytes(), 2400);
+        // Per-path byte totals survive the same concurrency.
+        let per = stats.per_path_stats();
+        assert_eq!(per.get("/even").unwrap().bytes_sent, 1200);
+        assert_eq!(per.get("/odd").unwrap().bytes_sent, 1200);
+    }
+
+    #[test]
+    fn per_path_stats_track_both_directions() {
+        let stats = MessageStats::default();
+        stats.record("/post_aggregate", 100);
+        stats.record("/post_aggregate", 50);
+        stats.record_response("/post_aggregate", 7);
+        stats.record("/get_average", 10);
+        stats.record_response("/get_average", 900);
+        let per = stats.per_path_stats();
+        assert_eq!(
+            per.get("/post_aggregate"),
+            Some(&PathStat { messages: 2, bytes_sent: 150, bytes_received: 7 })
+        );
+        assert_eq!(
+            per.get("/get_average"),
+            Some(&PathStat { messages: 1, bytes_sent: 10, bytes_received: 900 })
+        );
+        assert_eq!(stats.bytes_received(), 907);
+        stats.reset();
+        assert!(stats.per_path_stats().is_empty());
+    }
+
+    #[test]
+    fn deflate_transport_roundtrips() {
+        let t = InProcTransport::new(Arc::new(Echo))
+            .with_wire_format(WireFormat::BinaryDeflate);
+        let body = Value::object(vec![
+            ("vec", Value::from(vec![1.5f64; 64])),
+            ("blob", Value::Bytes(crate::blob::Blob::new(vec![9u8; 256]))),
+        ]);
+        let resp = t.call("/x", &body).unwrap();
+        assert_eq!(resp.get("echo"), Some(&body));
+        assert!(t.stats().codec_bytes(WireFormat::BinaryDeflate) > 0);
+        assert_eq!(t.stats().codec_bytes(WireFormat::Binary), 0);
     }
 }

@@ -4,7 +4,89 @@
 //! `hex` nor `base64`; the SAFE wire format (JSON, like the paper's Flask
 //! controller) carries ciphertexts as base64 strings.
 
+use std::io::{Read, Write};
 use std::time::{Duration, Instant};
+
+use flate2::read::DeflateDecoder;
+use flate2::write::DeflateEncoder;
+use flate2::Compression;
+
+/// DEFLATE-compress a byte buffer (shared by the §5.7 payload envelope and
+/// the `proto::codec::CompressedCodec` wire wrapper).
+pub fn compress(data: &[u8]) -> Vec<u8> {
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(data).expect("in-memory deflate cannot fail");
+    enc.finish().expect("in-memory deflate cannot fail")
+}
+
+/// Decompression-bomb guard: refuse to inflate beyond this many bytes.
+/// The HTTP server's request-body cap checks only the *compressed* size,
+/// so without this limit a tiny deflate bomb could expand to gigabytes
+/// inside the codec layer. 64 MiB comfortably covers the largest real
+/// message (a 100k-feature JSON average is ~2 MiB) while bounding the
+/// amplification a thread-per-connection server can be made to allocate.
+pub const MAX_DECOMPRESSED: usize = 64 << 20;
+
+/// Inverse of [`compress`]. Output is capped at [`MAX_DECOMPRESSED`].
+pub fn decompress(data: &[u8]) -> anyhow::Result<Vec<u8>> {
+    use anyhow::Context;
+    let dec = DeflateDecoder::new(data);
+    let mut out = Vec::new();
+    let mut limited = dec.take(MAX_DECOMPRESSED as u64 + 1);
+    limited.read_to_end(&mut out).context("deflate decompression failed")?;
+    if out.len() > MAX_DECOMPRESSED {
+        anyhow::bail!("decompressed body exceeds {MAX_DECOMPRESSED} bytes");
+    }
+    Ok(out)
+}
+
+/// LEB128 varint encode — the one shared implementation (binary codec
+/// field lengths and the envelope's blob framing both use it).
+pub fn write_varint(mut n: u64, out: &mut Vec<u8>) {
+    loop {
+        let b = (n & 0x7f) as u8;
+        n >>= 7;
+        if n == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// LEB128 varint decode from `bytes` starting at `*pos`, advancing `*pos`
+/// past the varint. Rejects overlong and u64-overflowing encodings.
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut n = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *bytes
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("truncated varint"))?;
+        *pos += 1;
+        if shift >= 63 && b > 1 {
+            anyhow::bail!("varint overflows u64");
+        }
+        n |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(n);
+        }
+        shift += 7;
+        if shift > 63 {
+            anyhow::bail!("varint too long");
+        }
+    }
+}
+
+/// Encoded size of [`write_varint`]'s output for `n`.
+pub fn varint_len(mut n: u64) -> usize {
+    let mut len = 1;
+    while n >= 0x80 {
+        n >>= 7;
+        len += 1;
+    }
+    len
+}
 
 /// Encode bytes as lowercase hex.
 pub fn hex_encode(bytes: &[u8]) -> String {
@@ -172,6 +254,21 @@ mod tests {
     #[test]
     fn b64_rejects_garbage() {
         assert!(b64_decode("$$$$").is_err());
+    }
+
+    #[test]
+    fn varint_roundtrip_and_len() {
+        for n in [0u64, 1, 127, 128, 16383, 16384, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(n, &mut buf);
+            assert_eq!(buf.len(), varint_len(n), "len for {n}");
+            let mut pos = 0usize;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), n);
+            assert_eq!(pos, buf.len());
+        }
+        // Truncated and overlong encodings are rejected.
+        assert!(read_varint(&[0x80], &mut 0).is_err());
+        assert!(read_varint(&[0xff; 11], &mut 0).is_err());
     }
 
     #[test]

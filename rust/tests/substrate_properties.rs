@@ -140,13 +140,13 @@ fn controller_never_sees_plaintext_aggregates() {
 
     struct Spy {
         inner: Arc<dyn Handler>,
-        seen: std::sync::Mutex<Vec<String>>,
+        seen: std::sync::Mutex<Vec<safe_agg::blob::Blob>>,
     }
     impl Handler for Spy {
         fn handle(&self, path: &str, body: &Value) -> Value {
             if path == "/post_aggregate" {
-                if let Some(agg) = body.str_of("aggregate") {
-                    self.seen.lock().unwrap().push(agg.to_string());
+                if let Some(agg) = body.blob_of("aggregate") {
+                    self.seen.lock().unwrap().push(agg);
                 }
             }
             self.inner.handle(path, body)
@@ -218,18 +218,27 @@ fn controller_never_sees_plaintext_aggregates() {
     transport
         .call(
             safe_agg::proto::POST_AGGREGATE,
-            &safe_agg::proto::post_aggregate(1, 2, &env.encode(), 1),
+            &safe_agg::proto::post_aggregate(1, 2, env.to_blob().as_bytes(), 1),
         )
         .unwrap();
     let seen = spy2.seen.lock().unwrap().clone();
     assert_eq!(seen.len(), 1);
     for agg in &seen {
-        // 1. No plaintext float leaks into the broker-visible string.
+        // 1. No plaintext float leaks into the broker-visible bytes (check
+        //    both the raw bytes and their text rendering).
+        let agg_text = String::from_utf8_lossy(agg.as_bytes()).into_owned();
         for needle in ["1234.5678", "-99.25"] {
-            assert!(!agg.contains(needle), "plaintext value leaked to controller");
+            assert!(!agg_text.contains(needle), "plaintext value leaked to controller");
+            assert!(
+                !agg
+                    .as_bytes()
+                    .windows(needle.len())
+                    .any(|w| w == needle.as_bytes()),
+                "plaintext value leaked to controller"
+            );
         }
         // 2. The envelope does not open without the recipient's key.
-        let env = Envelope::decode(agg).unwrap();
+        let env = Envelope::from_blob(agg).unwrap();
         let other = safe_agg::crypto::rsa::RsaKeyPair::generate(512, &mut rng);
         assert!(env.open(Some(&other.private), None).is_err());
         // 3. It does open with the right key, to the masked (≠ input) vector.
@@ -277,10 +286,10 @@ fn http_long_poll_blocks_until_data() {
     // Client B posts; A must wake with the data well before poll_time.
     let poster = HttpTransport::connect(&server.url()).unwrap();
     poster
-        .call(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, "wire-blob", 1))
+        .call(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"wire-blob", 1))
         .unwrap();
     let (resp, waited) = waiter.join().unwrap();
-    assert_eq!(resp.str_of("aggregate"), Some("wire-blob"));
+    assert_eq!(resp.blob_of("aggregate").unwrap().as_bytes(), b"wire-blob");
     assert!(waited >= Duration::from_millis(180), "poll returned before data existed");
     assert!(waited < Duration::from_secs(1), "condvar wakeup too slow: {waited:?}");
 }
