@@ -1,9 +1,17 @@
 //! Paper Figs 13–14 + the headline 70x/56x claim (E8–E10): SAFE vs BON
 //! aggregation time with and without node failures, following §6.3's
-//! normalization (n completed nodes vs n+3 nodes with 3 failures).
-use safe_agg::harness::figures as f;
+//! normalization (n completed nodes vs n+3 nodes with 3 failures) — plus
+//! the multi-round churn scenario (die round 1 / rejoin round 3) with its
+//! per-round failover cost and amortized-setup table, written to
+//! `BENCH_multiround.json` for cross-PR tracking.
+use safe_agg::harness::{figures as f, full_scale, multiround};
 
 fn main() -> anyhow::Result<()> {
+    // CI's bench smoke wants just the multi-round table + artifact
+    // without paying for the full Fig 13/14 sweep.
+    if std::env::var("SAFE_BENCH_MULTIROUND_ONLY").map_or(false, |v| v == "1") {
+        return multi_round_table();
+    }
     let fig13 = f::fig13()?;
     fig13.emit(None);
     f::fig14(&fig13).emit(None);
@@ -17,5 +25,26 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("(paper: 38x/42x at 24; 56x/70x at 36)");
+    multi_round_table()
+}
+
+/// Multi-round churn: the engine pays round 0 once and re-keys only the
+/// rejoining node; amortized setup messages/round must fall as R grows.
+fn multi_round_table() -> anyhow::Result<()> {
+    let rounds = if full_scale() { 10 } else { 4 };
+    let report = multiround::multi_round_failover(9, rounds)?;
+    report.emit(None);
+    let rekey_round = &report.rows[2]; // rejoin lands in round 3
+    assert!(
+        rekey_round.rekey_messages > 0,
+        "round 3 must pay the rejoiner's re-key"
+    );
+    assert!(
+        report.amortized_setup_per_round()
+            < (report.setup_messages + report.rekey_total()) as f64,
+        "amortization must beat paying setup every round"
+    );
+    std::fs::write("BENCH_multiround.json", report.to_json().to_string())?;
+    println!("wrote BENCH_multiround.json");
     Ok(())
 }

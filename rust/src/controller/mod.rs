@@ -58,6 +58,10 @@ impl Default for ControllerConfig {
 pub(crate) struct Inner {
     pub groups: BTreeMap<u64, GroupState>,
     pub expected_groups: BTreeSet<u64>,
+    /// Session round-epoch (multi-round engine): bumped by `begin_round`,
+    /// which resets per-round chain state while keys/stats/HTTP survive.
+    /// Posts carrying an older epoch are rejected as `stale_epoch`.
+    pub epoch: u64,
     /// Node → serialized RSA public key (round 0 registry).
     pub keys: BTreeMap<u64, Value>,
     /// (owner, for_node) → RSA-sealed symmetric key blob (§5.8). Stored
@@ -85,6 +89,7 @@ impl Controller {
             inner: Mutex::new(Inner {
                 groups: BTreeMap::new(),
                 expected_groups: BTreeSet::new(),
+                epoch: 0,
                 keys: BTreeMap::new(),
                 preneg: BTreeMap::new(),
                 insec: insec::InsecState::default(),
@@ -162,6 +167,10 @@ impl Controller {
     fn configure(&self, body: &Value) -> Value {
         let mut inner = self.inner.lock().unwrap();
         if let Some(Value::Obj(groups)) = body.get("groups") {
+            // A (re)configure is a session build: restart the round-epoch
+            // clock so a fresh session against a long-lived controller
+            // isn't rejected as stale by a previous session's epochs.
+            inner.epoch = 0;
             inner.groups.clear();
             inner.expected_groups.clear();
             for (gid_str, chain_v) in groups {
@@ -203,8 +212,37 @@ impl Controller {
         proto::status("ok")
     }
 
+    /// Open a new session round-epoch (multi-round engine): install the
+    /// round's chains with fresh per-round state, keep everything a round
+    /// should not tear down — key registry, §5.8 pre-negotiated keys, the
+    /// HTTP listener and `MessageStats` (which live outside this struct),
+    /// and the baseline states' configured membership.
+    fn begin_round(&self, body: &Value) -> Value {
+        let req = match proto::BeginRound::from_value(body) {
+            Ok(r) => r,
+            Err(e) => return proto::status(&e.to_string()),
+        };
+        let mut inner = self.inner.lock().unwrap();
+        if req.epoch < inner.epoch {
+            return proto::status("stale_epoch");
+        }
+        inner.epoch = req.epoch;
+        inner.groups.clear();
+        inner.expected_groups.clear();
+        for (gid, chain) in req.groups {
+            let mut gs = GroupState::new(chain.clone());
+            gs.initiator = chain.first().copied();
+            inner.expected_groups.insert(gid);
+            inner.insec.configure_group(gid, chain.len());
+            inner.groups.insert(gid, gs);
+        }
+        self.cv.notify_all();
+        proto::status("ok")
+    }
+
     fn reset(&self) -> Value {
         let mut inner = self.inner.lock().unwrap();
+        inner.epoch = 0;
         inner.groups.clear();
         inner.expected_groups.clear();
         inner.keys.clear();
@@ -224,6 +262,13 @@ impl Controller {
             Err(e) => return proto::status(&e.to_string()),
         };
         let mut inner = self.inner.lock().unwrap();
+        // Reject posts from a previous session round-epoch (a straggler
+        // thread must never pollute the next round's mailboxes).
+        if let Some(e) = req.epoch {
+            if e != inner.epoch {
+                return proto::status("stale_epoch");
+            }
+        }
         let gs = match inner.groups.get_mut(&req.group) {
             Some(g) => g,
             None => return proto::status("unknown group"),
@@ -506,6 +551,7 @@ impl Controller {
         Value::object(vec![
             ("groups", Value::Arr(groups)),
             ("keys_registered", Value::from(inner.keys.len())),
+            ("epoch", Value::from(inner.epoch)),
         ])
     }
 }
@@ -514,6 +560,7 @@ impl Handler for Controller {
     fn handle(&self, path: &str, body: &Value) -> Value {
         match path {
             proto::CONFIGURE => self.configure(body),
+            proto::BEGIN_ROUND => self.begin_round(body),
             proto::RESET => self.reset(),
             proto::POST_AGGREGATE => self.post_aggregate(body),
             proto::GET_AGGREGATE => self.get_aggregate(body),
@@ -597,6 +644,7 @@ mod tests {
             group: 1,
             aggregate: blob.clone(),
             round_id: None,
+            epoch: None,
         }
         .to_value();
         c.handle(proto::POST_AGGREGATE, &body);
@@ -825,6 +873,79 @@ mod tests {
         fresh.set("round_id", Value::from(1u64));
         let r = c.handle(proto::POST_AGGREGATE, &fresh);
         assert_eq!(r.str_of("status"), Some("ok"));
+    }
+
+    #[test]
+    fn begin_round_resets_chain_state_but_keeps_keys() {
+        let c = controller();
+        // Round-0 artifacts that must survive a round boundary.
+        let key = Value::object(vec![("n", Value::from("abcd"))]);
+        c.handle(
+            proto::REGISTER_KEY,
+            &Value::object(vec![("node", Value::from(1u64)), ("key", key.clone())]),
+        );
+        let sealed = Blob::from_slice(b"sealed");
+        c.handle(
+            proto::POST_PRENEG_KEYS,
+            &Value::object(vec![
+                ("node", Value::from(2u64)),
+                ("keys", Value::object(vec![("1", Value::Bytes(sealed.clone()))])),
+            ]),
+        );
+        // Per-round transients that must NOT survive.
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));
+        c.handle(proto::POST_AVERAGE, &proto::post_average(1, 1, &[2.0], 3));
+
+        let br = proto::BeginRound {
+            epoch: 1,
+            groups: std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
+        };
+        let r = c.handle(proto::BEGIN_ROUND, &br.to_value());
+        assert_eq!(r.str_of("status"), Some("ok"));
+        // Mailbox and average are gone.
+        let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("empty"));
+        let r = c.handle(proto::GET_AVERAGE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("empty"));
+        // Keys survive.
+        let r = c.handle(proto::GET_KEY, &Value::object(vec![("node", Value::from(1u64))]));
+        assert_eq!(r.get("key"), Some(&key));
+        let r = c.handle(
+            proto::GET_PRENEG_KEY,
+            &Value::object(vec![("node", Value::from(1u64)), ("owner", Value::from(2u64))]),
+        );
+        assert_eq!(r.blob_of("key").unwrap(), sealed);
+        // Epoch surfaced in status; rewinding the epoch is rejected.
+        let st = c.handle(proto::STATUS, &Value::obj());
+        assert_eq!(st.u64_of("epoch"), Some(1));
+        let old = proto::BeginRound { epoch: 0, groups: Default::default() };
+        assert_eq!(
+            c.handle(proto::BEGIN_ROUND, &old.to_value()).str_of("status"),
+            Some("stale_epoch")
+        );
+    }
+
+    #[test]
+    fn stale_epoch_posts_rejected() {
+        let c = controller();
+        let br = proto::BeginRound {
+            epoch: 2,
+            groups: std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
+        };
+        c.handle(proto::BEGIN_ROUND, &br.to_value());
+        // A straggler from epoch 1 is refused; the current epoch lands.
+        let mut stale = proto::post_aggregate(1, 2, b"old", 1);
+        stale.set("epoch", Value::from(1u64));
+        assert_eq!(
+            c.handle(proto::POST_AGGREGATE, &stale).str_of("status"),
+            Some("stale_epoch")
+        );
+        let mut fresh = proto::post_aggregate(1, 2, b"new", 1);
+        fresh.set("epoch", Value::from(2u64));
+        assert_eq!(
+            c.handle(proto::POST_AGGREGATE, &fresh).str_of("status"),
+            Some("ok")
+        );
     }
 
     #[test]

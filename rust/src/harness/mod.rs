@@ -6,6 +6,7 @@
 //! `bench_out/` for regeneration of every figure.
 
 pub mod figures;
+pub mod multiround;
 
 use std::fmt::Write as _;
 use std::io::Write as _;
@@ -192,6 +193,7 @@ mod tests {
                 contributors: 3,
                 progress_failovers: 0,
                 initiator_failovers: 0,
+                rekey_messages: 0,
                 per_path: Default::default(),
             })
             .collect()

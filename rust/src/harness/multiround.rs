@@ -1,0 +1,266 @@
+//! Multi-round failover reporting: per-round cost of churn and the
+//! amortized setup accounting the multi-round engine exists to improve.
+//!
+//! The paper prices one aggregation at `4n + 2f` messages (§5.2/§5.3)
+//! and key exchange at a separate, one-time round 0 (footnote 3). A
+//! session that aggregates R rounds over persistent learners pays round 0
+//! once, plus a per-rejoin re-key when churned-out nodes return — so the
+//! *amortized* setup cost per round is `(round0 + Σ rekey) / R`, which
+//! shrinks as R grows. This module runs an R-round churn scenario and
+//! renders exactly that table (text, CSV under `bench_out/`, and a JSON
+//! value for `BENCH_multiround.json`).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::json::Value;
+use crate::learner::faults::ChurnSchedule;
+use crate::metrics::RoundMetrics;
+use crate::protocols::SafeSession;
+
+/// One row of the per-round failover table.
+#[derive(Debug, Clone)]
+pub struct RoundRow {
+    /// 1-based round number.
+    pub round: u64,
+    pub secs: f64,
+    /// Protocol messages this round (monitor + rekey excluded).
+    pub messages: u64,
+    /// Key re-exchange messages (nonzero only on rejoin rounds).
+    pub rekey_messages: u64,
+    pub contributors: u64,
+    pub progress_failovers: u64,
+    pub initiator_failovers: u64,
+}
+
+impl RoundRow {
+    /// Messages beyond the failure-free `4·contributors` floor — the
+    /// per-round failover cost (`2f` plus any subgroup pulls).
+    pub fn failover_extra(&self) -> i64 {
+        self.messages as i64 - 4 * self.contributors as i64
+    }
+}
+
+/// An R-round churn scenario's results plus the setup amortization.
+#[derive(Debug, Clone)]
+pub struct MultiRoundReport {
+    pub id: String,
+    pub rows: Vec<RoundRow>,
+    /// One-time round-0 key-exchange messages at session build.
+    pub setup_messages: u64,
+}
+
+impl MultiRoundReport {
+    pub fn from_rounds(id: &str, setup_messages: u64, rounds: &[RoundMetrics]) -> Self {
+        MultiRoundReport {
+            id: id.to_string(),
+            setup_messages,
+            rows: rounds
+                .iter()
+                .enumerate()
+                .map(|(i, m)| RoundRow {
+                    round: (i + 1) as u64,
+                    secs: m.secs(),
+                    messages: m.messages,
+                    rekey_messages: m.rekey_messages,
+                    contributors: m.contributors,
+                    progress_failovers: m.progress_failovers,
+                    initiator_failovers: m.initiator_failovers,
+                })
+                .collect(),
+        }
+    }
+
+    /// Total rejoin re-key messages across all rounds.
+    pub fn rekey_total(&self) -> u64 {
+        self.rows.iter().map(|r| r.rekey_messages).sum()
+    }
+
+    /// `(round0 + Σ rekey) / R` — the number the multi-round engine
+    /// drives down as R grows.
+    pub fn amortized_setup_per_round(&self) -> f64 {
+        (self.setup_messages + self.rekey_total()) as f64 / self.rows.len().max(1) as f64
+    }
+
+    /// Aligned text table, one row per round plus the amortization line.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "── {} — per-round failover cost ──", self.id);
+        let _ = writeln!(
+            out,
+            "{:>5} {:>9} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7}",
+            "round", "secs", "messages", "extra", "rekey", "contributors", "progress_f", "init_f"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:>5} {:>9.4} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7}",
+                r.round,
+                r.secs,
+                r.messages,
+                r.failover_extra(),
+                r.rekey_messages,
+                r.contributors,
+                r.progress_failovers,
+                r.initiator_failovers
+            );
+        }
+        let _ = writeln!(
+            out,
+            "setup: {} round-0 + {} rekey messages over {} rounds = {:.2} amortized/round",
+            self.setup_messages,
+            self.rekey_total(),
+            self.rows.len(),
+            self.amortized_setup_per_round()
+        );
+        out
+    }
+
+    /// CSV rows mirroring [`MultiRoundReport::to_table`].
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "id,round,secs,messages,failover_extra,rekey_messages,contributors,\
+             progress_failovers,initiator_failovers\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{},{},{},{},{},{}",
+                self.id,
+                r.round,
+                r.secs,
+                r.messages,
+                r.failover_extra(),
+                r.rekey_messages,
+                r.contributors,
+                r.progress_failovers,
+                r.initiator_failovers
+            );
+        }
+        out
+    }
+
+    /// Machine-readable form for `BENCH_multiround.json`.
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Value::object(vec![
+                    ("round", Value::from(r.round)),
+                    ("secs", Value::from(r.secs)),
+                    ("messages", Value::from(r.messages)),
+                    ("failover_extra", Value::from(r.failover_extra() as f64)),
+                    ("rekey_messages", Value::from(r.rekey_messages)),
+                    ("contributors", Value::from(r.contributors)),
+                    ("progress_failovers", Value::from(r.progress_failovers)),
+                    ("initiator_failovers", Value::from(r.initiator_failovers)),
+                ])
+            })
+            .collect();
+        Value::object(vec![
+            ("id", Value::from(self.id.as_str())),
+            ("setup_messages", Value::from(self.setup_messages)),
+            ("rekey_total", Value::from(self.rekey_total())),
+            ("amortized_setup_per_round", Value::from(self.amortized_setup_per_round())),
+            ("rounds", Value::Arr(rows)),
+        ])
+    }
+
+    /// Print the table and write `bench_out/<id>.csv` (same convention as
+    /// [`super::Figure::emit`]).
+    pub fn emit(&self, out_dir: Option<&str>) {
+        println!("{}", self.to_table());
+        let dir = PathBuf::from(out_dir.unwrap_or("bench_out"));
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{}.csv", self.id));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+            }
+        }
+    }
+}
+
+/// Run the canonical multi-round churn scenario: `n` edge nodes, `rounds`
+/// rounds, node 4 dying in round 1 and rejoining in round 3 (the
+/// die → re-form → rejoin arc every multi-round deployment must survive).
+pub fn multi_round_failover(n: usize, rounds: usize) -> Result<MultiRoundReport> {
+    use crate::learner::faults::FailPoint;
+    let mut cfg = super::figures::edge_cfg(n, 1);
+    cfg.progress_timeout = super::figures::SAFE_NODE_TIMEOUT;
+    cfg.monitor_interval = std::time::Duration::from_millis(50);
+    let churn = ChurnSchedule::none().die(4, 1, FailPoint::NeverStart).rejoin(4, 3);
+    run_schedule("multiround_failover", cfg, rounds, &churn)
+}
+
+/// Run `rounds` rounds of `cfg` under `churn` and package the report.
+pub fn run_schedule(
+    id: &str,
+    cfg: crate::config::SessionConfig,
+    rounds: usize,
+    churn: &ChurnSchedule,
+) -> Result<MultiRoundReport> {
+    let inputs: Vec<Vec<f64>> = (0..cfg.n_nodes)
+        .map(|i| (0..cfg.features).map(|f| (i + 1) as f64 + 0.001 * f as f64).collect())
+        .collect();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..rounds).map(|_| inputs.clone()).collect();
+    let session = SafeSession::new(cfg)?;
+    let setup = session.round0_messages;
+    let results = session.run_rounds(&per_round, churn)?;
+    let metrics: Vec<RoundMetrics> = results.into_iter().map(|r| r.metrics).collect();
+    Ok(MultiRoundReport::from_rounds(id, setup, &metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn rows() -> Vec<RoundMetrics> {
+        (0..3)
+            .map(|i| RoundMetrics {
+                wall_time: Duration::from_millis(100 + i * 10),
+                messages: 20,
+                bytes_sent: 0,
+                bytes_received: 0,
+                average: vec![],
+                contributors: 5,
+                progress_failovers: u64::from(i == 0),
+                initiator_failovers: 0,
+                rekey_messages: if i == 2 { 9 } else { 0 },
+                per_path: Default::default(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn report_table_csv_json_agree() {
+        let rep = MultiRoundReport::from_rounds("t", 40, &rows());
+        assert_eq!(rep.rekey_total(), 9);
+        assert!((rep.amortized_setup_per_round() - 49.0 / 3.0).abs() < 1e-9);
+        let table = rep.to_table();
+        assert!(table.contains("amortized/round"));
+        assert_eq!(rep.to_csv().lines().count(), 4); // header + 3 rounds
+        let json = rep.to_json();
+        assert_eq!(json.u64_of("setup_messages"), Some(40));
+        assert_eq!(json.u64_of("rekey_total"), Some(9));
+        assert_eq!(json.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn failover_extra_is_2f_shaped() {
+        let r = RoundRow {
+            round: 1,
+            secs: 0.1,
+            messages: 4 * 5 + 2,
+            rekey_messages: 0,
+            contributors: 5,
+            progress_failovers: 1,
+            initiator_failovers: 0,
+        };
+        assert_eq!(r.failover_extra(), 2);
+    }
+}

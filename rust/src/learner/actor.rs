@@ -1,0 +1,101 @@
+//! Persistent learner actors — the worker threads of the multi-round
+//! session engine.
+//!
+//! `run_round` used to spawn one throwaway thread per learner per round.
+//! Under the multi-round engine each learner is an *actor*: a thread
+//! spawned once that lives across rounds, receiving one `RoundTask` per
+//! round over a channel and sending the `LearnerOutcome` back. The
+//! expensive per-node state (RSA keys, §5.8 pre-negotiated keys) lives in
+//! the session's long-lived `LearnerContext`s; the actor receives a
+//! cheaply-forked per-round view of that context (chain order, epoch,
+//! stagger slot), so keys are exchanged once and reused round after round
+//! (paper §5, footnote 3).
+//!
+//! The channel protocol is strictly lock-step per actor: the engine sends
+//! exactly one task per round to each *active* actor and collects exactly
+//! one outcome; absent (churned-out) nodes get no task and the engine
+//! synthesizes [`LearnerOutcome::absent`] for them. Dropping the
+//! [`LearnerActor`] closes the task channel, which ends the thread.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use super::faults::FaultPlan;
+use super::{run_learner, LearnerContext, LearnerOutcome};
+
+/// One round's worth of work for an actor.
+struct RoundTask {
+    /// Per-round fork of the learner's context (chain/epoch/stagger for
+    /// this round; key material shared with the session's master copy).
+    ctx: Arc<LearnerContext>,
+    /// The node's local feature vector this round.
+    input: Vec<f64>,
+    /// Fault injection for this round (the round's `ChurnSchedule` slice).
+    faults: FaultPlan,
+}
+
+/// Handle to one persistent learner thread.
+pub struct LearnerActor {
+    pub node: u64,
+    /// `Some` while the actor is alive; taken (closing the channel, which
+    /// ends the thread's recv loop) on drop.
+    task_tx: Option<Sender<RoundTask>>,
+    outcome_rx: Receiver<Result<LearnerOutcome>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LearnerActor {
+    /// Spawn the actor thread for `node`. The thread parks on its task
+    /// channel between rounds (no spinning) and exits when the actor is
+    /// dropped.
+    pub fn spawn(node: u64) -> Result<LearnerActor> {
+        let (task_tx, task_rx) = channel::<RoundTask>();
+        let (outcome_tx, outcome_rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("learner-{node}"))
+            .spawn(move || {
+                while let Ok(task) = task_rx.recv() {
+                    let outcome = run_learner(&task.ctx, &task.input, &task.faults);
+                    if outcome_tx.send(outcome).is_err() {
+                        break; // engine gone; shut down
+                    }
+                }
+            })?;
+        Ok(LearnerActor { node, task_tx: Some(task_tx), outcome_rx, handle: Some(handle) })
+    }
+
+    /// Hand the actor its work for the round. Returns an error only if
+    /// the actor thread died (a bug, not a protocol failure).
+    pub fn dispatch(
+        &self,
+        ctx: Arc<LearnerContext>,
+        input: Vec<f64>,
+        faults: FaultPlan,
+    ) -> Result<()> {
+        self.task_tx
+            .as_ref()
+            .expect("actor already shut down")
+            .send(RoundTask { ctx, input, faults })
+            .map_err(|_| anyhow::anyhow!("learner actor {} is gone", self.node))
+    }
+
+    /// Block until the actor reports its outcome for the dispatched round.
+    pub fn collect(&self) -> Result<LearnerOutcome> {
+        self.outcome_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("learner actor {} died mid-round", self.node))?
+    }
+}
+
+impl Drop for LearnerActor {
+    fn drop(&mut self) {
+        // Closing the channel ends the thread's recv loop.
+        self.task_tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

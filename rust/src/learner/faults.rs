@@ -1,12 +1,27 @@
-//! Failure injection — how the §6.3 failover experiments kill nodes.
+//! Failure injection — how the failover experiments kill (and revive)
+//! nodes.
 //!
-//! The paper simulates failure by "complet[ing] the public key exchange
-//! step for all nodes before taking out nodes 4 to 6 in the chain and
-//! starting the aggregation process". [`FailPoint::NeverStart`] is exactly
-//! that; the other points kill a learner mid-protocol to exercise the
-//! harder recovery paths (consumed-then-died, initiator crash).
+//! Two layers:
+//!
+//! * [`FaultPlan`] — the paper's §6.3 single-round scenario: a set of
+//!   nodes each dying at one [`FailPoint`] within *one* aggregation
+//!   round. The paper simulates failure by "complet[ing] the public key
+//!   exchange step for all nodes before taking out nodes 4 to 6 in the
+//!   chain and starting the aggregation process";
+//!   [`FailPoint::NeverStart`] is exactly that, and the other points kill
+//!   a learner mid-protocol to exercise the harder recovery paths
+//!   (consumed-then-died, initiator crash).
+//! * [`ChurnSchedule`] — the general, multi-round form used by
+//!   `SafeSession::run_rounds`: per-round [`Die`](ChurnEvent::Die) and
+//!   [`Rejoin`](ChurnEvent::Rejoin) events, so a node can fail in round
+//!   1, sit out round 2, and return in round 3 (with chain re-formation
+//!   and a key re-exchange for the returning node only). A `FaultPlan`
+//!   is the round-1 slice of a `ChurnSchedule`; use
+//!   [`ChurnSchedule::from_fault_plan`] to lift one.
 
 use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
 
 /// Where in its state machine a learner dies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,18 +39,52 @@ pub enum FailPoint {
     InitiatorAfterPost,
 }
 
-/// Which nodes fail and where.
+impl FailPoint {
+    /// Stable spec name (used by the CLI `--churn` grammar).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailPoint::NeverStart => "never-start",
+            FailPoint::AfterGet => "after-get",
+            FailPoint::AfterPost => "after-post",
+            FailPoint::InitiatorAfterPost => "initiator-after-post",
+        }
+    }
+
+    /// Parse a spec name (see [`FailPoint::name`]).
+    pub fn from_name(s: &str) -> Option<FailPoint> {
+        match s {
+            "never-start" => Some(FailPoint::NeverStart),
+            "after-get" => Some(FailPoint::AfterGet),
+            "after-post" => Some(FailPoint::AfterPost),
+            "initiator-after-post" => Some(FailPoint::InitiatorAfterPost),
+            _ => None,
+        }
+    }
+}
+
+/// Which nodes fail and where, within a single aggregation round.
 #[derive(Debug, Clone, Default)]
 pub struct FaultPlan {
     pub faults: BTreeMap<u64, FailPoint>,
 }
 
 impl FaultPlan {
+    /// The empty plan: nobody fails.
+    #[must_use]
     pub fn none() -> Self {
         FaultPlan::default()
     }
 
-    /// The §6.3 scenario: nodes 4..=6 (or any range) never start.
+    /// The §6.3 scenario: nodes `from..=to` never start.
+    ///
+    /// ```
+    /// use safe_agg::learner::faults::{FailPoint, FaultPlan};
+    ///
+    /// let plan = FaultPlan::kill_range(4, 6);
+    /// assert_eq!(plan.failed_count(), 3);
+    /// assert!(plan.fails_at(5, FailPoint::NeverStart));
+    /// ```
+    #[must_use]
     pub fn kill_range(from: u64, to: u64) -> Self {
         let mut plan = FaultPlan::default();
         for n in from..=to {
@@ -44,21 +93,285 @@ impl FaultPlan {
         plan
     }
 
+    /// Builder: additionally kill `node` at `at`.
+    ///
+    /// ```
+    /// use safe_agg::learner::faults::{FailPoint, FaultPlan};
+    ///
+    /// let plan = FaultPlan::none()
+    ///     .kill(1, FailPoint::InitiatorAfterPost)
+    ///     .kill(5, FailPoint::AfterGet);
+    /// assert!(plan.fails_at(1, FailPoint::InitiatorAfterPost));
+    /// ```
+    #[must_use]
     pub fn kill(mut self, node: u64, at: FailPoint) -> Self {
         self.faults.insert(node, at);
         self
     }
 
+    /// The fail point configured for `node`, if any.
+    #[must_use]
     pub fn point(&self, node: u64) -> Option<FailPoint> {
         self.faults.get(&node).copied()
     }
 
+    #[must_use]
     pub fn fails_at(&self, node: u64, at: FailPoint) -> bool {
         self.point(node) == Some(at)
     }
 
+    #[must_use]
     pub fn failed_count(&self) -> usize {
         self.faults.len()
+    }
+}
+
+/// One scheduled churn event for a node. Rounds are 1-based: round 1 is
+/// the first aggregation round of a `run_rounds` call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// Die during `round` at the given [`FailPoint`]; absent from every
+    /// later round until a `Rejoin`.
+    Die(u64, FailPoint),
+    /// Return at the start of `round`: the node is re-inserted into its
+    /// group chain and re-runs its key exchange before the round starts.
+    Rejoin(u64),
+}
+
+impl ChurnEvent {
+    fn round(&self) -> u64 {
+        match self {
+            ChurnEvent::Die(r, _) => *r,
+            ChurnEvent::Rejoin(r) => *r,
+        }
+    }
+}
+
+/// Cross-round churn: per-node sequences of die/rejoin events, the
+/// multi-round generalization of [`FaultPlan`].
+///
+/// Semantics (rounds are 1-based):
+///
+/// * `Die(r, at)` — the node participates in round `r` up to the fail
+///   point `at`, then is **absent** from rounds `r+1, r+2, …`.
+/// * `Rejoin(r)` — the node is **present again from round `r`**
+///   (inclusive). Chains re-form around absent nodes each round, and a
+///   rejoining node re-runs its key exchange (its key material only;
+///   survivors' keys are reused untouched).
+///
+/// Events for one node must alternate die → rejoin → die … in strictly
+/// increasing rounds; [`ChurnSchedule::die`]/[`ChurnSchedule::rejoin`]
+/// and [`ChurnSchedule::parse`] enforce this.
+///
+/// ```
+/// use safe_agg::learner::faults::{ChurnSchedule, FailPoint};
+///
+/// let churn = ChurnSchedule::none()
+///     .die(4, 1, FailPoint::NeverStart)
+///     .rejoin(4, 3);
+/// assert!(!churn.absent_in(1, 4)); // dies *during* round 1
+/// assert!(churn.absent_in(2, 4));  // sits out round 2
+/// assert!(!churn.absent_in(3, 4)); // back for round 3
+/// assert_eq!(churn.rejoining_in(3), vec![4]);
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct ChurnSchedule {
+    /// node → events, kept sorted by round (alternating die/rejoin).
+    events: BTreeMap<u64, Vec<ChurnEvent>>,
+}
+
+impl ChurnSchedule {
+    /// The empty schedule: full membership every round.
+    #[must_use]
+    pub fn none() -> Self {
+        ChurnSchedule::default()
+    }
+
+    /// Lift a single-round [`FaultPlan`] into a schedule: every planned
+    /// fault becomes `Die(1, point)` with no rejoin — exactly what
+    /// `run_round(inputs, faults)` means under the multi-round engine.
+    #[must_use]
+    pub fn from_fault_plan(plan: &FaultPlan) -> Self {
+        let mut s = ChurnSchedule::none();
+        for (&node, &at) in &plan.faults {
+            s = s.die(node, 1, at);
+        }
+        s
+    }
+
+    /// Builder: `node` dies during `round` at `at`.
+    ///
+    /// # Panics
+    /// Panics if the event does not extend the node's alternating
+    /// die/rejoin sequence in increasing round order (a die directly
+    /// after a die, or a round ≤ the previous event's round).
+    #[must_use]
+    pub fn die(mut self, node: u64, round: u64, at: FailPoint) -> Self {
+        self.push(node, ChurnEvent::Die(round, at)).unwrap();
+        self
+    }
+
+    /// Builder: `node` returns at the start of `round`.
+    ///
+    /// # Panics
+    /// Panics under the same sequencing rules as [`ChurnSchedule::die`]
+    /// (a rejoin must follow a die in a strictly later round).
+    #[must_use]
+    pub fn rejoin(mut self, node: u64, round: u64) -> Self {
+        self.push(node, ChurnEvent::Rejoin(round)).unwrap();
+        self
+    }
+
+    fn push(&mut self, node: u64, ev: ChurnEvent) -> Result<()> {
+        if ev.round() == 0 {
+            bail!("churn rounds are 1-based; round 0 is invalid");
+        }
+        let seq = self.events.entry(node).or_default();
+        match (seq.last(), &ev) {
+            (None, ChurnEvent::Die(..)) => {}
+            (None, ChurnEvent::Rejoin(r)) => {
+                bail!("node {node}: rejoin@{r} without a prior die")
+            }
+            (Some(prev), _) if ev.round() <= prev.round() => bail!(
+                "node {node}: event at round {} must come after round {}",
+                ev.round(),
+                prev.round()
+            ),
+            (Some(ChurnEvent::Die(..)), ChurnEvent::Die(r, _)) => {
+                bail!("node {node}: die@{r} while already dead (missing rejoin)")
+            }
+            (Some(ChurnEvent::Rejoin(_)), ChurnEvent::Rejoin(r)) => {
+                bail!("node {node}: rejoin@{r} while already alive (missing die)")
+            }
+            _ => {}
+        }
+        seq.push(ev);
+        Ok(())
+    }
+
+    /// Is `node` absent for the whole of `round` (died in an earlier
+    /// round and has not rejoined by `round`)? A node dying *during*
+    /// `round` is not absent — it participates up to its fail point.
+    #[must_use]
+    pub fn absent_in(&self, round: u64, node: u64) -> bool {
+        let Some(seq) = self.events.get(&node) else { return false };
+        // Last event strictly before `round` decides; a Die(r) takes
+        // effect from r+1, a Rejoin(r) from r.
+        let mut absent = false;
+        for ev in seq {
+            match ev {
+                ChurnEvent::Die(r, _) if *r < round => absent = true,
+                ChurnEvent::Rejoin(r) if *r <= round => absent = false,
+                _ => break,
+            }
+        }
+        absent
+    }
+
+    /// The [`FaultPlan`] slice for `round`: every node with a
+    /// `Die(round, at)` event.
+    #[must_use]
+    pub fn fault_plan_for(&self, round: u64) -> FaultPlan {
+        let mut plan = FaultPlan::none();
+        for (&node, seq) in &self.events {
+            for ev in seq {
+                if let ChurnEvent::Die(r, at) = ev {
+                    if *r == round {
+                        plan.faults.insert(node, *at);
+                    }
+                }
+            }
+        }
+        plan
+    }
+
+    /// Nodes with a `Rejoin(round)` event — the ones that must re-run
+    /// their key exchange before `round` starts.
+    #[must_use]
+    pub fn rejoining_in(&self, round: u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        for (&node, seq) in &self.events {
+            if seq.iter().any(|ev| matches!(ev, ChurnEvent::Rejoin(r) if *r == round)) {
+                out.push(node);
+            }
+        }
+        out
+    }
+
+    /// Highest round any event references (0 for the empty schedule) —
+    /// lets the CLI default `--rounds` to cover the whole schedule.
+    #[must_use]
+    pub fn max_round(&self) -> u64 {
+        self.events
+            .values()
+            .flat_map(|seq| seq.iter().map(|ev| ev.round()))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// True when no events are scheduled.
+    #[must_use]
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// True when `node` has any scheduled event (used to detect conflicts
+    /// when merging a [`FaultPlan`] into an explicit schedule).
+    #[must_use]
+    pub fn schedules(&self, node: u64) -> bool {
+        self.events.contains_key(&node)
+    }
+
+    /// Parse the CLI `--churn` grammar: comma-separated events,
+    /// `die:NODE@ROUND[:FAILPOINT]` (fail point defaults to
+    /// `never-start`) or `rejoin:NODE@ROUND`. Example:
+    ///
+    /// ```
+    /// use safe_agg::learner::faults::{ChurnSchedule, FailPoint};
+    ///
+    /// let churn =
+    ///     ChurnSchedule::parse("die:4@1,rejoin:4@3,die:5@2:after-get").unwrap();
+    /// assert_eq!(churn.fault_plan_for(2).point(5), Some(FailPoint::AfterGet));
+    /// assert_eq!(churn.max_round(), 3);
+    /// ```
+    pub fn parse(spec: &str) -> Result<ChurnSchedule> {
+        let mut schedule = ChurnSchedule::none();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = part
+                .split_once(':')
+                .with_context(|| format!("churn event {part:?}: expected kind:node@round"))?;
+            let (node_str, round_rest) = rest
+                .split_once('@')
+                .with_context(|| format!("churn event {part:?}: missing @round"))?;
+            let node: u64 = node_str
+                .parse()
+                .with_context(|| format!("churn event {part:?}: bad node id"))?;
+            match kind {
+                "die" => {
+                    let (round_str, point) = match round_rest.split_once(':') {
+                        Some((r, p)) => (
+                            r,
+                            FailPoint::from_name(p).with_context(|| {
+                                format!("churn event {part:?}: unknown fail point {p:?}")
+                            })?,
+                        ),
+                        None => (round_rest, FailPoint::NeverStart),
+                    };
+                    let round: u64 = round_str
+                        .parse()
+                        .with_context(|| format!("churn event {part:?}: bad round"))?;
+                    schedule.push(node, ChurnEvent::Die(round, point))?;
+                }
+                "rejoin" => {
+                    let round: u64 = round_rest
+                        .parse()
+                        .with_context(|| format!("churn event {part:?}: bad round"))?;
+                    schedule.push(node, ChurnEvent::Rejoin(round))?;
+                }
+                other => bail!("churn event {part:?}: unknown kind {other:?}"),
+            }
+        }
+        Ok(schedule)
     }
 }
 
@@ -84,5 +397,76 @@ mod tests {
         assert!(p.fails_at(1, FailPoint::InitiatorAfterPost));
         assert!(p.fails_at(5, FailPoint::AfterGet));
         assert!(!p.fails_at(5, FailPoint::AfterPost));
+    }
+
+    #[test]
+    fn churn_absent_window() {
+        let c = ChurnSchedule::none().die(4, 1, FailPoint::NeverStart).rejoin(4, 3);
+        assert!(!c.absent_in(1, 4), "dies during round 1, not absent from it");
+        assert!(c.absent_in(2, 4));
+        assert!(!c.absent_in(3, 4));
+        assert!(!c.absent_in(4, 4));
+        assert!(!c.absent_in(1, 9), "unscheduled nodes never absent");
+    }
+
+    #[test]
+    fn churn_die_rejoin_die() {
+        let c = ChurnSchedule::none()
+            .die(2, 1, FailPoint::AfterGet)
+            .rejoin(2, 2)
+            .die(2, 3, FailPoint::NeverStart);
+        assert!(!c.absent_in(1, 2));
+        assert!(!c.absent_in(2, 2));
+        assert!(!c.absent_in(3, 2), "present (and dying) in round 3");
+        assert!(c.absent_in(4, 2));
+        assert_eq!(c.fault_plan_for(1).point(2), Some(FailPoint::AfterGet));
+        assert!(c.fault_plan_for(2).faults.is_empty());
+        assert_eq!(c.fault_plan_for(3).point(2), Some(FailPoint::NeverStart));
+        assert_eq!(c.rejoining_in(2), vec![2]);
+        assert!(c.rejoining_in(3).is_empty());
+        assert_eq!(c.max_round(), 3);
+    }
+
+    #[test]
+    fn churn_from_fault_plan_is_round1_slice() {
+        let plan = FaultPlan::kill_range(4, 5).kill(1, FailPoint::InitiatorAfterPost);
+        let c = ChurnSchedule::from_fault_plan(&plan);
+        assert_eq!(c.fault_plan_for(1).failed_count(), 3);
+        assert!(c.fault_plan_for(2).faults.is_empty());
+        assert!(c.absent_in(2, 4), "no rejoin scheduled");
+    }
+
+    #[test]
+    fn churn_parse_grammar() {
+        let c = ChurnSchedule::parse("die:4@1, rejoin:4@3 ,die:5@2:after-get").unwrap();
+        assert!(c.absent_in(2, 4));
+        assert_eq!(c.fault_plan_for(2).point(5), Some(FailPoint::AfterGet));
+        assert_eq!(c.rejoining_in(3), vec![4]);
+        assert!(ChurnSchedule::parse("").unwrap().is_empty());
+        for bad in [
+            "die:4",            // no round
+            "die:x@1",          // bad node
+            "die:4@0",          // rounds are 1-based
+            "die:4@1:bogus",    // unknown fail point
+            "rejoin:4@1",       // rejoin before any die
+            "die:4@2,die:4@3",  // double die
+            "die:4@2,rejoin:4@2", // rejoin not strictly later
+            "fly:4@1",          // unknown kind
+        ] {
+            assert!(ChurnSchedule::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn fail_point_names_roundtrip() {
+        for p in [
+            FailPoint::NeverStart,
+            FailPoint::AfterGet,
+            FailPoint::AfterPost,
+            FailPoint::InitiatorAfterPost,
+        ] {
+            assert_eq!(FailPoint::from_name(p.name()), Some(p));
+        }
+        assert_eq!(FailPoint::from_name("nope"), None);
     }
 }

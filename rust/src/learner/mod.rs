@@ -12,6 +12,7 @@
 //!   → ask `should_initiate`; the first asker becomes the new initiator
 //!   and everyone restarts their steps.
 
+pub mod actor;
 pub mod faults;
 
 use std::collections::BTreeMap;
@@ -39,13 +40,16 @@ pub struct LearnerContext {
     pub chain: Vec<u64>,
     /// Total learners across all groups (chain.len() < this ⇒ subgroups).
     pub expected_total_nodes: usize,
-    pub keys: RsaKeyPair,
+    /// Key material is `Arc`-shared: the multi-round engine forks a
+    /// context per round, and only a rejoin re-key ever replaces these
+    /// maps (clone-on-write), so a fork is pointer-cheap.
+    pub keys: Arc<RsaKeyPair>,
     /// Public keys of the peers in this group (fetched in round 0).
-    pub peer_keys: BTreeMap<u64, RsaPublicKey>,
+    pub peer_keys: Arc<BTreeMap<u64, RsaPublicKey>>,
     /// §5.8 pre-negotiated keys: `send_keys[to]` = key the receiver `to`
     /// generated for us; `recv_keys[from]` = key we generated for `from`.
-    pub send_keys: BTreeMap<u64, SymmetricKey>,
-    pub recv_keys: BTreeMap<u64, SymmetricKey>,
+    pub send_keys: Arc<BTreeMap<u64, SymmetricKey>>,
+    pub recv_keys: Arc<BTreeMap<u64, SymmetricKey>>,
     pub mode: CipherMode,
     pub compress: bool,
     pub profile: DeviceProfile,
@@ -64,6 +68,10 @@ pub struct LearnerContext {
     /// first `get_aggregate` poll ("the nodes at the end of the chain only
     /// need to engage at the very end of the aggregation").
     pub stagger_delay: Duration,
+    /// Session round-epoch this context participates in (multi-round
+    /// engine). Stamped on every `post_aggregate` so the controller can
+    /// reject stragglers from a finished round.
+    pub epoch: u64,
 }
 
 /// What a learner reports after an aggregation completes.
@@ -83,7 +91,11 @@ pub struct LearnerOutcome {
 }
 
 impl LearnerOutcome {
-    fn dead(node: u64) -> Self {
+    /// Outcome for a node that never participated this round — either it
+    /// hit a [`FailPoint`] immediately, or the churn schedule kept it out
+    /// of the round entirely (the multi-round engine synthesizes these
+    /// for absent nodes).
+    pub fn absent(node: u64) -> Self {
         LearnerOutcome {
             node,
             average: vec![],
@@ -94,9 +106,43 @@ impl LearnerOutcome {
             died: true,
         }
     }
+
+    fn dead(node: u64) -> Self {
+        LearnerOutcome::absent(node)
+    }
 }
 
 impl LearnerContext {
+    /// Clone this context with a fresh RNG (the one field that cannot be
+    /// cloned). The session engine forks a learner's long-lived context
+    /// once per round — same keys, new round view (chain order, epoch,
+    /// stagger slot) — then tweaks the round-specific fields on the copy.
+    /// Key material is shared, which is the point: keys are exchanged
+    /// once and reused across rounds (paper §5, footnote 3).
+    pub fn fork(&self, rng: Box<dyn SecureRng + Send>) -> LearnerContext {
+        LearnerContext {
+            node: self.node,
+            group: self.group,
+            chain: self.chain.clone(),
+            expected_total_nodes: self.expected_total_nodes,
+            keys: self.keys.clone(),
+            peer_keys: self.peer_keys.clone(),
+            send_keys: self.send_keys.clone(),
+            recv_keys: self.recv_keys.clone(),
+            mode: self.mode,
+            compress: self.compress,
+            profile: self.profile.clone(),
+            transport: self.transport.clone(),
+            math: self.math.clone(),
+            rng: std::sync::Mutex::new(rng),
+            aggregation_timeout: self.aggregation_timeout,
+            single_seed_mask: self.single_seed_mask,
+            initial_initiator: self.initial_initiator,
+            stagger_delay: self.stagger_delay,
+            epoch: self.epoch,
+        }
+    }
+
     fn successor(&self, of: u64) -> u64 {
         let pos = self.chain.iter().position(|&n| n == of).unwrap_or(0);
         self.chain[(pos + 1) % self.chain.len()]
@@ -277,6 +323,7 @@ fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64)
         // base64 happens only inside JsonCodec, if at all.
         aggregate: env.to_blob(),
         round_id: Some(round_id),
+        epoch: Some(ctx.epoch),
     }
     .to_value();
     ctx.call(proto::POST_AGGREGATE, &body)

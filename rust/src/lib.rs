@@ -12,6 +12,14 @@
 //! handled by an external *progress monitor* (chain re-routing) and an
 //! aggregation timeout (initiator re-election).
 //!
+//! Sessions are multi-round: [`protocols::SafeSession::run_rounds`] drives
+//! R aggregation rounds over persistent learner actors (keys exchanged
+//! once in round 0 and reused, paper §5 footnote 3), with a
+//! [`learner::faults::ChurnSchedule`] scheduling per-round node deaths and
+//! rejoins — chains re-form around absent nodes and a returning node
+//! re-keys alone. See the repository `README.md` for the architecture map
+//! and `docs/WIRE.md` for the normative wire-format specification.
+//!
 //! The crate is a three-layer system:
 //!  * **L3 (this crate)** — the coordination contribution: controller broker,
 //!    learner state machines, progress monitor, subgrouping, hierarchical

@@ -13,7 +13,8 @@ use std::sync::Arc;
 use safe_agg::config::{Args, SessionConfig};
 use safe_agg::controller::{Controller, ControllerConfig};
 use safe_agg::fl::{self, FlConfig};
-use safe_agg::learner::faults::FaultPlan;
+use safe_agg::harness::multiround::MultiRoundReport;
+use safe_agg::learner::faults::{ChurnSchedule, FaultPlan};
 use safe_agg::protocols::bon::BonSession;
 use safe_agg::protocols::insec::InsecSession;
 use safe_agg::protocols::SafeSession;
@@ -50,6 +51,13 @@ fn print_help() {
                    [--fail-from A --fail-to B] [--engine native|xla|auto]\n\
                    [--wire json|binary|json+deflate|binary+deflate]\n\
                                           wire codec (default json)\n\
+                   [--rounds R] [--churn SPEC]\n\
+                                          multi-round engine: R rounds over\n\
+                                          persistent learners; SPEC is\n\
+                                          comma-separated die:NODE@ROUND\n\
+                                          [:never-start|after-get|after-post|\n\
+                                          initiator-after-post] and\n\
+                                          rejoin:NODE@ROUND events\n\
            insec   --nodes N --features F   INSEC baseline round\n\
            bon     --nodes N --features F   BON (Bonawitz) baseline round\n\
            train   --nodes N --rounds R [--local-steps S] [--lr LR]\n\
@@ -96,6 +104,34 @@ fn faults_from(args: &Args) -> FaultPlan {
 fn cmd_run(args: &Args) -> i32 {
     let cfg = args.to_session_config();
     let faults = faults_from(args);
+    let churn = match args.get("churn").map(ChurnSchedule::parse) {
+        Some(Ok(c)) => Some(c),
+        Some(Err(e)) => {
+            eprintln!("bad --churn spec: {e:#}");
+            return 2;
+        }
+        None => None,
+    };
+    let rounds = args.get_usize("rounds", 0);
+    if rounds > 1 || churn.is_some() {
+        // Multi-round engine: R rounds over persistent learner actors,
+        // with optional cross-round churn. --fail-from/--fail-to folds in
+        // as round-1 deaths (the single-round meaning) unless the --churn
+        // spec already schedules that node.
+        let mut churn = churn.unwrap_or_else(ChurnSchedule::none);
+        for (&node, &at) in &faults.faults {
+            if churn.schedules(node) {
+                eprintln!(
+                    "--fail-from/--fail-to conflicts with --churn for node {node}; \
+                     schedule it in --churn only"
+                );
+                return 2;
+            }
+            churn = churn.die(node, 1, at);
+        }
+        let rounds = rounds.max(churn.max_round() as usize).max(1);
+        return cmd_run_rounds(&cfg, rounds, &churn);
+    }
     println!(
         "SAFE round: {} nodes × {} features, mode={}, groups={}, profile={}, wire={}",
         cfg.n_nodes,
@@ -127,6 +163,43 @@ fn cmd_run(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("SAFE round failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_run_rounds(cfg: &SessionConfig, rounds: usize, churn: &ChurnSchedule) -> i32 {
+    println!(
+        "SAFE session: {} rounds × {} nodes × {} features, mode={}, groups={}, wire={}",
+        rounds,
+        cfg.n_nodes,
+        cfg.features,
+        cfg.mode.name(),
+        cfg.groups,
+        cfg.wire.name()
+    );
+    let inputs = inputs_for(cfg);
+    let per_round: Vec<Vec<Vec<f64>>> = (0..rounds).map(|_| inputs.clone()).collect();
+    let session = match SafeSession::new(cfg.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("session build failed: {e:#}");
+            return 1;
+        }
+    };
+    let setup_messages = session.round0_messages;
+    match session.run_rounds(&per_round, churn) {
+        Ok(results) => {
+            // One renderer for the per-round table + amortized-setup line
+            // (shared with the failover bench's BENCH_multiround.json).
+            let metrics: Vec<_> = results.into_iter().map(|r| r.metrics).collect();
+            let report =
+                MultiRoundReport::from_rounds("session", setup_messages, &metrics);
+            print!("{}", report.to_table());
+            0
+        }
+        Err(e) => {
+            eprintln!("SAFE session failed: {e:#}");
             1
         }
     }

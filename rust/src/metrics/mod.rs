@@ -23,6 +23,12 @@ pub struct RoundMetrics {
     pub progress_failovers: u64,
     /// Initiator failovers that occurred (i in `(i+1)(4n+2f+in)`).
     pub initiator_failovers: u64,
+    /// Key (re-)exchange messages spent inside this round's window by the
+    /// multi-round engine — nonzero only when a churned-out node rejoined
+    /// this round. Reported separately from `messages`, mirroring the
+    /// paper's footnote 3 (key exchange is not per-aggregation traffic),
+    /// but still visible in `per_path`.
+    pub rekey_messages: u64,
     /// Messages by path (for the message-accounting tests).
     pub per_path: std::collections::BTreeMap<String, u64>,
 }
@@ -79,6 +85,7 @@ mod tests {
             contributors: 0,
             progress_failovers: 0,
             initiator_failovers: 0,
+            rekey_messages: 0,
             per_path: Default::default(),
         }
     }

@@ -7,6 +7,13 @@
 //! encrypt it for the node that is next in the chain after the failing
 //! node." The detection logic itself lives in the controller
 //! (`progress_check`); this module is the external pinger process.
+//!
+//! Under the multi-round engine one monitor spans all R rounds of a
+//! `run_rounds` call: [`ProgressMonitor::reposts`] is cumulative, and the
+//! engine takes per-round deltas for `RoundMetrics::progress_failovers`.
+//! Between rounds the monitor's pings are harmless — a freshly
+//! `begin_round`-reset group has no posters, so `progress_check` never
+//! declares a stuck link before the round's first post.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};

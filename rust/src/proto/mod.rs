@@ -50,6 +50,7 @@ pub const GET_PRENEG_KEY: &str = "/get_preneg_key";
 
 // ---- session management ----
 pub const CONFIGURE: &str = "/configure";
+pub const BEGIN_ROUND: &str = "/begin_round";
 pub const RESET: &str = "/reset";
 pub const PROGRESS_CHECK: &str = "/progress_check";
 pub const STATUS: &str = "/status";
@@ -89,6 +90,10 @@ pub struct PostAggregate {
     pub aggregate: Blob,
     /// Round the message belongs to; stale rounds are rejected (§5.4).
     pub round_id: Option<u64>,
+    /// Session round-epoch the message belongs to (multi-round engine);
+    /// stale epochs are rejected so a straggler from round N can never
+    /// pollute round N+1's mailboxes.
+    pub epoch: Option<u64>,
 }
 
 impl PostAggregate {
@@ -102,6 +107,9 @@ impl PostAggregate {
         if let Some(r) = self.round_id {
             v.set("round_id", Value::from(r));
         }
+        if let Some(e) = self.epoch {
+            v.set("epoch", Value::from(e));
+        }
         v
     }
 
@@ -112,7 +120,58 @@ impl PostAggregate {
             group: v.u64_of("group").context("missing group")?,
             aggregate: aggregate_blob(v).context("missing aggregate")?,
             round_id: v.u64_of("round_id"),
+            epoch: v.u64_of("epoch"),
         })
+    }
+}
+
+/// `begin_round` — open a new session round-epoch (multi-round engine).
+/// Resets every group's transient chain state (mailboxes, check statuses,
+/// posters, averages, round ids) and installs the round's chains, while
+/// the round-0 key registry, §5.8 pre-negotiated keys, HTTP state and
+/// message statistics all survive. `configure` is the heavyweight cousin
+/// used at session build; `begin_round` is the per-round reset.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BeginRound {
+    /// Monotonic session round-epoch (posts carrying an older epoch are
+    /// rejected as `stale_epoch`).
+    pub epoch: u64,
+    /// group id → chain order for this round (absent/churned nodes are
+    /// simply not listed — chain re-formation).
+    pub groups: BTreeMap<u64, Vec<u64>>,
+}
+
+impl BeginRound {
+    pub fn to_value(&self) -> Value {
+        let mut groups = Value::obj();
+        for (gid, chain) in &self.groups {
+            groups.set(
+                &gid.to_string(),
+                Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
+            );
+        }
+        Value::object(vec![("epoch", Value::from(self.epoch)), ("groups", groups)])
+    }
+
+    pub fn from_value(v: &Value) -> Result<BeginRound> {
+        let epoch = v.u64_of("epoch").context("missing epoch")?;
+        let mut groups = BTreeMap::new();
+        match v.get("groups") {
+            Some(Value::Obj(m)) => {
+                for (gid_str, chain_v) in m {
+                    let gid: u64 = gid_str.parse().context("bad group id")?;
+                    let chain: Vec<u64> = chain_v
+                        .as_arr()
+                        .context("bad chain")?
+                        .iter()
+                        .filter_map(|e| e.as_u64())
+                        .collect();
+                    groups.insert(gid, chain);
+                }
+            }
+            _ => bail!("missing groups"),
+        }
+        Ok(BeginRound { epoch, groups })
     }
 }
 
@@ -644,6 +703,7 @@ pub fn post_aggregate(from_node: u64, to_node: u64, aggregate: &[u8], group: u64
         group,
         aggregate: Blob::from_slice(aggregate),
         round_id: None,
+        epoch: None,
     }
     .to_value()
 }
@@ -699,8 +759,16 @@ mod tests {
             group: 2,
             aggregate: Blob::from_slice(&[2, 4, 0xde, 0xad, 0xbe, 0xef]),
             round_id: Some(7),
+            epoch: Some(2),
         };
         assert_eq!(PostAggregate::from_value(&pa.to_value()).unwrap(), pa);
+
+        let br = BeginRound {
+            epoch: 3,
+            groups: BTreeMap::from([(1u64, vec![1u64, 3, 5]), (2, vec![2, 4, 6])]),
+        };
+        assert_eq!(BeginRound::from_value(&br.to_value()).unwrap(), br);
+        assert!(BeginRound::from_value(&Value::obj()).is_err());
 
         let no = NodeOp::new(5, 1);
         assert_eq!(NodeOp::from_value(&no.to_value()).unwrap(), no);

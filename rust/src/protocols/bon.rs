@@ -146,6 +146,7 @@ impl BonSession {
             contributors: averages.len() as u64,
             progress_failovers: faults.failed_count() as u64,
             initiator_failovers: 0,
+            rekey_messages: 0,
             per_path: Default::default(),
         })
     }

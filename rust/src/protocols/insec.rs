@@ -124,6 +124,7 @@ impl InsecSession {
             contributors: averages.len() as u64,
             progress_failovers: 0,
             initiator_failovers: 0,
+            rekey_messages: 0,
             per_path: Default::default(),
         })
     }

@@ -15,8 +15,9 @@ use crate::crypto::rng::{DeterministicRng, SecureRng, SystemRng};
 use crate::crypto::rsa::{RsaKeyPair, RsaPublicKey};
 use crate::crypto::SymmetricKey;
 use crate::json::Value;
-use crate::learner::faults::FaultPlan;
-use crate::learner::{run_learner, LearnerContext, LearnerOutcome};
+use crate::learner::actor::LearnerActor;
+use crate::learner::faults::{ChurnSchedule, FaultPlan};
+use crate::learner::{LearnerContext, LearnerOutcome};
 use crate::metrics::RoundMetrics;
 use crate::monitor::ProgressMonitor;
 use crate::proto;
@@ -57,7 +58,11 @@ pub struct SafeSession {
     pub cfg: SessionConfig,
     pub controller: Arc<Controller>,
     stats: Arc<MessageStats>,
-    contexts: Vec<Arc<LearnerContext>>,
+    /// Master per-node contexts: the long-lived key material and transport
+    /// of every configured learner. Behind a mutex because a rejoin
+    /// re-keys (replaces) individual entries mid-`run_rounds`; per-round
+    /// views are cheap forks of these masters.
+    contexts: Mutex<Vec<Arc<LearnerContext>>>,
     monitor_transport: Arc<dyn ClientTransport>,
     /// Keep the loopback HTTP server alive for HTTP transport sessions.
     _http_server: Option<HttpServer>,
@@ -195,10 +200,10 @@ impl SafeSession {
         )?;
 
         // ---- Round 0: key generation + registry (§5.1, footnote 3) ----
-        let mut node_keys: BTreeMap<u64, RsaKeyPair> = BTreeMap::new();
+        let mut node_keys: BTreeMap<u64, Arc<RsaKeyPair>> = BTreeMap::new();
         for (_, chain) in &chains {
             for &node in chain {
-                node_keys.insert(node, keypair_for(cfg.seed, node, cfg.rsa_bits));
+                node_keys.insert(node, Arc::new(keypair_for(cfg.seed, node, cfg.rsa_bits)));
             }
         }
         for (&node, kp) in &node_keys {
@@ -234,9 +239,9 @@ impl SafeSession {
                     chain: chain.clone(),
                     expected_total_nodes: cfg.n_nodes,
                     keys: node_keys[&node].clone(),
-                    peer_keys,
-                    send_keys: BTreeMap::new(),
-                    recv_keys: BTreeMap::new(),
+                    peer_keys: Arc::new(peer_keys),
+                    send_keys: Arc::new(BTreeMap::new()),
+                    recv_keys: Arc::new(BTreeMap::new()),
                     mode: cfg.mode,
                     compress: cfg.compress,
                     profile: cfg.profile.clone(),
@@ -249,6 +254,7 @@ impl SafeSession {
                     stagger_delay: cfg
                         .stagger_step
                         .mul_f64(chain.iter().position(|&c| c == node).unwrap_or(0) as f64),
+                    epoch: 0,
                 }));
             }
         }
@@ -297,30 +303,14 @@ impl SafeSession {
                 // Contexts are shared Arcs; rebuild with key maps filled.
                 let idx = contexts.iter().position(|c| c.node == ctx.node).unwrap();
                 let old = contexts[idx].clone();
-                contexts[idx] = Arc::new(LearnerContext {
-                    node: old.node,
-                    group: old.group,
-                    chain: old.chain.clone(),
-                    expected_total_nodes: old.expected_total_nodes,
-                    keys: old.keys.clone(),
-                    peer_keys: old.peer_keys.clone(),
-                    send_keys,
-                    recv_keys: generated.remove(&old.node).unwrap_or_default(),
-                    mode: old.mode,
-                    compress: old.compress,
-                    profile: old.profile.clone(),
-                    transport: old.transport.clone(),
-                    math: math.clone(),
-                    rng: Mutex::new(match cfg.seed {
-                        Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(old.node * 104729)))
-                            as Box<dyn SecureRng + Send>,
-                        None => Box::new(SystemRng::new()),
-                    }),
-                    aggregation_timeout: old.aggregation_timeout,
-                    single_seed_mask: old.single_seed_mask,
-                    initial_initiator: old.initial_initiator,
-                    stagger_delay: old.stagger_delay,
+                let mut refreshed = old.fork(match cfg.seed {
+                    Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(old.node * 104729)))
+                        as Box<dyn SecureRng + Send>,
+                    None => Box::new(SystemRng::new()),
                 });
+                refreshed.send_keys = Arc::new(send_keys);
+                refreshed.recv_keys = Arc::new(generated.remove(&old.node).unwrap_or_default());
+                contexts[idx] = Arc::new(refreshed);
             }
         }
 
@@ -330,7 +320,7 @@ impl SafeSession {
             cfg,
             controller,
             stats,
-            contexts,
+            contexts: Mutex::new(contexts),
             monitor_transport,
             _http_server: http_server,
             round0_messages,
@@ -359,85 +349,204 @@ impl SafeSession {
     }
 
     /// Run one aggregation round. `inputs[i]` is node i+1's local vector
-    /// (all must have `cfg.wire_features()` length).
+    /// (all must have `cfg.wire_features()` length). A thin wrapper over
+    /// [`SafeSession::run_rounds`]: the [`FaultPlan`] is lifted to a
+    /// one-round [`ChurnSchedule`].
     pub fn run_round(&self, inputs: &[Vec<f64>], faults: &FaultPlan) -> Result<SafeRoundResult> {
+        let churn = ChurnSchedule::from_fault_plan(faults);
+        let mut results = self.run_rounds(&[inputs.to_vec()], &churn)?;
+        results.pop().context("one round in, one result out")
+    }
+
+    /// The multi-round session engine. Runs `inputs_per_round.len()`
+    /// aggregation rounds over *persistent* learner actors (one thread
+    /// per node, alive for the whole run; keys exchanged once at session
+    /// build and reused every round, paper §5 footnote 3) and a single
+    /// progress monitor. Between rounds the controller's mailboxes and
+    /// chain state reset via a round-epoch (`begin_round`) — the HTTP
+    /// listener, `MessageStats` and the key registry are never torn down.
+    ///
+    /// `churn` schedules cross-round membership: a node can die at a
+    /// [`FailPoint`](crate::learner::faults::FailPoint) in round `r`, sit
+    /// out following rounds (the chain re-forms without it), and rejoin
+    /// later — re-running the key exchange for the returning node only,
+    /// counted separately as [`RoundMetrics::rekey_messages`].
+    pub fn run_rounds(
+        &self,
+        inputs_per_round: &[Vec<Vec<f64>>],
+        churn: &ChurnSchedule,
+    ) -> Result<Vec<SafeRoundResult>> {
+        if inputs_per_round.is_empty() {
+            return Ok(Vec::new());
+        }
+        // Persistent actors: one thread per configured node, parked on a
+        // task channel between rounds.
+        let mut actors: BTreeMap<u64, LearnerActor> = BTreeMap::new();
+        {
+            let masters = self.contexts.lock().unwrap();
+            for ctx in masters.iter() {
+                actors.insert(ctx.node, LearnerActor::spawn(ctx.node)?);
+            }
+        }
+        let mut monitor =
+            ProgressMonitor::start(self.monitor_transport.clone(), self.cfg.monitor_interval);
+        let mut results = Vec::with_capacity(inputs_per_round.len());
+        for (i, inputs) in inputs_per_round.iter().enumerate() {
+            let round = (i + 1) as u64;
+            match self.run_engine_round(inputs, churn, round, &actors, &monitor) {
+                Ok(r) => results.push(r),
+                Err(e) => {
+                    monitor.stop();
+                    return Err(e.context(format!("round {round}")));
+                }
+            }
+        }
+        monitor.stop();
+        Ok(results)
+    }
+
+    /// Deterministic per-(node, salt) RNG for a round's context fork.
+    fn round_rng(&self, node: u64, salt: u64) -> Box<dyn SecureRng + Send> {
+        match self.cfg.seed {
+            Some(s) => Box::new(DeterministicRng::seed(
+                s ^ (salt << 24) ^ node.wrapping_mul(0x9e3779b97f4a7c15),
+            )),
+            None => Box::new(SystemRng::new()),
+        }
+    }
+
+    fn master_context(&self, node: u64) -> Result<Arc<LearnerContext>> {
+        self.contexts
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|c| c.node == node)
+            .cloned()
+            .with_context(|| format!("node {node} has no configured context"))
+    }
+
+    fn replace_context(&self, ctx: LearnerContext) {
+        let mut masters = self.contexts.lock().unwrap();
+        if let Some(slot) = masters.iter_mut().find(|c| c.node == ctx.node) {
+            *slot = Arc::new(ctx);
+        }
+    }
+
+    /// One engine round: chain re-formation around churned-out nodes,
+    /// round-epoch reset, rejoin re-key, fan-out to the actors, agreement
+    /// validation and metrics.
+    fn run_engine_round(
+        &self,
+        inputs: &[Vec<f64>],
+        churn: &ChurnSchedule,
+        churn_round: u64,
+        actors: &BTreeMap<u64, LearnerActor>,
+        monitor: &ProgressMonitor,
+    ) -> Result<SafeRoundResult> {
         if inputs.len() != self.cfg.n_nodes {
             bail!("need {} input vectors, got {}", self.cfg.n_nodes, inputs.len());
         }
-        let round = self
+        let engine_round = self
             .rounds_run
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-        // Reset per-round chain state (configure clears group state but
-        // keeps the key registry).
-        let chains = self.chains_for_round(round);
-        let mut groups_obj = Value::obj();
-        for (gid, chain) in &chains {
-            groups_obj.set(
-                &gid.to_string(),
-                Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
-            );
+        let epoch = engine_round + 1;
+
+        // Chain re-formation: the configured (possibly per-round shuffled)
+        // order minus nodes the churn schedule keeps out of this round.
+        let mut chains = self.chains_for_round(engine_round);
+        for (_, chain) in chains.iter_mut() {
+            chain.retain(|&n| !churn.absent_in(churn_round, n));
         }
-        self.monitor_transport
-            .call(proto::CONFIGURE, &Value::object(vec![("groups", groups_obj)]))?;
+        for (gid, chain) in &chains {
+            if chain.len() < 3 {
+                bail!(
+                    "group {gid}: {} live nodes < 3 in round {churn_round} (privacy floor, §5.3)",
+                    chain.len()
+                );
+            }
+        }
+        let total_active: usize = chains.iter().map(|(_, c)| c.len()).sum();
+
+        // Open the round-epoch: mailbox/check/average state resets; the
+        // key registry, HTTP state and MessageStats survive.
+        let resp = self.monitor_transport.call(
+            proto::BEGIN_ROUND,
+            &proto::BeginRound { epoch, groups: chains.iter().cloned().collect() }.to_value(),
+        )?;
+        if resp.str_of("status") != Some("ok") {
+            bail!("begin_round rejected: {:?}", resp.str_of("status"));
+        }
 
         let baseline_msgs = self.stats.total();
         let baseline_bytes = self.stats.bytes();
         let baseline_recv = self.stats.bytes_received();
         let per_path_before = self.stats.per_path();
 
-        let mut monitor =
-            ProgressMonitor::start(self.monitor_transport.clone(), self.cfg.monitor_interval);
+        // Key re-exchange for nodes returning this round — only their key
+        // material moves; survivors' keys are reused untouched.
+        let rejoiners: Vec<u64> = churn
+            .rejoining_in(churn_round)
+            .into_iter()
+            .filter(|j| chains.iter().any(|(_, c)| c.contains(j)))
+            .collect();
+        if !rejoiners.is_empty() {
+            self.rekey_rejoiners(&rejoiners, &chains, epoch)?;
+        }
+        // Count rekey traffic by key-exchange path, not by total delta:
+        // the cross-round monitor keeps pinging `progress_check` through
+        // the same counted transport, and a ping landing inside the rekey
+        // window must not masquerade as (or double-subtract from) rekey.
+        let per_path_rekey = self.stats.per_path();
+        let rekey_messages: u64 = [
+            proto::REGISTER_KEY,
+            proto::GET_KEY,
+            proto::POST_PRENEG_KEYS,
+            proto::GET_PRENEG_KEY,
+        ]
+        .iter()
+        .map(|p| {
+            per_path_rekey.get(*p).copied().unwrap_or(0)
+                - per_path_before.get(*p).copied().unwrap_or(0)
+        })
+        .sum();
 
+        let reposts_before = monitor.reposts();
+        let faults = churn.fault_plan_for(churn_round);
         let watch = Stopwatch::start();
-        let mut handles = Vec::new();
-        for ctx in &self.contexts {
-            let ctx = if self.cfg.shuffle_chain_each_round {
-                // Rebuild this learner's view with the round's chain order.
-                let (_, chain) = chains
-                    .iter()
-                    .find(|(_, c)| c.contains(&ctx.node))
-                    .context("node missing from round chains")?
-                    .clone();
-                let pos = chain.iter().position(|&c| c == ctx.node).unwrap_or(0);
-                Arc::new(LearnerContext {
-                    node: ctx.node,
-                    group: ctx.group,
-                    chain: chain.clone(),
-                    expected_total_nodes: ctx.expected_total_nodes,
-                    keys: ctx.keys.clone(),
-                    peer_keys: ctx.peer_keys.clone(),
-                    send_keys: ctx.send_keys.clone(),
-                    recv_keys: ctx.recv_keys.clone(),
-                    mode: ctx.mode,
-                    compress: ctx.compress,
-                    profile: ctx.profile.clone(),
-                    transport: ctx.transport.clone(),
-                    math: ctx.math.clone(),
-                    rng: Mutex::new(Box::new(DeterministicRng::seed(
-                        self.cfg.seed.unwrap_or(0) ^ (round << 24) ^ ctx.node,
-                    )) as Box<dyn SecureRng + Send>),
-                    aggregation_timeout: ctx.aggregation_timeout,
-                    single_seed_mask: ctx.single_seed_mask,
-                    initial_initiator: chain[0],
-                    stagger_delay: self.cfg.stagger_step.mul_f64(pos as f64),
-                })
-            } else {
-                ctx.clone()
-            };
-            let local = inputs[(ctx.node - 1) as usize].clone();
-            let faults = faults.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("learner-{}", ctx.node))
-                    .spawn(move || run_learner(&ctx, &local, &faults))?,
-            );
+
+        // Fan out one per-round context fork to every active actor.
+        let mut active = Vec::with_capacity(total_active);
+        for (gid, chain) in &chains {
+            for (pos, &node) in chain.iter().enumerate() {
+                let master = self.master_context(node)?;
+                let mut ctx = master.fork(self.round_rng(node, epoch));
+                ctx.group = *gid;
+                ctx.chain = chain.clone();
+                ctx.expected_total_nodes = total_active;
+                ctx.epoch = epoch;
+                ctx.initial_initiator = chain[0];
+                ctx.stagger_delay = self.cfg.stagger_step.mul_f64(pos as f64);
+                actors
+                    .get(&node)
+                    .with_context(|| format!("no actor for node {node}"))?
+                    .dispatch(Arc::new(ctx), inputs[(node - 1) as usize].clone(), faults.clone())?;
+                active.push(node);
+            }
         }
-        let mut outcomes = Vec::new();
-        for h in handles {
-            outcomes.push(h.join().map_err(|_| anyhow::anyhow!("learner panicked"))??);
+        let mut outcomes = Vec::with_capacity(self.cfg.n_nodes);
+        for &node in &active {
+            outcomes.push(actors[&node].collect()?);
         }
+        // Churned-out nodes are dead for this round's bookkeeping.
+        for (_, chain) in &self.cfg.group_chains() {
+            for &node in chain {
+                if !active.contains(&node) {
+                    outcomes.push(LearnerOutcome::absent(node));
+                }
+            }
+        }
+        outcomes.sort_by_key(|o| o.node);
         let wall_time = watch.elapsed();
-        monitor.stop();
 
         // Validate agreement: every survivor holds the same average.
         let survivors: Vec<&LearnerOutcome> = outcomes.iter().filter(|o| !o.died).collect();
@@ -466,9 +575,10 @@ impl SafeSession {
         }
         // The monitor's periodic pings are operational, not protocol,
         // traffic — exclude them from the message count like the paper's
-        // formulas do.
+        // formulas do. Rekey traffic is reported separately (footnote 3:
+        // key exchange is not per-aggregation) but stays in `per_path`.
         let monitor_msgs = per_path.remove(proto::PROGRESS_CHECK).unwrap_or(0);
-        let messages = self.stats.total() - baseline_msgs - monitor_msgs;
+        let messages = self.stats.total() - baseline_msgs - monitor_msgs - rekey_messages;
 
         // Each group's initiator reports its group's contributor count;
         // sum across groups (one initiator per group).
@@ -490,11 +600,185 @@ impl SafeSession {
             bytes_received: self.stats.bytes_received() - baseline_recv,
             average: reference.clone(),
             contributors,
-            progress_failovers: monitor.reposts(),
+            progress_failovers: monitor.reposts() - reposts_before,
             initiator_failovers: outcomes.iter().map(|o| o.restarts).max().unwrap_or(0),
+            rekey_messages,
             per_path,
         };
         Ok(SafeRoundResult { metrics, outcomes })
+    }
+
+    /// Re-run the key exchange for nodes rejoining this round. Only key
+    /// material *involving a rejoiner* moves: the rejoiner re-registers
+    /// its public key and re-fetches its configured peers'; each active
+    /// peer re-fetches the rejoiner's key; under §5.8 pre-negotiation,
+    /// every symmetric key on a link touching a rejoiner is regenerated
+    /// and re-pulled. Links between surviving nodes keep their existing
+    /// keys — that reuse is the multi-round engine's amortization win.
+    fn rekey_rejoiners(
+        &self,
+        rejoiners: &[u64],
+        chains: &[(u64, Vec<u64>)],
+        epoch: u64,
+    ) -> Result<()> {
+        use crate::blob::Blob;
+        let full_chains = self.cfg.group_chains();
+        // Phase A: rejoiners re-register + re-fetch peer public keys.
+        for &j in rejoiners {
+            let master = self.master_context(j)?;
+            let full = full_chains
+                .iter()
+                .find(|(_, c)| c.contains(&j))
+                .context("rejoiner not in any configured group")?
+                .1
+                .clone();
+            let kp = keypair_for(self.cfg.seed, j, self.cfg.rsa_bits);
+            master.transport.call(
+                proto::REGISTER_KEY,
+                &proto::RegisterKey { node: j, key: kp.public.to_json() }.to_value(),
+            )?;
+            let mut peer_keys = BTreeMap::new();
+            for &peer in &full {
+                if peer == j {
+                    continue;
+                }
+                let resp = master
+                    .transport
+                    .call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
+                let delivery = proto::KeyDelivery::from_value(&resp)?;
+                peer_keys.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
+            }
+            let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x5eed));
+            ctx.keys = Arc::new(kp);
+            ctx.peer_keys = Arc::new(peer_keys);
+            ctx.chain = full;
+            self.replace_context(ctx);
+        }
+        // Active peers re-fetch each rejoiner's (possibly new) public key.
+        for (_, chain) in chains {
+            for &j in rejoiners {
+                if !chain.contains(&j) {
+                    continue;
+                }
+                for &peer in chain {
+                    if peer == j || rejoiners.contains(&peer) {
+                        continue; // rejoiners already refreshed in phase A
+                    }
+                    let master = self.master_context(peer)?;
+                    let resp = master
+                        .transport
+                        .call(proto::GET_KEY, &proto::GetKey { node: j }.to_value())?;
+                    let delivery = proto::KeyDelivery::from_value(&resp)?;
+                    // Clone-on-write: only rekey ever rebuilds a key map.
+                    let mut pk = (*master.peer_keys).clone();
+                    pk.insert(j, RsaPublicKey::from_json(&delivery.key)?);
+                    let mut ctx = master.fork(self.round_rng(peer, epoch ^ 0xbee));
+                    ctx.peer_keys = Arc::new(pk);
+                    self.replace_context(ctx);
+                }
+            }
+        }
+        if self.cfg.mode != CipherMode::PreNegotiated {
+            return Ok(());
+        }
+        // Phase B (§5.8 sessions): refresh the symmetric keys on every
+        // link touching a rejoiner.
+        // B1: each rejoiner generates fresh receive-keys for all its
+        // configured peers and posts them sealed.
+        for &j in rejoiners {
+            let master = self.master_context(j)?;
+            let mut sealed = BTreeMap::new();
+            let mut mine = BTreeMap::new();
+            {
+                let mut rng = master.rng.lock().unwrap();
+                for &peer in &master.chain {
+                    if peer == j {
+                        continue;
+                    }
+                    let k = SymmetricKey::generate(rng.as_mut());
+                    let s = master.peer_keys[&peer].encrypt_block(&k.master, rng.as_mut())?;
+                    sealed.insert(peer, Blob::new(s));
+                    mine.insert(peer, k);
+                }
+            }
+            master.transport.call(
+                proto::POST_PRENEG_KEYS,
+                &proto::PostPrenegKeys { node: j, keys: sealed }.to_value(),
+            )?;
+            let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x1a));
+            ctx.recv_keys = Arc::new(mine);
+            self.replace_context(ctx);
+        }
+        // B2: each active peer regenerates its receive-key for the
+        // rejoiner, posts it, and pulls the rejoiner's fresh key for
+        // itself.
+        for (_, chain) in chains {
+            for &j in rejoiners {
+                if !chain.contains(&j) {
+                    continue;
+                }
+                for &peer in chain {
+                    if peer == j || rejoiners.contains(&peer) {
+                        // Fellow rejoiners regenerate in B1 / pull in B3;
+                        // regenerating here would desync the key versions.
+                        continue;
+                    }
+                    let master = self.master_context(peer)?;
+                    let (sealed, k) = {
+                        let mut rng = master.rng.lock().unwrap();
+                        let k = SymmetricKey::generate(rng.as_mut());
+                        let s = master.peer_keys[&j].encrypt_block(&k.master, rng.as_mut())?;
+                        (Blob::new(s), k)
+                    };
+                    master.transport.call(
+                        proto::POST_PRENEG_KEYS,
+                        &proto::PostPrenegKeys {
+                            node: peer,
+                            keys: BTreeMap::from([(j, sealed)]),
+                        }
+                        .to_value(),
+                    )?;
+                    let resp = master.transport.call(
+                        proto::GET_PRENEG_KEY,
+                        &proto::GetPrenegKey { node: peer, owner: j }.to_value(),
+                    )?;
+                    let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
+                    let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+                    let mut recv = (*master.recv_keys).clone();
+                    recv.insert(j, k);
+                    let mut send = (*master.send_keys).clone();
+                    send.insert(j, SymmetricKey::from_bytes(&m)?);
+                    let mut ctx = master.fork(self.round_rng(peer, epoch ^ 0x2b));
+                    ctx.recv_keys = Arc::new(recv);
+                    ctx.send_keys = Arc::new(send);
+                    self.replace_context(ctx);
+                }
+            }
+        }
+        // B3: each rejoiner pulls every active peer's fresh key for it.
+        for &j in rejoiners {
+            let Some((_, chain)) = chains.iter().find(|(_, c)| c.contains(&j)) else {
+                continue;
+            };
+            let master = self.master_context(j)?;
+            let mut send_keys = (*master.send_keys).clone();
+            for &peer in chain {
+                if peer == j {
+                    continue;
+                }
+                let resp = master.transport.call(
+                    proto::GET_PRENEG_KEY,
+                    &proto::GetPrenegKey { node: j, owner: peer }.to_value(),
+                )?;
+                let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
+                let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+                send_keys.insert(peer, SymmetricKey::from_bytes(&m)?);
+            }
+            let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x3c));
+            ctx.send_keys = Arc::new(send_keys);
+            self.replace_context(ctx);
+        }
+        Ok(())
     }
 }
 
@@ -615,6 +899,76 @@ mod tests {
         // §5.5: one extra message per group (initiators pull the global
         // average): (4n) + g.
         assert_eq!(result.metrics.messages, 4 * 9 + 3);
+    }
+
+    #[test]
+    fn run_rounds_reuses_keys_and_resets_state_between_rounds() {
+        let mut cfg = quick_cfg(4, 2, CipherMode::Hybrid);
+        cfg.poll_time = Duration::from_secs(5);
+        let session = SafeSession::new(cfg).unwrap();
+        let ins = inputs(4, 2);
+        let per_round: Vec<Vec<Vec<f64>>> = (0..3).map(|_| ins.clone()).collect();
+        let results = session.run_rounds(&per_round, &ChurnSchedule::none()).unwrap();
+        assert_eq!(results.len(), 3);
+        let expect = expected_average(&ins);
+        for (i, r) in results.iter().enumerate() {
+            for (a, e) in r.average().unwrap().iter().zip(&expect) {
+                assert!((a - e).abs() < 1e-6, "round {i}: {a} vs {e}");
+            }
+            // §5.2 accounting holds every round — the round-epoch reset is
+            // clean and costs no protocol messages.
+            assert_eq!(r.metrics.messages, 4 * 4, "round {i}");
+            assert_eq!(r.metrics.rekey_messages, 0, "round {i}");
+            // Keys were exchanged once at session build; no key traffic in
+            // any round.
+            for path in [proto::REGISTER_KEY, proto::GET_KEY, proto::GET_PRENEG_KEY] {
+                assert!(
+                    !r.metrics.per_path.contains_key(path),
+                    "round {i}: unexpected {path} traffic"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn run_rounds_empty_input_is_empty_output() {
+        let session = SafeSession::new(quick_cfg(3, 1, CipherMode::None)).unwrap();
+        assert!(session.run_rounds(&[], &ChurnSchedule::none()).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_rounds_die_then_rejoin_rekeys_only_the_returner() {
+        let mut cfg = quick_cfg(5, 1, CipherMode::Hybrid);
+        cfg.poll_time = Duration::from_secs(5);
+        cfg.progress_timeout = Duration::from_millis(300);
+        let session = SafeSession::new(cfg).unwrap();
+        let ins = inputs(5, 1);
+        let per_round: Vec<Vec<Vec<f64>>> = (0..3).map(|_| ins.clone()).collect();
+        let churn = ChurnSchedule::none()
+            .die(4, 1, crate::learner::faults::FailPoint::NeverStart)
+            .rejoin(4, 3);
+        let results = session.run_rounds(&per_round, &churn).unwrap();
+        assert_eq!(results.len(), 3);
+        // Round 1: node 4 dies mid-round → failover, 4 contributors.
+        assert_eq!(results[0].metrics.contributors, 4);
+        assert_eq!(results[0].metrics.progress_failovers, 1);
+        // Round 2: chain re-formed without node 4 — clean 4-node round.
+        assert_eq!(results[1].metrics.contributors, 4);
+        assert_eq!(results[1].metrics.progress_failovers, 0);
+        assert_eq!(results[1].metrics.messages, 4 * 4);
+        assert_eq!(results[1].metrics.rekey_messages, 0);
+        // Round 3: node 4 rejoined — full membership again, and only its
+        // key material moved: 1 register + 4 fetches by node 4 + 4 peers
+        // re-fetching node 4's key.
+        assert_eq!(results[2].metrics.contributors, 5);
+        assert_eq!(results[2].metrics.messages, 4 * 5);
+        assert_eq!(results[2].metrics.rekey_messages, 1 + 4 + 4);
+        assert_eq!(results[2].metrics.per_path.get(proto::REGISTER_KEY), Some(&1));
+        assert_eq!(results[2].metrics.per_path.get(proto::GET_KEY), Some(&8));
+        let expect_r2: f64 = (1.0 + 2.0 + 3.0 + 5.0) / 4.0;
+        assert!((results[1].average().unwrap()[0] - expect_r2).abs() < 1e-6);
+        let expect_r3: f64 = (1.0 + 2.0 + 3.0 + 4.0 + 5.0) / 5.0;
+        assert!((results[2].average().unwrap()[0] - expect_r3).abs() < 1e-6);
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! Failure-injection matrix: every fault point × position combination the
 //! protocol must survive (§5.3/§5.4), plus multi-failure and adjacent-
-//! failure cases the paper calls out as the hard ones.
+//! failure cases the paper calls out as the hard ones — and the
+//! multi-round churn matrix (die in round r / rejoin in round r+k /
+//! die-rejoin-die) that the session engine must survive with correct
+//! per-round averages, per-round failover counts, and no key re-exchange
+//! for surviving nodes.
 
 use std::time::Duration;
 
 use safe_agg::config::{DeviceProfile, SessionConfig};
 use safe_agg::crypto::envelope::CipherMode;
-use safe_agg::learner::faults::{FailPoint, FaultPlan};
-use safe_agg::protocols::SafeSession;
+use safe_agg::learner::faults::{ChurnSchedule, FailPoint, FaultPlan};
+use safe_agg::proto;
+use safe_agg::protocols::{SafeRoundResult, SafeSession};
 
 fn cfg(n: usize) -> SessionConfig {
     SessionConfig {
@@ -147,6 +152,158 @@ fn initiator_crash_plus_noninitiator_failure() {
     let expect = (2 + 3 + 5 + 6) as f64 / 4.0;
     assert!((result.average().unwrap()[0] - expect).abs() < 1e-6);
     assert_eq!(result.metrics.contributors, 4);
+}
+
+// ---- multi-round churn matrix (SafeSession::run_rounds) ----
+
+/// Churn tests assert exact `4n`-family message counts, which only hold
+/// when long polls never retry — so the poll budget is generous (§5.2's
+/// "one REST call = one message" accounting).
+fn churn_cfg(n: usize) -> SessionConfig {
+    SessionConfig { poll_time: Duration::from_secs(5), ..cfg(n) }
+}
+
+fn run_churn(n: usize, rounds: usize, churn: &ChurnSchedule) -> Vec<SafeRoundResult> {
+    let session = SafeSession::new(churn_cfg(n)).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..rounds).map(|_| inputs(n)).collect();
+    session.run_rounds(&per_round, churn).unwrap()
+}
+
+fn assert_round_mean(results: &[SafeRoundResult], round: usize, n: usize, dead: &[u64]) {
+    let got = results[round - 1].average().unwrap()[0];
+    let want = expect_mean(n, dead);
+    assert!(
+        (got - want).abs() < 1e-6,
+        "round {round}: got {got} want {want} (dead {dead:?})"
+    );
+    assert_eq!(
+        results[round - 1].metrics.contributors,
+        (n - dead.len()) as u64,
+        "round {round} contributors"
+    );
+}
+
+/// No key traffic at all in a round (keys were exchanged once and reused).
+fn assert_no_key_traffic(r: &SafeRoundResult, round: usize) {
+    assert_eq!(r.metrics.rekey_messages, 0, "round {round} rekey count");
+    for path in [
+        proto::REGISTER_KEY,
+        proto::GET_KEY,
+        proto::POST_PRENEG_KEYS,
+        proto::GET_PRENEG_KEY,
+    ] {
+        assert!(
+            !r.metrics.per_path.contains_key(path),
+            "round {round}: survivors' keys must not be re-exchanged ({path})"
+        );
+    }
+}
+
+#[test]
+fn churn_die_round1_rejoin_round3() {
+    // The acceptance scenario: node 4 dies in round 1, the chain re-forms
+    // without it in round 2, and it returns (with a re-key for it alone)
+    // in round 3.
+    let n = 6;
+    let churn = ChurnSchedule::none().die(4, 1, FailPoint::NeverStart).rejoin(4, 3);
+    let results = run_churn(n, 4, &churn);
+    assert_eq!(results.len(), 4);
+    assert_round_mean(&results, 1, n, &[4]);
+    assert_round_mean(&results, 2, n, &[4]);
+    assert_round_mean(&results, 3, n, &[]);
+    assert_round_mean(&results, 4, n, &[]);
+    // Round 1 pays the in-round failover; round 2's re-formed chain is
+    // failure-free and back to the 4n floor.
+    assert_eq!(results[0].metrics.progress_failovers, 1);
+    assert_eq!(results[0].metrics.messages, 4 * 5 + 2);
+    assert_eq!(results[1].metrics.progress_failovers, 0);
+    assert_eq!(results[1].metrics.messages, 4 * 5);
+    // Rounds without a rejoin exchange no keys at all.
+    for (i, r) in results.iter().enumerate() {
+        if i != 2 {
+            assert_no_key_traffic(r, i + 1);
+        }
+    }
+    // Round 3: exactly the returning node's key material moved — node 4
+    // re-registers (1) and re-fetches its 5 peers; the 5 survivors
+    // re-fetch node 4's key.
+    let r3 = &results[2].metrics;
+    assert_eq!(r3.per_path.get(proto::REGISTER_KEY), Some(&1));
+    assert_eq!(r3.per_path.get(proto::GET_KEY), Some(&(5 + 5)));
+    assert_eq!(r3.rekey_messages, 1 + 5 + 5);
+    assert_eq!(r3.messages, 4 * 6, "rekey must not leak into the 4n count");
+}
+
+#[test]
+fn churn_die_rejoin_die() {
+    // Node 3 dies in round 1, returns in round 2, dies again (mid-chain,
+    // after pulling its aggregate) in round 3, and is absent in round 4.
+    let n = 6;
+    let churn = ChurnSchedule::none()
+        .die(3, 1, FailPoint::NeverStart)
+        .rejoin(3, 2)
+        .die(3, 3, FailPoint::AfterGet);
+    let results = run_churn(n, 4, &churn);
+    assert_round_mean(&results, 1, n, &[3]);
+    assert_round_mean(&results, 2, n, &[]);
+    assert_round_mean(&results, 3, n, &[3]);
+    assert_round_mean(&results, 4, n, &[3]);
+    // Per-round failover counts: in-round deaths cost a repost; absence
+    // (already re-formed chain) costs nothing.
+    assert_eq!(results[0].metrics.progress_failovers, 1);
+    assert_eq!(results[1].metrics.progress_failovers, 0);
+    assert_eq!(results[2].metrics.progress_failovers, 1);
+    assert_eq!(results[3].metrics.progress_failovers, 0);
+    assert!(results[1].metrics.rekey_messages > 0, "rejoin round re-keys");
+    assert_no_key_traffic(&results[0], 1);
+    assert_no_key_traffic(&results[2], 3);
+    assert_no_key_traffic(&results[3], 4);
+}
+
+#[test]
+fn churn_preneg_rekey_touches_only_rejoiner_links() {
+    // §5.8 pre-negotiated mode: a rejoin refreshes every symmetric key on
+    // links touching the rejoiner — and nothing between survivors.
+    let n = 5;
+    let mut c = churn_cfg(n);
+    c.mode = CipherMode::PreNegotiated;
+    let session = SafeSession::new(c).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..3).map(|_| inputs(n)).collect();
+    let churn = ChurnSchedule::none().die(5, 1, FailPoint::NeverStart).rejoin(5, 3);
+    let results = session.run_rounds(&per_round, &churn).unwrap();
+    assert_round_mean(&results, 1, n, &[5]);
+    assert_round_mean(&results, 2, n, &[5]);
+    assert_round_mean(&results, 3, n, &[]);
+    assert_no_key_traffic(&results[0], 1);
+    assert_no_key_traffic(&results[1], 2);
+    let r3 = &results[2].metrics;
+    // RSA layer: 1 re-register + 4 fetches by node 5 + 4 peer re-fetches.
+    assert_eq!(r3.per_path.get(proto::REGISTER_KEY), Some(&1));
+    assert_eq!(r3.per_path.get(proto::GET_KEY), Some(&8));
+    // Symmetric layer: node 5 posts once and pulls 4; each of the 4 peers
+    // posts its fresh key for node 5 and pulls node 5's key for it.
+    assert_eq!(r3.per_path.get(proto::POST_PRENEG_KEYS), Some(&5));
+    assert_eq!(r3.per_path.get(proto::GET_PRENEG_KEY), Some(&8));
+    assert_eq!(r3.rekey_messages, 9 + 13);
+    assert_eq!(r3.messages, 4 * 5);
+}
+
+#[test]
+fn churn_absence_window_respects_privacy_floor() {
+    // Nodes 3 and 4 die *after posting* in round 1 (their values count,
+    // the chain completes cleanly) — but the re-formed round-2 chain
+    // would have only 2 live nodes, which §5.3's privacy floor forbids.
+    // The engine must refuse the round up front, not hang in it.
+    let churn = ChurnSchedule::none()
+        .die(3, 1, FailPoint::AfterPost)
+        .die(4, 1, FailPoint::AfterPost);
+    let session = SafeSession::new(cfg(4)).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..2).map(|_| inputs(4)).collect();
+    let err = session.run_rounds(&per_round, &churn).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("privacy floor"),
+        "round 2 with 2 live nodes must abort: {err:#}"
+    );
 }
 
 #[test]
