@@ -79,6 +79,13 @@ pub struct SessionConfig {
     /// "randomize the order between each round to limit the likelihood of
     /// two colluding nodes being able to get useful data").
     pub shuffle_chain_each_round: bool,
+    /// Privacy-floor re-balancing (`--merge-floor on|off`, default on):
+    /// when churn leaves a group with fewer than 3 live nodes, the
+    /// topology planner merges its survivors into the smallest
+    /// neighbouring group (only moved nodes re-key) instead of aborting.
+    /// The abort path remains when the *total* live population drops
+    /// below 3, or when this is off.
+    pub merge_floor: bool,
 }
 
 impl Default for SessionConfig {
@@ -102,6 +109,7 @@ impl Default for SessionConfig {
             seed: Some(42),
             stagger_step: Duration::ZERO,
             shuffle_chain_each_round: false,
+            merge_floor: true,
         }
     }
 }
@@ -109,24 +117,19 @@ impl Default for SessionConfig {
 impl SessionConfig {
     /// Split nodes 1..=n into `groups` chains round-robin-free (contiguous
     /// blocks, like the paper's 2×6 / 3×4 / 4×3 groupings).
+    ///
+    /// Deprecated shim: group/chain planning is now the topology
+    /// subsystem's job. This delegates to
+    /// [`GroupPlanner::even_split`](crate::topology::GroupPlanner::even_split)
+    /// and returns the *configured* membership only — per-round state
+    /// (churn re-formation, shuffling, privacy-floor merges) lives in
+    /// [`GroupPlanner::plan_round`](crate::topology::GroupPlanner::plan_round).
+    #[deprecated(
+        note = "use topology::GroupPlanner (base_plan / plan_round); this \
+                shim only reflects the static configured split"
+    )]
     pub fn group_chains(&self) -> Vec<(u64, Vec<u64>)> {
-        let per = (self.n_nodes + self.groups - 1) / self.groups;
-        let mut out = Vec::new();
-        let mut next = 1u64;
-        for g in 0..self.groups {
-            let mut chain = Vec::new();
-            for _ in 0..per {
-                if next as usize > self.n_nodes {
-                    break;
-                }
-                chain.push(next);
-                next += 1;
-            }
-            if !chain.is_empty() {
-                out.push(((g + 1) as u64, chain));
-            }
-        }
-        out
+        crate::topology::GroupPlanner::even_split(self.n_nodes, self.groups)
     }
 
     /// Effective vector length on the wire (weighted adds one feature).
@@ -214,12 +217,20 @@ impl Args {
         if let Some(s) = self.get("seed") {
             cfg.seed = s.parse().ok();
         }
+        if let Some(v) = self.get("merge-floor") {
+            cfg.merge_floor = matches!(v, "on" | "true" | "1" | "yes");
+        }
+        cfg.shuffle_chain_each_round =
+            cfg.shuffle_chain_each_round || self.get_bool("shuffle-chain");
         cfg
     }
 }
 
 #[cfg(test)]
 mod tests {
+    // The deprecated `group_chains` shim stays pinned by these tests
+    // until external callers migrate to topology::GroupPlanner.
+    #![allow(deprecated)]
     use super::*;
 
     #[test]
@@ -284,6 +295,16 @@ mod tests {
         assert_eq!(a.to_session_config().wire, WireFormat::Json);
         let a = Args::parse(["run", "--wire", "bogus"].iter().map(|s| s.to_string()));
         assert_eq!(a.to_session_config().wire, WireFormat::Json);
+    }
+
+    #[test]
+    fn merge_floor_flag() {
+        let a = Args::parse(["run"].iter().map(|s| s.to_string()));
+        assert!(a.to_session_config().merge_floor, "merging is the default");
+        let a = Args::parse(["run", "--merge-floor", "off"].iter().map(|s| s.to_string()));
+        assert!(!a.to_session_config().merge_floor);
+        let a = Args::parse(["run", "--merge-floor=on"].iter().map(|s| s.to_string()));
+        assert!(a.to_session_config().merge_floor);
     }
 
     #[test]

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 use crate::blob::Blob;
 use crate::json::Value;
 use crate::proto;
+use crate::topology::Reassignment;
 use crate::transport::Handler;
 use state::{CheckStatus, GroupState, PostedAggregate};
 
@@ -62,6 +63,13 @@ pub(crate) struct Inner {
     /// which resets per-round chain state while keys/stats/HTTP survive.
     /// Posts carrying an older epoch are rejected as `stale_epoch`.
     pub epoch: u64,
+    /// Privacy-floor merging enabled for the current session (set by
+    /// `begin_round`): a mid-round floor violation answers `merge_groups`
+    /// instead of `abort_privacy_floor` while another group exists.
+    pub merge_floor: bool,
+    /// The current round's topology merge deltas, as announced by
+    /// `begin_round` (surfaced via `/status`).
+    pub reassigned: Vec<Reassignment>,
     /// Node → serialized RSA public key (round 0 registry).
     pub keys: BTreeMap<u64, Value>,
     /// (owner, for_node) → RSA-sealed symmetric key blob (§5.8). Stored
@@ -90,6 +98,8 @@ impl Controller {
                 groups: BTreeMap::new(),
                 expected_groups: BTreeSet::new(),
                 epoch: 0,
+                merge_floor: false,
+                reassigned: Vec::new(),
                 keys: BTreeMap::new(),
                 preneg: BTreeMap::new(),
                 insec: insec::InsecState::default(),
@@ -171,6 +181,8 @@ impl Controller {
             // clock so a fresh session against a long-lived controller
             // isn't rejected as stale by a previous session's epochs.
             inner.epoch = 0;
+            inner.merge_floor = false;
+            inner.reassigned.clear();
             inner.groups.clear();
             inner.expected_groups.clear();
             for (gid_str, chain_v) in groups {
@@ -227,6 +239,8 @@ impl Controller {
             return proto::status("stale_epoch");
         }
         inner.epoch = req.epoch;
+        inner.merge_floor = req.merge_floor;
+        inner.reassigned = req.reassigned;
         inner.groups.clear();
         inner.expected_groups.clear();
         for (gid, chain) in req.groups {
@@ -243,6 +257,8 @@ impl Controller {
     fn reset(&self) -> Value {
         let mut inner = self.inner.lock().unwrap();
         inner.epoch = 0;
+        inner.merge_floor = false;
+        inner.reassigned.clear();
         inner.groups.clear();
         inner.expected_groups.clear();
         inner.keys.clear();
@@ -433,6 +449,15 @@ impl Controller {
     fn progress_check(&self) -> Value {
         let mut inner = self.inner.lock().unwrap();
         let progress_timeout = inner.config.progress_timeout;
+        // Other groups' live populations, for picking a merge target when
+        // a group trips the privacy floor mid-round (computed up front so
+        // the per-group loop can borrow groups mutably).
+        let live_sizes: Vec<(u64, usize)> = inner
+            .groups
+            .iter()
+            .map(|(gid, gs)| (*gid, gs.live_count()))
+            .collect();
+        let merge_floor = inner.merge_floor;
         let mut actions = Vec::new();
         for (gid, gs) in inner.groups.iter_mut() {
             if gs.average.is_some() {
@@ -449,12 +474,37 @@ impl Controller {
             }
             if gs.live_count() <= 3 {
                 // Dropping below 3 live nodes would let neighbours infer
-                // each other's values (§5.3: need n − f ≥ 3).
-                actions.push(Value::object(vec![
-                    ("group", Value::from(*gid)),
-                    ("action", Value::from("abort_privacy_floor")),
-                    ("failed", Value::from(failed)),
-                ]));
+                // each other's values (§5.3: need n − f ≥ 3). With
+                // privacy-floor merging enabled, answer `merge_groups`
+                // naming the smallest group that can actually absorb the
+                // survivors and restore the floor (the engine's planner
+                // performs the merge at the next re-plan).
+                // `abort_privacy_floor` remains the fallback when no such
+                // group exists — merging with a dead or equally-starved
+                // group cannot restore the floor.
+                let survivors = gs.live_count().saturating_sub(1);
+                let target = if merge_floor {
+                    live_sizes
+                        .iter()
+                        .filter(|(g, live)| g != gid && *live > 0 && live + survivors >= 3)
+                        .min_by_key(|(g, live)| (*live, *g))
+                        .map(|(g, _)| *g)
+                } else {
+                    None
+                };
+                match target {
+                    Some(into) => actions.push(Value::object(vec![
+                        ("group", Value::from(*gid)),
+                        ("action", Value::from("merge_groups")),
+                        ("failed", Value::from(failed)),
+                        ("into", Value::from(into)),
+                    ])),
+                    None => actions.push(Value::object(vec![
+                        ("group", Value::from(*gid)),
+                        ("action", Value::from("abort_privacy_floor")),
+                        ("failed", Value::from(failed)),
+                    ])),
+                }
                 continue;
             }
             gs.failed.insert(failed);
@@ -552,6 +602,8 @@ impl Controller {
             ("groups", Value::Arr(groups)),
             ("keys_registered", Value::from(inner.keys.len())),
             ("epoch", Value::from(inner.epoch)),
+            ("merge_floor", Value::from(inner.merge_floor)),
+            ("reassigned_this_round", Value::from(inner.reassigned.len())),
         ])
     }
 }
@@ -896,10 +948,10 @@ mod tests {
         c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));
         c.handle(proto::POST_AVERAGE, &proto::post_average(1, 1, &[2.0], 3));
 
-        let br = proto::BeginRound {
-            epoch: 1,
-            groups: std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
-        };
+        let br = proto::BeginRound::new(
+            1,
+            std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
+        );
         let r = c.handle(proto::BEGIN_ROUND, &br.to_value());
         assert_eq!(r.str_of("status"), Some("ok"));
         // Mailbox and average are gone.
@@ -918,7 +970,7 @@ mod tests {
         // Epoch surfaced in status; rewinding the epoch is rejected.
         let st = c.handle(proto::STATUS, &Value::obj());
         assert_eq!(st.u64_of("epoch"), Some(1));
-        let old = proto::BeginRound { epoch: 0, groups: Default::default() };
+        let old = proto::BeginRound::new(0, Default::default());
         assert_eq!(
             c.handle(proto::BEGIN_ROUND, &old.to_value()).str_of("status"),
             Some("stale_epoch")
@@ -926,12 +978,78 @@ mod tests {
     }
 
     #[test]
+    fn privacy_floor_answers_merge_groups_when_mergeable() {
+        // Two 3-node groups, merge_floor on (via begin_round). Group 1
+        // loses a node mid-round → merge_groups naming the smallest other
+        // group, not abort_privacy_floor.
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            progress_timeout: Duration::from_millis(80),
+            ..Default::default()
+        };
+        let c = Controller::new(cfg);
+        let br = proto::BeginRound {
+            epoch: 1,
+            groups: std::collections::BTreeMap::from([
+                (1u64, vec![1u64, 2, 3]),
+                (2u64, vec![4u64, 5, 6]),
+            ]),
+            merge_floor: true,
+            reassigned: vec![],
+        };
+        c.handle(proto::BEGIN_ROUND, &br.to_value());
+        let mut post = proto::post_aggregate(1, 2, b"a1", 1);
+        post.set("epoch", Value::from(1u64));
+        c.handle(proto::POST_AGGREGATE, &post);
+        std::thread::sleep(Duration::from_millis(120));
+        let r = c.handle(proto::PROGRESS_CHECK, &Value::obj());
+        let actions = r.get("actions").unwrap().as_arr().unwrap();
+        assert_eq!(actions.len(), 1);
+        assert_eq!(actions[0].str_of("action"), Some("merge_groups"));
+        assert_eq!(actions[0].u64_of("group"), Some(1));
+        assert_eq!(actions[0].u64_of("failed"), Some(2));
+        assert_eq!(actions[0].u64_of("into"), Some(2));
+        // Status surfaces the session's merge capability.
+        let st = c.handle(proto::STATUS, &Value::obj());
+        assert_eq!(st.bool_of("merge_floor"), Some(true));
+    }
+
+    #[test]
+    fn privacy_floor_aborts_when_no_group_can_absorb() {
+        // merge_floor is on, but the only other group has nobody live —
+        // merging cannot restore the floor, so the fallback must be
+        // abort_privacy_floor, not a merge_groups naming a dead group.
+        let cfg = ControllerConfig {
+            poll_time: Duration::from_millis(100),
+            progress_timeout: Duration::from_millis(80),
+            ..Default::default()
+        };
+        let c = Controller::new(cfg);
+        let br = proto::BeginRound {
+            epoch: 1,
+            groups: std::collections::BTreeMap::from([
+                (1u64, vec![1u64, 2, 3]),
+                (2u64, vec![]),
+            ]),
+            merge_floor: true,
+            reassigned: vec![],
+        };
+        c.handle(proto::BEGIN_ROUND, &br.to_value());
+        c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));
+        std::thread::sleep(Duration::from_millis(120));
+        let r = c.handle(proto::PROGRESS_CHECK, &Value::obj());
+        let actions = r.get("actions").unwrap().as_arr().unwrap();
+        assert_eq!(actions.len(), 1);
+        assert_eq!(actions[0].str_of("action"), Some("abort_privacy_floor"));
+    }
+
+    #[test]
     fn stale_epoch_posts_rejected() {
         let c = controller();
-        let br = proto::BeginRound {
-            epoch: 2,
-            groups: std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
-        };
+        let br = proto::BeginRound::new(
+            2,
+            std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
+        );
         c.handle(proto::BEGIN_ROUND, &br.to_value());
         // A straggler from epoch 1 is refused; the current epoch lands.
         let mut stale = proto::post_aggregate(1, 2, b"old", 1);

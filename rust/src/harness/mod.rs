@@ -7,6 +7,7 @@
 
 pub mod figures;
 pub mod multiround;
+pub mod scale;
 
 use std::fmt::Write as _;
 use std::io::Write as _;
@@ -194,6 +195,8 @@ mod tests {
                 progress_failovers: 0,
                 initiator_failovers: 0,
                 rekey_messages: 0,
+                merged_groups: 0,
+                reassigned_nodes: 0,
                 per_path: Default::default(),
             })
             .collect()

@@ -29,11 +29,15 @@ pub struct RoundRow {
     pub secs: f64,
     /// Protocol messages this round (monitor + rekey excluded).
     pub messages: u64,
-    /// Key re-exchange messages (nonzero only on rejoin rounds).
+    /// Key re-exchange messages (nonzero only on rejoin or merge rounds).
     pub rekey_messages: u64,
     pub contributors: u64,
     pub progress_failovers: u64,
     pub initiator_failovers: u64,
+    /// Groups dissolved by privacy-floor merge re-balancing this round.
+    pub merged_groups: u64,
+    /// Nodes aggregated outside their home group this round.
+    pub reassigned_nodes: u64,
 }
 
 impl RoundRow {
@@ -69,6 +73,8 @@ impl MultiRoundReport {
                     contributors: m.contributors,
                     progress_failovers: m.progress_failovers,
                     initiator_failovers: m.initiator_failovers,
+                    merged_groups: m.merged_groups,
+                    reassigned_nodes: m.reassigned_nodes,
                 })
                 .collect(),
         }
@@ -91,13 +97,22 @@ impl MultiRoundReport {
         let _ = writeln!(out, "── {} — per-round failover cost ──", self.id);
         let _ = writeln!(
             out,
-            "{:>5} {:>9} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7}",
-            "round", "secs", "messages", "extra", "rekey", "contributors", "progress_f", "init_f"
+            "{:>5} {:>9} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7} {:>7} {:>10}",
+            "round",
+            "secs",
+            "messages",
+            "extra",
+            "rekey",
+            "contributors",
+            "progress_f",
+            "init_f",
+            "merges",
+            "reassigned"
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{:>5} {:>9.4} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7}",
+                "{:>5} {:>9.4} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7} {:>7} {:>10}",
                 r.round,
                 r.secs,
                 r.messages,
@@ -105,7 +120,9 @@ impl MultiRoundReport {
                 r.rekey_messages,
                 r.contributors,
                 r.progress_failovers,
-                r.initiator_failovers
+                r.initiator_failovers,
+                r.merged_groups,
+                r.reassigned_nodes
             );
         }
         let _ = writeln!(
@@ -123,12 +140,12 @@ impl MultiRoundReport {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "id,round,secs,messages,failover_extra,rekey_messages,contributors,\
-             progress_failovers,initiator_failovers\n",
+             progress_failovers,initiator_failovers,merged_groups,reassigned_nodes\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{},{},{},{},{},{}",
+                "{},{},{:.6},{},{},{},{},{},{},{},{}",
                 self.id,
                 r.round,
                 r.secs,
@@ -137,7 +154,9 @@ impl MultiRoundReport {
                 r.rekey_messages,
                 r.contributors,
                 r.progress_failovers,
-                r.initiator_failovers
+                r.initiator_failovers,
+                r.merged_groups,
+                r.reassigned_nodes
             );
         }
         out
@@ -158,6 +177,8 @@ impl MultiRoundReport {
                     ("contributors", Value::from(r.contributors)),
                     ("progress_failovers", Value::from(r.progress_failovers)),
                     ("initiator_failovers", Value::from(r.initiator_failovers)),
+                    ("merged_groups", Value::from(r.merged_groups)),
+                    ("reassigned_nodes", Value::from(r.reassigned_nodes)),
                 ])
             })
             .collect();
@@ -231,6 +252,8 @@ mod tests {
                 progress_failovers: u64::from(i == 0),
                 initiator_failovers: 0,
                 rekey_messages: if i == 2 { 9 } else { 0 },
+                merged_groups: u64::from(i == 1),
+                reassigned_nodes: if i == 1 { 2 } else { 0 },
                 per_path: Default::default(),
             })
             .collect()
@@ -260,6 +283,8 @@ mod tests {
             contributors: 5,
             progress_failovers: 1,
             initiator_failovers: 0,
+            merged_groups: 0,
+            reassigned_nodes: 0,
         };
         assert_eq!(r.failover_extra(), 2);
     }

@@ -1,0 +1,451 @@
+//! Paper-scale topology bench: 100+ nodes, Poisson churn, privacy-floor
+//! merge re-balancing — the §5.3/§5.5 scalability story at the size the
+//! paper argues for (Figs 9/12) rather than the 12-node figure sweeps.
+//!
+//! Runs an `n`-node, `rounds`-round session under
+//! [`ChurnSchedule::poisson`] with `--merge-floor` semantics on, and
+//! checks every round's message count against the paper's formula
+//! `4·contributors + 2f (+ g when subgrouped)`, with merge/reassignment
+//! re-keys reported separately (footnote 3 discipline). While the
+//! session runs, a side client built with
+//! [`InProcTransport::with_latency`] — the modeled REST hop — polls the
+//! controller's `/status` endpoint, so the latency-injecting transport
+//! is exercised at scale alongside the learners.
+//!
+//! The `scale` bench target renders the table and writes
+//! `BENCH_scale.json` for cross-PR tracking.
+
+use std::collections::BTreeSet;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{DeviceProfile, SessionConfig};
+use crate::json::Value;
+use crate::learner::faults::{ChurnSchedule, FailPoint};
+use crate::proto;
+use crate::protocols::SafeSession;
+use crate::topology::GroupPlanner;
+use crate::transport::InProcTransport;
+
+/// Knobs for one paper-scale churn run.
+#[derive(Debug, Clone)]
+pub struct ScaleConfig {
+    /// Total learners (the acceptance scenario runs 120).
+    pub n_nodes: usize,
+    /// Configured subgroups (chains of ~5 keep merges observable).
+    pub groups: usize,
+    /// Aggregation rounds.
+    pub rounds: usize,
+    /// Poisson death rate per node per round.
+    pub lambda_die: f64,
+    /// Poisson rejoin rate per dead node per round.
+    pub lambda_rejoin: f64,
+    /// Seed for churn, keys and data (the whole run is reproducible).
+    pub seed: u64,
+    /// Modeled one-way REST hop for the side status probe
+    /// ([`InProcTransport::with_latency`]).
+    pub probe_hop: Duration,
+}
+
+impl Default for ScaleConfig {
+    fn default() -> Self {
+        ScaleConfig {
+            n_nodes: 120,
+            groups: 24,
+            rounds: 5,
+            lambda_die: 0.12,
+            lambda_rejoin: 0.35,
+            seed: 42,
+            probe_hop: Duration::from_micros(500),
+        }
+    }
+}
+
+/// One round of the scale table.
+#[derive(Debug, Clone)]
+pub struct ScaleRow {
+    /// 1-based round number.
+    pub round: u64,
+    pub secs: f64,
+    /// Nodes present at round start (absent nodes excluded).
+    pub present: u64,
+    /// Groups the topology plan ran this round (after merges).
+    pub groups: u64,
+    pub contributors: u64,
+    /// Scheduled in-round deaths (the `f` of `4n + 2f`).
+    pub deaths: u64,
+    /// Nodes that rejoined at round start (each re-keys alone).
+    pub rejoins: u64,
+    /// Groups dissolved by privacy-floor merges this round.
+    pub merged_groups: u64,
+    /// Nodes aggregated outside their home group this round.
+    pub reassigned_nodes: u64,
+    /// Rejoin + reassignment key traffic (excluded from `messages`).
+    pub rekey_messages: u64,
+    pub messages: u64,
+    /// The §5.2/§5.3/§5.5 prediction: `4·contributors + 2f (+ g)`.
+    pub expected_messages: u64,
+    pub progress_failovers: u64,
+    pub initiator_failovers: u64,
+}
+
+impl ScaleRow {
+    /// Measured minus predicted messages (0 when the formulas hold).
+    pub fn formula_delta(&self) -> i64 {
+        self.messages as i64 - self.expected_messages as i64
+    }
+}
+
+/// A full paper-scale churn run: per-round rows plus run metadata.
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    /// Output id (`scale_poisson`): names the CSV and JSON artifacts.
+    pub id: String,
+    /// The knobs the run used.
+    pub config: ScaleConfig,
+    /// One-time round-0 key-exchange messages at session build.
+    pub setup_messages: u64,
+    /// Per-round measurements.
+    pub rows: Vec<ScaleRow>,
+    /// `/status` polls completed by the latency-modeled probe client.
+    pub probe_samples: u64,
+}
+
+impl ScaleReport {
+    /// Total privacy-floor merges across the run.
+    pub fn merges_total(&self) -> u64 {
+        self.rows.iter().map(|r| r.merged_groups).sum()
+    }
+
+    /// Total rejoin/reassignment re-key messages across the run.
+    pub fn rekey_total(&self) -> u64 {
+        self.rows.iter().map(|r| r.rekey_messages).sum()
+    }
+
+    /// Aligned text table, one row per round.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "── {} — n={} g={} λ_die={} λ_rejoin={} seed={} ──",
+            self.id,
+            self.config.n_nodes,
+            self.config.groups,
+            self.config.lambda_die,
+            self.config.lambda_rejoin,
+            self.config.seed
+        );
+        let _ = writeln!(
+            out,
+            "{:>5} {:>8} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5}",
+            "round", "secs", "present", "groups", "contrib", "deaths", "rejoins", "merges",
+            "reassigned", "rekey", "messages", "expected", "Δ"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:>5} {:>8.3} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5}",
+                r.round,
+                r.secs,
+                r.present,
+                r.groups,
+                r.contributors,
+                r.deaths,
+                r.rejoins,
+                r.merged_groups,
+                r.reassigned_nodes,
+                r.rekey_messages,
+                r.messages,
+                r.expected_messages,
+                r.formula_delta()
+            );
+        }
+        let _ = writeln!(
+            out,
+            "setup: {} round-0 messages; {} merges, {} rekey messages over {} rounds; \
+             probe: {} /status polls over a {}µs modeled hop",
+            self.setup_messages,
+            self.merges_total(),
+            self.rekey_total(),
+            self.rows.len(),
+            self.probe_samples,
+            self.config.probe_hop.as_micros()
+        );
+        out
+    }
+
+    /// CSV rows mirroring [`ScaleReport::to_table`].
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "id,round,secs,present,groups,contributors,deaths,rejoins,merged_groups,\
+             reassigned_nodes,rekey_messages,messages,expected_messages,formula_delta,\
+             progress_failovers,initiator_failovers\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                self.id,
+                r.round,
+                r.secs,
+                r.present,
+                r.groups,
+                r.contributors,
+                r.deaths,
+                r.rejoins,
+                r.merged_groups,
+                r.reassigned_nodes,
+                r.rekey_messages,
+                r.messages,
+                r.expected_messages,
+                r.formula_delta(),
+                r.progress_failovers,
+                r.initiator_failovers
+            );
+        }
+        out
+    }
+
+    /// Machine-readable form for `BENCH_scale.json`.
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Value::object(vec![
+                    ("round", Value::from(r.round)),
+                    ("secs", Value::from(r.secs)),
+                    ("present", Value::from(r.present)),
+                    ("groups", Value::from(r.groups)),
+                    ("contributors", Value::from(r.contributors)),
+                    ("deaths", Value::from(r.deaths)),
+                    ("rejoins", Value::from(r.rejoins)),
+                    ("merged_groups", Value::from(r.merged_groups)),
+                    ("reassigned_nodes", Value::from(r.reassigned_nodes)),
+                    ("rekey_messages", Value::from(r.rekey_messages)),
+                    ("messages", Value::from(r.messages)),
+                    ("expected_messages", Value::from(r.expected_messages)),
+                    ("formula_delta", Value::from(r.formula_delta() as f64)),
+                    ("progress_failovers", Value::from(r.progress_failovers)),
+                    ("initiator_failovers", Value::from(r.initiator_failovers)),
+                ])
+            })
+            .collect();
+        Value::object(vec![
+            ("id", Value::from(self.id.as_str())),
+            ("n_nodes", Value::from(self.config.n_nodes)),
+            ("groups_configured", Value::from(self.config.groups)),
+            ("rounds", Value::from(self.config.rounds)),
+            ("lambda_die", Value::from(self.config.lambda_die)),
+            ("lambda_rejoin", Value::from(self.config.lambda_rejoin)),
+            ("seed", Value::from(self.config.seed)),
+            ("setup_messages", Value::from(self.setup_messages)),
+            ("merges_total", Value::from(self.merges_total())),
+            ("rekey_total", Value::from(self.rekey_total())),
+            ("probe_samples", Value::from(self.probe_samples)),
+            (
+                "probe_hop_us",
+                Value::from(self.config.probe_hop.as_micros() as u64),
+            ),
+            ("per_round", Value::Arr(rows)),
+        ])
+    }
+
+    /// Print the table and write `bench_out/<id>.csv`.
+    pub fn emit(&self, out_dir: Option<&str>) {
+        println!("{}", self.to_table());
+        let dir = PathBuf::from(out_dir.unwrap_or("bench_out"));
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{}.csv", self.id));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+            }
+        }
+    }
+}
+
+/// Run the paper-scale Poisson churn scenario and build the report.
+///
+/// Every round the churn schedule leaves with at least 3 total live
+/// nodes must complete: under-floor groups merge into a neighbour (the
+/// planner refuses only when *no* merge can restore the floor), and the
+/// per-round message count must match `4·contributors + 2f (+ g)`
+/// exactly — rejoin/reassignment key traffic is accounted separately.
+pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
+    let cfg = SessionConfig {
+        n_nodes: sc.n_nodes,
+        features: 4,
+        groups: sc.groups,
+        rsa_bits: 512, // scale bench measures topology, not keygen
+        profile: DeviceProfile::instant(),
+        // Generous long-poll budget: a retried (empty) poll counts as a
+        // message, and a merged chain detecting several deaths in series
+        // can legitimately take seconds — the §5.2 formula check needs
+        // every poll answered within one call.
+        poll_time: Duration::from_secs(30),
+        aggregation_timeout: Duration::from_secs(120),
+        progress_timeout: Duration::from_millis(500),
+        monitor_interval: Duration::from_millis(60),
+        seed: Some(sc.seed),
+        merge_floor: true,
+        ..Default::default()
+    };
+    let churn = ChurnSchedule::poisson(
+        sc.seed,
+        sc.n_nodes,
+        sc.rounds as u64,
+        sc.lambda_die,
+        sc.lambda_rejoin,
+    );
+    let inputs: Vec<Vec<f64>> = (0..cfg.n_nodes)
+        .map(|i| (0..cfg.features).map(|f| (i + 1) as f64 + 0.001 * f as f64).collect())
+        .collect();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..sc.rounds).map(|_| inputs.clone()).collect();
+
+    let session = SafeSession::new(cfg.clone())?;
+    let setup_messages = session.round0_messages;
+
+    // Side probe over the latency-modeled transport: the documented REST
+    // hop (`InProcTransport::with_latency`) exercised at n=120 while the
+    // learners aggregate.
+    let probe_stop = Arc::new(AtomicBool::new(false));
+    let probe_count = Arc::new(AtomicU64::new(0));
+    let probe = InProcTransport::with_latency(session.controller.clone(), sc.probe_hop);
+    let probe_thread = {
+        let stop = probe_stop.clone();
+        let count = probe_count.clone();
+        std::thread::Builder::new().name("scale-probe".into()).spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                use crate::transport::ClientTransport;
+                if probe.call(proto::STATUS, &Value::obj()).is_ok() {
+                    count.fetch_add(1, Ordering::SeqCst);
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        })?
+    };
+
+    let run = session.run_rounds(&per_round, &churn);
+    probe_stop.store(true, Ordering::SeqCst);
+    let _ = probe_thread.join();
+    let results = run?;
+
+    // Rebuild each round's plan from the same deterministic inputs the
+    // engine used, to derive the per-round group count and cross-check
+    // the engine's merge accounting.
+    let planner = GroupPlanner::from_config(&cfg);
+    let membership = planner.membership();
+    let mut rows = Vec::with_capacity(results.len());
+    for (i, res) in results.iter().enumerate() {
+        let round = (i + 1) as u64;
+        let faults = churn.fault_plan_for(round);
+        let absent: BTreeSet<u64> = membership
+            .iter()
+            .copied()
+            .filter(|&n| churn.absent_in(round, n))
+            .collect();
+        let plan = planner
+            .plan_round(i as u64, &absent, &faults)
+            .with_context(|| format!("re-planning round {round}"))?;
+        let m = &res.metrics;
+        ensure!(
+            m.merged_groups == plan.merges().len() as u64
+                && m.reassigned_nodes == plan.reassignments().len() as u64,
+            "round {round}: engine and re-planned merge accounting disagree"
+        );
+        let deaths: u64 = membership
+            .iter()
+            .filter(|&&n| {
+                matches!(
+                    faults.point(n),
+                    Some(FailPoint::NeverStart) | Some(FailPoint::AfterGet)
+                ) && plan.contains(n)
+            })
+            .count() as u64;
+        let groups = plan.groups().len() as u64;
+        let expected = 4 * m.contributors
+            + 2 * deaths
+            + if groups > 1 { groups } else { 0 };
+        rows.push(ScaleRow {
+            round,
+            secs: m.secs(),
+            present: plan.total_live() as u64,
+            groups,
+            contributors: m.contributors,
+            deaths,
+            rejoins: churn
+                .rejoining_in(round)
+                .into_iter()
+                .filter(|&j| plan.contains(j))
+                .count() as u64,
+            merged_groups: m.merged_groups,
+            reassigned_nodes: m.reassigned_nodes,
+            rekey_messages: m.rekey_messages,
+            messages: m.messages,
+            expected_messages: expected,
+            progress_failovers: m.progress_failovers,
+            initiator_failovers: m.initiator_failovers,
+        });
+    }
+    Ok(ScaleReport {
+        id: "scale_poisson".to_string(),
+        config: sc.clone(),
+        setup_messages,
+        rows,
+        probe_samples: probe_count.load(Ordering::SeqCst),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ScaleReport {
+        ScaleReport {
+            id: "t".into(),
+            config: ScaleConfig { n_nodes: 10, groups: 2, rounds: 2, ..Default::default() },
+            setup_messages: 50,
+            rows: (1..=2)
+                .map(|round| ScaleRow {
+                    round,
+                    secs: 0.1,
+                    present: 10,
+                    groups: 2,
+                    contributors: 9,
+                    deaths: 1,
+                    rejoins: 0,
+                    merged_groups: u64::from(round == 2),
+                    reassigned_nodes: if round == 2 { 2 } else { 0 },
+                    rekey_messages: if round == 2 { 12 } else { 0 },
+                    messages: 4 * 9 + 2 + 2,
+                    expected_messages: 4 * 9 + 2 + 2,
+                    progress_failovers: 1,
+                    initiator_failovers: 0,
+                })
+                .collect(),
+            probe_samples: 7,
+        }
+    }
+
+    #[test]
+    fn report_rollups_and_renderings_agree() {
+        let r = report();
+        assert_eq!(r.merges_total(), 1);
+        assert_eq!(r.rekey_total(), 12);
+        assert_eq!(r.rows[0].formula_delta(), 0);
+        let table = r.to_table();
+        assert!(table.contains("reassigned"));
+        assert!(table.contains("/status polls"));
+        assert_eq!(r.to_csv().lines().count(), 3); // header + 2 rounds
+        let json = r.to_json();
+        assert_eq!(json.u64_of("merges_total"), Some(1));
+        assert_eq!(json.u64_of("probe_samples"), Some(7));
+        assert_eq!(json.get("per_round").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

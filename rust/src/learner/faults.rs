@@ -17,11 +17,16 @@
 //!   1, sit out round 2, and return in round 3 (with chain re-formation
 //!   and a key re-exchange for the returning node only). A `FaultPlan`
 //!   is the round-1 slice of a `ChurnSchedule`; use
-//!   [`ChurnSchedule::from_fault_plan`] to lift one.
+//!   [`ChurnSchedule::from_fault_plan`] to lift one. For paper-scale
+//!   experiments, [`ChurnSchedule::poisson`] generates seeded per-round
+//!   Poisson arrival/departure over the whole population (the CLI's
+//!   `--churn poisson:λ_die,λ_rejoin`).
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
+
+use crate::crypto::rng::{DeterministicRng, SecureRng};
 
 /// Where in its state machine a learner dies.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,7 +68,7 @@ impl FailPoint {
 }
 
 /// Which nodes fail and where, within a single aggregation round.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultPlan {
     pub faults: BTreeMap<u64, FailPoint>,
 }
@@ -174,7 +179,7 @@ impl ChurnEvent {
 /// assert!(!churn.absent_in(3, 4)); // back for round 3
 /// assert_eq!(churn.rejoining_in(3), vec![4]);
 /// ```
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ChurnSchedule {
     /// node → events, kept sorted by round (alternating die/rejoin).
     events: BTreeMap<u64, Vec<ChurnEvent>>,
@@ -232,7 +237,30 @@ impl ChurnSchedule {
             (None, ChurnEvent::Rejoin(r)) => {
                 bail!("node {node}: rejoin@{r} without a prior die")
             }
-            (Some(prev), _) if ev.round() <= prev.round() => bail!(
+            // Same-round collisions get their own diagnostics: a repeated
+            // event is almost always a copy/paste slip, and die+rejoin in
+            // one round is ambiguous (which half of the round is the node
+            // in?) — name the node and round so the spec is fixable.
+            (Some(prev), _) if ev.round() == prev.round() => {
+                let same_kind = matches!(
+                    (prev, &ev),
+                    (ChurnEvent::Die(..), ChurnEvent::Die(..))
+                        | (ChurnEvent::Rejoin(_), ChurnEvent::Rejoin(_))
+                );
+                let r = ev.round();
+                if same_kind {
+                    let kind = match ev {
+                        ChurnEvent::Die(..) => "die",
+                        ChurnEvent::Rejoin(_) => "rejoin",
+                    };
+                    bail!("node {node}: duplicate {kind} event in round {r}")
+                }
+                bail!(
+                    "node {node}: die and rejoin in the same round {r} \
+                     (schedule the rejoin for a later round)"
+                )
+            }
+            (Some(prev), _) if ev.round() < prev.round() => bail!(
                 "node {node}: event at round {} must come after round {}",
                 ev.round(),
                 prev.round()
@@ -320,6 +348,100 @@ impl ChurnSchedule {
     #[must_use]
     pub fn schedules(&self, node: u64) -> bool {
         self.events.contains_key(&node)
+    }
+
+    /// Seeded paper-scale churn: per-round Poisson arrival/departure over
+    /// `n_nodes` nodes for `rounds` rounds.
+    ///
+    /// Each round, every alive node dies during the round (at
+    /// [`FailPoint::NeverStart`]) with probability `1 − e^(−λ_die)` — the
+    /// probability a rate-`λ_die` Poisson process fires at least once in
+    /// one round — and every dead node rejoins with probability
+    /// `1 − e^(−λ_rejoin)`. All randomness comes from the repo's seeded
+    /// ChaCha20 [`DeterministicRng`] (no wall clock, no external `rand`),
+    /// so the same `(seed, n, rounds, λs)` always yields the same
+    /// schedule:
+    ///
+    /// ```
+    /// use safe_agg::learner::faults::ChurnSchedule;
+    ///
+    /// let a = ChurnSchedule::poisson(42, 120, 5, 0.1, 0.4);
+    /// let b = ChurnSchedule::poisson(42, 120, 5, 0.1, 0.4);
+    /// assert_eq!(a, b, "seeded generation is reproducible");
+    /// assert!(a.max_round() <= 5);
+    /// assert!(!a.is_empty(), "λ=0.1 over 120 nodes × 5 rounds churns");
+    /// ```
+    #[must_use]
+    pub fn poisson(
+        seed: u64,
+        n_nodes: usize,
+        rounds: u64,
+        lambda_die: f64,
+        lambda_rejoin: f64,
+    ) -> ChurnSchedule {
+        let mut rng = DeterministicRng::seed(seed ^ 0x706f_6973_736f_6e2d); // "poisson-"
+        let p_die = 1.0 - (-lambda_die.max(0.0)).exp();
+        let p_rejoin = 1.0 - (-lambda_rejoin.max(0.0)).exp();
+        let mut schedule = ChurnSchedule::none();
+        let mut alive = vec![true; n_nodes + 1];
+        for round in 1..=rounds {
+            // Fixed node order and exactly one draw per (node, round)
+            // keep the stream alignment — and therefore the schedule —
+            // independent of how many nodes happen to be dead.
+            for node in 1..=n_nodes as u64 {
+                let u = rng.next_f64();
+                if alive[node as usize] {
+                    if u < p_die {
+                        schedule = schedule.die(node, round, FailPoint::NeverStart);
+                        alive[node as usize] = false;
+                    }
+                } else if u < p_rejoin {
+                    schedule = schedule.rejoin(node, round);
+                    alive[node as usize] = true;
+                }
+            }
+        }
+        schedule
+    }
+
+    /// Parse the `--churn poisson:LAMBDA_DIE,LAMBDA_REJOIN` spec form.
+    ///
+    /// Returns `Ok(None)` when `spec` is not a poisson spec at all (the
+    /// caller should fall back to the event grammar of
+    /// [`ChurnSchedule::parse`]), `Ok(Some((λ_die, λ_rejoin)))` on
+    /// success, and an error naming the problem for a malformed poisson
+    /// spec.
+    ///
+    /// ```
+    /// use safe_agg::learner::faults::ChurnSchedule;
+    ///
+    /// assert_eq!(
+    ///     ChurnSchedule::parse_poisson_spec("poisson:0.1,0.4").unwrap(),
+    ///     Some((0.1, 0.4))
+    /// );
+    /// assert_eq!(ChurnSchedule::parse_poisson_spec("die:4@1").unwrap(), None);
+    /// assert!(ChurnSchedule::parse_poisson_spec("poisson:0.1").is_err());
+    /// ```
+    pub fn parse_poisson_spec(spec: &str) -> Result<Option<(f64, f64)>> {
+        let Some(rest) = spec.trim().strip_prefix("poisson:") else {
+            return Ok(None);
+        };
+        let (die_str, rejoin_str) = rest.split_once(',').with_context(|| {
+            format!("poisson churn spec {spec:?}: expected poisson:LAMBDA_DIE,LAMBDA_REJOIN")
+        })?;
+        let lambda_die: f64 = die_str
+            .trim()
+            .parse()
+            .with_context(|| format!("poisson churn spec {spec:?}: bad λ_die {die_str:?}"))?;
+        let lambda_rejoin: f64 = rejoin_str.trim().parse().with_context(|| {
+            format!("poisson churn spec {spec:?}: bad λ_rejoin {rejoin_str:?}")
+        })?;
+        if !lambda_die.is_finite() || !lambda_rejoin.is_finite() || lambda_die < 0.0
+            || lambda_rejoin < 0.0
+        {
+            bail!("poisson churn spec {spec:?}: rates must be finite and non-negative");
+        }
+        Ok(Some((lambda_die, lambda_rejoin)))
     }
 
     /// Parse the CLI `--churn` grammar: comma-separated events,
@@ -454,6 +576,74 @@ mod tests {
             "fly:4@1",          // unknown kind
         ] {
             assert!(ChurnSchedule::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_event_naming_node_and_round() {
+        let err = ChurnSchedule::parse("die:4@1,die:4@1").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 4"), "{msg}");
+        assert!(msg.contains("round 1"), "{msg}");
+        assert!(msg.contains("duplicate die"), "{msg}");
+        // Duplicate rejoins are named the same way.
+        let err = ChurnSchedule::parse("die:7@1,rejoin:7@2,rejoin:7@2").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 7"), "{msg}");
+        assert!(msg.contains("round 2"), "{msg}");
+        assert!(msg.contains("duplicate rejoin"), "{msg}");
+    }
+
+    #[test]
+    fn parse_rejects_die_and_rejoin_same_round_naming_node_and_round() {
+        let err = ChurnSchedule::parse("die:4@2,rejoin:4@2").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 4"), "{msg}");
+        assert!(msg.contains("round 2"), "{msg}");
+        assert!(msg.contains("die and rejoin in the same round"), "{msg}");
+        // The reverse order (rejoin then die, after a prior die) too.
+        let err = ChurnSchedule::parse("die:9@1,rejoin:9@3,die:9@3").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("node 9"), "{msg}");
+        assert!(msg.contains("round 3"), "{msg}");
+        assert!(msg.contains("die and rejoin in the same round"), "{msg}");
+    }
+
+    #[test]
+    fn poisson_is_seeded_and_respects_alternation() {
+        let a = ChurnSchedule::poisson(7, 50, 6, 0.2, 0.5);
+        let b = ChurnSchedule::poisson(7, 50, 6, 0.2, 0.5);
+        assert_eq!(a, b);
+        let c = ChurnSchedule::poisson(8, 50, 6, 0.2, 0.5);
+        assert_ne!(a, c, "different seeds give different schedules");
+        assert!(a.max_round() <= 6);
+        // The builder enforces die→rejoin alternation, so constructing
+        // the schedule at all proves it; spot-check the visible effect:
+        // no node both dies and is absent in its death round.
+        for round in 1..=6u64 {
+            for node in 1..=50u64 {
+                if a.fault_plan_for(round).point(node).is_some() {
+                    assert!(!a.absent_in(round, node));
+                }
+            }
+        }
+        // λ = 0 in both directions is the empty schedule.
+        assert!(ChurnSchedule::poisson(7, 50, 6, 0.0, 0.0).is_empty());
+    }
+
+    #[test]
+    fn poisson_spec_parses_and_rejects() {
+        assert_eq!(
+            ChurnSchedule::parse_poisson_spec("poisson:0.12,0.35").unwrap(),
+            Some((0.12, 0.35))
+        );
+        assert_eq!(
+            ChurnSchedule::parse_poisson_spec(" poisson:1,0 ").unwrap(),
+            Some((1.0, 0.0))
+        );
+        assert_eq!(ChurnSchedule::parse_poisson_spec("die:4@1,rejoin:4@3").unwrap(), None);
+        for bad in ["poisson:", "poisson:0.1", "poisson:x,0.2", "poisson:0.1,-0.2"] {
+            assert!(ChurnSchedule::parse_poisson_spec(bad).is_err(), "{bad:?}");
         }
     }
 

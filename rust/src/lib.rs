@@ -16,9 +16,15 @@
 //! R aggregation rounds over persistent learner actors (keys exchanged
 //! once in round 0 and reused, paper §5 footnote 3), with a
 //! [`learner::faults::ChurnSchedule`] scheduling per-round node deaths and
-//! rejoins — chains re-form around absent nodes and a returning node
-//! re-keys alone. See the repository `README.md` for the architecture map
-//! and `docs/WIRE.md` for the normative wire-format specification.
+//! rejoins (including seeded Poisson churn at paper scale) — chains
+//! re-form around absent nodes and a returning node re-keys alone. All
+//! group/chain decisions flow through the [`topology`] subsystem: a
+//! [`topology::GroupPlanner`] builds one immutable
+//! [`topology::TopologyPlan`] per round, merging groups that churn pushed
+//! below the §5.3 privacy floor into a neighbouring group instead of
+//! aborting. See the repository `README.md` for the architecture map,
+//! `docs/WIRE.md` for the wire-format specification and
+//! `docs/TOPOLOGY.md` for the planner invariants.
 //!
 //! The crate is a three-layer system:
 //!  * **L3 (this crate)** — the coordination contribution: controller broker,
@@ -42,6 +48,7 @@ pub mod transport;
 pub mod proto;
 pub mod controller;
 pub mod learner;
+pub mod topology;
 pub mod monitor;
 pub mod protocols;
 pub mod runtime;

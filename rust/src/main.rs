@@ -57,7 +57,16 @@ fn print_help() {
                                           comma-separated die:NODE@ROUND\n\
                                           [:never-start|after-get|after-post|\n\
                                           initiator-after-post] and\n\
-                                          rejoin:NODE@ROUND events\n\
+                                          rejoin:NODE@ROUND events, or\n\
+                                          poisson:LAMBDA_DIE,LAMBDA_REJOIN\n\
+                                          for seeded per-round Poisson\n\
+                                          arrival/departure at paper scale\n\
+                   [--merge-floor on|off] privacy-floor re-balancing\n\
+                                          (default on): merge a group that\n\
+                                          churn pushed below 3 live nodes\n\
+                                          into its smallest neighbour (only\n\
+                                          moved nodes re-key) instead of\n\
+                                          aborting the round\n\
            insec   --nodes N --features F   INSEC baseline round\n\
            bon     --nodes N --features F   BON (Bonawitz) baseline round\n\
            train   --nodes N --rounds R [--local-steps S] [--lr LR]\n\
@@ -104,15 +113,38 @@ fn faults_from(args: &Args) -> FaultPlan {
 fn cmd_run(args: &Args) -> i32 {
     let cfg = args.to_session_config();
     let faults = faults_from(args);
-    let churn = match args.get("churn").map(ChurnSchedule::parse) {
-        Some(Ok(c)) => Some(c),
-        Some(Err(e)) => {
-            eprintln!("bad --churn spec: {e:#}");
-            return 2;
-        }
+    let rounds = args.get_usize("rounds", 0);
+    // A poisson spec generates a schedule for an exact round count
+    // (--rounds, default 5) — the session must run all of them even when
+    // the last random event lands earlier (or no event fires at all).
+    let mut poisson_rounds = None;
+    let churn = match args.get("churn") {
+        Some(spec) => match ChurnSchedule::parse_poisson_spec(spec) {
+            Ok(Some((lambda_die, lambda_rejoin))) => {
+                let r = if rounds > 0 { rounds } else { 5 };
+                poisson_rounds = Some(r);
+                Some(ChurnSchedule::poisson(
+                    cfg.seed.unwrap_or(42),
+                    cfg.n_nodes,
+                    r as u64,
+                    lambda_die,
+                    lambda_rejoin,
+                ))
+            }
+            Ok(None) => match ChurnSchedule::parse(spec) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    eprintln!("bad --churn spec: {e:#}");
+                    return 2;
+                }
+            },
+            Err(e) => {
+                eprintln!("bad --churn spec: {e:#}");
+                return 2;
+            }
+        },
         None => None,
     };
-    let rounds = args.get_usize("rounds", 0);
     if rounds > 1 || churn.is_some() {
         // Multi-round engine: R rounds over persistent learner actors,
         // with optional cross-round churn. --fail-from/--fail-to folds in
@@ -129,7 +161,8 @@ fn cmd_run(args: &Args) -> i32 {
             }
             churn = churn.die(node, 1, at);
         }
-        let rounds = rounds.max(churn.max_round() as usize).max(1);
+        let rounds = poisson_rounds
+            .unwrap_or_else(|| rounds.max(churn.max_round() as usize).max(1));
         return cmd_run_rounds(&cfg, rounds, &churn);
     }
     println!(

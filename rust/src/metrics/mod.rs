@@ -25,10 +25,17 @@ pub struct RoundMetrics {
     pub initiator_failovers: u64,
     /// Key (re-)exchange messages spent inside this round's window by the
     /// multi-round engine — nonzero only when a churned-out node rejoined
-    /// this round. Reported separately from `messages`, mirroring the
-    /// paper's footnote 3 (key exchange is not per-aggregation traffic),
-    /// but still visible in `per_path`.
+    /// this round or a privacy-floor merge reassigned nodes to a new
+    /// group. Reported separately from `messages`, mirroring the paper's
+    /// footnote 3 (key exchange is not per-aggregation traffic), but
+    /// still visible in `per_path`.
     pub rekey_messages: u64,
+    /// Groups dissolved by privacy-floor merge re-balancing this round
+    /// (their survivors aggregated under a neighbouring group's chain).
+    pub merged_groups: u64,
+    /// Nodes that aggregated under a group other than their configured
+    /// home group this round — the only nodes that re-key after a merge.
+    pub reassigned_nodes: u64,
     /// Messages by path (for the message-accounting tests).
     pub per_path: std::collections::BTreeMap<String, u64>,
 }
@@ -86,6 +93,8 @@ mod tests {
             progress_failovers: 0,
             initiator_failovers: 0,
             rekey_messages: 0,
+            merged_groups: 0,
+            reassigned_nodes: 0,
             per_path: Default::default(),
         }
     }

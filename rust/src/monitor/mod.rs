@@ -32,6 +32,7 @@ pub struct ProgressMonitor {
     wakeup: Arc<(Mutex<bool>, Condvar)>,
     reposts: Arc<AtomicU64>,
     aborts: Arc<AtomicU64>,
+    merge_signals: Arc<AtomicU64>,
     thread: Option<JoinHandle<()>>,
 }
 
@@ -42,7 +43,9 @@ impl ProgressMonitor {
         let wakeup = Arc::new((Mutex::new(false), Condvar::new()));
         let reposts = Arc::new(AtomicU64::new(0));
         let aborts = Arc::new(AtomicU64::new(0));
+        let merge_signals = Arc::new(AtomicU64::new(0));
         let (s, w, r, a) = (stop.clone(), wakeup.clone(), reposts.clone(), aborts.clone());
+        let m = merge_signals.clone();
         let thread = std::thread::Builder::new()
             .name("progress-monitor".into())
             .spawn(move || {
@@ -56,6 +59,9 @@ impl ProgressMonitor {
                                     }
                                     Some("abort_privacy_floor") => {
                                         a.fetch_add(1, Ordering::SeqCst);
+                                    }
+                                    Some("merge_groups") => {
+                                        m.fetch_add(1, Ordering::SeqCst);
                                     }
                                     _ => {}
                                 }
@@ -71,7 +77,7 @@ impl ProgressMonitor {
                 }
             })
             .expect("spawn monitor thread");
-        ProgressMonitor { stop, wakeup, reposts, aborts, thread: Some(thread) }
+        ProgressMonitor { stop, wakeup, reposts, aborts, merge_signals, thread: Some(thread) }
     }
 
     /// Number of repost commands issued so far (= progress failovers f).
@@ -82,6 +88,14 @@ impl ProgressMonitor {
     /// Number of privacy-floor aborts observed.
     pub fn aborts(&self) -> u64 {
         self.aborts.load(Ordering::SeqCst)
+    }
+
+    /// Number of `merge_groups` signals observed — mid-round privacy-floor
+    /// trips the controller asked the topology planner to resolve by
+    /// merging at the next re-plan (emitted instead of an abort when
+    /// merging is possible).
+    pub fn merge_signals(&self) -> u64 {
+        self.merge_signals.load(Ordering::SeqCst)
     }
 
     pub fn stop(&mut self) {

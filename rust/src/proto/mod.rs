@@ -139,9 +139,25 @@ pub struct BeginRound {
     /// group id → chain order for this round (absent/churned nodes are
     /// simply not listed — chain re-formation).
     pub groups: BTreeMap<u64, Vec<u64>>,
+    /// Privacy-floor merging is enabled for this session: a mid-round
+    /// floor violation should be answered with a `merge_groups` action
+    /// (re-plan next round) rather than `abort_privacy_floor`, as long as
+    /// another group exists to merge into.
+    pub merge_floor: bool,
+    /// The topology plan's per-node merge deltas for this round: every
+    /// node aggregating under a group other than its configured home
+    /// group. Informational for the controller (surfaced via `/status`);
+    /// the re-key traffic these deltas imply is client-driven.
+    pub reassigned: Vec<crate::topology::Reassignment>,
 }
 
 impl BeginRound {
+    /// A plain epoch-reset request with no merge metadata (the shape
+    /// pre-topology clients send; both new fields default off).
+    pub fn new(epoch: u64, groups: BTreeMap<u64, Vec<u64>>) -> BeginRound {
+        BeginRound { epoch, groups, merge_floor: false, reassigned: Vec::new() }
+    }
+
     pub fn to_value(&self) -> Value {
         let mut groups = Value::obj();
         for (gid, chain) in &self.groups {
@@ -150,7 +166,18 @@ impl BeginRound {
                 Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
             );
         }
-        Value::object(vec![("epoch", Value::from(self.epoch)), ("groups", groups)])
+        let mut v = Value::object(vec![
+            ("epoch", Value::from(self.epoch)),
+            ("groups", groups),
+            ("merge_floor", Value::from(self.merge_floor)),
+        ]);
+        if !self.reassigned.is_empty() {
+            v.set(
+                "reassigned",
+                Value::Arr(self.reassigned.iter().map(|r| r.to_value()).collect()),
+            );
+        }
+        v
     }
 
     pub fn from_value(v: &Value) -> Result<BeginRound> {
@@ -171,7 +198,19 @@ impl BeginRound {
             }
             _ => bail!("missing groups"),
         }
-        Ok(BeginRound { epoch, groups })
+        let reassigned = match v.get("reassigned").and_then(|r| r.as_arr()) {
+            Some(arr) => arr
+                .iter()
+                .map(crate::topology::Reassignment::from_value)
+                .collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        Ok(BeginRound {
+            epoch,
+            groups,
+            merge_floor: v.bool_of("merge_floor").unwrap_or(false),
+            reassigned,
+        })
     }
 }
 
@@ -763,12 +802,27 @@ mod tests {
         };
         assert_eq!(PostAggregate::from_value(&pa.to_value()).unwrap(), pa);
 
-        let br = BeginRound {
-            epoch: 3,
-            groups: BTreeMap::from([(1u64, vec![1u64, 3, 5]), (2, vec![2, 4, 6])]),
-        };
+        let br = BeginRound::new(
+            3,
+            BTreeMap::from([(1u64, vec![1u64, 3, 5]), (2, vec![2, 4, 6])]),
+        );
         assert_eq!(BeginRound::from_value(&br.to_value()).unwrap(), br);
         assert!(BeginRound::from_value(&Value::obj()).is_err());
+        // Topology metadata (privacy-floor merges) rides along and
+        // roundtrips; absent fields default off for legacy senders.
+        let br = BeginRound {
+            epoch: 4,
+            groups: BTreeMap::from([(1u64, vec![1u64, 2, 3, 5, 6])]),
+            merge_floor: true,
+            reassigned: vec![
+                crate::topology::Reassignment { node: 5, from_group: 2, to_group: 1 },
+                crate::topology::Reassignment { node: 6, from_group: 2, to_group: 1 },
+            ],
+        };
+        let rt = BeginRound::from_value(&br.to_value()).unwrap();
+        assert_eq!(rt, br);
+        assert!(rt.merge_floor);
+        assert_eq!(rt.reassigned.len(), 2);
 
         let no = NodeOp::new(5, 1);
         assert_eq!(NodeOp::from_value(&no.to_value()).unwrap(), no);

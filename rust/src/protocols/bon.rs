@@ -147,6 +147,8 @@ impl BonSession {
             progress_failovers: faults.failed_count() as u64,
             initiator_failovers: 0,
             rekey_messages: 0,
+            merged_groups: 0,
+            reassigned_nodes: 0,
             per_path: Default::default(),
         })
     }

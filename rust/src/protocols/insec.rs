@@ -12,6 +12,7 @@ use crate::json::Value;
 use crate::learner::faults::{FailPoint, FaultPlan};
 use crate::metrics::RoundMetrics;
 use crate::proto;
+use crate::topology::GroupPlanner;
 use crate::transport::{ClientTransport, InProcTransport, MessageStats};
 use crate::util::Stopwatch;
 
@@ -50,8 +51,11 @@ impl InsecSession {
         if inputs.len() != self.cfg.n_nodes {
             bail!("need {} inputs", self.cfg.n_nodes);
         }
-        // (Re)configure groups — resets insec state for the round.
-        let chains = self.cfg.group_chains();
+        // (Re)configure groups — resets insec state for the round. INSEC
+        // has no privacy floor (it is the no-privacy baseline), so the
+        // planner's configured base plan is used as-is.
+        let plan = GroupPlanner::from_config(&self.cfg).base_plan();
+        let chains = plan.groups().to_vec();
         let mut groups_obj = Value::obj();
         for (gid, chain) in &chains {
             groups_obj.set(
@@ -125,6 +129,8 @@ impl InsecSession {
             progress_failovers: 0,
             initiator_failovers: 0,
             rekey_messages: 0,
+            merged_groups: 0,
+            reassigned_nodes: 0,
             per_path: Default::default(),
         })
     }

@@ -23,6 +23,7 @@ use crate::monitor::ProgressMonitor;
 use crate::proto;
 use crate::runtime::vector::{NativeMath, VectorMath};
 use crate::runtime::{ArtifactRuntime, XlaMath};
+use crate::topology::{GroupPlanner, TopologyPlan};
 use crate::transport::http::{HttpServer, HttpTransport};
 use crate::transport::{ClientTransport, InProcTransport, MessageStats};
 use crate::util::Stopwatch;
@@ -57,6 +58,10 @@ pub fn keypair_for(seed: Option<u64>, node: u64, bits: usize) -> RsaKeyPair {
 pub struct SafeSession {
     pub cfg: SessionConfig,
     pub controller: Arc<Controller>,
+    /// The topology subsystem: owns membership and produces one immutable
+    /// [`TopologyPlan`] per round (chain re-formation, per-round
+    /// permutation, privacy-floor merge re-balancing).
+    planner: GroupPlanner,
     stats: Arc<MessageStats>,
     /// Master per-node contexts: the long-lived key material and transport
     /// of every configured learner. Behind a mutex because a rejoin
@@ -165,8 +170,11 @@ impl SafeSession {
             }
         };
 
-        // Configure the controller with the group chains.
-        let chains = cfg.group_chains();
+        // Configure the controller with the planner's configured topology
+        // (the base plan: full membership, no churn, no merges).
+        let planner = GroupPlanner::from_config(&cfg);
+        let base = planner.base_plan();
+        let chains = base.groups().to_vec();
         for (_, chain) in &chains {
             if chain.len() < 3 {
                 bail!(
@@ -319,6 +327,7 @@ impl SafeSession {
         Ok(SafeSession {
             cfg,
             controller,
+            planner,
             stats,
             contexts: Mutex::new(contexts),
             monitor_transport,
@@ -326,26 +335,6 @@ impl SafeSession {
             round0_messages,
             rounds_run: std::sync::atomic::AtomicU64::new(0),
         })
-    }
-
-    /// Chain order for a given round: the configured order, or a
-    /// deterministic per-round permutation within each group when
-    /// `shuffle_chain_each_round` is set (paper §8: randomizing the order
-    /// limits what colluding neighbours can learn across rounds).
-    fn chains_for_round(&self, round: u64) -> Vec<(u64, Vec<u64>)> {
-        let mut chains = self.cfg.group_chains();
-        if self.cfg.shuffle_chain_each_round && round > 0 {
-            for (gid, chain) in chains.iter_mut() {
-                let mut rng = DeterministicRng::seed(
-                    self.cfg.seed.unwrap_or(0) ^ (round << 20) ^ *gid,
-                );
-                for i in (1..chain.len()).rev() {
-                    let j = rng.next_below(i + 1);
-                    chain.swap(i, j);
-                }
-            }
-        }
-        chains
     }
 
     /// Run one aggregation round. `inputs[i]` is node i+1's local vector
@@ -451,27 +440,34 @@ impl SafeSession {
             .fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         let epoch = engine_round + 1;
 
-        // Chain re-formation: the configured (possibly per-round shuffled)
-        // order minus nodes the churn schedule keeps out of this round.
-        let mut chains = self.chains_for_round(engine_round);
-        for (_, chain) in chains.iter_mut() {
-            chain.retain(|&n| !churn.absent_in(churn_round, n));
-        }
-        for (gid, chain) in &chains {
-            if chain.len() < 3 {
-                bail!(
-                    "group {gid}: {} live nodes < 3 in round {churn_round} (privacy floor, §5.3)",
-                    chain.len()
-                );
-            }
-        }
-        let total_active: usize = chains.iter().map(|(_, c)| c.len()).sum();
+        // Ask the topology planner for this round's plan: the configured
+        // (possibly per-round permuted) chains minus churned-out nodes,
+        // with under-floor groups merged into a neighbour (per-node
+        // `Reassigned` deltas) and a privacy-floor abort only when the
+        // total live population is below 3.
+        let faults = churn.fault_plan_for(churn_round);
+        let absent: std::collections::BTreeSet<u64> = self
+            .planner
+            .membership()
+            .into_iter()
+            .filter(|&n| churn.absent_in(churn_round, n))
+            .collect();
+        let plan = self.planner.plan_round(engine_round, &absent, &faults)?;
+        let total_active = plan.total_live();
 
         // Open the round-epoch: mailbox/check/average state resets; the
-        // key registry, HTTP state and MessageStats survive.
+        // key registry, HTTP state and MessageStats survive. The plan's
+        // merge deltas ride along so the controller can answer mid-round
+        // floor trips with `merge_groups` and surface reassignments.
         let resp = self.monitor_transport.call(
             proto::BEGIN_ROUND,
-            &proto::BeginRound { epoch, groups: chains.iter().cloned().collect() }.to_value(),
+            &proto::BeginRound {
+                epoch,
+                groups: plan.groups_map(),
+                merge_floor: self.cfg.merge_floor,
+                reassigned: plan.reassignments().to_vec(),
+            }
+            .to_value(),
         )?;
         if resp.str_of("status") != Some("ok") {
             bail!("begin_round rejected: {:?}", resp.str_of("status"));
@@ -487,11 +483,17 @@ impl SafeSession {
         let rejoiners: Vec<u64> = churn
             .rejoining_in(churn_round)
             .into_iter()
-            .filter(|j| chains.iter().any(|(_, c)| c.contains(j)))
+            .filter(|&j| plan.contains(j))
             .collect();
         if !rejoiners.is_empty() {
-            self.rekey_rejoiners(&rejoiners, &chains, epoch)?;
+            self.rekey_rejoiners(&rejoiners, &plan, epoch)?;
         }
+        // Merge re-balancing re-key: nodes the plan reassigned to another
+        // group fetch keys for their *new* links only (and their new
+        // peers fetch theirs). Links already keyed — including from a
+        // previous round's merge — are skipped, so a repeated merge is
+        // free.
+        self.rekey_reassigned(&plan, epoch)?;
         // Count rekey traffic by key-exchange path, not by total delta:
         // the cross-round monitor keeps pinging `progress_check` through
         // the same counted transport, and a ping landing inside the rekey
@@ -511,12 +513,11 @@ impl SafeSession {
         .sum();
 
         let reposts_before = monitor.reposts();
-        let faults = churn.fault_plan_for(churn_round);
         let watch = Stopwatch::start();
 
         // Fan out one per-round context fork to every active actor.
         let mut active = Vec::with_capacity(total_active);
-        for (gid, chain) in &chains {
+        for (gid, chain) in plan.groups() {
             for (pos, &node) in chain.iter().enumerate() {
                 let master = self.master_context(node)?;
                 let mut ctx = master.fork(self.round_rng(node, epoch));
@@ -538,11 +539,9 @@ impl SafeSession {
             outcomes.push(actors[&node].collect()?);
         }
         // Churned-out nodes are dead for this round's bookkeeping.
-        for (_, chain) in &self.cfg.group_chains() {
-            for &node in chain {
-                if !active.contains(&node) {
-                    outcomes.push(LearnerOutcome::absent(node));
-                }
+        for node in self.planner.membership() {
+            if !active.contains(&node) {
+                outcomes.push(LearnerOutcome::absent(node));
             }
         }
         outcomes.sort_by_key(|o| o.node);
@@ -603,6 +602,8 @@ impl SafeSession {
             progress_failovers: monitor.reposts() - reposts_before,
             initiator_failovers: outcomes.iter().map(|o| o.restarts).max().unwrap_or(0),
             rekey_messages,
+            merged_groups: plan.merges().len() as u64,
+            reassigned_nodes: plan.reassignments().len() as u64,
             per_path,
         };
         Ok(SafeRoundResult { metrics, outcomes })
@@ -618,20 +619,17 @@ impl SafeSession {
     fn rekey_rejoiners(
         &self,
         rejoiners: &[u64],
-        chains: &[(u64, Vec<u64>)],
+        plan: &TopologyPlan,
         epoch: u64,
     ) -> Result<()> {
         use crate::blob::Blob;
-        let full_chains = self.cfg.group_chains();
         // Phase A: rejoiners re-register + re-fetch peer public keys.
         for &j in rejoiners {
             let master = self.master_context(j)?;
-            let full = full_chains
-                .iter()
-                .find(|(_, c)| c.contains(&j))
-                .context("rejoiner not in any configured group")?
-                .1
-                .clone();
+            let full = plan
+                .chain_containing(j)
+                .context("rejoiner not in any planned group")?
+                .to_vec();
             let kp = keypair_for(self.cfg.seed, j, self.cfg.rsa_bits);
             master.transport.call(
                 proto::REGISTER_KEY,
@@ -655,7 +653,7 @@ impl SafeSession {
             self.replace_context(ctx);
         }
         // Active peers re-fetch each rejoiner's (possibly new) public key.
-        for (_, chain) in chains {
+        for (_, chain) in plan.groups() {
             for &j in rejoiners {
                 if !chain.contains(&j) {
                     continue;
@@ -712,7 +710,7 @@ impl SafeSession {
         // B2: each active peer regenerates its receive-key for the
         // rejoiner, posts it, and pulls the rejoiner's fresh key for
         // itself.
-        for (_, chain) in chains {
+        for (_, chain) in plan.groups() {
             for &j in rejoiners {
                 if !chain.contains(&j) {
                     continue;
@@ -723,41 +721,13 @@ impl SafeSession {
                         // regenerating here would desync the key versions.
                         continue;
                     }
-                    let master = self.master_context(peer)?;
-                    let (sealed, k) = {
-                        let mut rng = master.rng.lock().unwrap();
-                        let k = SymmetricKey::generate(rng.as_mut());
-                        let s = master.peer_keys[&j].encrypt_block(&k.master, rng.as_mut())?;
-                        (Blob::new(s), k)
-                    };
-                    master.transport.call(
-                        proto::POST_PRENEG_KEYS,
-                        &proto::PostPrenegKeys {
-                            node: peer,
-                            keys: BTreeMap::from([(j, sealed)]),
-                        }
-                        .to_value(),
-                    )?;
-                    let resp = master.transport.call(
-                        proto::GET_PRENEG_KEY,
-                        &proto::GetPrenegKey { node: peer, owner: j }.to_value(),
-                    )?;
-                    let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
-                    let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
-                    let mut recv = (*master.recv_keys).clone();
-                    recv.insert(j, k);
-                    let mut send = (*master.send_keys).clone();
-                    send.insert(j, SymmetricKey::from_bytes(&m)?);
-                    let mut ctx = master.fork(self.round_rng(peer, epoch ^ 0x2b));
-                    ctx.recv_keys = Arc::new(recv);
-                    ctx.send_keys = Arc::new(send);
-                    self.replace_context(ctx);
+                    self.preneg_peer_refresh(j, peer, epoch ^ 0x2b)?;
                 }
             }
         }
         // B3: each rejoiner pulls every active peer's fresh key for it.
         for &j in rejoiners {
-            let Some((_, chain)) = chains.iter().find(|(_, c)| c.contains(&j)) else {
+            let Some(chain) = plan.chain_containing(j) else {
                 continue;
             };
             let master = self.master_context(j)?;
@@ -776,6 +746,166 @@ impl SafeSession {
             }
             let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x3c));
             ctx.send_keys = Arc::new(send_keys);
+            self.replace_context(ctx);
+        }
+        Ok(())
+    }
+
+    /// §5.8 peer-side refresh of one symmetric link: `peer` generates a
+    /// fresh receive-key for `j`, posts it sealed under `j`'s RSA key,
+    /// and pulls the key `j` generated for it (which the caller must
+    /// have posted beforehand). Shared by the rejoiner re-key (phase B2)
+    /// and the merge-reassignment re-key, so the pairwise handshake and
+    /// its message accounting exist in exactly one place.
+    fn preneg_peer_refresh(&self, j: u64, peer: u64, rng_salt: u64) -> Result<()> {
+        use crate::blob::Blob;
+        let master = self.master_context(peer)?;
+        let (sealed, k) = {
+            let mut rng = master.rng.lock().unwrap();
+            let k = SymmetricKey::generate(rng.as_mut());
+            let s = master.peer_keys[&j].encrypt_block(&k.master, rng.as_mut())?;
+            (Blob::new(s), k)
+        };
+        master.transport.call(
+            proto::POST_PRENEG_KEYS,
+            &proto::PostPrenegKeys { node: peer, keys: BTreeMap::from([(j, sealed)]) }
+                .to_value(),
+        )?;
+        let resp = master.transport.call(
+            proto::GET_PRENEG_KEY,
+            &proto::GetPrenegKey { node: peer, owner: j }.to_value(),
+        )?;
+        let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
+        let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+        let mut recv = (*master.recv_keys).clone();
+        recv.insert(j, k);
+        let mut send = (*master.send_keys).clone();
+        send.insert(j, SymmetricKey::from_bytes(&m)?);
+        let mut ctx = master.fork(self.round_rng(peer, rng_salt));
+        ctx.recv_keys = Arc::new(recv);
+        ctx.send_keys = Arc::new(send);
+        self.replace_context(ctx);
+        Ok(())
+    }
+
+    /// Key exchange for merge-reassigned nodes: when the planner merges a
+    /// group's survivors into a neighbouring chain, the moved nodes and
+    /// their new peers hold no key material for each other — fetch it,
+    /// for the *new links only*. Links already keyed (same home group, a
+    /// previous round's merge, or a rejoiner's full refresh) are skipped,
+    /// so unmoved survivors never re-key — the same accounting discipline
+    /// as rejoiner-only re-keys, extended to reassignment.
+    fn rekey_reassigned(&self, plan: &TopologyPlan, epoch: u64) -> Result<()> {
+        use crate::blob::Blob;
+        if plan.reassignments().is_empty() {
+            return Ok(());
+        }
+        // RSA layer: each side of a new link fetches the other's public
+        // key (both need it — predecessors seal *to* the moved node,
+        // successors verify nothing but the moved node seals to them).
+        for r in plan.reassignments() {
+            let j = r.node;
+            let chain = plan
+                .chain(r.to_group)
+                .context("reassignment targets a group missing from the plan")?
+                .to_vec();
+            let master = self.master_context(j)?;
+            let mut pk = (*master.peer_keys).clone();
+            let mut changed = false;
+            for &peer in &chain {
+                if peer == j || pk.contains_key(&peer) {
+                    continue;
+                }
+                let resp = master
+                    .transport
+                    .call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
+                let delivery = proto::KeyDelivery::from_value(&resp)?;
+                pk.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
+                changed = true;
+            }
+            if changed {
+                let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x4d));
+                ctx.peer_keys = Arc::new(pk);
+                self.replace_context(ctx);
+            }
+            for &peer in &chain {
+                if peer == j {
+                    continue;
+                }
+                let mp = self.master_context(peer)?;
+                if mp.peer_keys.contains_key(&j) {
+                    continue;
+                }
+                let resp = mp
+                    .transport
+                    .call(proto::GET_KEY, &proto::GetKey { node: j }.to_value())?;
+                let delivery = proto::KeyDelivery::from_value(&resp)?;
+                let mut pk = (*mp.peer_keys).clone();
+                pk.insert(j, RsaPublicKey::from_json(&delivery.key)?);
+                let mut ctx = mp.fork(self.round_rng(peer, epoch ^ 0x5e));
+                ctx.peer_keys = Arc::new(pk);
+                self.replace_context(ctx);
+            }
+        }
+        if self.cfg.mode != CipherMode::PreNegotiated {
+            return Ok(());
+        }
+        // §5.8 symmetric layer, new links only. For each moved node j and
+        // unkeyed peer p: j generates its receive-key for p (one batched
+        // post per moved node), p generates its receive-key for j and
+        // posts it, then each pulls the other's fresh key.
+        for r in plan.reassignments() {
+            let j = r.node;
+            let chain = plan
+                .chain(r.to_group)
+                .context("reassignment targets a group missing from the plan")?
+                .to_vec();
+            let master = self.master_context(j)?;
+            let new_peers: Vec<u64> = chain
+                .iter()
+                .copied()
+                .filter(|&p| p != j && !master.recv_keys.contains_key(&p))
+                .collect();
+            if new_peers.is_empty() {
+                continue;
+            }
+            let mut sealed = BTreeMap::new();
+            let mut mine = (*master.recv_keys).clone();
+            {
+                let mut rng = master.rng.lock().unwrap();
+                for &peer in &new_peers {
+                    let k = SymmetricKey::generate(rng.as_mut());
+                    let s = master.peer_keys[&peer].encrypt_block(&k.master, rng.as_mut())?;
+                    sealed.insert(peer, Blob::new(s));
+                    mine.insert(peer, k);
+                }
+            }
+            master.transport.call(
+                proto::POST_PRENEG_KEYS,
+                &proto::PostPrenegKeys { node: j, keys: sealed }.to_value(),
+            )?;
+            let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x6f));
+            ctx.recv_keys = Arc::new(mine);
+            self.replace_context(ctx);
+            // Each new peer reciprocates and the two sides pull.
+            let mut send_keys = BTreeMap::new();
+            for &peer in &new_peers {
+                self.preneg_peer_refresh(j, peer, epoch ^ 0x70)?;
+                // j pulls the key `peer` just generated for it.
+                let master = self.master_context(j)?;
+                let resp = master.transport.call(
+                    proto::GET_PRENEG_KEY,
+                    &proto::GetPrenegKey { node: j, owner: peer }.to_value(),
+                )?;
+                let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
+                let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+                send_keys.insert(peer, SymmetricKey::from_bytes(&m)?);
+            }
+            let master = self.master_context(j)?;
+            let mut send = (*master.send_keys).clone();
+            send.extend(send_keys);
+            let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x71));
+            ctx.send_keys = Arc::new(send);
             self.replace_context(ctx);
         }
         Ok(())

@@ -1,0 +1,44 @@
+//! Topology subsystem: group/chain planning as a first-class layer.
+//!
+//! The paper's scalability story (§5.3, §5.5, Figs 9/12) rests on
+//! subgrouping: nodes are split into parallel chains, each with its own
+//! initiator, and the controller folds the group averages into a global
+//! mean. Until this subsystem existed, that split was a static even
+//! partition recomputed ad hoc at every call site; now all group/chain
+//! decisions flow through one planner:
+//!
+//! * [`GroupPlanner`] owns the configured membership and produces one
+//!   [`TopologyPlan`] per round — an immutable snapshot of `group →
+//!   ordered chain` and `node → group`.
+//! * **Chain re-formation**: nodes a [`ChurnSchedule`] keeps out of a
+//!   round are simply not in the plan; the chain closes around them.
+//! * **Deterministic permutation**: with
+//!   `SessionConfig::shuffle_chain_each_round`, each round's chain order
+//!   is a seeded Fisher–Yates permutation (paper §8: randomizing the
+//!   order limits what colluding neighbours learn across rounds).
+//! * **Privacy-floor merge re-balancing** (the Turbo-Aggregate move):
+//!   when churn leaves a group with fewer than [`PRIVACY_FLOOR`]
+//!   projected-live nodes, the planner merges its survivors into the
+//!   smallest neighbouring group instead of aborting, emitting one
+//!   [`Reassignment`] per moved node so that *only moved nodes* re-key —
+//!   the same accounting discipline as rejoiner-only re-keys. The abort
+//!   path remains only when the *total* live population drops below the
+//!   floor.
+//! * **Head rotation**: a node scheduled to die this round (at any
+//!   non-initiator fail point) is never placed at the chain head, so a
+//!   scheduled death exercises progress failover (`2f` messages) rather
+//!   than burning an aggregation-timeout initiator election.
+//!
+//! The session engine (`protocols::safe`) consumes plans for every round;
+//! `BeginRound` carries the plan's reassignment deltas to the controller,
+//! which answers mid-round privacy-floor trips with `merge_groups`
+//! (re-plan and merge next round) when merging is possible and
+//! `abort_privacy_floor` only as the fallback.
+//!
+//! [`ChurnSchedule`]: crate::learner::faults::ChurnSchedule
+
+pub mod plan;
+pub mod planner;
+
+pub use plan::{MergeEvent, Reassignment, TopologyPlan};
+pub use planner::{GroupPlanner, PRIVACY_FLOOR};

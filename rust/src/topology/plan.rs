@@ -1,0 +1,194 @@
+//! Immutable per-round topology snapshots.
+//!
+//! A [`TopologyPlan`] is what one aggregation round *actually looks
+//! like*: which groups exist, each group's ordered chain, where every
+//! node sits, and — when privacy-floor re-balancing kicked in — which
+//! nodes were merged out of their home group ([`Reassignment`]) and
+//! which groups were dissolved ([`MergeEvent`]). Plans are produced by
+//! [`GroupPlanner::plan_round`](super::GroupPlanner::plan_round) and
+//! never mutated; the session engine, the controller's `BeginRound`
+//! message and the re-key accounting all read the same snapshot.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::json::Value;
+
+/// One node aggregating under a group other than its configured home
+/// group this round (the per-node delta of a privacy-floor merge).
+///
+/// Reassignments are the re-key unit: a moved node must hold keys for
+/// its new chain peers (and they for it), but links between unmoved
+/// survivors keep their existing keys — mirroring the rejoiner-only
+/// re-key discipline of the multi-round engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Reassignment {
+    /// The moved node.
+    pub node: u64,
+    /// Its configured home group.
+    pub from_group: u64,
+    /// The group whose chain it joins this round.
+    pub to_group: u64,
+}
+
+impl Reassignment {
+    /// Wire form (rides on `BeginRound.reassigned`).
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("node", Value::from(self.node)),
+            ("from_group", Value::from(self.from_group)),
+            ("to_group", Value::from(self.to_group)),
+        ])
+    }
+
+    /// Parse the wire form produced by [`Reassignment::to_value`].
+    pub fn from_value(v: &Value) -> Result<Reassignment> {
+        Ok(Reassignment {
+            node: v.u64_of("node").context("reassignment missing node")?,
+            from_group: v.u64_of("from_group").context("reassignment missing from_group")?,
+            to_group: v.u64_of("to_group").context("reassignment missing to_group")?,
+        })
+    }
+}
+
+/// One privacy-floor merge: group `from_group` fell below the floor and
+/// its present members were appended to `into_group`'s chain.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MergeEvent {
+    /// The dissolved group.
+    pub from_group: u64,
+    /// The neighbouring group that absorbed it.
+    pub into_group: u64,
+    /// The nodes that moved (in their pre-merge chain order).
+    pub moved: Vec<u64>,
+}
+
+/// Immutable snapshot of one round's group/chain topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopologyPlan {
+    /// `(group id, ordered chain)` sorted by group id.
+    groups: Vec<(u64, Vec<u64>)>,
+    /// node → group id (derived index).
+    group_of: BTreeMap<u64, u64>,
+    /// Per-node merge deltas (final placement vs home group).
+    reassignments: Vec<Reassignment>,
+    /// The merges that produced this plan, in application order.
+    merges: Vec<MergeEvent>,
+}
+
+impl TopologyPlan {
+    pub(crate) fn new(
+        groups: Vec<(u64, Vec<u64>)>,
+        reassignments: Vec<Reassignment>,
+        merges: Vec<MergeEvent>,
+    ) -> TopologyPlan {
+        let mut group_of = BTreeMap::new();
+        for (gid, chain) in &groups {
+            for &node in chain {
+                group_of.insert(node, *gid);
+            }
+        }
+        TopologyPlan { groups, group_of, reassignments, merges }
+    }
+
+    /// The round's groups: `(group id, ordered chain)`, ascending id.
+    pub fn groups(&self) -> &[(u64, Vec<u64>)] {
+        &self.groups
+    }
+
+    /// The ordered chain of `group`, if it exists this round.
+    pub fn chain(&self, group: u64) -> Option<&[u64]> {
+        self.groups
+            .iter()
+            .find(|(gid, _)| *gid == group)
+            .map(|(_, chain)| chain.as_slice())
+    }
+
+    /// The chain containing `node`, if it participates this round.
+    pub fn chain_containing(&self, node: u64) -> Option<&[u64]> {
+        self.chain(self.group_of(node)?)
+    }
+
+    /// The group `node` aggregates under this round.
+    pub fn group_of(&self, node: u64) -> Option<u64> {
+        self.group_of.get(&node).copied()
+    }
+
+    /// Does `node` participate in this round at all?
+    pub fn contains(&self, node: u64) -> bool {
+        self.group_of.contains_key(&node)
+    }
+
+    /// Total nodes across all chains (the round's active population).
+    pub fn total_live(&self) -> usize {
+        self.groups.iter().map(|(_, c)| c.len()).sum()
+    }
+
+    /// More than one group this round (drives the §5.5 `+g` pulls).
+    pub fn is_multi_group(&self) -> bool {
+        self.groups.len() > 1
+    }
+
+    /// `group id → chain` map (the `BeginRound.groups` wire shape).
+    pub fn groups_map(&self) -> BTreeMap<u64, Vec<u64>> {
+        self.groups.iter().cloned().collect()
+    }
+
+    /// Consume the plan into its `(group id, chain)` list.
+    pub fn into_groups(self) -> Vec<(u64, Vec<u64>)> {
+        self.groups
+    }
+
+    /// Per-node merge deltas: every node placed outside its home group,
+    /// sorted by node id. Only these nodes re-key.
+    pub fn reassignments(&self) -> &[Reassignment] {
+        &self.reassignments
+    }
+
+    /// The privacy-floor merges applied while building this plan.
+    pub fn merges(&self) -> &[MergeEvent] {
+        &self.merges
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> TopologyPlan {
+        TopologyPlan::new(
+            vec![(1, vec![1, 2, 3, 7, 8]), (2, vec![4, 5, 6])],
+            vec![
+                Reassignment { node: 7, from_group: 3, to_group: 1 },
+                Reassignment { node: 8, from_group: 3, to_group: 1 },
+            ],
+            vec![MergeEvent { from_group: 3, into_group: 1, moved: vec![7, 8] }],
+        )
+    }
+
+    #[test]
+    fn lookups_are_consistent() {
+        let p = plan();
+        assert_eq!(p.total_live(), 8);
+        assert!(p.is_multi_group());
+        assert_eq!(p.group_of(7), Some(1));
+        assert_eq!(p.group_of(5), Some(2));
+        assert_eq!(p.group_of(9), None);
+        assert!(p.contains(4));
+        assert!(!p.contains(9));
+        assert_eq!(p.chain(2), Some(&[4u64, 5, 6][..]));
+        assert_eq!(p.chain_containing(8), Some(&[1u64, 2, 3, 7, 8][..]));
+        assert_eq!(p.chain(9), None);
+        assert_eq!(p.reassignments().len(), 2);
+        assert_eq!(p.merges()[0].into_group, 1);
+        assert_eq!(p.groups_map().get(&2), Some(&vec![4, 5, 6]));
+    }
+
+    #[test]
+    fn reassignment_value_roundtrip() {
+        let r = Reassignment { node: 4, from_group: 2, to_group: 1 };
+        assert_eq!(Reassignment::from_value(&r.to_value()).unwrap(), r);
+        assert!(Reassignment::from_value(&Value::obj()).is_err());
+    }
+}

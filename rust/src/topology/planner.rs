@@ -1,0 +1,429 @@
+//! The group planner: membership, per-round permutation, chain
+//! re-formation and privacy-floor merge re-balancing.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::config::SessionConfig;
+use crate::crypto::rng::{DeterministicRng, SecureRng};
+use crate::learner::faults::{FailPoint, FaultPlan};
+
+use super::plan::{MergeEvent, Reassignment, TopologyPlan};
+
+/// §5.3's `n − f ≥ 3`: a chain with fewer than 3 live nodes lets
+/// neighbours infer each other's values, so no group may aggregate below
+/// this population.
+pub const PRIVACY_FLOOR: usize = 3;
+
+/// Owns the configured group membership and produces one immutable
+/// [`TopologyPlan`] per round.
+///
+/// Planning is a pure function of `(configured groups, seed, round salt,
+/// absent set, fault plan)` — no wall clock, no global state — so the
+/// same inputs always produce the same plan, which is what makes seeded
+/// paper-scale churn runs reproducible.
+#[derive(Debug, Clone)]
+pub struct GroupPlanner {
+    /// Configured home chains, ascending group id.
+    groups: Vec<(u64, Vec<u64>)>,
+    /// Seed for the per-round chain permutation (0 when unseeded).
+    seed: u64,
+    /// Permute each group's chain every round (paper §8).
+    shuffle_each_round: bool,
+    /// Merge under-floor groups instead of aborting.
+    merge_floor: bool,
+}
+
+impl GroupPlanner {
+    /// Planner for `n_nodes` split evenly into `groups` chains, with all
+    /// per-round behaviors (shuffle, merge) explicit.
+    #[must_use]
+    pub fn new(
+        n_nodes: usize,
+        groups: usize,
+        seed: Option<u64>,
+        shuffle_each_round: bool,
+        merge_floor: bool,
+    ) -> GroupPlanner {
+        GroupPlanner {
+            groups: Self::even_split(n_nodes, groups),
+            seed: seed.unwrap_or(0),
+            shuffle_each_round,
+            merge_floor,
+        }
+    }
+
+    /// Planner configured exactly as a [`SessionConfig`] describes.
+    #[must_use]
+    pub fn from_config(cfg: &SessionConfig) -> GroupPlanner {
+        GroupPlanner::new(
+            cfg.n_nodes,
+            cfg.groups,
+            cfg.seed,
+            cfg.shuffle_chain_each_round,
+            cfg.merge_floor,
+        )
+    }
+
+    /// Split nodes `1..=n_nodes` into `groups` contiguous chains (the
+    /// paper's 2×6 / 3×4 / 4×3 groupings). Groups are numbered from 1;
+    /// trailing groups may be one node shorter on uneven splits.
+    #[must_use]
+    pub fn even_split(n_nodes: usize, groups: usize) -> Vec<(u64, Vec<u64>)> {
+        let groups = groups.max(1);
+        let per = (n_nodes + groups - 1) / groups;
+        let mut out = Vec::new();
+        let mut next = 1u64;
+        for g in 0..groups {
+            let mut chain = Vec::new();
+            for _ in 0..per {
+                if next as usize > n_nodes {
+                    break;
+                }
+                chain.push(next);
+                next += 1;
+            }
+            if !chain.is_empty() {
+                out.push(((g + 1) as u64, chain));
+            }
+        }
+        out
+    }
+
+    /// Every configured node id, ascending.
+    #[must_use]
+    pub fn membership(&self) -> Vec<u64> {
+        let mut all: Vec<u64> =
+            self.groups.iter().flat_map(|(_, c)| c.iter().copied()).collect();
+        all.sort_unstable();
+        all
+    }
+
+    /// The configured home group of `node`.
+    #[must_use]
+    pub fn home_group(&self, node: u64) -> Option<u64> {
+        self.groups
+            .iter()
+            .find(|(_, c)| c.contains(&node))
+            .map(|(gid, _)| *gid)
+    }
+
+    /// The configured topology with full membership: no permutation, no
+    /// absences, no merges. Used at session build (round 0 key exchange)
+    /// and by the deprecated `SessionConfig::group_chains` shim.
+    #[must_use]
+    pub fn base_plan(&self) -> TopologyPlan {
+        TopologyPlan::new(self.groups.clone(), Vec::new(), Vec::new())
+    }
+
+    /// Build the plan for one round.
+    ///
+    /// * `permutation_salt` — monotone per-round value driving the
+    ///   seeded chain shuffle (0 = the configured order, matching the
+    ///   pre-subsystem behavior of round 0 never shuffling).
+    /// * `absent` — nodes churned out of this round entirely (the chain
+    ///   re-forms without them).
+    /// * `faults` — deaths *scheduled within* this round. They stay in
+    ///   the chain (their failover is in-round `2f` traffic) but count
+    ///   against the privacy floor, are kept off the chain head (a dead
+    ///   head would burn an aggregation-timeout election instead of a
+    ///   cheap repost), and trigger proactive merges.
+    ///
+    /// Merge re-balancing: every group whose projected-live population
+    /// (present minus in-round stalling deaths) is below
+    /// [`PRIVACY_FLOOR`] is dissolved into its smallest neighbouring
+    /// group (by projected-live size; ties to the earlier group), until
+    /// all groups meet the floor. With merging disabled the same
+    /// condition is an error; with or without merging, a total live
+    /// population below the floor always aborts the round.
+    pub fn plan_round(
+        &self,
+        permutation_salt: u64,
+        absent: &BTreeSet<u64>,
+        faults: &FaultPlan,
+    ) -> Result<TopologyPlan> {
+        let mut chains = self.groups.clone();
+        // 1. Deterministic per-round permutation (paper §8).
+        if self.shuffle_each_round && permutation_salt > 0 {
+            for (gid, chain) in chains.iter_mut() {
+                let mut rng =
+                    DeterministicRng::seed(self.seed ^ (permutation_salt << 20) ^ *gid);
+                for i in (1..chain.len()).rev() {
+                    let j = rng.next_below(i + 1);
+                    chain.swap(i, j);
+                }
+            }
+        }
+        // 2. Chain re-formation: drop churned-out nodes, then groups left
+        //    with nobody present.
+        for (_, chain) in chains.iter_mut() {
+            chain.retain(|n| !absent.contains(n));
+        }
+        chains.retain(|(_, c)| !c.is_empty());
+
+        // A death that stalls the chain (never participates, or pulls
+        // and dies) removes the node from the round's effective
+        // population; deaths after posting keep their contribution.
+        let stalls = |node: u64| {
+            matches!(
+                faults.point(node),
+                Some(FailPoint::NeverStart) | Some(FailPoint::AfterGet)
+            )
+        };
+        let projected =
+            |chain: &[u64]| chain.iter().filter(|&&n| !stalls(n)).count();
+
+        // 3. Privacy-floor handling: merge (default) or abort.
+        let mut merges = Vec::new();
+        if self.merge_floor {
+            while chains.len() > 1 {
+                let Some(i) =
+                    chains.iter().position(|(_, c)| projected(c) < PRIVACY_FLOOR)
+                else {
+                    break;
+                };
+                // Smallest neighbouring group by projected-live size;
+                // ties go to the earlier neighbour.
+                let target = match (i.checked_sub(1), (i + 1 < chains.len()).then_some(i + 1)) {
+                    (Some(p), Some(nx)) => {
+                        if projected(&chains[nx].1) < projected(&chains[p].1) {
+                            nx
+                        } else {
+                            p
+                        }
+                    }
+                    (Some(p), None) => p,
+                    (None, Some(nx)) => nx,
+                    (None, None) => unreachable!("len > 1"),
+                };
+                let (from_group, moved) = chains.remove(i);
+                let target = if target > i { target - 1 } else { target };
+                let into_group = chains[target].0;
+                chains[target].1.extend(moved.iter().copied());
+                merges.push(MergeEvent { from_group, into_group, moved });
+            }
+        } else if let Some((gid, chain)) =
+            chains.iter().find(|(_, c)| projected(c) < PRIVACY_FLOOR)
+        {
+            bail!(
+                "group {gid}: {} live nodes < {PRIVACY_FLOOR} (privacy floor, §5.3); \
+                 merges disabled (--merge-floor off)",
+                projected(chain)
+            );
+        }
+        let total: usize = chains.iter().map(|(_, c)| projected(c)).sum();
+        if total < PRIVACY_FLOOR {
+            bail!(
+                "{total} total live nodes < {PRIVACY_FLOOR} (privacy floor, §5.3); \
+                 no merge can restore the floor"
+            );
+        }
+
+        // 4. Head rotation: never start the chain on a node scheduled to
+        //    die at a non-initiator fail point this round.
+        let avoid_head = |node: u64| {
+            matches!(
+                faults.point(node),
+                Some(FailPoint::NeverStart)
+                    | Some(FailPoint::AfterGet)
+                    | Some(FailPoint::AfterPost)
+            )
+        };
+        for (_, chain) in chains.iter_mut() {
+            if let Some(pos) = chain.iter().position(|&n| !avoid_head(n)) {
+                chain.rotate_left(pos);
+            }
+        }
+
+        // 5. Per-node deltas: final placement vs configured home group.
+        let mut reassignments = Vec::new();
+        for (gid, chain) in &chains {
+            for &node in chain {
+                if let Some(home) = self.home_group(node) {
+                    if home != *gid {
+                        reassignments.push(Reassignment {
+                            node,
+                            from_group: home,
+                            to_group: *gid,
+                        });
+                    }
+                }
+            }
+        }
+        reassignments.sort_by_key(|r| r.node);
+        Ok(TopologyPlan::new(chains, reassignments, merges))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::faults::FaultPlan;
+
+    fn planner(n: usize, g: usize) -> GroupPlanner {
+        GroupPlanner::new(n, g, Some(42), false, true)
+    }
+
+    fn no_absent() -> BTreeSet<u64> {
+        BTreeSet::new()
+    }
+
+    #[test]
+    fn even_split_matches_paper_groupings() {
+        let chains = GroupPlanner::even_split(12, 4);
+        assert_eq!(chains.len(), 4);
+        assert_eq!(chains[0], (1, vec![1, 2, 3]));
+        assert_eq!(chains[3], (4, vec![10, 11, 12]));
+        let uneven = GroupPlanner::even_split(7, 2);
+        assert_eq!(uneven[0].1, vec![1, 2, 3, 4]);
+        assert_eq!(uneven[1].1, vec![5, 6, 7]);
+        assert_eq!(GroupPlanner::even_split(5, 1), vec![(1, vec![1, 2, 3, 4, 5])]);
+    }
+
+    #[test]
+    fn base_plan_is_configured_membership() {
+        let p = planner(9, 3);
+        let base = p.base_plan();
+        assert_eq!(base.groups().len(), 3);
+        assert_eq!(base.total_live(), 9);
+        assert!(base.reassignments().is_empty());
+        assert_eq!(p.membership(), (1..=9).collect::<Vec<u64>>());
+        assert_eq!(p.home_group(5), Some(2));
+        assert_eq!(p.home_group(99), None);
+    }
+
+    #[test]
+    fn absent_nodes_reform_the_chain() {
+        let p = planner(6, 1);
+        let plan = p
+            .plan_round(0, &BTreeSet::from([3, 5]), &FaultPlan::none())
+            .unwrap();
+        assert_eq!(plan.chain(1), Some(&[1u64, 2, 4, 6][..]));
+        assert!(plan.reassignments().is_empty());
+    }
+
+    #[test]
+    fn under_floor_group_merges_into_smallest_neighbor() {
+        // 9 nodes / 3 groups of 3; group 2 loses node 6 → {4,5} < 3.
+        let p = planner(9, 3);
+        let plan = p
+            .plan_round(0, &BTreeSet::from([6]), &FaultPlan::none())
+            .unwrap();
+        assert_eq!(plan.groups().len(), 2);
+        // Neighbours of group 2 are groups 1 and 3, both size 3: tie goes
+        // to the earlier one.
+        assert_eq!(plan.chain(1), Some(&[1u64, 2, 3, 4, 5][..]));
+        assert_eq!(plan.chain(3), Some(&[7u64, 8, 9][..]));
+        assert_eq!(plan.merges().len(), 1);
+        assert_eq!(plan.merges()[0].from_group, 2);
+        assert_eq!(plan.merges()[0].into_group, 1);
+        assert_eq!(plan.merges()[0].moved, vec![4, 5]);
+        let moved: Vec<u64> = plan.reassignments().iter().map(|r| r.node).collect();
+        assert_eq!(moved, vec![4, 5]);
+        assert!(plan
+            .reassignments()
+            .iter()
+            .all(|r| r.from_group == 2 && r.to_group == 1));
+    }
+
+    #[test]
+    fn merge_prefers_smaller_neighbor() {
+        // 12 nodes / 4 groups of 3. Group 3 drops to 1 node; group 4 is
+        // down to 2, group 2 still has 3 → group 3 merges into group 4.
+        let p = planner(12, 4);
+        let plan = p
+            .plan_round(0, &BTreeSet::from([7, 8, 12]), &FaultPlan::none())
+            .unwrap();
+        // Group 3 ({9}) merges into group 4 ({10,11}) → {10,11,9}; both
+        // survivors meet the floor.
+        assert!(plan.chain(3).is_none());
+        assert_eq!(plan.chain(4), Some(&[10u64, 11, 9][..]));
+        assert_eq!(plan.merges().len(), 1);
+        assert_eq!(plan.merges()[0].into_group, 4);
+    }
+
+    #[test]
+    fn cascading_merges_until_floor_met() {
+        // 8 nodes / 4 groups of 2: every group is under floor; merges
+        // cascade until the floor is met.
+        let p = planner(8, 4);
+        let plan = p.plan_round(0, &no_absent(), &FaultPlan::none()).unwrap();
+        assert!(plan.groups().iter().all(|(_, c)| c.len() >= PRIVACY_FLOOR));
+        assert_eq!(plan.total_live(), 8);
+        assert!(plan.merges().len() >= 2);
+    }
+
+    #[test]
+    fn scheduled_stalling_deaths_count_against_the_floor() {
+        // Group 2 has 3 present but one dies in-round before contributing
+        // → projected 2 → proactively merged.
+        let p = planner(6, 2);
+        let faults = FaultPlan::none().kill(5, FailPoint::NeverStart);
+        let plan = p.plan_round(0, &no_absent(), &faults).unwrap();
+        assert_eq!(plan.groups().len(), 1);
+        assert_eq!(plan.merges()[0].moved, vec![4, 5, 6]);
+        // Deaths after posting don't stall the chain → no merge.
+        let faults = FaultPlan::none().kill(5, FailPoint::AfterPost);
+        let plan = p.plan_round(0, &no_absent(), &faults).unwrap();
+        assert_eq!(plan.groups().len(), 2);
+    }
+
+    #[test]
+    fn merges_disabled_bails_with_privacy_floor_error() {
+        let p = GroupPlanner::new(6, 2, Some(1), false, false);
+        let err = p
+            .plan_round(0, &BTreeSet::from([6]), &FaultPlan::none())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("privacy floor"), "{err:#}");
+    }
+
+    #[test]
+    fn total_below_floor_always_aborts() {
+        let p = planner(4, 1);
+        let err = p
+            .plan_round(0, &BTreeSet::from([1, 4]), &FaultPlan::none())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("privacy floor"), "{err:#}");
+        // Even with merging on, 2 total survivors across 2 groups abort.
+        let p = planner(6, 2);
+        let err = p
+            .plan_round(0, &BTreeSet::from([1, 2, 4, 5]), &FaultPlan::none())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("privacy floor"), "{err:#}");
+    }
+
+    #[test]
+    fn head_rotation_avoids_scheduled_deaths() {
+        let p = planner(5, 1);
+        let faults = FaultPlan::none()
+            .kill(1, FailPoint::NeverStart)
+            .kill(2, FailPoint::AfterGet);
+        let plan = p.plan_round(0, &no_absent(), &faults).unwrap();
+        // Head rotates past the two dying nodes; order is preserved.
+        assert_eq!(plan.chain(1), Some(&[3u64, 4, 5, 1, 2][..]));
+        // An initiator-after-post death is an initiator fault — it stays
+        // eligible as head so the §5.4 failover path can be exercised.
+        let faults = FaultPlan::none().kill(1, FailPoint::InitiatorAfterPost);
+        let plan = p.plan_round(0, &no_absent(), &faults).unwrap();
+        assert_eq!(plan.chain(1), Some(&[1u64, 2, 3, 4, 5][..]));
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_round_keyed() {
+        let p = GroupPlanner::new(16, 2, Some(77), true, true);
+        let a = p.plan_round(3, &no_absent(), &FaultPlan::none()).unwrap();
+        let b = p.plan_round(3, &no_absent(), &FaultPlan::none()).unwrap();
+        assert_eq!(a, b, "same salt → same permutation");
+        let c = p.plan_round(4, &no_absent(), &FaultPlan::none()).unwrap();
+        assert_ne!(a.groups(), c.groups(), "different rounds permute differently");
+        // Salt 0 keeps the configured order (round 0 never shuffles).
+        let base = p.plan_round(0, &no_absent(), &FaultPlan::none()).unwrap();
+        assert_eq!(base.groups(), p.base_plan().groups());
+        // Every permutation is a permutation of the same membership.
+        let mut nodes: Vec<u64> =
+            c.groups().iter().flat_map(|(_, c)| c.iter().copied()).collect();
+        nodes.sort_unstable();
+        assert_eq!(nodes, p.membership());
+    }
+}

@@ -289,6 +289,93 @@ fn churn_preneg_rekey_touches_only_rejoiner_links() {
 }
 
 #[test]
+fn merge_rebalance_small_group_after_churn() {
+    // A 3-node group loses a node: 6 nodes / 2 groups; node 6 (group 2)
+    // dies after posting in round 1, so round 2's re-formed group 2 would
+    // hold only {4, 5} — below the §5.3 floor. With merging on (the
+    // default) the planner folds the survivors into group 1 instead of
+    // aborting.
+    let n = 6;
+    let mut c = churn_cfg(n);
+    c.groups = 2;
+    let session = SafeSession::new(c).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..2).map(|_| inputs(n)).collect();
+    let churn = ChurnSchedule::none().die(6, 1, FailPoint::AfterPost);
+    let results = session.run_rounds(&per_round, &churn).unwrap();
+
+    // Round 1: node 6 contributed before dying — full average, two
+    // groups, no merge, no key traffic.
+    assert_round_mean(&results, 1, n, &[]);
+    assert_eq!(results[0].metrics.merged_groups, 0);
+    assert_eq!(results[0].metrics.reassigned_nodes, 0);
+    assert_no_key_traffic(&results[0], 1);
+
+    // Round 2: survivors merged, round completes with the correct
+    // average over the 5 live nodes.
+    assert_round_mean(&results, 2, n, &[6]);
+    let r2 = &results[1].metrics;
+    assert_eq!(r2.merged_groups, 1, "group 2 dissolved into group 1");
+    assert_eq!(r2.reassigned_nodes, 2, "only nodes 4 and 5 moved");
+    // Only reassigned nodes re-key, and only their *new* links: nodes 4
+    // and 5 each fetch {1,2,3}'s keys and {1,2,3} each fetch both movers'
+    // keys — 2 × 3 × 2 = 12 fetches, no re-registration, nothing between
+    // unmoved survivors.
+    assert_eq!(r2.per_path.get(proto::GET_KEY), Some(&12));
+    assert!(!r2.per_path.contains_key(proto::REGISTER_KEY));
+    assert!(!r2.per_path.contains_key(proto::POST_PRENEG_KEYS));
+    assert_eq!(r2.rekey_messages, 12);
+    // The §5.2 accounting still holds: one merged 5-node chain, no
+    // failures → 4n + 2·0; the reassignment re-key delta is reported
+    // separately (footnote 3 discipline), not folded into messages.
+    assert_eq!(r2.messages, 4 * 5);
+    assert_eq!(r2.progress_failovers, 0);
+}
+
+#[test]
+fn merge_then_rejoin_restores_home_groups() {
+    // After a merge round, the dead node returns: the home 2-group
+    // topology is restored and only the rejoiner's key material moves
+    // (the movers already hold their cross-group keys — a repeated merge
+    // or un-merge is key-traffic-free for them).
+    let n = 6;
+    let mut c = churn_cfg(n);
+    c.groups = 2;
+    let session = SafeSession::new(c).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..3).map(|_| inputs(n)).collect();
+    let churn = ChurnSchedule::none().die(6, 1, FailPoint::AfterPost).rejoin(6, 3);
+    let results = session.run_rounds(&per_round, &churn).unwrap();
+    assert_eq!(results[1].metrics.merged_groups, 1);
+    let r3 = &results[2].metrics;
+    assert_round_mean(&results, 3, n, &[]);
+    assert_eq!(r3.merged_groups, 0, "home topology restored");
+    assert_eq!(r3.reassigned_nodes, 0);
+    // Two groups again → 4n + g messages; rejoiner-only re-key: node 6
+    // re-registers (1), fetches its 2 group peers, and they re-fetch it.
+    assert_eq!(r3.messages, 4 * 6 + 2);
+    assert_eq!(r3.per_path.get(proto::REGISTER_KEY), Some(&1));
+    assert_eq!(r3.per_path.get(proto::GET_KEY), Some(&4));
+    assert_eq!(r3.rekey_messages, 1 + 2 + 2);
+}
+
+#[test]
+fn merge_floor_off_aborts_under_floor_group() {
+    // Same churn as the merge test, but --merge-floor off: round 2 must
+    // refuse up front with a privacy-floor error instead of merging.
+    let n = 6;
+    let mut c = churn_cfg(n);
+    c.groups = 2;
+    c.merge_floor = false;
+    let session = SafeSession::new(c).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..2).map(|_| inputs(n)).collect();
+    let churn = ChurnSchedule::none().die(6, 1, FailPoint::AfterPost);
+    let err = session.run_rounds(&per_round, &churn).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("privacy floor"),
+        "round 2 must abort when merging is disabled: {err:#}"
+    );
+}
+
+#[test]
 fn churn_absence_window_respects_privacy_floor() {
     // Nodes 3 and 4 die *after posting* in round 1 (their values count,
     // the chain completes cleanly) — but the re-formed round-2 chain
