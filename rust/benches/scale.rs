@@ -1,15 +1,22 @@
-//! Paper-scale Poisson churn bench (topology subsystem): 120 nodes in
-//! 24 subgroups, 5 rounds of seeded Poisson arrival/departure with
-//! privacy-floor merge re-balancing on, verifying `4n + 2f (+ g)` per
-//! round with merge/reassignment re-keys accounted separately — and
-//! writing `BENCH_scale.json` for cross-PR tracking.
+//! Paper-scale Poisson churn bench (topology subsystem + event
+//! runtime): n nodes in ~n/5 subgroups, seeded Poisson
+//! arrival/departure with privacy-floor merge re-balancing on,
+//! verifying `4n + 2f (+ g)` per round with merge/reassignment re-keys
+//! accounted separately — then an n=10,000-class single-round smoke —
+//! and writing `BENCH_scale.json` (per-round wall-clock, messages/sec,
+//! peak process threads) for cross-PR tracking.
 //!
 //! Knobs (for CI's lighter smoke run): `SAFE_SCALE_NODES`,
 //! `SAFE_SCALE_GROUPS`, `SAFE_SCALE_ROUNDS`, `SAFE_SCALE_DIE`,
-//! `SAFE_SCALE_REJOIN`, `SAFE_SCALE_SEED`; set `SAFE_SCALE_NO_ASSERT=1`
-//! to report formula deltas without failing on them.
+//! `SAFE_SCALE_REJOIN`, `SAFE_SCALE_SEED`, `SAFE_SCALE_WORKERS`,
+//! `SAFE_SCALE_RUNTIME=threads|events`; `SAFE_SMOKE_NODES` /
+//! `SAFE_SMOKE_GROUPS` size the single-round smoke (`SAFE_SMOKE_NODES=0`
+//! skips it); set `SAFE_SCALE_NO_ASSERT=1` to report formula deltas
+//! without failing on them.
 
-use safe_agg::harness::scale::{poisson_scale, ScaleConfig};
+use safe_agg::config::RuntimeKind;
+use safe_agg::harness::scale::{poisson_scale, single_round_smoke, ScaleConfig};
+use safe_agg::json::Value;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -18,6 +25,10 @@ fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
 fn main() -> anyhow::Result<()> {
     let defaults = ScaleConfig::default();
     let n_nodes = env_or("SAFE_SCALE_NODES", defaults.n_nodes);
+    let runtime = match std::env::var("SAFE_SCALE_RUNTIME").as_deref() {
+        Ok("threads") => RuntimeKind::Threads,
+        _ => RuntimeKind::Events,
+    };
     let sc = ScaleConfig {
         n_nodes,
         // Chains of ~5 keep privacy-floor merges observable under churn.
@@ -26,6 +37,8 @@ fn main() -> anyhow::Result<()> {
         lambda_die: env_or("SAFE_SCALE_DIE", defaults.lambda_die),
         lambda_rejoin: env_or("SAFE_SCALE_REJOIN", defaults.lambda_rejoin),
         seed: env_or("SAFE_SCALE_SEED", defaults.seed),
+        runtime,
+        workers: env_or("SAFE_SCALE_WORKERS", defaults.workers),
         ..defaults
     };
     let report = poisson_scale(&sc)?;
@@ -52,7 +65,50 @@ fn main() -> anyhow::Result<()> {
             println!("warning: {msg}");
         }
     }
-    std::fs::write("BENCH_scale.json", report.to_json().to_string())?;
+    // The event runtime's whole point: the process runs O(workers)
+    // threads, not O(n). The slack covers main + monitor + probe + timer
+    // + HTTP/test scaffolding; 0 means /proc was unreadable.
+    if report.runtime == "events" && report.peak_threads > 0 && strict {
+        let cap = report.workers + 16;
+        anyhow::ensure!(
+            report.peak_threads <= cap,
+            "peak threads {} exceeds workers+16 = {}",
+            report.peak_threads,
+            cap
+        );
+    }
+
+    // n=10,000-class single-round smoke, event runtime only.
+    let smoke_nodes: usize = env_or("SAFE_SMOKE_NODES", 10_000);
+    let smoke = if smoke_nodes > 0 && runtime == RuntimeKind::Events {
+        let smoke_groups = env_or("SAFE_SMOKE_GROUPS", (smoke_nodes / 10).max(1));
+        let s = single_round_smoke(smoke_nodes, smoke_groups, sc.workers)?;
+        println!(
+            "smoke: n={} g={} in {:.3}s — {} messages (expected {}), peak threads {} \
+             ({} workers)",
+            s.n_nodes, s.groups, s.secs, s.messages, s.expected_messages, s.peak_threads,
+            s.workers
+        );
+        if s.peak_threads > 0 && strict {
+            anyhow::ensure!(
+                s.peak_threads <= s.workers + 16,
+                "smoke peak threads {} exceeds workers+16 = {}",
+                s.peak_threads,
+                s.workers + 16
+            );
+        }
+        Some(s)
+    } else {
+        println!("smoke: skipped");
+        None
+    };
+
+    let mut json = report.to_json();
+    json.set(
+        "smoke",
+        smoke.map(|s| s.to_json()).unwrap_or(Value::Null),
+    );
+    std::fs::write("BENCH_scale.json", json.to_string())?;
     println!("wrote BENCH_scale.json");
     Ok(())
 }

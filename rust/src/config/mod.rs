@@ -32,6 +32,20 @@ pub enum VectorEngine {
     Auto,
 }
 
+/// Which executor drives the learners of an in-proc session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// One OS thread per learner (the original executor; also the
+    /// fallback for HTTP transports, whose blocking client calls need a
+    /// thread to park).
+    Threads,
+    /// Worker-pool event runtime: learners are resumable state machines
+    /// multiplexed over `workers` threads (`runtime_exec`). Default —
+    /// this is what takes the scale harness past thread-per-learner
+    /// limits (n=10,000 single-round smoke).
+    Events,
+}
+
 /// Full description of one aggregation session (one or more rounds).
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
@@ -86,6 +100,14 @@ pub struct SessionConfig {
     /// The abort path remains when the *total* live population drops
     /// below 3, or when this is off.
     pub merge_floor: bool,
+    /// Learner executor (`--runtime threads|events`). `Events` (default)
+    /// drives all learners as state machines on a small worker pool;
+    /// `Threads` keeps one OS thread per learner. HTTP transports always
+    /// fall back to `Threads`.
+    pub runtime: RuntimeKind,
+    /// Worker threads for the event runtime (`--workers N`); 0 = auto
+    /// (available parallelism).
+    pub workers: usize,
 }
 
 impl Default for SessionConfig {
@@ -110,6 +132,8 @@ impl Default for SessionConfig {
             stagger_step: Duration::ZERO,
             shuffle_chain_each_round: false,
             merge_floor: true,
+            runtime: RuntimeKind::Events,
+            workers: 0,
         }
     }
 }
@@ -222,6 +246,11 @@ impl Args {
         }
         cfg.shuffle_chain_each_round =
             cfg.shuffle_chain_each_round || self.get_bool("shuffle-chain");
+        cfg.runtime = match self.get("runtime") {
+            Some("threads") | Some("thread") => RuntimeKind::Threads,
+            _ => RuntimeKind::Events,
+        };
+        cfg.workers = self.get_usize("workers", cfg.workers);
         cfg
     }
 }
@@ -305,6 +334,21 @@ mod tests {
         assert!(!a.to_session_config().merge_floor);
         let a = Args::parse(["run", "--merge-floor=on"].iter().map(|s| s.to_string()));
         assert!(a.to_session_config().merge_floor);
+    }
+
+    #[test]
+    fn runtime_flag_selects_executor() {
+        let a = Args::parse(["run"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().runtime, RuntimeKind::Events);
+        assert_eq!(a.to_session_config().workers, 0, "0 = auto-size the pool");
+        let a = Args::parse(["run", "--runtime", "threads"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().runtime, RuntimeKind::Threads);
+        let a = Args::parse(
+            ["run", "--runtime=events", "--workers", "8"].iter().map(|s| s.to_string()),
+        );
+        let cfg = a.to_session_config();
+        assert_eq!(cfg.runtime, RuntimeKind::Events);
+        assert_eq!(cfg.workers, 8);
     }
 
     #[test]

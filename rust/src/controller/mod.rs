@@ -20,14 +20,14 @@ pub mod state;
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicI64, Ordering as AtomicOrdering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::blob::Blob;
 use crate::json::Value;
 use crate::proto;
 use crate::topology::Reassignment;
-use crate::transport::Handler;
+use crate::transport::{Handler, NonBlockingHandler, PollKey, TryHandle, WaitHub};
 use state::{CheckStatus, GroupState, PostedAggregate};
 
 /// Controller timing knobs (paper Appendix A: `poll_time`, `yield_time`,
@@ -85,6 +85,9 @@ pub(crate) struct Inner {
 pub struct Controller {
     pub(crate) inner: Mutex<Inner>,
     pub(crate) cv: Condvar,
+    /// Completion-side mirror of `cv`: parked event-runtime long-polls,
+    /// woken at the same mutation points that notify the condvar.
+    hub: Arc<WaitHub>,
     /// Currently-blocked long-poll calls (connection pressure, §5.9).
     waiting: AtomicI64,
     /// High-water mark of `waiting` since the last reset.
@@ -108,9 +111,15 @@ impl Controller {
                 config,
             }),
             cv: Condvar::new(),
+            hub: Arc::new(WaitHub::default()),
             waiting: AtomicI64::new(0),
             peak_waiting: AtomicI64::new(0),
         }
+    }
+
+    /// The wait registry the event runtime parks long-polls in.
+    pub fn wait_hub(&self) -> Arc<WaitHub> {
+        self.hub.clone()
     }
 
     /// Peak number of simultaneously-parked long-polls (the §5.9
@@ -174,6 +183,97 @@ impl Controller {
         result
     }
 
+    // ---- long-poll predicates ----
+    //
+    // Each `poll_*` evaluates one long-poll predicate against `Inner`
+    // exactly once. The blocking [`Handler`] path re-runs them under
+    // `wait_until`; the event runtime's [`NonBlockingHandler`] path runs
+    // them once per probe — both therefore answer identically from the
+    // same state.
+
+    fn poll_aggregate(
+        inner: &mut Inner,
+        op: &proto::NodeOp,
+    ) -> Option<(PostedAggregate, u64, u64)> {
+        let gs = inner.groups.get_mut(&op.group)?;
+        let posted = gs.mailbox.remove(&op.node)?;
+        Some((posted, gs.posters.len() as u64, gs.round_id))
+    }
+
+    fn aggregate_response((posted, contributors, round_id): (PostedAggregate, u64, u64)) -> Value {
+        proto::AggregateDelivery {
+            aggregate: posted.aggregate,
+            from_node: posted.from_node,
+            posted: Some(contributors),
+            round_id: Some(round_id),
+        }
+        .into_value()
+    }
+
+    fn poll_check(inner: &mut Inner, op: &proto::NodeOp) -> Option<CheckStatus> {
+        let gs = inner.groups.get_mut(&op.group)?;
+        gs.check.remove(&op.node)
+    }
+
+    fn check_response(status: CheckStatus) -> Value {
+        match status {
+            CheckStatus::Consumed => proto::CheckOutcome::Consumed.to_value(),
+            CheckStatus::Repost { new_target } => {
+                proto::CheckOutcome::Repost { to_node: new_target }.to_value()
+            }
+        }
+    }
+
+    fn poll_average(inner: &Inner) -> Option<(Vec<f64>, u64)> {
+        // Global average is ready when every expected group posted its
+        // group average (§5.5 barrier). Equal-weight mean of means.
+        if inner.expected_groups.is_empty() {
+            return None;
+        }
+        let mut acc: Option<Vec<f64>> = None;
+        let mut count = 0usize;
+        for gid in &inner.expected_groups {
+            let gs = inner.groups.get(gid)?;
+            let avg = gs.average.as_ref()?;
+            match &mut acc {
+                None => acc = Some(avg.clone()),
+                Some(a) => {
+                    if a.len() != avg.len() {
+                        return None; // inconsistent; keep waiting
+                    }
+                    for (x, y) in a.iter_mut().zip(avg) {
+                        *x += y;
+                    }
+                }
+            }
+            count += 1;
+        }
+        let mut avg = acc?;
+        for x in avg.iter_mut() {
+            *x /= count as f64;
+        }
+        Some((avg, count as u64))
+    }
+
+    /// Cheap form of the §5.5 barrier check (no mean computed): used to
+    /// decide whether a `post_average` should wake [`PollKey::Average`]
+    /// waiters — waking per-post would stampede every parked learner
+    /// through an O(groups) probe at each group completion.
+    fn average_barrier_complete(inner: &Inner) -> bool {
+        !inner.expected_groups.is_empty()
+            && inner.expected_groups.iter().all(|gid| {
+                inner.groups.get(gid).map_or(false, |gs| gs.average.is_some())
+            })
+    }
+
+    fn poll_key(inner: &Inner, node: u64) -> Option<Value> {
+        inner.keys.get(&node).cloned()
+    }
+
+    fn poll_preneg(inner: &Inner, owner: u64, node: u64) -> Option<Blob> {
+        inner.preneg.get(&(owner, node)).cloned()
+    }
+
     fn configure(&self, body: &Value) -> Value {
         let mut inner = self.inner.lock().unwrap();
         if let Some(Value::Obj(groups)) = body.get("groups") {
@@ -221,6 +321,7 @@ impl Controller {
             inner.fed.expected_children = n as usize;
         }
         self.cv.notify_all();
+        self.hub.wake_all();
         proto::status("ok")
     }
 
@@ -251,6 +352,7 @@ impl Controller {
             inner.groups.insert(gid, gs);
         }
         self.cv.notify_all();
+        self.hub.wake_all();
         proto::status("ok")
     }
 
@@ -267,6 +369,7 @@ impl Controller {
         inner.bon = bon::BonState::default();
         inner.fed = hierarchy::FedState::default();
         self.cv.notify_all();
+        self.hub.wake_all();
         proto::status("ok")
     }
 
@@ -311,6 +414,8 @@ impl Controller {
         gs.check.insert(req.from_node, CheckStatus::Consumed);
         gs.last_activity = now;
         self.cv.notify_all();
+        self.hub.wake(PollKey::Aggregate { group: req.group, node: req.to_node });
+        self.hub.wake(PollKey::Check { group: req.group, node: req.from_node });
         proto::status("ok")
     }
 
@@ -320,19 +425,9 @@ impl Controller {
             Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
-        let res = self.wait_until_gauged(poll, |inner| {
-            let gs = inner.groups.get_mut(&op.group)?;
-            let posted = gs.mailbox.remove(&op.node)?;
-            Some((posted, gs.posters.len() as u64, gs.round_id))
-        });
+        let res = self.wait_until_gauged(poll, |inner| Self::poll_aggregate(inner, &op));
         match res {
-            Some((posted, contributors, round_id)) => proto::AggregateDelivery {
-                aggregate: posted.aggregate,
-                from_node: posted.from_node,
-                posted: Some(contributors),
-                round_id: Some(round_id),
-            }
-            .into_value(),
+            Some(hit) => Self::aggregate_response(hit),
             None => proto::status("empty"),
         }
     }
@@ -343,15 +438,9 @@ impl Controller {
             Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
-        let res = self.wait_until(poll, |inner| {
-            let gs = inner.groups.get_mut(&op.group)?;
-            gs.check.remove(&op.node)
-        });
+        let res = self.wait_until(poll, |inner| Self::poll_check(inner, &op));
         match res {
-            Some(CheckStatus::Consumed) => proto::CheckOutcome::Consumed.to_value(),
-            Some(CheckStatus::Repost { new_target }) => {
-                proto::CheckOutcome::Repost { to_node: new_target }.to_value()
-            }
+            Some(status) => Self::check_response(status),
             None => proto::status("empty"),
         }
     }
@@ -370,42 +459,16 @@ impl Controller {
         gs.average_contributors = req.contributors;
         gs.last_activity = Instant::now();
         self.cv.notify_all();
+        if Self::average_barrier_complete(&inner) {
+            self.hub.wake(PollKey::Average);
+        }
         proto::status("ok")
     }
 
     fn get_average(&self, body: &Value) -> Value {
         let poll = self.inner.lock().unwrap().config.poll_time;
         let _ = body;
-        let res = self.wait_until(poll, |inner| {
-            // Global average is ready when every expected group posted its
-            // group average (§5.5 barrier). Equal-weight mean of means.
-            if inner.expected_groups.is_empty() {
-                return None;
-            }
-            let mut acc: Option<Vec<f64>> = None;
-            let mut count = 0usize;
-            for gid in &inner.expected_groups {
-                let gs = inner.groups.get(gid)?;
-                let avg = gs.average.as_ref()?;
-                match &mut acc {
-                    None => acc = Some(avg.clone()),
-                    Some(a) => {
-                        if a.len() != avg.len() {
-                            return None; // inconsistent; keep waiting
-                        }
-                        for (x, y) in a.iter_mut().zip(avg) {
-                            *x += y;
-                        }
-                    }
-                }
-                count += 1;
-            }
-            let mut avg = acc?;
-            for x in avg.iter_mut() {
-                *x /= count as f64;
-            }
-            Some((avg, count as u64))
-        });
+        let res = self.wait_until(poll, |inner| Self::poll_average(inner));
         match res {
             Some((avg, groups)) => proto::AverageReady { average: avg, groups }.into_value(),
             None => proto::status("empty"),
@@ -459,6 +522,7 @@ impl Controller {
             .collect();
         let merge_floor = inner.merge_floor;
         let mut actions = Vec::new();
+        let mut wakes = Vec::new();
         for (gid, gs) in inner.groups.iter_mut() {
             if gs.average.is_some() {
                 continue;
@@ -513,6 +577,7 @@ impl Controller {
             if let Some(new_target) = gs.next_alive_after(failed) {
                 gs.check.insert(failed, CheckStatus::Repost { new_target });
                 gs.last_activity = Instant::now();
+                wakes.push(PollKey::Check { group: *gid, node: failed });
                 actions.push(Value::object(vec![
                     ("group", Value::from(*gid)),
                     ("action", Value::from("repost")),
@@ -524,6 +589,9 @@ impl Controller {
         }
         if !actions.is_empty() {
             self.cv.notify_all();
+        }
+        for key in wakes {
+            self.hub.wake(key);
         }
         Value::object(vec![("actions", Value::Arr(actions))])
     }
@@ -538,6 +606,7 @@ impl Controller {
         let mut inner = self.inner.lock().unwrap();
         inner.keys.insert(req.node, req.key);
         self.cv.notify_all();
+        self.hub.wake(PollKey::Key { node: req.node });
         proto::status("ok")
     }
 
@@ -547,7 +616,7 @@ impl Controller {
             Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
-        match self.wait_until(poll, |inner| inner.keys.get(&req.node).cloned()) {
+        match self.wait_until(poll, |inner| Self::poll_key(inner, req.node)) {
             Some(k) => proto::KeyDelivery { key: k }.to_value(),
             None => proto::status("empty"),
         }
@@ -559,10 +628,15 @@ impl Controller {
             Err(e) => return proto::status(&e.to_string()),
         };
         let mut inner = self.inner.lock().unwrap();
+        let mut wakes = Vec::new();
         for (to, blob) in req.keys {
             inner.preneg.insert((req.node, to), blob);
+            wakes.push(PollKey::Preneg { owner: req.node, node: to });
         }
         self.cv.notify_all();
+        for key in wakes {
+            self.hub.wake(key);
+        }
         proto::status("ok")
     }
 
@@ -572,7 +646,7 @@ impl Controller {
             Err(e) => return proto::status(&e.to_string()),
         };
         let poll = self.inner.lock().unwrap().config.poll_time;
-        match self.wait_until(poll, |inner| inner.preneg.get(&(req.owner, req.node)).cloned()) {
+        match self.wait_until(poll, |inner| Self::poll_preneg(inner, req.owner, req.node)) {
             Some(k) => proto::PrenegKeyDelivery { key: k }.to_value(),
             None => proto::status("empty"),
         }
@@ -639,6 +713,99 @@ impl Handler for Controller {
             proto::FED_POST_CHILD_AVERAGE => hierarchy::post_child_average(self, body),
             proto::FED_GET_GLOBAL_AVERAGE => hierarchy::get_global_average(self, body),
             _ => proto::status("unknown op"),
+        }
+    }
+}
+
+/// Completion-style view for the event runtime: the five SAFE long-poll
+/// ops probe their predicate exactly once and report the [`PollKey`] to
+/// wait on instead of parking the calling thread. Every other op answers
+/// immediately through the blocking [`Handler`] (posts and elections
+/// never park; the baseline ops are only driven by thread-based
+/// sessions).
+impl NonBlockingHandler for Controller {
+    fn try_handle(&self, path: &str, body: &Value) -> TryHandle {
+        match path {
+            proto::GET_AGGREGATE => {
+                let op = match proto::NodeOp::from_value(body) {
+                    Ok(o) => o,
+                    Err(e) => return TryHandle::Ready(proto::status(&e.to_string())),
+                };
+                let mut inner = self.inner.lock().unwrap();
+                match Self::poll_aggregate(&mut inner, &op) {
+                    Some(hit) => TryHandle::Ready(Self::aggregate_response(hit)),
+                    None => TryHandle::WouldBlock(PollKey::Aggregate {
+                        group: op.group,
+                        node: op.node,
+                    }),
+                }
+            }
+            proto::CHECK_AGGREGATE => {
+                let op = match proto::NodeOp::from_value(body) {
+                    Ok(o) => o,
+                    Err(e) => return TryHandle::Ready(proto::status(&e.to_string())),
+                };
+                let mut inner = self.inner.lock().unwrap();
+                match Self::poll_check(&mut inner, &op) {
+                    Some(status) => TryHandle::Ready(Self::check_response(status)),
+                    None => TryHandle::WouldBlock(PollKey::Check {
+                        group: op.group,
+                        node: op.node,
+                    }),
+                }
+            }
+            proto::GET_AVERAGE => {
+                let inner = self.inner.lock().unwrap();
+                match Self::poll_average(&inner) {
+                    Some((avg, groups)) => TryHandle::Ready(
+                        proto::AverageReady { average: avg, groups }.into_value(),
+                    ),
+                    None => TryHandle::WouldBlock(PollKey::Average),
+                }
+            }
+            proto::GET_KEY => {
+                let req = match proto::GetKey::from_value(body) {
+                    Ok(r) => r,
+                    Err(e) => return TryHandle::Ready(proto::status(&e.to_string())),
+                };
+                let inner = self.inner.lock().unwrap();
+                match Self::poll_key(&inner, req.node) {
+                    Some(k) => TryHandle::Ready(proto::KeyDelivery { key: k }.to_value()),
+                    None => TryHandle::WouldBlock(PollKey::Key { node: req.node }),
+                }
+            }
+            proto::GET_PRENEG_KEY => {
+                let req = match proto::GetPrenegKey::from_value(body) {
+                    Ok(r) => r,
+                    Err(e) => return TryHandle::Ready(proto::status(&e.to_string())),
+                };
+                let inner = self.inner.lock().unwrap();
+                match Self::poll_preneg(&inner, req.owner, req.node) {
+                    Some(k) => TryHandle::Ready(proto::PrenegKeyDelivery { key: k }.to_value()),
+                    None => TryHandle::WouldBlock(PollKey::Preneg {
+                        owner: req.owner,
+                        node: req.node,
+                    }),
+                }
+            }
+            _ => TryHandle::Ready(self.handle(path, body)),
+        }
+    }
+
+    /// §5.9 connection-pressure gauge, event-runtime edition: a parked
+    /// aggregate-phase submission counts exactly like a thread blocked in
+    /// `wait_until_gauged` — so `peak_concurrent_polls` remains comparable
+    /// across `--runtime threads|events`.
+    fn poll_parked(&self, path: &str) {
+        if path == proto::GET_AGGREGATE {
+            let now_waiting = self.waiting.fetch_add(1, AtomicOrdering::SeqCst) + 1;
+            self.peak_waiting.fetch_max(now_waiting, AtomicOrdering::SeqCst);
+        }
+    }
+
+    fn poll_unparked(&self, path: &str) {
+        if path == proto::GET_AGGREGATE {
+            self.waiting.fetch_sub(1, AtomicOrdering::SeqCst);
         }
     }
 }

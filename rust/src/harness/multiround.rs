@@ -254,6 +254,7 @@ mod tests {
                 rekey_messages: if i == 2 { 9 } else { 0 },
                 merged_groups: u64::from(i == 1),
                 reassigned_nodes: if i == 1 { 2 } else { 0 },
+                deadline_exceeded: 0,
                 per_path: Default::default(),
             })
             .collect()

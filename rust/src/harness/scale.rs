@@ -25,7 +25,8 @@ use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
-use crate::config::{DeviceProfile, SessionConfig};
+use crate::config::{DeviceProfile, RuntimeKind, SessionConfig};
+use crate::crypto::envelope::CipherMode;
 use crate::json::Value;
 use crate::learner::faults::{ChurnSchedule, FailPoint};
 use crate::proto;
@@ -51,6 +52,12 @@ pub struct ScaleConfig {
     /// Modeled one-way REST hop for the side status probe
     /// ([`InProcTransport::with_latency`]).
     pub probe_hop: Duration,
+    /// Learner executor: the event runtime (default) multiplexes all n
+    /// learners over a worker pool; `Threads` reproduces the old
+    /// thread-per-learner numbers for comparison.
+    pub runtime: RuntimeKind,
+    /// Worker threads for the event runtime; 0 = available parallelism.
+    pub workers: usize,
 }
 
 impl Default for ScaleConfig {
@@ -63,6 +70,8 @@ impl Default for ScaleConfig {
             lambda_rejoin: 0.35,
             seed: 42,
             probe_hop: Duration::from_micros(500),
+            runtime: RuntimeKind::Events,
+            workers: 0,
         }
     }
 }
@@ -100,6 +109,28 @@ impl ScaleRow {
     pub fn formula_delta(&self) -> i64 {
         self.messages as i64 - self.expected_messages as i64
     }
+
+    /// Protocol-message throughput this round.
+    pub fn messages_per_sec(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.messages as f64 / self.secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Current thread count of this process (Linux `/proc/self/status`
+/// `Threads:` line). Returns 0 where unreadable, which disables the
+/// peak-thread assertions rather than failing them.
+pub fn current_thread_count() -> u64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find_map(|l| l.strip_prefix("Threads:").and_then(|v| v.trim().parse().ok()))
+        })
+        .unwrap_or(0)
 }
 
 /// A full paper-scale churn run: per-round rows plus run metadata.
@@ -115,6 +146,15 @@ pub struct ScaleReport {
     pub rows: Vec<ScaleRow>,
     /// `/status` polls completed by the latency-modeled probe client.
     pub probe_samples: u64,
+    /// Executor that drove the learners (`"events"` or `"threads"`).
+    pub runtime: String,
+    /// Event-runtime pool size after resolving `workers: 0` (0 under the
+    /// thread runtime).
+    pub workers: u64,
+    /// Highest process thread count sampled while the session ran — the
+    /// headline of the event runtime: O(workers), not O(n). 0 when
+    /// `/proc/self/status` is unreadable.
+    pub peak_threads: u64,
 }
 
 impl ScaleReport {
@@ -177,6 +217,11 @@ impl ScaleReport {
             self.probe_samples,
             self.config.probe_hop.as_micros()
         );
+        let _ = writeln!(
+            out,
+            "runtime: {} ({} workers), peak process threads {}",
+            self.runtime, self.workers, self.peak_threads
+        );
         out
     }
 
@@ -230,6 +275,7 @@ impl ScaleReport {
                     ("reassigned_nodes", Value::from(r.reassigned_nodes)),
                     ("rekey_messages", Value::from(r.rekey_messages)),
                     ("messages", Value::from(r.messages)),
+                    ("messages_per_sec", Value::from(r.messages_per_sec())),
                     ("expected_messages", Value::from(r.expected_messages)),
                     ("formula_delta", Value::from(r.formula_delta() as f64)),
                     ("progress_failovers", Value::from(r.progress_failovers)),
@@ -253,6 +299,9 @@ impl ScaleReport {
                 "probe_hop_us",
                 Value::from(self.config.probe_hop.as_micros() as u64),
             ),
+            ("runtime", Value::from(self.runtime.as_str())),
+            ("workers", Value::from(self.workers)),
+            ("peak_threads", Value::from(self.peak_threads)),
             ("per_round", Value::Arr(rows)),
         ])
     }
@@ -282,7 +331,13 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
         n_nodes: sc.n_nodes,
         features: 4,
         groups: sc.groups,
-        rsa_bits: 512, // scale bench measures topology, not keygen
+        // SAF mode: the scale bench measures topology and runtime
+        // behaviour, not crypto — per-node RSA keygen alone would
+        // dominate the n=1,000 build otherwise.
+        mode: CipherMode::None,
+        rsa_bits: 512,
+        runtime: sc.runtime,
+        workers: sc.workers,
         profile: DeviceProfile::instant(),
         // Generous long-poll budget: a retried (empty) poll counts as a
         // message, and a merged chain detecting several deaths in series
@@ -316,16 +371,19 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
     // learners aggregate.
     let probe_stop = Arc::new(AtomicBool::new(false));
     let probe_count = Arc::new(AtomicU64::new(0));
+    let peak_threads = Arc::new(AtomicU64::new(current_thread_count()));
     let probe = InProcTransport::with_latency(session.controller.clone(), sc.probe_hop);
     let probe_thread = {
         let stop = probe_stop.clone();
         let count = probe_count.clone();
+        let peak = peak_threads.clone();
         std::thread::Builder::new().name("scale-probe".into()).spawn(move || {
             while !stop.load(Ordering::SeqCst) {
                 use crate::transport::ClientTransport;
                 if probe.call(proto::STATUS, &Value::obj()).is_ok() {
                     count.fetch_add(1, Ordering::SeqCst);
                 }
+                peak.fetch_max(current_thread_count(), Ordering::SeqCst);
                 std::thread::sleep(Duration::from_millis(25));
             }
         })?
@@ -399,6 +457,123 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
         setup_messages,
         rows,
         probe_samples: probe_count.load(Ordering::SeqCst),
+        runtime: runtime_name(sc.runtime).to_string(),
+        workers: resolved_workers_for(sc.runtime, sc.workers),
+        peak_threads: peak_threads.load(Ordering::SeqCst),
+    })
+}
+
+fn runtime_name(r: RuntimeKind) -> &'static str {
+    match r {
+        RuntimeKind::Events => "events",
+        RuntimeKind::Threads => "threads",
+    }
+}
+
+/// Pool size the event runtime will actually use; 0 under threads (the
+/// thread runtime has no pool — it spawns one thread per learner).
+fn resolved_workers_for(r: RuntimeKind, workers: usize) -> u64 {
+    match r {
+        RuntimeKind::Events => crate::runtime_exec::resolve_workers(workers) as u64,
+        RuntimeKind::Threads => 0,
+    }
+}
+
+/// Result of one single-round, fault-free session at smoke scale.
+#[derive(Debug, Clone)]
+pub struct SmokeResult {
+    pub n_nodes: usize,
+    pub groups: usize,
+    pub secs: f64,
+    pub messages: u64,
+    pub expected_messages: u64,
+    /// Pool size used (events runtime only — the smoke refuses threads).
+    pub workers: u64,
+    /// Highest process thread count sampled during the round (0 when
+    /// unmeasurable).
+    pub peak_threads: u64,
+}
+
+impl SmokeResult {
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("n_nodes", Value::from(self.n_nodes)),
+            ("groups", Value::from(self.groups)),
+            ("secs", Value::from(self.secs)),
+            ("messages", Value::from(self.messages)),
+            ("expected_messages", Value::from(self.expected_messages)),
+            ("workers", Value::from(self.workers)),
+            ("peak_threads", Value::from(self.peak_threads)),
+        ])
+    }
+}
+
+/// n=10,000-class smoke: one fault-free aggregation round under the
+/// event runtime, checking the §5.2/§5.5 formula (`4n + g`) and that the
+/// process never grew anywhere near n threads. SAF mode + instant
+/// profile: this measures the executor, not crypto or modeled network.
+pub fn single_round_smoke(n_nodes: usize, groups: usize, workers: usize) -> Result<SmokeResult> {
+    let cfg = SessionConfig {
+        n_nodes,
+        features: 2,
+        groups,
+        mode: CipherMode::None,
+        rsa_bits: 512,
+        runtime: RuntimeKind::Events,
+        workers,
+        profile: DeviceProfile::instant(),
+        // One poll per blocking point: empty-poll retries would break the
+        // exact formula check, and at n=10,000 every retry is n messages.
+        poll_time: Duration::from_secs(120),
+        aggregation_timeout: Duration::from_secs(600),
+        progress_timeout: Duration::from_secs(60),
+        monitor_interval: Duration::from_secs(5),
+        seed: Some(7),
+        ..Default::default()
+    };
+    let inputs: Vec<Vec<f64>> = (0..n_nodes)
+        .map(|i| (0..cfg.features).map(|f| (i + 1) as f64 + 0.5 * f as f64).collect())
+        .collect();
+
+    let session = SafeSession::new(cfg)?;
+    let sampler_stop = Arc::new(AtomicBool::new(false));
+    let peak = Arc::new(AtomicU64::new(current_thread_count()));
+    let sampler = {
+        let stop = sampler_stop.clone();
+        let peak = peak.clone();
+        std::thread::Builder::new().name("smoke-sampler".into()).spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                peak.fetch_max(current_thread_count(), Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        })?
+    };
+    let watch = crate::util::Stopwatch::start();
+    let run = session.run_round(&inputs, &crate::learner::faults::FaultPlan::none());
+    let secs = watch.elapsed().as_secs_f64();
+    sampler_stop.store(true, Ordering::SeqCst);
+    let _ = sampler.join();
+    let result = run?;
+
+    let expected = 4 * n_nodes as u64 + if groups > 1 { groups as u64 } else { 0 };
+    ensure!(
+        result.metrics.messages == expected,
+        "smoke n={n_nodes}: {} messages, expected {expected}",
+        result.metrics.messages
+    );
+    ensure!(
+        result.metrics.contributors == n_nodes as u64,
+        "smoke n={n_nodes}: {} contributors",
+        result.metrics.contributors
+    );
+    Ok(SmokeResult {
+        n_nodes,
+        groups,
+        secs,
+        messages: result.metrics.messages,
+        expected_messages: expected,
+        workers: crate::runtime_exec::resolve_workers(workers) as u64,
+        peak_threads: peak.load(Ordering::SeqCst),
     })
 }
 
@@ -430,6 +605,9 @@ mod tests {
                 })
                 .collect(),
             probe_samples: 7,
+            runtime: "events".into(),
+            workers: 4,
+            peak_threads: 13,
         }
     }
 
@@ -446,6 +624,21 @@ mod tests {
         let json = r.to_json();
         assert_eq!(json.u64_of("merges_total"), Some(1));
         assert_eq!(json.u64_of("probe_samples"), Some(7));
+        assert_eq!(json.u64_of("peak_threads"), Some(13));
+        assert_eq!(json.str_of("runtime"), Some("events"));
         assert_eq!(json.get("per_round").unwrap().as_arr().unwrap().len(), 2);
+        let row = &json.get("per_round").unwrap().as_arr().unwrap()[0];
+        let mps = row.get("messages_per_sec").and_then(|v| v.as_f64()).unwrap();
+        assert!((mps - (4.0 * 9.0 + 4.0) / 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thread_count_readable_on_linux() {
+        // On Linux this must see at least the main thread; elsewhere the
+        // helper degrades to 0 (assertions off) rather than erroring.
+        let n = current_thread_count();
+        if cfg!(target_os = "linux") {
+            assert!(n >= 1);
+        }
     }
 }

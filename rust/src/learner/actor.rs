@@ -1,30 +1,34 @@
-//! Persistent learner actors — the worker threads of the multi-round
-//! session engine.
+//! Persistent learner actors — the dispatch/collect handles of the
+//! multi-round session engine.
 //!
-//! `run_round` used to spawn one throwaway thread per learner per round.
-//! Under the multi-round engine each learner is an *actor*: a thread
-//! spawned once that lives across rounds, receiving one `RoundTask` per
-//! round over a channel and sending the `LearnerOutcome` back. The
-//! expensive per-node state (RSA keys, §5.8 pre-negotiated keys) lives in
-//! the session's long-lived `LearnerContext`s; the actor receives a
-//! cheaply-forked per-round view of that context (chain order, epoch,
-//! stagger slot), so keys are exchanged once and reused round after round
-//! (paper §5, footnote 3).
+//! Under `--runtime threads` each actor owns one OS thread spawned once
+//! that lives across rounds, receiving one `RoundTask` per round over a
+//! channel and sending the `LearnerOutcome` back. Under `--runtime
+//! events` the actor is a thin handle over the session's shared
+//! [`EventExecutor`]: `dispatch` enqueues a resumable state machine on
+//! the worker pool and `collect` receives its outcome — same call sites,
+//! no thread per learner. The expensive per-node state (RSA keys, §5.8
+//! pre-negotiated keys) lives in the session's long-lived
+//! `LearnerContext`s; the actor receives a cheaply-forked per-round view
+//! of that context (chain order, epoch, stagger slot), so keys are
+//! exchanged once and reused round after round (paper §5, footnote 3).
 //!
-//! The channel protocol is strictly lock-step per actor: the engine sends
-//! exactly one task per round to each *active* actor and collects exactly
-//! one outcome; absent (churned-out) nodes get no task and the engine
-//! synthesizes [`LearnerOutcome::absent`] for them. Dropping the
-//! [`LearnerActor`] closes the task channel, which ends the thread.
+//! The protocol is strictly lock-step per actor: the engine sends exactly
+//! one task per round to each *active* actor and collects exactly one
+//! outcome; absent (churned-out) nodes get no task and the engine
+//! synthesizes [`LearnerOutcome::absent`] for them. Dropping a
+//! thread-backed [`LearnerActor`] closes the task channel, which ends
+//! the thread; an event-backed actor owns nothing to tear down.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::faults::FaultPlan;
 use super::{run_learner, LearnerContext, LearnerOutcome};
+use crate::runtime_exec::EventExecutor;
 
 /// One round's worth of work for an actor.
 struct RoundTask {
@@ -37,14 +41,27 @@ struct RoundTask {
     faults: FaultPlan,
 }
 
-/// Handle to one persistent learner thread.
+enum Backend {
+    /// One dedicated OS thread, parked on its task channel between rounds.
+    Thread {
+        /// `Some` while the actor is alive; taken (closing the channel,
+        /// which ends the thread's recv loop) on drop.
+        task_tx: Option<Sender<RoundTask>>,
+        outcome_rx: Receiver<Result<LearnerOutcome>>,
+        handle: Option<JoinHandle<()>>,
+    },
+    /// A handle into the session's worker-pool executor; the per-round
+    /// receiver is produced by `dispatch` and consumed by `collect`.
+    Event {
+        executor: Arc<EventExecutor>,
+        round_rx: Mutex<Option<Receiver<Result<LearnerOutcome>>>>,
+    },
+}
+
+/// Handle to one persistent learner (thread- or event-backed).
 pub struct LearnerActor {
     pub node: u64,
-    /// `Some` while the actor is alive; taken (closing the channel, which
-    /// ends the thread's recv loop) on drop.
-    task_tx: Option<Sender<RoundTask>>,
-    outcome_rx: Receiver<Result<LearnerOutcome>>,
-    handle: Option<JoinHandle<()>>,
+    backend: Backend,
 }
 
 impl LearnerActor {
@@ -64,38 +81,75 @@ impl LearnerActor {
                     }
                 }
             })?;
-        Ok(LearnerActor { node, task_tx: Some(task_tx), outcome_rx, handle: Some(handle) })
+        Ok(LearnerActor {
+            node,
+            backend: Backend::Thread {
+                task_tx: Some(task_tx),
+                outcome_rx,
+                handle: Some(handle),
+            },
+        })
     }
 
-    /// Hand the actor its work for the round. Returns an error only if
-    /// the actor thread died (a bug, not a protocol failure).
+    /// Event-runtime actor: no thread of its own; rounds run as state
+    /// machines on `executor`'s worker pool.
+    pub fn event(node: u64, executor: Arc<EventExecutor>) -> LearnerActor {
+        LearnerActor {
+            node,
+            backend: Backend::Event { executor, round_rx: Mutex::new(None) },
+        }
+    }
+
+    /// Hand the actor its work for the round. Returns an error if the
+    /// actor was already shut down or its thread died (a bug, not a
+    /// protocol failure) — never panics.
     pub fn dispatch(
         &self,
         ctx: Arc<LearnerContext>,
         input: Vec<f64>,
         faults: FaultPlan,
     ) -> Result<()> {
-        self.task_tx
-            .as_ref()
-            .expect("actor already shut down")
-            .send(RoundTask { ctx, input, faults })
-            .map_err(|_| anyhow::anyhow!("learner actor {} is gone", self.node))
+        match &self.backend {
+            Backend::Thread { task_tx, .. } => task_tx
+                .as_ref()
+                .ok_or_else(|| anyhow!("learner actor {} already shut down", self.node))?
+                .send(RoundTask { ctx, input, faults })
+                .map_err(|_| anyhow!("learner actor {} is gone", self.node)),
+            Backend::Event { executor, round_rx } => {
+                let rx = executor.spawn_learner(ctx, input, faults);
+                *round_rx.lock().unwrap() = Some(rx);
+                Ok(())
+            }
+        }
     }
 
     /// Block until the actor reports its outcome for the dispatched round.
     pub fn collect(&self) -> Result<LearnerOutcome> {
-        self.outcome_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("learner actor {} died mid-round", self.node))?
+        match &self.backend {
+            Backend::Thread { outcome_rx, .. } => outcome_rx
+                .recv()
+                .map_err(|_| anyhow!("learner actor {} died mid-round", self.node))?,
+            Backend::Event { round_rx, .. } => {
+                let rx = round_rx
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .ok_or_else(|| anyhow!("learner actor {}: collect without dispatch", self.node))?;
+                rx.recv()
+                    .map_err(|_| anyhow!("learner actor {} died mid-round", self.node))?
+            }
+        }
     }
 }
 
 impl Drop for LearnerActor {
     fn drop(&mut self) {
-        // Closing the channel ends the thread's recv loop.
-        self.task_tx.take();
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
+        if let Backend::Thread { task_tx, handle, .. } = &mut self.backend {
+            // Closing the channel ends the thread's recv loop.
+            task_tx.take();
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
         }
     }
 }

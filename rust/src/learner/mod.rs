@@ -19,7 +19,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 use crate::config::profile::{DeviceProfile, OpKind};
 use crate::crypto::envelope::{CipherMode, Envelope};
@@ -88,6 +88,10 @@ pub struct LearnerOutcome {
     pub contributors: u64,
     /// The learner died at an injected fault point before finishing.
     pub died: bool,
+    /// The learner gave up because it blew through the hard-deadline
+    /// safety net (see [`hard_deadline_for`]) — a distinct, reportable
+    /// outcome rather than a session-aborting error.
+    pub deadline_exceeded: bool,
 }
 
 impl LearnerOutcome {
@@ -104,12 +108,40 @@ impl LearnerOutcome {
             restarts: 0,
             contributors: 0,
             died: true,
+            deadline_exceeded: false,
         }
     }
 
-    fn dead(node: u64) -> Self {
+    pub(crate) fn dead(node: u64) -> Self {
         LearnerOutcome::absent(node)
     }
+
+    /// Outcome for a learner that exceeded its hard deadline: counts as
+    /// died, with the accumulated failover counters preserved.
+    pub(crate) fn timed_out(node: u64, reposts: u64, restarts: u64) -> Self {
+        LearnerOutcome {
+            node,
+            average: vec![],
+            was_initiator: false,
+            reposts,
+            restarts,
+            contributors: 0,
+            died: true,
+            deadline_exceeded: true,
+        }
+    }
+}
+
+/// Hard-deadline safety net so a protocol bug can't hang a session: the
+/// base allowance covers one full aggregation plus slack, and every
+/// initiator-failover restart observed extends it by two more aggregation
+/// timeouts (a restart legitimately consumes up to one timeout waiting
+/// plus one retrying) — instead of the old flat `timeout × 8`, which
+/// silently under-provisioned high-churn rounds and over-provisioned
+/// quiet ones.
+pub(crate) fn hard_deadline_for(start: Instant, timeout: Duration, restarts: u64) -> Instant {
+    let scale = 2 + 2 * restarts.min(32) as u32;
+    start + timeout * scale + Duration::from_secs(5)
 }
 
 impl LearnerContext {
@@ -143,17 +175,17 @@ impl LearnerContext {
         }
     }
 
-    fn successor(&self, of: u64) -> u64 {
+    pub(crate) fn successor(&self, of: u64) -> u64 {
         let pos = self.chain.iter().position(|&n| n == of).unwrap_or(0);
         self.chain[(pos + 1) % self.chain.len()]
     }
 
-    fn multi_group(&self) -> bool {
+    pub(crate) fn multi_group(&self) -> bool {
         self.chain.len() < self.expected_total_nodes
     }
 
     /// Generate the initiator mask vector (charged to the device profile).
-    fn gen_mask(&self, len: usize) -> Vec<f64> {
+    pub(crate) fn gen_mask(&self, len: usize) -> Vec<f64> {
         let mut rng = self.rng.lock().unwrap();
         if self.single_seed_mask {
             // Deep-edge: one random draw, replicated (paper §7).
@@ -167,7 +199,7 @@ impl LearnerContext {
     }
 
     /// Seal `vector` for `to`, honouring cipher mode and device profile.
-    fn seal_for(&self, vector: &[f64], to: u64) -> Result<Envelope> {
+    pub(crate) fn seal_for(&self, vector: &[f64], to: u64) -> Result<Envelope> {
         let mut rng = self.rng.lock().unwrap();
         let payload_bytes = vector.len() * 8;
         match self.mode {
@@ -202,7 +234,7 @@ impl LearnerContext {
     }
 
     /// Open an envelope received from `from`.
-    fn open_from(&self, env: &Envelope, from: u64) -> Result<Vec<f64>> {
+    pub(crate) fn open_from(&self, env: &Envelope, from: u64) -> Result<Vec<f64>> {
         let payload_bytes = env.body.len();
         match self.mode {
             CipherMode::None => {}
@@ -264,12 +296,14 @@ pub fn run_learner(
     let mut reposts = 0u64;
     let mut round_id = 0u64;
     let mut is_initiator = ctx.node == ctx.initial_initiator;
-    // Safety net so a protocol bug can't hang the test suite.
-    let hard_deadline = Instant::now() + ctx.aggregation_timeout * 8 + Duration::from_secs(5);
+    let started = Instant::now();
 
     loop {
-        if Instant::now() > hard_deadline {
-            bail!("learner {} exceeded hard deadline", ctx.node);
+        // Safety net (recomputed per attempt: the allowance scales with
+        // restarts observed — see `hard_deadline_for`). Exceeding it is a
+        // reportable outcome, not a session-aborting error.
+        if Instant::now() > hard_deadline_for(started, ctx.aggregation_timeout, restarts) {
+            return Ok(LearnerOutcome::timed_out(ctx.node, reposts, restarts));
         }
         let result = if is_initiator {
             run_initiator(ctx, local, faults, round_id, &mut reposts)?
@@ -286,6 +320,7 @@ pub fn run_learner(
                     restarts,
                     contributors,
                     died: false,
+                    deadline_exceeded: false,
                 });
             }
             StepResult::Died => return Ok(LearnerOutcome::dead(ctx.node)),
@@ -314,8 +349,10 @@ fn election(ctx: &LearnerContext) -> Result<StepResult> {
     Ok(StepResult::Restart { elected: decision.init, new_round: decision.round_id })
 }
 
-fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64) -> Result<Value> {
-    let body = proto::PostAggregate {
+/// Body of a chain post — shared by the blocking path and the event
+/// runtime's state machine so both stamp round/epoch identically.
+pub(crate) fn post_body(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64) -> Value {
+    proto::PostAggregate {
         from_node: ctx.node,
         to_node: to,
         group: ctx.group,
@@ -325,8 +362,11 @@ fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64)
         round_id: Some(round_id),
         epoch: Some(ctx.epoch),
     }
-    .to_value();
-    ctx.call(proto::POST_AGGREGATE, &body)
+    .to_value()
+}
+
+fn post_with_round(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64) -> Result<Value> {
+    ctx.call(proto::POST_AGGREGATE, &post_body(ctx, to, env, round_id))
 }
 
 /// Post to `to`, then watch `check_aggregate(to)` until the chain advances

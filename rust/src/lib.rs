@@ -52,6 +52,7 @@ pub mod topology;
 pub mod monitor;
 pub mod protocols;
 pub mod runtime;
+pub mod runtime_exec;
 pub mod fl;
 pub mod metrics;
 pub mod config;

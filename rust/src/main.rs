@@ -61,6 +61,15 @@ fn print_help() {
                                           poisson:LAMBDA_DIE,LAMBDA_REJOIN\n\
                                           for seeded per-round Poisson\n\
                                           arrival/departure at paper scale\n\
+                   [--runtime events|threads]\n\
+                                          learner executor (default events):\n\
+                                          `events` multiplexes all learners\n\
+                                          as state machines over a fixed\n\
+                                          worker pool; `threads` keeps one\n\
+                                          OS thread per learner (HTTP\n\
+                                          transports always use threads)\n\
+                   [--workers N]          event-runtime worker threads\n\
+                                          (default 0 = available cores)\n\
                    [--merge-floor on|off] privacy-floor re-balancing\n\
                                           (default on): merge a group that\n\
                                           churn pushed below 3 live nodes\n\
@@ -203,13 +212,15 @@ fn cmd_run(args: &Args) -> i32 {
 
 fn cmd_run_rounds(cfg: &SessionConfig, rounds: usize, churn: &ChurnSchedule) -> i32 {
     println!(
-        "SAFE session: {} rounds × {} nodes × {} features, mode={}, groups={}, wire={}",
+        "SAFE session: {} rounds × {} nodes × {} features, mode={}, groups={}, wire={}, \
+         runtime={:?}",
         rounds,
         cfg.n_nodes,
         cfg.features,
         cfg.mode.name(),
         cfg.groups,
-        cfg.wire.name()
+        cfg.wire.name(),
+        cfg.runtime
     );
     let inputs = inputs_for(cfg);
     let per_round: Vec<Vec<Vec<f64>>> = (0..rounds).map(|_| inputs.clone()).collect();

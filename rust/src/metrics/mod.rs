@@ -36,6 +36,11 @@ pub struct RoundMetrics {
     /// Nodes that aggregated under a group other than their configured
     /// home group this round — the only nodes that re-key after a merge.
     pub reassigned_nodes: u64,
+    /// Learners that hit the hard-deadline safety net (`aggregation
+    /// timeout × (2 + 2·restarts) + 5s`) and gave up this round. A bound
+    /// trip is an outcome, not a crash: the node counts as died for this
+    /// round and the session continues.
+    pub deadline_exceeded: u64,
     /// Messages by path (for the message-accounting tests).
     pub per_path: std::collections::BTreeMap<String, u64>,
 }
@@ -95,6 +100,7 @@ mod tests {
             rekey_messages: 0,
             merged_groups: 0,
             reassigned_nodes: 0,
+            deadline_exceeded: 0,
             per_path: Default::default(),
         }
     }

@@ -149,6 +149,7 @@ impl BonSession {
             rekey_messages: 0,
             merged_groups: 0,
             reassigned_nodes: 0,
+            deadline_exceeded: 0,
             per_path: Default::default(),
         })
     }

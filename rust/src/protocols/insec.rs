@@ -131,6 +131,7 @@ impl InsecSession {
             rekey_messages: 0,
             merged_groups: 0,
             reassigned_nodes: 0,
+            deadline_exceeded: 0,
             per_path: Default::default(),
         })
     }

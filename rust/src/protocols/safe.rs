@@ -8,7 +8,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 
-use crate::config::{SessionConfig, TransportKind, VectorEngine};
+use crate::config::{RuntimeKind, SessionConfig, TransportKind, VectorEngine};
 use crate::controller::{Controller, ControllerConfig};
 use crate::crypto::envelope::CipherMode;
 use crate::crypto::rng::{DeterministicRng, SecureRng, SystemRng};
@@ -23,6 +23,7 @@ use crate::monitor::ProgressMonitor;
 use crate::proto;
 use crate::runtime::vector::{NativeMath, VectorMath};
 use crate::runtime::{ArtifactRuntime, XlaMath};
+use crate::runtime_exec::{EventExecutor, ExecutorConfig};
 use crate::topology::{GroupPlanner, TopologyPlan};
 use crate::transport::http::{HttpServer, HttpTransport};
 use crate::transport::{ClientTransport, InProcTransport, MessageStats};
@@ -67,7 +68,12 @@ pub struct SafeSession {
     /// of every configured learner. Behind a mutex because a rejoin
     /// re-keys (replaces) individual entries mid-`run_rounds`; per-round
     /// views are cheap forks of these masters.
-    contexts: Mutex<Vec<Arc<LearnerContext>>>,
+    contexts: Mutex<BTreeMap<u64, Arc<LearnerContext>>>,
+    /// The worker-pool event runtime (`--runtime events`, the default for
+    /// in-proc sessions). `None` under `--runtime threads` or an HTTP
+    /// transport, where `run_rounds` falls back to thread-per-learner
+    /// actors.
+    executor: Option<Arc<EventExecutor>>,
     monitor_transport: Arc<dyn ClientTransport>,
     /// Keep the loopback HTTP server alive for HTTP transport sessions.
     _http_server: Option<HttpServer>,
@@ -208,10 +214,24 @@ impl SafeSession {
         )?;
 
         // ---- Round 0: key generation + registry (§5.1, footnote 3) ----
+        // SAF mode (CipherMode::None) never seals a payload, so per-node
+        // keygen — the dominant round-0 cost at n=1,000+ — is pointless.
+        // Every node shares one keypair and the registry still gets a key
+        // per node (rekey accounting stays uniform across modes), but the
+        // O(n) keygen and O(n·g) peer-key fetch are skipped.
+        let shared_key = if cfg.mode == CipherMode::None {
+            Some(Arc::new(keypair_for(cfg.seed, 0, cfg.rsa_bits)))
+        } else {
+            None
+        };
         let mut node_keys: BTreeMap<u64, Arc<RsaKeyPair>> = BTreeMap::new();
         for (_, chain) in &chains {
             for &node in chain {
-                node_keys.insert(node, Arc::new(keypair_for(cfg.seed, node, cfg.rsa_bits)));
+                let kp = match &shared_key {
+                    Some(kp) => kp.clone(),
+                    None => Arc::new(keypair_for(cfg.seed, node, cfg.rsa_bits)),
+                };
+                node_keys.insert(node, kp);
             }
         }
         for (&node, kp) in &node_keys {
@@ -222,26 +242,29 @@ impl SafeSession {
         }
 
         // Build learner contexts: fetch peer keys (and §5.8 symmetric
-        // pre-negotiation when configured).
-        let mut contexts = Vec::new();
+        // pre-negotiation when configured). SAF mode skips the fetch —
+        // nothing is ever sealed, so peer keys would never be read.
+        let mut contexts: BTreeMap<u64, Arc<LearnerContext>> = BTreeMap::new();
         for (gid, chain) in &chains {
             for &node in chain {
                 let transport = make_transport()?;
                 let mut peer_keys = BTreeMap::new();
-                for &peer in chain {
-                    if peer == node {
-                        continue;
+                if cfg.mode != CipherMode::None {
+                    for &peer in chain {
+                        if peer == node {
+                            continue;
+                        }
+                        let resp = transport
+                            .call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
+                        let delivery = proto::KeyDelivery::from_value(&resp)?;
+                        peer_keys.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
                     }
-                    let resp =
-                        transport.call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
-                    let delivery = proto::KeyDelivery::from_value(&resp)?;
-                    peer_keys.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
                 }
                 let rng: Box<dyn SecureRng + Send> = match cfg.seed {
                     Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(node * 7919))),
                     None => Box::new(SystemRng::new()),
                 };
-                contexts.push(Arc::new(LearnerContext {
+                contexts.insert(node, Arc::new(LearnerContext {
                     node,
                     group: *gid,
                     chain: chain.clone(),
@@ -272,7 +295,7 @@ impl SafeSession {
         // each with the peer's RSA public key, posts; peers pull + unseal.
         if cfg.mode == CipherMode::PreNegotiated {
             let mut generated: BTreeMap<u64, BTreeMap<u64, SymmetricKey>> = BTreeMap::new();
-            for ctx in &contexts {
+            for ctx in contexts.values() {
                 let mut sealed_keys = BTreeMap::new();
                 let mut mine = BTreeMap::new();
                 {
@@ -294,7 +317,7 @@ impl SafeSession {
                 generated.insert(ctx.node, mine);
             }
             // Pull: send_keys[to] = key that `to` generated for me.
-            for ctx in Vec::from_iter(contexts.iter().cloned()) {
+            for ctx in Vec::from_iter(contexts.values().cloned()) {
                 let mut send_keys = BTreeMap::new();
                 for &peer in &ctx.chain {
                     if peer == ctx.node {
@@ -309,8 +332,7 @@ impl SafeSession {
                     send_keys.insert(peer, SymmetricKey::from_bytes(&master)?);
                 }
                 // Contexts are shared Arcs; rebuild with key maps filled.
-                let idx = contexts.iter().position(|c| c.node == ctx.node).unwrap();
-                let old = contexts[idx].clone();
+                let old = contexts[&ctx.node].clone();
                 let mut refreshed = old.fork(match cfg.seed {
                     Some(s) => Box::new(DeterministicRng::seed(s.wrapping_add(old.node * 104729)))
                         as Box<dyn SecureRng + Send>,
@@ -318,18 +340,44 @@ impl SafeSession {
                 });
                 refreshed.send_keys = Arc::new(send_keys);
                 refreshed.recv_keys = Arc::new(generated.remove(&old.node).unwrap_or_default());
-                contexts[idx] = Arc::new(refreshed);
+                contexts.insert(old.node, Arc::new(refreshed));
             }
         }
 
         let round0_messages = stats.total();
         let monitor_transport = make_transport()?;
+
+        // The event runtime needs the completion-style transport (submit /
+        // try_complete) and the controller's wait hub — both in-proc-only,
+        // so HTTP sessions fall back to the thread runtime.
+        let executor = match (&cfg.transport, cfg.runtime) {
+            (TransportKind::InProc, RuntimeKind::Events) => {
+                let transport = Arc::new(
+                    InProcTransport::with_costs(
+                        controller.clone(),
+                        stats.clone(),
+                        cfg.profile.network_hop,
+                        cfg.profile.network_per_kib,
+                    )
+                    .with_wire_format(cfg.wire)
+                    .with_completion(controller.clone()),
+                );
+                Some(EventExecutor::start(
+                    transport,
+                    controller.wait_hub(),
+                    ExecutorConfig { workers: cfg.workers, poll_time: cfg.poll_time },
+                ))
+            }
+            _ => None,
+        };
+
         Ok(SafeSession {
             cfg,
             controller,
             planner,
             stats,
             contexts: Mutex::new(contexts),
+            executor,
             monitor_transport,
             _http_server: http_server,
             round0_messages,
@@ -368,13 +416,20 @@ impl SafeSession {
         if inputs_per_round.is_empty() {
             return Ok(Vec::new());
         }
-        // Persistent actors: one thread per configured node, parked on a
-        // task channel between rounds.
+        // Persistent actors. Thread runtime: one OS thread per configured
+        // node, parked on a task channel between rounds. Event runtime:
+        // thin handles over the session's shared worker pool — no thread
+        // per learner, which is what lets the scale harness reach
+        // n=10,000.
         let mut actors: BTreeMap<u64, LearnerActor> = BTreeMap::new();
         {
             let masters = self.contexts.lock().unwrap();
-            for ctx in masters.iter() {
-                actors.insert(ctx.node, LearnerActor::spawn(ctx.node)?);
+            for &node in masters.keys() {
+                let actor = match &self.executor {
+                    Some(exec) => LearnerActor::event(node, exec.clone()),
+                    None => LearnerActor::spawn(node)?,
+                };
+                actors.insert(node, actor);
             }
         }
         let mut monitor =
@@ -408,15 +463,14 @@ impl SafeSession {
         self.contexts
             .lock()
             .unwrap()
-            .iter()
-            .find(|c| c.node == node)
+            .get(&node)
             .cloned()
             .with_context(|| format!("node {node} has no configured context"))
     }
 
     fn replace_context(&self, ctx: LearnerContext) {
         let mut masters = self.contexts.lock().unwrap();
-        if let Some(slot) = masters.iter_mut().find(|c| c.node == ctx.node) {
+        if let Some(slot) = masters.get_mut(&ctx.node) {
             *slot = Arc::new(ctx);
         }
     }
@@ -516,7 +570,7 @@ impl SafeSession {
         let watch = Stopwatch::start();
 
         // Fan out one per-round context fork to every active actor.
-        let mut active = Vec::with_capacity(total_active);
+        let mut active = std::collections::BTreeSet::new();
         for (gid, chain) in plan.groups() {
             for (pos, &node) in chain.iter().enumerate() {
                 let master = self.master_context(node)?;
@@ -531,9 +585,10 @@ impl SafeSession {
                     .get(&node)
                     .with_context(|| format!("no actor for node {node}"))?
                     .dispatch(Arc::new(ctx), inputs[(node - 1) as usize].clone(), faults.clone())?;
-                active.push(node);
+                active.insert(node);
             }
         }
+        debug_assert_eq!(active.len(), total_active);
         let mut outcomes = Vec::with_capacity(self.cfg.n_nodes);
         for &node in &active {
             outcomes.push(actors[&node].collect()?);
@@ -604,6 +659,7 @@ impl SafeSession {
             rekey_messages,
             merged_groups: plan.merges().len() as u64,
             reassigned_nodes: plan.reassignments().len() as u64,
+            deadline_exceeded: outcomes.iter().filter(|o| o.deadline_exceeded).count() as u64,
             per_path,
         };
         Ok(SafeRoundResult { metrics, outcomes })
@@ -623,34 +679,42 @@ impl SafeSession {
         epoch: u64,
     ) -> Result<()> {
         use crate::blob::Blob;
-        // Phase A: rejoiners re-register + re-fetch peer public keys.
+        // Phase A: rejoiners re-register + re-fetch peer public keys. SAF
+        // mode (no sealing) keeps the registration — so rekey accounting
+        // stays visible — but skips the fetches nothing would ever read.
         for &j in rejoiners {
             let master = self.master_context(j)?;
             let full = plan
                 .chain_containing(j)
                 .context("rejoiner not in any planned group")?
                 .to_vec();
-            let kp = keypair_for(self.cfg.seed, j, self.cfg.rsa_bits);
+            let key_node = if self.cfg.mode == CipherMode::None { 0 } else { j };
+            let kp = keypair_for(self.cfg.seed, key_node, self.cfg.rsa_bits);
             master.transport.call(
                 proto::REGISTER_KEY,
                 &proto::RegisterKey { node: j, key: kp.public.to_json() }.to_value(),
             )?;
             let mut peer_keys = BTreeMap::new();
-            for &peer in &full {
-                if peer == j {
-                    continue;
+            if self.cfg.mode != CipherMode::None {
+                for &peer in &full {
+                    if peer == j {
+                        continue;
+                    }
+                    let resp = master
+                        .transport
+                        .call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
+                    let delivery = proto::KeyDelivery::from_value(&resp)?;
+                    peer_keys.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
                 }
-                let resp = master
-                    .transport
-                    .call(proto::GET_KEY, &proto::GetKey { node: peer }.to_value())?;
-                let delivery = proto::KeyDelivery::from_value(&resp)?;
-                peer_keys.insert(peer, RsaPublicKey::from_json(&delivery.key)?);
             }
             let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x5eed));
             ctx.keys = Arc::new(kp);
             ctx.peer_keys = Arc::new(peer_keys);
             ctx.chain = full;
             self.replace_context(ctx);
+        }
+        if self.cfg.mode == CipherMode::None {
+            return Ok(());
         }
         // Active peers re-fetch each rejoiner's (possibly new) public key.
         for (_, chain) in plan.groups() {
@@ -797,7 +861,9 @@ impl SafeSession {
     /// as rejoiner-only re-keys, extended to reassignment.
     fn rekey_reassigned(&self, plan: &TopologyPlan, epoch: u64) -> Result<()> {
         use crate::blob::Blob;
-        if plan.reassignments().is_empty() {
+        if plan.reassignments().is_empty() || self.cfg.mode == CipherMode::None {
+            // SAF mode holds no per-link key material, so a merge
+            // reassignment moves nothing.
             return Ok(());
         }
         // RSA layer: each side of a new link fetches the other's public

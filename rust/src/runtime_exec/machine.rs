@@ -1,0 +1,444 @@
+//! The learner as an explicit resumable state machine.
+//!
+//! [`LearnerStateMachine::on_event`] is a faithful transcription of the
+//! blocking learner (`learner::run_learner` / `run_initiator` /
+//! `run_non_initiator`): every point where the blocking code parks an OS
+//! thread — a `wait_for` long-poll, `post_and_watch`'s check loop, the
+//! §5.9 stagger sleep — becomes a returned [`Command`] and a later
+//! [`MachineEvent`]. Control flow, fault-injection points, deadline
+//! checks and message order are kept line-for-line equivalent so the two
+//! runtimes produce bit-identical averages and message accounting (the
+//! `runtime_differential` test pins this).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::crypto::envelope::Envelope;
+use crate::json::Value;
+use crate::learner::faults::{FailPoint, FaultPlan};
+use crate::learner::{hard_deadline_for, post_body, LearnerContext, LearnerOutcome};
+use crate::proto;
+
+/// What the machine needs next from the executor.
+pub enum Command {
+    /// Submit `path` with `body`; resume with the response
+    /// ([`MachineEvent::Response`]). Empty-status responses at poll
+    /// timeout are delivered the same way, exactly as the blocking
+    /// transport returns them.
+    Call { path: &'static str, body: Value },
+    /// Park until `until`, then resume with [`MachineEvent::TimerFired`]
+    /// (§5.9 stagger, without occupying a worker).
+    Sleep { until: Instant },
+    /// Terminal: the learner finished (possibly dead / timed out).
+    Finished(Box<LearnerOutcome>),
+    /// Terminal: a protocol or crypto error (same errors the blocking
+    /// path would return through `run_learner`).
+    Failed(anyhow::Error),
+}
+
+/// What happened since the machine last returned.
+pub enum MachineEvent {
+    /// First event after spawn.
+    Start,
+    /// The response to the outstanding [`Command::Call`].
+    Response(Value),
+    /// The outstanding [`Command::Sleep`] elapsed.
+    TimerFired,
+}
+
+/// Which role's `post_and_watch` we are inside (the step after the watch
+/// completes differs).
+#[derive(Clone, Copy)]
+enum Role {
+    Initiator,
+    NonInitiator,
+}
+
+enum State {
+    /// Not started yet.
+    Idle,
+    /// §5.9: holding off the first `get_aggregate` poll.
+    Staggering { deadline: Instant },
+    /// Non-initiator step 1: polling `get_aggregate`.
+    AwaitAggregate { deadline: Instant },
+    /// Waiting for the `post_aggregate` ack (response ignored, as in the
+    /// blocking path).
+    AwaitPostAck { vector: Vec<f64>, to: u64, msg_round: u64, deadline: Instant, role: Role },
+    /// `post_and_watch`'s check loop: polling `check_aggregate(to)`.
+    Watching { vector: Vec<f64>, to: u64, msg_round: u64, deadline: Instant, role: Role },
+    /// Initiator step 3: polling `get_aggregate` for the chain's result.
+    AwaitFinalAggregate { deadline: Instant },
+    /// Waiting for the `post_average` ack.
+    AwaitAveragePostAck { deadline: Instant, average: Vec<f64>, contributors: u64 },
+    /// Initiator, subgroups: polling `get_average` for the global mean.
+    AwaitGlobalAverage { deadline: Instant, contributors: u64 },
+    /// Non-initiator step 3: polling `get_average`.
+    AwaitAverage { deadline: Instant },
+    /// Asked `should_initiate`; awaiting the election decision.
+    AwaitElection,
+    /// Terminal; any further event is a runtime bug.
+    Finished,
+}
+
+pub struct LearnerStateMachine {
+    ctx: Arc<LearnerContext>,
+    local: Vec<f64>,
+    faults: FaultPlan,
+    state: State,
+    restarts: u64,
+    reposts: u64,
+    round_id: u64,
+    is_initiator: bool,
+    /// The initiator's mask for the current attempt (regenerated on every
+    /// restart, like the blocking path's per-call `gen_mask`).
+    mask: Option<Vec<f64>>,
+    started: Instant,
+}
+
+impl LearnerStateMachine {
+    pub fn new(ctx: Arc<LearnerContext>, local: Vec<f64>, faults: FaultPlan) -> Self {
+        let is_initiator = ctx.node == ctx.initial_initiator;
+        LearnerStateMachine {
+            ctx,
+            local,
+            faults,
+            state: State::Idle,
+            restarts: 0,
+            reposts: 0,
+            round_id: 0,
+            is_initiator,
+            mask: None,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn node(&self) -> u64 {
+        self.ctx.node
+    }
+
+    /// Advance the machine. Must be called with the event the previous
+    /// [`Command`] asked for; the executor serializes calls per machine.
+    pub fn on_event(&mut self, event: MachineEvent) -> Command {
+        match event {
+            MachineEvent::Start => self.start(),
+            MachineEvent::TimerFired => self.timer_fired(),
+            MachineEvent::Response(resp) => self.response(resp),
+        }
+    }
+
+    fn start(&mut self) -> Command {
+        if !matches!(self.state, State::Idle) {
+            return self.bug("Start event on a running machine");
+        }
+        if self.faults.fails_at(self.ctx.node, FailPoint::NeverStart) {
+            return self.finish(LearnerOutcome::dead(self.ctx.node));
+        }
+        self.started = Instant::now();
+        self.begin_iteration()
+    }
+
+    fn timer_fired(&mut self) -> Command {
+        match std::mem::replace(&mut self.state, State::Finished) {
+            State::Staggering { deadline } => self.await_aggregate(deadline),
+            _ => self.bug("TimerFired outside Staggering"),
+        }
+    }
+
+    /// Top of the blocking path's outer `loop`: hard-deadline check, then
+    /// one initiator or non-initiator attempt.
+    fn begin_iteration(&mut self) -> Command {
+        if Instant::now()
+            > hard_deadline_for(self.started, self.ctx.aggregation_timeout, self.restarts)
+        {
+            return self.finish(LearnerOutcome::timed_out(
+                self.ctx.node,
+                self.reposts,
+                self.restarts,
+            ));
+        }
+        let deadline = Instant::now() + self.ctx.aggregation_timeout;
+        if self.is_initiator {
+            // §5.1.1 steps 1–2: mask with R, seal for the successor, post.
+            let mask = self.ctx.gen_mask(self.local.len());
+            let masked = self.ctx.math.mask(&self.local, &mask);
+            self.mask = Some(mask);
+            let next = self.ctx.successor(self.ctx.node);
+            self.begin_post(masked, next, self.round_id, deadline, Role::Initiator)
+        } else if !self.ctx.stagger_delay.is_zero() {
+            // §5.9: same hold-off as the blocking `thread::sleep`, but as
+            // a timer entry — the deadline clock starts now, before the
+            // stagger, exactly like the blocking path.
+            self.state = State::Staggering { deadline };
+            Command::Sleep { until: Instant::now() + self.ctx.stagger_delay }
+        } else {
+            self.await_aggregate(deadline)
+        }
+    }
+
+    fn await_aggregate(&mut self, deadline: Instant) -> Command {
+        self.state = State::AwaitAggregate { deadline };
+        Command::Call {
+            path: proto::GET_AGGREGATE,
+            body: proto::NodeOp::new(self.ctx.node, self.ctx.group).to_value(),
+        }
+    }
+
+    /// Seal + post (`post_and_watch`'s entry): the watch starts when the
+    /// post is acked.
+    fn begin_post(
+        &mut self,
+        vector: Vec<f64>,
+        to: u64,
+        msg_round: u64,
+        deadline: Instant,
+        role: Role,
+    ) -> Command {
+        let env = match self.ctx.seal_for(&vector, to) {
+            Ok(e) => e,
+            Err(e) => return self.fail(e),
+        };
+        let body = post_body(&self.ctx, to, &env, msg_round);
+        self.state = State::AwaitPostAck { vector, to, msg_round, deadline, role };
+        Command::Call { path: proto::POST_AGGREGATE, body }
+    }
+
+    fn watch(&mut self, vector: Vec<f64>, to: u64, msg_round: u64, deadline: Instant, role: Role) -> Command {
+        let body = proto::NodeOp::new(to, self.ctx.group).to_value();
+        self.state = State::Watching { vector, to, msg_round, deadline, role };
+        Command::Call { path: proto::CHECK_AGGREGATE, body }
+    }
+
+    /// §5.4: the aggregation deadline passed — ask to take over.
+    fn election(&mut self) -> Command {
+        self.state = State::AwaitElection;
+        Command::Call {
+            path: proto::SHOULD_INITIATE,
+            body: proto::NodeOp::new(self.ctx.node, self.ctx.group).to_value(),
+        }
+    }
+
+    fn response(&mut self, resp: Value) -> Command {
+        match std::mem::replace(&mut self.state, State::Finished) {
+            State::AwaitAggregate { deadline } => self.on_aggregate(resp, deadline),
+            State::AwaitPostAck { vector, to, msg_round, deadline, role } => {
+                // Post ack content is ignored (blocking path likewise).
+                self.watch(vector, to, msg_round, deadline, role)
+            }
+            State::Watching { vector, to, msg_round, deadline, role } => {
+                self.on_check(resp, vector, to, msg_round, deadline, role)
+            }
+            State::AwaitFinalAggregate { deadline } => self.on_final_aggregate(resp, deadline),
+            State::AwaitAveragePostAck { deadline, average, contributors } => {
+                // §5.5: with subgroups the initiator also pulls the global
+                // cross-group average (the "+g" message).
+                if self.ctx.multi_group() {
+                    self.state = State::AwaitGlobalAverage { deadline, contributors };
+                    Command::Call {
+                        path: proto::GET_AVERAGE,
+                        body: proto::NodeOp::new(self.ctx.node, self.ctx.group).to_value(),
+                    }
+                } else {
+                    self.done(average, contributors)
+                }
+            }
+            State::AwaitGlobalAverage { deadline, contributors } => {
+                if proto::is_empty_status(&resp) {
+                    return self.retry_or_elect(deadline, |m, d| {
+                        m.state = State::AwaitGlobalAverage { deadline: d, contributors };
+                        Command::Call {
+                            path: proto::GET_AVERAGE,
+                            body: proto::NodeOp::new(m.ctx.node, m.ctx.group).to_value(),
+                        }
+                    });
+                }
+                match proto::AverageReady::from_value(&resp) {
+                    Ok(r) => self.done(r.average, contributors),
+                    Err(e) => self.fail(e),
+                }
+            }
+            State::AwaitAverage { deadline } => {
+                if proto::is_empty_status(&resp) {
+                    return self.retry_or_elect(deadline, |m, d| {
+                        m.state = State::AwaitAverage { deadline: d };
+                        Command::Call {
+                            path: proto::GET_AVERAGE,
+                            body: proto::NodeOp::new(m.ctx.node, m.ctx.group).to_value(),
+                        }
+                    });
+                }
+                match proto::AverageReady::from_value(&resp) {
+                    Ok(r) => self.done(r.average, 0),
+                    Err(e) => self.fail(e),
+                }
+            }
+            State::AwaitElection => match proto::InitiateDecision::from_value(&resp) {
+                Ok(decision) => {
+                    self.restarts += 1;
+                    self.is_initiator = decision.init;
+                    self.round_id = decision.round_id;
+                    self.begin_iteration()
+                }
+                Err(e) => self.fail(e),
+            },
+            State::Idle | State::Staggering { .. } | State::Finished => {
+                self.bug("Response in a non-waiting state")
+            }
+        }
+    }
+
+    /// Non-initiator step 1 response (§5.1.2): decrypt, add, post onward.
+    fn on_aggregate(&mut self, resp: Value, deadline: Instant) -> Command {
+        if proto::is_empty_status(&resp) {
+            return self.retry_or_elect(deadline, |m, d| m.await_aggregate(d));
+        }
+        if self.faults.fails_at(self.ctx.node, FailPoint::AfterGet) {
+            return self.finish(LearnerOutcome::dead(self.ctx.node));
+        }
+        let delivery = match proto::AggregateDelivery::from_value(&resp) {
+            Ok(d) => d,
+            Err(e) => return self.fail(e),
+        };
+        let msg_round = delivery.round_id.unwrap_or(self.round_id);
+        let env = match Envelope::from_blob(&delivery.aggregate) {
+            Ok(e) => e,
+            Err(e) => return self.fail(e),
+        };
+        let mut agg = match self.ctx.open_from(&env, delivery.from_node) {
+            Ok(a) => a,
+            Err(e) => return self.fail(e),
+        };
+        self.ctx.math.add_assign(&mut agg, &self.local);
+        let next = self.ctx.successor(self.ctx.node);
+        self.begin_post(agg, next, msg_round, deadline, Role::NonInitiator)
+    }
+
+    /// A `check_aggregate` response inside `post_and_watch`'s loop.
+    fn on_check(
+        &mut self,
+        resp: Value,
+        vector: Vec<f64>,
+        to: u64,
+        msg_round: u64,
+        deadline: Instant,
+        role: Role,
+    ) -> Command {
+        if proto::is_empty_status(&resp) {
+            return self.retry_or_elect(deadline, move |m, d| m.watch(vector, to, msg_round, d, role));
+        }
+        match proto::CheckOutcome::from_value(&resp) {
+            Err(e) => self.fail(e),
+            Ok(proto::CheckOutcome::Consumed) => self.after_watch(deadline, role),
+            Ok(proto::CheckOutcome::Repost { to_node: new_target }) => {
+                // §5.3: re-encrypt for the node after the failed one.
+                self.reposts += 1;
+                self.begin_post(vector, new_target, msg_round, deadline, role)
+            }
+        }
+    }
+
+    /// `post_and_watch` returned true — continue the role's next step.
+    fn after_watch(&mut self, deadline: Instant, role: Role) -> Command {
+        match role {
+            Role::Initiator => {
+                if self.faults.fails_at(self.ctx.node, FailPoint::InitiatorAfterPost) {
+                    return self.finish(LearnerOutcome::dead(self.ctx.node));
+                }
+                self.state = State::AwaitFinalAggregate { deadline };
+                Command::Call {
+                    path: proto::GET_AGGREGATE,
+                    body: proto::NodeOp::new(self.ctx.node, self.ctx.group).to_value(),
+                }
+            }
+            Role::NonInitiator => {
+                if self.faults.fails_at(self.ctx.node, FailPoint::AfterPost) {
+                    return self.finish(LearnerOutcome::dead(self.ctx.node));
+                }
+                self.state = State::AwaitAverage { deadline };
+                Command::Call {
+                    path: proto::GET_AVERAGE,
+                    body: proto::NodeOp::new(self.ctx.node, self.ctx.group).to_value(),
+                }
+            }
+        }
+    }
+
+    /// Initiator step 3–4 (§5.1.1): unmask, divide, publish.
+    fn on_final_aggregate(&mut self, resp: Value, deadline: Instant) -> Command {
+        if proto::is_empty_status(&resp) {
+            return self.retry_or_elect(deadline, |m, d| {
+                m.state = State::AwaitFinalAggregate { deadline: d };
+                Command::Call {
+                    path: proto::GET_AGGREGATE,
+                    body: proto::NodeOp::new(m.ctx.node, m.ctx.group).to_value(),
+                }
+            });
+        }
+        let delivery = match proto::AggregateDelivery::from_value(&resp) {
+            Ok(d) => d,
+            Err(e) => return self.fail(e),
+        };
+        let contributors = delivery.posted.unwrap_or(self.ctx.chain.len() as u64);
+        let env = match Envelope::from_blob(&delivery.aggregate) {
+            Ok(e) => e,
+            Err(e) => return self.fail(e),
+        };
+        let agg = match self.ctx.open_from(&env, delivery.from_node) {
+            Ok(a) => a,
+            Err(e) => return self.fail(e),
+        };
+        let mask = match self.mask.take() {
+            Some(m) => m,
+            None => return self.bug("initiator mask missing"),
+        };
+        let average = self.ctx.math.finalize(&agg, &mask, contributors as f64);
+        let body = proto::PostAverage::body(self.ctx.node, self.ctx.group, &average, contributors);
+        self.state = State::AwaitAveragePostAck { deadline, average, contributors };
+        Command::Call { path: proto::POST_AVERAGE, body }
+    }
+
+    /// The blocking `wait_for` contract: on empty, give up only when the
+    /// step deadline has passed (→ §5.4 election), otherwise re-issue the
+    /// same poll.
+    fn retry_or_elect(
+        &mut self,
+        deadline: Instant,
+        retry: impl FnOnce(&mut Self, Instant) -> Command,
+    ) -> Command {
+        if Instant::now() >= deadline {
+            self.election()
+        } else {
+            retry(self, deadline)
+        }
+    }
+
+    fn done(&mut self, average: Vec<f64>, contributors: u64) -> Command {
+        let outcome = LearnerOutcome {
+            node: self.ctx.node,
+            average,
+            was_initiator: self.is_initiator,
+            reposts: self.reposts,
+            restarts: self.restarts,
+            contributors,
+            died: false,
+            deadline_exceeded: false,
+        };
+        self.finish(outcome)
+    }
+
+    fn finish(&mut self, outcome: LearnerOutcome) -> Command {
+        self.state = State::Finished;
+        Command::Finished(Box::new(outcome))
+    }
+
+    fn fail(&mut self, err: anyhow::Error) -> Command {
+        self.state = State::Finished;
+        Command::Failed(err)
+    }
+
+    fn bug(&mut self, what: &str) -> Command {
+        self.state = State::Finished;
+        Command::Failed(anyhow!("learner {} runtime bug: {}", self.ctx.node, what))
+    }
+}

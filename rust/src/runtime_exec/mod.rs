@@ -1,0 +1,468 @@
+//! Event-driven learner runtime: a fixed worker pool multiplexing every
+//! learner in a session over a handful of OS threads.
+//!
+//! The thread runtime (`learner::actor`) parks one OS thread per learner,
+//! which caps the scale harness around n≈120 — far below the regime where
+//! the paper's `4n + 2f` message complexity is interesting. Here each
+//! learner is a resumable [`machine::LearnerStateMachine`]; its blocking
+//! points become completion wakeups:
+//!
+//! * **long-polls** (`get_aggregate`, `check_aggregate`, `get_average`,
+//!   `get_key`, `get_preneg_key`) are submitted non-blockingly through
+//!   [`InProcTransport::submit`]; a miss parks the machine in the
+//!   controller's [`WaitHub`] under the returned
+//!   [`crate::transport::PollKey`] and arms a poll-window timer;
+//! * **data arrival** wakes the hub key, which enqueues the task on the
+//!   ready queue ([`WakeSink`]);
+//! * **poll-window expiry** (the timer) synthesizes the same
+//!   `status: "empty"` response the blocking server returns, so the
+//!   machine's deadline/election logic is driven identically;
+//! * **§5.9 stagger** sleeps become timer entries instead of a sleeping
+//!   thread.
+//!
+//! The lost-wakeup race (data lands between a failed probe and the hub
+//! registration) is closed by re-probing after registering; every wakeup
+//! carries the submission generation, and stale wakeups are dropped.
+//!
+//! Lock order (outermost first): tasks map → task slot → controller
+//! state → wait hub → ready queue / timer heap. Notifications only ever
+//! enqueue; machines are driven exclusively by workers holding the slot.
+
+pub mod machine;
+pub mod timer;
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::learner::faults::FaultPlan;
+use crate::learner::{LearnerContext, LearnerOutcome};
+use crate::transport::{InProcTransport, PollKey, Submitted, WaitHub, WakeSink};
+use machine::{Command, LearnerStateMachine, MachineEvent};
+use timer::{TimerKind, TimerWheel};
+
+/// Executor sizing knobs.
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    /// Worker threads; 0 means "one per available CPU".
+    pub workers: usize,
+    /// Long-poll window: how long a pending submission waits before the
+    /// synthetic `empty` completion (mirrors the controller's
+    /// `poll_time`, so both runtimes poll at the same cadence).
+    pub poll_time: Duration,
+}
+
+impl ExecutorConfig {
+    /// Resolve `workers == 0` to the machine's parallelism.
+    pub fn resolved_workers(&self) -> usize {
+        resolve_workers(self.workers)
+    }
+}
+
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4)
+    }
+}
+
+/// Why a task landed on the ready queue.
+enum Cause {
+    /// Freshly spawned: deliver [`MachineEvent::Start`].
+    Start,
+    /// The wait hub woke this task's pending submission.
+    Wake { generation: u64 },
+    /// The pending submission's poll window expired.
+    PollTimeout { generation: u64 },
+    /// A [`Command::Sleep`] elapsed.
+    SleepDone { generation: u64 },
+}
+
+/// An in-flight long-poll submission.
+struct PendingCall {
+    path: &'static str,
+    body: crate::json::Value,
+    key: PollKey,
+    generation: u64,
+}
+
+/// Per-learner slot: the machine plus its wait state. Workers serialize
+/// access through the slot mutex; `generation` increments at every new
+/// submission or sleep so stale wakeups and timers are identifiable.
+struct TaskSlot {
+    machine: LearnerStateMachine,
+    generation: u64,
+    pending: Option<PendingCall>,
+    sleeping: Option<u64>,
+    outcome_tx: Sender<Result<LearnerOutcome>>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<(u64, Cause)>>,
+    queue_cv: Condvar,
+    shutdown: AtomicBool,
+    tasks: Mutex<BTreeMap<u64, Arc<Mutex<TaskSlot>>>>,
+    next_task: AtomicU64,
+    transport: Arc<InProcTransport>,
+    hub: Arc<WaitHub>,
+    timer: TimerWheel,
+    poll_time: Duration,
+}
+
+impl Shared {
+    fn enqueue(&self, task: u64, cause: Cause) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back((task, cause));
+        self.queue_cv.notify_one();
+    }
+
+    fn dequeue(&self) -> Option<(u64, Cause)> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                return Some(item);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = self.queue_cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Bridges the controller's [`WaitHub`] to the ready queue. Holds the
+/// executor weakly: the hub outlives the executor (it belongs to the
+/// controller), so wakeups after shutdown simply evaporate.
+struct QueueSink {
+    shared: Weak<Shared>,
+}
+
+impl WakeSink for QueueSink {
+    fn wake(&self, task: u64, generation: u64) {
+        if let Some(shared) = self.shared.upgrade() {
+            shared.enqueue(task, Cause::Wake { generation });
+        }
+    }
+}
+
+/// The worker-pool executor. One per session; spawn learners with
+/// [`EventExecutor::spawn_learner`] and collect each outcome from the
+/// returned channel.
+pub struct EventExecutor {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl EventExecutor {
+    /// Start the pool. `transport` must have completion enabled (built
+    /// with [`InProcTransport::with_completion`]); `hub` must be the
+    /// completion handler's wait hub.
+    pub fn start(
+        transport: Arc<InProcTransport>,
+        hub: Arc<WaitHub>,
+        cfg: ExecutorConfig,
+    ) -> Arc<EventExecutor> {
+        let workers = cfg.resolved_workers();
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            tasks: Mutex::new(BTreeMap::new()),
+            next_task: AtomicU64::new(1),
+            transport,
+            hub: hub.clone(),
+            timer: TimerWheel::new(),
+            poll_time: cfg.poll_time,
+        });
+        hub.set_sink(Arc::new(QueueSink { shared: Arc::downgrade(&shared) }));
+        let mut handles = Vec::with_capacity(workers + 1);
+        for i in 0..workers {
+            let s = shared.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("safe-worker-{i}"))
+                    .spawn(move || worker_loop(s))
+                    .expect("spawn worker"),
+            );
+        }
+        let s = shared.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name("safe-timer".into())
+                .spawn(move || timer_loop(s))
+                .expect("spawn timer"),
+        );
+        Arc::new(EventExecutor { shared, handles: Mutex::new(handles), workers })
+    }
+
+    /// Worker threads in the pool (after resolving `workers: 0`).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue one learner; the receiver yields its outcome (or error)
+    /// exactly once.
+    pub fn spawn_learner(
+        &self,
+        ctx: Arc<LearnerContext>,
+        local: Vec<f64>,
+        faults: FaultPlan,
+    ) -> Receiver<Result<LearnerOutcome>> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.shared.next_task.fetch_add(1, Ordering::SeqCst);
+        let slot = TaskSlot {
+            machine: LearnerStateMachine::new(ctx, local, faults),
+            generation: 0,
+            pending: None,
+            sleeping: None,
+            outcome_tx: tx,
+        };
+        self.shared.tasks.lock().unwrap().insert(id, Arc::new(Mutex::new(slot)));
+        self.shared.enqueue(id, Cause::Start);
+        rx
+    }
+}
+
+impl Drop for EventExecutor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.queue_cv.notify_all();
+        self.shared.timer.shutdown();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn timer_loop(shared: Arc<Shared>) {
+    while let Some(entry) = shared.timer.next_due() {
+        let cause = match entry.kind {
+            TimerKind::Poll => Cause::PollTimeout { generation: entry.generation },
+            TimerKind::Sleep => Cause::SleepDone { generation: entry.generation },
+        };
+        shared.enqueue(entry.task, cause);
+    }
+}
+
+/// Outcome of translating a queue item against the slot's wait state.
+enum Step {
+    /// Feed this event to the machine.
+    Run(MachineEvent),
+    /// Stale or spurious; task stays parked.
+    Keep,
+    /// Transport failure — abort the task with this error.
+    Abort(anyhow::Error),
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    while let Some((task_id, cause)) = shared.dequeue() {
+        let slot_arc = match shared.tasks.lock().unwrap().get(&task_id) {
+            Some(s) => s.clone(),
+            // Already finished (e.g. a stale timer for a removed task).
+            None => continue,
+        };
+        let finished = {
+            let mut slot = slot_arc.lock().unwrap();
+            let step = match cause {
+                Cause::Start => Step::Run(MachineEvent::Start),
+                Cause::Wake { generation } => {
+                    resolve_pending(&shared, task_id, &mut slot, generation, false)
+                }
+                Cause::PollTimeout { generation } => {
+                    resolve_pending(&shared, task_id, &mut slot, generation, true)
+                }
+                Cause::SleepDone { generation } => {
+                    if slot.sleeping == Some(generation) {
+                        slot.sleeping = None;
+                        Step::Run(MachineEvent::TimerFired)
+                    } else {
+                        Step::Keep
+                    }
+                }
+            };
+            match step {
+                Step::Keep => None,
+                Step::Abort(e) => Some((slot.outcome_tx.clone(), Err(e))),
+                Step::Run(event) => {
+                    drive(&shared, task_id, &mut slot, event).map(|r| (slot.outcome_tx.clone(), r))
+                }
+            }
+        };
+        if let Some((tx, result)) = finished {
+            // Slot lock released above: removal takes the map lock, and
+            // map → slot is the only permitted nesting order.
+            shared.tasks.lock().unwrap().remove(&task_id);
+            let _ = tx.send(result);
+        }
+    }
+}
+
+/// Match a wakeup/timeout against the slot's pending submission and
+/// probe the server. `timed_out` distinguishes the poll-window expiry
+/// (which must synthesize the blocking server's `empty` response) from a
+/// hub wake (which re-parks on a miss — e.g. after a broadcast wake).
+fn resolve_pending(
+    shared: &Shared,
+    task_id: u64,
+    slot: &mut TaskSlot,
+    generation: u64,
+    timed_out: bool,
+) -> Step {
+    if !matches!(&slot.pending, Some(p) if p.generation == generation) {
+        return Step::Keep;
+    }
+    let (path, key) = {
+        let p = slot.pending.as_ref().unwrap();
+        (p.path, p.key)
+    };
+    let probe = {
+        let p = slot.pending.as_ref().unwrap();
+        shared.transport.try_complete(p.path, &p.body)
+    };
+    match probe {
+        Err(e) => {
+            slot.pending = None;
+            shared.transport.notify_unparked(path);
+            Step::Abort(e)
+        }
+        Ok(Some(resp)) => {
+            slot.pending = None;
+            shared.transport.notify_unparked(path);
+            Step::Run(MachineEvent::Response(resp))
+        }
+        Ok(None) if timed_out => {
+            // The poll window elapsed with nothing to deliver: complete
+            // with the same (accounted) `empty` the blocking server
+            // returns at poll timeout, and let the machine decide between
+            // re-polling and a §5.4 election.
+            slot.pending = None;
+            shared.transport.notify_unparked(path);
+            match shared.transport.complete_empty(path) {
+                Ok(resp) => Step::Run(MachineEvent::Response(resp)),
+                Err(e) => Step::Abort(e),
+            }
+        }
+        Ok(None) => {
+            // Spurious wake (broadcast, or the data was for an earlier
+            // consumer): re-park, then close the register/notify race
+            // with one more probe. A now-stale registration is dropped
+            // later by the generation check.
+            shared.hub.register(key, task_id, generation);
+            let reprobe = {
+                let p = slot.pending.as_ref().unwrap();
+                shared.transport.try_complete(p.path, &p.body)
+            };
+            match reprobe {
+                Err(e) => {
+                    slot.pending = None;
+                    shared.transport.notify_unparked(path);
+                    Step::Abort(e)
+                }
+                Ok(Some(resp)) => {
+                    slot.pending = None;
+                    shared.transport.notify_unparked(path);
+                    Step::Run(MachineEvent::Response(resp))
+                }
+                // Original poll-window timer is still armed; keep waiting.
+                Ok(None) => Step::Keep,
+            }
+        }
+    }
+}
+
+/// Run the machine until it parks (pending call / sleep) or terminates.
+/// Returns `Some(result)` when the task is done.
+fn drive(
+    shared: &Shared,
+    task_id: u64,
+    slot: &mut TaskSlot,
+    first: MachineEvent,
+) -> Option<Result<LearnerOutcome>> {
+    let mut event = first;
+    loop {
+        match slot.machine.on_event(event) {
+            Command::Call { path, body } => {
+                slot.generation += 1;
+                let generation = slot.generation;
+                match shared.transport.submit(path, &body) {
+                    Err(e) => return Some(Err(e)),
+                    Ok(Submitted::Ready(resp)) => {
+                        event = MachineEvent::Response(resp);
+                    }
+                    Ok(Submitted::Pending(key)) => {
+                        // Register first, probe again after: if the data
+                        // raced in between submit's probe and the
+                        // registration, the second probe finds it; the
+                        // then-stale registration is generation-filtered.
+                        shared.hub.register(key, task_id, generation);
+                        match shared.transport.try_complete(path, &body) {
+                            Err(e) => return Some(Err(e)),
+                            Ok(Some(resp)) => {
+                                event = MachineEvent::Response(resp);
+                            }
+                            Ok(None) => {
+                                shared.transport.notify_parked(path);
+                                shared.timer.schedule(
+                                    Instant::now() + shared.poll_time,
+                                    task_id,
+                                    generation,
+                                    TimerKind::Poll,
+                                );
+                                slot.pending = Some(PendingCall { path, body, key, generation });
+                                return None;
+                            }
+                        }
+                    }
+                }
+            }
+            Command::Sleep { until } => {
+                slot.generation += 1;
+                slot.sleeping = Some(slot.generation);
+                shared.timer.schedule(until, task_id, slot.generation, TimerKind::Sleep);
+                return None;
+            }
+            Command::Finished(outcome) => return Some(Ok(*outcome)),
+            Command::Failed(e) => return Some(Err(e)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+    use crate::transport::Handler;
+
+    struct Echo;
+    impl Handler for Echo {
+        fn handle(&self, _path: &str, body: &Value) -> Value {
+            body.clone()
+        }
+    }
+
+    #[test]
+    fn resolve_workers_defaults_to_parallelism() {
+        assert!(resolve_workers(0) >= 1);
+        assert_eq!(resolve_workers(7), 7);
+    }
+
+    #[test]
+    fn executor_starts_and_shuts_down_cleanly() {
+        let transport = Arc::new(InProcTransport::new(Arc::new(Echo)));
+        let hub = Arc::new(WaitHub::default());
+        let exec = EventExecutor::start(
+            transport,
+            hub,
+            ExecutorConfig { workers: 2, poll_time: Duration::from_millis(50) },
+        );
+        assert_eq!(exec.workers(), 2);
+        drop(exec); // must join workers + timer without hanging
+    }
+}

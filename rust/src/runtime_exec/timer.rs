@@ -1,0 +1,136 @@
+//! Deadline scheduling for the event runtime: a single timer thread
+//! holding a min-heap of `(when, task, generation)` entries. Poll-window
+//! expiries and §5.9 stagger delays both land here, so a parked learner
+//! costs one heap entry instead of one sleeping OS thread.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Why a timer was armed — decides which executor event fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TimerKind {
+    /// A pending long-poll's window expired (synthesize `empty`).
+    Poll,
+    /// A [`crate::runtime_exec::machine::Command::Sleep`] elapsed.
+    Sleep,
+}
+
+/// Heap entry; `seq` breaks ties so ordering is total and FIFO among
+/// entries armed for the same instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct TimerEntry {
+    pub at: Instant,
+    pub seq: u64,
+    pub task: u64,
+    pub generation: u64,
+    pub kind: TimerKind,
+}
+
+#[derive(Default)]
+struct TimerQueue {
+    heap: BinaryHeap<Reverse<TimerEntry>>,
+    next_seq: u64,
+    shutdown: bool,
+}
+
+/// Shared timer state; the owning executor spawns the thread that drains
+/// it (see `timer_loop` in the parent module).
+pub struct TimerWheel {
+    queue: Mutex<TimerQueue>,
+    cv: Condvar,
+}
+
+impl TimerWheel {
+    pub fn new() -> Self {
+        TimerWheel { queue: Mutex::new(TimerQueue::default()), cv: Condvar::new() }
+    }
+
+    /// Arm a timer. Stale entries (the task moved on, bumping its
+    /// generation) fire harmlessly: the executor drops generation
+    /// mismatches.
+    pub fn schedule(&self, at: Instant, task: u64, generation: u64, kind: TimerKind) {
+        let mut q = self.queue.lock().unwrap();
+        let seq = q.next_seq;
+        q.next_seq += 1;
+        q.heap.push(Reverse(TimerEntry { at, seq, task, generation, kind }));
+        self.cv.notify_all();
+    }
+
+    pub fn shutdown(&self) {
+        self.queue.lock().unwrap().shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until an entry is due (returning it) or shutdown (returning
+    /// `None`). Drives the timer thread's loop.
+    pub fn next_due(&self) -> Option<TimerEntry> {
+        let mut q = self.queue.lock().unwrap();
+        loop {
+            if q.shutdown {
+                return None;
+            }
+            let now = Instant::now();
+            match q.heap.peek() {
+                None => {
+                    q = self.cv.wait(q).unwrap();
+                }
+                Some(Reverse(entry)) if entry.at <= now => {
+                    let entry = *entry;
+                    q.heap.pop();
+                    return Some(entry);
+                }
+                Some(Reverse(entry)) => {
+                    let wait = entry.at - now;
+                    let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
+                    q = guard;
+                }
+            }
+        }
+    }
+}
+
+impl Default for TimerWheel {
+    fn default() -> Self {
+        TimerWheel::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fires_in_deadline_order_not_insertion_order() {
+        let w = TimerWheel::new();
+        let now = Instant::now();
+        w.schedule(now + Duration::from_millis(30), 2, 0, TimerKind::Poll);
+        w.schedule(now + Duration::from_millis(10), 1, 0, TimerKind::Sleep);
+        w.schedule(now + Duration::from_millis(20), 3, 0, TimerKind::Poll);
+        let order: Vec<u64> = (0..3).map(|_| w.next_due().unwrap().task).collect();
+        assert_eq!(order, vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn equal_deadlines_fire_fifo() {
+        let w = TimerWheel::new();
+        let at = Instant::now();
+        for task in 1..=4u64 {
+            w.schedule(at, task, 0, TimerKind::Sleep);
+        }
+        let order: Vec<u64> = (0..4).map(|_| w.next_due().unwrap().task).collect();
+        assert_eq!(order, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn shutdown_unblocks() {
+        let w = std::sync::Arc::new(TimerWheel::new());
+        let w2 = w.clone();
+        let t = std::thread::spawn(move || w2.next_due());
+        std::thread::sleep(Duration::from_millis(20));
+        w.shutdown();
+        assert!(t.join().unwrap().is_none());
+    }
+}

@@ -50,6 +50,129 @@ pub trait Handler: Send + Sync {
     fn handle(&self, path: &str, body: &Value) -> Value;
 }
 
+/// What a long-poll is waiting *for* — the completion layer's routing key.
+///
+/// Each key names one controller-side condition that can flip a parked
+/// long-poll from "empty" to "ready". The event runtime registers a waiter
+/// under the key a probe returned; the controller wakes that key at every
+/// state change that can satisfy it (the completion-style mirror of its
+/// internal `Condvar::notify_all`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PollKey {
+    /// `get_aggregate`: a chain message addressed to `node` in `group`.
+    Aggregate { group: u64, node: u64 },
+    /// `check_aggregate`: the chain advanced through (or around) `node`.
+    Check { group: u64, node: u64 },
+    /// `get_average`: every expected group posted its average (§5.5
+    /// barrier) — one global key, woken once when the barrier completes.
+    Average,
+    /// `get_key`: `node`'s public key was registered.
+    Key { node: u64 },
+    /// `get_preneg_key`: `owner` posted a §5.8 key for `node`.
+    Preneg { owner: u64, node: u64 },
+}
+
+/// One non-blocking probe of a request: either the full response, or the
+/// key to wait on for a wakeup.
+pub enum TryHandle {
+    Ready(Value),
+    WouldBlock(PollKey),
+}
+
+/// A handler that can answer requests *without parking the caller*: the
+/// long-poll predicate is evaluated exactly once under the server lock.
+/// Non-long-poll paths must answer `Ready` immediately (the blanket
+/// behaviour is to fall through to [`Handler::handle`]).
+pub trait NonBlockingHandler: Handler {
+    fn try_handle(&self, path: &str, body: &Value) -> TryHandle;
+
+    /// A submission on `path` parked (went pending). Lets the server keep
+    /// its §5.9 connection-pressure gauge accurate under the event
+    /// runtime, where no OS thread actually blocks.
+    fn poll_parked(&self, _path: &str) {}
+
+    /// A parked submission on `path` completed (data or poll timeout).
+    fn poll_unparked(&self, _path: &str) {}
+}
+
+/// Where completed wakeups go: the event executor's ready queue. Kept as
+/// a trait so the transport layer never depends on the executor.
+pub trait WakeSink: Send + Sync {
+    fn wake(&self, task: u64, generation: u64);
+}
+
+/// Registry of parked long-polls, keyed by [`PollKey`].
+///
+/// The lost-wakeup race (data arrives between a failed probe and the
+/// register) is closed by the caller probing *again* after registering;
+/// a stale registration is harmless — wakeups carry the submission
+/// generation and the executor drops mismatches. Locking: the hub lock
+/// nests inside the server's state lock (notify runs under it) and the
+/// sink's queue lock nests inside the hub's — never the other way.
+#[derive(Default)]
+pub struct WaitHub {
+    waiters: Mutex<BTreeMap<PollKey, Vec<(u64, u64)>>>,
+    sink: Mutex<Option<Arc<dyn WakeSink>>>,
+}
+
+impl WaitHub {
+    /// Install the executor's ready queue. Must happen before any
+    /// `register`; wakes with no sink are dropped (nothing can be waiting).
+    pub fn set_sink(&self, sink: Arc<dyn WakeSink>) {
+        *self.sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Park `(task, generation)` until `key` is woken.
+    pub fn register(&self, key: PollKey, task: u64, generation: u64) {
+        self.waiters
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_default()
+            .push((task, generation));
+    }
+
+    /// Wake every waiter parked on `key`.
+    pub fn wake(&self, key: PollKey) {
+        let drained = match self.waiters.lock().unwrap().remove(&key) {
+            Some(w) => w,
+            None => return,
+        };
+        let sink = self.sink.lock().unwrap().clone();
+        if let Some(s) = sink {
+            for (task, generation) in drained {
+                s.wake(task, generation);
+            }
+        }
+    }
+
+    /// Wake everything (configure / begin_round / reset: any predicate
+    /// may have changed shape).
+    pub fn wake_all(&self) {
+        let drained: Vec<(u64, u64)> = {
+            let mut map = self.waiters.lock().unwrap();
+            let all = map.values().flatten().copied().collect();
+            map.clear();
+            all
+        };
+        let sink = self.sink.lock().unwrap().clone();
+        if let Some(s) = sink {
+            for (task, generation) in drained {
+                s.wake(task, generation);
+            }
+        }
+    }
+}
+
+/// Outcome of a completion-style submission: either the response (the
+/// request *and* response legs were accounted, same as a blocking
+/// `call`), or the poll key to wait on (request leg accounted; the
+/// response leg is accounted at completion time).
+pub enum Submitted {
+    Ready(Value),
+    Pending(PollKey),
+}
+
 /// Client-side view of the wire.
 pub trait ClientTransport: Send + Sync {
     fn call(&self, path: &str, body: &Value) -> anyhow::Result<Value>;
@@ -211,6 +334,9 @@ pub struct InProcTransport {
     handler: Arc<dyn Handler>,
     stats: Arc<MessageStats>,
     codec: &'static dyn WireCodec,
+    /// Non-blocking twin of `handler`, present when the event runtime
+    /// drives this transport in completion style (`submit`/`try_complete`).
+    completion: Option<Arc<dyn NonBlockingHandler>>,
     /// Simulated one-way network latency applied to each call (the REST
     /// hop the paper's numbers include). Zero by default.
     pub latency: Duration,
@@ -225,6 +351,7 @@ impl InProcTransport {
             handler,
             stats: Arc::new(MessageStats::default()),
             codec: WireFormat::Json.codec(),
+            completion: None,
             latency: Duration::ZERO,
             per_kib: Duration::ZERO,
         }
@@ -270,6 +397,82 @@ impl InProcTransport {
 
     pub fn stats(&self) -> Arc<MessageStats> {
         self.stats.clone()
+    }
+
+    /// Builder: enable completion-style delivery (`submit`/`try_complete`)
+    /// backed by a non-blocking view of the server.
+    pub fn with_completion(mut self, completion: Arc<dyn NonBlockingHandler>) -> Self {
+        self.completion = Some(completion);
+        self
+    }
+
+    fn completion_handler(&self) -> anyhow::Result<&Arc<dyn NonBlockingHandler>> {
+        self.completion
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("transport has no completion handler"))
+    }
+
+    /// Account and deliver a response body exactly like the response leg
+    /// of a blocking `call` — the event runtime's message/byte counters
+    /// stay bit-identical to the thread runtime's.
+    fn finish_response(&self, path: &str, resp: Value) -> anyhow::Result<Value> {
+        let resp_encoded = self.codec.encode(&resp);
+        self.stats.record_response(path, resp_encoded.len());
+        self.stats.record_codec(self.codec.format(), resp_encoded.len());
+        self.charge(resp_encoded.len());
+        self.codec.decode(&resp_encoded)
+    }
+
+    /// Completion-style request: accounts the request leg (one recorded
+    /// message, same as `call`), then probes once. `Ready` carries a fully
+    /// accounted response; `Pending` returns the [`PollKey`] to wait on —
+    /// subsequent probes via [`InProcTransport::try_complete`] are
+    /// server-internal and record nothing, mirroring how a blocked
+    /// long-poll re-checks its predicate without new messages.
+    pub fn submit(&self, path: &str, body: &Value) -> anyhow::Result<Submitted> {
+        let completion = self.completion_handler()?;
+        let encoded = self.codec.encode(body);
+        self.stats.record(path, encoded.len());
+        self.stats.record_codec(self.codec.format(), encoded.len());
+        self.charge(encoded.len());
+        let decoded = self.codec.decode(&encoded)?;
+        match completion.try_handle(path, &decoded) {
+            TryHandle::Ready(resp) => Ok(Submitted::Ready(self.finish_response(path, resp)?)),
+            TryHandle::WouldBlock(key) => Ok(Submitted::Pending(key)),
+        }
+    }
+
+    /// Re-probe a pending submission. `Some` completes it (response leg
+    /// accounted); `None` means still parked. The codecs round-trip
+    /// losslessly (pinned by the codec tests), so probing the original
+    /// body is equivalent to re-decoding the recorded request.
+    pub fn try_complete(&self, path: &str, body: &Value) -> anyhow::Result<Option<Value>> {
+        let completion = self.completion_handler()?;
+        match completion.try_handle(path, body) {
+            TryHandle::Ready(resp) => Ok(Some(self.finish_response(path, resp)?)),
+            TryHandle::WouldBlock(_) => Ok(None),
+        }
+    }
+
+    /// Complete a pending submission whose poll window expired with the
+    /// same `status: "empty"` response (and response-leg accounting) the
+    /// blocking server returns at poll timeout.
+    pub fn complete_empty(&self, path: &str) -> anyhow::Result<Value> {
+        self.finish_response(path, crate::proto::status("empty"))
+    }
+
+    /// Forward §5.9 gauge hints to the server (no-ops without completion).
+    pub fn notify_parked(&self, path: &str) {
+        if let Some(c) = &self.completion {
+            c.poll_parked(path);
+        }
+    }
+
+    /// See [`InProcTransport::notify_parked`].
+    pub fn notify_unparked(&self, path: &str) {
+        if let Some(c) = &self.completion {
+            c.poll_unparked(path);
+        }
     }
 }
 

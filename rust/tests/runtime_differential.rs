@@ -1,0 +1,167 @@
+//! Thread-runtime vs event-runtime differential: the same seeded session
+//! must produce *bit-identical* results under both executors.
+//!
+//! The event runtime (`runtime_exec`) re-expresses `run_learner` as a
+//! state machine driven by a fixed worker pool; nothing about the
+//! protocol is allowed to change. This test runs one churn scenario
+//! twice — identical `SessionConfig` except `runtime`, identical seeded
+//! Poisson schedule, identical inputs — and holds every per-round
+//! observable equal: the average vector (exact float bits — chain order
+//! is deterministic, so even FP rounding must agree), protocol message
+//! counts, per-path message maps, rekey accounting, contributor counts,
+//! and failover/merge/deadline counters.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use safe_agg::config::{DeviceProfile, RuntimeKind, SessionConfig};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::ChurnSchedule;
+use safe_agg::protocols::SafeSession;
+
+/// Everything a round reports that must not depend on the executor.
+#[derive(Debug, Clone, PartialEq)]
+struct RoundFingerprint {
+    average: Vec<f64>,
+    messages: u64,
+    rekey_messages: u64,
+    contributors: u64,
+    progress_failovers: u64,
+    initiator_failovers: u64,
+    merged_groups: u64,
+    reassigned_nodes: u64,
+    deadline_exceeded: u64,
+    per_path: BTreeMap<String, u64>,
+}
+
+fn cfg(n: usize, groups: usize, mode: CipherMode, runtime: RuntimeKind) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        groups,
+        features: 3,
+        mode,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        // Generous windows: no empty-poll retries, no spurious reposts or
+        // elections under load — message counts stay schedule-determined.
+        poll_time: Duration::from_secs(10),
+        aggregation_timeout: Duration::from_secs(60),
+        progress_timeout: Duration::from_secs(2),
+        monitor_interval: Duration::from_millis(50),
+        merge_floor: true,
+        seed: Some(11),
+        runtime,
+        ..Default::default()
+    }
+}
+
+fn inputs_for(n: usize, rounds: usize) -> Vec<Vec<Vec<f64>>> {
+    (0..rounds)
+        .map(|r| {
+            (1..=n)
+                .map(|i| {
+                    (0..3)
+                        .map(|f| (i * (r + 2)) as f64 + 0.125 * f as f64)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn run(cfg: SessionConfig, rounds: &[Vec<Vec<f64>>], churn: &ChurnSchedule) -> Vec<RoundFingerprint> {
+    let session = SafeSession::new(cfg).unwrap();
+    session
+        .run_rounds(rounds, churn)
+        .unwrap()
+        .into_iter()
+        .map(|r| RoundFingerprint {
+            average: r.metrics.average.clone(),
+            messages: r.metrics.messages,
+            rekey_messages: r.metrics.rekey_messages,
+            contributors: r.metrics.contributors,
+            progress_failovers: r.metrics.progress_failovers,
+            initiator_failovers: r.metrics.initiator_failovers,
+            merged_groups: r.metrics.merged_groups,
+            reassigned_nodes: r.metrics.reassigned_nodes,
+            deadline_exceeded: r.metrics.deadline_exceeded,
+            per_path: r.metrics.per_path.clone(),
+        })
+        .collect()
+}
+
+fn assert_identical(threads: &[RoundFingerprint], events: &[RoundFingerprint]) {
+    assert_eq!(threads.len(), events.len(), "round counts differ");
+    for (i, (t, e)) in threads.iter().zip(events).enumerate() {
+        // Exact float bits, not approximate: both executors walk the same
+        // deterministic chain order, so the FP sums must agree exactly.
+        assert_eq!(
+            t.average.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            e.average.iter().map(|v| v.to_bits()).collect::<Vec<u64>>(),
+            "round {}: averages diverge\n threads={:?}\n events ={:?}",
+            i + 1,
+            t.average,
+            e.average
+        );
+        assert_eq!(t, e, "round {}: fingerprints diverge", i + 1);
+    }
+}
+
+/// The headline differential: n=24 in 6 subgroups, 3 rounds of seeded
+/// Poisson churn with privacy-floor merge re-balancing on, full hybrid
+/// encryption — threads vs events must match in every observable.
+#[test]
+fn threads_and_events_agree_under_poisson_churn() {
+    let n = 24;
+    let rounds = inputs_for(n, 3);
+    let churn = ChurnSchedule::poisson(11, n, 3, 0.08, 0.5);
+    assert!(!churn.is_empty(), "schedule must actually churn");
+
+    let threads = run(cfg(n, 6, CipherMode::Hybrid, RuntimeKind::Threads), &rounds, &churn);
+    let events = run(cfg(n, 6, CipherMode::Hybrid, RuntimeKind::Events), &rounds, &churn);
+    assert_identical(&threads, &events);
+
+    // Sanity: the scenario exercised something (a death shrank a round's
+    // contributor set), so agreement is meaningful, not vacuous.
+    assert!(
+        threads.iter().any(|r| r.contributors < n as u64),
+        "churn never removed a contributor: {threads:?}"
+    );
+}
+
+/// Same differential through the SAF-mode (`CipherMode::None`) round-0
+/// fast path — the shared-keypair setup and gated rekeys must behave
+/// identically under both executors too.
+#[test]
+fn threads_and_events_agree_in_saf_mode() {
+    let n = 12;
+    let rounds = inputs_for(n, 2);
+    let churn = ChurnSchedule::poisson(7, n, 2, 0.12, 0.6);
+
+    let threads = run(cfg(n, 3, CipherMode::None, RuntimeKind::Threads), &rounds, &churn);
+    let events = run(cfg(n, 3, CipherMode::None, RuntimeKind::Events), &rounds, &churn);
+    assert_identical(&threads, &events);
+}
+
+/// A failure-free single round under both runtimes lands exactly on the
+/// paper's `4n (+ g)` floor — the differential holds at the formula
+/// level, not just relative to each other.
+#[test]
+fn both_runtimes_hit_the_formula_floor() {
+    let n = 10;
+    let rounds = inputs_for(n, 1);
+    let churn = ChurnSchedule::none();
+    let g = 2u64;
+    for runtime in [RuntimeKind::Threads, RuntimeKind::Events] {
+        let fps = run(cfg(n, g as usize, CipherMode::Hybrid, runtime), &rounds, &churn);
+        assert_eq!(fps.len(), 1);
+        assert_eq!(
+            fps[0].messages,
+            4 * n as u64 + g,
+            "{runtime:?}: failure-free round must cost 4n + g"
+        );
+        assert_eq!(fps[0].contributors, n as u64);
+        assert_eq!(fps[0].progress_failovers, 0);
+        assert_eq!(fps[0].deadline_exceeded, 0);
+    }
+}
