@@ -1,0 +1,55 @@
+//! Hostile-network bench: the failure matrix and a paper-scale
+//! Poisson-churn session per network profile, with seeded run-twice
+//! determinism asserts (see `harness::netbench`). Renders the per-cell
+//! table, appends `bench_out/netbench.csv`, and writes `BENCH_net.json`
+//! for cross-PR tracking.
+//!
+//! Knobs (for CI's lighter smoke run): `SAFE_NET_PROFILES`
+//! (semicolon-separated `--net`-style specs — semicolons because one
+//! spec may itself contain commas, e.g. `lossy,loss-req=0.2;lan`),
+//! `SAFE_NET_MATRIX_NODES`, `SAFE_NET_NODES`, `SAFE_NET_GROUPS`,
+//! `SAFE_NET_ROUNDS`, `SAFE_NET_DIE`, `SAFE_NET_REJOIN`,
+//! `SAFE_NET_SEED`, `SAFE_NET_WORKERS`,
+//! `SAFE_NET_RUNTIME=threads|events`.
+
+use safe_agg::config::RuntimeKind;
+use safe_agg::harness::netbench::{self, NetBenchConfig};
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let defaults = NetBenchConfig::default();
+    let profiles = match std::env::var("SAFE_NET_PROFILES") {
+        Ok(v) => v
+            .split(';')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+        Err(_) => defaults.profiles.clone(),
+    };
+    let runtime = match std::env::var("SAFE_NET_RUNTIME").as_deref() {
+        Ok("threads") => RuntimeKind::Threads,
+        _ => RuntimeKind::Events,
+    };
+    let nc = NetBenchConfig {
+        profiles,
+        matrix_nodes: env_or("SAFE_NET_MATRIX_NODES", defaults.matrix_nodes),
+        nodes: env_or("SAFE_NET_NODES", defaults.nodes),
+        groups: env_or("SAFE_NET_GROUPS", defaults.groups),
+        rounds: env_or("SAFE_NET_ROUNDS", defaults.rounds),
+        lambda_die: env_or("SAFE_NET_DIE", defaults.lambda_die),
+        lambda_rejoin: env_or("SAFE_NET_REJOIN", defaults.lambda_rejoin),
+        seed: env_or("SAFE_NET_SEED", defaults.seed),
+        runtime,
+        workers: env_or("SAFE_NET_WORKERS", defaults.workers),
+    };
+    // run() errors out on any non-determinism, wedged round, or empty
+    // contributor set — a failing exit code IS the regression signal.
+    let report = netbench::run(&nc)?;
+    report.emit(None);
+    std::fs::write("BENCH_net.json", report.to_json().to_string())?;
+    println!("wrote BENCH_net.json");
+    Ok(())
+}

@@ -9,7 +9,9 @@
 //! Knobs (for CI's lighter smoke run): `SAFE_SCALE_NODES`,
 //! `SAFE_SCALE_GROUPS`, `SAFE_SCALE_ROUNDS`, `SAFE_SCALE_DIE`,
 //! `SAFE_SCALE_REJOIN`, `SAFE_SCALE_SEED`, `SAFE_SCALE_WORKERS`,
-//! `SAFE_SCALE_RUNTIME=threads|events`; `SAFE_SMOKE_NODES` /
+//! `SAFE_SCALE_RUNTIME=threads|events`; `SAFE_SCALE_NET` takes a
+//! `--net`-style profile spec (`lossy`, `wan,loss-req=0.05`, …) and
+//! stretches every timeout budget to match; `SAFE_SMOKE_NODES` /
 //! `SAFE_SMOKE_GROUPS` size the single-round smoke (`SAFE_SMOKE_NODES=0`
 //! skips it); set `SAFE_SCALE_NO_ASSERT=1` to report formula deltas
 //! without failing on them.
@@ -29,6 +31,11 @@ fn main() -> anyhow::Result<()> {
         Ok("threads") => RuntimeKind::Threads,
         _ => RuntimeKind::Events,
     };
+    let net = match std::env::var("SAFE_SCALE_NET") {
+        Ok(spec) => safe_agg::transport::NetProfile::parse(&spec)
+            .map_err(|e| anyhow::anyhow!("bad SAFE_SCALE_NET: {e:#}"))?,
+        Err(_) => defaults.net.clone(),
+    };
     let sc = ScaleConfig {
         n_nodes,
         // Chains of ~5 keep privacy-floor merges observable under churn.
@@ -39,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         seed: env_or("SAFE_SCALE_SEED", defaults.seed),
         runtime,
         workers: env_or("SAFE_SCALE_WORKERS", defaults.workers),
+        net,
         ..defaults
     };
     let report = poisson_scale(&sc)?;
@@ -82,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     let smoke_nodes: usize = env_or("SAFE_SMOKE_NODES", 10_000);
     let smoke = if smoke_nodes > 0 && runtime == RuntimeKind::Events {
         let smoke_groups = env_or("SAFE_SMOKE_GROUPS", (smoke_nodes / 10).max(1));
-        let s = single_round_smoke(smoke_nodes, smoke_groups, sc.workers)?;
+        let s = single_round_smoke(smoke_nodes, smoke_groups, sc.workers, &sc.net)?;
         println!(
             "smoke: n={} g={} in {:.3}s — {} messages (expected {}), peak threads {} \
              ({} workers)",

@@ -9,6 +9,7 @@ pub mod profile;
 use std::time::Duration;
 
 use crate::crypto::envelope::CipherMode;
+use crate::transport::NetProfile;
 pub use crate::proto::codec::WireFormat;
 pub use profile::DeviceProfile;
 
@@ -108,6 +109,14 @@ pub struct SessionConfig {
     /// Worker threads for the event runtime (`--workers N`); 0 = auto
     /// (available parallelism).
     pub workers: usize,
+    /// Hostile-network profile (`--net PRESET[,FIELD=VALUE]*`): injected
+    /// per-link latency/jitter, request/response packet loss,
+    /// bandwidth-proportional delay and designated stragglers, all drawn
+    /// deterministically from the profile seed. The default (`ideal`) is
+    /// a byte-for-byte no-op. Parsed via
+    /// [`NetProfile::parse`](crate::transport::netprofile::NetProfile::parse);
+    /// malformed specs are a hard CLI error, never silently ignored.
+    pub net: NetProfile,
 }
 
 impl Default for SessionConfig {
@@ -134,6 +143,7 @@ impl Default for SessionConfig {
             merge_floor: true,
             runtime: RuntimeKind::Events,
             workers: 0,
+            net: NetProfile::default(),
         }
     }
 }

@@ -403,6 +403,14 @@ impl Controller {
                 return proto::status("stale_round");
             }
         }
+        // Attempt dedup: a client whose post was applied but whose ack
+        // was lost resends the same token; answer `duplicate` with no
+        // state change instead of double-counting the contribution.
+        if let Some(t) = req.token {
+            if !gs.seen_tokens.insert(t) {
+                return proto::status("duplicate");
+            }
+        }
         let now = Instant::now();
         gs.mailbox.insert(
             req.to_node,
@@ -864,6 +872,7 @@ mod tests {
             aggregate: blob.clone(),
             round_id: None,
             epoch: None,
+            token: None,
         }
         .to_value();
         c.handle(proto::POST_AGGREGATE, &body);
@@ -874,6 +883,41 @@ mod tests {
             other => panic!("expected Bytes aggregate, got {other:?}"),
         };
         assert!(Blob::ptr_eq(&blob, &delivered), "controller must not copy the blob");
+    }
+
+    #[test]
+    fn duplicate_post_token_is_absorbed_without_state_change() {
+        let c = controller();
+        let post = |token| {
+            proto::PostAggregate {
+                from_node: 1,
+                to_node: 2,
+                group: 1,
+                aggregate: Blob::from_slice(b"sealed"),
+                round_id: Some(0),
+                epoch: None,
+                token: Some(token),
+            }
+            .to_value()
+        };
+        let r = c.handle(proto::POST_AGGREGATE, &post(77));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        // The recipient consumes the delivery.
+        let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        // A retry of the same logical post (same token) after the ack was
+        // lost must NOT re-park the aggregate for node 2.
+        let r = c.handle(proto::POST_AGGREGATE, &post(77));
+        assert_eq!(r.str_of("status"), Some("duplicate"));
+        let r = c.handle(proto::GET_AGGREGATE, &proto::node_op(2, 1));
+        assert_eq!(r.str_of("status"), Some("empty"), "duplicate must not refill the mailbox");
+        // A different token is a genuinely new post and is accepted.
+        let r = c.handle(proto::POST_AGGREGATE, &post(78));
+        assert_eq!(r.str_of("status"), Some("ok"));
+        // Token-less legacy posts are never deduplicated.
+        let legacy = proto::post_aggregate(1, 2, b"legacy", 1);
+        assert_eq!(c.handle(proto::POST_AGGREGATE, &legacy).str_of("status"), Some("ok"));
+        assert_eq!(c.handle(proto::POST_AGGREGATE, &legacy).str_of("status"), Some("ok"));
     }
 
     #[test]

@@ -59,6 +59,10 @@ pub struct GroupState {
     pub last_activity: Instant,
     /// Monotonic round counter — bumped on initiator-failover restart.
     pub round_id: u64,
+    /// Attempt-dedup tokens already applied this round: a post carrying a
+    /// seen token is answered `duplicate` with no state change, so a
+    /// client resending after response-leg loss never double-counts.
+    pub seen_tokens: BTreeSet<u64>,
 }
 
 impl GroupState {
@@ -76,6 +80,7 @@ impl GroupState {
             round_start: now,
             last_activity: now,
             round_id: 0,
+            seen_tokens: BTreeSet::new(),
         }
     }
 
@@ -91,6 +96,9 @@ impl GroupState {
         self.round_start = Instant::now();
         self.last_activity = self.round_start;
         self.round_id += 1;
+        // Tokens from the aborted attempt can never be accepted anyway
+        // (their round_id is stale); dropping them bounds the set.
+        self.seen_tokens.clear();
     }
 
     /// Next node after `node` in chain order, skipping known-failed nodes.

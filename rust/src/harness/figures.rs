@@ -18,6 +18,7 @@ use crate::metrics::RoundMetrics;
 use crate::protocols::bon::BonSession;
 use crate::protocols::insec::InsecSession;
 use crate::protocols::SafeSession;
+use crate::transport::NetProfile;
 
 /// Which protocol/variant a series runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -257,9 +258,27 @@ pub fn failover_points() -> Vec<usize> {
 }
 
 /// §6.3 timeout budgets (paper: predicted completion + safety margin,
-/// with ΣSAFE per-node timeouts == BON global timeout).
+/// with ΣSAFE per-node timeouts == BON global timeout). These are the
+/// clean-LAN floors; call [`safe_node_timeout`] / [`bon_global_timeout`]
+/// to get the budget honest under the active [`NetProfile`].
 pub const SAFE_NODE_TIMEOUT: Duration = Duration::from_millis(200);
 pub const BON_GLOBAL_TIMEOUT: Duration = Duration::from_millis(600);
+
+/// §6.3 per-node progress timeout derived from the network profile: the
+/// 200 ms clean-LAN constant, stretched to 16 expected RTTs when the
+/// profile is slower than that (a progress check spans several
+/// poll + post exchanges, each costing an RTT plus retry backoffs).
+/// Identical to [`SAFE_NODE_TIMEOUT`] under the ideal profile.
+pub fn safe_node_timeout(net: &NetProfile) -> Duration {
+    net.budget(SAFE_NODE_TIMEOUT, 16)
+}
+
+/// BON's global round-2 close timeout under `net`: three SAFE per-node
+/// budgets, preserving the paper's ΣSAFE == BON comparison rule at every
+/// profile. Identical to [`BON_GLOBAL_TIMEOUT`] under the ideal profile.
+pub fn bon_global_timeout(net: &NetProfile) -> Duration {
+    net.budget(BON_GLOBAL_TIMEOUT, 48)
+}
 
 /// Fig 13 — aggregation time vs completed nodes, SAFE/BON ± failover.
 pub fn fig13() -> Result<Figure> {
@@ -278,12 +297,12 @@ pub fn fig13() -> Result<Figure> {
         // round-2 close timeout.
         let faults = FaultPlan::kill_range(4, 6);
         let mut cfg = edge_cfg(completed + 3, 1);
-        cfg.progress_timeout = SAFE_NODE_TIMEOUT;
+        cfg.progress_timeout = safe_node_timeout(&cfg.net);
         cfg.monitor_interval = Duration::from_millis(50);
         let safe_f = run_variant(Variant::Safe, cfg, &faults, repeats)?;
         fig.push_point("SAFE+failover", completed as f64, &safe_f);
         let mut cfg = edge_cfg(completed + 3, 1);
-        cfg.progress_timeout = BON_GLOBAL_TIMEOUT;
+        cfg.progress_timeout = bon_global_timeout(&cfg.net);
         let bon_f = run_variant(Variant::Bon, cfg, &faults, repeats)?;
         fig.push_point("BON+failover", completed as f64, &bon_f);
     }
@@ -304,8 +323,10 @@ pub fn fig14(fig13: &Figure) -> Figure {
     // series to isolate protocol overhead, like the paper (§6.3: "we
     // subtract the expected failure timeout time ... from the overall
     // aggregation time").
-    let safe_budget = SAFE_NODE_TIMEOUT.as_secs_f64() * 3.0;
-    let bon_budget = BON_GLOBAL_TIMEOUT.as_secs_f64();
+    // The fig13 runs use edge_cfg's default (ideal) profile, so the
+    // derived budgets equal the clean-LAN constants there.
+    let safe_budget = safe_node_timeout(&NetProfile::default()).as_secs_f64() * 3.0;
+    let bon_budget = bon_global_timeout(&NetProfile::default()).as_secs_f64();
     for series in &fig13.series {
         let (label, budget) = match series.label.as_str() {
             "SAFE+failover" => ("SAFE overhead", safe_budget),

@@ -7,6 +7,7 @@
 
 pub mod figures;
 pub mod multiround;
+pub mod netbench;
 pub mod scale;
 
 use std::fmt::Write as _;
@@ -198,6 +199,9 @@ mod tests {
                 merged_groups: 0,
                 reassigned_nodes: 0,
                 deadline_exceeded: 0,
+                net_retries: 0,
+                net_drops: 0,
+                dedup_posts: 0,
                 per_path: Default::default(),
             })
             .collect()

@@ -38,13 +38,21 @@ pub struct RoundRow {
     pub merged_groups: u64,
     /// Nodes aggregated outside their home group this round.
     pub reassigned_nodes: u64,
+    /// Attempts re-sent after retryable transport faults this round.
+    pub net_retries: u64,
+    /// Injected packet drops observed by the transport this round.
+    pub net_drops: u64,
+    /// Duplicate posts absorbed by the controller's dedup token.
+    pub dedup_posts: u64,
 }
 
 impl RoundRow {
     /// Messages beyond the failure-free `4·contributors` floor — the
-    /// per-round failover cost (`2f` plus any subgroup pulls).
+    /// per-round failover cost (`2f` plus any subgroup pulls). Transport
+    /// retries are physical resends of the same logical message, so they
+    /// are subtracted first: the paper's formulas bound logical traffic.
     pub fn failover_extra(&self) -> i64 {
-        self.messages as i64 - 4 * self.contributors as i64
+        self.messages as i64 - self.net_retries as i64 - 4 * self.contributors as i64
     }
 }
 
@@ -75,6 +83,9 @@ impl MultiRoundReport {
                     initiator_failovers: m.initiator_failovers,
                     merged_groups: m.merged_groups,
                     reassigned_nodes: m.reassigned_nodes,
+                    net_retries: m.net_retries,
+                    net_drops: m.net_drops,
+                    dedup_posts: m.dedup_posts,
                 })
                 .collect(),
         }
@@ -97,7 +108,7 @@ impl MultiRoundReport {
         let _ = writeln!(out, "── {} — per-round failover cost ──", self.id);
         let _ = writeln!(
             out,
-            "{:>5} {:>9} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7} {:>7} {:>10}",
+            "{:>5} {:>9} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7} {:>7} {:>10} {:>7} {:>6} {:>6}",
             "round",
             "secs",
             "messages",
@@ -107,12 +118,15 @@ impl MultiRoundReport {
             "progress_f",
             "init_f",
             "merges",
-            "reassigned"
+            "reassigned",
+            "retries",
+            "drops",
+            "dedup"
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{:>5} {:>9.4} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7} {:>7} {:>10}",
+                "{:>5} {:>9.4} {:>9} {:>8} {:>7} {:>13} {:>11} {:>7} {:>7} {:>10} {:>7} {:>6} {:>6}",
                 r.round,
                 r.secs,
                 r.messages,
@@ -122,7 +136,10 @@ impl MultiRoundReport {
                 r.progress_failovers,
                 r.initiator_failovers,
                 r.merged_groups,
-                r.reassigned_nodes
+                r.reassigned_nodes,
+                r.net_retries,
+                r.net_drops,
+                r.dedup_posts
             );
         }
         let _ = writeln!(
@@ -140,12 +157,13 @@ impl MultiRoundReport {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "id,round,secs,messages,failover_extra,rekey_messages,contributors,\
-             progress_failovers,initiator_failovers,merged_groups,reassigned_nodes\n",
+             progress_failovers,initiator_failovers,merged_groups,reassigned_nodes,\
+             net_retries,net_drops,dedup_posts\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{},{},{},{},{},{},{},{}",
+                "{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{}",
                 self.id,
                 r.round,
                 r.secs,
@@ -156,7 +174,10 @@ impl MultiRoundReport {
                 r.progress_failovers,
                 r.initiator_failovers,
                 r.merged_groups,
-                r.reassigned_nodes
+                r.reassigned_nodes,
+                r.net_retries,
+                r.net_drops,
+                r.dedup_posts
             );
         }
         out
@@ -179,6 +200,9 @@ impl MultiRoundReport {
                     ("initiator_failovers", Value::from(r.initiator_failovers)),
                     ("merged_groups", Value::from(r.merged_groups)),
                     ("reassigned_nodes", Value::from(r.reassigned_nodes)),
+                    ("net_retries", Value::from(r.net_retries)),
+                    ("net_drops", Value::from(r.net_drops)),
+                    ("dedup_posts", Value::from(r.dedup_posts)),
                 ])
             })
             .collect();
@@ -211,7 +235,7 @@ impl MultiRoundReport {
 pub fn multi_round_failover(n: usize, rounds: usize) -> Result<MultiRoundReport> {
     use crate::learner::faults::FailPoint;
     let mut cfg = super::figures::edge_cfg(n, 1);
-    cfg.progress_timeout = super::figures::SAFE_NODE_TIMEOUT;
+    cfg.progress_timeout = super::figures::safe_node_timeout(&cfg.net);
     cfg.monitor_interval = std::time::Duration::from_millis(50);
     let churn = ChurnSchedule::none().die(4, 1, FailPoint::NeverStart).rejoin(4, 3);
     run_schedule("multiround_failover", cfg, rounds, &churn)
@@ -255,6 +279,9 @@ mod tests {
                 merged_groups: u64::from(i == 1),
                 reassigned_nodes: if i == 1 { 2 } else { 0 },
                 deadline_exceeded: 0,
+                net_retries: u64::from(i == 2),
+                net_drops: u64::from(i == 2),
+                dedup_posts: 0,
                 per_path: Default::default(),
             })
             .collect()
@@ -286,7 +313,14 @@ mod tests {
             initiator_failovers: 0,
             merged_groups: 0,
             reassigned_nodes: 0,
+            net_retries: 0,
+            net_drops: 0,
+            dedup_posts: 0,
         };
         assert_eq!(r.failover_extra(), 2);
+        // A retried attempt is a physical resend, not extra logical
+        // traffic: the floor comparison subtracts it back out.
+        let retried = RoundRow { messages: 4 * 5 + 2 + 3, net_retries: 3, ..r };
+        assert_eq!(retried.failover_extra(), 2);
     }
 }

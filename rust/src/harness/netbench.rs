@@ -1,0 +1,560 @@
+//! Hostile-network bench: the §5.3/§5.4 failover machinery exercised
+//! under injected transport faults ([`NetProfile`]) instead of only
+//! scheduled deaths.
+//!
+//! For each profile in [`NetBenchConfig::profiles`] the bench runs
+//!
+//! 1. the single-round failure matrix at small n — one scenario per
+//!    fault position the paper calls out (clean chain, mid-chain death
+//!    before/after the pull, tail death, initiator crash) — each run
+//!    **twice** with the same seeds, asserting the retry/drop/dedup
+//!    counters and round outcomes are bit-identical (the determinism
+//!    contract of the fault model); and
+//! 2. a paper-scale Poisson-churn session (default 120 nodes across 24
+//!    groups, 5 rounds), where injected loss and scheduled churn
+//!    overlap — the regime where retry exhaustion must degrade into an
+//!    ordinary §5.3/§5.4 live failure rather than a wedged round.
+//!
+//! Timeout budgets are derived from the profile's expected RTT
+//! ([`NetProfile::budget`]), so slow profiles get honest deadlines and
+//! the ideal profile reproduces the historical constants. The `net`
+//! bench target renders the table and writes `BENCH_net.json` for
+//! cross-PR tracking.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::config::{DeviceProfile, RuntimeKind, SessionConfig};
+use crate::crypto::envelope::CipherMode;
+use crate::json::Value;
+use crate::learner::faults::{ChurnSchedule, FailPoint, FaultPlan};
+use crate::metrics::RoundMetrics;
+use crate::protocols::SafeSession;
+use crate::transport::NetProfile;
+
+/// Knobs for one hostile-network bench run.
+#[derive(Debug, Clone)]
+pub struct NetBenchConfig {
+    /// `--net`-style profile specs to sweep (a preset name or
+    /// `preset,field=value,…` overrides).
+    pub profiles: Vec<String>,
+    /// Chain length for the single-round failure matrix.
+    pub matrix_nodes: usize,
+    /// Total learners for the churn session.
+    pub nodes: usize,
+    /// Configured subgroups for the churn session.
+    pub groups: usize,
+    /// Rounds in the churn session.
+    pub rounds: usize,
+    /// Poisson death rate per node per round (churn session).
+    pub lambda_die: f64,
+    /// Poisson rejoin rate per dead node per round (churn session).
+    pub lambda_rejoin: f64,
+    /// Seed for churn, keys and data (the whole run is reproducible).
+    pub seed: u64,
+    /// Learner executor for the churn session (the matrix runs both ways
+    /// implicitly via the differential tests; here events is the default).
+    pub runtime: RuntimeKind,
+    /// Worker threads for the event runtime; 0 = available parallelism.
+    pub workers: usize,
+}
+
+impl Default for NetBenchConfig {
+    fn default() -> Self {
+        NetBenchConfig {
+            profiles: vec![
+                "lan".to_string(),
+                "wan".to_string(),
+                "lte".to_string(),
+                "lossy".to_string(),
+            ],
+            matrix_nodes: 5,
+            nodes: 120,
+            groups: 24,
+            rounds: 5,
+            lambda_die: 0.12,
+            lambda_rejoin: 0.35,
+            seed: 42,
+            runtime: RuntimeKind::Events,
+            workers: 0,
+        }
+    }
+}
+
+/// One measured (profile, scenario) cell of the bench table. Counter
+/// fields are summed across the scenario's rounds.
+#[derive(Debug, Clone)]
+pub struct NetRow {
+    /// Profile spec the cell ran under.
+    pub profile: String,
+    /// Scenario id (`matrix:*` or `churn`).
+    pub scenario: String,
+    /// Rounds the scenario ran.
+    pub rounds: u64,
+    /// Total wall-clock over those rounds.
+    pub secs: f64,
+    /// Chain data-plane messages (physical attempts, retries included).
+    pub messages: u64,
+    /// Contributors in the final round.
+    pub contributors: u64,
+    /// Transport retries the resilience layer issued.
+    pub net_retries: u64,
+    /// Injected request/response drops.
+    pub net_drops: u64,
+    /// Duplicate posts the controller absorbed via the dedup token.
+    pub dedup_posts: u64,
+    /// §5.3 progress failovers across the scenario.
+    pub progress_failovers: u64,
+    /// §5.4 initiator failovers across the scenario.
+    pub initiator_failovers: u64,
+}
+
+/// The per-round values that must be bit-identical between two runs with
+/// the same seeds — everything except wall-clock.
+fn fingerprint(rounds: &[RoundMetrics]) -> Vec<[u64; 7]> {
+    rounds
+        .iter()
+        .map(|m| {
+            [
+                m.messages,
+                m.contributors,
+                m.net_retries,
+                m.net_drops,
+                m.dedup_posts,
+                m.progress_failovers,
+                m.initiator_failovers,
+            ]
+        })
+        .collect()
+}
+
+fn row_from(profile: &str, scenario: &str, rounds: &[RoundMetrics]) -> NetRow {
+    NetRow {
+        profile: profile.to_string(),
+        scenario: scenario.to_string(),
+        rounds: rounds.len() as u64,
+        secs: rounds.iter().map(|m| m.secs()).sum(),
+        messages: rounds.iter().map(|m| m.messages).sum(),
+        contributors: rounds.last().map_or(0, |m| m.contributors),
+        net_retries: rounds.iter().map(|m| m.net_retries).sum(),
+        net_drops: rounds.iter().map(|m| m.net_drops).sum(),
+        dedup_posts: rounds.iter().map(|m| m.dedup_posts).sum(),
+        progress_failovers: rounds.iter().map(|m| m.progress_failovers).sum(),
+        initiator_failovers: rounds.iter().map(|m| m.initiator_failovers).sum(),
+    }
+}
+
+/// A full hostile-network sweep: one row per (profile, scenario).
+#[derive(Debug, Clone)]
+pub struct NetReport {
+    /// Output id (`netbench`): names the CSV artifact.
+    pub id: String,
+    /// The knobs the run used.
+    pub config: NetBenchConfig,
+    /// Per-cell measurements.
+    pub rows: Vec<NetRow>,
+}
+
+impl NetReport {
+    /// Aligned text table, one row per (profile, scenario).
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "── {} — matrix n={} · churn n={} g={} λ_die={} λ_rejoin={} seed={} ──",
+            self.id,
+            self.config.matrix_nodes,
+            self.config.nodes,
+            self.config.groups,
+            self.config.lambda_die,
+            self.config.lambda_rejoin,
+            self.config.seed
+        );
+        let _ = writeln!(
+            out,
+            "{:>8} {:>22} {:>6} {:>8} {:>8} {:>7} {:>7} {:>6} {:>6} {:>9} {:>9}",
+            "profile", "scenario", "rounds", "secs", "messages", "contrib", "retries",
+            "drops", "dedup", "prog_fo", "init_fo"
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{:>8} {:>22} {:>6} {:>8.3} {:>8} {:>7} {:>7} {:>6} {:>6} {:>9} {:>9}",
+                r.profile,
+                r.scenario,
+                r.rounds,
+                r.secs,
+                r.messages,
+                r.contributors,
+                r.net_retries,
+                r.net_drops,
+                r.dedup_posts,
+                r.progress_failovers,
+                r.initiator_failovers
+            );
+        }
+        out
+    }
+
+    /// CSV rows mirroring [`NetReport::to_table`].
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "id,profile,scenario,rounds,secs,messages,contributors,net_retries,net_drops,\
+             dedup_posts,progress_failovers,initiator_failovers\n",
+        );
+        for r in &self.rows {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{:.6},{},{},{},{},{},{},{}",
+                self.id,
+                r.profile,
+                r.scenario,
+                r.rounds,
+                r.secs,
+                r.messages,
+                r.contributors,
+                r.net_retries,
+                r.net_drops,
+                r.dedup_posts,
+                r.progress_failovers,
+                r.initiator_failovers
+            );
+        }
+        out
+    }
+
+    /// Machine-readable form for `BENCH_net.json`.
+    pub fn to_json(&self) -> Value {
+        let rows: Vec<Value> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Value::object(vec![
+                    ("profile", Value::from(r.profile.as_str())),
+                    ("scenario", Value::from(r.scenario.as_str())),
+                    ("rounds", Value::from(r.rounds)),
+                    ("secs", Value::from(r.secs)),
+                    ("messages", Value::from(r.messages)),
+                    ("contributors", Value::from(r.contributors)),
+                    ("net_retries", Value::from(r.net_retries)),
+                    ("net_drops", Value::from(r.net_drops)),
+                    ("dedup_posts", Value::from(r.dedup_posts)),
+                    ("progress_failovers", Value::from(r.progress_failovers)),
+                    ("initiator_failovers", Value::from(r.initiator_failovers)),
+                ])
+            })
+            .collect();
+        let profiles: Vec<Value> =
+            self.config.profiles.iter().map(|p| Value::from(p.as_str())).collect();
+        Value::object(vec![
+            ("id", Value::from(self.id.as_str())),
+            ("profiles", Value::Arr(profiles)),
+            ("matrix_nodes", Value::from(self.config.matrix_nodes)),
+            ("nodes", Value::from(self.config.nodes)),
+            ("groups", Value::from(self.config.groups)),
+            ("rounds", Value::from(self.config.rounds)),
+            ("lambda_die", Value::from(self.config.lambda_die)),
+            ("lambda_rejoin", Value::from(self.config.lambda_rejoin)),
+            ("seed", Value::from(self.config.seed)),
+            ("cells", Value::Arr(rows)),
+        ])
+    }
+
+    /// Print the table and write `bench_out/<id>.csv`.
+    pub fn emit(&self, out_dir: Option<&str>) {
+        println!("{}", self.to_table());
+        let dir = PathBuf::from(out_dir.unwrap_or("bench_out"));
+        if std::fs::create_dir_all(&dir).is_ok() {
+            let path = dir.join(format!("{}.csv", self.id));
+            if let Ok(mut f) = std::fs::File::create(&path) {
+                let _ = f.write_all(self.to_csv().as_bytes());
+            }
+        }
+    }
+}
+
+/// The single-round fault positions the paper singles out (§5.3/§5.4),
+/// at chain length `n`: a clean run, a mid-chain death before and after
+/// the pull, the chain-closing tail death, and an initiator crash.
+pub fn matrix_scenarios(n: usize) -> Vec<(&'static str, FaultPlan)> {
+    let mid = (n / 2).max(2) as u64;
+    vec![
+        ("matrix:clean", FaultPlan::none()),
+        ("matrix:mid_never_start", FaultPlan::none().kill(mid, FailPoint::NeverStart)),
+        ("matrix:mid_after_get", FaultPlan::none().kill(mid, FailPoint::AfterGet)),
+        ("matrix:tail_never_start", FaultPlan::none().kill(n as u64, FailPoint::NeverStart)),
+        ("matrix:initiator_crash", FaultPlan::none().kill(1, FailPoint::InitiatorAfterPost)),
+    ]
+}
+
+/// Session config for the failure matrix: real crypto at small n, with
+/// every timeout budget stretched to the profile's expected RTT.
+fn matrix_cfg(n: usize, seed: u64, net: &NetProfile) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        features: 2,
+        mode: CipherMode::Hybrid,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        poll_time: net.budget(Duration::from_secs(5), 512),
+        aggregation_timeout: net.budget(Duration::from_secs(30), 4096),
+        progress_timeout: net.budget(Duration::from_millis(500), 48),
+        monitor_interval: Duration::from_millis(60),
+        seed: Some(seed),
+        net: net.clone(),
+        ..Default::default()
+    }
+}
+
+/// Session config for the churn session: SAF mode (the bench measures
+/// the fault/failover machinery, not crypto) at paper scale.
+fn churn_cfg(nc: &NetBenchConfig, net: &NetProfile) -> SessionConfig {
+    SessionConfig {
+        n_nodes: nc.nodes,
+        features: 4,
+        groups: nc.groups,
+        mode: CipherMode::None,
+        rsa_bits: 512,
+        runtime: nc.runtime,
+        workers: nc.workers,
+        profile: DeviceProfile::instant(),
+        poll_time: net.budget(Duration::from_secs(30), 2048),
+        aggregation_timeout: net.budget(Duration::from_secs(120), 8192),
+        progress_timeout: net.budget(Duration::from_millis(500), 48),
+        monitor_interval: Duration::from_millis(60),
+        seed: Some(nc.seed),
+        merge_floor: true,
+        net: net.clone(),
+        ..Default::default()
+    }
+}
+
+fn inputs_for(cfg: &SessionConfig) -> Vec<Vec<f64>> {
+    (0..cfg.n_nodes)
+        .map(|i| (0..cfg.features).map(|f| (i + 1) as f64 + 0.001 * f as f64).collect())
+        .collect()
+}
+
+/// Run one matrix scenario under `net` twice and hold the two runs to
+/// the determinism contract: identical message/retry/drop/dedup counts
+/// and round outcomes. Returns the first run's row.
+pub fn run_matrix_case(
+    spec: &str,
+    net: &NetProfile,
+    n: usize,
+    seed: u64,
+    scenario: &str,
+    faults: &FaultPlan,
+) -> Result<NetRow> {
+    let run = || -> Result<Vec<RoundMetrics>> {
+        let cfg = matrix_cfg(n, seed, net);
+        let session = SafeSession::new(cfg.clone())
+            .with_context(|| format!("building {scenario} under {spec}"))?;
+        let result = session
+            .run_round(&inputs_for(&cfg), faults)
+            .with_context(|| format!("running {scenario} under {spec}"))?;
+        ensure!(
+            result.metrics.contributors > 0,
+            "{scenario} under {spec}: no contributors"
+        );
+        Ok(vec![result.metrics])
+    };
+    let first = run()?;
+    let second = run()?;
+    ensure!(
+        fingerprint(&first) == fingerprint(&second),
+        "{scenario} under {spec}: two seeded runs disagree \
+         ({:?} vs {:?}) — fault injection is not deterministic",
+        fingerprint(&first),
+        fingerprint(&second)
+    );
+    Ok(row_from(spec, scenario, &first))
+}
+
+/// Run the paper-scale Poisson-churn session under `net`. When
+/// `check_determinism` is set the whole multi-round session runs twice
+/// and the per-round fingerprints must match.
+pub fn run_churn_case(
+    spec: &str,
+    net: &NetProfile,
+    nc: &NetBenchConfig,
+    check_determinism: bool,
+) -> Result<NetRow> {
+    let run = || -> Result<Vec<RoundMetrics>> {
+        let cfg = churn_cfg(nc, net);
+        let churn = ChurnSchedule::poisson(
+            nc.seed,
+            nc.nodes,
+            nc.rounds as u64,
+            nc.lambda_die,
+            nc.lambda_rejoin,
+        );
+        let inputs = inputs_for(&cfg);
+        let per_round: Vec<Vec<Vec<f64>>> = (0..nc.rounds).map(|_| inputs.clone()).collect();
+        let session = SafeSession::new(cfg)
+            .with_context(|| format!("building churn session under {spec}"))?;
+        let results = session
+            .run_rounds(&per_round, &churn)
+            .with_context(|| format!("running churn session under {spec}"))?;
+        ensure!(
+            results.len() == nc.rounds,
+            "churn under {spec}: {} of {} rounds completed",
+            results.len(),
+            nc.rounds
+        );
+        Ok(results.into_iter().map(|r| r.metrics).collect())
+    };
+    let first = run()?;
+    if check_determinism {
+        let second = run()?;
+        ensure!(
+            fingerprint(&first) == fingerprint(&second),
+            "churn under {spec}: two seeded sessions disagree — \
+             fault injection is not deterministic across full sessions"
+        );
+    }
+    Ok(row_from(spec, "churn", &first))
+}
+
+/// Run the full sweep: for every profile, the failure matrix (each cell
+/// run twice for the determinism assert) and the Poisson-churn session
+/// (run twice for the loss-heaviest profile).
+pub fn run(nc: &NetBenchConfig) -> Result<NetReport> {
+    let mut rows = Vec::new();
+    // Only the loss-heaviest profile pays the double-length churn run;
+    // the matrix covers determinism for every profile.
+    let heaviest = nc
+        .profiles
+        .iter()
+        .map(|spec| (spec, NetProfile::parse(spec).map(|p| p.loss_request).unwrap_or(0.0)))
+        .max_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(spec, _)| spec.clone());
+    for spec in &nc.profiles {
+        let net = NetProfile::parse(spec)
+            .with_context(|| format!("netbench profile {spec:?}"))?;
+        for (scenario, faults) in matrix_scenarios(nc.matrix_nodes) {
+            rows.push(run_matrix_case(
+                spec,
+                &net,
+                nc.matrix_nodes,
+                nc.seed,
+                scenario,
+                &faults,
+            )?);
+        }
+        let check = heaviest.as_deref() == Some(spec.as_str());
+        rows.push(run_churn_case(spec, &net, nc, check)?);
+    }
+    Ok(NetReport { id: "netbench".to_string(), config: nc.clone(), rows })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> NetReport {
+        NetReport {
+            id: "t".into(),
+            config: NetBenchConfig {
+                profiles: vec!["lossy".into()],
+                nodes: 10,
+                groups: 2,
+                rounds: 2,
+                ..Default::default()
+            },
+            rows: vec![
+                NetRow {
+                    profile: "lossy".into(),
+                    scenario: "matrix:clean".into(),
+                    rounds: 1,
+                    secs: 0.2,
+                    messages: 23,
+                    contributors: 5,
+                    net_retries: 3,
+                    net_drops: 3,
+                    dedup_posts: 1,
+                    progress_failovers: 0,
+                    initiator_failovers: 0,
+                },
+                NetRow {
+                    profile: "lossy".into(),
+                    scenario: "churn".into(),
+                    rounds: 2,
+                    secs: 1.5,
+                    messages: 90,
+                    contributors: 9,
+                    net_retries: 7,
+                    net_drops: 8,
+                    dedup_posts: 2,
+                    progress_failovers: 1,
+                    initiator_failovers: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn report_renderings_agree() {
+        let r = report();
+        let table = r.to_table();
+        assert!(table.contains("matrix:clean"));
+        assert!(table.contains("churn"));
+        assert!(table.contains("dedup"));
+        assert_eq!(r.to_csv().lines().count(), 3); // header + 2 cells
+        let json = r.to_json();
+        assert_eq!(json.str_of("id"), Some("t"));
+        let cells = json.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert_eq!(cells[0].u64_of("net_retries"), Some(3));
+        assert_eq!(cells[1].u64_of("dedup_posts"), Some(2));
+        assert_eq!(
+            json.get("profiles").unwrap().as_arr().unwrap().len(),
+            1
+        );
+    }
+
+    #[test]
+    fn matrix_covers_the_paper_fault_positions() {
+        let scenarios = matrix_scenarios(5);
+        assert_eq!(scenarios.len(), 5);
+        let names: Vec<_> = scenarios.iter().map(|(n, _)| *n).collect();
+        assert!(names.contains(&"matrix:mid_after_get"), "{names:?}");
+        assert!(names.contains(&"matrix:initiator_crash"), "{names:?}");
+        // Scenario ids are unique (they key rows and CSV lines).
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len());
+    }
+
+    /// End-to-end determinism of the whole stack (fault model → retry →
+    /// dedup → failover) for the loss-heaviest preset: run_matrix_case
+    /// runs the round twice internally and fails unless the counters are
+    /// bit-identical.
+    #[test]
+    fn lossy_matrix_case_is_deterministic() {
+        let net = NetProfile::parse("lossy").unwrap();
+        let faults = FaultPlan::none().kill(3, FailPoint::NeverStart);
+        let row = run_matrix_case(
+            "lossy",
+            &net,
+            5,
+            42,
+            "matrix:mid_never_start",
+            &faults,
+        )
+        .unwrap();
+        assert_eq!(row.rounds, 1);
+        assert!(row.contributors >= 3, "privacy floor holds: {row:?}");
+        // Every retry is caused by an injected drop (the in-proc
+        // transport has no other failure source), and every absorbed
+        // duplicate post is caused by a lost response, so the counters
+        // must be ordered whatever the seed drew.
+        assert!(row.net_retries <= row.net_drops, "{row:?}");
+        assert!(row.dedup_posts <= row.net_drops, "{row:?}");
+    }
+}

@@ -32,7 +32,7 @@ use crate::learner::faults::{ChurnSchedule, FailPoint};
 use crate::proto;
 use crate::protocols::SafeSession;
 use crate::topology::GroupPlanner;
-use crate::transport::InProcTransport;
+use crate::transport::{InProcTransport, NetProfile};
 
 /// Knobs for one paper-scale churn run.
 #[derive(Debug, Clone)]
@@ -58,6 +58,10 @@ pub struct ScaleConfig {
     pub runtime: RuntimeKind,
     /// Worker threads for the event runtime; 0 = available parallelism.
     pub workers: usize,
+    /// Network fault profile for the run. The session's timeout budgets
+    /// are derived from this profile's expected RTT (identical to the
+    /// historical hardcoded values under the default ideal profile).
+    pub net: NetProfile,
 }
 
 impl Default for ScaleConfig {
@@ -72,6 +76,7 @@ impl Default for ScaleConfig {
             probe_hop: Duration::from_micros(500),
             runtime: RuntimeKind::Events,
             workers: 0,
+            net: NetProfile::default(),
         }
     }
 }
@@ -102,12 +107,19 @@ pub struct ScaleRow {
     pub expected_messages: u64,
     pub progress_failovers: u64,
     pub initiator_failovers: u64,
+    /// Transport-level retries this round (physical resends of a logical
+    /// message — excluded from the formula check).
+    pub net_retries: u64,
+    /// Injected request/response drops this round.
+    pub net_drops: u64,
 }
 
 impl ScaleRow {
     /// Measured minus predicted messages (0 when the formulas hold).
+    /// Retried attempts are physical resends of one logical message, so
+    /// they are subtracted before comparing against `4n + 2f (+ g)`.
     pub fn formula_delta(&self) -> i64 {
-        self.messages as i64 - self.expected_messages as i64
+        self.messages as i64 - self.net_retries as i64 - self.expected_messages as i64
     }
 
     /// Protocol-message throughput this round.
@@ -183,14 +195,16 @@ impl ScaleReport {
         );
         let _ = writeln!(
             out,
-            "{:>5} {:>8} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5}",
+            "{:>5} {:>8} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5} \
+             {:>7} {:>6}",
             "round", "secs", "present", "groups", "contrib", "deaths", "rejoins", "merges",
-            "reassigned", "rekey", "messages", "expected", "Δ"
+            "reassigned", "rekey", "messages", "expected", "Δ", "retries", "drops"
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{:>5} {:>8.3} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5}",
+                "{:>5} {:>8.3} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5} \
+                 {:>7} {:>6}",
                 r.round,
                 r.secs,
                 r.present,
@@ -203,7 +217,9 @@ impl ScaleReport {
                 r.rekey_messages,
                 r.messages,
                 r.expected_messages,
-                r.formula_delta()
+                r.formula_delta(),
+                r.net_retries,
+                r.net_drops
             );
         }
         let _ = writeln!(
@@ -230,12 +246,12 @@ impl ScaleReport {
         let mut out = String::from(
             "id,round,secs,present,groups,contributors,deaths,rejoins,merged_groups,\
              reassigned_nodes,rekey_messages,messages,expected_messages,formula_delta,\
-             progress_failovers,initiator_failovers\n",
+             progress_failovers,initiator_failovers,net_retries,net_drops\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 self.id,
                 r.round,
                 r.secs,
@@ -251,7 +267,9 @@ impl ScaleReport {
                 r.expected_messages,
                 r.formula_delta(),
                 r.progress_failovers,
-                r.initiator_failovers
+                r.initiator_failovers,
+                r.net_retries,
+                r.net_drops
             );
         }
         out
@@ -280,6 +298,8 @@ impl ScaleReport {
                     ("formula_delta", Value::from(r.formula_delta() as f64)),
                     ("progress_failovers", Value::from(r.progress_failovers)),
                     ("initiator_failovers", Value::from(r.initiator_failovers)),
+                    ("net_retries", Value::from(r.net_retries)),
+                    ("net_drops", Value::from(r.net_drops)),
                 ])
             })
             .collect();
@@ -302,6 +322,7 @@ impl ScaleReport {
             ("runtime", Value::from(self.runtime.as_str())),
             ("workers", Value::from(self.workers)),
             ("peak_threads", Value::from(self.peak_threads)),
+            ("net", Value::from(self.config.net.name.as_str())),
             ("per_round", Value::Arr(rows)),
         ])
     }
@@ -342,13 +363,15 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
         // Generous long-poll budget: a retried (empty) poll counts as a
         // message, and a merged chain detecting several deaths in series
         // can legitimately take seconds — the §5.2 formula check needs
-        // every poll answered within one call.
-        poll_time: Duration::from_secs(30),
-        aggregation_timeout: Duration::from_secs(120),
-        progress_timeout: Duration::from_millis(500),
+        // every poll answered within one call. All budgets stretch with
+        // the net profile's expected RTT (unchanged under ideal).
+        poll_time: sc.net.budget(Duration::from_secs(30), 2048),
+        aggregation_timeout: sc.net.budget(Duration::from_secs(120), 8192),
+        progress_timeout: sc.net.budget(Duration::from_millis(500), 32),
         monitor_interval: Duration::from_millis(60),
         seed: Some(sc.seed),
         merge_floor: true,
+        net: sc.net.clone(),
         ..Default::default()
     };
     let churn = ChurnSchedule::poisson(
@@ -449,6 +472,8 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
             expected_messages: expected,
             progress_failovers: m.progress_failovers,
             initiator_failovers: m.initiator_failovers,
+            net_retries: m.net_retries,
+            net_drops: m.net_drops,
         });
     }
     Ok(ScaleReport {
@@ -512,7 +537,12 @@ impl SmokeResult {
 /// event runtime, checking the §5.2/§5.5 formula (`4n + g`) and that the
 /// process never grew anywhere near n threads. SAF mode + instant
 /// profile: this measures the executor, not crypto or modeled network.
-pub fn single_round_smoke(n_nodes: usize, groups: usize, workers: usize) -> Result<SmokeResult> {
+pub fn single_round_smoke(
+    n_nodes: usize,
+    groups: usize,
+    workers: usize,
+    net: &NetProfile,
+) -> Result<SmokeResult> {
     let cfg = SessionConfig {
         n_nodes,
         features: 2,
@@ -524,11 +554,13 @@ pub fn single_round_smoke(n_nodes: usize, groups: usize, workers: usize) -> Resu
         profile: DeviceProfile::instant(),
         // One poll per blocking point: empty-poll retries would break the
         // exact formula check, and at n=10,000 every retry is n messages.
-        poll_time: Duration::from_secs(120),
-        aggregation_timeout: Duration::from_secs(600),
-        progress_timeout: Duration::from_secs(60),
+        // Budgets stretch with the profile RTT (unchanged under ideal).
+        poll_time: net.budget(Duration::from_secs(120), 8192),
+        aggregation_timeout: net.budget(Duration::from_secs(600), 32768),
+        progress_timeout: net.budget(Duration::from_secs(60), 4096),
         monitor_interval: Duration::from_secs(5),
         seed: Some(7),
+        net: net.clone(),
         ..Default::default()
     };
     let inputs: Vec<Vec<f64>> = (0..n_nodes)
@@ -557,9 +589,10 @@ pub fn single_round_smoke(n_nodes: usize, groups: usize, workers: usize) -> Resu
 
     let expected = 4 * n_nodes as u64 + if groups > 1 { groups as u64 } else { 0 };
     ensure!(
-        result.metrics.messages == expected,
-        "smoke n={n_nodes}: {} messages, expected {expected}",
-        result.metrics.messages
+        result.metrics.messages - result.metrics.net_retries == expected,
+        "smoke n={n_nodes}: {} messages ({} retries), expected {expected}",
+        result.metrics.messages,
+        result.metrics.net_retries
     );
     ensure!(
         result.metrics.contributors == n_nodes as u64,
@@ -602,6 +635,8 @@ mod tests {
                     expected_messages: 4 * 9 + 2 + 2,
                     progress_failovers: 1,
                     initiator_failovers: 0,
+                    net_retries: 0,
+                    net_drops: u64::from(round == 2),
                 })
                 .collect(),
             probe_samples: 7,

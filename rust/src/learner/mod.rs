@@ -29,7 +29,7 @@ use crate::crypto::SymmetricKey;
 use crate::json::Value;
 use crate::proto;
 use crate::runtime::vector::VectorMath;
-use crate::transport::ClientTransport;
+use crate::transport::{as_transport_error, ClientTransport, MessageStats, RetryPolicy};
 use faults::{FailPoint, FaultPlan};
 
 /// Everything one learner needs to participate in aggregations.
@@ -72,6 +72,20 @@ pub struct LearnerContext {
     /// engine). Stamped on every `post_aggregate` so the controller can
     /// reject stragglers from a finished round.
     pub epoch: u64,
+    /// Retry policy for transport faults: bounded attempts with
+    /// exponential backoff, derived from the active `NetProfile`'s
+    /// expected RTT. Long-polls retry freely (idempotent); posts are made
+    /// retry-safe by the attempt-dedup token below.
+    pub retry: RetryPolicy,
+    /// Session-wide message counters — the learner records its own
+    /// retries here so they surface in `RoundMetrics`.
+    pub stats: Arc<MessageStats>,
+    /// Monotonic per-context sequence for attempt-dedup tokens. Combined
+    /// with the node id into a token that is unique per *logical* post but
+    /// stable across retries of the same post, so a resend after
+    /// response-leg loss is absorbed as `duplicate` instead of
+    /// double-counted.
+    pub post_seq: std::sync::atomic::AtomicU64,
 }
 
 /// What a learner reports after an aggregation completes.
@@ -172,6 +186,11 @@ impl LearnerContext {
             initial_initiator: self.initial_initiator,
             stagger_delay: self.stagger_delay,
             epoch: self.epoch,
+            retry: self.retry,
+            stats: self.stats.clone(),
+            // Fresh token space per fork is fine: the controller's
+            // seen-token set is per (group, round) and resets with it.
+            post_seq: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -256,8 +275,28 @@ impl LearnerContext {
         env.open(Some(&self.keys.private), self.recv_keys.get(&from))
     }
 
+    /// One logical call = up to `retry.attempts` physical attempts. Only
+    /// typed, retryable transport faults are retried (injected loss, lost
+    /// connections); protocol-level errors and fatal HTTP statuses
+    /// propagate immediately. Safe for every path the learner uses:
+    /// long-polls are idempotent and chain posts carry a dedup token.
     fn call(&self, path: &str, body: &Value) -> Result<Value> {
-        self.transport.call(path, body)
+        let mut attempt = 0u32;
+        loop {
+            match self.transport.call(path, body) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => {
+                    let retryable =
+                        as_transport_error(&e).map_or(false, |t| t.retryable());
+                    if !retryable || attempt + 1 >= self.retry.attempts.max(1) {
+                        return Err(e);
+                    }
+                    self.stats.record_retry();
+                    std::thread::sleep(self.retry.backoff(attempt));
+                    attempt += 1;
+                }
+            }
+        }
     }
 
     /// Long-poll wrapper: repeat `path` until status != empty or deadline.
@@ -305,10 +344,21 @@ pub fn run_learner(
         if Instant::now() > hard_deadline_for(started, ctx.aggregation_timeout, restarts) {
             return Ok(LearnerOutcome::timed_out(ctx.node, reposts, restarts));
         }
-        let result = if is_initiator {
-            run_initiator(ctx, local, faults, round_id, &mut reposts)?
+        let attempt = if is_initiator {
+            run_initiator(ctx, local, faults, round_id, &mut reposts)
         } else {
-            run_non_initiator(ctx, local, faults, round_id, &mut reposts)?
+            run_non_initiator(ctx, local, faults, round_id, &mut reposts)
+        };
+        let result = match attempt {
+            Ok(r) => r,
+            // Graceful degradation: retry exhaustion (or a fatal transport
+            // fault) makes this node a live failure — the chain re-forms
+            // around it via §5.3/§5.4 instead of the session wedging on an
+            // error. Non-transport errors are real bugs and still abort.
+            Err(e) if as_transport_error(&e).is_some() => {
+                return Ok(LearnerOutcome::dead(ctx.node));
+            }
+            Err(e) => return Err(e),
         };
         match result {
             StepResult::Done { average, contributors } => {
@@ -352,6 +402,10 @@ fn election(ctx: &LearnerContext) -> Result<StepResult> {
 /// Body of a chain post — shared by the blocking path and the event
 /// runtime's state machine so both stamp round/epoch identically.
 pub(crate) fn post_body(ctx: &LearnerContext, to: u64, env: &Envelope, round_id: u64) -> Value {
+    // Attempt-dedup token: unique per logical post (node ⊕ sequence),
+    // stable across retries because the body is built once and re-sent
+    // verbatim. A repost (§5.3) is a new logical post → a new token.
+    let seq = ctx.post_seq.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     proto::PostAggregate {
         from_node: ctx.node,
         to_node: to,
@@ -361,6 +415,7 @@ pub(crate) fn post_body(ctx: &LearnerContext, to: u64, env: &Envelope, round_id:
         aggregate: env.to_blob(),
         round_id: Some(round_id),
         epoch: Some(ctx.epoch),
+        token: Some((ctx.node << 24) | (seq & 0xff_ffff)),
     }
     .to_value()
 }

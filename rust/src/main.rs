@@ -70,6 +70,15 @@ fn print_help() {
                                           transports always use threads)\n\
                    [--workers N]          event-runtime worker threads\n\
                                           (default 0 = available cores)\n\
+                   [--net PROFILE]        hostile-network fault injection:\n\
+                                          PRESET[,FIELD=VALUE]* with preset\n\
+                                          ideal|lan|wan|lte|lossy|straggler\n\
+                                          and fields lat-us, jitter-us,\n\
+                                          per-kib-us, loss-req, loss-resp,\n\
+                                          straggler-every, straggler-x,\n\
+                                          seed; all faults are drawn\n\
+                                          deterministically from the seed\n\
+                                          (default ideal = no faults)\n\
                    [--merge-floor on|off] privacy-floor re-balancing\n\
                                           (default on): merge a group that\n\
                                           churn pushed below 3 live nodes\n\
@@ -120,7 +129,16 @@ fn faults_from(args: &Args) -> FaultPlan {
 }
 
 fn cmd_run(args: &Args) -> i32 {
-    let cfg = args.to_session_config();
+    let mut cfg = args.to_session_config();
+    if let Some(spec) = args.get("net") {
+        match safe_agg::transport::NetProfile::parse(spec) {
+            Ok(p) => cfg.net = p,
+            Err(e) => {
+                eprintln!("bad --net profile: {e:#}");
+                return 2;
+            }
+        }
+    }
     let faults = faults_from(args);
     let rounds = args.get_usize("rounds", 0);
     // A poisson spec generates a schedule for an exact round count
@@ -175,13 +193,14 @@ fn cmd_run(args: &Args) -> i32 {
         return cmd_run_rounds(&cfg, rounds, &churn);
     }
     println!(
-        "SAFE round: {} nodes × {} features, mode={}, groups={}, profile={}, wire={}",
+        "SAFE round: {} nodes × {} features, mode={}, groups={}, profile={}, wire={}, net={}",
         cfg.n_nodes,
         cfg.features,
         cfg.mode.name(),
         cfg.groups,
         cfg.profile.name,
-        cfg.wire.name()
+        cfg.wire.name(),
+        cfg.net.name
     );
     match SafeSession::new(cfg.clone()).and_then(|s| s.run_round(&inputs_for(&cfg), &faults)) {
         Ok(result) => {
@@ -213,14 +232,15 @@ fn cmd_run(args: &Args) -> i32 {
 fn cmd_run_rounds(cfg: &SessionConfig, rounds: usize, churn: &ChurnSchedule) -> i32 {
     println!(
         "SAFE session: {} rounds × {} nodes × {} features, mode={}, groups={}, wire={}, \
-         runtime={:?}",
+         runtime={:?}, net={}",
         rounds,
         cfg.n_nodes,
         cfg.features,
         cfg.mode.name(),
         cfg.groups,
         cfg.wire.name(),
-        cfg.runtime
+        cfg.runtime,
+        cfg.net.name
     );
     let inputs = inputs_for(cfg);
     let per_round: Vec<Vec<Vec<f64>>> = (0..rounds).map(|_| inputs.clone()).collect();

@@ -41,6 +41,19 @@ pub struct RoundMetrics {
     /// trip is an outcome, not a crash: the node counts as died for this
     /// round and the session continues.
     pub deadline_exceeded: u64,
+    /// Attempts re-sent after a retryable transport failure (injected
+    /// loss under a `NetProfile`, or real connection faults over HTTP).
+    /// Bounded by the retry policy; each retried attempt is also counted
+    /// in `messages`, so `messages - net_retries` is the logical count
+    /// the `4n + 2f (+g)` formulas bound.
+    pub net_retries: u64,
+    /// Injected packet drops observed by the transport (request or
+    /// response leg) under the active `NetProfile`.
+    pub net_drops: u64,
+    /// Duplicate posts the controller absorbed via the attempt-dedup
+    /// token (a resend after response-leg loss). Every one of these is a
+    /// double-count that did NOT happen.
+    pub dedup_posts: u64,
     /// Messages by path (for the message-accounting tests).
     pub per_path: std::collections::BTreeMap<String, u64>,
 }
@@ -101,6 +114,9 @@ mod tests {
             merged_groups: 0,
             reassigned_nodes: 0,
             deadline_exceeded: 0,
+            net_retries: 0,
+            net_drops: 0,
+            dedup_posts: 0,
             per_path: Default::default(),
         }
     }

@@ -94,6 +94,11 @@ pub struct PostAggregate {
     /// stale epochs are rejected so a straggler from round N can never
     /// pollute round N+1's mailboxes.
     pub epoch: Option<u64>,
+    /// Attempt-dedup token: stable across retries of the same logical
+    /// post, unique across posts. When a response-leg loss makes the
+    /// client resend a post the controller already applied, the token
+    /// lets the controller answer `duplicate` instead of double-counting.
+    pub token: Option<u64>,
 }
 
 impl PostAggregate {
@@ -110,6 +115,9 @@ impl PostAggregate {
         if let Some(e) = self.epoch {
             v.set("epoch", Value::from(e));
         }
+        if let Some(t) = self.token {
+            v.set("token", Value::from(t));
+        }
         v
     }
 
@@ -121,6 +129,7 @@ impl PostAggregate {
             aggregate: aggregate_blob(v).context("missing aggregate")?,
             round_id: v.u64_of("round_id"),
             epoch: v.u64_of("epoch"),
+            token: v.u64_of("token"),
         })
     }
 }
@@ -743,6 +752,7 @@ pub fn post_aggregate(from_node: u64, to_node: u64, aggregate: &[u8], group: u64
         aggregate: Blob::from_slice(aggregate),
         round_id: None,
         epoch: None,
+        token: None,
     }
     .to_value()
 }
@@ -799,6 +809,7 @@ mod tests {
             aggregate: Blob::from_slice(&[2, 4, 0xde, 0xad, 0xbe, 0xef]),
             round_id: Some(7),
             epoch: Some(2),
+            token: Some(0x0030_0001),
         };
         assert_eq!(PostAggregate::from_value(&pa.to_value()).unwrap(), pa);
 

@@ -150,6 +150,9 @@ impl BonSession {
             merged_groups: 0,
             reassigned_nodes: 0,
             deadline_exceeded: 0,
+            net_retries: 0,
+            net_drops: 0,
+            dedup_posts: 0,
             per_path: Default::default(),
         })
     }

@@ -26,7 +26,7 @@ use crate::runtime::{ArtifactRuntime, XlaMath};
 use crate::runtime_exec::{EventExecutor, ExecutorConfig};
 use crate::topology::{GroupPlanner, TopologyPlan};
 use crate::transport::http::{HttpServer, HttpTransport};
-use crate::transport::{ClientTransport, InProcTransport, MessageStats};
+use crate::transport::{ClientTransport, InProcTransport, MessageStats, NetFaults};
 use crate::util::Stopwatch;
 
 /// RSA keygen is the expensive part of round 0; benches re-create sessions
@@ -124,6 +124,14 @@ impl SafeSession {
         };
         let controller = Arc::new(Controller::new(ctrl_cfg));
         let stats = Arc::new(MessageStats::default());
+        // Hostile-network injection (`--net`): one shared fault source for
+        // every transport in the session. Per-link determinism is keyed
+        // inside `NetFaults`; `None` keeps the ideal path byte-identical.
+        let net: Option<Arc<NetFaults>> = if cfg.net.is_ideal() {
+            None
+        } else {
+            Some(Arc::new(NetFaults::new(cfg.net.clone())))
+        };
 
         // Transport factory per node (+ one for the monitor).
         let mut http_server = None;
@@ -136,11 +144,15 @@ impl SafeSession {
                 let hop = cfg.profile.network_hop;
                 let per_kib = cfg.profile.network_per_kib;
                 let wire = cfg.wire;
+                let net = net.clone();
                 Box::new(move || {
-                    Ok(Arc::new(
+                    let mut t =
                         InProcTransport::with_costs(ctrl.clone(), stats.clone(), hop, per_kib)
-                            .with_wire_format(wire),
-                    ) as Arc<dyn ClientTransport>)
+                            .with_wire_format(wire);
+                    if let Some(n) = &net {
+                        t = t.with_net(n.clone());
+                    }
+                    Ok(Arc::new(t) as Arc<dyn ClientTransport>)
                 })
             }
             TransportKind::Http { url } => {
@@ -286,6 +298,9 @@ impl SafeSession {
                         .stagger_step
                         .mul_f64(chain.iter().position(|&c| c == node).unwrap_or(0) as f64),
                     epoch: 0,
+                    retry: cfg.net.retry_policy(),
+                    stats: stats.clone(),
+                    post_seq: std::sync::atomic::AtomicU64::new(0),
                 }));
             }
         }
@@ -352,20 +367,25 @@ impl SafeSession {
         // so HTTP sessions fall back to the thread runtime.
         let executor = match (&cfg.transport, cfg.runtime) {
             (TransportKind::InProc, RuntimeKind::Events) => {
-                let transport = Arc::new(
-                    InProcTransport::with_costs(
-                        controller.clone(),
-                        stats.clone(),
-                        cfg.profile.network_hop,
-                        cfg.profile.network_per_kib,
-                    )
-                    .with_wire_format(cfg.wire)
-                    .with_completion(controller.clone()),
-                );
+                let mut exec_transport = InProcTransport::with_costs(
+                    controller.clone(),
+                    stats.clone(),
+                    cfg.profile.network_hop,
+                    cfg.profile.network_per_kib,
+                )
+                .with_wire_format(cfg.wire)
+                .with_completion(controller.clone());
+                if let Some(n) = &net {
+                    exec_transport = exec_transport.with_net(n.clone());
+                }
                 Some(EventExecutor::start(
-                    transport,
+                    Arc::new(exec_transport),
                     controller.wait_hub(),
-                    ExecutorConfig { workers: cfg.workers, poll_time: cfg.poll_time },
+                    ExecutorConfig {
+                        workers: cfg.workers,
+                        poll_time: cfg.poll_time,
+                        retry: cfg.net.retry_policy(),
+                    },
                 ))
             }
             _ => None,
@@ -530,6 +550,9 @@ impl SafeSession {
         let baseline_msgs = self.stats.total();
         let baseline_bytes = self.stats.bytes();
         let baseline_recv = self.stats.bytes_received();
+        let baseline_retries = self.stats.retries();
+        let baseline_drops = self.stats.drops();
+        let baseline_dedup = self.stats.dedup_posts();
         let per_path_before = self.stats.per_path();
 
         // Key re-exchange for nodes returning this round — only their key
@@ -660,6 +683,9 @@ impl SafeSession {
             merged_groups: plan.merges().len() as u64,
             reassigned_nodes: plan.reassignments().len() as u64,
             deadline_exceeded: outcomes.iter().filter(|o| o.deadline_exceeded).count() as u64,
+            net_retries: self.stats.retries() - baseline_retries,
+            net_drops: self.stats.drops() - baseline_drops,
+            dedup_posts: self.stats.dedup_posts() - baseline_dedup,
             per_path,
         };
         Ok(SafeRoundResult { metrics, outcomes })

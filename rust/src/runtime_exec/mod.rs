@@ -42,7 +42,9 @@ use anyhow::Result;
 
 use crate::learner::faults::FaultPlan;
 use crate::learner::{LearnerContext, LearnerOutcome};
-use crate::transport::{InProcTransport, PollKey, Submitted, WaitHub, WakeSink};
+use crate::transport::{
+    as_transport_error, InProcTransport, PollKey, RetryPolicy, Submitted, WaitHub, WakeSink,
+};
 use machine::{Command, LearnerStateMachine, MachineEvent};
 use timer::{TimerKind, TimerWheel};
 
@@ -55,6 +57,11 @@ pub struct ExecutorConfig {
     /// synthetic `empty` completion (mirrors the controller's
     /// `poll_time`, so both runtimes poll at the same cadence).
     pub poll_time: Duration,
+    /// Retry schedule for retryable transport faults. Backoffs are timer
+    /// entries, never sleeping workers, so the pool stays full-throughput
+    /// under loss. Mirrors the blocking learner's `LearnerContext::call`
+    /// wrapper attempt-for-attempt.
+    pub retry: RetryPolicy,
 }
 
 impl ExecutorConfig {
@@ -82,6 +89,8 @@ enum Cause {
     PollTimeout { generation: u64 },
     /// A [`Command::Sleep`] elapsed.
     SleepDone { generation: u64 },
+    /// A retry backoff elapsed — re-submit the stored call.
+    Retry { generation: u64 },
 }
 
 /// An in-flight long-poll submission.
@@ -89,6 +98,17 @@ struct PendingCall {
     path: &'static str,
     body: crate::json::Value,
     key: PollKey,
+    generation: u64,
+}
+
+/// A call parked on the timer wheel awaiting its retry backoff. The body
+/// is re-sent verbatim, so a chain post keeps its dedup token and the
+/// controller can absorb any duplicate.
+struct RetryCall {
+    path: &'static str,
+    body: crate::json::Value,
+    /// 0-based count of attempts already failed.
+    attempt: u32,
     generation: u64,
 }
 
@@ -100,6 +120,7 @@ struct TaskSlot {
     generation: u64,
     pending: Option<PendingCall>,
     sleeping: Option<u64>,
+    retrying: Option<RetryCall>,
     outcome_tx: Sender<Result<LearnerOutcome>>,
 }
 
@@ -113,6 +134,7 @@ struct Shared {
     hub: Arc<WaitHub>,
     timer: TimerWheel,
     poll_time: Duration,
+    retry: RetryPolicy,
 }
 
 impl Shared {
@@ -180,6 +202,7 @@ impl EventExecutor {
             hub: hub.clone(),
             timer: TimerWheel::new(),
             poll_time: cfg.poll_time,
+            retry: cfg.retry,
         });
         hub.set_sink(Arc::new(QueueSink { shared: Arc::downgrade(&shared) }));
         let mut handles = Vec::with_capacity(workers + 1);
@@ -222,6 +245,7 @@ impl EventExecutor {
             generation: 0,
             pending: None,
             sleeping: None,
+            retrying: None,
             outcome_tx: tx,
         };
         self.shared.tasks.lock().unwrap().insert(id, Arc::new(Mutex::new(slot)));
@@ -246,6 +270,7 @@ fn timer_loop(shared: Arc<Shared>) {
         let cause = match entry.kind {
             TimerKind::Poll => Cause::PollTimeout { generation: entry.generation },
             TimerKind::Sleep => Cause::SleepDone { generation: entry.generation },
+            TimerKind::Retry => Cause::Retry { generation: entry.generation },
         };
         shared.enqueue(entry.task, cause);
     }
@@ -259,6 +284,9 @@ enum Step {
     Keep,
     /// Transport failure — abort the task with this error.
     Abort(anyhow::Error),
+    /// The task terminated without the machine running again (e.g. retry
+    /// exhaustion resolved to a live-failure outcome).
+    Finish(Result<LearnerOutcome>),
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -286,10 +314,24 @@ fn worker_loop(shared: Arc<Shared>) {
                         Step::Keep
                     }
                 }
+                Cause::Retry { generation } => {
+                    if matches!(&slot.retrying, Some(r) if r.generation == generation) {
+                        let rc = slot.retrying.take().unwrap();
+                        match submit_call(&shared, task_id, &mut slot, rc.path, rc.body, rc.attempt)
+                        {
+                            CallStep::Resp(resp) => Step::Run(MachineEvent::Response(resp)),
+                            CallStep::Parked => Step::Keep,
+                            CallStep::Done(r) => Step::Finish(r),
+                        }
+                    } else {
+                        Step::Keep
+                    }
+                }
             };
             match step {
                 Step::Keep => None,
                 Step::Abort(e) => Some((slot.outcome_tx.clone(), Err(e))),
+                Step::Finish(r) => Some((slot.outcome_tx.clone(), r)),
                 Step::Run(event) => {
                     drive(&shared, task_id, &mut slot, event).map(|r| (slot.outcome_tx.clone(), r))
                 }
@@ -377,8 +419,80 @@ fn resolve_pending(
     }
 }
 
-/// Run the machine until it parks (pending call / sleep) or terminates.
-/// Returns `Some(result)` when the task is done.
+/// How one (re-)submission of a call resolved.
+enum CallStep {
+    /// The call completed — feed this response to the machine.
+    Resp(crate::json::Value),
+    /// Parked: pending long-poll or a scheduled retry backoff.
+    Parked,
+    /// The task is over (transport fault resolved to an outcome, or a
+    /// non-transport error aborted it).
+    Done(Result<LearnerOutcome>),
+}
+
+/// Submit `path`/`body` once, translating failures through the retry
+/// policy. `attempt` counts previously failed attempts of this same
+/// logical call. A retryable fault with budget left schedules a
+/// [`TimerKind::Retry`] (no worker sleeps); exhaustion — or a fatal
+/// transport fault — degrades gracefully to a live-failure outcome so the
+/// chain re-forms via §5.3/§5.4 instead of the session erroring out.
+fn submit_call(
+    shared: &Shared,
+    task_id: u64,
+    slot: &mut TaskSlot,
+    path: &'static str,
+    body: crate::json::Value,
+    attempt: u32,
+) -> CallStep {
+    slot.generation += 1;
+    let generation = slot.generation;
+    match shared.transport.submit(path, &body) {
+        Err(e) => {
+            let retryable = as_transport_error(&e).is_some_and(|t| t.retryable());
+            if retryable && attempt + 1 < shared.retry.attempts.max(1) {
+                shared.transport.stats().record_retry();
+                shared.timer.schedule(
+                    Instant::now() + shared.retry.backoff(attempt),
+                    task_id,
+                    generation,
+                    TimerKind::Retry,
+                );
+                slot.retrying = Some(RetryCall { path, body, attempt: attempt + 1, generation });
+                CallStep::Parked
+            } else if as_transport_error(&e).is_some() {
+                CallStep::Done(Ok(LearnerOutcome::dead(slot.machine.node())))
+            } else {
+                CallStep::Done(Err(e))
+            }
+        }
+        Ok(Submitted::Ready(resp)) => CallStep::Resp(resp),
+        Ok(Submitted::Pending(key)) => {
+            // Register first, probe again after: if the data raced in
+            // between submit's probe and the registration, the second
+            // probe finds it; the then-stale registration is
+            // generation-filtered.
+            shared.hub.register(key, task_id, generation);
+            match shared.transport.try_complete(path, &body) {
+                Err(e) => CallStep::Done(Err(e)),
+                Ok(Some(resp)) => CallStep::Resp(resp),
+                Ok(None) => {
+                    shared.transport.notify_parked(path);
+                    shared.timer.schedule(
+                        Instant::now() + shared.poll_time,
+                        task_id,
+                        generation,
+                        TimerKind::Poll,
+                    );
+                    slot.pending = Some(PendingCall { path, body, key, generation });
+                    CallStep::Parked
+                }
+            }
+        }
+    }
+}
+
+/// Run the machine until it parks (pending call / sleep / retry backoff)
+/// or terminates. Returns `Some(result)` when the task is done.
 fn drive(
     shared: &Shared,
     task_id: u64,
@@ -389,37 +503,10 @@ fn drive(
     loop {
         match slot.machine.on_event(event) {
             Command::Call { path, body } => {
-                slot.generation += 1;
-                let generation = slot.generation;
-                match shared.transport.submit(path, &body) {
-                    Err(e) => return Some(Err(e)),
-                    Ok(Submitted::Ready(resp)) => {
-                        event = MachineEvent::Response(resp);
-                    }
-                    Ok(Submitted::Pending(key)) => {
-                        // Register first, probe again after: if the data
-                        // raced in between submit's probe and the
-                        // registration, the second probe finds it; the
-                        // then-stale registration is generation-filtered.
-                        shared.hub.register(key, task_id, generation);
-                        match shared.transport.try_complete(path, &body) {
-                            Err(e) => return Some(Err(e)),
-                            Ok(Some(resp)) => {
-                                event = MachineEvent::Response(resp);
-                            }
-                            Ok(None) => {
-                                shared.transport.notify_parked(path);
-                                shared.timer.schedule(
-                                    Instant::now() + shared.poll_time,
-                                    task_id,
-                                    generation,
-                                    TimerKind::Poll,
-                                );
-                                slot.pending = Some(PendingCall { path, body, key, generation });
-                                return None;
-                            }
-                        }
-                    }
+                match submit_call(shared, task_id, slot, path, body, 0) {
+                    CallStep::Resp(resp) => event = MachineEvent::Response(resp),
+                    CallStep::Parked => return None,
+                    CallStep::Done(r) => return Some(r),
                 }
             }
             Command::Sleep { until } => {
@@ -460,7 +547,11 @@ mod tests {
         let exec = EventExecutor::start(
             transport,
             hub,
-            ExecutorConfig { workers: 2, poll_time: Duration::from_millis(50) },
+            ExecutorConfig {
+                workers: 2,
+                poll_time: Duration::from_millis(50),
+                retry: RetryPolicy::default(),
+            },
         );
         assert_eq!(exec.workers(), 2);
         drop(exec); // must join workers + timer without hanging

@@ -15,6 +15,9 @@ pub enum TimerKind {
     Poll,
     /// A [`crate::runtime_exec::machine::Command::Sleep`] elapsed.
     Sleep,
+    /// A retry backoff elapsed — re-submit the stored call (no worker
+    /// thread ever sleeps for a retry).
+    Retry,
 }
 
 /// Heap entry; `seq` breaks ties so ordering is total and FIFO among

@@ -1,0 +1,97 @@
+//! Typed transport failures, so retry policies can classify errors.
+//!
+//! Both transports surface link-level failures as a [`TransportError`]
+//! wrapped in `anyhow::Error` (context layers preserved; callers classify
+//! via `err.downcast_ref::<TransportError>()`). The split is *retryable*
+//! (the request may or may not have reached the server — resending is
+//! safe for idempotent ops, and `post_aggregate` carries a dedup token
+//! precisely so a resend is safe there too) versus *fatal* (the server
+//! answered and said no; resending the same bytes cannot succeed).
+
+use std::fmt;
+
+/// A link-level failure between a learner and the controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportError {
+    /// TCP connect to the controller failed (refused / unreachable).
+    ConnectFailed,
+    /// The connection closed before a complete response arrived.
+    ConnectionClosed,
+    /// A socket read/write failed mid-exchange (including read timeouts
+    /// and unparseable HTTP framing, which force a reconnect).
+    Io,
+    /// The server answered with a non-200 HTTP status: the request was
+    /// delivered and rejected, so resending the same bytes is pointless.
+    BadStatus(u16),
+    /// Injected fault: the request leg was dropped before the server saw
+    /// it. The server state is untouched; retrying is always safe.
+    LostRequest,
+    /// Injected fault: the server processed the request but the response
+    /// leg was dropped. Side effects may have landed — retrying is safe
+    /// only for idempotent ops or posts carrying a dedup token.
+    LostResponse,
+}
+
+impl TransportError {
+    /// Whether a bounded retry of the same request can succeed.
+    #[must_use]
+    pub fn retryable(&self) -> bool {
+        !matches!(self, TransportError::BadStatus(_))
+    }
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::ConnectFailed => write!(f, "transport: connect failed"),
+            TransportError::ConnectionClosed => write!(f, "transport: connection closed"),
+            TransportError::Io => write!(f, "transport: io error"),
+            TransportError::BadStatus(code) => write!(f, "transport: http status {code}"),
+            TransportError::LostRequest => write!(f, "transport: request leg lost"),
+            TransportError::LostResponse => write!(f, "transport: response leg lost"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Classify an `anyhow` error chain: `Some(e)` when the root cause is a
+/// [`TransportError`] (possibly wrapped in context layers).
+#[must_use]
+pub fn as_transport_error(err: &anyhow::Error) -> Option<TransportError> {
+    err.downcast_ref::<TransportError>().copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Context;
+
+    #[test]
+    fn retryable_split() {
+        assert!(TransportError::ConnectFailed.retryable());
+        assert!(TransportError::ConnectionClosed.retryable());
+        assert!(TransportError::Io.retryable());
+        assert!(TransportError::LostRequest.retryable());
+        assert!(TransportError::LostResponse.retryable());
+        assert!(!TransportError::BadStatus(500).retryable());
+    }
+
+    #[test]
+    fn classification_survives_context_layers() {
+        let err: anyhow::Result<()> = Err(TransportError::ConnectFailed)
+            .context("connect 127.0.0.1:1")
+            .context("post_aggregate");
+        let err = err.unwrap_err();
+        assert_eq!(as_transport_error(&err), Some(TransportError::ConnectFailed));
+        let plain = anyhow::anyhow!("some other failure");
+        assert_eq!(as_transport_error(&plain), None);
+    }
+
+    #[test]
+    fn display_names_the_variant() {
+        assert!(TransportError::BadStatus(503).to_string().contains("503"));
+        assert!(TransportError::LostRequest.to_string().contains("request"));
+        assert!(TransportError::LostResponse.to_string().contains("response"));
+    }
+}

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::{ClientTransport, Handler, MessageStats};
+use super::{as_transport_error, ClientTransport, Handler, MessageStats, TransportError};
 use crate::json::Value;
 use crate::proto::codec::{WireCodec, WireFormat, CONTENT_TYPE_JSON};
 
@@ -221,6 +221,18 @@ fn write_response(
     Ok(())
 }
 
+/// Map a socket error to its typed transport cause: a clean EOF means the
+/// peer closed the connection (retryable via reconnect), anything else —
+/// including read timeouts and unparseable framing — is an I/O fault.
+fn io_err(e: std::io::Error) -> anyhow::Error {
+    let kind = if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        TransportError::ConnectionClosed
+    } else {
+        TransportError::Io
+    };
+    anyhow::Error::new(kind).context(e.to_string())
+}
+
 /// HTTP client transport with a persistent keep-alive connection.
 pub struct HttpTransport {
     addr: SocketAddr,
@@ -261,29 +273,33 @@ impl HttpTransport {
             self.codec.content_type(),
             body.len()
         );
-        stream.write_all(head.as_bytes())?;
-        stream.write_all(body)?;
-        stream.flush()?;
+        stream.write_all(head.as_bytes()).map_err(io_err)?;
+        stream.write_all(body).map_err(io_err)?;
+        stream.flush().map_err(io_err)?;
 
-        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut reader = BufReader::new(stream.try_clone().map_err(io_err)?);
         let mut status_line = String::new();
-        reader.read_line(&mut status_line)?;
+        reader.read_line(&mut status_line).map_err(io_err)?;
         if status_line.is_empty() {
-            bail!("server closed connection");
+            return Err(anyhow::Error::new(TransportError::ConnectionClosed)
+                .context("server closed connection"));
         }
         let status: u16 = status_line
             .split_whitespace()
             .nth(1)
+            .ok_or(TransportError::Io)
             .context("bad status line")?
             .parse()
+            .map_err(|_| TransportError::Io)
             .context("bad status code")?;
         let mut content_length = 0usize;
         let mut content_type: Option<String> = None;
         loop {
             let mut h = String::new();
-            let n = reader.read_line(&mut h)?;
+            let n = reader.read_line(&mut h).map_err(io_err)?;
             if n == 0 {
-                bail!("connection closed mid-headers");
+                return Err(anyhow::Error::new(TransportError::ConnectionClosed)
+                    .context("connection closed mid-headers"));
             }
             if h.trim_end().is_empty() {
                 break;
@@ -291,16 +307,23 @@ impl HttpTransport {
             if let Some((k, v)) = h.trim_end().split_once(':') {
                 let k = k.trim();
                 if k.eq_ignore_ascii_case("content-length") {
-                    content_length = v.trim().parse().context("bad content-length")?;
+                    content_length = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| TransportError::Io)
+                        .context("bad content-length")?;
                 } else if k.eq_ignore_ascii_case("content-type") {
                     content_type = Some(v.trim().to_string());
                 }
             }
         }
         let mut resp_body = vec![0u8; content_length];
-        reader.read_exact(&mut resp_body)?;
+        reader.read_exact(&mut resp_body).map_err(io_err)?;
         if status != 200 {
-            bail!("HTTP {status}: {}", String::from_utf8_lossy(&resp_body));
+            return Err(anyhow::Error::new(TransportError::BadStatus(status)).context(format!(
+                "HTTP {status}: {}",
+                String::from_utf8_lossy(&resp_body)
+            )));
         }
         // The server mirrors the request codec, but decode by the actual
         // response Content-Type so mixed deployments stay interoperable.
@@ -324,21 +347,36 @@ impl ClientTransport for HttpTransport {
         self.stats.record(path, body_bytes.len());
         self.stats.record_codec(self.codec.format(), body_bytes.len());
         let mut guard = self.conn.lock().unwrap();
-        // Try on the cached connection first, reconnect once on failure.
+        // Try on the cached connection first, reconnect once on failure —
+        // but only for retryable faults: a fatal answer (non-200) means
+        // the server received and rejected the request, and resending it
+        // would risk the very duplicate posts the dedup token guards.
         for attempt in 0..2 {
             if guard.is_none() {
-                let s = TcpStream::connect(self.addr)
-                    .with_context(|| format!("connect {}", self.addr))?;
+                let s = TcpStream::connect(self.addr).map_err(|e| {
+                    anyhow::Error::new(TransportError::ConnectFailed)
+                        .context(format!("connect {}: {e}", self.addr))
+                })?;
                 s.set_nodelay(true).ok();
                 s.set_read_timeout(Some(self.read_timeout)).ok();
                 *guard = Some(s);
             }
             let stream = guard.as_mut().unwrap();
             match self.request_once(stream, path, &body_bytes) {
-                Ok(v) => return Ok(v),
-                Err(e) if attempt == 0 => {
+                Ok(v) => {
+                    if path == crate::proto::POST_AGGREGATE
+                        && v.str_of("status") == Some("duplicate")
+                    {
+                        self.stats.record_dedup();
+                    }
+                    return Ok(v);
+                }
+                Err(e)
+                    if attempt == 0
+                        && as_transport_error(&e).map_or(true, |t| t.retryable()) =>
+                {
                     *guard = None; // drop stale connection and retry
-                    let _ = e;
+                    self.stats.record_retry();
                 }
                 Err(e) => return Err(e),
             }
@@ -482,6 +520,96 @@ mod tests {
             .call("/big", &Value::object(vec![("v", Value::from(big.clone()))]))
             .unwrap();
         assert_eq!(resp.get("echo").unwrap().f64_arr_of("v").unwrap(), big);
+    }
+
+    /// Read until the whole client request (headers + the `{}` JSON body
+    /// the typed-error tests send) has arrived, so responding/closing
+    /// never races the client's writes into an RST.
+    fn drain_request(s: &mut TcpStream) {
+        let mut data = Vec::new();
+        let mut buf = [0u8; 1024];
+        loop {
+            match s.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => {
+                    data.extend_from_slice(&buf[..n]);
+                    if data.windows(4).any(|w| w == b"\r\n\r\n") && data.ends_with(b"{}") {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn typed_error_connect_failed() {
+        // Bind then drop a listener so the port is (almost surely) dead.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let client = HttpTransport::connect(&format!("http://{addr}")).unwrap();
+        let err = client.call("/x", &Value::obj()).unwrap_err();
+        assert_eq!(as_transport_error(&err), Some(TransportError::ConnectFailed));
+    }
+
+    #[test]
+    fn typed_error_connection_closed() {
+        // A "server" that accepts and immediately hangs up, twice (the
+        // client's internal reconnect burns the second accept).
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || {
+            for _ in 0..2 {
+                // Drain the full request, then close cleanly (FIN, no
+                // reply): the client sees EOF where a status line should
+                // be. Draining fully avoids an RST racing the client's
+                // writes, which would surface as Io instead.
+                let (mut s, _) = listener.accept().unwrap();
+                drain_request(&mut s);
+            }
+        });
+        let client = HttpTransport::connect(&format!("http://{addr}")).unwrap();
+        let err = client.call("/x", &Value::obj()).unwrap_err();
+        assert_eq!(as_transport_error(&err), Some(TransportError::ConnectionClosed));
+        assert_eq!(client.stats().retries(), 1);
+        accept.join().unwrap();
+    }
+
+    #[test]
+    fn typed_error_bad_status_is_fatal_and_not_retried() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || {
+            // One connection is enough: a fatal status must not reconnect.
+            let (mut s, _) = listener.accept().unwrap();
+            drain_request(&mut s);
+            s.write_all(b"HTTP/1.1 503 Unavailable\r\nContent-Length: 4\r\n\r\nbusy")
+                .unwrap();
+        });
+        let client = HttpTransport::connect(&format!("http://{addr}")).unwrap();
+        let err = client.call("/x", &Value::obj()).unwrap_err();
+        assert_eq!(as_transport_error(&err), Some(TransportError::BadStatus(503)));
+        assert!(!TransportError::BadStatus(503).retryable());
+        assert_eq!(client.stats().retries(), 0);
+        accept.join().unwrap();
+    }
+
+    #[test]
+    fn typed_error_io_on_garbled_response() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let (mut s, _) = listener.accept().unwrap();
+                drain_request(&mut s);
+                let _ = s.write_all(b"NOT-HTTP\r\n\r\n");
+            }
+        });
+        let client = HttpTransport::connect(&format!("http://{addr}")).unwrap();
+        let err = client.call("/x", &Value::obj()).unwrap_err();
+        assert_eq!(as_transport_error(&err), Some(TransportError::Io));
+        accept.join().unwrap();
     }
 
     #[test]

@@ -34,12 +34,17 @@
 //! direction** ([`PathStat`]) so ratio tables can be broken down by
 //! endpoint — all kept off the hot path's single-lock contention.
 
+pub mod error;
 pub mod http;
+pub mod netprofile;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+pub use error::{as_transport_error, TransportError};
+pub use netprofile::{NetFaults, NetProfile, RetryPolicy};
 
 use crate::json::Value;
 use crate::proto::codec::{WireCodec, WireFormat};
@@ -213,6 +218,12 @@ pub struct MessageStats {
     binary_bytes: AtomicU64,
     json_deflate_bytes: AtomicU64,
     binary_deflate_bytes: AtomicU64,
+    /// Re-sent attempts after a retryable transport failure.
+    retries: AtomicU64,
+    /// Injected drops observed (request or response leg).
+    drops: AtomicU64,
+    /// Duplicate posts the controller deduplicated by attempt token.
+    dedup_posts: AtomicU64,
     per_path: [Mutex<BTreeMap<String, PathStat>>; PATH_SHARDS],
 }
 
@@ -266,6 +277,36 @@ impl MessageStats {
             WireFormat::BinaryDeflate => &self.binary_deflate_bytes,
         };
         counter.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Count one re-sent attempt after a retryable failure.
+    pub fn record_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one injected drop (either leg).
+    pub fn record_drop(&self) {
+        self.drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one duplicate post absorbed by the controller's dedup token.
+    pub fn record_dedup(&self) {
+        self.dedup_posts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Re-sent attempts after retryable transport failures so far.
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    /// Injected request/response-leg drops so far.
+    pub fn drops(&self) -> u64 {
+        self.drops.load(Ordering::Relaxed)
+    }
+
+    /// Duplicate posts absorbed by the dedup token so far.
+    pub fn dedup_posts(&self) -> u64 {
+        self.dedup_posts.load(Ordering::Relaxed)
     }
 
     pub fn total(&self) -> u64 {
@@ -322,6 +363,9 @@ impl MessageStats {
         self.binary_bytes.store(0, Ordering::Relaxed);
         self.json_deflate_bytes.store(0, Ordering::Relaxed);
         self.binary_deflate_bytes.store(0, Ordering::Relaxed);
+        self.retries.store(0, Ordering::Relaxed);
+        self.drops.store(0, Ordering::Relaxed);
+        self.dedup_posts.store(0, Ordering::Relaxed);
         for shard in &self.per_path {
             shard.lock().unwrap().clear();
         }
@@ -343,6 +387,10 @@ pub struct InProcTransport {
     /// Simulated transfer cost per KiB of body (request + response) —
     /// models the REST stack's per-byte handling.
     pub per_kib: Duration,
+    /// Deterministic fault injection (loss / jitter / stragglers),
+    /// shared across every per-node transport of a session. `None` (or
+    /// an ideal profile) leaves every path byte-for-byte unchanged.
+    net: Option<Arc<NetFaults>>,
 }
 
 impl InProcTransport {
@@ -354,6 +402,7 @@ impl InProcTransport {
             completion: None,
             latency: Duration::ZERO,
             per_kib: Duration::ZERO,
+            net: None,
         }
     }
 
@@ -383,6 +432,61 @@ impl InProcTransport {
     pub fn with_wire_format(mut self, format: WireFormat) -> Self {
         self.codec = format.codec();
         self
+    }
+
+    /// Builder: attach a shared [`NetFaults`] state so this transport
+    /// injects the profile's loss/jitter/straggler faults on chain ops.
+    pub fn with_net(mut self, net: Arc<NetFaults>) -> Self {
+        self.net = Some(net);
+        self
+    }
+
+    /// Draw this attempt's fault decision (`None` when exempt/ideal).
+    fn net_draw(&self, path: &str, body: &Value) -> Option<netprofile::LinkFault> {
+        self.net.as_ref().and_then(|n| n.draw(path, body))
+    }
+
+    /// Apply the request-leg fault: extra delay (plus the profile's
+    /// bandwidth tax for `bytes`), then possibly drop the request before
+    /// the handler runs. Returns `Err` on a drop.
+    fn fault_request(
+        &self,
+        fault: Option<&netprofile::LinkFault>,
+        bytes: usize,
+    ) -> anyhow::Result<()> {
+        let Some(f) = fault else { return Ok(()) };
+        let extra = f.request_delay
+            + self.net.as_ref().map_or(Duration::ZERO, |n| n.transfer_delay(bytes));
+        if !extra.is_zero() {
+            std::thread::sleep(extra);
+        }
+        if f.drop_request {
+            self.stats.record_drop();
+            return Err(TransportError::LostRequest.into());
+        }
+        Ok(())
+    }
+
+    /// Apply the response-leg fault after the handler ran: possibly drop
+    /// the response (side effects already landed), else delay it.
+    fn fault_response(&self, fault: Option<&netprofile::LinkFault>) -> anyhow::Result<()> {
+        let Some(f) = fault else { return Ok(()) };
+        if f.drop_response {
+            self.stats.record_drop();
+            return Err(TransportError::LostResponse.into());
+        }
+        if !f.response_delay.is_zero() {
+            std::thread::sleep(f.response_delay);
+        }
+        Ok(())
+    }
+
+    /// Count controller-side dedup answers (`status: "duplicate"`) so the
+    /// zero-double-count guarantee is observable in the round metrics.
+    fn sniff_dedup(&self, path: &str, resp: &Value) {
+        if path == crate::proto::POST_AGGREGATE && resp.str_of("status") == Some("duplicate") {
+            self.stats.record_dedup();
+        }
     }
 
     fn charge(&self, bytes: usize) {
@@ -431,13 +535,23 @@ impl InProcTransport {
     /// long-poll re-checks its predicate without new messages.
     pub fn submit(&self, path: &str, body: &Value) -> anyhow::Result<Submitted> {
         let completion = self.completion_handler()?;
+        let fault = self.net_draw(path, body);
         let encoded = self.codec.encode(body);
         self.stats.record(path, encoded.len());
         self.stats.record_codec(self.codec.format(), encoded.len());
         self.charge(encoded.len());
+        // Request-leg fault: the attempt is counted (the bytes left the
+        // NIC) but the handler never runs, exactly like the blocking path.
+        self.fault_request(fault.as_ref(), encoded.len())?;
         let decoded = self.codec.decode(&encoded)?;
         match completion.try_handle(path, &decoded) {
-            TryHandle::Ready(resp) => Ok(Submitted::Ready(self.finish_response(path, resp)?)),
+            TryHandle::Ready(resp) => {
+                // Response-leg fault: only immediate (post) responses are
+                // eligible, so parked completions are never dropped.
+                self.fault_response(fault.as_ref())?;
+                self.sniff_dedup(path, &resp);
+                Ok(Submitted::Ready(self.finish_response(path, resp)?))
+            }
             TryHandle::WouldBlock(key) => Ok(Submitted::Pending(key)),
         }
     }
@@ -483,12 +597,16 @@ impl ClientTransport for InProcTransport {
         // server decode, and back), so INSEC's big cleartext float arrays
         // pay their true serialization cost — that asymmetry is what
         // drives the paper's Figs 9/12 crossovers.
+        let fault = self.net_draw(path, body);
         let encoded = self.codec.encode(body);
         self.stats.record(path, encoded.len());
         self.stats.record_codec(self.codec.format(), encoded.len());
         self.charge(encoded.len());
+        self.fault_request(fault.as_ref(), encoded.len())?;
         let decoded = self.codec.decode(&encoded)?;
         let resp = self.handler.handle(path, &decoded);
+        self.fault_response(fault.as_ref())?;
+        self.sniff_dedup(path, &resp);
         let resp_encoded = self.codec.encode(&resp);
         self.stats.record_response(path, resp_encoded.len());
         self.stats.record_codec(self.codec.format(), resp_encoded.len());
@@ -635,6 +753,151 @@ mod tests {
         assert_eq!(stats.bytes_received(), 907);
         stats.reset();
         assert!(stats.per_path_stats().is_empty());
+    }
+
+    #[test]
+    fn net_faults_drop_and_delay_deterministically() {
+        use crate::proto;
+        // A profile that drops every request on faulted paths.
+        let p = NetProfile::parse("lan,loss-req=0.9,lat-us=0,jitter-us=0,per-kib-us=0").unwrap();
+        let nf = Arc::new(NetFaults::new(NetProfile { loss_request: 0.9, ..p }));
+        let t = InProcTransport::new(Arc::new(Echo)).with_net(nf);
+        let body = Value::object(vec![("from_node", Value::from(1u64))]);
+        let mut lost = 0u64;
+        for _ in 0..50 {
+            match t.call(proto::POST_AGGREGATE, &body) {
+                Err(e) => {
+                    assert_eq!(as_transport_error(&e), Some(TransportError::LostRequest));
+                    lost += 1;
+                }
+                Ok(_) => {}
+            }
+        }
+        assert!(lost >= 30, "expected heavy request loss, saw {lost}");
+        assert_eq!(t.stats().drops(), lost);
+        // Control-plane ops never fault even under total loss.
+        for _ in 0..20 {
+            t.call(proto::STATUS, &body).unwrap();
+        }
+        // Request-leg drops still count as sent attempts.
+        assert_eq!(t.message_count(), 70);
+    }
+
+    #[test]
+    fn net_response_loss_hits_posts_after_the_handler_ran() {
+        use crate::proto;
+        let profile = NetProfile {
+            loss_response: 0.9,
+            ..NetProfile::parse("lan,lat-us=0,jitter-us=0,per-kib-us=0,loss-req=0").unwrap()
+        };
+        let nf = Arc::new(NetFaults::new(profile));
+        let t = InProcTransport::new(Arc::new(Echo)).with_net(nf);
+        let body = Value::object(vec![("from_node", Value::from(2u64))]);
+        let mut lost = 0u64;
+        for _ in 0..50 {
+            if let Err(e) = t.call(proto::POST_AGGREGATE, &body) {
+                assert_eq!(as_transport_error(&e), Some(TransportError::LostResponse));
+                lost += 1;
+            }
+        }
+        assert!(lost >= 30, "expected heavy response loss, saw {lost}");
+        // Consuming long-polls are never response-dropped.
+        for _ in 0..50 {
+            t.call(proto::GET_AGGREGATE, &body).unwrap();
+        }
+    }
+
+    #[test]
+    fn ideal_net_profile_is_a_byte_for_byte_no_op() {
+        let plain = InProcTransport::new(Arc::new(Echo));
+        let faulted = InProcTransport::new(Arc::new(Echo))
+            .with_net(Arc::new(NetFaults::new(NetProfile::ideal())));
+        let body = Value::object(vec![("from_node", Value::from(3u64))]);
+        let a = plain.call(crate::proto::POST_AGGREGATE, &body).unwrap();
+        let b = faulted.call(crate::proto::POST_AGGREGATE, &body).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(plain.bytes_sent(), faulted.bytes_sent());
+        assert_eq!(faulted.stats().drops(), 0);
+    }
+
+    /// Races register / wake / wake_all across many threads and checks
+    /// the two WaitHub guarantees the event runtime leans on: no lost
+    /// wakeups (every registration that is followed by a wake on its key
+    /// is delivered) and no stale-generation deliveries (a delivered
+    /// wakeup always carries the generation it was registered with —
+    /// filtering of superseded generations is the executor's job, so the
+    /// hub must never invent or mangle one).
+    #[test]
+    fn wait_hub_stress_no_lost_or_stale_wakeups() {
+        use std::sync::atomic::AtomicBool;
+
+        struct Recorder {
+            seen: Mutex<Vec<(u64, u64)>>,
+        }
+        impl WakeSink for Recorder {
+            fn wake(&self, task: u64, generation: u64) {
+                self.seen.lock().unwrap().push((task, generation));
+            }
+        }
+
+        let hub = Arc::new(WaitHub::default());
+        let rec = Arc::new(Recorder { seen: Mutex::new(Vec::new()) });
+        hub.set_sink(rec.clone());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // A chaos thread hammers wake/wake_all on every key while the
+        // registering threads run.
+        let chaos = {
+            let hub = hub.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    hub.wake(PollKey::Aggregate { group: i % 4, node: i % 8 });
+                    if i % 7 == 0 {
+                        hub.wake_all();
+                    }
+                    i += 1;
+                }
+            })
+        };
+
+        let mut expected = 0u64;
+        let workers: Vec<_> = (0..4u64)
+            .map(|w| {
+                let hub = hub.clone();
+                std::thread::spawn(move || {
+                    for g in 0..200u64 {
+                        let key = PollKey::Aggregate { group: w % 4, node: w % 8 };
+                        hub.register(key, w, g);
+                        // Ensure delivery even if the chaos thread's wake
+                        // raced ahead of this registration.
+                        hub.wake(key);
+                    }
+                })
+            })
+            .collect();
+        expected += 4 * 200;
+        for t in workers {
+            t.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        chaos.join().unwrap();
+        // Final sweep: anything still parked gets delivered.
+        hub.wake_all();
+
+        let seen = rec.seen.lock().unwrap();
+        // No lost wakeups: every registration was delivered exactly once.
+        assert_eq!(seen.len() as u64, expected, "lost or duplicated wakeups");
+        // No stale generations: per (task), generations are exactly the
+        // registered set 0..200 (order may interleave across keys but a
+        // delivery never carries a generation that was not registered).
+        for w in 0..4u64 {
+            let mut gens: Vec<u64> =
+                seen.iter().filter(|(t, _)| *t == w).map(|(_, g)| *g).collect();
+            gens.sort_unstable();
+            assert_eq!(gens, (0..200u64).collect::<Vec<_>>(), "task {w}");
+        }
     }
 
     #[test]

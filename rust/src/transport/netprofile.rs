@@ -1,0 +1,556 @@
+//! Deterministic network-fault model for the in-proc transport.
+//!
+//! The paper's numbers are measured on a clean LAN, but SAFE's chain is
+//! latency-serial: one lost hop stalls the whole group. [`NetProfile`]
+//! grows the transport's single fixed-latency knob into a reproducible
+//! hostile-network model — per-leg latency + jitter, bandwidth-
+//! proportional delay for large bodies, independent request/response
+//! packet loss, and designated straggler nodes — so the §5.3/§5.4
+//! failover machinery is exercised against loss and stragglers instead
+//! of only scheduled deaths.
+//!
+//! **Determinism.** Every per-call decision (drop? how much jitter?) is
+//! drawn from a ChaCha20 stream keyed by `(profile seed, node id, path
+//! hash, per-(node,path) attempt sequence)`. A node's k-th attempt on a
+//! path sees the same draw regardless of thread interleaving or which
+//! runtime (`threads` / `events`) issued it, so retry/drop counters and
+//! round averages are bit-identical across runs and runtimes with the
+//! same seed.
+//!
+//! **Scope.** Faults apply only to the five chain-data ops
+//! (`post_aggregate`, `get_aggregate`, `check_aggregate`, `post_average`,
+//! `get_average`). Control-plane ops (configure / begin_round /
+//! progress_check / status / reset) and the round-0 key exchange ride a
+//! reliable control channel — the paper counts setup traffic separately
+//! (footnote 3), and faulting the monitor would blind the very failover
+//! mechanism under test. Response-leg loss is further restricted to the
+//! two post ops: a post is answered immediately in both runtimes and a
+//! resend is made safe by the dedup token, whereas losing a consuming
+//! long-poll's delivery is indistinguishable from the node dying
+//! mid-protocol — a scenario the churn schedules already cover.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::crypto::rng::{DeterministicRng, SecureRng};
+use crate::json::Value;
+use crate::proto;
+
+/// Upper bound accepted for the per-leg loss probabilities: retries must
+/// be able to make progress, so a profile cannot drop everything.
+pub const MAX_LOSS: f64 = 0.9;
+
+/// Upper bound accepted for the timing fields (µs): 10 seconds.
+pub const MAX_TIMING_US: u64 = 10_000_000;
+
+/// A reproducible per-link network fault model (see module docs).
+///
+/// The [`Default`] profile is [`NetProfile::ideal`]: byte-for-byte
+/// inactive, so every existing exact-count test and bench is unaffected
+/// unless a profile is selected explicitly (`--net`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetProfile {
+    /// Preset name (or the preset the overrides started from).
+    pub name: String,
+    /// Base one-way latency applied to each leg of a faulted op. Adds on
+    /// top of the device profile's REST-hop cost.
+    pub latency: Duration,
+    /// Uniform jitter in `[0, jitter)` drawn independently per leg.
+    pub jitter: Duration,
+    /// Bandwidth-proportional delay per KiB of body on a faulted op.
+    pub per_kib: Duration,
+    /// Probability the request leg is dropped before the server sees it.
+    pub loss_request: f64,
+    /// Probability the response leg of a post is dropped after the server
+    /// processed it (side effects landed; dedup token makes resend safe).
+    pub loss_response: f64,
+    /// Every k-th node (`node % k == 0`) is a straggler; 0 disables.
+    pub straggler_every: u64,
+    /// Latency/jitter multiplier applied to straggler nodes' legs.
+    pub straggler_factor: u32,
+    /// Seed for the fault stream (independent of the session data seed).
+    pub seed: u64,
+}
+
+impl Default for NetProfile {
+    fn default() -> Self {
+        NetProfile::ideal()
+    }
+}
+
+impl NetProfile {
+    fn named(name: &str) -> NetProfile {
+        NetProfile {
+            name: name.to_string(),
+            latency: Duration::ZERO,
+            jitter: Duration::ZERO,
+            per_kib: Duration::ZERO,
+            loss_request: 0.0,
+            loss_response: 0.0,
+            straggler_every: 0,
+            straggler_factor: 1,
+            seed: 42,
+        }
+    }
+
+    /// The no-op profile: no delay, no loss, no stragglers.
+    #[must_use]
+    pub fn ideal() -> NetProfile {
+        NetProfile::named("ideal")
+    }
+
+    /// Clean local network: sub-millisecond hops, no loss.
+    #[must_use]
+    pub fn lan() -> NetProfile {
+        NetProfile {
+            latency: Duration::from_micros(200),
+            jitter: Duration::from_micros(100),
+            per_kib: Duration::from_micros(5),
+            ..NetProfile::named("lan")
+        }
+    }
+
+    /// Wide-area link: milliseconds of latency, rare loss.
+    #[must_use]
+    pub fn wan() -> NetProfile {
+        NetProfile {
+            latency: Duration::from_millis(2),
+            jitter: Duration::from_millis(1),
+            per_kib: Duration::from_micros(40),
+            loss_request: 0.005,
+            loss_response: 0.002,
+            ..NetProfile::named("wan")
+        }
+    }
+
+    /// Cellular link: high latency and jitter, noticeable loss.
+    #[must_use]
+    pub fn lte() -> NetProfile {
+        NetProfile {
+            latency: Duration::from_millis(6),
+            jitter: Duration::from_millis(4),
+            per_kib: Duration::from_micros(80),
+            loss_request: 0.02,
+            loss_response: 0.01,
+            ..NetProfile::named("lte")
+        }
+    }
+
+    /// Hostile link: heavy loss on both legs, modest latency — the
+    /// profile that exercises retry/dedup/failover hardest.
+    #[must_use]
+    pub fn lossy() -> NetProfile {
+        NetProfile {
+            latency: Duration::from_micros(500),
+            jitter: Duration::from_micros(500),
+            per_kib: Duration::from_micros(10),
+            loss_request: 0.10,
+            loss_response: 0.05,
+            ..NetProfile::named("lossy")
+        }
+    }
+
+    /// LAN timing, but every 7th node is 25x slower — the §5.9
+    /// staggered-polling and progress-timeout regime.
+    #[must_use]
+    pub fn straggler() -> NetProfile {
+        NetProfile {
+            straggler_every: 7,
+            straggler_factor: 25,
+            ..NetProfile::lan()
+        }
+    }
+
+    /// True when the profile injects nothing (transport fast path).
+    #[must_use]
+    pub fn is_ideal(&self) -> bool {
+        self.latency.is_zero()
+            && self.jitter.is_zero()
+            && self.per_kib.is_zero()
+            && self.loss_request == 0.0
+            && self.loss_response == 0.0
+            && self.straggler_every == 0
+    }
+
+    /// Expected round-trip time of one faulted op with a ~1 KiB body:
+    /// two legs of base latency plus half the jitter window each, plus
+    /// the per-KiB transfer cost. The §6.3 timeout budgets scale from
+    /// this instead of hardcoding LAN numbers.
+    #[must_use]
+    pub fn expected_rtt(&self) -> Duration {
+        2 * (self.latency + self.jitter / 2) + self.per_kib
+    }
+
+    /// A timeout budget honest under this profile: at least `base`
+    /// (the clean-LAN constant), stretched to `rtts` expected RTTs when
+    /// the profile is slower than that.
+    #[must_use]
+    pub fn budget(&self, base: Duration, rtts: u32) -> Duration {
+        base.max(self.expected_rtt() * rtts)
+    }
+
+    /// The retry policy matched to this profile: 5 attempts with
+    /// exponential backoff starting at half an expected RTT (1 ms floor).
+    #[must_use]
+    pub fn retry_policy(&self) -> RetryPolicy {
+        RetryPolicy { attempts: 5, base: (self.expected_rtt() / 2).max(Duration::from_millis(1)) }
+    }
+
+    /// Parse a `--net` spec: `PRESET[,FIELD=VALUE]*`.
+    ///
+    /// Presets: `ideal`, `lan`, `wan`, `lte`, `lossy`, `straggler`.
+    /// Fields: `lat-us`, `jitter-us`, `per-kib-us` (µs, `0..=10000000`),
+    /// `loss-req`, `loss-resp` (`0.0..=0.9`), `straggler-every` (node
+    /// stride, 0 disables), `straggler-x` (`1..=1000`), `seed` (u64).
+    ///
+    /// ```
+    /// use safe_agg::transport::netprofile::NetProfile;
+    /// let p = NetProfile::parse("lossy,loss-req=0.2,seed=7").unwrap();
+    /// assert_eq!(p.loss_request, 0.2);
+    /// assert_eq!(p.seed, 7);
+    /// assert!(NetProfile::parse("lan,loss-req=1.5").is_err());
+    /// ```
+    pub fn parse(spec: &str) -> Result<NetProfile> {
+        let spec = spec.trim();
+        let mut parts = spec.split(',');
+        let preset = parts.next().unwrap_or("").trim();
+        let mut profile = match preset {
+            "ideal" => NetProfile::ideal(),
+            "lan" => NetProfile::lan(),
+            "wan" => NetProfile::wan(),
+            "lte" => NetProfile::lte(),
+            "lossy" => NetProfile::lossy(),
+            "straggler" => NetProfile::straggler(),
+            other => bail!(
+                "net profile {spec:?}: unknown preset {other:?} \
+                 (expected ideal|lan|wan|lte|lossy|straggler)"
+            ),
+        };
+        for part in parts {
+            let part = part.trim();
+            let (key, value) = part
+                .split_once('=')
+                .with_context(|| format!("net profile override {part:?}: expected FIELD=VALUE"))?;
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "lat-us" => profile.latency = Duration::from_micros(parse_timing(key, value)?),
+                "jitter-us" => profile.jitter = Duration::from_micros(parse_timing(key, value)?),
+                "per-kib-us" => profile.per_kib = Duration::from_micros(parse_timing(key, value)?),
+                "loss-req" => profile.loss_request = parse_loss(key, value)?,
+                "loss-resp" => profile.loss_response = parse_loss(key, value)?,
+                "straggler-every" => {
+                    profile.straggler_every = value.parse().with_context(|| {
+                        format!("net profile field straggler-every={value}: expected a node stride (u64, 0 disables)")
+                    })?;
+                }
+                "straggler-x" => {
+                    let x: u32 = value.parse().with_context(|| {
+                        format!("net profile field straggler-x={value}: expected a multiplier within 1..=1000")
+                    })?;
+                    if !(1..=1000).contains(&x) {
+                        bail!("net profile field straggler-x={x}: must be within 1..=1000");
+                    }
+                    profile.straggler_factor = x;
+                }
+                "seed" => {
+                    profile.seed = value.parse().with_context(|| {
+                        format!("net profile field seed={value}: expected a u64")
+                    })?;
+                }
+                other => bail!(
+                    "net profile {spec:?}: unknown field {other:?} (known: lat-us, jitter-us, \
+                     per-kib-us, loss-req, loss-resp, straggler-every, straggler-x, seed)"
+                ),
+            }
+        }
+        Ok(profile)
+    }
+}
+
+fn parse_timing(key: &str, value: &str) -> Result<u64> {
+    let us: u64 = value.parse().with_context(|| {
+        format!("net profile field {key}={value}: expected microseconds within 0..={MAX_TIMING_US}")
+    })?;
+    if us > MAX_TIMING_US {
+        bail!("net profile field {key}={us}: must be within 0..={MAX_TIMING_US} (microseconds)");
+    }
+    Ok(us)
+}
+
+fn parse_loss(key: &str, value: &str) -> Result<f64> {
+    let p: f64 = value.parse().with_context(|| {
+        format!("net profile field {key}={value}: expected a probability within 0.0..={MAX_LOSS}")
+    })?;
+    if !(0.0..=MAX_LOSS).contains(&p) {
+        bail!("net profile field {key}={p}: must be within 0.0..={MAX_LOSS}");
+    }
+    Ok(p)
+}
+
+/// A bounded retry schedule: exponential backoff, 200 ms cap per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). 1 disables retries.
+    pub attempts: u32,
+    /// Backoff before the first retry; doubles each further retry.
+    pub base: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        NetProfile::ideal().retry_policy()
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff to wait after failed attempt `attempt` (0-based).
+    #[must_use]
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let step = self.base.saturating_mul(1u32 << attempt.min(6));
+        step.min(Duration::from_millis(200))
+    }
+}
+
+/// The per-call fault decision for one op: delays per leg plus drop flags.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinkFault {
+    /// Extra delay before the request reaches the server.
+    pub request_delay: Duration,
+    /// Extra delay before the response reaches the client.
+    pub response_delay: Duration,
+    /// Drop the request leg (server never runs the handler).
+    pub drop_request: bool,
+    /// Drop the response leg (handler ran; caller sees an error).
+    pub drop_response: bool,
+}
+
+/// Ops subject to fault injection (chain data plane).
+fn faultable(path: &str) -> bool {
+    matches!(
+        path,
+        proto::POST_AGGREGATE
+            | proto::GET_AGGREGATE
+            | proto::CHECK_AGGREGATE
+            | proto::POST_AVERAGE
+            | proto::GET_AVERAGE
+    )
+}
+
+/// Ops whose response leg may be dropped (immediate, dedup/idempotent).
+fn response_loss_eligible(path: &str) -> bool {
+    matches!(path, proto::POST_AGGREGATE | proto::POST_AVERAGE)
+}
+
+fn fnv1a(path: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in path.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Shared fault-injection state for one session: the profile plus the
+/// per-`(node, path)` attempt counters that key the deterministic draws.
+/// One instance is shared (`Arc`) by every per-node transport so the
+/// counters advance identically regardless of runtime.
+pub struct NetFaults {
+    profile: NetProfile,
+    seqs: Mutex<BTreeMap<(u64, u64), u64>>,
+}
+
+impl NetFaults {
+    /// Wrap a profile in fresh per-link state.
+    #[must_use]
+    pub fn new(profile: NetProfile) -> NetFaults {
+        NetFaults { profile, seqs: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// The profile this state was built from.
+    #[must_use]
+    pub fn profile(&self) -> &NetProfile {
+        &self.profile
+    }
+
+    /// Draw the fault decision for one attempt of `path` with `body`.
+    ///
+    /// `None` means the op is exempt (control plane / key exchange), the
+    /// body names no node, or the profile is ideal — the transport takes
+    /// its unmodified fast path. Each call advances the `(node, path)`
+    /// sequence, so a retry sees a fresh, still-deterministic draw.
+    pub fn draw(&self, path: &str, body: &Value) -> Option<LinkFault> {
+        if self.profile.is_ideal() || !faultable(path) {
+            return None;
+        }
+        let node = body.u64_of("node").or_else(|| body.u64_of("from_node"))?;
+        let phash = fnv1a(path);
+        let seq = {
+            let mut seqs = self.seqs.lock().unwrap();
+            let slot = seqs.entry((node, phash)).or_insert(0);
+            let seq = *slot;
+            *slot += 1;
+            seq
+        };
+        let mut key = [0u8; 32];
+        key[0..8].copy_from_slice(&self.profile.seed.to_le_bytes());
+        key[8..16].copy_from_slice(&node.to_le_bytes());
+        key[16..24].copy_from_slice(&phash.to_le_bytes());
+        key[24..32].copy_from_slice(&seq.to_le_bytes());
+        let mut rng = DeterministicRng::from_bytes(&key);
+        let u_req = rng.next_f64();
+        let u_resp = rng.next_f64();
+        let j_req = rng.next_f64();
+        let j_resp = rng.next_f64();
+        let p = &self.profile;
+        let straggle = p.straggler_every > 0 && node % p.straggler_every == 0;
+        let mult = if straggle { p.straggler_factor } else { 1 };
+        let leg = |j: f64| (p.latency + p.jitter.mul_f64(j)) * mult;
+        Some(LinkFault {
+            request_delay: leg(j_req),
+            response_delay: leg(j_resp),
+            drop_request: u_req < p.loss_request,
+            drop_response: response_loss_eligible(path) && u_resp < p.loss_response,
+        })
+    }
+
+    /// Bandwidth-proportional extra delay for a body of `bytes` bytes.
+    #[must_use]
+    pub fn transfer_delay(&self, bytes: usize) -> Duration {
+        if self.profile.per_kib.is_zero() {
+            Duration::ZERO
+        } else {
+            self.profile.per_kib.mul_f64(bytes as f64 / 1024.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn post_body(node: u64) -> Value {
+        Value::object(vec![("from_node", Value::from(node))])
+    }
+
+    #[test]
+    fn ideal_profile_draws_nothing() {
+        let nf = NetFaults::new(NetProfile::ideal());
+        assert!(nf.draw(proto::POST_AGGREGATE, &post_body(3)).is_none());
+        assert!(NetProfile::default().is_ideal());
+    }
+
+    #[test]
+    fn control_plane_and_key_exchange_are_exempt() {
+        let nf = NetFaults::new(NetProfile::lossy());
+        let body = Value::object(vec![("node", Value::from(2u64))]);
+        assert!(nf.draw(proto::PROGRESS_CHECK, &body).is_none());
+        assert!(nf.draw(proto::BEGIN_ROUND, &body).is_none());
+        assert!(nf.draw(proto::REGISTER_KEY, &body).is_none());
+        assert!(nf.draw(proto::GET_KEY, &body).is_none());
+        assert!(nf.draw(proto::GET_AGGREGATE, &body).is_some());
+        // A faulted path with no node field is also exempt.
+        assert!(nf.draw(proto::GET_AGGREGATE, &Value::obj()).is_none());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_node_path_sequence() {
+        let a = NetFaults::new(NetProfile::lossy());
+        let b = NetFaults::new(NetProfile::lossy());
+        for node in 0..8u64 {
+            for _ in 0..16 {
+                let fa = a.draw(proto::POST_AGGREGATE, &post_body(node));
+                let fb = b.draw(proto::POST_AGGREGATE, &post_body(node));
+                assert_eq!(fa, fb);
+            }
+        }
+        // Interleaving across nodes does not perturb per-node sequences.
+        let c = NetFaults::new(NetProfile::lossy());
+        let c0: Vec<_> = (0..16).map(|_| c.draw(proto::POST_AGGREGATE, &post_body(0))).collect();
+        let d = NetFaults::new(NetProfile::lossy());
+        for i in 0..16 {
+            let _ = d.draw(proto::POST_AGGREGATE, &post_body(7)); // interleaved noise
+            assert_eq!(d.draw(proto::POST_AGGREGATE, &post_body(0)), c0[i]);
+        }
+    }
+
+    #[test]
+    fn loss_rates_are_roughly_honoured() {
+        let nf = NetFaults::new(NetProfile { seed: 9, ..NetProfile::lossy() });
+        let mut req_drops = 0;
+        let mut resp_drops = 0;
+        let trials = 4000;
+        for i in 0..trials {
+            let f = nf.draw(proto::POST_AGGREGATE, &post_body(i % 5)).unwrap();
+            req_drops += u64::from(f.drop_request);
+            resp_drops += u64::from(f.drop_response);
+        }
+        // lossy: 10% request, 5% response. Allow generous slack.
+        assert!((200..=600).contains(&req_drops), "req drops {req_drops}");
+        assert!((80..=350).contains(&resp_drops), "resp drops {resp_drops}");
+        // Consuming long-polls never lose the response leg.
+        for i in 0..200 {
+            let f = nf.draw(proto::GET_AGGREGATE, &post_body(i % 5)).unwrap();
+            assert!(!f.drop_response);
+        }
+    }
+
+    #[test]
+    fn stragglers_are_slower() {
+        let p = NetProfile::straggler();
+        let nf = NetFaults::new(p.clone());
+        let slow = nf.draw(proto::GET_AVERAGE, &post_body(7)).unwrap();
+        let fast = nf.draw(proto::GET_AVERAGE, &post_body(8)).unwrap();
+        assert!(slow.request_delay >= p.latency * p.straggler_factor);
+        assert!(fast.request_delay < p.latency * p.straggler_factor);
+    }
+
+    #[test]
+    fn parse_presets_and_overrides() {
+        assert_eq!(NetProfile::parse("lan").unwrap(), NetProfile::lan());
+        assert_eq!(NetProfile::parse("ideal").unwrap(), NetProfile::ideal());
+        let p = NetProfile::parse("wan, lat-us=9000, loss-req=0.1, straggler-every=4, straggler-x=10, seed=3").unwrap();
+        assert_eq!(p.latency, Duration::from_micros(9000));
+        assert_eq!(p.loss_request, 0.1);
+        assert_eq!(p.straggler_every, 4);
+        assert_eq!(p.straggler_factor, 10);
+        assert_eq!(p.seed, 3);
+        assert_eq!(p.name, "wan");
+    }
+
+    #[test]
+    fn parse_errors_name_field_and_range() {
+        let e = format!("{:#}", NetProfile::parse("dsl").unwrap_err());
+        assert!(e.contains("unknown preset"), "{e}");
+        assert!(e.contains("lan|wan|lte|lossy|straggler"), "{e}");
+        let e = format!("{:#}", NetProfile::parse("lan,loss-req=1.5").unwrap_err());
+        assert!(e.contains("loss-req"), "{e}");
+        assert!(e.contains("0.0..=0.9"), "{e}");
+        let e = format!("{:#}", NetProfile::parse("lan,lat-us=99999999999").unwrap_err());
+        assert!(e.contains("lat-us"), "{e}");
+        let e = format!("{:#}", NetProfile::parse("lan,bogus=1").unwrap_err());
+        assert!(e.contains("unknown field"), "{e}");
+        assert!(e.contains("bogus"), "{e}");
+        let e = format!("{:#}", NetProfile::parse("lan,jitter-us").unwrap_err());
+        assert!(e.contains("FIELD=VALUE"), "{e}");
+        let e = format!("{:#}", NetProfile::parse("lan,straggler-x=0").unwrap_err());
+        assert!(e.contains("1..=1000"), "{e}");
+    }
+
+    #[test]
+    fn rtt_and_budget_scale_with_profile() {
+        let ideal = NetProfile::ideal();
+        assert_eq!(ideal.expected_rtt(), Duration::ZERO);
+        let base = Duration::from_millis(200);
+        assert_eq!(ideal.budget(base, 50), base);
+        let lte = NetProfile::lte();
+        assert!(lte.expected_rtt() >= Duration::from_millis(12));
+        assert!(lte.budget(base, 50) > base);
+        let policy = lte.retry_policy();
+        assert_eq!(policy.attempts, 5);
+        assert!(policy.backoff(1) > policy.backoff(0));
+        assert!(policy.backoff(20) <= Duration::from_millis(200));
+    }
+}

@@ -56,6 +56,7 @@ fn prop_post_aggregate_roundtrip() {
             aggregate: blob(rng, 2000),
             round_id: if rng.next_below(2) == 0 { None } else { Some(rng.next_u64() >> 40) },
             epoch: if rng.next_below(2) == 0 { None } else { Some(rng.next_u64() >> 48) },
+            token: if rng.next_below(2) == 0 { None } else { Some(rng.next_u64() >> 32) },
         },
         |msg| {
             let v = msg.to_value();
@@ -421,6 +422,7 @@ fn binary_strictly_smaller_on_hot_paths_at_1024_features() {
         aggregate: env.to_blob(),
         round_id: Some(0),
         epoch: None,
+        token: None,
     }
     .to_value();
     // PR 1's shape: the same envelope as `mode:keyB64:bodyB64` text.

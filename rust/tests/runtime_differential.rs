@@ -31,6 +31,9 @@ struct RoundFingerprint {
     merged_groups: u64,
     reassigned_nodes: u64,
     deadline_exceeded: u64,
+    net_retries: u64,
+    net_drops: u64,
+    dedup_posts: u64,
     per_path: BTreeMap<String, u64>,
 }
 
@@ -85,6 +88,9 @@ fn run(cfg: SessionConfig, rounds: &[Vec<Vec<f64>>], churn: &ChurnSchedule) -> V
             merged_groups: r.metrics.merged_groups,
             reassigned_nodes: r.metrics.reassigned_nodes,
             deadline_exceeded: r.metrics.deadline_exceeded,
+            net_retries: r.metrics.net_retries,
+            net_drops: r.metrics.net_drops,
+            dedup_posts: r.metrics.dedup_posts,
             per_path: r.metrics.per_path.clone(),
         })
         .collect()
@@ -141,6 +147,40 @@ fn threads_and_events_agree_in_saf_mode() {
     let threads = run(cfg(n, 3, CipherMode::None, RuntimeKind::Threads), &rounds, &churn);
     let events = run(cfg(n, 3, CipherMode::None, RuntimeKind::Events), &rounds, &churn);
     assert_identical(&threads, &events);
+}
+
+/// The hostile-network differential: the same seeded lossy profile must
+/// inject the *same* faults under both executors — the fault model keys
+/// every draw on `(seed, node, path, attempt)`, never on threads or
+/// wall-clock — so retry/drop/dedup counters, physical message counts,
+/// and the averages all stay bit-identical. Loss is kept moderate so
+/// retry budgets absorb every drop (no retry-exhaustion deaths): the
+/// counts are then schedule-determined, not timing-determined.
+#[test]
+fn threads_and_events_agree_under_packet_loss() {
+    let n = 12;
+    let rounds = inputs_for(n, 2);
+    let churn = ChurnSchedule::poisson(3, n, 2, 0.10, 0.5);
+    let net = safe_agg::transport::NetProfile::parse(
+        "lossy,lat-us=200,jitter-us=100,loss-req=0.08,loss-resp=0.05,seed=5",
+    )
+    .unwrap();
+    let mk = |runtime| {
+        let mut c = cfg(n, 3, CipherMode::Hybrid, runtime);
+        c.net = net.clone();
+        c
+    };
+
+    let threads = run(mk(RuntimeKind::Threads), &rounds, &churn);
+    let events = run(mk(RuntimeKind::Events), &rounds, &churn);
+    assert_identical(&threads, &events);
+
+    // Sanity: the profile actually injected faults (≈100 faultable calls
+    // at 8%/5% loss), so the agreement covered the retry/dedup machinery.
+    let drops: u64 = threads.iter().map(|r| r.net_drops).sum();
+    let retries: u64 = threads.iter().map(|r| r.net_retries).sum();
+    assert!(drops > 0, "lossy differential injected no drops: {threads:?}");
+    assert!(retries <= drops, "retries without a causing drop: {threads:?}");
 }
 
 /// A failure-free single round under both runtimes lands exactly on the
