@@ -7,6 +7,7 @@ use safe_agg::config::DeviceProfile;
 use safe_agg::crypto::envelope::{CipherMode, Envelope};
 use safe_agg::crypto::rng::DeterministicRng;
 use safe_agg::crypto::rsa::RsaKeyPair;
+use safe_agg::crypto::{Big, DefaultBig, ModContext};
 use safe_agg::harness::figures::{edge_cfg, run_variant, Variant};
 use safe_agg::learner::faults::FaultPlan;
 
@@ -45,7 +46,10 @@ fn messages_table() -> anyhow::Result<()> {
 }
 
 fn crypto_table() {
-    println!("── E18: RSA complexity (§4: O(k²) encrypt / O(k³) decrypt) ──");
+    println!(
+        "── E18: RSA complexity (§4: O(k²) encrypt / O(k³) decrypt) — backend: {} ──",
+        <DefaultBig as Big>::NAME
+    );
     println!("{:>6} {:>12} {:>12} {:>12}", "bits", "keygen", "encrypt", "decrypt");
     let mut rng = DeterministicRng::seed(7);
     for bits in [512usize, 1024, 2048] {
@@ -98,6 +102,74 @@ fn crypto_table() {
             legacy
         );
     }
+    modexp_table();
+}
+
+/// E18c: what the Montgomery context buys. One 2048-bit modulus and a
+/// node's worth of 256-bit exponents, folded three ways — a fresh
+/// context per exponentiation (the pre-PR shape), one shared context
+/// (the §5.8 re-key shape after this PR), and `modpow_product` doing
+/// the whole chain in one call.
+fn modexp_table() {
+    println!();
+    println!(
+        "── E18c: modexp context reuse (backend: {}) ──",
+        <DefaultBig as Big>::NAME
+    );
+    let mut rng = DeterministicRng::seed(11);
+    let modulus = {
+        // An odd 2048-bit modulus keeps the native backend on its
+        // Montgomery path, like a real RSA or RFC 3526 modulus.
+        let mut m = DefaultBig::random_bits(2048, &mut rng);
+        if DefaultBig::is_even(&m) {
+            m = DefaultBig::add_u64(&m, 1);
+        }
+        m
+    };
+    let base = DefaultBig::random_below(&modulus, &mut rng);
+    let links = 8usize; // one node's §5.8 link set
+    let exps: Vec<_> = (0..links)
+        .map(|_| DefaultBig::random_bits(256, &mut rng))
+        .collect();
+    let iters = 20u32;
+
+    let t = Instant::now();
+    let mut fresh_out = base.clone();
+    for _ in 0..iters {
+        let mut acc = base.clone();
+        for e in &exps {
+            acc = DefaultBig::modpow(&acc, e, &modulus);
+        }
+        fresh_out = acc;
+    }
+    let fresh = t.elapsed() / iters;
+
+    let t = Instant::now();
+    let mut shared_out = base.clone();
+    for _ in 0..iters {
+        let ctx = DefaultBig::ctx(&modulus);
+        let mut acc = base.clone();
+        for e in &exps {
+            acc = ctx.modpow(&acc, e);
+        }
+        shared_out = acc;
+    }
+    let shared = t.elapsed() / iters;
+
+    let t = Instant::now();
+    let mut product_out = base.clone();
+    for _ in 0..iters {
+        product_out = DefaultBig::modpow_product(&base, exps.iter(), &modulus);
+    }
+    let product = t.elapsed() / iters;
+
+    assert_eq!(fresh_out, shared_out, "shared ctx changed the result");
+    assert_eq!(fresh_out, product_out, "modpow_product changed the result");
+    println!(
+        "{} chained exps × 2048-bit modulus, 256-bit exponents:\n\
+         {:>16}: {:>10.2?}\n{:>16}: {:>10.2?}\n{:>16}: {:>10.2?}",
+        links, "fresh ctx/call", fresh, "shared ctx", shared, "modpow_product", product
+    );
 }
 
 fn main() -> anyhow::Result<()> {

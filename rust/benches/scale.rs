@@ -15,16 +15,61 @@
 //! `SAFE_SMOKE_GROUPS` size the single-round smoke (`SAFE_SMOKE_NODES=0`
 //! skips it); set `SAFE_SCALE_NO_ASSERT=1` to report formula deltas
 //! without failing on them.
+//!
+//! The crypto pass ([`crypto_scale`]: §5.1 round-0 setup + §5.8 re-key
+//! under the active bigint backend) runs after the churn bench and
+//! merges into `BENCH_scale.json` under `crypto.<backend>` — so a
+//! second invocation built with `--features bigint-dig` adds its
+//! numbers *alongside* the default backend's instead of clobbering
+//! them. `SAFE_SCALE_CRYPTO_ONLY=1` skips the churn/smoke passes and
+//! does only that read-merge-write (the CI feature leg uses this);
+//! `SAFE_SCALE_CRYPTO_NODES=0` skips the crypto pass entirely.
 
 use safe_agg::config::RuntimeKind;
-use safe_agg::harness::scale::{poisson_scale, single_round_smoke, ScaleConfig};
+use safe_agg::harness::scale::{
+    crypto_scale, poisson_scale, single_round_smoke, CryptoScaleConfig, ScaleConfig,
+};
 use safe_agg::json::Value;
 
 fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Run the crypto pass and fold its numbers into `json` under
+/// `crypto.<backend>`, preserving any sibling backends already there.
+fn run_crypto_pass(json: &mut Value) -> anyhow::Result<()> {
+    let cdefaults = CryptoScaleConfig::default();
+    let n = env_or("SAFE_SCALE_CRYPTO_NODES", cdefaults.n_nodes);
+    if n == 0 {
+        println!("crypto: skipped");
+        return Ok(());
+    }
+    let report = crypto_scale(&CryptoScaleConfig {
+        n_nodes: n,
+        groups: env_or("SAFE_SCALE_CRYPTO_GROUPS", (n / 5).max(1)),
+        rsa_bits: env_or("SAFE_SCALE_CRYPTO_RSA_BITS", cdefaults.rsa_bits),
+        seed: env_or("SAFE_SCALE_SEED", cdefaults.seed),
+    })?;
+    print!("{}", report.to_table());
+    let mut crypto = json.get("crypto").cloned().unwrap_or_else(Value::obj);
+    crypto.set(&report.backend, report.to_json());
+    json.set("crypto", crypto);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    if std::env::var("SAFE_SCALE_CRYPTO_ONLY").as_deref() == Ok("1") {
+        // Read-merge-write: keep whatever an earlier (other-backend)
+        // invocation already recorded.
+        let mut json = std::fs::read_to_string("BENCH_scale.json")
+            .ok()
+            .and_then(|s| safe_agg::json::parse(&s).ok())
+            .unwrap_or_else(Value::obj);
+        run_crypto_pass(&mut json)?;
+        std::fs::write("BENCH_scale.json", json.to_string())?;
+        println!("wrote BENCH_scale.json (crypto only)");
+        return Ok(());
+    }
     let defaults = ScaleConfig::default();
     let n_nodes = env_or("SAFE_SCALE_NODES", defaults.n_nodes);
     let runtime = match std::env::var("SAFE_SCALE_RUNTIME").as_deref() {
@@ -116,6 +161,16 @@ fn main() -> anyhow::Result<()> {
         "smoke",
         smoke.map(|s| s.to_json()).unwrap_or(Value::Null),
     );
+    // Preserve crypto numbers an earlier invocation (possibly built with
+    // the other backend) already wrote, then add this build's own.
+    if let Some(prev) = std::fs::read_to_string("BENCH_scale.json")
+        .ok()
+        .and_then(|s| safe_agg::json::parse(&s).ok())
+        .and_then(|v| v.get("crypto").cloned())
+    {
+        json.set("crypto", prev);
+    }
+    run_crypto_pass(&mut json)?;
     std::fs::write("BENCH_scale.json", json.to_string())?;
     println!("wrote BENCH_scale.json");
     Ok(())

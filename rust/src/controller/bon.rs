@@ -24,8 +24,8 @@ use std::time::Instant;
 
 use super::Controller;
 use crate::blob::Blob;
-use crate::crypto::bigint::BigUint;
 use crate::crypto::dh::DhGroup;
+use crate::crypto::{Big, DefaultBig, Int, ModContext};
 use crate::crypto::rng::prg_expand_f64;
 use crate::crypto::shamir;
 use crate::json::Value;
@@ -146,19 +146,22 @@ impl BonState {
                 *a -= m;
             }
         }
-        // Cancel residual pairwise masks involving dropped nodes.
+        // Cancel residual pairwise masks involving dropped nodes. One
+        // exponentiation context for the group modulus serves every
+        // dropped×survivor pair.
+        let gctx = self.group.ctx();
         for d in &dropped {
             let sk_bytes = match shamir::reconstruct_secret(&self.s_shares[d][..self.threshold]) {
                 Ok(s) => s,
                 Err(_) => return,
             };
-            let s_sk = BigUint::from_bytes_be(&sk_bytes);
+            let s_sk = DefaultBig::from_bytes_be(&sk_bytes);
             for v in &self.survivors {
                 let Some((_, spk_hex)) = self.keys.get(v) else { continue };
-                let Ok(spk) = BigUint::from_hex(spk_hex) else { continue };
+                let Ok(spk) = DefaultBig::from_hex(spk_hex) else { continue };
                 // Recompute the pairwise seed exactly like the clients:
                 // KDF(spk_v ^ s_d^SK mod p).
-                let shared = spk.modpow(&s_sk, &self.group.p);
+                let shared = gctx.modpow(&spk, &s_sk);
                 let seed = pairwise_seed(&shared);
                 let mask = prg_expand_f64(&seed, n_feat);
                 if *d < *v {
@@ -184,11 +187,11 @@ impl BonState {
 
 /// KDF from a DH shared value to a 32-byte PRG seed — must match the
 /// client side in `protocols::bon`.
-pub fn pairwise_seed(shared: &BigUint) -> [u8; 32] {
+pub fn pairwise_seed(shared: &Int) -> [u8; 32] {
     use sha2::{Digest, Sha256};
     let mut h = Sha256::new();
     h.update(b"bon-pairwise");
-    h.update(shared.to_bytes_be());
+    h.update(DefaultBig::to_bytes_be(shared));
     h.finalize().into()
 }
 

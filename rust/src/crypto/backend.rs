@@ -1,0 +1,362 @@
+//! Pluggable big-integer backends behind the [`Big`] trait.
+//!
+//! Modeled on the fission-suite `Big` trait (wnfs-nameaccumulator): a
+//! backend is a unit struct whose associated `Num` type carries the
+//! arbitrary-precision values, with every operation a static method on
+//! the backend. Generic crypto code (`rsa`, `dh`, `prime`, `shamir`
+//! cross-checks) is written against `B: Big`, so a whole protocol stack
+//! can be re-pointed at another bignum implementation by switching one
+//! type parameter — and the cross-backend differential suite
+//! (`tests/crypto_differential.rs`) holds every backend bit-identical to
+//! the others before it is allowed near a key.
+//!
+//! Two backends ship in-tree:
+//!
+//! * [`NativeBig`] — the default: [`super::bigint::BigUint`] (u64 limbs,
+//!   Karatsuba, Knuth-D division, Montgomery CIOS multiplication with a
+//!   dedicated squaring path and 4-bit fixed-window modexp).
+//! * [`super::bigint_dig::DigBig`] — a vendored, dependency-free port of
+//!   the `num-bigint-dig` arithmetic surface (u32 limbs, schoolbook
+//!   multiply, binary modexp — deliberately *different* algorithms, so
+//!   differential tests compare genuinely independent code paths). The
+//!   `bigint-dig` cargo feature makes it the session default; the real
+//!   crate can be dropped behind the same impl when a crate cache is
+//!   available.
+//!
+//! Modular-exponentiation state is reified as [`Big::Ctx`]: one context
+//! per modulus, reused across every exponentiation against it. For the
+//! native backend that is a Montgomery context (R² and the window table
+//! amortized), which is what the §5.8 re-key path batches across a
+//! node's links.
+
+use std::cmp::Ordering;
+
+use super::bigint::BigUint;
+use super::rng::SecureRng;
+
+/// Reusable per-modulus exponentiation state. Backends with Montgomery
+/// arithmetic keep R², n′ and scratch here; plain backends just hold the
+/// modulus. Contexts are cheap to clone relative to rebuilding.
+pub trait ModContext<N>: Clone + Send + Sync {
+    /// The modulus this context was built for.
+    fn modulus(&self) -> &N;
+    /// `base^exp mod modulus` using the precomputed state.
+    fn modpow(&self, base: &N, exp: &N) -> N;
+}
+
+/// A big-integer backend. All operations are non-negative; subtraction
+/// underflow panics (matching the in-tree `BigUint` contract).
+pub trait Big: Clone + Copy + std::fmt::Debug + Default + PartialEq + Eq + Send + Sync {
+    /// The arbitrary-precision value type.
+    type Num: Clone + std::fmt::Debug + PartialEq + Eq + Send + Sync + 'static;
+    /// Reusable per-modulus exponentiation state.
+    type Ctx: ModContext<Self::Num>;
+
+    /// Stable backend name, used to key per-backend bench records.
+    const NAME: &'static str;
+
+    fn zero() -> Self::Num;
+    fn one() -> Self::Num;
+    fn from_u64(v: u64) -> Self::Num;
+    /// `Some(v)` when the value fits in a u64.
+    fn as_u64(n: &Self::Num) -> Option<u64>;
+    fn from_bytes_be(bytes: &[u8]) -> Self::Num;
+    fn to_bytes_be(n: &Self::Num) -> Vec<u8>;
+    fn from_hex(s: &str) -> anyhow::Result<Self::Num>;
+    fn to_hex(n: &Self::Num) -> String;
+
+    fn is_zero(n: &Self::Num) -> bool;
+    fn is_one(n: &Self::Num) -> bool;
+    fn is_even(n: &Self::Num) -> bool;
+    fn bit_length(n: &Self::Num) -> usize;
+    /// Test bit `i` (0 = LSB).
+    fn bit(n: &Self::Num, i: usize) -> bool;
+    fn cmp(a: &Self::Num, b: &Self::Num) -> Ordering;
+
+    fn add(a: &Self::Num, b: &Self::Num) -> Self::Num;
+    /// `a - b`; panics when `b > a`.
+    fn sub(a: &Self::Num, b: &Self::Num) -> Self::Num;
+    fn mul(a: &Self::Num, b: &Self::Num) -> Self::Num;
+    /// `(quotient, remainder)`; panics on division by zero.
+    fn div_rem(a: &Self::Num, b: &Self::Num) -> (Self::Num, Self::Num);
+    fn modinv(a: &Self::Num, m: &Self::Num) -> Option<Self::Num>;
+    fn gcd(a: &Self::Num, b: &Self::Num) -> Self::Num;
+    fn modpow(base: &Self::Num, exp: &Self::Num, m: &Self::Num) -> Self::Num;
+    /// Build a reusable exponentiation context for `modulus`.
+    fn ctx(modulus: &Self::Num) -> Self::Ctx;
+
+    // ── Provided combinators ────────────────────────────────────────────
+
+    fn add_u64(a: &Self::Num, v: u64) -> Self::Num {
+        Self::add(a, &Self::from_u64(v))
+    }
+
+    fn sub_u64(a: &Self::Num, v: u64) -> Self::Num {
+        Self::sub(a, &Self::from_u64(v))
+    }
+
+    fn rem(a: &Self::Num, m: &Self::Num) -> Self::Num {
+        Self::div_rem(a, m).1
+    }
+
+    fn div_rem_u64(a: &Self::Num, d: u64) -> (Self::Num, u64) {
+        let (q, r) = Self::div_rem(a, &Self::from_u64(d));
+        (q, Self::as_u64(&r).expect("remainder below a u64 divisor fits u64"))
+    }
+
+    /// `(a + b) mod m` — inputs must already be `< m`.
+    fn addmod(a: &Self::Num, b: &Self::Num, m: &Self::Num) -> Self::Num {
+        let s = Self::add(a, b);
+        if Self::cmp(&s, m) != Ordering::Less {
+            Self::sub(&s, m)
+        } else {
+            s
+        }
+    }
+
+    /// `(a - b) mod m` — inputs must already be `< m`.
+    fn submod(a: &Self::Num, b: &Self::Num, m: &Self::Num) -> Self::Num {
+        if Self::cmp(a, b) != Ordering::Less {
+            Self::sub(a, b)
+        } else {
+            Self::sub(&Self::add(a, m), b)
+        }
+    }
+
+    fn mulmod(a: &Self::Num, b: &Self::Num, m: &Self::Num) -> Self::Num {
+        Self::rem(&Self::mul(a, b), m)
+    }
+
+    /// `a² mod m`. Backends with a dedicated squaring path override this.
+    fn squaremod(a: &Self::Num, m: &Self::Num) -> Self::Num {
+        Self::mulmod(a, a, m)
+    }
+
+    /// Batched exponentiation: `base^(e₁·e₂·…·eₖ) mod m`, computed as
+    /// `(((base^e₁)^e₂)…)^eₖ` in one shared context (the fission-suite
+    /// `modpow_product` shape). The empty product is 1, so no exponents
+    /// returns `base mod m`.
+    fn modpow_product<'a, I>(base: &Self::Num, exponents: I, m: &Self::Num) -> Self::Num
+    where
+        I: IntoIterator<Item = &'a Self::Num>,
+    {
+        let ctx = Self::ctx(m);
+        exponents
+            .into_iter()
+            .fold(Self::rem(base, m), |acc, e| ctx.modpow(&acc, e))
+    }
+
+    /// To big-endian bytes, left-padded with zeros to exactly `len`.
+    /// Panics when the value doesn't fit.
+    fn to_bytes_be_padded(n: &Self::Num, len: usize) -> Vec<u8> {
+        let raw = Self::to_bytes_be(n);
+        assert!(raw.len() <= len, "value too large for padded length");
+        let mut out = vec![0u8; len - raw.len()];
+        out.extend_from_slice(&raw);
+        out
+    }
+
+    // ── Canonical randomness ────────────────────────────────────────────
+    //
+    // These are provided (not per-backend) ON PURPOSE: both decode the
+    // same big-endian byte stream the same way, so a seeded RNG drives
+    // every backend through identical draws — the property the
+    // byte-stable cross-backend keygen regression pins.
+
+    /// Uniform value in `[0, bound)` by rejection sampling. Draws
+    /// `ceil(bits/8)` bytes per attempt and masks the excess high bits.
+    fn random_below(bound: &Self::Num, rng: &mut dyn SecureRng) -> Self::Num {
+        assert!(!Self::is_zero(bound));
+        let bits = Self::bit_length(bound);
+        let bytes = (bits + 7) / 8;
+        loop {
+            let mut buf = vec![0u8; bytes];
+            rng.fill_bytes(&mut buf);
+            let excess = bytes * 8 - bits;
+            if excess > 0 {
+                buf[0] &= 0xffu8 >> excess;
+            }
+            let v = Self::from_bytes_be(&buf);
+            if Self::cmp(&v, bound) == Ordering::Less {
+                return v;
+            }
+        }
+    }
+
+    /// Random value with exactly `bits` bits (MSB forced).
+    fn random_bits(bits: usize, rng: &mut dyn SecureRng) -> Self::Num {
+        assert!(bits > 0);
+        let bytes = (bits + 7) / 8;
+        let mut buf = vec![0u8; bytes];
+        rng.fill_bytes(&mut buf);
+        let excess = bytes * 8 - bits;
+        buf[0] &= 0xffu8 >> excess;
+        buf[0] |= 0x80u8 >> excess;
+        Self::from_bytes_be(&buf)
+    }
+}
+
+/// The in-tree default backend: [`BigUint`] with Montgomery CIOS
+/// multiplication, a squaring specialization and 4-bit fixed-window
+/// exponentiation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NativeBig;
+
+impl Big for NativeBig {
+    type Num = BigUint;
+    type Ctx = super::bigint::NativeCtx;
+
+    const NAME: &'static str = "native";
+
+    fn zero() -> BigUint {
+        BigUint::zero()
+    }
+    fn one() -> BigUint {
+        BigUint::one()
+    }
+    fn from_u64(v: u64) -> BigUint {
+        BigUint::from_u64(v)
+    }
+    fn as_u64(n: &BigUint) -> Option<u64> {
+        n.as_u64()
+    }
+    fn from_bytes_be(bytes: &[u8]) -> BigUint {
+        BigUint::from_bytes_be(bytes)
+    }
+    fn to_bytes_be(n: &BigUint) -> Vec<u8> {
+        n.to_bytes_be()
+    }
+    fn from_hex(s: &str) -> anyhow::Result<BigUint> {
+        BigUint::from_hex(s)
+    }
+    fn to_hex(n: &BigUint) -> String {
+        n.to_hex()
+    }
+    fn is_zero(n: &BigUint) -> bool {
+        n.is_zero()
+    }
+    fn is_one(n: &BigUint) -> bool {
+        n.is_one()
+    }
+    fn is_even(n: &BigUint) -> bool {
+        n.is_even()
+    }
+    fn bit_length(n: &BigUint) -> usize {
+        n.bit_length()
+    }
+    fn bit(n: &BigUint, i: usize) -> bool {
+        n.bit(i)
+    }
+    fn cmp(a: &BigUint, b: &BigUint) -> Ordering {
+        a.cmp(b)
+    }
+    fn add(a: &BigUint, b: &BigUint) -> BigUint {
+        a.add(b)
+    }
+    fn sub(a: &BigUint, b: &BigUint) -> BigUint {
+        a.sub(b)
+    }
+    fn mul(a: &BigUint, b: &BigUint) -> BigUint {
+        a.mul(b)
+    }
+    fn div_rem(a: &BigUint, b: &BigUint) -> (BigUint, BigUint) {
+        a.div_rem(b)
+    }
+    fn div_rem_u64(a: &BigUint, d: u64) -> (BigUint, u64) {
+        a.div_rem_u64(d)
+    }
+    fn modinv(a: &BigUint, m: &BigUint) -> Option<BigUint> {
+        a.modinv(m)
+    }
+    fn gcd(a: &BigUint, b: &BigUint) -> BigUint {
+        a.gcd(b)
+    }
+    fn modpow(base: &BigUint, exp: &BigUint, m: &BigUint) -> BigUint {
+        base.modpow(exp, m)
+    }
+    fn squaremod(a: &BigUint, m: &BigUint) -> BigUint {
+        a.squaremod(m)
+    }
+    fn ctx(modulus: &BigUint) -> Self::Ctx {
+        super::bigint::NativeCtx::new(modulus)
+    }
+}
+
+/// The backend the non-generic protocol surface (session drivers, BON,
+/// envelopes) compiles against. The `bigint-dig` cargo feature swaps the
+/// whole stack onto the vendored reference backend — that build is what
+/// CI's `crypto-differential` job runs the full test suite under.
+#[cfg(not(feature = "bigint-dig"))]
+pub type DefaultBig = NativeBig;
+#[cfg(feature = "bigint-dig")]
+pub type DefaultBig = super::bigint_dig::DigBig;
+
+/// The default backend's value type. Non-generic call sites (BON key
+/// wrangling, JSON key serialization) use this alias so they compile
+/// unchanged under either default backend.
+pub type Int = <DefaultBig as Big>::Num;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::bigint_dig::DigBig;
+    use crate::crypto::rng::DeterministicRng;
+
+    fn modpow_product_suite<B: Big>() {
+        let m = B::from_u64(1_000_000_007);
+        let base = B::from_u64(12345);
+        let exps = [B::from_u64(3), B::from_u64(5), B::from_u64(7)];
+        // base^(3·5·7) = base^105
+        let expect = B::modpow(&base, &B::from_u64(105), &m);
+        assert_eq!(B::modpow_product(&base, exps.iter(), &m), expect);
+        // Empty product → base mod m.
+        assert_eq!(B::modpow_product(&base, [].iter(), &m), B::rem(&base, &m));
+    }
+
+    #[test]
+    fn modpow_product_is_product_of_exponents() {
+        modpow_product_suite::<NativeBig>();
+        modpow_product_suite::<DigBig>();
+    }
+
+    fn ctx_reuse_suite<B: Big>() {
+        let mut rng = DeterministicRng::seed(77);
+        let mut m = B::random_bits(256, &mut rng);
+        if B::is_even(&m) {
+            m = B::add_u64(&m, 1);
+        }
+        let ctx = B::ctx(&m);
+        assert_eq!(B::cmp(ctx.modulus(), &m), Ordering::Equal);
+        for _ in 0..4 {
+            let b = B::random_below(&m, &mut rng);
+            let e = B::random_bits(64, &mut rng);
+            assert_eq!(ctx.modpow(&b, &e), B::modpow(&b, &e, &m));
+        }
+    }
+
+    #[test]
+    fn ctx_matches_one_shot_modpow() {
+        ctx_reuse_suite::<NativeBig>();
+        ctx_reuse_suite::<DigBig>();
+    }
+
+    #[test]
+    fn canonical_randomness_is_backend_independent() {
+        // Same seed, same draw sequence ⇒ byte-identical values across
+        // backends (the property the keygen regression depends on).
+        let mut r1 = DeterministicRng::seed(99);
+        let mut r2 = DeterministicRng::seed(99);
+        for bits in [8usize, 64, 65, 127, 256] {
+            let a = NativeBig::random_bits(bits, &mut r1);
+            let b = DigBig::random_bits(bits, &mut r2);
+            assert_eq!(a.to_bytes_be(), b.to_bytes_be(), "bits={bits}");
+        }
+        let bound_a = NativeBig::from_u64(1 << 40);
+        let bound_b = DigBig::from_u64(1 << 40);
+        for _ in 0..16 {
+            let a = NativeBig::random_below(&bound_a, &mut r1);
+            let b = DigBig::random_below(&bound_b, &mut r2);
+            assert_eq!(a.to_bytes_be(), b.to_bytes_be());
+        }
+    }
+}

@@ -466,6 +466,14 @@ impl BigUint {
         self.mul(other).rem(m)
     }
 
+    /// `self² mod m`. One-shot squaring goes through plain mulmod (a
+    /// Montgomery context costs more to build than it saves on a single
+    /// square); the Montgomery squaring specialization lives inside
+    /// [`MontgomeryCtx`], where repeated squarings amortize it.
+    pub fn squaremod(&self, m: &BigUint) -> BigUint {
+        self.mulmod(self, m)
+    }
+
     /// Modular exponentiation. Uses Montgomery CIOS when the modulus is odd
     /// (the RSA/DH case), falling back to square-and-multiply otherwise.
     pub fn modpow(&self, exp: &BigUint, modulus: &BigUint) -> BigUint {
@@ -476,16 +484,7 @@ impl BigUint {
         if !modulus.is_even() {
             return MontgomeryCtx::new(modulus).modpow(self, exp);
         }
-        // Generic path for even moduli (rare; not on the RSA hot path).
-        let mut base = self.rem(modulus);
-        let mut result = BigUint::one();
-        for i in 0..exp.bit_length() {
-            if exp.bit(i) {
-                result = result.mulmod(&base, modulus);
-            }
-            base = base.mulmod(&base, modulus);
-        }
-        result
+        modpow_plain(self, exp, modulus)
     }
 
     pub fn gcd(&self, other: &BigUint) -> BigUint {
@@ -583,9 +582,70 @@ fn signed_sub(a: (bool, BigUint), b: (bool, BigUint)) -> (bool, BigUint) {
     }
 }
 
+/// Binary square-and-multiply for even moduli (rare; not on the RSA hot
+/// path). Shared by [`BigUint::modpow`] and the even-modulus arm of
+/// [`NativeCtx`].
+fn modpow_plain(base: &BigUint, exp: &BigUint, modulus: &BigUint) -> BigUint {
+    let mut base = base.rem(modulus);
+    let mut result = BigUint::one();
+    for i in 0..exp.bit_length() {
+        if exp.bit(i) {
+            result = result.mulmod(&base, modulus);
+        }
+        base = base.squaremod(modulus);
+    }
+    result
+}
+
+/// Reusable per-modulus exponentiation context for the native backend:
+/// a [`MontgomeryCtx`] for odd moduli, a plain square-and-multiply
+/// fallback otherwise. This is what [`crate::crypto::backend::Big::ctx`]
+/// hands out — build once per modulus, reuse across every
+/// exponentiation (blob chunks, a node's §5.8 links, Miller–Rabin
+/// witnesses).
+#[derive(Clone)]
+pub enum NativeCtx {
+    Mont(MontgomeryCtx),
+    Plain(BigUint),
+}
+
+impl NativeCtx {
+    pub fn new(modulus: &BigUint) -> Self {
+        assert!(!modulus.is_zero(), "zero modulus");
+        if modulus.is_even() {
+            NativeCtx::Plain(modulus.clone())
+        } else {
+            NativeCtx::Mont(MontgomeryCtx::new(modulus))
+        }
+    }
+}
+
+impl crate::crypto::backend::ModContext<BigUint> for NativeCtx {
+    fn modulus(&self) -> &BigUint {
+        match self {
+            NativeCtx::Mont(ctx) => ctx.modulus(),
+            NativeCtx::Plain(m) => m,
+        }
+    }
+
+    fn modpow(&self, base: &BigUint, exp: &BigUint) -> BigUint {
+        match self {
+            NativeCtx::Mont(ctx) => ctx.modpow(base, exp),
+            NativeCtx::Plain(m) => {
+                if m.is_one() {
+                    BigUint::zero()
+                } else {
+                    modpow_plain(base, exp, m)
+                }
+            }
+        }
+    }
+}
+
 /// Montgomery context for a fixed odd modulus (CIOS multiplication).
 /// This is the RSA/DH hot path: one context per exponentiation, reused
 /// across all the squarings/multiplications.
+#[derive(Clone)]
 pub struct MontgomeryCtx {
     n: Vec<u64>,     // modulus limbs
     n0inv: u64,      // -n^{-1} mod 2^64
@@ -603,6 +663,10 @@ impl MontgomeryCtx {
         let mut rr = r2.limbs.clone();
         rr.resize(n.len(), 0);
         MontgomeryCtx { n, n0inv, rr, modulus: modulus.clone() }
+    }
+
+    pub fn modulus(&self) -> &BigUint {
+        &self.modulus
     }
 
     /// CIOS Montgomery multiplication: returns a*b*R^{-1} mod n.
@@ -652,6 +716,86 @@ impl MontgomeryCtx {
         t
     }
 
+    /// Montgomery squaring: a·a·R⁻¹ mod n. The cross products a_i·a_j
+    /// (i < j) are computed once and doubled, then the diagonal squares
+    /// added and a single REDC pass applied — roughly 1.5× faster than
+    /// `mont_mul(a, a)` at RSA limb counts. Requires a < n (every
+    /// Montgomery residue this context produces satisfies that).
+    fn mont_sqr(&self, a: &[u64]) -> Vec<u64> {
+        let len = self.n.len();
+        let mut t = vec![0u64; 2 * len + 1];
+        // Cross products, each pair once.
+        for i in 0..len {
+            let ai = a[i] as u128;
+            if ai == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for j in (i + 1)..len {
+                let cur = t[i + j] as u128 + ai * (a[j] as u128) + carry;
+                t[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            t[i + len] = carry as u64;
+        }
+        // Double the cross part (shift left one bit across all limbs)...
+        let mut carry_bit = 0u64;
+        for limb in t.iter_mut() {
+            let new = (*limb << 1) | carry_bit;
+            carry_bit = *limb >> 63;
+            *limb = new;
+        }
+        // ...then add the diagonal squares a_i² at positions (2i, 2i+1).
+        let mut carry = 0u128;
+        for i in 0..len {
+            let sq = (a[i] as u128) * (a[i] as u128);
+            let lo = t[2 * i] as u128 + (sq as u64 as u128) + carry;
+            t[2 * i] = lo as u64;
+            let hi = t[2 * i + 1] as u128 + (sq >> 64) + (lo >> 64);
+            t[2 * i + 1] = hi as u64;
+            carry = hi >> 64;
+        }
+        if carry > 0 {
+            t[2 * len] = t[2 * len].wrapping_add(carry as u64);
+        }
+        self.redc(t)
+    }
+
+    /// One Montgomery reduction pass over a double-width value t < n·R:
+    /// returns t·R⁻¹ mod n in `len` limbs.
+    fn redc(&self, mut t: Vec<u64>) -> Vec<u64> {
+        let len = self.n.len();
+        debug_assert!(t.len() == 2 * len + 1);
+        for i in 0..len {
+            let m = t[i].wrapping_mul(self.n0inv) as u128;
+            let mut carry = 0u128;
+            for j in 0..len {
+                let cur = t[i + j] as u128 + m * (self.n[j] as u128) + carry;
+                t[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + len;
+            while carry > 0 {
+                let cur = t[k] as u128 + carry;
+                t[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        let needs_sub = t[2 * len] > 0 || ge_limbs(&t[len..2 * len], &self.n);
+        let mut out = t[len..2 * len].to_vec();
+        if needs_sub {
+            let mut borrow = 0u64;
+            for j in 0..len {
+                let (d1, b1) = out[j].overflowing_sub(self.n[j]);
+                let (d2, b2) = d1.overflowing_sub(borrow);
+                out[j] = d2;
+                borrow = (b1 as u64) + (b2 as u64);
+            }
+        }
+        out
+    }
+
     fn to_mont(&self, a: &BigUint) -> Vec<u64> {
         let mut al = a.rem(&self.modulus).limbs;
         al.resize(self.n.len(), 0);
@@ -676,13 +820,17 @@ impl MontgomeryCtx {
             return BigUint::one().rem(&self.modulus);
         }
         let bm = self.to_mont(base);
-        // Precompute odd powers table: bm^1, bm^2, ..., bm^15
+        // Precompute powers table: bm^0 .. bm^15 (even entries squared).
         let mut table = Vec::with_capacity(16);
         let one_m = self.to_mont(&BigUint::one());
         table.push(one_m.clone());
         table.push(bm.clone());
         for i in 2..16 {
-            table.push(self.mont_mul(&table[i - 1], &bm));
+            if i % 2 == 0 {
+                table.push(self.mont_sqr(&table[i / 2]));
+            } else {
+                table.push(self.mont_mul(&table[i - 1], &bm));
+            }
         }
         let bits = exp.bit_length();
         let mut acc = one_m;
@@ -692,7 +840,7 @@ impl MontgomeryCtx {
             let take = (i + 1).min(4) as usize;
             let mut window = 0usize;
             for _ in 0..take {
-                acc = self.mont_mul(&acc, &acc);
+                acc = self.mont_sqr(&acc);
                 window = (window << 1) | (exp.bit(i as usize) as usize);
                 i -= 1;
             }
@@ -899,6 +1047,63 @@ mod tests {
         assert!(!v.bit(2));
         assert!(v.bit(3));
         assert!(!v.bit(100));
+    }
+
+    #[test]
+    fn squaremod_matches_mulmod() {
+        let mut rng = DeterministicRng::seed(17);
+        for bits in [33usize, 64, 65, 127, 256, 1024] {
+            let m = BigUint::random_bits(bits, &mut rng).add_u64(1);
+            let a = BigUint::random_below(&m, &mut rng);
+            assert_eq!(a.squaremod(&m), a.mulmod(&a, &m), "bits={}", bits);
+        }
+    }
+
+    #[test]
+    fn mont_sqr_matches_mont_mul() {
+        let mut rng = DeterministicRng::seed(31);
+        for bits in [64usize, 65, 127, 192, 512, 1024, 2048] {
+            let mut m = BigUint::random_bits(bits, &mut rng);
+            if m.is_even() {
+                m = m.add_u64(1);
+            }
+            let ctx = MontgomeryCtx::new(&m);
+            for _ in 0..4 {
+                let a = BigUint::random_below(&m, &mut rng);
+                let am = ctx.to_mont(&a);
+                assert_eq!(
+                    ctx.mont_sqr(&am),
+                    ctx.mont_mul(&am, &am),
+                    "bits={}",
+                    bits
+                );
+            }
+            // Edge: a = 0 and a = m-1 (largest residue).
+            let zero = vec![0u64; ctx.n.len()];
+            assert_eq!(ctx.mont_sqr(&zero), ctx.mont_mul(&zero, &zero));
+            let top = ctx.to_mont(&m.sub_u64(1));
+            assert_eq!(ctx.mont_sqr(&top), ctx.mont_mul(&top, &top));
+        }
+    }
+
+    #[test]
+    fn native_ctx_matches_modpow() {
+        use crate::crypto::backend::ModContext;
+        let mut rng = DeterministicRng::seed(77);
+        // Odd (Montgomery) and even (plain) moduli through the same ctx API.
+        for want_even in [false, true] {
+            let mut m = BigUint::random_bits(160, &mut rng);
+            if m.is_even() != want_even {
+                m = m.add_u64(1);
+            }
+            let ctx = NativeCtx::new(&m);
+            for _ in 0..3 {
+                let b = BigUint::random_below(&m, &mut rng);
+                let e = BigUint::random_bits(40, &mut rng);
+                assert_eq!(ctx.modpow(&b, &e), b.modpow(&e, &m));
+            }
+            assert_eq!(ctx.modulus(), &m);
+        }
     }
 
     #[test]

@@ -1,0 +1,715 @@
+//! Vendored port of the `num-bigint-dig` arithmetic surface.
+//!
+//! The offline build has no crate cache, so the "fast build" backend the
+//! `bigint-dig` feature selects cannot pull the real crate. Instead this
+//! module carries a dependency-free port of the crate's arithmetic
+//! surface ([`RefUint`]): **u32** limbs (the crate's default digit on
+//! 32-bit targets), schoolbook multiplication, Knuth Algorithm-D
+//! division over u32 digits, and plain binary square-and-multiply
+//! modexp. Every algorithm choice is deliberately *different* from
+//! [`super::bigint::BigUint`] (u64 limbs, Karatsuba, Montgomery CIOS
+//! with a squaring specialization) so the differential suite in
+//! `tests/crypto_differential.rs` compares two genuinely independent
+//! code paths — a carry bug in one cannot mask the same bug in the
+//! other.
+//!
+//! The module is compiled unconditionally: differential tests need both
+//! backends in one binary. The `bigint-dig` cargo feature only switches
+//! [`crate::crypto::backend::DefaultBig`] so the whole protocol stack —
+//! RSA chains, §5.8 pre-negotiated keys, BON pairwise masks — runs on
+//! this backend instead. When a crate cache is available, the real
+//! `num-bigint-dig` can replace [`RefUint`] behind the same [`DigBig`]
+//! impl without touching any caller.
+
+use std::cmp::Ordering;
+
+/// Unsigned big integer, little-endian `u32` limbs, no leading zero
+/// limbs (zero is an empty limb vector). Mirrors the public surface of
+/// [`super::bigint::BigUint`] so `crate::crypto::Int` call sites compile
+/// against either type.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RefUint {
+    limbs: Vec<u32>,
+}
+
+impl RefUint {
+    pub fn zero() -> Self {
+        RefUint { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        RefUint { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        let mut b = RefUint { limbs: vec![v as u32, (v >> 32) as u32] };
+        b.trim();
+        b
+    }
+
+    /// From big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::with_capacity(bytes.len() / 4 + 1);
+        for chunk in bytes.rchunks(4) {
+            let mut limb = 0u32;
+            for &b in chunk {
+                limb = (limb << 8) | b as u32;
+            }
+            limbs.push(limb);
+        }
+        let mut v = RefUint { limbs };
+        v.trim();
+        v
+    }
+
+    /// To big-endian bytes (minimal length; zero → empty).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        if self.is_zero() {
+            return vec![];
+        }
+        let mut out = Vec::with_capacity(self.limbs.len() * 4);
+        for (i, &limb) in self.limbs.iter().enumerate().rev() {
+            let bytes = limb.to_be_bytes();
+            if i == self.limbs.len() - 1 {
+                let skip = bytes.iter().take_while(|&&b| b == 0).count();
+                out.extend_from_slice(&bytes[skip..]);
+            } else {
+                out.extend_from_slice(&bytes);
+            }
+        }
+        out
+    }
+
+    /// To big-endian bytes, left-padded with zeros to exactly `len`.
+    pub fn to_bytes_be_padded(&self, len: usize) -> Vec<u8> {
+        let raw = self.to_bytes_be();
+        assert!(raw.len() <= len, "value too large for padded length");
+        let mut out = vec![0u8; len - raw.len()];
+        out.extend_from_slice(&raw);
+        out
+    }
+
+    /// Parse a hex string (no 0x prefix).
+    pub fn from_hex(s: &str) -> anyhow::Result<Self> {
+        let s: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        let s = if s.len() % 2 == 1 { format!("0{}", s) } else { s };
+        Ok(Self::from_bytes_be(&crate::util::hex_decode(&s)?))
+    }
+
+    pub fn to_hex(&self) -> String {
+        if self.is_zero() {
+            return "0".to_string();
+        }
+        crate::util::hex_encode(&self.to_bytes_be())
+            .trim_start_matches('0')
+            .to_string()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn is_one(&self) -> bool {
+        self.limbs.len() == 1 && self.limbs[0] == 1
+    }
+
+    pub fn is_even(&self) -> bool {
+        self.limbs.first().map_or(true, |l| l & 1 == 0)
+    }
+
+    /// Number of significant bits.
+    pub fn bit_length(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 32 + (32 - top.leading_zeros() as usize),
+        }
+    }
+
+    /// Test bit `i` (0 = LSB).
+    pub fn bit(&self, i: usize) -> bool {
+        let limb = i / 32;
+        let off = i % 32;
+        self.limbs.get(limb).map_or(false, |l| (l >> off) & 1 == 1)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.limbs.len() {
+            0 => Some(0),
+            1 => Some(self.limbs[0] as u64),
+            2 => Some(self.limbs[0] as u64 | ((self.limbs[1] as u64) << 32)),
+            _ => None,
+        }
+    }
+
+    fn trim(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn cmp(&self, other: &RefUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                o => return o,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn lt(&self, other: &RefUint) -> bool {
+        self.cmp(other) == Ordering::Less
+    }
+
+    pub fn ge(&self, other: &RefUint) -> bool {
+        self.cmp(other) != Ordering::Less
+    }
+
+    pub fn add(&self, other: &RefUint) -> RefUint {
+        let (long, short) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let b = short.get(i).copied().unwrap_or(0);
+            let s = long[i] as u64 + b as u64 + carry;
+            out.push(s as u32);
+            carry = s >> 32;
+        }
+        if carry > 0 {
+            out.push(carry as u32);
+        }
+        let mut v = RefUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    pub fn add_u64(&self, v: u64) -> RefUint {
+        self.add(&RefUint::from_u64(v))
+    }
+
+    /// self - other; panics if other > self.
+    pub fn sub(&self, other: &RefUint) -> RefUint {
+        assert!(self.ge(other), "RefUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0i64;
+        for i in 0..self.limbs.len() {
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let d = self.limbs[i] as i64 - b as i64 + borrow;
+            out.push(d as u32);
+            borrow = d >> 32;
+        }
+        debug_assert_eq!(borrow, 0);
+        let mut v = RefUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    pub fn sub_u64(&self, v: u64) -> RefUint {
+        self.sub(&RefUint::from_u64(v))
+    }
+
+    /// Schoolbook multiplication only — no Karatsuba, on purpose (see the
+    /// module doc on algorithm diversity).
+    pub fn mul(&self, other: &RefUint) -> RefUint {
+        if self.is_zero() || other.is_zero() {
+            return RefUint::zero();
+        }
+        let mut out = vec![0u32; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            let mut carry = 0u64;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u64 + (a as u64) * (b as u64) + carry;
+                out[i + j] = cur as u32;
+                carry = cur >> 32;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u64 + carry;
+                out[k] = cur as u32;
+                carry = cur >> 32;
+                k += 1;
+            }
+        }
+        let mut v = RefUint { limbs: out };
+        v.trim();
+        v
+    }
+
+    /// Left shift by `bits`.
+    pub fn shl(&self, bits: usize) -> RefUint {
+        if self.is_zero() {
+            return RefUint::zero();
+        }
+        let limb_shift = bits / 32;
+        let bit_shift = bits % 32;
+        let mut limbs = vec![0u32; limb_shift];
+        if bit_shift == 0 {
+            limbs.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u32;
+            for &l in &self.limbs {
+                limbs.push((l << bit_shift) | carry);
+                carry = l >> (32 - bit_shift);
+            }
+            if carry > 0 {
+                limbs.push(carry);
+            }
+        }
+        let mut v = RefUint { limbs };
+        v.trim();
+        v
+    }
+
+    /// Right shift by `bits`.
+    pub fn shr(&self, bits: usize) -> RefUint {
+        let limb_shift = bits / 32;
+        if limb_shift >= self.limbs.len() {
+            return RefUint::zero();
+        }
+        let bit_shift = bits % 32;
+        let src = &self.limbs[limb_shift..];
+        let mut limbs = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            limbs.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let hi = src.get(i + 1).copied().unwrap_or(0);
+                limbs.push((src[i] >> bit_shift) | (hi << (32 - bit_shift)));
+            }
+        }
+        let mut v = RefUint { limbs };
+        v.trim();
+        v
+    }
+
+    /// Division with remainder — Knuth Algorithm D over u32 digits (the
+    /// native backend runs the same algorithm over u64 digits, so the two
+    /// exercise different normalization shifts and q̂-correction paths).
+    pub fn div_rem(&self, divisor: &RefUint) -> (RefUint, RefUint) {
+        assert!(!divisor.is_zero(), "division by zero");
+        if self.lt(divisor) {
+            return (RefUint::zero(), self.clone());
+        }
+        if divisor.limbs.len() == 1 {
+            let (q, r) = self.div_rem_u32(divisor.limbs[0]);
+            return (q, RefUint::from_u64(r as u64));
+        }
+        let shift = divisor.limbs.last().unwrap().leading_zeros() as usize;
+        let u = self.shl(shift);
+        let v = divisor.shl(shift);
+        let n = v.limbs.len();
+        let m = u.limbs.len() - n;
+        let mut un = u.limbs.clone();
+        un.push(0);
+        let vn = &v.limbs;
+        let mut q = vec![0u32; m + 1];
+
+        let vtop = vn[n - 1] as u64;
+        let vsecond = vn[n - 2] as u64;
+
+        for j in (0..=m).rev() {
+            // Estimate q̂ = (u[j+n]·B + u[j+n-1]) / v[n-1]
+            let num = ((un[j + n] as u64) << 32) | (un[j + n - 1] as u64);
+            let mut qhat = num / vtop;
+            let mut rhat = num % vtop;
+            while qhat >= (1u64 << 32)
+                || qhat * vsecond > ((rhat << 32) | (un[j + n - 2] as u64))
+            {
+                qhat -= 1;
+                rhat += vtop;
+                if rhat >= (1u64 << 32) {
+                    break;
+                }
+            }
+            // Multiply-subtract: u[j..j+n] -= q̂ * v
+            let mut borrow = 0i64;
+            let mut carry = 0u64;
+            for i in 0..n {
+                let p = qhat * (vn[i] as u64) + carry;
+                carry = p >> 32;
+                let sub = (un[j + i] as i64) - ((p as u32) as i64) + borrow;
+                un[j + i] = sub as u32;
+                borrow = sub >> 32;
+            }
+            let sub = (un[j + n] as i64) - (carry as i64) + borrow;
+            un[j + n] = sub as u32;
+            borrow = sub >> 32;
+
+            q[j] = qhat as u32;
+            if borrow < 0 {
+                // q̂ was one too large: add v back.
+                q[j] -= 1;
+                let mut carry = 0u64;
+                for i in 0..n {
+                    let s = (un[j + i] as u64) + (vn[i] as u64) + carry;
+                    un[j + i] = s as u32;
+                    carry = s >> 32;
+                }
+                un[j + n] = un[j + n].wrapping_add(carry as u32);
+            }
+        }
+
+        let mut quot = RefUint { limbs: q };
+        quot.trim();
+        let mut rem = RefUint { limbs: un[..n].to_vec() };
+        rem.trim();
+        (quot, rem.shr(shift))
+    }
+
+    fn div_rem_u32(&self, d: u32) -> (RefUint, u32) {
+        assert!(d != 0, "division by zero");
+        let mut out = vec![0u32; self.limbs.len()];
+        let mut rem = 0u64;
+        for i in (0..self.limbs.len()).rev() {
+            let cur = (rem << 32) | self.limbs[i] as u64;
+            out[i] = (cur / d as u64) as u32;
+            rem = cur % d as u64;
+        }
+        let mut q = RefUint { limbs: out };
+        q.trim();
+        (q, rem as u32)
+    }
+
+    pub fn div_rem_u64(&self, d: u64) -> (RefUint, u64) {
+        assert!(d != 0, "division by zero");
+        if d <= u32::MAX as u64 {
+            let (q, r) = self.div_rem_u32(d as u32);
+            return (q, r as u64);
+        }
+        let (q, r) = self.div_rem(&RefUint::from_u64(d));
+        (q, r.as_u64().expect("remainder below a u64 divisor fits u64"))
+    }
+
+    pub fn rem(&self, m: &RefUint) -> RefUint {
+        self.div_rem(m).1
+    }
+
+    /// (self + other) mod m — inputs must already be < m.
+    pub fn addmod(&self, other: &RefUint, m: &RefUint) -> RefUint {
+        let s = self.add(other);
+        if s.ge(m) {
+            s.sub(m)
+        } else {
+            s
+        }
+    }
+
+    /// (self - other) mod m — inputs must already be < m.
+    pub fn submod(&self, other: &RefUint, m: &RefUint) -> RefUint {
+        if self.ge(other) {
+            self.sub(other)
+        } else {
+            self.add(m).sub(other)
+        }
+    }
+
+    pub fn mulmod(&self, other: &RefUint, m: &RefUint) -> RefUint {
+        self.mul(other).rem(m)
+    }
+
+    /// Modular exponentiation: plain right-to-left binary
+    /// square-and-multiply, every modulus parity — no Montgomery, no
+    /// window (see the module doc on algorithm diversity).
+    pub fn modpow(&self, exp: &RefUint, modulus: &RefUint) -> RefUint {
+        assert!(!modulus.is_zero(), "modpow: zero modulus");
+        if modulus.is_one() {
+            return RefUint::zero();
+        }
+        let mut base = self.rem(modulus);
+        let mut result = RefUint::one();
+        for i in 0..exp.bit_length() {
+            if exp.bit(i) {
+                result = result.mulmod(&base, modulus);
+            }
+            base = base.mulmod(&base, modulus);
+        }
+        result
+    }
+
+    pub fn gcd(&self, other: &RefUint) -> RefUint {
+        let mut a = self.clone();
+        let mut b = other.clone();
+        while !b.is_zero() {
+            let r = a.rem(&b);
+            a = b;
+            b = r;
+        }
+        a
+    }
+
+    /// Modular inverse via extended Euclid. Returns None if gcd != 1.
+    pub fn modinv(&self, m: &RefUint) -> Option<RefUint> {
+        let mut r0 = m.clone();
+        let mut r1 = self.rem(m);
+        let mut t0: (bool, RefUint) = (false, RefUint::zero());
+        let mut t1: (bool, RefUint) = (false, RefUint::one());
+        while !r1.is_zero() {
+            let (q, r2) = r0.div_rem(&r1);
+            let qt = q.mul(&t1.1);
+            let t2 = signed_sub(t0.clone(), (t1.0, qt));
+            r0 = r1;
+            r1 = r2;
+            t0 = t1;
+            t1 = t2;
+        }
+        if !r0.is_one() {
+            return None;
+        }
+        let inv = if t0.0 {
+            m.sub(&t0.1.rem(m))
+        } else {
+            t0.1.rem(m)
+        };
+        Some(inv.rem(m))
+    }
+
+    /// Uniform random integer in [0, bound) using rejection sampling.
+    /// Byte-for-byte the same draw pattern as the native backend (see the
+    /// canonical-randomness note in `backend.rs`).
+    pub fn random_below(bound: &RefUint, rng: &mut dyn crate::crypto::rng::SecureRng) -> RefUint {
+        <DigBig as crate::crypto::backend::Big>::random_below(bound, rng)
+    }
+
+    /// Random integer with exactly `bits` bits (MSB set).
+    pub fn random_bits(bits: usize, rng: &mut dyn crate::crypto::rng::SecureRng) -> RefUint {
+        <DigBig as crate::crypto::backend::Big>::random_bits(bits, rng)
+    }
+}
+
+/// (sign, magnitude) subtraction: a - b.
+fn signed_sub(a: (bool, RefUint), b: (bool, RefUint)) -> (bool, RefUint) {
+    match (a.0, b.0) {
+        (false, true) => (false, a.1.add(&b.1)),
+        (true, false) => (true, a.1.add(&b.1)),
+        (false, false) => {
+            if a.1.ge(&b.1) {
+                (false, a.1.sub(&b.1))
+            } else {
+                (true, b.1.sub(&a.1))
+            }
+        }
+        (true, true) => {
+            if b.1.ge(&a.1) {
+                (false, b.1.sub(&a.1))
+            } else {
+                (true, a.1.sub(&b.1))
+            }
+        }
+    }
+}
+
+/// Per-modulus context for the reference backend. There is no Montgomery
+/// state to amortize — the context just pins the modulus so generic code
+/// that batches exponentiations through [`ModContext`] stays correct
+/// (and measurably slower, which is exactly what the per-backend bench
+/// rows in `BENCH_scale.json` exist to show).
+#[derive(Clone)]
+pub struct DigCtx {
+    modulus: RefUint,
+}
+
+impl crate::crypto::backend::ModContext<RefUint> for DigCtx {
+    fn modulus(&self) -> &RefUint {
+        &self.modulus
+    }
+
+    fn modpow(&self, base: &RefUint, exp: &RefUint) -> RefUint {
+        base.modpow(exp, &self.modulus)
+    }
+}
+
+/// The vendored reference backend (`num-bigint-dig` surface).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DigBig;
+
+impl crate::crypto::backend::Big for DigBig {
+    type Num = RefUint;
+    type Ctx = DigCtx;
+
+    const NAME: &'static str = "bigint-dig";
+
+    fn zero() -> RefUint {
+        RefUint::zero()
+    }
+    fn one() -> RefUint {
+        RefUint::one()
+    }
+    fn from_u64(v: u64) -> RefUint {
+        RefUint::from_u64(v)
+    }
+    fn as_u64(n: &RefUint) -> Option<u64> {
+        n.as_u64()
+    }
+    fn from_bytes_be(bytes: &[u8]) -> RefUint {
+        RefUint::from_bytes_be(bytes)
+    }
+    fn to_bytes_be(n: &RefUint) -> Vec<u8> {
+        n.to_bytes_be()
+    }
+    fn from_hex(s: &str) -> anyhow::Result<RefUint> {
+        RefUint::from_hex(s)
+    }
+    fn to_hex(n: &RefUint) -> String {
+        n.to_hex()
+    }
+    fn is_zero(n: &RefUint) -> bool {
+        n.is_zero()
+    }
+    fn is_one(n: &RefUint) -> bool {
+        n.is_one()
+    }
+    fn is_even(n: &RefUint) -> bool {
+        n.is_even()
+    }
+    fn bit_length(n: &RefUint) -> usize {
+        n.bit_length()
+    }
+    fn bit(n: &RefUint, i: usize) -> bool {
+        n.bit(i)
+    }
+    fn cmp(a: &RefUint, b: &RefUint) -> Ordering {
+        a.cmp(b)
+    }
+    fn add(a: &RefUint, b: &RefUint) -> RefUint {
+        a.add(b)
+    }
+    fn sub(a: &RefUint, b: &RefUint) -> RefUint {
+        a.sub(b)
+    }
+    fn mul(a: &RefUint, b: &RefUint) -> RefUint {
+        a.mul(b)
+    }
+    fn div_rem(a: &RefUint, b: &RefUint) -> (RefUint, RefUint) {
+        a.div_rem(b)
+    }
+    fn div_rem_u64(a: &RefUint, d: u64) -> (RefUint, u64) {
+        a.div_rem_u64(d)
+    }
+    fn modinv(a: &RefUint, m: &RefUint) -> Option<RefUint> {
+        a.modinv(m)
+    }
+    fn gcd(a: &RefUint, b: &RefUint) -> RefUint {
+        a.gcd(b)
+    }
+    fn modpow(base: &RefUint, exp: &RefUint, m: &RefUint) -> RefUint {
+        base.modpow(exp, m)
+    }
+    fn ctx(modulus: &RefUint) -> DigCtx {
+        assert!(!modulus.is_zero(), "zero modulus");
+        DigCtx { modulus: modulus.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crypto::bigint::BigUint;
+    use crate::crypto::rng::DeterministicRng;
+
+    fn n(v: u64) -> RefUint {
+        RefUint::from_u64(v)
+    }
+
+    /// Native value with the same big-endian bytes.
+    fn to_native(v: &RefUint) -> BigUint {
+        BigUint::from_bytes_be(&v.to_bytes_be())
+    }
+
+    #[test]
+    fn bytes_and_hex_roundtrip() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![1],
+            vec![0xff; 4],
+            vec![1, 0, 0, 0, 0], // 2^32
+            (1..=17).collect(),
+        ];
+        for c in cases {
+            let v = RefUint::from_bytes_be(&c);
+            let stripped: Vec<u8> = c.iter().copied().skip_while(|&b| b == 0).collect();
+            assert_eq!(v.to_bytes_be(), stripped);
+            assert_eq!(RefUint::from_hex(&v.to_hex()).unwrap(), v);
+        }
+        assert_eq!(n(0xdead_beef_0011_2233).to_hex(), "deadbeef00112233");
+    }
+
+    #[test]
+    fn u64_boundaries() {
+        for v in [0u64, 1, u32::MAX as u64, u32::MAX as u64 + 1, u64::MAX] {
+            assert_eq!(n(v).as_u64(), Some(v));
+        }
+        assert_eq!(n(u64::MAX).add_u64(1).as_u64(), None);
+        assert_eq!(n(u64::MAX).bit_length(), 64);
+        assert_eq!(n(u32::MAX as u64 + 1).bit_length(), 33);
+    }
+
+    #[test]
+    fn arithmetic_matches_native() {
+        let mut rng = DeterministicRng::seed(123);
+        for bits in [16usize, 31, 32, 33, 64, 65, 257, 1024] {
+            let a = RefUint::random_bits(bits, &mut rng);
+            let b = RefUint::random_bits(bits / 2 + 1, &mut rng);
+            let (na, nb) = (to_native(&a), to_native(&b));
+            assert_eq!(a.add(&b).to_bytes_be(), na.add(&nb).to_bytes_be());
+            assert_eq!(a.mul(&b).to_bytes_be(), na.mul(&nb).to_bytes_be());
+            let (q, r) = a.mul(&b).add(&a).div_rem(&b);
+            let (nq, nr) = na.mul(&nb).add(&na).div_rem(&nb);
+            assert_eq!(q.to_bytes_be(), nq.to_bytes_be(), "bits={}", bits);
+            assert_eq!(r.to_bytes_be(), nr.to_bytes_be(), "bits={}", bits);
+        }
+    }
+
+    #[test]
+    fn known_division() {
+        // 2^64 / (2^32 + 1) = 2^32 - 1 rem 1
+        let a = RefUint::one().shl(64);
+        let b = n((1u64 << 32) + 1);
+        let (q, r) = a.div_rem(&b);
+        assert_eq!(q, n(u32::MAX as u64));
+        assert_eq!(r, n(1));
+        // u64-divisor path above u32::MAX
+        let (q2, r2) = a.div_rem_u64((1u64 << 32) + 1);
+        assert_eq!(q2, n(u32::MAX as u64));
+        assert_eq!(r2, 1);
+    }
+
+    #[test]
+    fn modpow_small_and_fermat() {
+        assert_eq!(n(3).modpow(&n(4), &n(7)), n(4));
+        assert_eq!(n(5).modpow(&n(0), &n(11)), n(1));
+        assert_eq!(n(3).modpow(&n(5), &n(100)), n(43)); // even modulus
+        let p = n(1_000_000_007);
+        for a in [2u64, 3, 12345] {
+            assert_eq!(n(a).modpow(&p.sub_u64(1), &p), n(1));
+        }
+    }
+
+    #[test]
+    fn modinv_and_gcd() {
+        let m = n(1_000_000_007);
+        for a in [2u64, 3, 999, 123456] {
+            let inv = n(a).modinv(&m).unwrap();
+            assert_eq!(n(a).mulmod(&inv, &m), n(1));
+        }
+        assert!(n(6).modinv(&n(9)).is_none());
+        assert_eq!(n(48).gcd(&n(18)), n(6));
+    }
+
+    #[test]
+    fn shifts_roundtrip() {
+        let a = RefUint::from_hex("123456789abcdef0123456789abcdef").unwrap();
+        assert_eq!(a.shl(32).shr(32), a);
+        assert_eq!(a.shl(3).shr(3), a);
+        assert_eq!(a.shl(63).shr(63), a);
+    }
+}

@@ -4,15 +4,21 @@
 //! client advertise two DH public keys (c_u^PK for pairwise channel
 //! encryption, s_u^PK for pairwise mask agreement). The shared secret is
 //! hashed to a 32-byte seed used as a PRG seed / symmetric key.
+//!
+//! Generic over the [`Big`] backend. A node agreeing with many peers
+//! shares one exponentiation context for the group modulus
+//! ([`DhGroup::ctx`] + [`DhKeyPair::agree_with`]): on the native backend
+//! that amortizes the Montgomery setup across all n-1 pairwise
+//! agreements of BON round 0.
 
-use once_cell::sync::Lazy;
 use sha2::{Digest, Sha256};
 
-use super::bigint::BigUint;
+use super::backend::{Big, DefaultBig, ModContext};
 use super::rng::SecureRng;
 
-/// RFC 3526 group 14 prime (2048-bit MODP), generator g = 2.
-const MODP_2048_HEX: &str = concat!(
+/// RFC 3526 group 14 prime (2048-bit MODP), generator g = 2. Public so
+/// the differential/KAT suite can pin it as a fixture.
+pub const MODP_2048_HEX: &str = concat!(
     "FFFFFFFFFFFFFFFFC90FDAA22168C234C4C6628B80DC1CD1",
     "29024E088A67CC74020BBEA63B139B22514A08798E3404DD",
     "EF9519B3CD3A431B302B0A6DF25F14374FE1356D6D51C245",
@@ -26,52 +32,67 @@ const MODP_2048_HEX: &str = concat!(
     "15728E5A8AACAA68FFFFFFFFFFFFFFFF"
 );
 
-static MODP_2048: Lazy<BigUint> =
-    Lazy::new(|| BigUint::from_hex(MODP_2048_HEX).expect("constant prime parses"));
-
 /// A DH group (prime modulus + generator). `standard()` is the production
 /// group; `small_for_tests` trades security for speed in unit tests.
 #[derive(Debug, Clone)]
-pub struct DhGroup {
-    pub p: BigUint,
-    pub g: BigUint,
+pub struct DhGroup<B: Big = DefaultBig> {
+    pub p: B::Num,
+    pub g: B::Num,
     /// Private exponent size in bits (256 is plenty for a 2048-bit group).
     pub exp_bits: usize,
 }
 
-impl DhGroup {
+impl<B: Big> DhGroup<B> {
     pub fn standard() -> Self {
-        DhGroup { p: MODP_2048.clone(), g: BigUint::from_u64(2), exp_bits: 256 }
+        let p = B::from_hex(MODP_2048_HEX).expect("constant prime parses");
+        DhGroup { p, g: B::from_u64(2), exp_bits: 256 }
     }
 
     /// A 256-bit random group for fast tests (NOT secure).
     pub fn small_for_tests(rng: &mut dyn SecureRng) -> Self {
-        let p = super::prime::gen_prime_3mod4(256, rng);
-        DhGroup { p, g: BigUint::from_u64(2), exp_bits: 128 }
+        let p = super::prime::gen_prime_3mod4::<B>(256, rng);
+        DhGroup { p, g: B::from_u64(2), exp_bits: 128 }
+    }
+
+    /// Reusable exponentiation context for the group modulus — build once
+    /// per node, share across every keygen/agreement in the group.
+    pub fn ctx(&self) -> B::Ctx {
+        B::ctx(&self.p)
     }
 }
 
 /// A DH keypair within a group.
 #[derive(Debug, Clone)]
-pub struct DhKeyPair {
-    pub secret: BigUint,
-    pub public: BigUint,
+pub struct DhKeyPair<B: Big = DefaultBig> {
+    pub secret: B::Num,
+    pub public: B::Num,
 }
 
-impl DhKeyPair {
-    pub fn generate(group: &DhGroup, rng: &mut dyn SecureRng) -> Self {
-        let secret = BigUint::random_bits(group.exp_bits, rng);
-        let public = group.g.modpow(&secret, &group.p);
+impl<B: Big> DhKeyPair<B> {
+    pub fn generate(group: &DhGroup<B>, rng: &mut dyn SecureRng) -> Self {
+        Self::generate_with(&group.ctx(), group, rng)
+    }
+
+    /// Like [`Self::generate`] but reusing a prebuilt group context.
+    pub fn generate_with(ctx: &B::Ctx, group: &DhGroup<B>, rng: &mut dyn SecureRng) -> Self {
+        let secret = B::random_bits(group.exp_bits, rng);
+        let public = ctx.modpow(&group.g, &secret);
         DhKeyPair { secret, public }
     }
 
     /// Compute the shared secret with a peer's public value and hash it to
     /// a 32-byte seed.
-    pub fn agree(&self, group: &DhGroup, peer_public: &BigUint) -> [u8; 32] {
-        let shared = peer_public.modpow(&self.secret, &group.p);
+    pub fn agree(&self, group: &DhGroup<B>, peer_public: &B::Num) -> [u8; 32] {
+        self.agree_with(&group.ctx(), peer_public)
+    }
+
+    /// Like [`Self::agree`] but reusing a prebuilt group context — the
+    /// BON round-0 path calls this once per peer with one shared context.
+    pub fn agree_with(&self, ctx: &B::Ctx, peer_public: &B::Num) -> [u8; 32] {
+        let shared = ctx.modpow(peer_public, &self.secret);
         let mut h = Sha256::new();
         h.update(b"safe-dh-kdf");
-        h.update(shared.to_bytes_be());
+        h.update(B::to_bytes_be(&shared));
         h.finalize().into()
     }
 }
@@ -79,12 +100,14 @@ impl DhKeyPair {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crypto::backend::NativeBig;
+    use crate::crypto::bigint_dig::DigBig;
     use crate::crypto::rng::DeterministicRng;
 
     #[test]
     fn agreement_is_symmetric_small_group() {
         let mut rng = DeterministicRng::seed(1);
-        let group = DhGroup::small_for_tests(&mut rng);
+        let group = DhGroup::<DefaultBig>::small_for_tests(&mut rng);
         let a = DhKeyPair::generate(&group, &mut rng);
         let b = DhKeyPair::generate(&group, &mut rng);
         assert_eq!(a.agree(&group, &b.public), b.agree(&group, &a.public));
@@ -93,7 +116,7 @@ mod tests {
     #[test]
     fn different_peers_different_secrets() {
         let mut rng = DeterministicRng::seed(2);
-        let group = DhGroup::small_for_tests(&mut rng);
+        let group = DhGroup::<DefaultBig>::small_for_tests(&mut rng);
         let a = DhKeyPair::generate(&group, &mut rng);
         let b = DhKeyPair::generate(&group, &mut rng);
         let c = DhKeyPair::generate(&group, &mut rng);
@@ -103,10 +126,37 @@ mod tests {
     #[test]
     fn standard_group_loads_and_agrees() {
         let mut rng = DeterministicRng::seed(3);
-        let group = DhGroup::standard();
-        assert_eq!(group.p.bit_length(), 2048);
+        let group = DhGroup::<DefaultBig>::standard();
+        assert_eq!(DefaultBig::bit_length(&group.p), 2048);
         let a = DhKeyPair::generate(&group, &mut rng);
         let b = DhKeyPair::generate(&group, &mut rng);
         assert_eq!(a.agree(&group, &b.public), b.agree(&group, &a.public));
+    }
+
+    #[test]
+    fn shared_ctx_matches_per_call_ctx() {
+        let mut rng = DeterministicRng::seed(4);
+        let group = DhGroup::<DefaultBig>::small_for_tests(&mut rng);
+        let ctx = group.ctx();
+        let a = DhKeyPair::generate_with(&ctx, &group, &mut rng);
+        let b = DhKeyPair::generate_with(&ctx, &group, &mut rng);
+        assert_eq!(a.agree_with(&ctx, &b.public), a.agree(&group, &b.public));
+    }
+
+    #[test]
+    fn backends_agree_on_standard_group() {
+        // Same seed ⇒ same secret bytes ⇒ same public value and shared
+        // seed on both backends over the RFC 3526 fixture.
+        let ga = DhGroup::<NativeBig>::standard();
+        let gb = DhGroup::<DigBig>::standard();
+        let a1 = DhKeyPair::generate(&ga, &mut DeterministicRng::seed(5));
+        let b1 = DhKeyPair::generate(&gb, &mut DeterministicRng::seed(5));
+        assert_eq!(
+            NativeBig::to_bytes_be(&a1.public),
+            DigBig::to_bytes_be(&b1.public)
+        );
+        let a2 = DhKeyPair::generate(&ga, &mut DeterministicRng::seed(6));
+        let b2 = DhKeyPair::generate(&gb, &mut DeterministicRng::seed(6));
+        assert_eq!(a1.agree(&ga, &a2.public), b1.agree(&gb, &b2.public));
     }
 }

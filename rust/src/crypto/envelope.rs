@@ -22,7 +22,7 @@ use anyhow::{bail, Context, Result};
 
 use super::aescipher::SymmetricKey;
 use super::rng::SecureRng;
-use super::rsa::{RsaPrivateKey, RsaPublicKey};
+use super::rsa::{RsaDecryptCtx, RsaPrivateKey, RsaPublicKey};
 use crate::blob::Blob;
 
 // Deflate helpers live in `util` (shared with the codec-layer
@@ -161,6 +161,29 @@ impl Envelope {
             CipherMode::PreNegotiated => {
                 let key = preneg.context("PreNegotiated envelope requires the shared key")?;
                 self.open_symmetric(key)
+            }
+        }
+    }
+
+    /// Like [`Envelope::open`] but with a prebuilt [`RsaDecryptCtx`], so a
+    /// node opening a stream of envelopes (one per round, per chain hop)
+    /// pays the CRT Montgomery setup once instead of per envelope.
+    pub fn open_with(
+        &self,
+        dec: Option<&RsaDecryptCtx>,
+        preneg: Option<&SymmetricKey>,
+    ) -> Result<Vec<f64>> {
+        match self.mode {
+            CipherMode::None | CipherMode::PreNegotiated => self.open(None, preneg),
+            CipherMode::RsaOnly => {
+                let dec = dec.context("RsaOnly envelope requires our private key")?;
+                bytes_to_vec(&dec.decrypt_blob(&self.body)?)
+            }
+            CipherMode::Hybrid => {
+                let dec = dec.context("Hybrid envelope requires our private key")?;
+                let master = dec.decrypt_block(&self.sealed_key)?;
+                let key = SymmetricKey::from_bytes(&master)?;
+                self.open_symmetric(&key)
             }
         }
     }
@@ -344,6 +367,24 @@ mod tests {
             Envelope::seal(&v, CipherMode::PreNegotiated, None, Some(&key), true, &mut rng)
                 .unwrap();
         assert_eq!(env.open(None, Some(&key)).unwrap(), v);
+    }
+
+    #[test]
+    fn open_with_cached_ctx_matches_open() {
+        let mut rng = DeterministicRng::seed(14);
+        let kp = RsaKeyPair::generate(512, &mut rng);
+        let dec = kp.private.decrypt_ctx();
+        let v = vecf(50);
+        for (mode, compress) in
+            [(CipherMode::RsaOnly, false), (CipherMode::Hybrid, true), (CipherMode::None, false)]
+        {
+            let env = Envelope::seal(&v, mode, Some(&kp.public), None, compress, &mut rng).unwrap();
+            assert_eq!(
+                env.open_with(Some(&dec), None).unwrap(),
+                env.open(Some(&kp.private), None).unwrap(),
+                "{mode:?}"
+            );
+        }
     }
 
     #[test]

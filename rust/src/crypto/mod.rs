@@ -4,7 +4,12 @@
 //! primitives present in the offline crate cache) because the sandbox has
 //! no `rsa`, `num-bigint`, `ring`, or `openssl` equivalents:
 //!
-//! * [`bigint`] — arbitrary-precision integers (Montgomery modpow).
+//! * [`backend`] — the pluggable [`backend::Big`] bignum-backend trait;
+//!   `--features bigint-dig` swaps the default backend stack-wide.
+//! * [`bigint`] — arbitrary-precision integers (Montgomery modpow), the
+//!   zero-dependency default backend.
+//! * [`bigint_dig`] — vendored `num-bigint-dig` surface (u32 limbs,
+//!   schoolbook/binary algorithms), the differential reference backend.
 //! * [`prime`] — Miller–Rabin and prime generation.
 //! * [`rsa`] — RSA keygen / PKCS#1 v1.5 block + blob encryption (paper §4).
 //! * [`aescipher`] — AES-256-CTR + HMAC-SHA256 envelope (paper §5.7).
@@ -15,7 +20,9 @@
 //!   PRG mask expansion BON uses.
 
 pub mod aescipher;
+pub mod backend;
 pub mod bigint;
+pub mod bigint_dig;
 pub mod dh;
 pub mod envelope;
 pub mod prime;
@@ -24,7 +31,8 @@ pub mod rsa;
 pub mod shamir;
 
 pub use aescipher::SymmetricKey;
+pub use backend::{Big, DefaultBig, Int, ModContext, NativeBig};
 pub use bigint::BigUint;
 pub use envelope::{CipherMode, Envelope};
 pub use rng::{DeterministicRng, SecureRng, SystemRng};
-pub use rsa::{RsaKeyPair, RsaPrivateKey, RsaPublicKey};
+pub use rsa::{RsaDecryptCtx, RsaEncryptCtx, RsaKeyPair, RsaPrivateKey, RsaPublicKey};

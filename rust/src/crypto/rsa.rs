@@ -7,44 +7,107 @@
 //!  * key generation (two random primes, e = 65537, CRT parameters),
 //!  * PKCS#1 v1.5 type-2 style padding for encryption blocks,
 //!  * CRT-accelerated decryption (~4× faster than plain d exponentiation),
+//!  * PKCS#1 v1.5 type-1 digest signatures (key-exchange authenticity),
 //!  * chunked blob encryption so the RSA-only mode can carry feature
 //!    vectors larger than one block (what SAF→SAFE §5.7 improves on).
+//!
+//! Everything is generic over [`Big`], so the whole RSA layer runs on
+//! whichever bignum backend the build selects (the differential suite
+//! pins the backends byte-identical). The owned [`RsaEncryptCtx`] /
+//! [`RsaDecryptCtx`] reify the per-modulus exponentiation state: the
+//! §5.8 paths decrypt one sealed key *per peer* with the *same* private
+//! key, so hoisting one context out of the loop amortizes the Montgomery
+//! setup across every link of a node.
 
-use super::bigint::BigUint;
+use super::backend::{Big, DefaultBig, ModContext};
 use super::rng::SecureRng;
 use anyhow::{bail, Context, Result};
 
 /// RSA public key (n, e).
 #[derive(Debug, Clone, PartialEq)]
-pub struct RsaPublicKey {
-    pub n: BigUint,
-    pub e: BigUint,
+pub struct RsaPublicKey<B: Big = DefaultBig> {
+    pub n: B::Num,
+    pub e: B::Num,
 }
 
 /// RSA private key with CRT parameters.
 #[derive(Debug, Clone)]
-pub struct RsaPrivateKey {
-    pub n: BigUint,
-    pub e: BigUint,
-    pub d: BigUint,
-    pub p: BigUint,
-    pub q: BigUint,
-    pub dp: BigUint,   // d mod (p-1)
-    pub dq: BigUint,   // d mod (q-1)
-    pub qinv: BigUint, // q^{-1} mod p
+pub struct RsaPrivateKey<B: Big = DefaultBig> {
+    pub n: B::Num,
+    pub e: B::Num,
+    pub d: B::Num,
+    pub p: B::Num,
+    pub q: B::Num,
+    pub dp: B::Num,   // d mod (p-1)
+    pub dq: B::Num,   // d mod (q-1)
+    pub qinv: B::Num, // q^{-1} mod p
 }
 
 /// A full keypair.
 #[derive(Debug, Clone)]
-pub struct RsaKeyPair {
-    pub public: RsaPublicKey,
-    pub private: RsaPrivateKey,
+pub struct RsaKeyPair<B: Big = DefaultBig> {
+    pub public: RsaPublicKey<B>,
+    pub private: RsaPrivateKey<B>,
 }
 
-impl RsaPublicKey {
+/// PKCS#1 v1.5 type-2 padding: EM = 00 02 PS(nonzero random) 00 M.
+fn pad_encrypt_block(k: usize, msg: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
+    if msg.len() + 11 > k {
+        bail!("message too long for RSA block: {} > {}", msg.len(), k - 11);
+    }
+    let ps_len = k - 3 - msg.len();
+    let mut em = Vec::with_capacity(k);
+    em.push(0x00);
+    em.push(0x02);
+    for _ in 0..ps_len {
+        // non-zero random byte
+        loop {
+            let mut b = [0u8; 1];
+            rng.fill_bytes(&mut b);
+            if b[0] != 0 {
+                em.push(b[0]);
+                break;
+            }
+        }
+    }
+    em.push(0x00);
+    em.extend_from_slice(msg);
+    Ok(em)
+}
+
+/// Strip PKCS#1 v1.5 type-2 padding from a decrypted block.
+fn unpad_encrypt_block(em: &[u8]) -> Result<Vec<u8>> {
+    if em[0] != 0x00 || em[1] != 0x02 {
+        bail!("invalid PKCS#1 padding header");
+    }
+    let sep = em[2..]
+        .iter()
+        .position(|&b| b == 0)
+        .context("missing PKCS#1 separator")?;
+    if sep < 8 {
+        bail!("PKCS#1 padding string too short");
+    }
+    Ok(em[2 + sep + 1..].to_vec())
+}
+
+/// PKCS#1 v1.5 type-1 padding (signatures): EM = 00 01 FF…FF 00 D.
+fn pad_sign_block(k: usize, digest: &[u8]) -> Result<Vec<u8>> {
+    if digest.len() + 11 > k {
+        bail!("digest too long for RSA block: {} > {}", digest.len(), k - 11);
+    }
+    let mut em = Vec::with_capacity(k);
+    em.push(0x00);
+    em.push(0x01);
+    em.resize(k - digest.len() - 1, 0xff);
+    em.push(0x00);
+    em.extend_from_slice(digest);
+    Ok(em)
+}
+
+impl<B: Big> RsaPublicKey<B> {
     /// Modulus size in bytes.
     pub fn modulus_len(&self) -> usize {
-        (self.n.bit_length() + 7) / 8
+        (B::bit_length(&self.n) + 7) / 8
     }
 
     /// Max plaintext bytes per block under PKCS#1 v1.5 (k - 11).
@@ -52,102 +115,180 @@ impl RsaPublicKey {
         self.modulus_len().saturating_sub(11)
     }
 
+    /// Build a reusable encryption context (one Montgomery setup for n,
+    /// shared by every block sealed under this key).
+    pub fn encrypt_ctx(&self) -> RsaEncryptCtx<B> {
+        RsaEncryptCtx { key: self.clone(), n_ctx: B::ctx(&self.n) }
+    }
+
     /// Encrypt one block (PKCS#1 v1.5 type 2 padding).
     pub fn encrypt_block(&self, msg: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
-        let k = self.modulus_len();
-        if msg.len() > k - 11 {
-            bail!("message too long for RSA block: {} > {}", msg.len(), k - 11);
-        }
-        // EM = 0x00 || 0x02 || PS (nonzero random) || 0x00 || M
-        let ps_len = k - 3 - msg.len();
-        let mut em = Vec::with_capacity(k);
-        em.push(0x00);
-        em.push(0x02);
-        for _ in 0..ps_len {
-            // non-zero random byte
-            loop {
-                let mut b = [0u8; 1];
-                rng.fill_bytes(&mut b);
-                if b[0] != 0 {
-                    em.push(b[0]);
-                    break;
-                }
-            }
-        }
-        em.push(0x00);
-        em.extend_from_slice(msg);
-        let m = BigUint::from_bytes_be(&em);
-        let c = m.modpow(&self.e, &self.n);
-        Ok(c.to_bytes_be_padded(k))
+        self.encrypt_ctx().encrypt_block(msg, rng)
     }
 
     /// Encrypt an arbitrary-length blob by chunking into blocks.
     /// This is the "RSA-only" mode whose cost motivates §5.7.
     pub fn encrypt_blob(&self, data: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
-        let chunk = self.max_block_payload();
+        self.encrypt_ctx().encrypt_blob(data, rng)
+    }
+
+    /// Verify a PKCS#1 v1.5 type-1 signature over `digest`.
+    pub fn verify_digest(&self, digest: &[u8], sig: &[u8]) -> bool {
+        let k = self.modulus_len();
+        if sig.len() != k {
+            return false;
+        }
+        let s = B::from_bytes_be(sig);
+        if B::cmp(&s, &self.n) != std::cmp::Ordering::Less {
+            return false;
+        }
+        let em = B::to_bytes_be_padded(&B::modpow(&s, &self.e, &self.n), k);
+        match pad_sign_block(k, digest) {
+            Ok(expect) => em == expect,
+            Err(_) => false,
+        }
+    }
+
+    /// Serialize as JSON-friendly hex.
+    pub fn to_json(&self) -> crate::json::Value {
+        crate::json::Value::object(vec![
+            ("n", crate::json::Value::from(B::to_hex(&self.n))),
+            ("e", crate::json::Value::from(B::to_hex(&self.e))),
+        ])
+    }
+
+    pub fn from_json(v: &crate::json::Value) -> Result<Self> {
+        let n = B::from_hex(v.str_of("n").context("missing n")?)?;
+        let e = B::from_hex(v.str_of("e").context("missing e")?)?;
+        Ok(RsaPublicKey { n, e })
+    }
+}
+
+/// Owned, cloneable encryption context: the public key plus one
+/// prebuilt exponentiation context for n.
+#[derive(Clone)]
+pub struct RsaEncryptCtx<B: Big = DefaultBig> {
+    key: RsaPublicKey<B>,
+    n_ctx: B::Ctx,
+}
+
+impl<B: Big> RsaEncryptCtx<B> {
+    pub fn public_key(&self) -> &RsaPublicKey<B> {
+        &self.key
+    }
+
+    /// Encrypt one block reusing the prebuilt modulus context.
+    pub fn encrypt_block(&self, msg: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
+        let k = self.key.modulus_len();
+        let em = pad_encrypt_block(k, msg, rng)?;
+        let m = B::from_bytes_be(&em);
+        let c = self.n_ctx.modpow(&m, &self.key.e);
+        Ok(B::to_bytes_be_padded(&c, k))
+    }
+
+    /// Encrypt a blob; all chunks share this context's Montgomery state.
+    pub fn encrypt_blob(&self, data: &[u8], rng: &mut dyn SecureRng) -> Result<Vec<u8>> {
+        let chunk = self.key.max_block_payload();
         let mut out = Vec::new();
         for part in data.chunks(chunk.max(1)) {
             out.extend_from_slice(&self.encrypt_block(part, rng)?);
         }
         Ok(out)
     }
-
-    /// Serialize as JSON-friendly hex.
-    pub fn to_json(&self) -> crate::json::Value {
-        crate::json::Value::object(vec![
-            ("n", crate::json::Value::from(self.n.to_hex())),
-            ("e", crate::json::Value::from(self.e.to_hex())),
-        ])
-    }
-
-    pub fn from_json(v: &crate::json::Value) -> Result<Self> {
-        let n = BigUint::from_hex(v.str_of("n").context("missing n")?)?;
-        let e = BigUint::from_hex(v.str_of("e").context("missing e")?)?;
-        Ok(RsaPublicKey { n, e })
-    }
 }
 
-impl RsaPrivateKey {
+impl<B: Big> RsaPrivateKey<B> {
     pub fn modulus_len(&self) -> usize {
-        (self.n.bit_length() + 7) / 8
+        (B::bit_length(&self.n) + 7) / 8
+    }
+
+    /// Build a reusable decryption context: Montgomery state for p and q,
+    /// shared by every block this key opens. The §5.8 pull loops (round-0
+    /// setup, re-key) hoist one of these out of their per-peer loops.
+    pub fn decrypt_ctx(&self) -> RsaDecryptCtx<B> {
+        RsaDecryptCtx {
+            n: self.n.clone(),
+            p: self.p.clone(),
+            q: self.q.clone(),
+            dp: self.dp.clone(),
+            dq: self.dq.clone(),
+            qinv: self.qinv.clone(),
+            p_ctx: B::ctx(&self.p),
+            q_ctx: B::ctx(&self.q),
+        }
     }
 
     /// RSA-CRT exponentiation: m = c^d mod n via the two half-size moduli.
-    fn decrypt_raw(&self, c: &BigUint) -> BigUint {
-        let m1 = c.rem(&self.p).modpow(&self.dp, &self.p);
-        let m2 = c.rem(&self.q).modpow(&self.dq, &self.q);
-        // h = qinv * (m1 - m2) mod p
-        let diff = m1.submod(&m2.rem(&self.p), &self.p);
-        let h = self.qinv.mulmod(&diff, &self.p);
-        m2.add(&h.mul(&self.q))
+    fn decrypt_raw(&self, c: &B::Num) -> B::Num {
+        self.decrypt_ctx().decrypt_raw(c)
     }
 
     /// Decrypt one PKCS#1 v1.5 block.
+    pub fn decrypt_block(&self, block: &[u8]) -> Result<Vec<u8>> {
+        self.decrypt_ctx().decrypt_block(block)
+    }
+
+    /// Decrypt a chunked blob produced by [`RsaPublicKey::encrypt_blob`].
+    /// One CRT context is shared across all chunks.
+    pub fn decrypt_blob(&self, data: &[u8]) -> Result<Vec<u8>> {
+        self.decrypt_ctx().decrypt_blob(data)
+    }
+
+    /// Sign a digest (PKCS#1 v1.5 type-1) with the CRT private key.
+    pub fn sign_digest(&self, digest: &[u8]) -> Result<Vec<u8>> {
+        let k = self.modulus_len();
+        let em = pad_sign_block(k, digest)?;
+        let m = B::from_bytes_be(&em);
+        let s = self.decrypt_raw(&m);
+        Ok(B::to_bytes_be_padded(&s, k))
+    }
+}
+
+/// Owned, cloneable CRT decryption context. Storable (e.g. in a
+/// `OnceCell` inside a learner context) because it borrows nothing.
+#[derive(Clone)]
+pub struct RsaDecryptCtx<B: Big = DefaultBig> {
+    n: B::Num,
+    p: B::Num,
+    q: B::Num,
+    dp: B::Num,
+    dq: B::Num,
+    qinv: B::Num,
+    p_ctx: B::Ctx,
+    q_ctx: B::Ctx,
+}
+
+impl<B: Big> RsaDecryptCtx<B> {
+    pub fn modulus_len(&self) -> usize {
+        (B::bit_length(&self.n) + 7) / 8
+    }
+
+    /// CRT: m1 = c^dp mod p, m2 = c^dq mod q, recombine via qinv.
+    fn decrypt_raw(&self, c: &B::Num) -> B::Num {
+        let m1 = self.p_ctx.modpow(&B::rem(c, &self.p), &self.dp);
+        let m2 = self.q_ctx.modpow(&B::rem(c, &self.q), &self.dq);
+        // h = qinv * (m1 - m2) mod p
+        let diff = B::submod(&m1, &B::rem(&m2, &self.p), &self.p);
+        let h = B::mulmod(&self.qinv, &diff, &self.p);
+        B::add(&m2, &B::mul(&h, &self.q))
+    }
+
+    /// Decrypt one PKCS#1 v1.5 block reusing the CRT contexts.
     pub fn decrypt_block(&self, block: &[u8]) -> Result<Vec<u8>> {
         let k = self.modulus_len();
         if block.len() != k {
             bail!("ciphertext block length {} != modulus length {}", block.len(), k);
         }
-        let c = BigUint::from_bytes_be(block);
-        if c.ge(&self.n) {
+        let c = B::from_bytes_be(block);
+        if B::cmp(&c, &self.n) != std::cmp::Ordering::Less {
             bail!("ciphertext out of range");
         }
         let m = self.decrypt_raw(&c);
-        let em = m.to_bytes_be_padded(k);
-        if em[0] != 0x00 || em[1] != 0x02 {
-            bail!("invalid PKCS#1 padding header");
-        }
-        let sep = em[2..]
-            .iter()
-            .position(|&b| b == 0)
-            .context("missing PKCS#1 separator")?;
-        if sep < 8 {
-            bail!("PKCS#1 padding string too short");
-        }
-        Ok(em[2 + sep + 1..].to_vec())
+        let em = B::to_bytes_be_padded(&m, k);
+        unpad_encrypt_block(&em)
     }
 
-    /// Decrypt a chunked blob produced by [`RsaPublicKey::encrypt_blob`].
+    /// Decrypt a chunked blob; all chunks share the CRT contexts.
     pub fn decrypt_blob(&self, data: &[u8]) -> Result<Vec<u8>> {
         let k = self.modulus_len();
         if data.len() % k != 0 {
@@ -161,31 +302,36 @@ impl RsaPrivateKey {
     }
 }
 
-impl RsaKeyPair {
+impl<B: Big> RsaKeyPair<B> {
     /// Generate a keypair with a `bits`-bit modulus and e = 65537.
+    ///
+    /// The RNG consumption order (p then q, full redraw of both on any
+    /// failure) is part of the cross-backend contract: a fixed seed must
+    /// yield byte-identical keys on every backend (pinned by the keygen
+    /// regression in `tests/crypto_differential.rs`). Don't reorder.
     pub fn generate(bits: usize, rng: &mut dyn SecureRng) -> Self {
         assert!(bits >= 128, "modulus too small");
-        let e = BigUint::from_u64(65537);
+        let e = B::from_u64(65537);
         loop {
-            let p = super::prime::gen_prime(bits / 2, rng);
-            let q = super::prime::gen_prime(bits - bits / 2, rng);
+            let p = super::prime::gen_prime::<B>(bits / 2, rng);
+            let q = super::prime::gen_prime::<B>(bits - bits / 2, rng);
             if p == q {
                 continue;
             }
-            let n = p.mul(&q);
-            if n.bit_length() != bits {
+            let n = B::mul(&p, &q);
+            if B::bit_length(&n) != bits {
                 continue;
             }
-            let p1 = p.sub_u64(1);
-            let q1 = q.sub_u64(1);
-            let phi = p1.mul(&q1);
-            let d = match e.modinv(&phi) {
+            let p1 = B::sub_u64(&p, 1);
+            let q1 = B::sub_u64(&q, 1);
+            let phi = B::mul(&p1, &q1);
+            let d = match B::modinv(&e, &phi) {
                 Some(d) => d,
                 None => continue, // gcd(e, phi) != 1; re-draw primes
             };
-            let dp = d.rem(&p1);
-            let dq = d.rem(&q1);
-            let qinv = match q.modinv(&p) {
+            let dp = B::rem(&d, &p1);
+            let dq = B::rem(&d, &q1);
+            let qinv = match B::modinv(&q, &p) {
                 Some(v) => v,
                 None => continue,
             };
@@ -200,6 +346,8 @@ impl RsaKeyPair {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::crypto::backend::NativeBig;
+    use crate::crypto::bigint_dig::DigBig;
     use crate::crypto::rng::DeterministicRng;
 
     fn test_keypair(bits: usize, seed: u64) -> RsaKeyPair {
@@ -207,14 +355,22 @@ mod tests {
         RsaKeyPair::generate(bits, &mut rng)
     }
 
+    fn sha256(data: &[u8]) -> Vec<u8> {
+        use sha2::{Digest, Sha256};
+        Sha256::digest(data).to_vec()
+    }
+
     #[test]
     fn keygen_properties() {
         let kp = test_keypair(512, 1);
-        assert_eq!(kp.public.n.bit_length(), 512);
-        assert_eq!(kp.private.p.mul(&kp.private.q), kp.public.n);
+        assert_eq!(DefaultBig::bit_length(&kp.public.n), 512);
+        assert_eq!(DefaultBig::mul(&kp.private.p, &kp.private.q), kp.public.n);
         // e*d ≡ 1 mod phi
-        let phi = kp.private.p.sub_u64(1).mul(&kp.private.q.sub_u64(1));
-        assert!(kp.public.e.mulmod(&kp.private.d, &phi).is_one());
+        let phi = DefaultBig::mul(
+            &DefaultBig::sub_u64(&kp.private.p, 1),
+            &DefaultBig::sub_u64(&kp.private.q, 1),
+        );
+        assert!(DefaultBig::is_one(&DefaultBig::mulmod(&kp.public.e, &kp.private.d, &phi)));
     }
 
     #[test]
@@ -293,11 +449,62 @@ mod tests {
     fn crt_matches_plain_exponentiation() {
         let kp = test_keypair(512, 16);
         let mut rng = DeterministicRng::seed(17);
-        let m = BigUint::random_below(&kp.public.n, &mut rng);
-        let c = m.modpow(&kp.public.e, &kp.public.n);
-        let plain = c.modpow(&kp.private.d, &kp.private.n);
+        let m = DefaultBig::random_below(&kp.public.n, &mut rng);
+        let c = DefaultBig::modpow(&m, &kp.public.e, &kp.public.n);
+        let plain = DefaultBig::modpow(&c, &kp.private.d, &kp.private.n);
         let crt = kp.private.decrypt_raw(&c);
         assert_eq!(plain, crt);
         assert_eq!(plain, m);
+    }
+
+    #[test]
+    fn shared_ctx_matches_fresh_key_calls() {
+        let kp = test_keypair(512, 18);
+        let enc = kp.public.encrypt_ctx();
+        let dec = kp.private.decrypt_ctx();
+        let data: Vec<u8> = (0..300u32).map(|i| (i * 7 % 256) as u8).collect();
+        // Same RNG seed both ways ⇒ identical ciphertexts.
+        let mut r1 = DeterministicRng::seed(19);
+        let mut r2 = DeterministicRng::seed(19);
+        let via_key = kp.public.encrypt_blob(&data, &mut r1).unwrap();
+        let via_ctx = enc.encrypt_blob(&data, &mut r2).unwrap();
+        assert_eq!(via_key, via_ctx);
+        assert_eq!(dec.decrypt_blob(&via_ctx).unwrap(), data);
+        assert_eq!(kp.private.decrypt_blob(&via_key).unwrap(), data);
+    }
+
+    #[test]
+    fn sign_verify_roundtrip() {
+        let kp = test_keypair(512, 20);
+        let digest = sha256(b"signed payload");
+        let sig = kp.private.sign_digest(&digest).unwrap();
+        assert_eq!(sig.len(), kp.public.modulus_len());
+        assert!(kp.public.verify_digest(&digest, &sig));
+        // Wrong digest, tampered signature, wrong key all fail.
+        assert!(!kp.public.verify_digest(&sha256(b"other"), &sig));
+        let mut bad = sig.clone();
+        bad[5] ^= 1;
+        assert!(!kp.public.verify_digest(&digest, &bad));
+        let kp2 = test_keypair(512, 21);
+        assert!(!kp2.public.verify_digest(&digest, &sig));
+    }
+
+    /// The generic surface compiles and round-trips on the non-default
+    /// backend too (small modulus: the reference backend is slow in
+    /// debug builds; the differential suite covers it at full width).
+    fn roundtrip_on<B: crate::crypto::backend::Big>() {
+        let mut rng = DeterministicRng::seed(22);
+        let kp = RsaKeyPair::<B>::generate(256, &mut rng);
+        let c = kp.public.encrypt_block(b"backend check", &mut rng).unwrap();
+        assert_eq!(kp.private.decrypt_block(&c).unwrap(), b"backend check");
+        let digest = sha256(b"x");
+        let sig = kp.private.sign_digest(&digest).unwrap();
+        assert!(kp.public.verify_digest(&digest, &sig));
+    }
+
+    #[test]
+    fn roundtrip_both_backends() {
+        roundtrip_on::<NativeBig>();
+        roundtrip_on::<DigBig>();
     }
 }

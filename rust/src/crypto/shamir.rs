@@ -220,6 +220,113 @@ pub fn reconstruct_secret(shares: &[Share]) -> Result<Vec<u8>> {
     Ok(padded[4..4 + len].to_vec())
 }
 
+/// Evaluate the Lagrange interpolation of `shares` at point `x0`
+/// (`x0` must not collide with a share point).
+fn interpolate_at(shares: &[Share], x0: u64, chunk: usize) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..shares.len() {
+        let mut num = 1u64;
+        let mut den = 1u64;
+        for j in 0..shares.len() {
+            if i == j {
+                continue;
+            }
+            num = mul(num, sub(x0, shares[j].x));
+            den = mul(den, sub(shares[i].x, shares[j].x));
+        }
+        acc = add(acc, mul(shares[i].ys[chunk], mul(num, inv(den))));
+    }
+    acc
+}
+
+/// Reconstruct with corrupted-share detection: interpolate the degree-
+/// (t-1) polynomial from the first `t` shares, then check every
+/// remaining share lies on it. With at most `shares.len() - t` corrupted
+/// shares *outside* the first `t`, corruption is detected; with
+/// `shares.len() == t` there is no redundancy and this degrades to plain
+/// reconstruction (any corruption silently yields garbage — exactly the
+/// Shamir guarantee).
+pub fn reconstruct_secret_checked(shares: &[Share], t: usize) -> Result<Vec<u8>> {
+    if t == 0 || shares.len() < t {
+        bail!("need at least t={} shares, got {}", t, shares.len());
+    }
+    {
+        let mut sorted: Vec<u64> = shares.iter().map(|s| s.x).collect();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != shares.len() {
+            bail!("duplicate share points");
+        }
+    }
+    if shares.iter().any(|s| s.ys.len() != shares[0].ys.len()) {
+        bail!("shares have inconsistent chunk counts");
+    }
+    let base = &shares[..t];
+    let secret = reconstruct_secret(base)?;
+    let n_chunks = base[0].ys.len();
+    for extra in &shares[t..] {
+        for c in 0..n_chunks {
+            if interpolate_at(base, extra.x, c) != extra.ys[c] {
+                bail!(
+                    "share x={} inconsistent with interpolated polynomial (corrupted share?)",
+                    extra.x
+                );
+            }
+        }
+    }
+    Ok(secret)
+}
+
+/// Differential reference: Lagrange reconstruction with every field
+/// operation carried out in [`Big`] arithmetic (values lifted to bignums,
+/// reduced mod P, inverse via Fermat exponentiation). Exists so the
+/// cross-backend suite can hold the u64 Mersenne field and both bignum
+/// backends to the same answers.
+pub fn reconstruct_secret_via<B: crate::crypto::backend::Big>(shares: &[Share]) -> Result<Vec<u8>> {
+    if shares.is_empty() {
+        bail!("no shares provided");
+    }
+    let n_chunks = shares[0].ys.len();
+    if shares.iter().any(|s| s.ys.len() != n_chunks) {
+        bail!("shares have inconsistent chunk counts");
+    }
+    let p = B::from_u64(P);
+    let ctx = B::ctx(&p);
+    let p_minus_2 = B::from_u64(P - 2);
+    let inv_b = |a: &B::Num| ctx.modpow(a, &p_minus_2); // Fermat
+    let xs: Vec<B::Num> = shares.iter().map(|s| B::from_u64(s.x)).collect();
+    let mut lagrange = Vec::with_capacity(xs.len());
+    for i in 0..xs.len() {
+        let mut num = B::one();
+        let mut den = B::one();
+        for j in 0..xs.len() {
+            if i == j {
+                continue;
+            }
+            num = B::mulmod(&num, &xs[j], &p);
+            den = B::mulmod(&den, &B::submod(&xs[j], &xs[i], &p), &p);
+        }
+        lagrange.push(B::mulmod(&num, &inv_b(&den), &p));
+    }
+    let mut padded = Vec::with_capacity(n_chunks * CHUNK);
+    for c in 0..n_chunks {
+        let mut v = B::zero();
+        for (share, l) in shares.iter().zip(lagrange.iter()) {
+            v = B::addmod(&v, &B::mulmod(&B::from_u64(share.ys[c]), l, &p), &p);
+        }
+        let bytes = B::as_u64(&v).expect("field element fits u64").to_le_bytes();
+        padded.extend_from_slice(&bytes[..CHUNK]);
+    }
+    if padded.len() < 4 {
+        bail!("reconstructed data too short");
+    }
+    let len = u32::from_le_bytes(padded[..4].try_into().unwrap()) as usize;
+    if padded.len() < 4 + len {
+        bail!("reconstructed length {} exceeds data", len);
+    }
+    Ok(padded[4..4 + len].to_vec())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -293,6 +400,83 @@ mod tests {
         let j = shares[0].to_json();
         let back = Share::from_json(&j).unwrap();
         assert_eq!(back, shares[0]);
+    }
+
+    #[test]
+    fn threshold_equals_shares() {
+        // t == n: every share is required, none redundant.
+        let mut rng = DeterministicRng::seed(7);
+        let secret = b"all-or-nothing";
+        let xs: Vec<u64> = (1..=4).collect();
+        let shares = share_secret(secret, 4, &xs, &mut rng).unwrap();
+        assert_eq!(reconstruct_secret(&shares).unwrap(), secret);
+        assert_eq!(reconstruct_secret_checked(&shares, 4).unwrap(), secret);
+        match reconstruct_secret(&shares[..3]) {
+            Ok(rec) => assert_ne!(rec, secret),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn corrupted_share_detected_with_redundancy() {
+        let mut rng = DeterministicRng::seed(8);
+        let secret = b"detect me";
+        let xs: Vec<u64> = (1..=5).collect();
+        let t = 3;
+        let shares = share_secret(secret, t, &xs, &mut rng).unwrap();
+        // Clean set passes with full redundancy checked.
+        assert_eq!(reconstruct_secret_checked(&shares, t).unwrap(), secret);
+        // Corrupt a redundant share: must be detected.
+        let mut bad = shares.clone();
+        bad[4].ys[0] = add(bad[4].ys[0], 1);
+        assert!(reconstruct_secret_checked(&bad, t).is_err());
+        // Corrupting a base share flips the polynomial, so the (clean)
+        // redundant shares no longer lie on it — also detected.
+        let mut bad2 = shares.clone();
+        bad2[0].ys[0] = add(bad2[0].ys[0], 1);
+        assert!(reconstruct_secret_checked(&bad2, t).is_err());
+        // Exactly t shares: no redundancy, corruption yields garbage
+        // without an error (the documented degradation).
+        let mut bad3 = shares[..t].to_vec();
+        bad3[0].ys[0] = add(bad3[0].ys[0], 1);
+        match reconstruct_secret_checked(&bad3, t) {
+            Ok(rec) => assert_ne!(rec, secret),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn checked_rejects_bad_inputs() {
+        let mut rng = DeterministicRng::seed(9);
+        let xs: Vec<u64> = (1..=3).collect();
+        let shares = share_secret(b"s", 2, &xs, &mut rng).unwrap();
+        assert!(reconstruct_secret_checked(&shares, 0).is_err());
+        assert!(reconstruct_secret_checked(&shares[..1], 2).is_err());
+        let dup = vec![shares[0].clone(), shares[0].clone(), shares[1].clone()];
+        assert!(reconstruct_secret_checked(&dup, 2).is_err());
+    }
+
+    fn backend_reference_suite<B: crate::crypto::backend::Big>() {
+        let mut rng = DeterministicRng::seed(10);
+        let secret = b"cross-backend field check 001122";
+        let xs: Vec<u64> = [3, 11, 42, 97, 1_000_003].to_vec();
+        for t in [1usize, 2, 5] {
+            let shares = share_secret(secret, t, &xs, &mut rng).unwrap();
+            // Exactly-threshold subset and the full set, u64 field vs the
+            // bignum-backend reference.
+            for subset in [&shares[..t], &shares[..]] {
+                let via_u64 = reconstruct_secret(subset).unwrap();
+                let via_big = reconstruct_secret_via::<B>(subset).unwrap();
+                assert_eq!(via_u64, via_big, "t={}", t);
+                assert_eq!(via_u64, secret, "t={}", t);
+            }
+        }
+    }
+
+    #[test]
+    fn backend_reference_matches_u64_field() {
+        backend_reference_suite::<crate::crypto::backend::NativeBig>();
+        backend_reference_suite::<crate::crypto::bigint_dig::DigBig>();
     }
 
     #[test]

@@ -610,6 +610,174 @@ pub fn single_round_smoke(
     })
 }
 
+/// Knobs for the crypto-layer scale measurement: §5.1 round-0 key
+/// exchange and the §5.8 rejoiner re-key, timed under the *active*
+/// bigint backend (the whole point: run it once per backend and compare
+/// the `crypto.<backend>` entries in `BENCH_scale.json`).
+#[derive(Debug, Clone)]
+pub struct CryptoScaleConfig {
+    /// Total learners (the acceptance scenario runs 120).
+    pub n_nodes: usize,
+    /// Configured subgroups (chains of ~5, like the churn bench).
+    pub groups: usize,
+    /// RSA modulus size (512 keeps keygen for 120 nodes tractable).
+    pub rsa_bits: usize,
+    /// Seed for keys and data — the run is reproducible per backend.
+    pub seed: u64,
+}
+
+impl Default for CryptoScaleConfig {
+    fn default() -> Self {
+        CryptoScaleConfig { n_nodes: 120, groups: 24, rsa_bits: 512, seed: 42 }
+    }
+}
+
+/// Crypto-layer numbers for one backend at paper scale.
+#[derive(Debug, Clone)]
+pub struct CryptoScaleReport {
+    /// `Big::NAME` of the backend the binary was built with.
+    pub backend: String,
+    pub config: CryptoScaleConfig,
+    /// Wall-clock of `SafeSession::new` under §5.8 pre-negotiation:
+    /// per-node RSA keygen, peer public-key fetch, and every pairwise
+    /// symmetric key sealed + unsealed.
+    pub setup_secs: f64,
+    /// Round-0 messages that setup exchanged.
+    pub setup_messages: u64,
+    /// Wall-clock of the round in which one node rejoined — dominated
+    /// by the §5.8 re-key (fresh RSA keypair + every touched link's
+    /// symmetric key regenerated, re-sealed, re-pulled).
+    pub rekey_round_secs: f64,
+    /// Re-key messages that round (the engine accounts them outside the
+    /// `4n + 2f` formula, per footnote 3).
+    pub rekey_messages: u64,
+    /// Per-link §5.8 seal (PKCS#1 encrypt of a symmetric master key)
+    /// with the modulus context shared across calls, microseconds.
+    pub seal_us: f64,
+    /// Per-link §5.8 unseal (CRT decrypt) with the cached context,
+    /// microseconds.
+    pub unseal_us: f64,
+}
+
+impl CryptoScaleReport {
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("backend", Value::from(self.backend.as_str())),
+            ("n_nodes", Value::from(self.config.n_nodes)),
+            ("groups", Value::from(self.config.groups)),
+            ("rsa_bits", Value::from(self.config.rsa_bits)),
+            ("seed", Value::from(self.config.seed)),
+            ("setup_secs", Value::from(self.setup_secs)),
+            ("setup_messages", Value::from(self.setup_messages)),
+            ("rekey_round_secs", Value::from(self.rekey_round_secs)),
+            ("rekey_messages", Value::from(self.rekey_messages)),
+            ("seal_us", Value::from(self.seal_us)),
+            ("unseal_us", Value::from(self.unseal_us)),
+        ])
+    }
+
+    pub fn to_table(&self) -> String {
+        format!(
+            "── crypto @ n={} g={} rsa={} backend={} ──\n\
+             round-0 setup: {:.3}s ({} messages)\n\
+             rejoin re-key round: {:.3}s ({} rekey messages)\n\
+             per-link §5.8: seal {:.1}µs, unseal {:.1}µs (shared contexts)\n",
+            self.config.n_nodes,
+            self.config.groups,
+            self.config.rsa_bits,
+            self.backend,
+            self.setup_secs,
+            self.setup_messages,
+            self.rekey_round_secs,
+            self.rekey_messages,
+            self.seal_us,
+            self.unseal_us
+        )
+    }
+}
+
+/// Measure §5.1 round-0 setup and the §5.8 re-key at paper scale under
+/// the active bigint backend.
+///
+/// Two passes: an engine pass (a real `PreNegotiated` session built at
+/// `n` nodes, then two rounds where node 1 dies in round 1 and rejoins
+/// in round 2 — the round-2 wall-clock is the full rejoiner re-key),
+/// and a primitive pass timing one §5.8 link seal/unseal with the
+/// contexts shared exactly the way the protocol now shares them.
+pub fn crypto_scale(sc: &CryptoScaleConfig) -> Result<CryptoScaleReport> {
+    use crate::crypto::rng::DeterministicRng;
+    use crate::crypto::rsa::RsaKeyPair;
+    use crate::crypto::SymmetricKey;
+    use crate::crypto::{Big, DefaultBig};
+
+    let cfg = SessionConfig {
+        n_nodes: sc.n_nodes,
+        features: 4,
+        groups: sc.groups,
+        mode: CipherMode::PreNegotiated,
+        rsa_bits: sc.rsa_bits,
+        profile: DeviceProfile::instant(),
+        poll_time: Duration::from_secs(30),
+        aggregation_timeout: Duration::from_secs(120),
+        progress_timeout: Duration::from_millis(500),
+        monitor_interval: Duration::from_millis(60),
+        seed: Some(sc.seed),
+        ..Default::default()
+    };
+    let inputs: Vec<Vec<f64>> = (0..cfg.n_nodes)
+        .map(|i| (0..cfg.features).map(|f| (i + 1) as f64 + 0.001 * f as f64).collect())
+        .collect();
+    let per_round = vec![inputs.clone(), inputs];
+
+    let watch = crate::util::Stopwatch::start();
+    let session = SafeSession::new(cfg)?;
+    let setup_secs = watch.elapsed().as_secs_f64();
+    let setup_messages = session.round0_messages;
+
+    let churn = ChurnSchedule::none()
+        .die(1, 1, FailPoint::NeverStart)
+        .rejoin(1, 2);
+    let results = session.run_rounds(&per_round, &churn)?;
+    let rekey_round = results.last().context("re-key run produced no rounds")?;
+    ensure!(
+        rekey_round.metrics.rekey_messages > 0,
+        "rejoin round recorded no re-key messages — churn schedule broken?"
+    );
+
+    // Primitive pass: average one §5.8 link over `iters` fresh symmetric
+    // keys, sharing the encrypt context (sender side: one modulus, many
+    // peers' keys sealed to us) and the CRT decrypt context (receiver
+    // side: our own modulus for every pull).
+    let mut rng = DeterministicRng::seed(sc.seed ^ 0x5ea1);
+    let kp = RsaKeyPair::generate(sc.rsa_bits, &mut rng);
+    let enc = kp.public.encrypt_ctx();
+    let dec = kp.private.decrypt_ctx();
+    let iters = 64usize;
+    let mut sealed = Vec::with_capacity(iters);
+    let watch = crate::util::Stopwatch::start();
+    for _ in 0..iters {
+        let k = SymmetricKey::generate(&mut rng);
+        sealed.push(enc.encrypt_block(&k.master, &mut rng)?);
+    }
+    let seal_us = watch.elapsed().as_secs_f64() * 1e6 / iters as f64;
+    let watch = crate::util::Stopwatch::start();
+    for s in &sealed {
+        let _ = dec.decrypt_block(s)?;
+    }
+    let unseal_us = watch.elapsed().as_secs_f64() * 1e6 / iters as f64;
+
+    Ok(CryptoScaleReport {
+        backend: <DefaultBig as Big>::NAME.to_string(),
+        config: sc.clone(),
+        setup_secs,
+        setup_messages,
+        rekey_round_secs: rekey_round.metrics.secs(),
+        rekey_messages: rekey_round.metrics.rekey_messages,
+        seal_us,
+        unseal_us,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -665,6 +833,26 @@ mod tests {
         let row = &json.get("per_round").unwrap().as_arr().unwrap()[0];
         let mps = row.get("messages_per_sec").and_then(|v| v.as_f64()).unwrap();
         assert!((mps - (4.0 * 9.0 + 4.0) / 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn crypto_scale_smoke() {
+        use crate::crypto::{Big, DefaultBig};
+        let r = crypto_scale(&CryptoScaleConfig {
+            n_nodes: 8,
+            groups: 2,
+            rsa_bits: 512,
+            seed: 9,
+        })
+        .unwrap();
+        assert_eq!(r.backend, <DefaultBig as Big>::NAME);
+        assert!(r.setup_messages > 0);
+        assert!(r.rekey_messages > 0);
+        assert!(r.seal_us > 0.0 && r.unseal_us > 0.0);
+        let j = r.to_json();
+        assert_eq!(j.u64_of("n_nodes"), Some(8));
+        assert_eq!(j.str_of("backend"), Some(<DefaultBig as Big>::NAME));
+        assert!(r.to_table().contains("round-0 setup"));
     }
 
     #[test]

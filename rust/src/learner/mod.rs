@@ -44,6 +44,10 @@ pub struct LearnerContext {
     /// context per round, and only a rejoin re-key ever replaces these
     /// maps (clone-on-write), so a fork is pointer-cheap.
     pub keys: Arc<RsaKeyPair>,
+    /// Lazily-built CRT decryption context for our private key, shared by
+    /// every envelope this learner opens (and propagated through forks).
+    /// Replaced alongside `keys` on a re-key.
+    pub rsa_dec: once_cell::sync::OnceCell<crate::crypto::rsa::RsaDecryptCtx>,
     /// Public keys of the peers in this group (fetched in round 0).
     pub peer_keys: Arc<BTreeMap<u64, RsaPublicKey>>,
     /// §5.8 pre-negotiated keys: `send_keys[to]` = key the receiver `to`
@@ -172,6 +176,7 @@ impl LearnerContext {
             chain: self.chain.clone(),
             expected_total_nodes: self.expected_total_nodes,
             keys: self.keys.clone(),
+            rsa_dec: self.rsa_dec.clone(),
             peer_keys: self.peer_keys.clone(),
             send_keys: self.send_keys.clone(),
             recv_keys: self.recv_keys.clone(),
@@ -272,7 +277,8 @@ impl LearnerContext {
                 self.profile.charge(OpKind::Aes, payload_bytes);
             }
         }
-        env.open(Some(&self.keys.private), self.recv_keys.get(&from))
+        let dec = self.rsa_dec.get_or_init(|| self.keys.private.decrypt_ctx());
+        env.open_with(Some(dec), self.recv_keys.get(&from))
     }
 
     /// One logical call = up to `retry.attempts` physical attempts. Only

@@ -20,11 +20,11 @@ use anyhow::{bail, Context, Result};
 use crate::config::{SessionConfig, TransportKind};
 use crate::controller::bon::pairwise_seed;
 use crate::controller::{Controller, ControllerConfig};
-use crate::crypto::bigint::BigUint;
 use crate::crypto::dh::{DhGroup, DhKeyPair};
 use crate::crypto::rng::{prg_expand_f64, DeterministicRng, SecureRng, SystemRng};
 use crate::crypto::shamir;
 use crate::crypto::SymmetricKey;
+use crate::crypto::{Big, DefaultBig, ModContext};
 use crate::json::Value;
 use crate::learner::faults::FaultPlan;
 use crate::metrics::RoundMetrics;
@@ -188,14 +188,18 @@ fn bon_client(
     };
 
     // ---- Round 0: advertise DH public keys ----
-    let c_pair = DhKeyPair::generate(group, rng.as_mut());
-    let s_pair = DhKeyPair::generate(group, rng.as_mut());
+    // One exponentiation context for the group modulus serves both
+    // keygens, all n-1 channel agreements, and all n-1 pairwise-mask
+    // exponentiations below.
+    let gctx = group.ctx();
+    let c_pair = DhKeyPair::generate_with(&gctx, group, rng.as_mut());
+    let s_pair = DhKeyPair::generate_with(&gctx, group, rng.as_mut());
     transport.call(
         proto::BON_ADVERTISE,
         &proto::BonAdvertise {
             node,
-            cpk: c_pair.public.to_hex(),
-            spk: s_pair.public.to_hex(),
+            cpk: DefaultBig::to_hex(&c_pair.public),
+            spk: DefaultBig::to_hex(&s_pair.public),
         }
         .to_value(),
     )?;
@@ -208,8 +212,8 @@ fn bon_client(
             continue;
         }
         let entry = keys_obj.get(&v.to_string()).context("peer keys missing")?;
-        peer_cpk.insert(v, BigUint::from_hex(entry.str_of("cpk").context("cpk")?)?);
-        peer_spk.insert(v, BigUint::from_hex(entry.str_of("spk").context("spk")?)?);
+        peer_cpk.insert(v, DefaultBig::from_hex(entry.str_of("cpk").context("cpk")?)?);
+        peer_spk.insert(v, DefaultBig::from_hex(entry.str_of("spk").context("spk")?)?);
     }
 
     // ---- Round 1: Shamir-share b_u and s_u^SK to every peer ----
@@ -225,7 +229,7 @@ fn bon_client(
             continue;
         }
         // Pairwise channel key: KDF(c_v^PK ^ c_u^SK).
-        let chan = c_pair.agree(group, &peer_cpk[&v]);
+        let chan = c_pair.agree_with(&gctx, &peer_cpk[&v]);
         let key = SymmetricKey::from_bytes(&chan)?;
         let payload = Value::object(vec![
             ("b", b_shares[(v - 1) as usize].to_json()),
@@ -255,7 +259,7 @@ fn bon_client(
         let Some(blob) = shares_in.get(&v.to_string()).and_then(|b| b.as_blob()) else {
             continue;
         };
-        let chan = c_pair.agree(group, &peer_cpk[&v]);
+        let chan = c_pair.agree_with(&gctx, &peer_cpk[&v]);
         let key = SymmetricKey::from_bytes(&chan)?;
         let opened = key.open(blob.as_bytes())?;
         let payload = crate::json::parse(std::str::from_utf8(&opened)?)?;
@@ -278,7 +282,7 @@ fn bon_client(
         if v == node {
             continue;
         }
-        let shared = peer_spk[&v].modpow(&s_pair.secret, &group.p);
+        let shared = gctx.modpow(&peer_spk[&v], &s_pair.secret);
         let seed = pairwise_seed(&shared);
         let mask = prg_expand_f64(&seed, feat);
         if node < v {

@@ -301,6 +301,7 @@ impl SafeSession {
                     retry: cfg.net.retry_policy(),
                     stats: stats.clone(),
                     post_seq: std::sync::atomic::AtomicU64::new(0),
+                    rsa_dec: once_cell::sync::OnceCell::new(),
                 }));
             }
         }
@@ -334,6 +335,9 @@ impl SafeSession {
             // Pull: send_keys[to] = key that `to` generated for me.
             for ctx in Vec::from_iter(contexts.values().cloned()) {
                 let mut send_keys = BTreeMap::new();
+                // One CRT context unseals every peer's delivery (§5.8:
+                // n-1 pulls per node, all under our own modulus).
+                let dec = ctx.rsa_dec.get_or_init(|| ctx.keys.private.decrypt_ctx());
                 for &peer in &ctx.chain {
                     if peer == ctx.node {
                         continue;
@@ -343,7 +347,7 @@ impl SafeSession {
                         &proto::GetPrenegKey { node: ctx.node, owner: peer }.to_value(),
                     )?;
                     let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
-                    let master = ctx.keys.private.decrypt_block(delivery.key.as_bytes())?;
+                    let master = dec.decrypt_block(delivery.key.as_bytes())?;
                     send_keys.insert(peer, SymmetricKey::from_bytes(&master)?);
                 }
                 // Contexts are shared Arcs; rebuild with key maps filled.
@@ -735,6 +739,8 @@ impl SafeSession {
             }
             let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x5eed));
             ctx.keys = Arc::new(kp);
+            // Fresh keypair ⇒ the forked decryption-context cache is stale.
+            ctx.rsa_dec = once_cell::sync::OnceCell::new();
             ctx.peer_keys = Arc::new(peer_keys);
             ctx.chain = full;
             self.replace_context(ctx);
@@ -822,6 +828,7 @@ impl SafeSession {
             };
             let master = self.master_context(j)?;
             let mut send_keys = (*master.send_keys).clone();
+            let dec = master.rsa_dec.get_or_init(|| master.keys.private.decrypt_ctx());
             for &peer in chain {
                 if peer == j {
                     continue;
@@ -831,7 +838,7 @@ impl SafeSession {
                     &proto::GetPrenegKey { node: j, owner: peer }.to_value(),
                 )?;
                 let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
-                let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+                let m = dec.decrypt_block(delivery.key.as_bytes())?;
                 send_keys.insert(peer, SymmetricKey::from_bytes(&m)?);
             }
             let mut ctx = master.fork(self.round_rng(j, epoch ^ 0x3c));
@@ -866,7 +873,10 @@ impl SafeSession {
             &proto::GetPrenegKey { node: peer, owner: j }.to_value(),
         )?;
         let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
-        let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+        let m = master
+            .rsa_dec
+            .get_or_init(|| master.keys.private.decrypt_ctx())
+            .decrypt_block(delivery.key.as_bytes())?;
         let mut recv = (*master.recv_keys).clone();
         recv.insert(j, k);
         let mut send = (*master.send_keys).clone();
@@ -990,7 +1000,10 @@ impl SafeSession {
                     &proto::GetPrenegKey { node: j, owner: peer }.to_value(),
                 )?;
                 let delivery = proto::PrenegKeyDelivery::from_value(&resp)?;
-                let m = master.keys.private.decrypt_block(delivery.key.as_bytes())?;
+                let m = master
+                    .rsa_dec
+                    .get_or_init(|| master.keys.private.decrypt_ctx())
+                    .decrypt_block(delivery.key.as_bytes())?;
                 send_keys.insert(peer, SymmetricKey::from_bytes(&m)?);
             }
             let master = self.master_context(j)?;
