@@ -11,10 +11,14 @@
 //! `SAFE_SCALE_REJOIN`, `SAFE_SCALE_SEED`, `SAFE_SCALE_WORKERS`,
 //! `SAFE_SCALE_RUNTIME=threads|events`; `SAFE_SCALE_NET` takes a
 //! `--net`-style profile spec (`lossy`, `wan,loss-req=0.05`, …) and
-//! stretches every timeout budget to match; `SAFE_SMOKE_NODES` /
-//! `SAFE_SMOKE_GROUPS` size the single-round smoke (`SAFE_SMOKE_NODES=0`
-//! skips it); set `SAFE_SCALE_NO_ASSERT=1` to report formula deltas
-//! without failing on them.
+//! stretches every timeout budget to match; `SAFE_SCALE_SHARDS` sets the
+//! controller plane width K for the main run; `SAFE_SCALE_SWEEP=1,2,4`
+//! additionally re-runs the same scenario at each listed K and records a
+//! `shard_sweep` section (strict mode requires the widest K to beat
+//! K = 1 wall-clock); `SAFE_SMOKE_NODES` / `SAFE_SMOKE_GROUPS` size the
+//! single-round smoke (`SAFE_SMOKE_NODES=0` skips it); set
+//! `SAFE_SCALE_NO_ASSERT=1` to report formula deltas without failing on
+//! them.
 //!
 //! The crypto pass ([`crypto_scale`]: §5.1 round-0 setup + §5.8 re-key
 //! under the active bigint backend) runs after the churn bench and
@@ -27,7 +31,7 @@
 
 use safe_agg::config::RuntimeKind;
 use safe_agg::harness::scale::{
-    crypto_scale, poisson_scale, single_round_smoke, CryptoScaleConfig, ScaleConfig,
+    crypto_scale, poisson_scale, shard_sweep, single_round_smoke, CryptoScaleConfig, ScaleConfig,
 };
 use safe_agg::json::Value;
 
@@ -92,6 +96,7 @@ fn main() -> anyhow::Result<()> {
         runtime,
         workers: env_or("SAFE_SCALE_WORKERS", defaults.workers),
         net,
+        shards: env_or("SAFE_SCALE_SHARDS", defaults.shards),
         ..defaults
     };
     let report = poisson_scale(&sc)?;
@@ -117,6 +122,17 @@ fn main() -> anyhow::Result<()> {
             }
             println!("warning: {msg}");
         }
+        // The fan-in tier's surcharge is bounded: one partial post + one
+        // global fetch per live shard per round.
+        if strict {
+            anyhow::ensure!(
+                row.fanin_messages <= 2 * sc.shards as u64,
+                "round {}: {} fan-in messages exceeds 2K = {}",
+                row.round,
+                row.fanin_messages,
+                2 * sc.shards
+            );
+        }
     }
     // The event runtime's whole point: the process runs O(workers)
     // threads, not O(n). The slack covers main + monitor + probe + timer
@@ -130,6 +146,61 @@ fn main() -> anyhow::Result<()> {
             cap
         );
     }
+
+    // Shard K-sweep: re-run the identical churn scenario at each listed
+    // plane width and compare end-to-end wall-clock. The sharded plane's
+    // claim is that splitting the controller lock K ways beats one broker
+    // serializing every chain op — strict mode holds the widest K to
+    // strictly less total wall-clock than K = 1.
+    let sweep = match std::env::var("SAFE_SCALE_SWEEP") {
+        Ok(spec) => {
+            let ks: Vec<usize> = spec
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .filter(|&k| k >= 1)
+                .collect();
+            anyhow::ensure!(!ks.is_empty(), "SAFE_SCALE_SWEEP has no shard counts: {spec}");
+            let reports = shard_sweep(&sc, &ks)?;
+            let mut entries = Vec::new();
+            for (k, rep) in ks.iter().zip(&reports) {
+                rep.emit(None);
+                let total_secs: f64 = rep.rows.iter().map(|r| r.secs).sum();
+                let fanin_total: u64 = rep.rows.iter().map(|r| r.fanin_messages).sum();
+                let max_fanin_latency =
+                    rep.rows.iter().map(|r| r.fanin_latency_secs).fold(0.0, f64::max);
+                println!(
+                    "sweep K={k}: {total_secs:.3}s total, {fanin_total} fan-in messages, \
+                     max fan-in latency {max_fanin_latency:.4}s"
+                );
+                entries.push(Value::object(vec![
+                    ("shards", Value::from(*k)),
+                    ("id", Value::from(rep.id.as_str())),
+                    ("total_secs", Value::from(total_secs)),
+                    ("fanin_messages_total", Value::from(fanin_total)),
+                    ("max_fanin_latency_secs", Value::from(max_fanin_latency)),
+                ]));
+            }
+            let secs_of = |k: usize| {
+                ks.iter()
+                    .position(|&x| x == k)
+                    .map(|i| reports[i].rows.iter().map(|r| r.secs).sum::<f64>())
+            };
+            if strict {
+                if let (Some(base), Some(&widest)) = (secs_of(1), ks.iter().max()) {
+                    if widest > 1 {
+                        let wide = secs_of(widest).unwrap();
+                        anyhow::ensure!(
+                            wide < base,
+                            "K={widest} total wall-clock {wide:.3}s is not below K=1's \
+                             {base:.3}s"
+                        );
+                    }
+                }
+            }
+            Some(Value::Arr(entries))
+        }
+        Err(_) => None,
+    };
 
     // n=10,000-class single-round smoke, event runtime only.
     let smoke_nodes: usize = env_or("SAFE_SMOKE_NODES", 10_000);
@@ -161,6 +232,9 @@ fn main() -> anyhow::Result<()> {
         "smoke",
         smoke.map(|s| s.to_json()).unwrap_or(Value::Null),
     );
+    if let Some(s) = sweep {
+        json.set("shard_sweep", s);
+    }
     // Preserve crypto numbers an earlier invocation (possibly built with
     // the other backend) already wrote, then add this build's own.
     if let Some(prev) = std::fs::read_to_string("BENCH_scale.json")

@@ -109,6 +109,14 @@ pub struct SessionConfig {
     /// Worker threads for the event runtime (`--workers N`); 0 = auto
     /// (available parallelism).
     pub workers: usize,
+    /// Controller shards (`--shards K`, default 1): the aggregation plane
+    /// splits the configured groups across K independent `Controller`
+    /// shards, each owning its groups' chains, mailboxes and epoch state,
+    /// with a fan-in parent combining contributor-weighted shard partials
+    /// into the global average (§5.10 generalized). `1` keeps today's
+    /// single-controller wiring bit-identically; values above the group
+    /// count are clamped to it. In-proc transports only.
+    pub shards: usize,
     /// Hostile-network profile (`--net PRESET[,FIELD=VALUE]*`): injected
     /// per-link latency/jitter, request/response packet loss,
     /// bandwidth-proportional delay and designated stragglers, all drawn
@@ -143,6 +151,7 @@ impl Default for SessionConfig {
             merge_floor: true,
             runtime: RuntimeKind::Events,
             workers: 0,
+            shards: 1,
             net: NetProfile::default(),
         }
     }
@@ -261,6 +270,7 @@ impl Args {
             _ => RuntimeKind::Events,
         };
         cfg.workers = self.get_usize("workers", cfg.workers);
+        cfg.shards = self.get_usize("shards", cfg.shards).max(1);
         cfg
     }
 }
@@ -359,6 +369,16 @@ mod tests {
         let cfg = a.to_session_config();
         assert_eq!(cfg.runtime, RuntimeKind::Events);
         assert_eq!(cfg.workers, 8);
+    }
+
+    #[test]
+    fn shards_flag_selects_plane_width() {
+        let a = Args::parse(["run"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().shards, 1, "single shard is the default");
+        let a = Args::parse(["run", "--shards", "4"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().shards, 4);
+        let a = Args::parse(["run", "--shards=0"].iter().map(|s| s.to_string()));
+        assert_eq!(a.to_session_config().shards, 1, "0 clamps to 1");
     }
 
     #[test]

@@ -6,13 +6,17 @@
 //!
 //! The parent side lives here (two endpoints on the regular controller);
 //! the child side is a small client in `protocols::hierarchy` that bridges
-//! a completed local aggregation up one level.
+//! a completed local aggregation up one level. The sharded aggregation
+//! plane reuses this tier as its fan-in: each shard's fan-in worker is a
+//! `FederationBridge` child, and the parent's contributor-weighted combine
+//! is the global average the shards install back for their learners.
 
 use std::collections::BTreeMap;
 
 use super::Controller;
 use crate::json::Value;
 use crate::proto;
+use crate::transport::PollKey;
 
 #[derive(Default)]
 pub struct FedState {
@@ -24,21 +28,22 @@ pub struct FedState {
 }
 
 impl FedState {
-    /// Contributor-weighted global average across children.
-    fn global(&self) -> Option<(Vec<f64>, u64)> {
-        if self.expected_children == 0 || self.child_averages.len() < self.expected_children {
-            return None;
-        }
+    /// Contributor-weighted combine over `children`. `None` when the
+    /// iterator is empty. Zero-weight children cannot occur here — the
+    /// post endpoint rejects `contributors == 0` with a typed error
+    /// instead of silently re-weighting it.
+    fn combine<'a>(
+        children: impl Iterator<Item = &'a (Vec<f64>, u64)>,
+    ) -> Option<(Vec<f64>, u64)> {
         let mut total_w = 0u64;
         let mut acc: Option<Vec<f64>> = None;
-        for (avg, w) in self.child_averages.values() {
-            let w = (*w).max(1);
+        for (avg, w) in children {
             total_w += w;
             match &mut acc {
-                None => acc = Some(avg.iter().map(|x| x * w as f64).collect()),
+                None => acc = Some(avg.iter().map(|x| x * *w as f64).collect()),
                 Some(a) => {
                     for (x, y) in a.iter_mut().zip(avg) {
-                        *x += y * w as f64;
+                        *x += y * *w as f64;
                     }
                 }
             }
@@ -49,6 +54,27 @@ impl FedState {
         }
         Some((avg, total_w))
     }
+
+    /// Contributor-weighted global average across all expected children
+    /// (the §5.10 fan-in barrier): `None` until every child reported.
+    pub(crate) fn global(&self) -> Option<(Vec<f64>, u64)> {
+        if self.expected_children == 0 || self.child_averages.len() < self.expected_children {
+            return None;
+        }
+        Self::combine(self.child_averages.values())
+    }
+
+    /// Degraded combine over whichever children have reported (a shard
+    /// died and the fan-in barrier timed out): `None` only when nobody
+    /// posted at all.
+    pub(crate) fn partial(&self) -> Option<(Vec<f64>, u64)> {
+        Self::combine(self.child_averages.values())
+    }
+
+    /// Has every expected child posted (cheap wake predicate)?
+    fn barrier_complete(&self) -> bool {
+        self.expected_children > 0 && self.child_averages.len() >= self.expected_children
+    }
 }
 
 pub fn post_child_average(ctrl: &Controller, body: &Value) -> Value {
@@ -56,17 +82,42 @@ pub fn post_child_average(ctrl: &Controller, body: &Value) -> Value {
         Ok(r) => r,
         Err(e) => return proto::status(&e.to_string()),
     };
+    // A zero-contributor child has nothing to combine: weighting it in
+    // (the old `w.max(1)`) would skew the global toward an average built
+    // from nobody. Reject it so the child can degrade explicitly.
+    if req.contributors == 0 {
+        return proto::status("zero_contributors");
+    }
     let mut inner = ctrl.inner.lock().unwrap();
     inner
         .fed
         .child_averages
         .insert(req.child, (req.average, req.contributors));
+    let complete = inner.fed.barrier_complete();
+    drop(inner);
     ctrl.cv.notify_all();
+    if complete {
+        ctrl.hub.wake(PollKey::FedGlobal);
+    }
     proto::status("ok")
 }
 
 pub fn get_global_average(ctrl: &Controller, body: &Value) -> Value {
-    let _ = body;
+    // `partial: true` is the degraded fetch a fan-in client falls back to
+    // after its completion long-poll timed out: combine whatever children
+    // have posted instead of waiting out the barrier.
+    if body.bool_of("partial").unwrap_or(false) {
+        let inner = ctrl.inner.lock().unwrap();
+        return match inner.fed.partial() {
+            Some((avg, total)) => {
+                let mut v =
+                    proto::FedGlobalAverage { average: avg, contributors: total }.into_value();
+                v.set("partial", Value::from(true));
+                v
+            }
+            None => proto::status("empty"),
+        };
+    }
     let poll = ctrl.inner.lock().unwrap().config.poll_time;
     match ctrl.wait_until(poll, |inner| inner.fed.global()) {
         Some((avg, total)) => {
@@ -83,38 +134,77 @@ mod tests {
     use crate::transport::Handler;
     use std::time::Duration;
 
-    #[test]
-    fn weighted_global_average() {
+    fn parent(children: u64) -> Controller {
         let c = Controller::new(ControllerConfig {
             poll_time: Duration::from_millis(100),
             ..Default::default()
         });
         c.handle(
             proto::CONFIGURE,
-            &Value::object(vec![("fed_expected_children", Value::from(2u64))]),
+            &Value::object(vec![("fed_expected_children", Value::from(children))]),
         );
+        c
+    }
+
+    fn post(c: &Controller, child: u64, avg: &[f64], contributors: u64) -> Value {
         c.handle(
             proto::FED_POST_CHILD_AVERAGE,
-            &Value::object(vec![
-                ("child", Value::from(1u64)),
-                ("average", Value::from(vec![1.0])),
-                ("contributors", Value::from(3u64)),
-            ]),
-        );
+            &proto::FedChildAverage::body(child, avg, contributors),
+        )
+    }
+
+    #[test]
+    fn weighted_global_average() {
+        let c = parent(2);
+        post(&c, 1, &[1.0], 3);
         let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
         assert_eq!(r.str_of("status"), Some("empty"));
-        c.handle(
-            proto::FED_POST_CHILD_AVERAGE,
-            &Value::object(vec![
-                ("child", Value::from(2u64)),
-                ("average", Value::from(vec![5.0])),
-                ("contributors", Value::from(1u64)),
-            ]),
-        );
+        post(&c, 2, &[5.0], 1);
         let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
         assert_eq!(r.str_of("status"), Some("ok"));
         // (1*3 + 5*1) / 4 = 2
         assert_eq!(r.f64_arr_of("average").unwrap(), vec![2.0]);
         assert_eq!(r.u64_of("contributors"), Some(4));
+        assert_eq!(r.bool_of("partial"), None);
+    }
+
+    #[test]
+    fn zero_contributor_child_is_rejected() {
+        let c = parent(2);
+        let r = post(&c, 1, &[9.0], 0);
+        assert_eq!(r.str_of("status"), Some("zero_contributors"));
+        // The rejected post left no state behind: the barrier still needs
+        // two children, and the global is unskewed by the phantom child.
+        post(&c, 1, &[1.0], 3);
+        let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
+        assert_eq!(r.str_of("status"), Some("empty"));
+        post(&c, 2, &[5.0], 1);
+        let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
+        assert_eq!(r.f64_arr_of("average").unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn partial_fetch_combines_posted_children_only() {
+        // Expected 3 children but one shard died: the barrier never
+        // completes, yet a partial fetch serves the degraded combine of
+        // the two that did post — flagged so the caller knows.
+        let c = parent(3);
+        let r = c.handle(
+            proto::FED_GET_GLOBAL_AVERAGE,
+            &Value::object(vec![("partial", Value::from(true))]),
+        );
+        assert_eq!(r.str_of("status"), Some("empty"), "nothing posted yet");
+        post(&c, 1, &[10.0], 4);
+        post(&c, 2, &[20.0], 6);
+        let r = c.handle(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj());
+        assert_eq!(r.str_of("status"), Some("empty"), "barrier incomplete");
+        let r = c.handle(
+            proto::FED_GET_GLOBAL_AVERAGE,
+            &Value::object(vec![("partial", Value::from(true))]),
+        );
+        assert_eq!(r.str_of("status"), Some("ok"));
+        assert_eq!(r.bool_of("partial"), Some(true));
+        assert_eq!(r.u64_of("contributors"), Some(10));
+        assert!((r.f64_arr_of("average").unwrap()[0] - 16.0).abs() < 1e-12);
     }
 }

@@ -78,6 +78,15 @@ pub(crate) struct Inner {
     pub insec: insec::InsecState,
     pub bon: bon::BonState,
     pub fed: hierarchy::FedState,
+    /// This controller is a *shard* of a sharded plane (set per round by
+    /// `begin_round`): the global average is installed by the fan-in
+    /// worker, not derived from the local §5.5 barrier, so `get_average`
+    /// must wait for the installed value.
+    pub fanin: bool,
+    /// The fan-in result installed by [`Controller::install_global_average`]
+    /// (`(average, weight)`), released to `get_average` pollers when
+    /// `fanin` is set.
+    pub global_average: Option<(Vec<f64>, u64)>,
     pub config: ControllerConfig,
 }
 
@@ -108,6 +117,8 @@ impl Controller {
                 insec: insec::InsecState::default(),
                 bon: bon::BonState::default(),
                 fed: hierarchy::FedState::default(),
+                fanin: false,
+                global_average: None,
                 config,
             }),
             cv: Condvar::new(),
@@ -225,6 +236,12 @@ impl Controller {
     }
 
     fn poll_average(inner: &Inner) -> Option<(Vec<f64>, u64)> {
+        // Sharded plane: this controller only brokers a shard — the
+        // global average is whatever the fan-in worker installed, and the
+        // local §5.5 barrier alone must not release pollers.
+        if inner.fanin {
+            return inner.global_average.clone();
+        }
         // Global average is ready when every expected group posted its
         // group average (§5.5 barrier). Equal-weight mean of means.
         if inner.expected_groups.is_empty() {
@@ -264,6 +281,64 @@ impl Controller {
             && inner.expected_groups.iter().all(|gid| {
                 inner.groups.get(gid).map_or(false, |gs| gs.average.is_some())
             })
+    }
+
+    /// The shard partial over whichever expected groups have posted so
+    /// far: the §5.5 equal-weight mean of their group means, plus the
+    /// summed contributor count the fan-in parent weights the shard by.
+    /// `None` until at least one group posted. When the barrier is
+    /// complete this equals [`Controller::poll_average`]'s mean.
+    fn partial_over_posted(inner: &Inner) -> Option<(Vec<f64>, u64)> {
+        let mut acc: Option<Vec<f64>> = None;
+        let mut count = 0usize;
+        let mut contributors = 0u64;
+        for gid in &inner.expected_groups {
+            let Some(gs) = inner.groups.get(gid) else { continue };
+            let Some(avg) = gs.average.as_ref() else { continue };
+            match &mut acc {
+                None => acc = Some(avg.clone()),
+                Some(a) => {
+                    if a.len() != avg.len() {
+                        continue;
+                    }
+                    for (x, y) in a.iter_mut().zip(avg) {
+                        *x += y;
+                    }
+                }
+            }
+            count += 1;
+            contributors += gs.average_contributors;
+        }
+        let mut avg = acc?;
+        for x in avg.iter_mut() {
+            *x /= count as f64;
+        }
+        Some((avg, contributors))
+    }
+
+    /// Fan-in worker entry (sharded plane): wait up to `timeout` for this
+    /// shard's §5.5 barrier, then return the shard partial to post to the
+    /// fan-in parent. On barrier timeout the partial covers only the
+    /// groups that did post (a degraded round); `None` means no group
+    /// posted at all — a dead shard contributes nothing.
+    pub fn shard_partial(&self, timeout: Duration) -> Option<(Vec<f64>, u64)> {
+        let _ = self.wait_until(timeout, |inner| {
+            Self::average_barrier_complete(inner).then_some(())
+        });
+        let inner = self.inner.lock().unwrap();
+        Self::partial_over_posted(&inner)
+    }
+
+    /// Install the fan-in tier's combined result on this shard and release
+    /// its parked `get_average` pollers (the sharded-plane counterpart of
+    /// the §5.5 barrier completing). `weight` rides in the response's
+    /// `groups` field.
+    pub fn install_global_average(&self, average: Vec<f64>, weight: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.global_average = Some((average, weight));
+        drop(inner);
+        self.cv.notify_all();
+        self.hub.wake(PollKey::Average);
     }
 
     fn poll_key(inner: &Inner, node: u64) -> Option<Value> {
@@ -319,6 +394,7 @@ impl Controller {
         }
         if let Some(n) = body.u64_of("fed_expected_children") {
             inner.fed.expected_children = n as usize;
+            inner.fed.child_averages.clear();
         }
         self.cv.notify_all();
         self.hub.wake_all();
@@ -344,6 +420,15 @@ impl Controller {
         inner.reassigned = req.reassigned;
         inner.groups.clear();
         inner.expected_groups.clear();
+        // Sharded plane: a round boundary resets the fan-in state — the
+        // shard's installed global, and (on the parent) the previous
+        // round's child partials plus the expected-children barrier.
+        inner.fanin = req.fanin;
+        inner.global_average = None;
+        inner.fed.child_averages.clear();
+        if let Some(children) = req.fed_children {
+            inner.fed.expected_children = children as usize;
+        }
         for (gid, chain) in req.groups {
             let mut gs = GroupState::new(chain.clone());
             gs.initiator = chain.first().copied();
@@ -368,6 +453,8 @@ impl Controller {
         inner.insec = insec::InsecState::default();
         inner.bon = bon::BonState::default();
         inner.fed = hierarchy::FedState::default();
+        inner.fanin = false;
+        inner.global_average = None;
         self.cv.notify_all();
         self.hub.wake_all();
         proto::status("ok")
@@ -467,7 +554,10 @@ impl Controller {
         gs.average_contributors = req.contributors;
         gs.last_activity = Instant::now();
         self.cv.notify_all();
-        if Self::average_barrier_complete(&inner) {
+        // On a shard, the barrier completing readies the *fan-in worker*
+        // (`shard_partial`), not the learners' `get_average` pollers —
+        // those wait for the installed global.
+        if !inner.fanin && Self::average_barrier_complete(&inner) {
             self.hub.wake(PollKey::Average);
         }
         proto::status("ok")
@@ -725,12 +815,12 @@ impl Handler for Controller {
     }
 }
 
-/// Completion-style view for the event runtime: the five SAFE long-poll
-/// ops probe their predicate exactly once and report the [`PollKey`] to
-/// wait on instead of parking the calling thread. Every other op answers
-/// immediately through the blocking [`Handler`] (posts and elections
-/// never park; the baseline ops are only driven by thread-based
-/// sessions).
+/// Completion-style view for the event runtime: the SAFE long-poll ops
+/// (plus the fan-in tier's global-average fetch) probe their predicate
+/// exactly once and report the [`PollKey`] to wait on instead of parking
+/// the calling thread. Every other op answers immediately through the
+/// blocking [`Handler`] (posts and elections never park; the baseline
+/// ops are only driven by thread-based sessions).
 impl NonBlockingHandler for Controller {
     fn try_handle(&self, path: &str, body: &Value) -> TryHandle {
         match path {
@@ -794,6 +884,16 @@ impl NonBlockingHandler for Controller {
                         owner: req.owner,
                         node: req.node,
                     }),
+                }
+            }
+            proto::FED_GET_GLOBAL_AVERAGE => {
+                let inner = self.inner.lock().unwrap();
+                match inner.fed.global() {
+                    Some((avg, total)) => TryHandle::Ready(
+                        proto::FedGlobalAverage { average: avg, contributors: total }
+                            .into_value(),
+                    ),
+                    None => TryHandle::WouldBlock(PollKey::FedGlobal),
                 }
             }
             _ => TryHandle::Ready(self.handle(path, body)),
@@ -1207,6 +1307,8 @@ mod tests {
             ]),
             merge_floor: true,
             reassigned: vec![],
+            fanin: false,
+            fed_children: None,
         };
         c.handle(proto::BEGIN_ROUND, &br.to_value());
         let mut post = proto::post_aggregate(1, 2, b"a1", 1);
@@ -1244,6 +1346,8 @@ mod tests {
             ]),
             merge_floor: true,
             reassigned: vec![],
+            fanin: false,
+            fed_children: None,
         };
         c.handle(proto::BEGIN_ROUND, &br.to_value());
         c.handle(proto::POST_AGGREGATE, &proto::post_aggregate(1, 2, b"a1", 1));

@@ -203,6 +203,9 @@ mod tests {
                 net_drops: 0,
                 dedup_posts: 0,
                 per_path: Default::default(),
+                fanin_messages: 0,
+                fanin_latency: Duration::ZERO,
+                shard_messages: vec![],
             })
             .collect()
     }

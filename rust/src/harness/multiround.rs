@@ -283,6 +283,9 @@ mod tests {
                 net_drops: u64::from(i == 2),
                 dedup_posts: 0,
                 per_path: Default::default(),
+                fanin_messages: 0,
+                fanin_latency: Duration::ZERO,
+                shard_messages: vec![],
             })
             .collect()
     }

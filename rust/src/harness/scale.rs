@@ -62,6 +62,10 @@ pub struct ScaleConfig {
     /// are derived from this profile's expected RTT (identical to the
     /// historical hardcoded values under the default ideal profile).
     pub net: NetProfile,
+    /// Controller shards (`--shards`): 1 = the classic single-controller
+    /// plane; K > 1 spreads the groups over K shard controllers with a
+    /// fan-in tier combining shard partials.
+    pub shards: usize,
 }
 
 impl Default for ScaleConfig {
@@ -77,6 +81,7 @@ impl Default for ScaleConfig {
             runtime: RuntimeKind::Events,
             workers: 0,
             net: NetProfile::default(),
+            shards: 1,
         }
     }
 }
@@ -112,6 +117,13 @@ pub struct ScaleRow {
     pub net_retries: u64,
     /// Injected request/response drops this round.
     pub net_drops: u64,
+    /// Fan-in tier messages this round (≤ 2K, counted outside the
+    /// `4n + 2f (+ g)` formula like rekey traffic; 0 when K = 1).
+    pub fanin_messages: u64,
+    /// Slowest shard's partial-post → global-install span (0 when K = 1).
+    pub fanin_latency_secs: f64,
+    /// Per-shard learner-path message counts (empty when K = 1).
+    pub shard_messages: Vec<u64>,
 }
 
 impl ScaleRow {
@@ -129,6 +141,14 @@ impl ScaleRow {
         } else {
             0.0
         }
+    }
+
+    /// Per-shard learner-path throughput this round (empty when K = 1).
+    pub fn shard_messages_per_sec(&self) -> Vec<f64> {
+        self.shard_messages
+            .iter()
+            .map(|&m| if self.secs > 0.0 { m as f64 / self.secs } else { 0.0 })
+            .collect()
     }
 }
 
@@ -196,15 +216,16 @@ impl ScaleReport {
         let _ = writeln!(
             out,
             "{:>5} {:>8} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5} \
-             {:>7} {:>6}",
+             {:>7} {:>6} {:>6} {:>8}",
             "round", "secs", "present", "groups", "contrib", "deaths", "rejoins", "merges",
-            "reassigned", "rekey", "messages", "expected", "Δ", "retries", "drops"
+            "reassigned", "rekey", "messages", "expected", "Δ", "retries", "drops", "fanin",
+            "fanin_s"
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
                 "{:>5} {:>8.3} {:>7} {:>6} {:>7} {:>6} {:>7} {:>6} {:>10} {:>6} {:>8} {:>8} {:>5} \
-                 {:>7} {:>6}",
+                 {:>7} {:>6} {:>6} {:>8.4}",
                 r.round,
                 r.secs,
                 r.present,
@@ -219,7 +240,9 @@ impl ScaleReport {
                 r.expected_messages,
                 r.formula_delta(),
                 r.net_retries,
-                r.net_drops
+                r.net_drops,
+                r.fanin_messages,
+                r.fanin_latency_secs
             );
         }
         let _ = writeln!(
@@ -246,12 +269,13 @@ impl ScaleReport {
         let mut out = String::from(
             "id,round,secs,present,groups,contributors,deaths,rejoins,merged_groups,\
              reassigned_nodes,rekey_messages,messages,expected_messages,formula_delta,\
-             progress_failovers,initiator_failovers,net_retries,net_drops\n",
+             progress_failovers,initiator_failovers,net_retries,net_drops,fanin_messages,\
+             fanin_latency_secs\n",
         );
         for r in &self.rows {
             let _ = writeln!(
                 out,
-                "{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}",
+                "{},{},{:.6},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{:.6}",
                 self.id,
                 r.round,
                 r.secs,
@@ -269,7 +293,9 @@ impl ScaleReport {
                 r.progress_failovers,
                 r.initiator_failovers,
                 r.net_retries,
-                r.net_drops
+                r.net_drops,
+                r.fanin_messages,
+                r.fanin_latency_secs
             );
         }
         out
@@ -300,12 +326,25 @@ impl ScaleReport {
                     ("initiator_failovers", Value::from(r.initiator_failovers)),
                     ("net_retries", Value::from(r.net_retries)),
                     ("net_drops", Value::from(r.net_drops)),
+                    ("fanin_messages", Value::from(r.fanin_messages)),
+                    ("fanin_latency_secs", Value::from(r.fanin_latency_secs)),
+                    (
+                        "shard_messages",
+                        Value::Arr(r.shard_messages.iter().map(|&m| Value::from(m)).collect()),
+                    ),
+                    (
+                        "shard_messages_per_sec",
+                        Value::Arr(
+                            r.shard_messages_per_sec().into_iter().map(Value::from).collect(),
+                        ),
+                    ),
                 ])
             })
             .collect();
         Value::object(vec![
             ("id", Value::from(self.id.as_str())),
             ("n_nodes", Value::from(self.config.n_nodes)),
+            ("shards", Value::from(self.config.shards)),
             ("groups_configured", Value::from(self.config.groups)),
             ("rounds", Value::from(self.config.rounds)),
             ("lambda_die", Value::from(self.config.lambda_die)),
@@ -372,6 +411,7 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
         seed: Some(sc.seed),
         merge_floor: true,
         net: sc.net.clone(),
+        shards: sc.shards,
         ..Default::default()
     };
     let churn = ChurnSchedule::poisson(
@@ -474,10 +514,17 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
             initiator_failovers: m.initiator_failovers,
             net_retries: m.net_retries,
             net_drops: m.net_drops,
+            fanin_messages: m.fanin_messages,
+            fanin_latency_secs: m.fanin_latency.as_secs_f64(),
+            shard_messages: m.shard_messages.clone(),
         });
     }
     Ok(ScaleReport {
-        id: "scale_poisson".to_string(),
+        id: if sc.shards > 1 {
+            format!("scale_poisson_k{}", sc.shards)
+        } else {
+            "scale_poisson".to_string()
+        },
         config: sc.clone(),
         setup_messages,
         rows,
@@ -486,6 +533,16 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
         workers: resolved_workers_for(sc.runtime, sc.workers),
         peak_threads: peak_threads.load(Ordering::SeqCst),
     })
+}
+
+/// Run the same Poisson churn scenario at each plane width in
+/// `shard_counts` (e.g. `[1, 2, 4]`), holding every other knob fixed —
+/// the `--shards` K-sweep the scale bench renders side by side.
+pub fn shard_sweep(base: &ScaleConfig, shard_counts: &[usize]) -> Result<Vec<ScaleReport>> {
+    shard_counts
+        .iter()
+        .map(|&k| poisson_scale(&ScaleConfig { shards: k.max(1), ..base.clone() }))
+        .collect()
 }
 
 fn runtime_name(r: RuntimeKind) -> &'static str {
@@ -805,6 +862,9 @@ mod tests {
                     initiator_failovers: 0,
                     net_retries: 0,
                     net_drops: u64::from(round == 2),
+                    fanin_messages: 4,
+                    fanin_latency_secs: 0.01,
+                    shard_messages: vec![20, 18],
                 })
                 .collect(),
             probe_samples: 7,
@@ -833,6 +893,14 @@ mod tests {
         let row = &json.get("per_round").unwrap().as_arr().unwrap()[0];
         let mps = row.get("messages_per_sec").and_then(|v| v.as_f64()).unwrap();
         assert!((mps - (4.0 * 9.0 + 4.0) / 0.1).abs() < 1e-6);
+        // Sharded-plane columns ride along in every rendering.
+        assert_eq!(json.u64_of("shards"), Some(1));
+        assert_eq!(row.u64_of("fanin_messages"), Some(4));
+        assert_eq!(row.get("shard_messages").unwrap().as_arr().unwrap().len(), 2);
+        let smps = row.get("shard_messages_per_sec").unwrap().as_arr().unwrap();
+        assert!((smps[0].as_f64().unwrap() - 200.0).abs() < 1e-6);
+        assert!(r.to_csv().lines().next().unwrap().contains("fanin_messages"));
+        assert!(r.to_table().contains("fanin"));
     }
 
     #[test]

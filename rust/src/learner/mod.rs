@@ -84,6 +84,10 @@ pub struct LearnerContext {
     /// Session-wide message counters — the learner records its own
     /// retries here so they surface in `RoundMetrics`.
     pub stats: Arc<MessageStats>,
+    /// Home controller shard brokering this learner's chain (sharded
+    /// plane): the event executor routes the learner's calls through the
+    /// shard's transport/hub pair. Always 0 when `--shards 1`.
+    pub shard: usize,
     /// Monotonic per-context sequence for attempt-dedup tokens. Combined
     /// with the node id into a token that is unique per *logical* post but
     /// stable across retries of the same post, so a resend after
@@ -193,6 +197,7 @@ impl LearnerContext {
             epoch: self.epoch,
             retry: self.retry,
             stats: self.stats.clone(),
+            shard: self.shard,
             // Fresh token space per fork is fine: the controller's
             // seen-token set is per (group, round) and resets with it.
             post_seq: std::sync::atomic::AtomicU64::new(0),

@@ -85,6 +85,12 @@ fn print_help() {
                                           into its smallest neighbour (only\n\
                                           moved nodes re-key) instead of\n\
                                           aborting the round\n\
+                   [--shards K]           controller shards (default 1):\n\
+                                          spread the groups over K parallel\n\
+                                          shard controllers with a fan-in\n\
+                                          tier combining shard partials\n\
+                                          (in-proc transport only; K is\n\
+                                          clamped to the group count)\n\
            insec   --nodes N --features F   INSEC baseline round\n\
            bon     --nodes N --features F   BON (Bonawitz) baseline round\n\
            train   --nodes N --rounds R [--local-steps S] [--lr LR]\n\

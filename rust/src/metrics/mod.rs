@@ -56,6 +56,20 @@ pub struct RoundMetrics {
     pub dedup_posts: u64,
     /// Messages by path (for the message-accounting tests).
     pub per_path: std::collections::BTreeMap<String, u64>,
+    /// Fan-in tier messages this round (sharded plane): each live shard's
+    /// worker posts its partial and fetches the combined global — exactly
+    /// 2 per live shard on a healthy round, ≤ 2K + the degraded partial
+    /// fetches otherwise. Counted separately from `messages` (same
+    /// discipline as `rekey_messages`): the `4n + 2f (+g)` bound covers
+    /// learner traffic, and the fan-in term rides next to it.
+    pub fanin_messages: u64,
+    /// Fan-in latency: the slowest shard worker's post→install span (the
+    /// serial tail the fan-in tier adds to the round). Zero when K=1.
+    pub fanin_latency: Duration,
+    /// Per-shard learner message counts this round, indexed by shard.
+    /// Empty on a single-shard plane (no per-shard split is recorded —
+    /// the totals are the single shard).
+    pub shard_messages: Vec<u64>,
 }
 
 impl RoundMetrics {
@@ -118,6 +132,9 @@ mod tests {
             net_drops: 0,
             dedup_posts: 0,
             per_path: Default::default(),
+            fanin_messages: 0,
+            fanin_latency: Duration::ZERO,
+            shard_messages: vec![],
         }
     }
 

@@ -158,13 +158,28 @@ pub struct BeginRound {
     /// group. Informational for the controller (surfaced via `/status`);
     /// the re-key traffic these deltas imply is client-driven.
     pub reassigned: Vec<crate::topology::Reassignment>,
+    /// This controller is a shard of a sharded plane: its global average
+    /// arrives from the fan-in parent (`install_global_average`) instead
+    /// of being computed locally, so the §5.5 barrier must not release
+    /// `get_average` pollers on its own.
+    pub fanin: bool,
+    /// Fan-in parent only: the number of shard children expected to post
+    /// a `FedChildAverage` this round (resets the federation barrier).
+    pub fed_children: Option<u64>,
 }
 
 impl BeginRound {
     /// A plain epoch-reset request with no merge metadata (the shape
-    /// pre-topology clients send; both new fields default off).
+    /// pre-topology clients send; all optional fields default off).
     pub fn new(epoch: u64, groups: BTreeMap<u64, Vec<u64>>) -> BeginRound {
-        BeginRound { epoch, groups, merge_floor: false, reassigned: Vec::new() }
+        BeginRound {
+            epoch,
+            groups,
+            merge_floor: false,
+            reassigned: Vec::new(),
+            fanin: false,
+            fed_children: None,
+        }
     }
 
     pub fn to_value(&self) -> Value {
@@ -185,6 +200,12 @@ impl BeginRound {
                 "reassigned",
                 Value::Arr(self.reassigned.iter().map(|r| r.to_value()).collect()),
             );
+        }
+        if self.fanin {
+            v.set("fanin", Value::from(true));
+        }
+        if let Some(children) = self.fed_children {
+            v.set("fed_children", Value::from(children));
         }
         v
     }
@@ -219,6 +240,8 @@ impl BeginRound {
             groups,
             merge_floor: v.bool_of("merge_floor").unwrap_or(false),
             reassigned,
+            fanin: v.bool_of("fanin").unwrap_or(false),
+            fed_children: v.u64_of("fed_children"),
         })
     }
 }
@@ -829,11 +852,15 @@ mod tests {
                 crate::topology::Reassignment { node: 5, from_group: 2, to_group: 1 },
                 crate::topology::Reassignment { node: 6, from_group: 2, to_group: 1 },
             ],
+            fanin: true,
+            fed_children: Some(2),
         };
         let rt = BeginRound::from_value(&br.to_value()).unwrap();
         assert_eq!(rt, br);
         assert!(rt.merge_floor);
         assert_eq!(rt.reassigned.len(), 2);
+        assert!(rt.fanin);
+        assert_eq!(rt.fed_children, Some(2));
 
         let no = NodeOp::new(5, 1);
         assert_eq!(NodeOp::from_value(&no.to_value()).unwrap(), no);

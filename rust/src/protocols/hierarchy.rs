@@ -1,25 +1,100 @@
 //! Hierarchical federation client (§5.10): after a local SAFE aggregation
 //! completes, a bridge posts the (already anonymized) child average to a
 //! parent controller and fetches the global cross-controller average.
+//!
+//! The sharded aggregation plane runs one bridge per shard as its fan-in
+//! worker: post the shard partial (1 message), long-poll the combined
+//! global (1 message), install it back on the shard. Against an in-proc
+//! parent the fetch is a completion-style long-poll — `submit` parks on
+//! [`PollKey::FedGlobal`](crate::transport::PollKey) in the parent's
+//! [`WaitHub`] and a condvar wait replaces the old sleep-poll loop, so
+//! the fan-in tier costs exactly one request/response per shard per
+//! round, fully accounted in [`MessageStats`](crate::transport::MessageStats).
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::json::Value;
 use crate::proto;
-use crate::transport::ClientTransport;
+use crate::transport::{ClientTransport, InProcTransport, Submitted, WaitHub, WakeSink};
+
+/// Condvar-backed [`WakeSink`]: the fan-in workers' side of the parent's
+/// [`WaitHub`]. Each blocked `get_global_average` registers a waiter id;
+/// a hub wake flips its flag and notifies the parked worker thread —
+/// completion-style delivery without an event executor in the loop.
+#[derive(Default)]
+pub struct FanInWaiters {
+    waiters: Mutex<BTreeMap<u64, Arc<(Mutex<bool>, Condvar)>>>,
+    next_id: AtomicU64,
+}
+
+impl FanInWaiters {
+    /// Allocate a waiter slot. The caller must `remove` it when done.
+    fn register(&self) -> (u64, Arc<(Mutex<bool>, Condvar)>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let waiter = Arc::new((Mutex::new(false), Condvar::new()));
+        self.waiters.lock().unwrap().insert(id, waiter.clone());
+        (id, waiter)
+    }
+
+    fn remove(&self, id: u64) {
+        self.waiters.lock().unwrap().remove(&id);
+    }
+}
+
+impl WakeSink for FanInWaiters {
+    fn wake(&self, task: u64, _generation: u64) {
+        // Waiters re-probe after waking, so a stale generation is
+        // harmless — the probe just parks again.
+        if let Some(w) = self.waiters.lock().unwrap().get(&task).cloned() {
+            *w.0.lock().unwrap() = true;
+            w.1.notify_all();
+        }
+    }
+}
+
+/// The completion-style path to an in-proc parent: a transport with a
+/// non-blocking handler attached, the parent's wait hub, and the shared
+/// waiter registry installed as that hub's sink.
+struct FanInCompletion {
+    transport: Arc<InProcTransport>,
+    hub: Arc<WaitHub>,
+    waiters: Arc<FanInWaiters>,
+}
 
 /// Bridge one child controller's result up to the parent.
 pub struct FederationBridge {
     pub child_id: u64,
     pub parent: Arc<dyn ClientTransport>,
+    completion: Option<FanInCompletion>,
 }
 
 impl FederationBridge {
+    /// Bridge over a plain transport (e.g. HTTP): `get_global_average`
+    /// falls back to repeated server-side long-polls.
     pub fn new(child_id: u64, parent: Arc<dyn ClientTransport>) -> Self {
-        FederationBridge { child_id, parent }
+        FederationBridge { child_id, parent, completion: None }
+    }
+
+    /// Bridge over an in-proc parent in completion style: one submitted
+    /// fetch parks on the parent's `hub` until the fan-in barrier wakes
+    /// it. `waiters` must be installed as `hub`'s sink (shared by every
+    /// shard's bridge).
+    pub fn over_completion(
+        child_id: u64,
+        transport: Arc<InProcTransport>,
+        hub: Arc<WaitHub>,
+        waiters: Arc<FanInWaiters>,
+    ) -> Self {
+        FederationBridge {
+            child_id,
+            parent: transport.clone(),
+            completion: Some(FanInCompletion { transport, hub, waiters }),
+        }
     }
 
     /// Post this child's average (cleartext — it is already anonymized
@@ -35,19 +110,111 @@ impl FederationBridge {
         Ok(())
     }
 
-    /// Poll the parent for the global average.
+    /// Fetch the global average, waiting up to `timeout`; errors if the
+    /// fan-in barrier does not complete in time.
     pub fn get_global_average(&self, timeout: Duration) -> Result<(Vec<f64>, u64)> {
+        match self.try_get_global_average(timeout)? {
+            Some(global) => Ok(global),
+            None => bail!("global average not available within {timeout:?}"),
+        }
+    }
+
+    /// Fetch the global average, waiting up to `timeout`; `None` when the
+    /// barrier did not complete (the caller may degrade to
+    /// [`FederationBridge::get_partial_global`]).
+    pub fn try_get_global_average(
+        &self,
+        timeout: Duration,
+    ) -> Result<Option<(Vec<f64>, u64)>> {
+        if let Some(c) = &self.completion {
+            return self.wait_completion(c, timeout);
+        }
+        // Blocking fallback: each iteration is one server-side long-poll
+        // (the parent parks up to its poll_time before answering empty).
         let deadline = Instant::now() + timeout;
         loop {
             let resp = self.parent.call(proto::FED_GET_GLOBAL_AVERAGE, &Value::obj())?;
             if !proto::is_empty_status(&resp) {
                 let global = proto::FedGlobalAverage::from_value(&resp)?;
-                return Ok((global.average, global.contributors));
+                return Ok(Some((global.average, global.contributors)));
             }
             if Instant::now() > deadline {
-                bail!("global average not available within {timeout:?}");
+                return Ok(None);
             }
         }
+    }
+
+    /// One submitted request, completed by a hub wake: no polling between
+    /// submission and the barrier completing (or the deadline passing, in
+    /// which case the pending request is closed with the same accounted
+    /// empty response a blocking poll timeout produces).
+    fn wait_completion(
+        &self,
+        c: &FanInCompletion,
+        timeout: Duration,
+    ) -> Result<Option<(Vec<f64>, u64)>> {
+        let path = proto::FED_GET_GLOBAL_AVERAGE;
+        let body = Value::obj();
+        let deadline = Instant::now() + timeout;
+        let key = match c.transport.submit(path, &body)? {
+            Submitted::Ready(resp) => return Ok(Some(Self::parse_global(&resp)?)),
+            Submitted::Pending(key) => key,
+        };
+        let (id, waiter) = c.waiters.register();
+        let result = loop {
+            // (Re-)register, then re-probe to close the lost-wakeup race:
+            // the barrier may have completed between probe and register.
+            c.hub.register(key, id, 0);
+            if let Some(resp) = c.transport.try_complete(path, &body)? {
+                break Some(resp);
+            }
+            let (lock, cv) = &*waiter;
+            let mut woken = lock.lock().unwrap();
+            let timed_out = loop {
+                if *woken {
+                    // Consume the wake; the outer loop re-probes (a stale
+                    // wake — e.g. a round reset's wake_all — parks again).
+                    *woken = false;
+                    break false;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    break true;
+                }
+                let (g, _) = cv.wait_timeout(woken, deadline - now).unwrap();
+                woken = g;
+            };
+            if timed_out {
+                break None;
+            }
+        };
+        c.waiters.remove(id);
+        match result {
+            Some(resp) => Ok(Some(Self::parse_global(&resp)?)),
+            None => {
+                // Deadline: close the pending request with the accounted
+                // empty response, same as a blocking poll timing out.
+                let _ = c.transport.complete_empty(path)?;
+                Ok(None)
+            }
+        }
+    }
+
+    /// Degraded fetch after a fan-in timeout: the combine over whichever
+    /// children have posted (`None` when no child posted at all). The
+    /// extra message only happens on degraded rounds.
+    pub fn get_partial_global(&self) -> Result<Option<(Vec<f64>, u64)>> {
+        let body = Value::object(vec![("partial", Value::from(true))]);
+        let resp = self.parent.call(proto::FED_GET_GLOBAL_AVERAGE, &body)?;
+        if proto::is_empty_status(&resp) {
+            return Ok(None);
+        }
+        Ok(Some(Self::parse_global(&resp)?))
+    }
+
+    fn parse_global(resp: &Value) -> Result<(Vec<f64>, u64)> {
+        let global = proto::FedGlobalAverage::from_value(resp)?;
+        Ok((global.average, global.contributors))
     }
 }
 
@@ -55,18 +222,23 @@ impl FederationBridge {
 mod tests {
     use super::*;
     use crate::controller::{Controller, ControllerConfig};
-    use crate::transport::{Handler, InProcTransport};
+    use crate::transport::{Handler, MessageStats};
 
-    #[test]
-    fn two_children_federate() {
+    fn parent_controller(children: u64) -> Arc<Controller> {
         let parent = Arc::new(Controller::new(ControllerConfig {
             poll_time: Duration::from_millis(100),
             ..Default::default()
         }));
         parent.handle(
             proto::CONFIGURE,
-            &Value::object(vec![("fed_expected_children", Value::from(2u64))]),
+            &Value::object(vec![("fed_expected_children", Value::from(children))]),
         );
+        parent
+    }
+
+    #[test]
+    fn two_children_federate() {
+        let parent = parent_controller(2);
         let t1: Arc<dyn ClientTransport> = Arc::new(InProcTransport::new(parent.clone()));
         let t2: Arc<dyn ClientTransport> = Arc::new(InProcTransport::new(parent.clone()));
         let b1 = FederationBridge::new(1, t1);
@@ -76,5 +248,76 @@ mod tests {
         let (avg, total) = b1.get_global_average(Duration::from_secs(2)).unwrap();
         assert_eq!(total, 10);
         assert!((avg[0] - 16.0).abs() < 1e-12); // (10*4 + 20*6)/10
+    }
+
+    #[test]
+    fn completion_long_poll_wakes_without_polling() {
+        let parent = parent_controller(2);
+        let stats = Arc::new(MessageStats::default());
+        let hub = parent.wait_hub();
+        let waiters = Arc::new(FanInWaiters::default());
+        hub.set_sink(waiters.clone());
+        let transport = |p: &Arc<Controller>| {
+            Arc::new(
+                InProcTransport::with_shared_stats(
+                    p.clone(),
+                    stats.clone(),
+                    Duration::ZERO,
+                )
+                .with_completion(p.clone()),
+            )
+        };
+        let b1 = FederationBridge::over_completion(
+            1,
+            transport(&parent),
+            hub.clone(),
+            waiters.clone(),
+        );
+        let b2 = FederationBridge::over_completion(2, transport(&parent), hub, waiters);
+        b1.post_child_average(&[10.0], 4).unwrap();
+        let fetcher = std::thread::spawn(move || {
+            // Parked well past the parent's poll_time: a sleep-poll loop
+            // would need several messages; the completion path uses one.
+            b1.get_global_average(Duration::from_secs(5)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(250));
+        b2.post_child_average(&[20.0], 6).unwrap();
+        let (avg, total) = fetcher.join().unwrap();
+        assert_eq!(total, 10);
+        assert!((avg[0] - 16.0).abs() < 1e-12);
+        // Exactly 3 requests crossed the wire: two posts + ONE fetch.
+        let per_path = stats.per_path();
+        assert_eq!(per_path.get(proto::FED_POST_CHILD_AVERAGE), Some(&2));
+        assert_eq!(per_path.get(proto::FED_GET_GLOBAL_AVERAGE), Some(&1));
+        // And its response bytes were accounted like any other path.
+        let fetch = &stats.per_path_stats()[proto::FED_GET_GLOBAL_AVERAGE];
+        assert!(fetch.bytes_sent > 0 && fetch.bytes_received > 0);
+    }
+
+    #[test]
+    fn completion_timeout_degrades_to_partial() {
+        // Expected 2 children but only one posts (a dead shard): the
+        // completion fetch times out with an accounted empty response and
+        // the partial fetch serves the degraded combine.
+        let parent = parent_controller(2);
+        let stats = Arc::new(MessageStats::default());
+        let hub = parent.wait_hub();
+        let waiters = Arc::new(FanInWaiters::default());
+        hub.set_sink(waiters.clone());
+        let t = Arc::new(
+            InProcTransport::with_shared_stats(parent.clone(), stats.clone(), Duration::ZERO)
+                .with_completion(parent.clone()),
+        );
+        let b = FederationBridge::over_completion(1, t, hub, waiters);
+        b.post_child_average(&[10.0], 4).unwrap();
+        let start = Instant::now();
+        let got = b.try_get_global_average(Duration::from_millis(200)).unwrap();
+        assert!(got.is_none(), "barrier cannot complete with a dead shard");
+        assert!(start.elapsed() >= Duration::from_millis(200));
+        let (avg, total) = b.get_partial_global().unwrap().unwrap();
+        assert_eq!(total, 4);
+        assert!((avg[0] - 10.0).abs() < 1e-12);
+        // One post + one (timed-out) fetch + one partial fetch.
+        assert_eq!(stats.per_path().get(proto::FED_GET_GLOBAL_AVERAGE), Some(&2));
     }
 }

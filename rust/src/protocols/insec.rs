@@ -136,6 +136,9 @@ impl InsecSession {
             net_drops: 0,
             dedup_posts: 0,
             per_path: Default::default(),
+            fanin_messages: 0,
+            fanin_latency: std::time::Duration::ZERO,
+            shard_messages: vec![],
         })
     }
 }

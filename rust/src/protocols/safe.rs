@@ -4,12 +4,14 @@
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 use once_cell::sync::Lazy;
 
 use crate::config::{RuntimeKind, SessionConfig, TransportKind, VectorEngine};
 use crate::controller::{Controller, ControllerConfig};
+use crate::protocols::hierarchy::{FanInWaiters, FederationBridge};
 use crate::crypto::envelope::CipherMode;
 use crate::crypto::rng::{DeterministicRng, SecureRng, SystemRng};
 use crate::crypto::rsa::{RsaKeyPair, RsaPublicKey};
@@ -58,12 +60,28 @@ pub fn keypair_for(seed: Option<u64>, node: u64, bits: usize) -> RsaKeyPair {
 /// One fully-wired SAFE deployment.
 pub struct SafeSession {
     pub cfg: SessionConfig,
+    /// Shard 0's controller — *the* controller on an unsharded plane
+    /// (`--shards 1`, the default), kept as a public field for tests and
+    /// tooling that poke broker state directly.
     pub controller: Arc<Controller>,
+    /// The aggregation plane: K shard controllers (`--shards K`), each a
+    /// full message broker for its groups' chains, mailboxes and epoch
+    /// state. Length 1 (aliasing `controller`) on an unsharded plane.
+    shards: Vec<Arc<Controller>>,
+    /// The fan-in tier (K > 1 only): a parent controller owning the key
+    /// registry and combining contributor-weighted shard partials into
+    /// the global average (§5.10 generalized).
+    parent: Option<Arc<Controller>>,
     /// The topology subsystem: owns membership and produces one immutable
     /// [`TopologyPlan`] per round (chain re-formation, per-round
-    /// permutation, privacy-floor merge re-balancing).
+    /// permutation, privacy-floor merge re-balancing, shard assignment).
     planner: GroupPlanner,
     stats: Arc<MessageStats>,
+    /// Per-shard learner-path counters (K > 1 only): chain traffic lands
+    /// here while key-plane/monitor/fan-in traffic stays on the session
+    /// counter; metrics sum both views. Empty when K = 1 so the single-
+    /// shard wiring (and its message accounting) is untouched.
+    shard_stats: Vec<Arc<MessageStats>>,
     /// Master per-node contexts: the long-lived key material and transport
     /// of every configured learner. Behind a mutex because a rejoin
     /// re-keys (replaces) individual entries mid-`run_rounds`; per-round
@@ -74,7 +92,18 @@ pub struct SafeSession {
     /// transport, where `run_rounds` falls back to thread-per-learner
     /// actors.
     executor: Option<Arc<EventExecutor>>,
-    monitor_transport: Arc<dyn ClientTransport>,
+    /// One monitor transport per shard (a single one when K = 1); also
+    /// carries the per-round `begin_round` to its shard.
+    monitor_transports: Vec<Arc<dyn ClientTransport>>,
+    /// Session-counted transport to the fan-in parent (K > 1 only), for
+    /// the per-round parent epoch reset.
+    parent_transport: Option<Arc<dyn ClientTransport>>,
+    /// Cached per-shard learner transports (K > 1 only): thread-runtime
+    /// round forks route chain ops through their home shard here.
+    shard_transports: Vec<Arc<dyn ClientTransport>>,
+    /// One fan-in bridge per shard (K > 1 only), completion-wired to the
+    /// parent: post the shard partial, long-poll the combined global.
+    fanin_bridges: Vec<Arc<FederationBridge>>,
     /// Keep the loopback HTTP server alive for HTTP transport sessions.
     _http_server: Option<HttpServer>,
     /// Messages spent on round 0 (key exchange) — reported separately,
@@ -108,10 +137,58 @@ impl SafeRoundResult {
 }
 
 impl SafeSession {
-    /// Shared message statistics (in-proc transports; HTTP clients keep
-    /// their own counters).
+    /// Session-wide message statistics: every message when K = 1; the
+    /// key-plane/monitor/fan-in share when sharded (per-shard learner
+    /// counters are summed into [`RoundMetrics`] separately). HTTP clients
+    /// keep their own counters.
     pub fn stats(&self) -> Arc<MessageStats> {
         self.stats.clone()
+    }
+
+    /// Width of the aggregation plane (the `--shards` flag clamped to the
+    /// configured group count).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    // Session-wide rollups: the shared counter plus every per-shard
+    // counter. When K = 1 the shard list is empty, so each of these is
+    // exactly the old single-counter read.
+    fn total_messages(&self) -> u64 {
+        self.stats.total() + self.shard_stats.iter().map(|s| s.total()).sum::<u64>()
+    }
+
+    fn total_bytes(&self) -> u64 {
+        self.stats.bytes() + self.shard_stats.iter().map(|s| s.bytes()).sum::<u64>()
+    }
+
+    fn total_bytes_received(&self) -> u64 {
+        self.stats.bytes_received()
+            + self.shard_stats.iter().map(|s| s.bytes_received()).sum::<u64>()
+    }
+
+    fn total_retries(&self) -> u64 {
+        self.stats.retries() + self.shard_stats.iter().map(|s| s.retries()).sum::<u64>()
+    }
+
+    fn total_drops(&self) -> u64 {
+        self.stats.drops() + self.shard_stats.iter().map(|s| s.drops()).sum::<u64>()
+    }
+
+    fn total_dedup(&self) -> u64 {
+        self.stats.dedup_posts()
+            + self.shard_stats.iter().map(|s| s.dedup_posts()).sum::<u64>()
+    }
+
+    /// Per-path counts merged across the shared and per-shard counters.
+    fn merged_per_path(&self) -> BTreeMap<String, u64> {
+        let mut merged = self.stats.per_path();
+        for s in &self.shard_stats {
+            for (k, v) in s.per_path() {
+                *merged.entry(k).or_insert(0) += v;
+            }
+        }
+        merged
     }
 
     /// Build the deployment and run round 0 (key exchange).
@@ -122,8 +199,36 @@ impl SafeSession {
             progress_timeout: cfg.progress_timeout,
             bon_round2_timeout: cfg.progress_timeout,
         };
-        let controller = Arc::new(Controller::new(ctrl_cfg));
+        // The topology subsystem fixes the effective plane width K up
+        // front (`--shards` clamped to the configured group count — a
+        // shard with no groups would idle forever).
+        let planner = GroupPlanner::from_config(&cfg);
+        let shard_count = planner.shards();
+        if shard_count > 1 && !matches!(cfg.transport, TransportKind::InProc) {
+            bail!(
+                "--shards {shard_count} requires the in-proc transport \
+                 (an HTTP deployment serves a single controller)"
+            );
+        }
+        // The aggregation plane: K shard controllers plus (K > 1) one
+        // fan-in parent owning the key registry and the cross-shard
+        // combine. K = 1 is exactly the single-controller deployment.
+        let shards: Vec<Arc<Controller>> = (0..shard_count)
+            .map(|_| Arc::new(Controller::new(ctrl_cfg.clone())))
+            .collect();
+        let controller = shards[0].clone();
+        let parent: Option<Arc<Controller>> =
+            (shard_count > 1).then(|| Arc::new(Controller::new(ctrl_cfg.clone())));
+        // Key-plane ops (round 0 + rekey) go to the parent when sharded —
+        // one registry serves every shard — and to the controller itself
+        // otherwise.
+        let key_plane: Arc<Controller> = parent.clone().unwrap_or_else(|| controller.clone());
         let stats = Arc::new(MessageStats::default());
+        let shard_stats: Vec<Arc<MessageStats>> = if shard_count > 1 {
+            (0..shard_count).map(|_| Arc::new(MessageStats::default())).collect()
+        } else {
+            Vec::new()
+        };
         // Hostile-network injection (`--net`): one shared fault source for
         // every transport in the session. Per-link determinism is keyed
         // inside `NetFaults`; `None` keeps the ideal path byte-identical.
@@ -132,14 +237,32 @@ impl SafeSession {
         } else {
             Some(Arc::new(NetFaults::new(cfg.net.clone())))
         };
+        // Session-counted in-proc transport to any member of the plane
+        // (a shard or the parent), with a caller-chosen stats sink.
+        let plane_transport = |target: &Arc<Controller>,
+                               sink: &Arc<MessageStats>|
+         -> Arc<dyn ClientTransport> {
+            let mut t = InProcTransport::with_costs(
+                target.clone(),
+                sink.clone(),
+                cfg.profile.network_hop,
+                cfg.profile.network_per_kib,
+            )
+            .with_wire_format(cfg.wire);
+            if let Some(n) = &net {
+                t = t.with_net(n.clone());
+            }
+            Arc::new(t)
+        };
 
-        // Transport factory per node (+ one for the monitor).
+        // Transport factory per node (+ one for the monitor): the key
+        // plane (parent when sharded).
         let mut http_server = None;
         let make_transport: Box<dyn Fn() -> Result<Arc<dyn ClientTransport>>> = match &cfg
             .transport
         {
             TransportKind::InProc => {
-                let ctrl = controller.clone();
+                let ctrl = key_plane.clone();
                 let stats = stats.clone();
                 let hop = cfg.profile.network_hop;
                 let per_kib = cfg.profile.network_per_kib;
@@ -188,9 +311,8 @@ impl SafeSession {
             }
         };
 
-        // Configure the controller with the planner's configured topology
+        // Configure the plane with the planner's configured topology
         // (the base plan: full membership, no churn, no merges).
-        let planner = GroupPlanner::from_config(&cfg);
         let base = planner.base_plan();
         let chains = base.groups().to_vec();
         for (_, chain) in &chains {
@@ -201,18 +323,8 @@ impl SafeSession {
                 );
             }
         }
-        let mut groups_obj = Value::obj();
-        for (gid, chain) in &chains {
-            groups_obj.set(
-                &gid.to_string(),
-                Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
-            );
-        }
-        let setup_transport = make_transport()?;
-        setup_transport.call(
-            proto::CONFIGURE,
-            &Value::object(vec![
-                ("groups", groups_obj),
+        let timeout_fields = || {
+            vec![
                 (
                     "aggregation_timeout_ms",
                     Value::from(cfg.aggregation_timeout.as_millis() as u64),
@@ -222,8 +334,41 @@ impl SafeSession {
                     Value::from(cfg.progress_timeout.as_millis() as u64),
                 ),
                 ("poll_time_ms", Value::from(cfg.poll_time.as_millis() as u64)),
-            ]),
-        )?;
+            ]
+        };
+        let setup_transport = make_transport()?;
+        if shard_count == 1 {
+            let mut groups_obj = Value::obj();
+            for (gid, chain) in &chains {
+                groups_obj.set(
+                    &gid.to_string(),
+                    Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
+                );
+            }
+            let mut fields = vec![("groups", groups_obj)];
+            fields.extend(timeout_fields());
+            setup_transport.call(proto::CONFIGURE, &Value::object(fields))?;
+        } else {
+            // Sharded plane: each shard controller is configured with its
+            // groups only; the parent gets no chains — just timeouts and
+            // the fan-in barrier width (re-announced every round for the
+            // live shard count).
+            for (s, shard) in shards.iter().enumerate() {
+                let mut groups_obj = Value::obj();
+                for (gid, chain) in base.groups_for_shard(s) {
+                    groups_obj.set(
+                        &gid.to_string(),
+                        Value::Arr(chain.iter().map(|&n| Value::from(n)).collect()),
+                    );
+                }
+                let mut fields = vec![("groups", groups_obj)];
+                fields.extend(timeout_fields());
+                plane_transport(shard, &stats).call(proto::CONFIGURE, &Value::object(fields))?;
+            }
+            let mut fields = timeout_fields();
+            fields.push(("fed_expected_children", Value::from(shard_count as u64)));
+            setup_transport.call(proto::CONFIGURE, &Value::object(fields))?;
+        }
 
         // ---- Round 0: key generation + registry (§5.1, footnote 3) ----
         // SAF mode (CipherMode::None) never seals a payload, so per-node
@@ -300,6 +445,7 @@ impl SafeSession {
                     epoch: 0,
                     retry: cfg.net.retry_policy(),
                     stats: stats.clone(),
+                    shard: base.shard_of_group(*gid).unwrap_or(0),
                     post_seq: std::sync::atomic::AtomicU64::new(0),
                     rsa_dec: once_cell::sync::OnceCell::new(),
                 }));
@@ -364,27 +510,80 @@ impl SafeSession {
         }
 
         let round0_messages = stats.total();
-        let monitor_transport = make_transport()?;
+        // One monitor transport per shard (each shard runs §5.3 progress
+        // detection over its own chains); the single-shard path keeps the
+        // factory-built transport exactly as before.
+        let monitor_transports: Vec<Arc<dyn ClientTransport>> = if shard_count > 1 {
+            shards.iter().map(|s| plane_transport(s, &stats)).collect()
+        } else {
+            vec![make_transport()?]
+        };
+        let parent_transport: Option<Arc<dyn ClientTransport>> =
+            parent.as_ref().map(|p| plane_transport(p, &stats));
+        let shard_transports: Vec<Arc<dyn ClientTransport>> = shard_stats
+            .iter()
+            .enumerate()
+            .map(|(s, st)| plane_transport(&shards[s], st))
+            .collect();
+        // Fan-in bridges (K > 1): one per shard, completion-wired to the
+        // parent so the global-average fetch parks on the parent's wait
+        // hub instead of sleep-polling. No `--net` faults here — the
+        // fan-in tier models the inter-controller backbone, not the
+        // hostile edge network the learners cross.
+        let fanin_bridges: Vec<Arc<FederationBridge>> = match &parent {
+            Some(p) => {
+                let waiters = Arc::new(FanInWaiters::default());
+                p.wait_hub().set_sink(waiters.clone());
+                (0..shard_count)
+                    .map(|s| {
+                        let t = InProcTransport::with_costs(
+                            p.clone(),
+                            stats.clone(),
+                            cfg.profile.network_hop,
+                            cfg.profile.network_per_kib,
+                        )
+                        .with_wire_format(cfg.wire)
+                        .with_completion(p.clone());
+                        Arc::new(FederationBridge::over_completion(
+                            (s + 1) as u64,
+                            Arc::new(t),
+                            p.wait_hub(),
+                            waiters.clone(),
+                        ))
+                    })
+                    .collect()
+            }
+            None => Vec::new(),
+        };
 
         // The event runtime needs the completion-style transport (submit /
-        // try_complete) and the controller's wait hub — both in-proc-only,
-        // so HTTP sessions fall back to the thread runtime.
+        // try_complete) and each shard's wait hub — both in-proc-only, so
+        // HTTP sessions fall back to the thread runtime. One worker pool
+        // drives all K shard planes, routing each learner's calls through
+        // its home shard's transport/hub pair.
         let executor = match (&cfg.transport, cfg.runtime) {
             (TransportKind::InProc, RuntimeKind::Events) => {
-                let mut exec_transport = InProcTransport::with_costs(
-                    controller.clone(),
-                    stats.clone(),
-                    cfg.profile.network_hop,
-                    cfg.profile.network_per_kib,
-                )
-                .with_wire_format(cfg.wire)
-                .with_completion(controller.clone());
-                if let Some(n) = &net {
-                    exec_transport = exec_transport.with_net(n.clone());
-                }
-                Some(EventExecutor::start(
-                    Arc::new(exec_transport),
-                    controller.wait_hub(),
+                let planes = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(s, shard)| {
+                        let sink = shard_stats.get(s).cloned().unwrap_or_else(|| stats.clone());
+                        let mut exec_transport = InProcTransport::with_costs(
+                            shard.clone(),
+                            sink,
+                            cfg.profile.network_hop,
+                            cfg.profile.network_per_kib,
+                        )
+                        .with_wire_format(cfg.wire)
+                        .with_completion(shard.clone());
+                        if let Some(n) = &net {
+                            exec_transport = exec_transport.with_net(n.clone());
+                        }
+                        (Arc::new(exec_transport), shard.wait_hub())
+                    })
+                    .collect();
+                Some(EventExecutor::start_sharded(
+                    planes,
                     ExecutorConfig {
                         workers: cfg.workers,
                         poll_time: cfg.poll_time,
@@ -398,11 +597,17 @@ impl SafeSession {
         Ok(SafeSession {
             cfg,
             controller,
+            shards,
+            parent,
             planner,
             stats,
+            shard_stats,
             contexts: Mutex::new(contexts),
             executor,
-            monitor_transport,
+            monitor_transports,
+            parent_transport,
+            shard_transports,
+            fanin_bridges,
             _http_server: http_server,
             round0_messages,
             rounds_run: std::sync::atomic::AtomicU64::new(0),
@@ -456,20 +661,29 @@ impl SafeSession {
                 actors.insert(node, actor);
             }
         }
-        let mut monitor =
-            ProgressMonitor::start(self.monitor_transport.clone(), self.cfg.monitor_interval);
+        // One §5.3 progress monitor per shard plane (a single monitor when
+        // K = 1, exactly as before).
+        let mut monitors: Vec<ProgressMonitor> = self
+            .monitor_transports
+            .iter()
+            .map(|t| ProgressMonitor::start(t.clone(), self.cfg.monitor_interval))
+            .collect();
         let mut results = Vec::with_capacity(inputs_per_round.len());
         for (i, inputs) in inputs_per_round.iter().enumerate() {
             let round = (i + 1) as u64;
-            match self.run_engine_round(inputs, churn, round, &actors, &monitor) {
+            match self.run_engine_round(inputs, churn, round, &actors, &monitors) {
                 Ok(r) => results.push(r),
                 Err(e) => {
-                    monitor.stop();
+                    for m in &mut monitors {
+                        m.stop();
+                    }
                     return Err(e.context(format!("round {round}")));
                 }
             }
         }
-        monitor.stop();
+        for m in &mut monitors {
+            m.stop();
+        }
         Ok(results)
     }
 
@@ -508,7 +722,7 @@ impl SafeSession {
         churn: &ChurnSchedule,
         churn_round: u64,
         actors: &BTreeMap<u64, LearnerActor>,
-        monitor: &ProgressMonitor,
+        monitors: &[ProgressMonitor],
     ) -> Result<SafeRoundResult> {
         if inputs.len() != self.cfg.n_nodes {
             bail!("need {} input vectors, got {}", self.cfg.n_nodes, inputs.len());
@@ -537,27 +751,79 @@ impl SafeSession {
         // key registry, HTTP state and MessageStats survive. The plan's
         // merge deltas ride along so the controller can answer mid-round
         // floor trips with `merge_groups` and surface reassignments.
-        let resp = self.monitor_transport.call(
-            proto::BEGIN_ROUND,
-            &proto::BeginRound {
-                epoch,
-                groups: plan.groups_map(),
-                merge_floor: self.cfg.merge_floor,
-                reassigned: plan.reassignments().to_vec(),
+        if self.parent.is_none() {
+            let resp = self.monitor_transports[0].call(
+                proto::BEGIN_ROUND,
+                &proto::BeginRound {
+                    epoch,
+                    groups: plan.groups_map(),
+                    merge_floor: self.cfg.merge_floor,
+                    reassigned: plan.reassignments().to_vec(),
+                    fanin: false,
+                    fed_children: None,
+                }
+                .to_value(),
+            )?;
+            if resp.str_of("status") != Some("ok") {
+                bail!("begin_round rejected: {:?}", resp.str_of("status"));
             }
-            .to_value(),
-        )?;
-        if resp.str_of("status") != Some("ok") {
-            bail!("begin_round rejected: {:?}", resp.str_of("status"));
+        } else {
+            // Sharded plane: each shard opens the epoch over its slice of
+            // the plan (fan-in mode — the shard barrier feeds the parent
+            // instead of publishing directly), and the parent opens the
+            // combine epoch expecting one partial per live shard.
+            for (s, t) in self.monitor_transports.iter().enumerate() {
+                let reassigned: Vec<_> = plan
+                    .reassignments()
+                    .iter()
+                    .filter(|r| plan.shard_of_group(r.to_group) == Some(s))
+                    .cloned()
+                    .collect();
+                let resp = t.call(
+                    proto::BEGIN_ROUND,
+                    &proto::BeginRound {
+                        epoch,
+                        groups: plan.groups_for_shard(s),
+                        merge_floor: self.cfg.merge_floor,
+                        reassigned,
+                        fanin: true,
+                        fed_children: None,
+                    }
+                    .to_value(),
+                )?;
+                if resp.str_of("status") != Some("ok") {
+                    bail!("shard {s} begin_round rejected: {:?}", resp.str_of("status"));
+                }
+            }
+            let parent_t = self
+                .parent_transport
+                .as_ref()
+                .context("sharded session missing parent transport")?;
+            let resp = parent_t.call(
+                proto::BEGIN_ROUND,
+                &proto::BeginRound {
+                    epoch,
+                    groups: BTreeMap::new(),
+                    merge_floor: false,
+                    reassigned: Vec::new(),
+                    fanin: false,
+                    fed_children: Some(plan.live_shards().len() as u64),
+                }
+                .to_value(),
+            )?;
+            if resp.str_of("status") != Some("ok") {
+                bail!("fan-in begin_round rejected: {:?}", resp.str_of("status"));
+            }
         }
 
-        let baseline_msgs = self.stats.total();
-        let baseline_bytes = self.stats.bytes();
-        let baseline_recv = self.stats.bytes_received();
-        let baseline_retries = self.stats.retries();
-        let baseline_drops = self.stats.drops();
-        let baseline_dedup = self.stats.dedup_posts();
-        let per_path_before = self.stats.per_path();
+        let baseline_msgs = self.total_messages();
+        let baseline_bytes = self.total_bytes();
+        let baseline_recv = self.total_bytes_received();
+        let baseline_retries = self.total_retries();
+        let baseline_drops = self.total_drops();
+        let baseline_dedup = self.total_dedup();
+        let per_path_before = self.merged_per_path();
+        let shard_base: Vec<u64> = self.shard_stats.iter().map(|s| s.total()).collect();
 
         // Key re-exchange for nodes returning this round — only their key
         // material moves; survivors' keys are reused untouched.
@@ -579,7 +845,7 @@ impl SafeSession {
         // the cross-round monitor keeps pinging `progress_check` through
         // the same counted transport, and a ping landing inside the rekey
         // window must not masquerade as (or double-subtract from) rekey.
-        let per_path_rekey = self.stats.per_path();
+        let per_path_rekey = self.merged_per_path();
         let rekey_messages: u64 = [
             proto::REGISTER_KEY,
             proto::GET_KEY,
@@ -593,12 +859,46 @@ impl SafeSession {
         })
         .sum();
 
-        let reposts_before = monitor.reposts();
+        let reposts_before: u64 = monitors.iter().map(|m| m.reposts()).sum();
         let watch = Stopwatch::start();
+
+        // Fan-in workers (K > 1): one thread per live shard waits on its
+        // shard's barrier partial, posts it to the parent, long-polls the
+        // combined global, and installs it back so the shard's learners
+        // wake. Spawned before the learner fan-out so a shard finishing
+        // early is collected immediately; exactly two counted messages per
+        // live shard per healthy round (`≤ 2K` fan-in term).
+        let mut fanin_workers = Vec::new();
+        if !self.fanin_bridges.is_empty() {
+            for &s in &plan.live_shards() {
+                let shard_ctrl = self.shards[s].clone();
+                let bridge = self.fanin_bridges[s].clone();
+                let barrier = self.cfg.aggregation_timeout;
+                fanin_workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("fanin-shard-{s}"))
+                        .spawn(move || -> Option<Duration> {
+                            let (avg, contributors) = shard_ctrl.shard_partial(barrier)?;
+                            let started = Instant::now();
+                            bridge.post_child_average(&avg, contributors).ok()?;
+                            let global = match bridge.try_get_global_average(barrier).ok()? {
+                                Some(g) => g,
+                                // Degraded round: a sibling shard never
+                                // posted — combine whatever partials the
+                                // parent holds so live shards still finish.
+                                None => bridge.get_partial_global().ok().flatten()?,
+                            };
+                            shard_ctrl.install_global_average(global.0, global.1);
+                            Some(started.elapsed())
+                        })?,
+                );
+            }
+        }
 
         // Fan out one per-round context fork to every active actor.
         let mut active = std::collections::BTreeSet::new();
         for (gid, chain) in plan.groups() {
+            let shard = plan.shard_of_group(*gid).unwrap_or(0);
             for (pos, &node) in chain.iter().enumerate() {
                 let master = self.master_context(node)?;
                 let mut ctx = master.fork(self.round_rng(node, epoch));
@@ -608,6 +908,14 @@ impl SafeSession {
                 ctx.epoch = epoch;
                 ctx.initial_initiator = chain[0];
                 ctx.stagger_delay = self.cfg.stagger_step.mul_f64(pos as f64);
+                // Route the learner to its home shard: its chain/mailbox
+                // calls go through the shard's transport and count on the
+                // shard's stats. K = 1 leaves the master wiring untouched.
+                ctx.shard = shard;
+                if let Some(t) = self.shard_transports.get(shard) {
+                    ctx.transport = t.clone();
+                    ctx.stats = self.shard_stats[shard].clone();
+                }
                 actors
                     .get(&node)
                     .with_context(|| format!("no actor for node {node}"))?
@@ -627,6 +935,14 @@ impl SafeSession {
             }
         }
         outcomes.sort_by_key(|o| o.node);
+        // Join the fan-in tier; its latency is the slowest shard's
+        // post→install span (zero when K = 1).
+        let mut fanin_latency = Duration::ZERO;
+        for w in fanin_workers {
+            if let Ok(Some(d)) = w.join() {
+                fanin_latency = fanin_latency.max(d);
+            }
+        }
         let wall_time = watch.elapsed();
 
         // Validate agreement: every survivor holds the same average.
@@ -646,7 +962,7 @@ impl SafeSession {
             }
         }
 
-        let per_path_after = self.stats.per_path();
+        let per_path_after = self.merged_per_path();
         let mut per_path = BTreeMap::new();
         for (k, v) in per_path_after {
             let before = per_path_before.get(&k).copied().unwrap_or(0);
@@ -658,8 +974,25 @@ impl SafeSession {
         // traffic — exclude them from the message count like the paper's
         // formulas do. Rekey traffic is reported separately (footnote 3:
         // key exchange is not per-aggregation) but stays in `per_path`.
+        // Fan-in traffic is likewise the sharding surcharge, not edge
+        // protocol traffic: counted separately (`fanin_messages`, ≤ 2K)
+        // and left visible in `per_path`.
         let monitor_msgs = per_path.remove(proto::PROGRESS_CHECK).unwrap_or(0);
-        let messages = self.stats.total() - baseline_msgs - monitor_msgs - rekey_messages;
+        let fanin_messages: u64 = [proto::FED_POST_CHILD_AVERAGE, proto::FED_GET_GLOBAL_AVERAGE]
+            .iter()
+            .map(|p| per_path.get(*p).copied().unwrap_or(0))
+            .sum();
+        let messages = self.total_messages()
+            - baseline_msgs
+            - monitor_msgs
+            - rekey_messages
+            - fanin_messages;
+        let shard_messages: Vec<u64> = self
+            .shard_stats
+            .iter()
+            .zip(&shard_base)
+            .map(|(s, b)| s.total() - b)
+            .collect();
 
         // Each group's initiator reports its group's contributor count;
         // sum across groups (one initiator per group).
@@ -677,20 +1010,24 @@ impl SafeSession {
         let metrics = RoundMetrics {
             wall_time,
             messages,
-            bytes_sent: self.stats.bytes() - baseline_bytes,
-            bytes_received: self.stats.bytes_received() - baseline_recv,
+            bytes_sent: self.total_bytes() - baseline_bytes,
+            bytes_received: self.total_bytes_received() - baseline_recv,
             average: reference.clone(),
             contributors,
-            progress_failovers: monitor.reposts() - reposts_before,
+            progress_failovers: monitors.iter().map(|m| m.reposts()).sum::<u64>()
+                - reposts_before,
             initiator_failovers: outcomes.iter().map(|o| o.restarts).max().unwrap_or(0),
             rekey_messages,
             merged_groups: plan.merges().len() as u64,
             reassigned_nodes: plan.reassignments().len() as u64,
             deadline_exceeded: outcomes.iter().filter(|o| o.deadline_exceeded).count() as u64,
-            net_retries: self.stats.retries() - baseline_retries,
-            net_drops: self.stats.drops() - baseline_drops,
-            dedup_posts: self.stats.dedup_posts() - baseline_dedup,
+            net_retries: self.total_retries() - baseline_retries,
+            net_drops: self.total_drops() - baseline_drops,
+            dedup_posts: self.total_dedup() - baseline_dedup,
             per_path,
+            fanin_messages,
+            fanin_latency,
+            shard_messages,
         };
         Ok(SafeRoundResult { metrics, outcomes })
     }

@@ -121,6 +121,10 @@ struct TaskSlot {
     pending: Option<PendingCall>,
     sleeping: Option<u64>,
     retrying: Option<RetryCall>,
+    /// Index into the executor's per-shard transport/hub pairs: the home
+    /// controller shard brokering this learner's chain. Always 0 on a
+    /// single-shard plane.
+    shard: usize,
     outcome_tx: Sender<Result<LearnerOutcome>>,
 }
 
@@ -130,14 +134,26 @@ struct Shared {
     shutdown: AtomicBool,
     tasks: Mutex<BTreeMap<u64, Arc<Mutex<TaskSlot>>>>,
     next_task: AtomicU64,
-    transport: Arc<InProcTransport>,
-    hub: Arc<WaitHub>,
+    /// One completion transport per controller shard; a task's calls all
+    /// go through its home shard's transport (indexed by `TaskSlot::shard`).
+    transports: Vec<Arc<InProcTransport>>,
+    /// The matching per-shard wait hubs. Task ids are globally unique, so
+    /// one [`QueueSink`] serves every hub.
+    hubs: Vec<Arc<WaitHub>>,
     timer: TimerWheel,
     poll_time: Duration,
     retry: RetryPolicy,
 }
 
 impl Shared {
+    fn transport(&self, shard: usize) -> &Arc<InProcTransport> {
+        &self.transports[shard]
+    }
+
+    fn hub(&self, shard: usize) -> &Arc<WaitHub> {
+        &self.hubs[shard]
+    }
+
     fn enqueue(&self, task: u64, cause: Cause) {
         let mut q = self.queue.lock().unwrap();
         q.push_back((task, cause));
@@ -183,28 +199,43 @@ pub struct EventExecutor {
 }
 
 impl EventExecutor {
-    /// Start the pool. `transport` must have completion enabled (built
-    /// with [`InProcTransport::with_completion`]); `hub` must be the
-    /// completion handler's wait hub.
+    /// Start the pool over a single-shard plane. `transport` must have
+    /// completion enabled (built with [`InProcTransport::with_completion`]);
+    /// `hub` must be the completion handler's wait hub.
     pub fn start(
         transport: Arc<InProcTransport>,
         hub: Arc<WaitHub>,
         cfg: ExecutorConfig,
     ) -> Arc<EventExecutor> {
+        Self::start_sharded(vec![(transport, hub)], cfg)
+    }
+
+    /// Start the pool over a sharded plane: one completion transport +
+    /// wait hub pair per controller shard, all multiplexed over the same
+    /// worker pool so K shards aggregate in parallel. Each spawned
+    /// learner is driven against `planes[ctx.shard]`.
+    pub fn start_sharded(
+        planes: Vec<(Arc<InProcTransport>, Arc<WaitHub>)>,
+        cfg: ExecutorConfig,
+    ) -> Arc<EventExecutor> {
+        assert!(!planes.is_empty(), "executor needs at least one shard plane");
         let workers = cfg.resolved_workers();
+        let (transports, hubs): (Vec<_>, Vec<_>) = planes.into_iter().unzip();
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             queue_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             tasks: Mutex::new(BTreeMap::new()),
             next_task: AtomicU64::new(1),
-            transport,
-            hub: hub.clone(),
+            transports,
+            hubs,
             timer: TimerWheel::new(),
             poll_time: cfg.poll_time,
             retry: cfg.retry,
         });
-        hub.set_sink(Arc::new(QueueSink { shared: Arc::downgrade(&shared) }));
+        for hub in &shared.hubs {
+            hub.set_sink(Arc::new(QueueSink { shared: Arc::downgrade(&shared) }));
+        }
         let mut handles = Vec::with_capacity(workers + 1);
         for i in 0..workers {
             let s = shared.clone();
@@ -240,12 +271,17 @@ impl EventExecutor {
     ) -> Receiver<Result<LearnerOutcome>> {
         let (tx, rx) = mpsc::channel();
         let id = self.shared.next_task.fetch_add(1, Ordering::SeqCst);
+        // Clamp defensively: a context from a wider plane than this
+        // executor was started with routes to the last shard rather than
+        // panicking a worker.
+        let shard = ctx.shard.min(self.shared.transports.len() - 1);
         let slot = TaskSlot {
             machine: LearnerStateMachine::new(ctx, local, faults),
             generation: 0,
             pending: None,
             sleeping: None,
             retrying: None,
+            shard,
             outcome_tx: tx,
         };
         self.shared.tasks.lock().unwrap().insert(id, Arc::new(Mutex::new(slot)));
@@ -360,23 +396,24 @@ fn resolve_pending(
     if !matches!(&slot.pending, Some(p) if p.generation == generation) {
         return Step::Keep;
     }
+    let transport = shared.transport(slot.shard).clone();
     let (path, key) = {
         let p = slot.pending.as_ref().unwrap();
         (p.path, p.key)
     };
     let probe = {
         let p = slot.pending.as_ref().unwrap();
-        shared.transport.try_complete(p.path, &p.body)
+        transport.try_complete(p.path, &p.body)
     };
     match probe {
         Err(e) => {
             slot.pending = None;
-            shared.transport.notify_unparked(path);
+            transport.notify_unparked(path);
             Step::Abort(e)
         }
         Ok(Some(resp)) => {
             slot.pending = None;
-            shared.transport.notify_unparked(path);
+            transport.notify_unparked(path);
             Step::Run(MachineEvent::Response(resp))
         }
         Ok(None) if timed_out => {
@@ -385,8 +422,8 @@ fn resolve_pending(
             // returns at poll timeout, and let the machine decide between
             // re-polling and a §5.4 election.
             slot.pending = None;
-            shared.transport.notify_unparked(path);
-            match shared.transport.complete_empty(path) {
+            transport.notify_unparked(path);
+            match transport.complete_empty(path) {
                 Ok(resp) => Step::Run(MachineEvent::Response(resp)),
                 Err(e) => Step::Abort(e),
             }
@@ -396,20 +433,20 @@ fn resolve_pending(
             // consumer): re-park, then close the register/notify race
             // with one more probe. A now-stale registration is dropped
             // later by the generation check.
-            shared.hub.register(key, task_id, generation);
+            shared.hub(slot.shard).register(key, task_id, generation);
             let reprobe = {
                 let p = slot.pending.as_ref().unwrap();
-                shared.transport.try_complete(p.path, &p.body)
+                transport.try_complete(p.path, &p.body)
             };
             match reprobe {
                 Err(e) => {
                     slot.pending = None;
-                    shared.transport.notify_unparked(path);
+                    transport.notify_unparked(path);
                     Step::Abort(e)
                 }
                 Ok(Some(resp)) => {
                     slot.pending = None;
-                    shared.transport.notify_unparked(path);
+                    transport.notify_unparked(path);
                     Step::Run(MachineEvent::Response(resp))
                 }
                 // Original poll-window timer is still armed; keep waiting.
@@ -446,11 +483,12 @@ fn submit_call(
 ) -> CallStep {
     slot.generation += 1;
     let generation = slot.generation;
-    match shared.transport.submit(path, &body) {
+    let transport = shared.transport(slot.shard).clone();
+    match transport.submit(path, &body) {
         Err(e) => {
             let retryable = as_transport_error(&e).is_some_and(|t| t.retryable());
             if retryable && attempt + 1 < shared.retry.attempts.max(1) {
-                shared.transport.stats().record_retry();
+                transport.stats().record_retry();
                 shared.timer.schedule(
                     Instant::now() + shared.retry.backoff(attempt),
                     task_id,
@@ -471,12 +509,12 @@ fn submit_call(
             // between submit's probe and the registration, the second
             // probe finds it; the then-stale registration is
             // generation-filtered.
-            shared.hub.register(key, task_id, generation);
-            match shared.transport.try_complete(path, &body) {
+            shared.hub(slot.shard).register(key, task_id, generation);
+            match transport.try_complete(path, &body) {
                 Err(e) => CallStep::Done(Err(e)),
                 Ok(Some(resp)) => CallStep::Resp(resp),
                 Ok(None) => {
-                    shared.transport.notify_parked(path);
+                    transport.notify_parked(path);
                     shared.timer.schedule(
                         Instant::now() + shared.poll_time,
                         task_id,

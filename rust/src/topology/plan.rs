@@ -75,6 +75,12 @@ pub struct TopologyPlan {
     reassignments: Vec<Reassignment>,
     /// The merges that produced this plan, in application order.
     merges: Vec<MergeEvent>,
+    /// group id → controller shard index (home-shard assignment; stable
+    /// across rounds for every configured group). Single-shard plans map
+    /// every group to shard 0.
+    shard_of: BTreeMap<u64, usize>,
+    /// Width of the aggregation plane this plan targets (≥ 1).
+    shard_count: usize,
 }
 
 impl TopologyPlan {
@@ -84,12 +90,31 @@ impl TopologyPlan {
         merges: Vec<MergeEvent>,
     ) -> TopologyPlan {
         let mut group_of = BTreeMap::new();
+        let mut shard_of = BTreeMap::new();
         for (gid, chain) in &groups {
             for &node in chain {
                 group_of.insert(node, *gid);
             }
+            shard_of.insert(*gid, 0);
         }
-        TopologyPlan { groups, group_of, reassignments, merges }
+        TopologyPlan { groups, group_of, reassignments, merges, shard_of, shard_count: 1 }
+    }
+
+    /// Attach the sharded-plane assignment: `shard_of` maps every group
+    /// id in the plan to its home controller shard in `0..shard_count`.
+    /// Groups the map does not name stay on shard 0.
+    pub(crate) fn with_shards(
+        mut self,
+        shard_of: BTreeMap<u64, usize>,
+        shard_count: usize,
+    ) -> TopologyPlan {
+        for (gid, shard) in shard_of {
+            if let Some(s) = self.shard_of.get_mut(&gid) {
+                *s = shard;
+            }
+        }
+        self.shard_count = shard_count.max(1);
+        self
     }
 
     /// The round's groups: `(group id, ordered chain)`, ascending id.
@@ -150,6 +175,46 @@ impl TopologyPlan {
     pub fn merges(&self) -> &[MergeEvent] {
         &self.merges
     }
+
+    /// Width of the aggregation plane (number of controller shards the
+    /// plan was built for). Always ≥ 1; single-shard plans return 1.
+    pub fn shard_count(&self) -> usize {
+        self.shard_count
+    }
+
+    /// The home controller shard of `group`, if it exists this round.
+    pub fn shard_of_group(&self, group: u64) -> Option<usize> {
+        self.shard_of.get(&group).copied()
+    }
+
+    /// The shard brokering `node`'s chain this round (its group's home
+    /// shard — reassigned nodes follow the group they aggregate under).
+    pub fn shard_of_node(&self, node: u64) -> Option<usize> {
+        self.shard_of_group(self.group_of(node)?)
+    }
+
+    /// `group id → chain` map restricted to the groups homed on `shard`
+    /// (the per-shard `BeginRound.groups` wire shape).
+    pub fn groups_for_shard(&self, shard: usize) -> BTreeMap<u64, Vec<u64>> {
+        self.groups
+            .iter()
+            .filter(|(gid, _)| self.shard_of_group(*gid) == Some(shard))
+            .cloned()
+            .collect()
+    }
+
+    /// Shards owning at least one group this round (ascending). A shard
+    /// whose every group dissolved contributes nothing to fan-in.
+    pub fn live_shards(&self) -> Vec<usize> {
+        let mut live: Vec<usize> = self
+            .groups
+            .iter()
+            .filter_map(|(gid, _)| self.shard_of_group(*gid))
+            .collect();
+        live.sort_unstable();
+        live.dedup();
+        live
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +248,32 @@ mod tests {
         assert_eq!(p.reassignments().len(), 2);
         assert_eq!(p.merges()[0].into_group, 1);
         assert_eq!(p.groups_map().get(&2), Some(&vec![4, 5, 6]));
+    }
+
+    #[test]
+    fn unsharded_plans_default_to_shard_zero() {
+        let p = plan();
+        assert_eq!(p.shard_count(), 1);
+        assert_eq!(p.shard_of_group(1), Some(0));
+        assert_eq!(p.shard_of_group(2), Some(0));
+        assert_eq!(p.shard_of_group(9), None);
+        assert_eq!(p.live_shards(), vec![0]);
+        assert_eq!(p.groups_for_shard(0).len(), 2);
+        assert!(p.groups_for_shard(1).is_empty());
+    }
+
+    #[test]
+    fn shard_map_routes_groups_and_nodes() {
+        let p = plan().with_shards([(1, 0), (2, 1)].into_iter().collect(), 2);
+        assert_eq!(p.shard_count(), 2);
+        assert_eq!(p.shard_of_group(1), Some(0));
+        assert_eq!(p.shard_of_group(2), Some(1));
+        // Node 7 is reassigned into group 1 — it follows its round group.
+        assert_eq!(p.shard_of_node(7), Some(0));
+        assert_eq!(p.shard_of_node(5), Some(1));
+        assert_eq!(p.shard_of_node(9), None);
+        assert_eq!(p.live_shards(), vec![0, 1]);
+        assert_eq!(p.groups_for_shard(1).get(&2), Some(&vec![4, 5, 6]));
     }
 
     #[test]

@@ -33,6 +33,9 @@ pub struct GroupPlanner {
     shuffle_each_round: bool,
     /// Merge under-floor groups instead of aborting.
     merge_floor: bool,
+    /// Width of the aggregation plane (controller shards). Always
+    /// clamped to `1..=groups.len()`; 1 = single-controller wiring.
+    shards: usize,
 }
 
 impl GroupPlanner {
@@ -51,7 +54,19 @@ impl GroupPlanner {
             seed: seed.unwrap_or(0),
             shuffle_each_round,
             merge_floor,
+            shards: 1,
         }
+    }
+
+    /// Spread the plane over `shards` controller shards. Home shards are
+    /// assigned round-robin by configured-group index (`idx % shards`),
+    /// so adjacent-id groups land on different shards and a privacy-floor
+    /// merge into a neighbouring group is usually a cross-shard move.
+    /// Clamped to the configured group count; 1 restores today's wiring.
+    #[must_use]
+    pub fn with_shards(mut self, shards: usize) -> GroupPlanner {
+        self.shards = shards.clamp(1, self.groups.len().max(1));
+        self
     }
 
     /// Planner configured exactly as a [`SessionConfig`] describes.
@@ -64,6 +79,25 @@ impl GroupPlanner {
             cfg.shuffle_chain_each_round,
             cfg.merge_floor,
         )
+        .with_shards(cfg.shards)
+    }
+
+    /// The plane width this planner assigns home shards for.
+    #[must_use]
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Home shard of every configured group: round-robin by the group's
+    /// index in the configured (ascending-id) order. Deterministic and
+    /// stable across rounds — churn and merges never move a surviving
+    /// group off its home shard.
+    fn shard_map(&self) -> std::collections::BTreeMap<u64, usize> {
+        self.groups
+            .iter()
+            .enumerate()
+            .map(|(idx, (gid, _))| (*gid, idx % self.shards))
+            .collect()
     }
 
     /// Split nodes `1..=n_nodes` into `groups` contiguous chains (the
@@ -115,6 +149,7 @@ impl GroupPlanner {
     #[must_use]
     pub fn base_plan(&self) -> TopologyPlan {
         TopologyPlan::new(self.groups.clone(), Vec::new(), Vec::new())
+            .with_shards(self.shard_map(), self.shards)
     }
 
     /// Build the plan for one round.
@@ -252,7 +287,8 @@ impl GroupPlanner {
             }
         }
         reassignments.sort_by_key(|r| r.node);
-        Ok(TopologyPlan::new(chains, reassignments, merges))
+        Ok(TopologyPlan::new(chains, reassignments, merges)
+            .with_shards(self.shard_map(), self.shards))
     }
 }
 
@@ -407,6 +443,47 @@ mod tests {
         let faults = FaultPlan::none().kill(1, FailPoint::InitiatorAfterPost);
         let plan = p.plan_round(0, &no_absent(), &faults).unwrap();
         assert_eq!(plan.chain(1), Some(&[1u64, 2, 3, 4, 5][..]));
+    }
+
+    #[test]
+    fn shard_assignment_is_round_robin_and_stable() {
+        // 12 nodes / 4 groups, K=2 → groups 1,3 on shard 0; 2,4 on 1.
+        let p = planner(12, 4).with_shards(2);
+        assert_eq!(p.shards(), 2);
+        let base = p.base_plan();
+        assert_eq!(base.shard_count(), 2);
+        assert_eq!(base.shard_of_group(1), Some(0));
+        assert_eq!(base.shard_of_group(2), Some(1));
+        assert_eq!(base.shard_of_group(3), Some(0));
+        assert_eq!(base.shard_of_group(4), Some(1));
+        // A dissolved group leaves the plan; survivors keep their home
+        // shard — merging group 3 ({9}) into group 4 is a cross-shard
+        // move for node 9.
+        let plan = p
+            .plan_round(0, &BTreeSet::from([7, 8, 12]), &FaultPlan::none())
+            .unwrap();
+        assert_eq!(plan.shard_of_group(3), None);
+        assert_eq!(plan.shard_of_group(4), Some(1));
+        assert_eq!(plan.shard_of_node(9), Some(1));
+        assert_eq!(plan.live_shards(), vec![0, 1]);
+        // Same inputs → same shard map (planning stays deterministic).
+        let again = p
+            .plan_round(0, &BTreeSet::from([7, 8, 12]), &FaultPlan::none())
+            .unwrap();
+        assert_eq!(plan, again);
+    }
+
+    #[test]
+    fn shards_clamp_to_group_count() {
+        let p = planner(9, 3).with_shards(8);
+        assert_eq!(p.shards(), 3);
+        assert_eq!(p.base_plan().live_shards(), vec![0, 1, 2]);
+        let p = planner(9, 3).with_shards(0);
+        assert_eq!(p.shards(), 1);
+        // Default (no with_shards) keeps every group on shard 0.
+        let base = planner(9, 3).base_plan();
+        assert_eq!(base.shard_count(), 1);
+        assert_eq!(base.live_shards(), vec![0]);
     }
 
     #[test]

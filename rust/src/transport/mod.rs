@@ -75,6 +75,9 @@ pub enum PollKey {
     Key { node: u64 },
     /// `get_preneg_key`: `owner` posted a §5.8 key for `node`.
     Preneg { owner: u64, node: u64 },
+    /// `fed_get_global_average`: every expected fan-in child posted its
+    /// shard partial (§5.10 barrier) — one global key on the parent.
+    FedGlobal,
 }
 
 /// One non-blocking probe of a request: either the full response, or the

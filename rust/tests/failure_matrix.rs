@@ -393,6 +393,152 @@ fn churn_absence_window_respects_privacy_floor() {
     );
 }
 
+// ---- sharded aggregation plane (K > 1) under churn ----
+
+#[test]
+fn sharded_cross_shard_merge() {
+    // 20 nodes / 4 groups over K=2 shards (round-robin: g1,g3 → shard 0;
+    // g2,g4 → shard 1). Group 2 loses 7/8/9 after posting in round 1, so
+    // its round-2 projection {6,10} is under the §5.3 floor; the planner
+    // folds the survivors into the earlier same-size neighbour g1 — a
+    // *cross-shard* move (shard 1 → shard 0) that must re-key exactly the
+    // new links and leave the fan-in accounting untouched.
+    let n = 20;
+    let mut c = churn_cfg(n);
+    c.groups = 4;
+    c.shards = 2;
+    let session = SafeSession::new(c).unwrap();
+    let per_round: Vec<Vec<Vec<f64>>> = (0..2).map(|_| inputs(n)).collect();
+    let churn = ChurnSchedule::none()
+        .die(7, 1, FailPoint::AfterPost)
+        .die(8, 1, FailPoint::AfterPost)
+        .die(9, 1, FailPoint::AfterPost);
+    let results = session.run_rounds(&per_round, &churn).unwrap();
+
+    // Round 1: every node contributed before dying, and with equal group
+    // sizes the contributor-weighted shard combine equals the plain mean.
+    assert_round_mean(&results, 1, n, &[]);
+    let r1 = &results[0].metrics;
+    assert_eq!(r1.merged_groups, 0);
+    assert_eq!(r1.reassigned_nodes, 0);
+    assert_eq!(r1.fanin_messages, 4, "2 live shards × (partial post + global fetch)");
+    assert_no_key_traffic(&results[0], 1);
+
+    // Round 2: the merge crossed a shard boundary.
+    let r2 = &results[1].metrics;
+    assert_eq!(r2.merged_groups, 1, "group 2 dissolved into group 1");
+    assert_eq!(r2.reassigned_nodes, 2, "only nodes 6 and 10 moved");
+    assert_eq!(r2.contributors, 17);
+    // Movers fetch their 5 new peers' keys and vice versa — key material
+    // crosses shards through the key plane (the fan-in parent), with no
+    // re-registration and nothing between unmoved survivors.
+    assert_eq!(r2.per_path.get(proto::GET_KEY), Some(&20));
+    assert!(!r2.per_path.contains_key(proto::REGISTER_KEY));
+    assert_eq!(r2.rekey_messages, 20);
+    // §5.2 accounting across shards: 17 contributors in 3 chains → 4n + g,
+    // with the fan-in surcharge still 2 per live shard (g4 kept shard 1
+    // alive) and counted separately.
+    assert_eq!(r2.messages, 4 * 17 + 3);
+    assert_eq!(r2.fanin_messages, 4);
+    assert_eq!(r2.shard_messages.len(), 2);
+    assert_eq!(r2.shard_messages.iter().sum::<u64>(), r2.messages);
+    // The sharded global is the contributor-weighted combine of shard
+    // partials (each an equal-weight mean of its group means) — with
+    // unequal post-merge group sizes this is NOT the plain mean, so the
+    // expectation is computed explicitly: shard 0 = (mean{1..6,10} +
+    // mean{11..15})/2 over 12 contributors, shard 1 = mean{16..20} over 5.
+    let m1 = (1 + 2 + 3 + 4 + 5 + 6 + 10) as f64 / 7.0;
+    let (m3, m4) = (13.0, 18.0);
+    let want = (((m1 + m3) / 2.0) * 12.0 + m4 * 5.0) / 17.0;
+    let got = results[1].average().unwrap();
+    assert!((got[0] - want).abs() < 1e-6, "got {} want {want}", got[0]);
+    assert!((got[1] - 10.0 * want).abs() < 1e-5, "feature 1 is 10× feature 0");
+}
+
+#[test]
+fn shard_death_degrades_to_partial_global() {
+    // Component-level shard death: a fan-in parent expecting 2 children
+    // hears from only one. The live shard's worker sequence must time out
+    // on the completion fetch, degrade to the partial combine, and
+    // *install* it — at which point the shard's parked `get_average`
+    // pollers (held back by fan-in mode despite the local §5.5 barrier
+    // being complete) release with the degraded global. The session
+    // engine can't reach this state through scheduled churn (the planner
+    // proactively merges a whole-group death away), so it's pinned here.
+    use std::sync::Arc;
+
+    use safe_agg::controller::{Controller, ControllerConfig};
+    use safe_agg::protocols::hierarchy::FederationBridge;
+    use safe_agg::transport::{ClientTransport, Handler, InProcTransport};
+
+    let ctrl_cfg = || ControllerConfig {
+        poll_time: Duration::from_millis(100),
+        ..Default::default()
+    };
+    let parent = Arc::new(Controller::new(ctrl_cfg()));
+    let parent_br = proto::BeginRound {
+        epoch: 1,
+        groups: Default::default(),
+        merge_floor: false,
+        reassigned: vec![],
+        fanin: false,
+        fed_children: Some(2),
+    };
+    assert_eq!(
+        parent.handle(proto::BEGIN_ROUND, &parent_br.to_value()).str_of("status"),
+        Some("ok")
+    );
+
+    let shard = Arc::new(Controller::new(ctrl_cfg()));
+    let shard_br = proto::BeginRound {
+        epoch: 1,
+        groups: std::collections::BTreeMap::from([(1u64, vec![1u64, 2, 3])]),
+        merge_floor: false,
+        reassigned: vec![],
+        fanin: true,
+        fed_children: None,
+    };
+    assert_eq!(
+        shard.handle(proto::BEGIN_ROUND, &shard_br.to_value()).str_of("status"),
+        Some("ok")
+    );
+    assert_eq!(
+        shard
+            .handle(proto::POST_AVERAGE, &proto::post_average(1, 1, &[6.0, 60.0], 3))
+            .str_of("status"),
+        Some("ok")
+    );
+
+    // The local barrier is complete, but in fan-in mode learners must NOT
+    // be released with the shard-local mean — only the installed global.
+    assert!(
+        proto::is_empty_status(&shard.handle(proto::GET_AVERAGE, &proto::node_op(2, 1))),
+        "fan-in shard released a poller before the global was installed"
+    );
+
+    // The fan-in worker's path: barrier wait → partial → post upward.
+    let (partial, contributors) = shard.shard_partial(Duration::from_millis(300)).unwrap();
+    assert_eq!(contributors, 3);
+    assert_eq!(partial, vec![6.0, 60.0]);
+    let transport: Arc<dyn ClientTransport> = Arc::new(InProcTransport::new(parent.clone()));
+    let bridge = FederationBridge::new(1, transport);
+    bridge.post_child_average(&partial, contributors).unwrap();
+
+    // Child 2 never posts: the global fetch times out and the degraded
+    // partial — just this shard's contribution — is served instead.
+    assert!(bridge.try_get_global_average(Duration::from_millis(250)).unwrap().is_none());
+    let (global, weight) = bridge.get_partial_global().unwrap().unwrap();
+    assert_eq!(weight, 3);
+    assert_eq!(global, vec![6.0, 60.0]);
+
+    // Installing releases the parked pollers with the degraded global.
+    shard.install_global_average(global, weight);
+    let resp = shard.handle(proto::GET_AVERAGE, &proto::node_op(2, 1));
+    assert_eq!(resp.str_of("status"), Some("ok"));
+    assert_eq!(resp.f64_arr_of("average").unwrap(), vec![6.0, 60.0]);
+    assert_eq!(resp.u64_of("groups"), Some(3), "weight rides in the groups field");
+}
+
 #[test]
 fn subgroup_failure_isolated_to_one_group() {
     // §5.5: "a single node failure does not break the entire aggregation,

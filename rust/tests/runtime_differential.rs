@@ -35,6 +35,8 @@ struct RoundFingerprint {
     net_drops: u64,
     dedup_posts: u64,
     per_path: BTreeMap<String, u64>,
+    fanin_messages: u64,
+    shard_messages: Vec<u64>,
 }
 
 fn cfg(n: usize, groups: usize, mode: CipherMode, runtime: RuntimeKind) -> SessionConfig {
@@ -92,6 +94,8 @@ fn run(cfg: SessionConfig, rounds: &[Vec<Vec<f64>>], churn: &ChurnSchedule) -> V
             net_drops: r.metrics.net_drops,
             dedup_posts: r.metrics.dedup_posts,
             per_path: r.metrics.per_path.clone(),
+            fanin_messages: r.metrics.fanin_messages,
+            shard_messages: r.metrics.shard_messages.clone(),
         })
         .collect()
 }
@@ -181,6 +185,67 @@ fn threads_and_events_agree_under_packet_loss() {
     let retries: u64 = threads.iter().map(|r| r.net_retries).sum();
     assert!(drops > 0, "lossy differential injected no drops: {threads:?}");
     assert!(retries <= drops, "retries without a causing drop: {threads:?}");
+}
+
+/// The sharded-plane differential (K = 2): the same seeded session over
+/// two shard controllers and a fan-in tier must be bit-identical between
+/// executors, keep the chain traffic on the `4n + g` floor with the
+/// fan-in surcharge counted separately (one partial post + one global
+/// fetch per shard), and land every learner — across shard boundaries —
+/// on the identical combined average.
+#[test]
+fn sharded_plane_threads_and_events_agree() {
+    let n = 20;
+    let g = 4u64;
+    let rounds = inputs_for(n, 2);
+    let churn = ChurnSchedule::none();
+    let mk = |runtime| {
+        let mut c = cfg(n, g as usize, CipherMode::Hybrid, runtime);
+        c.shards = 2;
+        c
+    };
+
+    let threads = run(mk(RuntimeKind::Threads), &rounds, &churn);
+    let events = run(mk(RuntimeKind::Events), &rounds, &churn);
+    assert_identical(&threads, &events);
+
+    for fp in &threads {
+        assert_eq!(
+            fp.messages,
+            4 * n as u64 + g,
+            "sharding must not add chain traffic beyond 4n + g"
+        );
+        assert_eq!(fp.fanin_messages, 4, "2 shards × (partial post + global fetch)");
+        assert_eq!(fp.contributors, n as u64);
+        assert_eq!(fp.shard_messages.len(), 2, "one learner-path counter per shard");
+        // Every chain message lands on exactly one shard counter; the
+        // fan-in/monitor/key traffic stays on the session counter.
+        assert_eq!(fp.shard_messages.iter().sum::<u64>(), fp.messages);
+        assert!(fp.shard_messages.iter().all(|&m| m > 0), "both shards carried traffic");
+    }
+}
+
+/// Sharded plane under churn: seeded Poisson deaths/rejoins with
+/// privacy-floor merges (which may move nodes across shard boundaries)
+/// must still be executor-invariant in every observable.
+#[test]
+fn sharded_plane_agrees_under_poisson_churn() {
+    let n = 24;
+    let rounds = inputs_for(n, 3);
+    let churn = ChurnSchedule::poisson(11, n, 3, 0.08, 0.5);
+    let mk = |runtime| {
+        let mut c = cfg(n, 6, CipherMode::Hybrid, runtime);
+        c.shards = 2;
+        c
+    };
+
+    let threads = run(mk(RuntimeKind::Threads), &rounds, &churn);
+    let events = run(mk(RuntimeKind::Events), &rounds, &churn);
+    assert_identical(&threads, &events);
+    assert!(
+        threads.iter().any(|r| r.contributors < n as u64),
+        "churn never removed a contributor: {threads:?}"
+    );
 }
 
 /// A failure-free single round under both runtimes lands exactly on the
