@@ -247,5 +247,9 @@ fn main() -> anyhow::Result<()> {
     run_crypto_pass(&mut json)?;
     std::fs::write("BENCH_scale.json", json.to_string())?;
     println!("wrote BENCH_scale.json");
+    // The raw /metrics scrape of every plane controller, captured while
+    // the session was live — uploaded next to BENCH_scale.json by CI.
+    std::fs::write("metrics_snapshot.txt", &report.metrics_snapshot)?;
+    println!("wrote metrics_snapshot.txt");
     Ok(())
 }

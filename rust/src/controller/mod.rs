@@ -101,6 +101,10 @@ pub struct Controller {
     waiting: AtomicI64,
     /// High-water mark of `waiting` since the last reset.
     peak_waiting: AtomicI64,
+    /// The session registry this controller's `GET /metrics` renders,
+    /// installed by [`Controller::install_metrics`]. `None` (stand-alone
+    /// controllers, unit tests) answers an empty exposition.
+    metrics: Mutex<Option<Arc<crate::metrics::MetricRegistry>>>,
 }
 
 impl Controller {
@@ -125,7 +129,56 @@ impl Controller {
             hub: Arc::new(WaitHub::default()),
             waiting: AtomicI64::new(0),
             peak_waiting: AtomicI64::new(0),
+            metrics: Mutex::new(None),
         }
+    }
+
+    /// Wire this controller's scrape endpoint to `registry` and publish
+    /// its identity/pressure gauges under the `shard` label:
+    /// `safe_controller_info{shard}` is the constant-1 presence series,
+    /// and a scrape-time collector mirrors the §5.9 `waiting` /
+    /// `peak_waiting` atomics into the poll-pressure gauges. The
+    /// collector reads atomics only — never the `Inner` lock — so a
+    /// scrape can never contend with (or deadlock against) protocol
+    /// handlers.
+    pub fn install_metrics(
+        self: &Arc<Self>,
+        registry: Arc<crate::metrics::MetricRegistry>,
+        shard: &str,
+    ) {
+        use crate::metrics::names;
+        registry
+            .gauge(
+                names::CONTROLLER_INFO,
+                "Constant 1 per controller, carrying the shard label.",
+                &[("shard", shard)],
+            )
+            .set(1);
+        let waiting = registry.gauge(
+            names::CONTROLLER_WAITING_POLLS,
+            "Learner long-polls blocked right now (section 5.9 pressure).",
+            &[("shard", shard)],
+        );
+        let peak = registry.gauge(
+            names::CONTROLLER_PEAK_WAITING_POLLS,
+            "High-water mark of concurrently blocked long-polls.",
+            &[("shard", shard)],
+        );
+        let me = Arc::downgrade(self);
+        registry.register_collector(move || {
+            if let Some(c) = me.upgrade() {
+                waiting.set(c.waiting.load(AtomicOrdering::SeqCst));
+                peak.set(c.peak_waiting.load(AtomicOrdering::SeqCst));
+            }
+        });
+        *self.metrics.lock().unwrap() = Some(registry);
+    }
+
+    /// Render the installed registry's Prometheus text (empty without
+    /// [`Controller::install_metrics`]).
+    pub fn render_metrics(&self) -> String {
+        let registry = self.metrics.lock().unwrap().clone();
+        registry.map(|r| r.render()).unwrap_or_default()
     }
 
     /// The wait registry the event runtime parks long-polls in.
@@ -798,6 +851,11 @@ impl Handler for Controller {
             proto::POST_PRENEG_KEYS => self.post_preneg_keys(body),
             proto::GET_PRENEG_KEY => self.get_preneg_key(body),
             proto::STATUS => self.status(),
+            proto::METRICS => {
+                let mut v = proto::status("ok");
+                v.set("text", Value::from(self.render_metrics()));
+                v
+            }
             proto::INSEC_POST => insec::post(self, body),
             proto::INSEC_GET_AVERAGE => insec::get_average(self, body),
             proto::BON_ADVERTISE => bon::advertise(self, body),

@@ -102,6 +102,21 @@ impl MultiRoundReport {
         (self.setup_messages + self.rekey_total()) as f64 / self.rows.len().max(1) as f64
     }
 
+    /// Round wall-time quantiles `(p50, p95, p99)` in seconds, estimated
+    /// through the same fixed-bucket histogram layout the session
+    /// registry uses for `safe_round_duration_seconds` — so the table
+    /// and `BENCH_multiround.json` agree with a `/metrics` scrape of the
+    /// run, at bucket (not sample) resolution.
+    pub fn round_quantiles(&self) -> (f64, f64, f64) {
+        let edges: Vec<f64> =
+            crate::metrics::DEFAULT_LATENCY_EDGES.iter().map(|e| e * 10.0).collect();
+        let h = crate::metrics::Histogram::new(&edges);
+        for r in &self.rows {
+            h.observe(r.secs);
+        }
+        (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99))
+    }
+
     /// Aligned text table, one row per round plus the amortization line.
     pub fn to_table(&self) -> String {
         let mut out = String::new();
@@ -149,6 +164,11 @@ impl MultiRoundReport {
             self.rekey_total(),
             self.rows.len(),
             self.amortized_setup_per_round()
+        );
+        let (p50, p95, p99) = self.round_quantiles();
+        let _ = writeln!(
+            out,
+            "round wall time: p50 {p50:.4}s p95 {p95:.4}s p99 {p99:.4}s (histogram-bucketed)"
         );
         out
     }
@@ -206,11 +226,15 @@ impl MultiRoundReport {
                 ])
             })
             .collect();
+        let (p50, p95, p99) = self.round_quantiles();
         Value::object(vec![
             ("id", Value::from(self.id.as_str())),
             ("setup_messages", Value::from(self.setup_messages)),
             ("rekey_total", Value::from(self.rekey_total())),
             ("amortized_setup_per_round", Value::from(self.amortized_setup_per_round())),
+            ("round_secs_p50", Value::from(p50)),
+            ("round_secs_p95", Value::from(p95)),
+            ("round_secs_p99", Value::from(p99)),
             ("rounds", Value::Arr(rows)),
         ])
     }
@@ -302,6 +326,14 @@ mod tests {
         assert_eq!(json.u64_of("setup_messages"), Some(40));
         assert_eq!(json.u64_of("rekey_total"), Some(9));
         assert_eq!(json.get("rounds").unwrap().as_arr().unwrap().len(), 3);
+        // Registry-bucketed round wall-time quantiles ride along in the
+        // table and JSON; the rows span 0.10–0.12s so every quantile must
+        // land inside the enclosing histogram bucket (0.1, 0.25].
+        assert!(table.contains("round wall time: p50"));
+        let p50 = json.get("round_secs_p50").and_then(|v| v.as_f64()).unwrap();
+        let p99 = json.get("round_secs_p99").and_then(|v| v.as_f64()).unwrap();
+        assert!(p50 > 0.1 && p50 <= 0.25, "p50 {p50} outside enclosing bucket");
+        assert!(p99 >= p50 && p99 <= 0.25);
     }
 
     #[test]

@@ -152,6 +152,70 @@ impl ScaleRow {
     }
 }
 
+/// Latency quantiles for one `safe_request_duration_seconds` series —
+/// one registry histogram, keyed by its `path`/`shard`/`class` labels.
+/// Quantile estimates interpolate within the enclosing bucket, so they
+/// carry bucket-resolution (not sample-resolution) accuracy.
+#[derive(Debug, Clone)]
+pub struct PathLatency {
+    /// Protocol path the histogram observed (`path` label).
+    pub path: String,
+    /// Which controller served the calls (`shard` label: `"0"`..`"K-1"`
+    /// or `"parent"`).
+    pub shard: String,
+    /// Path class (`class` label: chain/key/fanin/monitor/ops).
+    pub class: String,
+    /// Observations recorded.
+    pub count: u64,
+    /// Median request latency, seconds.
+    pub p50_secs: f64,
+    /// 95th-percentile request latency, seconds.
+    pub p95_secs: f64,
+    /// 99th-percentile request latency, seconds.
+    pub p99_secs: f64,
+}
+
+impl PathLatency {
+    /// Machine-readable form for the report's `latency` array.
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("path", Value::from(self.path.as_str())),
+            ("shard", Value::from(self.shard.as_str())),
+            ("class", Value::from(self.class.as_str())),
+            ("count", Value::from(self.count)),
+            ("p50_secs", Value::from(self.p50_secs)),
+            ("p95_secs", Value::from(self.p95_secs)),
+            ("p99_secs", Value::from(self.p99_secs)),
+        ])
+    }
+}
+
+/// Per-path latency quantiles out of a session's metric registry — the
+/// single source the live table, `BENCH_scale.json` and `/metrics` all
+/// render from. Sorted by (class, path, shard) for stable output.
+pub fn latency_quantiles(registry: &crate::metrics::MetricRegistry) -> Vec<PathLatency> {
+    fn label(ls: &[(String, String)], key: &str) -> String {
+        ls.iter().find(|(k, _)| k == key).map(|(_, v)| v.clone()).unwrap_or_default()
+    }
+    let mut out: Vec<PathLatency> = registry
+        .histogram_series(crate::metrics::names::REQUEST_DURATION_SECONDS)
+        .into_iter()
+        .map(|(ls, h)| PathLatency {
+            path: label(&ls, "path"),
+            shard: label(&ls, "shard"),
+            class: label(&ls, "class"),
+            count: h.count(),
+            p50_secs: h.quantile(0.5),
+            p95_secs: h.quantile(0.95),
+            p99_secs: h.quantile(0.99),
+        })
+        .collect();
+    out.sort_by(|a, b| {
+        (&a.class, &a.path, &a.shard).cmp(&(&b.class, &b.path, &b.shard))
+    });
+    out
+}
+
 /// Current thread count of this process (Linux `/proc/self/status`
 /// `Threads:` line). Returns 0 where unreadable, which disables the
 /// peak-thread assertions rather than failing them.
@@ -187,6 +251,15 @@ pub struct ScaleReport {
     /// headline of the event runtime: O(workers), not O(n). 0 when
     /// `/proc/self/status` is unreadable.
     pub peak_threads: u64,
+    /// Per-path latency quantiles from the session's metric registry
+    /// ([`latency_quantiles`]) — the same histograms `GET /metrics`
+    /// exposes, re-rendered into the table and `BENCH_scale.json`.
+    pub latency: Vec<PathLatency>,
+    /// Prometheus-text scrape of every plane controller (`GET /metrics`
+    /// against each shard and, when K > 1, the fan-in parent), captured
+    /// while the session was still alive. Written to
+    /// `metrics_snapshot.txt` by the bench target.
+    pub metrics_snapshot: String,
 }
 
 impl ScaleReport {
@@ -261,6 +334,26 @@ impl ScaleReport {
             "runtime: {} ({} workers), peak process threads {}",
             self.runtime, self.workers, self.peak_threads
         );
+        if !self.latency.is_empty() {
+            let _ = writeln!(
+                out,
+                "{:>28} {:>6} {:>6} {:>8} {:>9} {:>9} {:>9}",
+                "path", "shard", "class", "calls", "p50_ms", "p95_ms", "p99_ms"
+            );
+            for l in &self.latency {
+                let _ = writeln!(
+                    out,
+                    "{:>28} {:>6} {:>6} {:>8} {:>9.3} {:>9.3} {:>9.3}",
+                    l.path,
+                    l.shard,
+                    l.class,
+                    l.count,
+                    l.p50_secs * 1e3,
+                    l.p95_secs * 1e3,
+                    l.p99_secs * 1e3
+                );
+            }
+        }
         out
     }
 
@@ -363,6 +456,10 @@ impl ScaleReport {
             ("peak_threads", Value::from(self.peak_threads)),
             ("net", Value::from(self.config.net.name.as_str())),
             ("per_round", Value::Arr(rows)),
+            (
+                "latency",
+                Value::Arr(self.latency.iter().map(PathLatency::to_json).collect()),
+            ),
         ])
     }
 
@@ -446,6 +543,10 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
                 if probe.call(proto::STATUS, &Value::obj()).is_ok() {
                     count.fetch_add(1, Ordering::SeqCst);
                 }
+                // Live scrape alongside the status polls: the registry
+                // must serve (and its collectors must run) while the
+                // learners aggregate, not only at quiescence.
+                let _ = probe.call(proto::METRICS, &Value::obj());
                 peak.fetch_max(current_thread_count(), Ordering::SeqCst);
                 std::thread::sleep(Duration::from_millis(25));
             }
@@ -456,6 +557,24 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
     probe_stop.store(true, Ordering::SeqCst);
     let _ = probe_thread.join();
     let results = run?;
+
+    // Scrape every plane controller through the real endpoint while the
+    // session is still alive: each must serve typed Prometheus text.
+    let mut metrics_snapshot = String::new();
+    for (label, ctrl) in session.plane_controllers() {
+        use crate::transport::ClientTransport;
+        let resp = InProcTransport::new(ctrl)
+            .call(proto::METRICS, &Value::obj())
+            .with_context(|| format!("scraping /metrics on controller {label}"))?;
+        let text = resp.str_of("text").unwrap_or_default();
+        ensure!(
+            text.contains("# TYPE"),
+            "controller {label}: /metrics served no typed metric families"
+        );
+        let _ = writeln!(metrics_snapshot, "# ==== controller {label} ====");
+        metrics_snapshot.push_str(text);
+    }
+    let latency = latency_quantiles(session.session_metrics().registry());
 
     // Rebuild each round's plan from the same deterministic inputs the
     // engine used, to derive the per-round group count and cross-check
@@ -532,6 +651,8 @@ pub fn poisson_scale(sc: &ScaleConfig) -> Result<ScaleReport> {
         runtime: runtime_name(sc.runtime).to_string(),
         workers: resolved_workers_for(sc.runtime, sc.workers),
         peak_threads: peak_threads.load(Ordering::SeqCst),
+        latency,
+        metrics_snapshot,
     })
 }
 
@@ -871,6 +992,16 @@ mod tests {
             runtime: "events".into(),
             workers: 4,
             peak_threads: 13,
+            latency: vec![PathLatency {
+                path: "/post_aggregate".into(),
+                shard: "0".into(),
+                class: "chain".into(),
+                count: 36,
+                p50_secs: 0.0005,
+                p95_secs: 0.002,
+                p99_secs: 0.004,
+            }],
+            metrics_snapshot: "# TYPE safe_requests_total counter\n".into(),
         }
     }
 
@@ -901,6 +1032,39 @@ mod tests {
         assert!((smps[0].as_f64().unwrap() - 200.0).abs() < 1e-6);
         assert!(r.to_csv().lines().next().unwrap().contains("fanin_messages"));
         assert!(r.to_table().contains("fanin"));
+        // Registry-sourced latency quantiles ride along in table + JSON
+        // (but not the CSV, whose row count is pinned above).
+        assert!(r.to_table().contains("p95_ms"));
+        assert!(r.to_table().contains("/post_aggregate"));
+        let lat = json.get("latency").unwrap().as_arr().unwrap();
+        assert_eq!(lat.len(), 1);
+        assert_eq!(lat[0].str_of("path"), Some("/post_aggregate"));
+        assert_eq!(lat[0].str_of("shard"), Some("0"));
+        assert_eq!(lat[0].u64_of("count"), Some(36));
+        assert!((lat[0].get("p95_secs").and_then(|v| v.as_f64()).unwrap() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_quantiles_read_back_recorded_series() {
+        use crate::metrics::{names, MetricRegistry};
+        use std::time::Duration;
+        let reg = MetricRegistry::new();
+        let rec = crate::metrics::LatencyRecorder::new(reg.clone(), "0");
+        for _ in 0..10 {
+            rec.observe(proto::POST_AGGREGATE, Duration::from_micros(300));
+        }
+        rec.observe(proto::PROGRESS_CHECK, Duration::from_micros(80));
+        let rows = latency_quantiles(&reg);
+        assert_eq!(rows.len(), 2);
+        // Sorted by (class, path, shard): chain before monitor.
+        assert_eq!(rows[0].path, proto::POST_AGGREGATE);
+        assert_eq!(rows[0].class, "chain");
+        assert_eq!(rows[0].count, 10);
+        assert!(rows[0].p50_secs > 0.0 && rows[0].p50_secs <= rows[0].p99_secs);
+        assert_eq!(rows[1].class, "monitor");
+        // And the same registry renders those series as exposition text.
+        let text = reg.render();
+        assert!(text.contains(&format!("# TYPE {} histogram", names::REQUEST_DURATION_SECONDS)));
     }
 
     #[test]

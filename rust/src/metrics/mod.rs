@@ -1,8 +1,303 @@
 //! Metrics: what every run reports — aggregation wall time, message
 //! counts (to verify the paper's `4n`-family formulas), bytes moved, and
-//! failure bookkeeping.
+//! failure bookkeeping — plus the production observability plane: the
+//! typed [`registry::MetricRegistry`] behind every controller's
+//! `GET /metrics` endpoint ([`crate::proto::METRICS`]), with the metric
+//! schema ([`names`]), path classification ([`path_class`]) and the
+//! session-level recording façade ([`SessionMetrics`]).
 
+pub mod registry;
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+pub use registry::{Counter, Gauge, Histogram, MetricRegistry, DEFAULT_LATENCY_EDGES};
+
+/// Canonical metric family names and their help strings. Every series
+/// the session emits comes from this table — the conformance suite
+/// rejects any scraped family not listed here. Label conventions:
+/// `path` is the protocol path, `shard` identifies which controller's
+/// stats a series mirrors (`"0"`..`"K-1"`, or `"parent"` for the fan-in
+/// tier's parent on a K>1 plane), `class` is [`path_class`].
+pub mod names {
+    /// Requests per protocol path, per shard plane. Counter.
+    pub const REQUESTS_TOTAL: &str = "safe_requests_total";
+    /// Request-body bytes per path/shard. Counter.
+    pub const REQUEST_BYTES_TOTAL: &str = "safe_request_bytes_total";
+    /// Response-body bytes per path/shard. Counter.
+    pub const RESPONSE_BYTES_TOTAL: &str = "safe_response_bytes_total";
+    /// Attempts re-sent after a retryable transport failure. Counter.
+    pub const NET_RETRIES_TOTAL: &str = "safe_net_retries_total";
+    /// Injected packet drops observed by the transport. Counter.
+    pub const NET_DROPS_TOTAL: &str = "safe_net_drops_total";
+    /// Duplicate posts absorbed via the attempt-dedup token. Counter.
+    pub const DEDUP_POSTS_TOTAL: &str = "safe_dedup_posts_total";
+    /// Completed aggregation rounds. Counter.
+    pub const ROUNDS_TOTAL: &str = "safe_rounds_total";
+    /// §5.3 progress failovers (f in `4n + 2f`). Counter.
+    pub const PROGRESS_FAILOVERS_TOTAL: &str = "safe_progress_failovers_total";
+    /// §5.4 initiator failovers. Counter.
+    pub const INITIATOR_FAILOVERS_TOTAL: &str = "safe_initiator_failovers_total";
+    /// Key (re-)exchange messages (footnote-3 accounting). Counter.
+    pub const REKEY_MESSAGES_TOTAL: &str = "safe_rekey_messages_total";
+    /// Groups dissolved by privacy-floor merges. Counter.
+    pub const MERGED_GROUPS_TOTAL: &str = "safe_merged_groups_total";
+    /// Nodes that aggregated away from their home group. Counter.
+    pub const REASSIGNED_NODES_TOTAL: &str = "safe_reassigned_nodes_total";
+    /// Learners that hit the hard-deadline safety net. Counter.
+    pub const DEADLINE_EXCEEDED_TOTAL: &str = "safe_deadline_exceeded_total";
+    /// Fan-in tier messages (sharded plane surcharge). Counter.
+    pub const FANIN_MESSAGES_TOTAL: &str = "safe_fanin_messages_total";
+    /// Monitor-triggered reposts. Counter.
+    pub const MONITOR_REPOSTS_TOTAL: &str = "safe_monitor_reposts_total";
+    /// Monitor privacy-floor aborts. Counter.
+    pub const MONITOR_ABORTS_TOTAL: &str = "safe_monitor_aborts_total";
+    /// Monitor merge signals. Counter.
+    pub const MONITOR_MERGE_SIGNALS_TOTAL: &str = "safe_monitor_merge_signals_total";
+    /// Nodes that contributed to the most recent round. Gauge.
+    pub const LIVE_NODES: &str = "safe_live_nodes";
+    /// Most recently completed round number (1-based). Gauge.
+    pub const CURRENT_ROUND: &str = "safe_current_round";
+    /// §5.9 connection pressure: learner polls blocked right now. Gauge.
+    pub const CONTROLLER_WAITING_POLLS: &str = "safe_controller_waiting_polls";
+    /// §5.9 high-water mark of concurrently blocked polls. Gauge.
+    pub const CONTROLLER_PEAK_WAITING_POLLS: &str = "safe_controller_peak_waiting_polls";
+    /// Constant 1 per controller, carrying the shard label. Gauge.
+    pub const CONTROLLER_INFO: &str = "safe_controller_info";
+    /// Per-request latency by path/shard, observed at the transport
+    /// completion points of both runtimes. Histogram.
+    pub const REQUEST_DURATION_SECONDS: &str = "safe_request_duration_seconds";
+    /// Whole-round wall time. Histogram.
+    pub const ROUND_DURATION_SECONDS: &str = "safe_round_duration_seconds";
+    /// Fan-in post→install span (slowest shard per round). Histogram.
+    pub const FANIN_DURATION_SECONDS: &str = "safe_fanin_duration_seconds";
+}
+
+/// Classify a protocol path for the `class` label: `"chain"` for the
+/// §5.2 aggregation chain ops the `4n + 2f (+g)` formula bounds,
+/// `"key"` for §5.1/§5.8 key traffic (footnote-3 accounting), `"fanin"`
+/// for the sharded plane's §5.10 fan-in tier, `"monitor"` for §5.3
+/// progress pings, and `"ops"` for management/scrape traffic. The
+/// per-round accounting in the session driver filters by this
+/// classification instead of naming individual paths.
+pub fn path_class(path: &str) -> &'static str {
+    use crate::proto;
+    match path {
+        proto::PROGRESS_CHECK => "monitor",
+        proto::REGISTER_KEY
+        | proto::GET_KEY
+        | proto::POST_PRENEG_KEYS
+        | proto::GET_PRENEG_KEY => "key",
+        proto::FED_POST_CHILD_AVERAGE | proto::FED_GET_GLOBAL_AVERAGE => "fanin",
+        proto::CONFIGURE | proto::BEGIN_ROUND | proto::RESET | proto::STATUS
+        | proto::METRICS => "ops",
+        _ => "chain",
+    }
+}
+
+/// Per-shard request-latency recorder: resolves and caches the
+/// `safe_request_duration_seconds{path, shard, class}` histogram handle
+/// per path so the transport hot path does one map lookup under a small
+/// private lock, not a registry registration.
+pub struct LatencyRecorder {
+    registry: Arc<MetricRegistry>,
+    shard: String,
+    cache: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl std::fmt::Debug for LatencyRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LatencyRecorder").field("shard", &self.shard).finish()
+    }
+}
+
+impl LatencyRecorder {
+    /// A recorder tagging every observation with `shard`.
+    pub fn new(registry: Arc<MetricRegistry>, shard: &str) -> Arc<LatencyRecorder> {
+        Arc::new(LatencyRecorder {
+            registry,
+            shard: shard.to_string(),
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    /// Record one request's completion latency on `path`.
+    pub fn observe(&self, path: &str, latency: Duration) {
+        let h = {
+            let mut cache = self.cache.lock().unwrap();
+            match cache.get(path) {
+                Some(h) => h.clone(),
+                None => {
+                    let h = self.registry.histogram(
+                        names::REQUEST_DURATION_SECONDS,
+                        "Per-request completion latency by path and shard.",
+                        &[
+                            ("path", path),
+                            ("shard", &self.shard),
+                            ("class", path_class(path)),
+                        ],
+                        DEFAULT_LATENCY_EDGES,
+                    );
+                    cache.insert(path.to_string(), h.clone());
+                    h
+                }
+            }
+        };
+        h.observe_duration(latency);
+    }
+}
+
+/// The session's one registry plus pre-resolved handles for the
+/// round-event metrics pushed by the multi-round engine. Transport
+/// counters are *not* pushed through this type — they are mirrored from
+/// `MessageStats` by scrape-time collectors the session registers, so
+/// the registry can never disagree with the accounting the formula
+/// tests pin.
+pub struct SessionMetrics {
+    registry: Arc<MetricRegistry>,
+    rounds: Arc<Counter>,
+    progress_failovers: Arc<Counter>,
+    initiator_failovers: Arc<Counter>,
+    rekey_messages: Arc<Counter>,
+    merged_groups: Arc<Counter>,
+    reassigned_nodes: Arc<Counter>,
+    deadline_exceeded: Arc<Counter>,
+    fanin_messages: Arc<Counter>,
+    live_nodes: Arc<Gauge>,
+    current_round: Arc<Gauge>,
+    round_duration: Arc<Histogram>,
+    fanin_duration: Arc<Histogram>,
+}
+
+impl std::fmt::Debug for SessionMetrics {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SessionMetrics").finish()
+    }
+}
+
+impl SessionMetrics {
+    /// Build a fresh registry with the round-event families registered.
+    pub fn new() -> Arc<SessionMetrics> {
+        let registry = MetricRegistry::new();
+        // Round wall-times live on a coarser grid than request latencies:
+        // the same shape, shifted up to cover multi-second rounds.
+        let round_edges: Vec<f64> =
+            DEFAULT_LATENCY_EDGES.iter().map(|e| e * 10.0).collect();
+        let sm = SessionMetrics {
+            rounds: registry.counter(names::ROUNDS_TOTAL, "Completed aggregation rounds.", &[]),
+            progress_failovers: registry.counter(
+                names::PROGRESS_FAILOVERS_TOTAL,
+                "Progress failovers (f in 4n + 2f).",
+                &[],
+            ),
+            initiator_failovers: registry.counter(
+                names::INITIATOR_FAILOVERS_TOTAL,
+                "Initiator failovers (section 5.4).",
+                &[],
+            ),
+            rekey_messages: registry.counter(
+                names::REKEY_MESSAGES_TOTAL,
+                "Key re-exchange messages, accounted separately per footnote 3.",
+                &[],
+            ),
+            merged_groups: registry.counter(
+                names::MERGED_GROUPS_TOTAL,
+                "Groups dissolved by privacy-floor merges.",
+                &[],
+            ),
+            reassigned_nodes: registry.counter(
+                names::REASSIGNED_NODES_TOTAL,
+                "Nodes aggregated away from their home group.",
+                &[],
+            ),
+            deadline_exceeded: registry.counter(
+                names::DEADLINE_EXCEEDED_TOTAL,
+                "Learners that hit the hard-deadline safety net.",
+                &[],
+            ),
+            fanin_messages: registry.counter(
+                names::FANIN_MESSAGES_TOTAL,
+                "Fan-in tier messages (sharded plane surcharge).",
+                &[],
+            ),
+            live_nodes: registry.gauge(
+                names::LIVE_NODES,
+                "Nodes that contributed to the most recent round.",
+                &[],
+            ),
+            current_round: registry.gauge(
+                names::CURRENT_ROUND,
+                "Most recently completed round number (1-based).",
+                &[],
+            ),
+            round_duration: registry.histogram(
+                names::ROUND_DURATION_SECONDS,
+                "Whole-round wall time.",
+                &[],
+                &round_edges,
+            ),
+            fanin_duration: registry.histogram(
+                names::FANIN_DURATION_SECONDS,
+                "Fan-in post-to-install span (slowest shard per round).",
+                &[],
+                DEFAULT_LATENCY_EDGES,
+            ),
+            registry,
+        };
+        Arc::new(sm)
+    }
+
+    /// The registry behind this session (what `/metrics` renders).
+    pub fn registry(&self) -> &Arc<MetricRegistry> {
+        &self.registry
+    }
+
+    /// A request-latency recorder labeled with `shard`.
+    pub fn recorder(&self, shard: &str) -> Arc<LatencyRecorder> {
+        LatencyRecorder::new(self.registry.clone(), shard)
+    }
+
+    /// The monitor's action counters (reposts, aborts, merge signals),
+    /// incremented live by the progress-monitor thread.
+    pub fn monitor_counters(&self) -> (Arc<Counter>, Arc<Counter>, Arc<Counter>) {
+        (
+            self.registry.counter(
+                names::MONITOR_REPOSTS_TOTAL,
+                "Monitor-triggered reposts.",
+                &[],
+            ),
+            self.registry.counter(
+                names::MONITOR_ABORTS_TOTAL,
+                "Monitor privacy-floor aborts.",
+                &[],
+            ),
+            self.registry.counter(
+                names::MONITOR_MERGE_SIGNALS_TOTAL,
+                "Monitor merge signals.",
+                &[],
+            ),
+        )
+    }
+
+    /// Push one completed round's metrics into the registry.
+    pub fn record_round(&self, round: usize, m: &RoundMetrics) {
+        self.rounds.inc();
+        self.progress_failovers.add(m.progress_failovers);
+        self.initiator_failovers.add(m.initiator_failovers);
+        self.rekey_messages.add(m.rekey_messages);
+        self.merged_groups.add(m.merged_groups);
+        self.reassigned_nodes.add(m.reassigned_nodes);
+        self.deadline_exceeded.add(m.deadline_exceeded);
+        self.fanin_messages.add(m.fanin_messages);
+        self.live_nodes.set(m.contributors as i64);
+        self.current_round.set(round as i64);
+        self.round_duration.observe_duration(m.wall_time);
+        if m.fanin_latency > Duration::ZERO {
+            self.fanin_duration.observe_duration(m.fanin_latency);
+        }
+    }
+}
 
 /// Result of one aggregation round as observed by the session driver.
 #[derive(Debug, Clone)]

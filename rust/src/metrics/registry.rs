@@ -1,0 +1,744 @@
+//! Typed metric registry: counters, gauges and fixed-bucket histograms
+//! behind one process-local registry that renders the Prometheus text
+//! exposition format (the `libs/metrics` registry idiom: typed handles
+//! are registered once, cheap to update from hot paths, and collected
+//! into one scrape).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Hot-path cheap.** A [`Counter`]/[`Gauge`] update is one relaxed
+//!    atomic op; a [`Histogram`] observation is two atomic adds plus one
+//!    CAS loop for the f64 sum. Handles are `Arc`s resolved once and
+//!    cached by the recording site — the registry's maps are only locked
+//!    at registration and scrape time.
+//! 2. **Single source of truth.** Counters that mirror an existing
+//!    accounting structure (e.g. the transport's `MessageStats`) are
+//!    synced from it by a registered collector at scrape time via
+//!    [`Counter::store`], so the registry can never drift from the
+//!    numbers the formula tests pin.
+//! 3. **Mergeable distributions.** Histograms use fixed bucket edges so
+//!    two histograms of the same layout [`Histogram::merge`] exactly
+//!    (bucket-count conservation is a tested invariant).
+//!
+//! Naming and label conventions are documented in `docs/OBSERVABILITY.md`
+//! and enforced by `tests/metrics_conformance.rs`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A monotonically increasing counter (Prometheus type `counter`).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite with `v` — for collectors mirroring an external counter
+    /// that is itself monotone (e.g. `MessageStats` totals). Callers own
+    /// the monotonicity argument; mixing `store` and `add` on one counter
+    /// forfeits it.
+    pub fn store(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a value that can go up and down (Prometheus type `gauge`).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `d` (may be negative).
+    pub fn add(&self, d: i64) {
+        self.value.fetch_add(d, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free f64 accumulator (f64 bits in an `AtomicU64`, CAS add).
+#[derive(Debug, Default)]
+struct AtomicF64 {
+    bits: AtomicU64,
+}
+
+impl AtomicF64 {
+    fn add(&self, v: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Default latency bucket edges (seconds): roughly exponential from
+/// 100 µs to 30 s, sized for the in-proc REST-hop model at the low end
+/// and WAN/straggler rounds at the high end. The `+Inf` bucket is
+/// implicit.
+pub const DEFAULT_LATENCY_EDGES: &[f64] = &[
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0,
+    2.5, 5.0, 10.0, 30.0,
+];
+
+/// A fixed-bucket histogram (Prometheus type `histogram`): cumulative
+/// `le`-labeled buckets, an observation count and an observation sum.
+///
+/// Buckets are **upper-edge inclusive** (`v <= edge`), matching the
+/// Prometheus `le` convention; everything above the last finite edge
+/// lands in the implicit `+Inf` bucket. `observe(0.0)` therefore falls
+/// in the first bucket (every default edge is positive) and
+/// `observe(f64::INFINITY)` in the `+Inf` bucket — both are tested edge
+/// cases, not errors.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Finite upper bucket edges, strictly increasing.
+    edges: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `buckets[edges.len()]` is the
+    /// `+Inf` overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicF64,
+}
+
+impl Histogram {
+    /// Build a histogram over `edges` (finite, strictly increasing).
+    pub fn new(edges: &[f64]) -> Histogram {
+        assert!(
+            edges.windows(2).all(|w| w[0] < w[1]),
+            "histogram edges must be strictly increasing"
+        );
+        assert!(
+            edges.iter().all(|e| e.is_finite()),
+            "histogram edges must be finite (+Inf is implicit)"
+        );
+        Histogram {
+            edges: edges.to_vec(),
+            buckets: (0..=edges.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicF64::default(),
+        }
+    }
+
+    /// The finite bucket edges this histogram was built with.
+    pub fn edges(&self) -> &[f64] {
+        &self.edges
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: f64) {
+        let idx = self
+            .edges
+            .iter()
+            .position(|&e| v <= e)
+            .unwrap_or(self.edges.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.add(v);
+    }
+
+    /// Record one duration observation, in seconds.
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        self.sum.get()
+    }
+
+    /// Per-bucket (non-cumulative) counts; the last entry is the `+Inf`
+    /// overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Fold `other`'s observations into `self`. Both histograms must
+    /// share the same edge layout; `merge(a, b)` is then exactly
+    /// equivalent (for counts and buckets) to having recorded the union
+    /// of observations into one histogram.
+    pub fn merge(&self, other: &Histogram) {
+        assert_eq!(self.edges, other.edges, "cannot merge histograms with different edges");
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            mine.fetch_add(theirs.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.add(other.sum());
+    }
+
+    /// Estimate the `q`-quantile (`0.0..=1.0`) by linear interpolation
+    /// inside the bucket containing the target rank — the estimate is
+    /// always bounded by that bucket's edges. Observations in the `+Inf`
+    /// bucket are reported as the largest finite edge (the histogram
+    /// cannot resolve beyond it); an empty histogram reports `0.0`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let count = self.count();
+        if count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * count as f64).ceil() as u64).max(1);
+        let counts = self.bucket_counts();
+        let mut before = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 && before + c >= target {
+                if i == self.edges.len() {
+                    // Overflow bucket: clamp to the largest finite edge.
+                    return self.edges.last().copied().unwrap_or(f64::INFINITY);
+                }
+                let upper = self.edges[i];
+                // The first bucket spans (-Inf, edge0]; interpolate from 0
+                // for the (typical) non-negative-domain histogram, from
+                // the edge itself when even that is negative.
+                let lower = if i == 0 { upper.min(0.0) } else { self.edges[i - 1] };
+                let frac = (target - before) as f64 / c as f64;
+                return lower + (upper - lower) * frac;
+            }
+            before += c;
+        }
+        self.edges.last().copied().unwrap_or(f64::INFINITY)
+    }
+}
+
+/// What kind of metric a family is (drives the `# TYPE` line).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotone counter.
+    Counter,
+    /// Up/down gauge.
+    Gauge,
+    /// Fixed-bucket histogram.
+    Histogram,
+}
+
+impl MetricKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// One metric family's metadata.
+#[derive(Debug, Clone)]
+struct Family {
+    help: &'static str,
+    kind: MetricKind,
+}
+
+/// Sorted label pairs — the identity of one series within a family.
+type LabelSet = Vec<(String, String)>;
+
+fn label_set(labels: &[(&str, &str)]) -> LabelSet {
+    let mut v: LabelSet =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    v.sort();
+    v
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .bytes()
+            .enumerate()
+            .all(|(i, b)| b.is_ascii_alphabetic() || b == b'_' || b == b':' || (i > 0 && b.is_ascii_digit()))
+}
+
+/// The process-local metric registry: typed get-or-create registration,
+/// scrape-time collectors, and Prometheus text rendering.
+///
+/// Families (name + help + kind) are registered implicitly by the first
+/// [`MetricRegistry::counter`]/[`MetricRegistry::gauge`]/
+/// [`MetricRegistry::histogram`] call; re-registering with the same name
+/// returns the existing handle (and panics on a kind conflict — that is
+/// always a programming error, never data-dependent).
+#[derive(Default)]
+pub struct MetricRegistry {
+    families: Mutex<BTreeMap<String, Family>>,
+    counters: Mutex<BTreeMap<(String, LabelSet), Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<(String, LabelSet), Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<(String, LabelSet), Arc<Histogram>>>,
+    /// Scrape-time sync hooks: each collector refreshes the registry
+    /// series it owns from its external source (see [`Counter::store`]).
+    /// Collectors must not call [`MetricRegistry::render`]/
+    /// [`MetricRegistry::collect`] (the collector lock is held) and must
+    /// not block on protocol state.
+    #[allow(clippy::type_complexity)]
+    collectors: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl std::fmt::Debug for MetricRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricRegistry")
+            .field("families", &self.families.lock().unwrap().len())
+            .field("collectors", &self.collectors.lock().unwrap().len())
+            .finish()
+    }
+}
+
+impl MetricRegistry {
+    /// Fresh, empty registry.
+    pub fn new() -> Arc<MetricRegistry> {
+        Arc::new(MetricRegistry::default())
+    }
+
+    fn register_family(&self, name: &str, help: &'static str, kind: MetricKind) {
+        assert!(valid_name(name), "invalid metric name: {name}");
+        let mut fams = self.families.lock().unwrap();
+        match fams.get(name) {
+            Some(f) => assert_eq!(
+                f.kind, kind,
+                "metric {name} re-registered with a different kind"
+            ),
+            None => {
+                fams.insert(name.to_string(), Family { help, kind });
+            }
+        }
+    }
+
+    /// Get-or-create the counter `name{labels}`.
+    pub fn counter(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        self.register_family(name, help, MetricKind::Counter);
+        let key = (name.to_string(), label_set(labels));
+        self.counters.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    /// Get-or-create the gauge `name{labels}`.
+    pub fn gauge(&self, name: &str, help: &'static str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.register_family(name, help, MetricKind::Gauge);
+        let key = (name.to_string(), label_set(labels));
+        self.gauges.lock().unwrap().entry(key).or_default().clone()
+    }
+
+    /// Get-or-create the histogram `name{labels}` over `edges`. The `le`
+    /// label is reserved (rendered per bucket).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        edges: &[f64],
+    ) -> Arc<Histogram> {
+        assert!(
+            labels.iter().all(|(k, _)| *k != "le"),
+            "histogram label 'le' is reserved"
+        );
+        self.register_family(name, help, MetricKind::Histogram);
+        let key = (name.to_string(), label_set(labels));
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert_with(|| Arc::new(Histogram::new(edges)))
+            .clone()
+    }
+
+    /// Register a scrape-time sync hook (runs before every render).
+    pub fn register_collector(&self, f: impl Fn() + Send + Sync + 'static) {
+        self.collectors.lock().unwrap().push(Box::new(f));
+    }
+
+    /// Run every registered collector, refreshing mirrored series.
+    pub fn collect(&self) {
+        for c in self.collectors.lock().unwrap().iter() {
+            c();
+        }
+    }
+
+    /// Value of the counter `name{labels}`, if it exists (does not run
+    /// collectors — call [`MetricRegistry::collect`] first for mirrored
+    /// counters).
+    pub fn counter_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        let key = (name.to_string(), label_set(labels));
+        self.counters.lock().unwrap().get(&key).map(|c| c.get())
+    }
+
+    /// Value of the gauge `name{labels}`, if it exists.
+    pub fn gauge_value(&self, name: &str, labels: &[(&str, &str)]) -> Option<i64> {
+        let key = (name.to_string(), label_set(labels));
+        self.gauges.lock().unwrap().get(&key).map(|g| g.get())
+    }
+
+    /// The histogram registered as `name{labels}`, if any.
+    pub fn histogram_handle(&self, name: &str, labels: &[(&str, &str)]) -> Option<Arc<Histogram>> {
+        let key = (name.to_string(), label_set(labels));
+        self.histograms.lock().unwrap().get(&key).cloned()
+    }
+
+    /// Every series of the counter family `name`, as (sorted label set,
+    /// value) pairs — the reconciliation tests' bulk view.
+    pub fn counter_series(&self, name: &str) -> Vec<(LabelSet, u64)> {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|((_, ls), c)| (ls.clone(), c.get()))
+            .collect()
+    }
+
+    /// Sum the counter family `name` grouped by one label's value —
+    /// e.g. `sum_counter_by("safe_requests_total", "path")` gives the
+    /// per-path request totals across shards.
+    pub fn sum_counter_by(&self, name: &str, label: &str) -> BTreeMap<String, u64> {
+        let mut out: BTreeMap<String, u64> = BTreeMap::new();
+        for (ls, v) in self.counter_series(name) {
+            if let Some((_, lv)) = ls.iter().find(|(k, _)| k == label) {
+                *out.entry(lv.clone()).or_insert(0) += v;
+            }
+        }
+        out
+    }
+
+    /// Every histogram series of family `name`, as (sorted label set,
+    /// handle) pairs.
+    pub fn histogram_series(&self, name: &str) -> Vec<(LabelSet, Arc<Histogram>)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|((n, _), _)| n == name)
+            .map(|((_, ls), h)| (ls.clone(), h.clone()))
+            .collect()
+    }
+
+    /// Run collectors, then render every family in the Prometheus text
+    /// exposition format (version 0.0.4): `# HELP` / `# TYPE` headers,
+    /// series sorted by label set, histograms as cumulative `le` buckets
+    /// plus `_sum` and `_count`.
+    pub fn render(&self) -> String {
+        self.collect();
+        let families = self.families.lock().unwrap().clone();
+        let mut out = String::new();
+        for (name, fam) in &families {
+            let _ = writeln!(out, "# HELP {name} {}", fam.help);
+            let _ = writeln!(out, "# TYPE {name} {}", fam.kind.as_str());
+            match fam.kind {
+                MetricKind::Counter => {
+                    for ((n, ls), c) in self.counters.lock().unwrap().iter() {
+                        if n == name {
+                            let _ = writeln!(out, "{name}{} {}", fmt_labels(ls), c.get());
+                        }
+                    }
+                }
+                MetricKind::Gauge => {
+                    for ((n, ls), g) in self.gauges.lock().unwrap().iter() {
+                        if n == name {
+                            let _ = writeln!(out, "{name}{} {}", fmt_labels(ls), g.get());
+                        }
+                    }
+                }
+                MetricKind::Histogram => {
+                    for ((n, ls), h) in self.histograms.lock().unwrap().iter() {
+                        if n == name {
+                            render_histogram(&mut out, name, ls, h);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+fn render_histogram(out: &mut String, name: &str, ls: &LabelSet, h: &Histogram) {
+    let counts = h.bucket_counts();
+    let mut cum = 0u64;
+    for (i, c) in counts.iter().enumerate() {
+        cum += c;
+        let le = if i == h.edges().len() {
+            "+Inf".to_string()
+        } else {
+            fmt_f64(h.edges()[i])
+        };
+        let mut with_le = ls.clone();
+        with_le.push(("le".to_string(), le));
+        with_le.sort();
+        let _ = writeln!(out, "{name}_bucket{} {cum}", fmt_labels(&with_le));
+    }
+    let _ = writeln!(out, "{name}_sum{} {}", fmt_labels(ls), fmt_f64(h.sum()));
+    let _ = writeln!(out, "{name}_count{} {}", fmt_labels(ls), h.count());
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn fmt_labels(ls: &LabelSet) -> String {
+    if ls.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> = ls
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+        .collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small deterministic xorshift for the seeded property tests.
+    struct Rng(u64);
+    impl Rng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn f64(&mut self) -> f64 {
+            // ~[0, 64): spans several default buckets plus the overflow.
+            (self.next() % 64_000) as f64 / 1000.0
+        }
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = MetricRegistry::new();
+        let c = reg.counter("safe_test_total", "test counter", &[("path", "/a")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same (name, labels) → same handle.
+        let c2 = reg.counter("safe_test_total", "test counter", &[("path", "/a")]);
+        assert_eq!(c2.get(), 5);
+        let g = reg.gauge("safe_test_gauge", "test gauge", &[]);
+        g.set(7);
+        g.add(-3);
+        assert_eq!(g.get(), 4);
+        assert_eq!(reg.counter_value("safe_test_total", &[("path", "/a")]), Some(5));
+        assert_eq!(reg.counter_value("safe_test_total", &[("path", "/b")]), None);
+        assert_eq!(reg.gauge_value("safe_test_gauge", &[]), Some(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_conflict_panics() {
+        let reg = MetricRegistry::new();
+        let _ = reg.counter("safe_conflict", "as counter", &[]);
+        let _ = reg.gauge("safe_conflict", "as gauge", &[]);
+    }
+
+    #[test]
+    fn histogram_buckets_are_upper_edge_inclusive() {
+        let h = Histogram::new(&[1.0, 2.0, 4.0]);
+        h.observe(1.0); // exactly on an edge → that bucket (le semantics)
+        h.observe(1.5);
+        h.observe(4.0);
+        h.observe(9.0); // overflow
+        assert_eq!(h.bucket_counts(), vec![1, 1, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 15.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_zero_and_infinite_observations() {
+        let h = Histogram::new(&[0.001, 1.0]);
+        h.observe(0.0); // 0-duration: first bucket, not an error
+        h.observe(f64::INFINITY); // +Inf: overflow bucket
+        h.observe(f64::NEG_INFINITY); // -Inf: first bucket
+        assert_eq!(h.bucket_counts(), vec![2, 0, 1]);
+        assert_eq!(h.count(), 3);
+        // Sum is +Inf + -Inf = NaN; count/bucket invariants are the ones
+        // that must survive infinite observations.
+        assert!(h.sum().is_nan());
+        // Quantiles stay bounded: the overflow estimate clamps to the
+        // largest finite edge.
+        assert!(h.quantile(1.0) <= 1.0);
+    }
+
+    #[test]
+    fn seeded_bucket_count_conservation() {
+        let mut rng = Rng(0x5eed_0001);
+        let h = Histogram::new(DEFAULT_LATENCY_EDGES);
+        let n = 5_000;
+        for _ in 0..n {
+            h.observe(rng.f64());
+        }
+        // Conservation: every observation is in exactly one bucket.
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), n);
+        assert_eq!(h.count(), n);
+        // Cumulativity: prefix sums are monotone and end at count.
+        let mut cum = 0u64;
+        for c in h.bucket_counts() {
+            let next = cum + c;
+            assert!(next >= cum);
+            cum = next;
+        }
+        assert_eq!(cum, h.count());
+    }
+
+    #[test]
+    fn seeded_merge_equals_union_recording() {
+        let mut rng = Rng(0xfeed_beef);
+        let a = Histogram::new(DEFAULT_LATENCY_EDGES);
+        let b = Histogram::new(DEFAULT_LATENCY_EDGES);
+        let union = Histogram::new(DEFAULT_LATENCY_EDGES);
+        for i in 0..4_000 {
+            let v = rng.f64();
+            if i % 2 == 0 { a.observe(v) } else { b.observe(v) }
+            union.observe(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.bucket_counts(), union.bucket_counts());
+        assert_eq!(a.count(), union.count());
+        // Sums differ only by f64 association order.
+        assert!((a.sum() - union.sum()).abs() < 1e-6 * union.sum().abs().max(1.0));
+    }
+
+    #[test]
+    fn seeded_quantiles_bounded_by_enclosing_bucket() {
+        let mut rng = Rng(0xabcd_1234_5678_9abc);
+        let h = Histogram::new(DEFAULT_LATENCY_EDGES);
+        let mut values = Vec::new();
+        for _ in 0..2_000 {
+            let v = rng.f64();
+            values.push(v);
+            h.observe(v);
+        }
+        values.sort_by(f64::total_cmp);
+        for q in [0.0, 0.1, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            let est = h.quantile(q);
+            // Find the true rank-order statistic and its enclosing bucket.
+            let rank = ((q * values.len() as f64).ceil() as usize).clamp(1, values.len());
+            let truth = values[rank - 1];
+            let bucket = DEFAULT_LATENCY_EDGES
+                .iter()
+                .position(|&e| truth <= e)
+                .unwrap_or(DEFAULT_LATENCY_EDGES.len());
+            let upper = DEFAULT_LATENCY_EDGES
+                .get(bucket)
+                .copied()
+                .unwrap_or(*DEFAULT_LATENCY_EDGES.last().unwrap());
+            let lower = if bucket == 0 { 0.0 } else { DEFAULT_LATENCY_EDGES[bucket - 1] };
+            assert!(
+                est >= lower && est <= upper,
+                "q={q}: estimate {est} outside enclosing bucket [{lower}, {upper}] (truth {truth})"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::new(&[1.0]);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different edges")]
+    fn merging_different_layouts_panics() {
+        let a = Histogram::new(&[1.0]);
+        let b = Histogram::new(&[2.0]);
+        a.merge(&b);
+    }
+
+    #[test]
+    fn render_emits_prometheus_text() {
+        let reg = MetricRegistry::new();
+        reg.counter("safe_reqs_total", "requests", &[("path", "/x"), ("shard", "0")]).add(3);
+        reg.gauge("safe_live", "live nodes", &[]).set(12);
+        let h = reg.histogram("safe_lat_seconds", "latency", &[("path", "/x")], &[0.5, 1.0]);
+        h.observe(0.2);
+        h.observe(0.7);
+        h.observe(3.0);
+        let text = reg.render();
+        assert!(text.contains("# TYPE safe_reqs_total counter"));
+        assert!(text.contains("safe_reqs_total{path=\"/x\",shard=\"0\"} 3"));
+        assert!(text.contains("# TYPE safe_live gauge"));
+        assert!(text.contains("safe_live 12"));
+        assert!(text.contains("# TYPE safe_lat_seconds histogram"));
+        assert!(text.contains("safe_lat_seconds_bucket{le=\"0.5\",path=\"/x\"} 1"));
+        assert!(text.contains("safe_lat_seconds_bucket{le=\"1\",path=\"/x\"} 2"));
+        assert!(text.contains("safe_lat_seconds_bucket{le=\"+Inf\",path=\"/x\"} 3"));
+        assert!(text.contains("safe_lat_seconds_count{path=\"/x\"} 3"));
+    }
+
+    #[test]
+    fn collectors_run_before_render() {
+        let reg = MetricRegistry::new();
+        let external = Arc::new(AtomicU64::new(41));
+        let mirrored = reg.counter("safe_mirrored_total", "mirrored", &[]);
+        {
+            let external = external.clone();
+            let mirrored = mirrored.clone();
+            reg.register_collector(move || {
+                mirrored.store(external.load(Ordering::Relaxed));
+            });
+        }
+        external.store(42, Ordering::Relaxed);
+        let text = reg.render();
+        assert!(text.contains("safe_mirrored_total 42"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = MetricRegistry::new();
+        reg.counter("safe_esc_total", "escapes", &[("v", "a\"b\\c")]).inc();
+        let text = reg.render();
+        assert!(text.contains("safe_esc_total{v=\"a\\\"b\\\\c\"} 1"), "{text}");
+    }
+}

@@ -39,6 +39,21 @@ pub struct ProgressMonitor {
 impl ProgressMonitor {
     /// Start pinging `progress_check` every `interval` over `transport`.
     pub fn start(transport: Arc<dyn ClientTransport>, interval: Duration) -> ProgressMonitor {
+        ProgressMonitor::start_with_metrics(transport, interval, None)
+    }
+
+    /// Like [`ProgressMonitor::start`], with the session's monitor
+    /// counters (`reposts`, `aborts`, `merge_signals` — in that order)
+    /// incremented live at the same sites as the local atomics.
+    pub fn start_with_metrics(
+        transport: Arc<dyn ClientTransport>,
+        interval: Duration,
+        counters: Option<(
+            Arc<crate::metrics::Counter>,
+            Arc<crate::metrics::Counter>,
+            Arc<crate::metrics::Counter>,
+        )>,
+    ) -> ProgressMonitor {
         let stop = Arc::new(AtomicBool::new(false));
         let wakeup = Arc::new((Mutex::new(false), Condvar::new()));
         let reposts = Arc::new(AtomicU64::new(0));
@@ -56,12 +71,21 @@ impl ProgressMonitor {
                                 match act.str_of("action") {
                                     Some("repost") => {
                                         r.fetch_add(1, Ordering::SeqCst);
+                                        if let Some((c, _, _)) = &counters {
+                                            c.inc();
+                                        }
                                     }
                                     Some("abort_privacy_floor") => {
                                         a.fetch_add(1, Ordering::SeqCst);
+                                        if let Some((_, c, _)) = &counters {
+                                            c.inc();
+                                        }
                                     }
                                     Some("merge_groups") => {
                                         m.fetch_add(1, Ordering::SeqCst);
+                                        if let Some((_, _, c)) = &counters {
+                                            c.inc();
+                                        }
                                     }
                                     _ => {}
                                 }

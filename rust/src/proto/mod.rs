@@ -54,6 +54,11 @@ pub const BEGIN_ROUND: &str = "/begin_round";
 pub const RESET: &str = "/reset";
 pub const PROGRESS_CHECK: &str = "/progress_check";
 pub const STATUS: &str = "/status";
+/// Prometheus scrape endpoint: the controller answers with the session
+/// registry's text exposition (over HTTP, served raw with the
+/// `text/plain; version=0.0.4` content type; over the in-proc handler,
+/// wrapped as the `"text"` field of a status object).
+pub const METRICS: &str = "/metrics";
 
 // ---- INSEC baseline ----
 pub const INSEC_POST: &str = "/insec/post";

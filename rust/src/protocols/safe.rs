@@ -20,7 +20,7 @@ use crate::json::Value;
 use crate::learner::actor::LearnerActor;
 use crate::learner::faults::{ChurnSchedule, FaultPlan};
 use crate::learner::{LearnerContext, LearnerOutcome};
-use crate::metrics::RoundMetrics;
+use crate::metrics::{RoundMetrics, SessionMetrics};
 use crate::monitor::ProgressMonitor;
 use crate::proto;
 use crate::runtime::vector::{NativeMath, VectorMath};
@@ -111,6 +111,10 @@ pub struct SafeSession {
     pub round0_messages: u64,
     /// Aggregation rounds run so far (drives per-round chain shuffling).
     rounds_run: std::sync::atomic::AtomicU64,
+    /// The observability plane: one registry serving every controller's
+    /// `GET /metrics`, fed by scrape-time `MessageStats` mirrors,
+    /// transport latency recorders, and per-round event pushes.
+    metrics: Arc<SessionMetrics>,
 }
 
 /// Outcome of one aggregation round across all learners.
@@ -149,6 +153,47 @@ impl SafeSession {
     /// configured group count).
     pub fn shard_count(&self) -> usize {
         self.shards.len()
+    }
+
+    /// The session's observability plane: the metric registry every
+    /// controller's `GET /metrics` endpoint renders, plus the recording
+    /// handles the engine pushes round events through.
+    pub fn session_metrics(&self) -> &Arc<SessionMetrics> {
+        &self.metrics
+    }
+
+    /// Every message counter the registry mirrors, under its mirror
+    /// label: the session-wide counter as `"parent"` when K > 1 (it then
+    /// carries the key-plane/monitor/fan-in share) or `"0"` on a
+    /// single-shard plane, plus each shard's learner-path counter under
+    /// its shard id. The reconciliation tests walk this list to hold the
+    /// scraped `safe_requests_total`/byte series bit-for-bit equal to
+    /// the accounting the formula tests pin.
+    pub fn stats_by_mirror_label(&self) -> Vec<(String, Arc<MessageStats>)> {
+        let session_label = if self.shards.len() > 1 { "parent" } else { "0" };
+        let mut out = vec![(session_label.to_string(), self.stats.clone())];
+        for (i, s) in self.shard_stats.iter().enumerate() {
+            out.push((i.to_string(), s.clone()));
+        }
+        out
+    }
+
+    /// The plane's scrape targets: every shard controller labeled by its
+    /// shard id, plus the fan-in parent (K > 1 only) labeled `"parent"`.
+    /// Each serves the same session-wide registry on `GET /metrics`;
+    /// series are distinguished by their `shard` label, not by which
+    /// controller rendered them.
+    pub fn plane_controllers(&self) -> Vec<(String, Arc<Controller>)> {
+        let mut out: Vec<(String, Arc<Controller>)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (i.to_string(), c.clone()))
+            .collect();
+        if let Some(p) = &self.parent {
+            out.push(("parent".to_string(), p.clone()));
+        }
+        out
     }
 
     // Session-wide rollups: the shared counter plus every per-shard
@@ -229,6 +274,40 @@ impl SafeSession {
         } else {
             Vec::new()
         };
+        // The observability plane: one registry for the whole session,
+        // installed on every controller (each scrape serves the full
+        // registry; the `shard` label distinguishes the series). The
+        // session counter mirrors under the key-plane's label — "parent"
+        // when sharded, "0" otherwise — and each per-shard counter under
+        // its shard index, so registry totals reconcile with the round
+        // accounting source-for-source.
+        let metrics = SessionMetrics::new();
+        for (s, shard) in shards.iter().enumerate() {
+            shard.install_metrics(metrics.registry().clone(), &s.to_string());
+        }
+        if let Some(p) = &parent {
+            p.install_metrics(metrics.registry().clone(), "parent");
+        }
+        let session_label = if shard_count > 1 { "parent" } else { "0" };
+        stats.mirror_into(metrics.registry(), session_label);
+        for (s, st) in shard_stats.iter().enumerate() {
+            st.mirror_into(metrics.registry(), &s.to_string());
+        }
+        // Latency series are labeled by the controller a request targets.
+        let plane_label = {
+            let shards = shards.clone();
+            let parent = parent.clone();
+            move |target: &Arc<Controller>| -> String {
+                if parent.as_ref().is_some_and(|p| Arc::ptr_eq(target, p)) {
+                    "parent".to_string()
+                } else {
+                    shards
+                        .iter()
+                        .position(|s| Arc::ptr_eq(s, target))
+                        .map_or_else(|| "0".to_string(), |i| i.to_string())
+                }
+            }
+        };
         // Hostile-network injection (`--net`): one shared fault source for
         // every transport in the session. Per-link determinism is keyed
         // inside `NetFaults`; `None` keeps the ideal path byte-identical.
@@ -248,7 +327,8 @@ impl SafeSession {
                 cfg.profile.network_hop,
                 cfg.profile.network_per_kib,
             )
-            .with_wire_format(cfg.wire);
+            .with_wire_format(cfg.wire)
+            .with_latency_metrics(metrics.recorder(&plane_label(target)));
             if let Some(n) = &net {
                 t = t.with_net(n.clone());
             }
@@ -268,10 +348,12 @@ impl SafeSession {
                 let per_kib = cfg.profile.network_per_kib;
                 let wire = cfg.wire;
                 let net = net.clone();
+                let recorder = metrics.recorder(session_label);
                 Box::new(move || {
                     let mut t =
                         InProcTransport::with_costs(ctrl.clone(), stats.clone(), hop, per_kib)
-                            .with_wire_format(wire);
+                            .with_wire_format(wire)
+                            .with_latency_metrics(recorder.clone());
                     if let Some(n) = &net {
                         t = t.with_net(n.clone());
                     }
@@ -289,9 +371,13 @@ impl SafeSession {
                     url.clone()
                 };
                 let wire = cfg.wire;
+                let recorder = metrics.recorder(session_label);
                 Box::new(move || {
-                    Ok(Arc::new(HttpTransport::connect(&url)?.with_wire_format(wire))
-                        as Arc<dyn ClientTransport>)
+                    Ok(Arc::new(
+                        HttpTransport::connect(&url)?
+                            .with_wire_format(wire)
+                            .with_latency_metrics(recorder.clone()),
+                    ) as Arc<dyn ClientTransport>)
                 })
             }
         };
@@ -543,7 +629,8 @@ impl SafeSession {
                             cfg.profile.network_per_kib,
                         )
                         .with_wire_format(cfg.wire)
-                        .with_completion(p.clone());
+                        .with_completion(p.clone())
+                        .with_latency_metrics(metrics.recorder("parent"));
                         Arc::new(FederationBridge::over_completion(
                             (s + 1) as u64,
                             Arc::new(t),
@@ -575,7 +662,8 @@ impl SafeSession {
                             cfg.profile.network_per_kib,
                         )
                         .with_wire_format(cfg.wire)
-                        .with_completion(shard.clone());
+                        .with_completion(shard.clone())
+                        .with_latency_metrics(metrics.recorder(&s.to_string()));
                         if let Some(n) = &net {
                             exec_transport = exec_transport.with_net(n.clone());
                         }
@@ -611,6 +699,7 @@ impl SafeSession {
             _http_server: http_server,
             round0_messages,
             rounds_run: std::sync::atomic::AtomicU64::new(0),
+            metrics,
         })
     }
 
@@ -666,7 +755,13 @@ impl SafeSession {
         let mut monitors: Vec<ProgressMonitor> = self
             .monitor_transports
             .iter()
-            .map(|t| ProgressMonitor::start(t.clone(), self.cfg.monitor_interval))
+            .map(|t| {
+                ProgressMonitor::start_with_metrics(
+                    t.clone(),
+                    self.cfg.monitor_interval,
+                    Some(self.metrics.monitor_counters()),
+                )
+            })
             .collect();
         let mut results = Vec::with_capacity(inputs_per_round.len());
         for (i, inputs) in inputs_per_round.iter().enumerate() {
@@ -976,11 +1071,20 @@ impl SafeSession {
         // key exchange is not per-aggregation) but stays in `per_path`.
         // Fan-in traffic is likewise the sharding surcharge, not edge
         // protocol traffic: counted separately (`fanin_messages`, ≤ 2K)
-        // and left visible in `per_path`.
-        let monitor_msgs = per_path.remove(proto::PROGRESS_CHECK).unwrap_or(0);
-        let fanin_messages: u64 = [proto::FED_POST_CHILD_AVERAGE, proto::FED_GET_GLOBAL_AVERAGE]
+        // and left visible in `per_path`. All three exclusions are driven
+        // by the registry's path classification — one taxonomy shared
+        // with the `class` label on every scraped series — instead of
+        // naming individual paths here.
+        let monitor_msgs: u64 = per_path
             .iter()
-            .map(|p| per_path.get(*p).copied().unwrap_or(0))
+            .filter(|(p, _)| crate::metrics::path_class(p) == "monitor")
+            .map(|(_, v)| *v)
+            .sum();
+        per_path.retain(|p, _| crate::metrics::path_class(p) != "monitor");
+        let fanin_messages: u64 = per_path
+            .iter()
+            .filter(|(p, _)| crate::metrics::path_class(p) == "fanin")
+            .map(|(_, v)| *v)
             .sum();
         let messages = self.total_messages()
             - baseline_msgs
@@ -1029,6 +1133,7 @@ impl SafeSession {
             fanin_latency,
             shard_messages,
         };
+        self.metrics.record_round(epoch as usize, &metrics);
         Ok(SafeRoundResult { metrics, outcomes })
     }
 

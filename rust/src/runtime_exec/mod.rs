@@ -99,6 +99,11 @@ struct PendingCall {
     body: crate::json::Value,
     key: PollKey,
     generation: u64,
+    /// When this submission was handed to the transport — the event
+    /// runtime's half of the latency-histogram observation: a parked
+    /// call's span only closes at a later completion point, which the
+    /// transport cannot see on its own.
+    started: Instant,
 }
 
 /// A call parked on the timer wheel awaiting its retry backoff. The body
@@ -397,9 +402,9 @@ fn resolve_pending(
         return Step::Keep;
     }
     let transport = shared.transport(slot.shard).clone();
-    let (path, key) = {
+    let (path, key, started) = {
         let p = slot.pending.as_ref().unwrap();
-        (p.path, p.key)
+        (p.path, p.key, p.started)
     };
     let probe = {
         let p = slot.pending.as_ref().unwrap();
@@ -414,6 +419,7 @@ fn resolve_pending(
         Ok(Some(resp)) => {
             slot.pending = None;
             transport.notify_unparked(path);
+            transport.observe_latency(path, started.elapsed());
             Step::Run(MachineEvent::Response(resp))
         }
         Ok(None) if timed_out => {
@@ -424,7 +430,10 @@ fn resolve_pending(
             slot.pending = None;
             transport.notify_unparked(path);
             match transport.complete_empty(path) {
-                Ok(resp) => Step::Run(MachineEvent::Response(resp)),
+                Ok(resp) => {
+                    transport.observe_latency(path, started.elapsed());
+                    Step::Run(MachineEvent::Response(resp))
+                }
                 Err(e) => Step::Abort(e),
             }
         }
@@ -447,6 +456,7 @@ fn resolve_pending(
                 Ok(Some(resp)) => {
                     slot.pending = None;
                     transport.notify_unparked(path);
+                    transport.observe_latency(path, started.elapsed());
                     Step::Run(MachineEvent::Response(resp))
                 }
                 // Original poll-window timer is still armed; keep waiting.
@@ -484,6 +494,7 @@ fn submit_call(
     slot.generation += 1;
     let generation = slot.generation;
     let transport = shared.transport(slot.shard).clone();
+    let started = Instant::now();
     match transport.submit(path, &body) {
         Err(e) => {
             let retryable = as_transport_error(&e).is_some_and(|t| t.retryable());
@@ -503,7 +514,10 @@ fn submit_call(
                 CallStep::Done(Err(e))
             }
         }
-        Ok(Submitted::Ready(resp)) => CallStep::Resp(resp),
+        Ok(Submitted::Ready(resp)) => {
+            transport.observe_latency(path, started.elapsed());
+            CallStep::Resp(resp)
+        }
         Ok(Submitted::Pending(key)) => {
             // Register first, probe again after: if the data raced in
             // between submit's probe and the registration, the second
@@ -512,7 +526,10 @@ fn submit_call(
             shared.hub(slot.shard).register(key, task_id, generation);
             match transport.try_complete(path, &body) {
                 Err(e) => CallStep::Done(Err(e)),
-                Ok(Some(resp)) => CallStep::Resp(resp),
+                Ok(Some(resp)) => {
+                    transport.observe_latency(path, started.elapsed());
+                    CallStep::Resp(resp)
+                }
                 Ok(None) => {
                     transport.notify_parked(path);
                     shared.timer.schedule(
@@ -521,7 +538,7 @@ fn submit_call(
                         generation,
                         TimerKind::Poll,
                     );
-                    slot.pending = Some(PendingCall { path, body, key, generation });
+                    slot.pending = Some(PendingCall { path, body, key, generation, started });
                     CallStep::Parked
                 }
             }

@@ -139,7 +139,15 @@ fn serve_connection(
             }
         };
         let resp = handler.handle(&req.path, &body_value);
-        write_response(&mut stream, 200, &codec.encode(&resp), codec.content_type())?;
+        if req.path == crate::proto::METRICS {
+            // Prometheus scrapers expect the raw text exposition, not a
+            // codec-wrapped envelope: unwrap the handler's `"text"` field
+            // and serve it with the exposition-format content type.
+            let text = resp.str_of("text").unwrap_or_default();
+            write_response(&mut stream, 200, text.as_bytes(), "text/plain; version=0.0.4")?;
+        } else {
+            write_response(&mut stream, 200, &codec.encode(&resp), codec.content_type())?;
+        }
         if !req.keep_alive {
             return Ok(());
         }
@@ -241,6 +249,9 @@ pub struct HttpTransport {
     codec: &'static dyn WireCodec,
     /// Read timeout; must exceed the controller's long-poll window.
     pub read_timeout: Duration,
+    /// Observability sink for per-request completion latency (additive:
+    /// never touches the `MessageStats` accounting).
+    latency_metrics: Option<Arc<crate::metrics::LatencyRecorder>>,
 }
 
 impl HttpTransport {
@@ -253,12 +264,24 @@ impl HttpTransport {
             stats: Arc::new(MessageStats::default()),
             codec: WireFormat::Json.codec(),
             read_timeout: Duration::from_secs(600),
+            latency_metrics: None,
         })
     }
 
     /// Select the wire codec (builder-style; JSON is the default).
     pub fn with_wire_format(mut self, format: WireFormat) -> Self {
         self.codec = format.codec();
+        self
+    }
+
+    /// Builder: attach a request-latency recorder (observed on every
+    /// successful `call`, wall time across retries — what the caller
+    /// actually waited).
+    pub fn with_latency_metrics(
+        mut self,
+        recorder: Arc<crate::metrics::LatencyRecorder>,
+    ) -> Self {
+        self.latency_metrics = Some(recorder);
         self
     }
 
@@ -343,6 +366,7 @@ impl HttpTransport {
 
 impl ClientTransport for HttpTransport {
     fn call(&self, path: &str, body: &Value) -> Result<Value> {
+        let started = std::time::Instant::now();
         let body_bytes = self.codec.encode(body);
         self.stats.record(path, body_bytes.len());
         self.stats.record_codec(self.codec.format(), body_bytes.len());
@@ -368,6 +392,9 @@ impl ClientTransport for HttpTransport {
                         && v.str_of("status") == Some("duplicate")
                     {
                         self.stats.record_dedup();
+                    }
+                    if let Some(r) = &self.latency_metrics {
+                        r.observe(path, started.elapsed());
                     }
                     return Ok(v);
                 }

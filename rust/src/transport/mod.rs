@@ -358,6 +358,72 @@ impl MessageStats {
         merged
     }
 
+    /// Register a scrape-time collector on `registry` that mirrors this
+    /// counter set — per-path request/byte counters plus the retry /
+    /// drop / dedup totals — under the `shard` label. The registry never
+    /// drifts from this source: every scrape re-[`Counter::store`]s the
+    /// current totals, so reconciliation with the round accounting is
+    /// exact by construction and the hot path records nothing twice.
+    /// Both sides are held weakly (the collector dies with whichever is
+    /// dropped first, and no `Arc` cycle forms through the registry).
+    ///
+    /// [`Counter::store`]: crate::metrics::Counter::store
+    pub fn mirror_into(
+        self: &Arc<Self>,
+        registry: &Arc<crate::metrics::MetricRegistry>,
+        shard: &str,
+    ) {
+        use crate::metrics::{names, path_class};
+        let stats = Arc::downgrade(self);
+        let reg = Arc::downgrade(registry);
+        let shard = shard.to_string();
+        registry.register_collector(move || {
+            let (Some(stats), Some(reg)) = (stats.upgrade(), reg.upgrade()) else {
+                return;
+            };
+            for (path, st) in stats.per_path_stats() {
+                let labels = [
+                    ("path", path.as_str()),
+                    ("shard", shard.as_str()),
+                    ("class", path_class(&path)),
+                ];
+                reg.counter(names::REQUESTS_TOTAL, "Requests per protocol path.", &labels)
+                    .store(st.messages);
+                reg.counter(
+                    names::REQUEST_BYTES_TOTAL,
+                    "Request-body bytes per protocol path.",
+                    &labels,
+                )
+                .store(st.bytes_sent);
+                reg.counter(
+                    names::RESPONSE_BYTES_TOTAL,
+                    "Response-body bytes per protocol path.",
+                    &labels,
+                )
+                .store(st.bytes_received);
+            }
+            let labels = [("shard", shard.as_str())];
+            reg.counter(
+                names::NET_RETRIES_TOTAL,
+                "Attempts re-sent after a retryable transport failure.",
+                &labels,
+            )
+            .store(stats.retries());
+            reg.counter(
+                names::NET_DROPS_TOTAL,
+                "Injected packet drops observed by the transport.",
+                &labels,
+            )
+            .store(stats.drops());
+            reg.counter(
+                names::DEDUP_POSTS_TOTAL,
+                "Duplicate posts absorbed via the attempt-dedup token.",
+                &labels,
+            )
+            .store(stats.dedup_posts());
+        });
+    }
+
     pub fn reset(&self) {
         self.total.store(0, Ordering::Relaxed);
         self.bytes.store(0, Ordering::Relaxed);
@@ -394,6 +460,11 @@ pub struct InProcTransport {
     /// shared across every per-node transport of a session. `None` (or
     /// an ideal profile) leaves every path byte-for-byte unchanged.
     net: Option<Arc<NetFaults>>,
+    /// Observability sink for per-request completion latency. Purely
+    /// additive: recording a histogram observation never touches
+    /// `MessageStats`, so the message/byte accounting the formula tests
+    /// pin is unchanged whether or not a recorder is attached.
+    latency_metrics: Option<Arc<crate::metrics::LatencyRecorder>>,
 }
 
 impl InProcTransport {
@@ -406,6 +477,7 @@ impl InProcTransport {
             latency: Duration::ZERO,
             per_kib: Duration::ZERO,
             net: None,
+            latency_metrics: None,
         }
     }
 
@@ -442,6 +514,27 @@ impl InProcTransport {
     pub fn with_net(mut self, net: Arc<NetFaults>) -> Self {
         self.net = Some(net);
         self
+    }
+
+    /// Builder: attach a request-latency recorder. Blocking `call`s
+    /// observe their own wall time; completion-style submissions are
+    /// observed by the event runtime via
+    /// [`InProcTransport::observe_latency`] (the transport cannot see a
+    /// parked request's full span on its own).
+    pub fn with_latency_metrics(
+        mut self,
+        recorder: Arc<crate::metrics::LatencyRecorder>,
+    ) -> Self {
+        self.latency_metrics = Some(recorder);
+        self
+    }
+
+    /// Record one completed request's latency on `path` (no-op without a
+    /// recorder attached).
+    pub fn observe_latency(&self, path: &str, latency: Duration) {
+        if let Some(r) = &self.latency_metrics {
+            r.observe(path, latency);
+        }
     }
 
     /// Draw this attempt's fault decision (`None` when exempt/ideal).
@@ -593,8 +686,8 @@ impl InProcTransport {
     }
 }
 
-impl ClientTransport for InProcTransport {
-    fn call(&self, path: &str, body: &Value) -> anyhow::Result<Value> {
+impl InProcTransport {
+    fn call_inner(&self, path: &str, body: &Value) -> anyhow::Result<Value> {
         // Faithful to the REST deployment: the body really crosses the
         // configured codec's boundary in both directions (client encode →
         // server decode, and back), so INSEC's big cleartext float arrays
@@ -615,6 +708,15 @@ impl ClientTransport for InProcTransport {
         self.stats.record_codec(self.codec.format(), resp_encoded.len());
         self.charge(resp_encoded.len());
         self.codec.decode(&resp_encoded)
+    }
+}
+
+impl ClientTransport for InProcTransport {
+    fn call(&self, path: &str, body: &Value) -> anyhow::Result<Value> {
+        let started = std::time::Instant::now();
+        let resp = self.call_inner(path, body)?;
+        self.observe_latency(path, started.elapsed());
+        Ok(resp)
     }
 
     fn message_count(&self) -> u64 {

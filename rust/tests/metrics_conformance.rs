@@ -1,0 +1,505 @@
+//! Metrics-conformance suite: scrape `GET /metrics` from live sessions
+//! and hold the exposition text to the schema.
+//!
+//! Every check runs against text served through the real endpoint
+//! ([`safe_agg::proto::METRICS`] over an in-proc client against each
+//! plane controller), not against registry internals:
+//!
+//! - every sample belongs to a family with a `# TYPE` line, every
+//!   family is in the schema ([`safe_agg::metrics::names`]) with the
+//!   `safe_` prefix, and label keys stay inside the documented set
+//!   (`path`, `shard`, `class`, `le`);
+//! - counters (and histogram `_bucket`/`_count` series) are monotone
+//!   across successive scrapes of a running session;
+//! - histograms are internally consistent per scrape: buckets cumulative
+//!   in `le` order, the `+Inf` bucket equal to `_count`, `_sum`
+//!   non-negative for duration metrics;
+//! - the §5.3 monitor's scrape-visible traffic never perturbs the
+//!   `4n + 2f (+g)` message accounting — the class-level filtering
+//!   regression test for the old `PROGRESS_CHECK` special-case.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use safe_agg::config::{DeviceProfile, RuntimeKind, SessionConfig};
+use safe_agg::crypto::envelope::CipherMode;
+use safe_agg::learner::faults::ChurnSchedule;
+use safe_agg::metrics::names;
+use safe_agg::proto;
+use safe_agg::protocols::SafeSession;
+use safe_agg::transport::{ClientTransport, InProcTransport};
+
+/// One parsed sample line: `name{labels} value`.
+#[derive(Debug, Clone)]
+struct Sample {
+    name: String,
+    labels: BTreeMap<String, String>,
+    value: f64,
+}
+
+/// A parsed scrape: family types plus every sample, in order.
+#[derive(Debug, Clone)]
+struct Scrape {
+    types: BTreeMap<String, String>,
+    samples: Vec<Sample>,
+}
+
+/// Parse Prometheus text exposition format (the subset the registry
+/// emits: no timestamps, no exemplars). Panics on malformed lines so a
+/// formatting regression fails loudly.
+fn parse_exposition(text: &str) -> Scrape {
+    let mut types = BTreeMap::new();
+    let mut samples = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().expect("TYPE line has a family name");
+            let kind = it.next().expect("TYPE line has a kind");
+            types.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or snapshot section marker
+        }
+        let (series, value) =
+            line.rsplit_once(' ').unwrap_or_else(|| panic!("no value in sample line: {line}"));
+        let (name, labels) = match series.split_once('{') {
+            Some((name, rest)) => {
+                let inner = rest
+                    .strip_suffix('}')
+                    .unwrap_or_else(|| panic!("unterminated label set: {line}"));
+                let mut labels = BTreeMap::new();
+                for pair in split_label_pairs(inner) {
+                    let (k, v) = pair
+                        .split_once('=')
+                        .unwrap_or_else(|| panic!("label pair without '=': {line}"));
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .unwrap_or_else(|| panic!("unquoted label value: {line}"));
+                    labels.insert(k.to_string(), v.replace("\\\"", "\"").replace("\\\\", "\\"));
+                }
+                (name.to_string(), labels)
+            }
+            None => (series.to_string(), BTreeMap::new()),
+        };
+        let value = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            v => v.parse().unwrap_or_else(|_| panic!("unparsable value in: {line}")),
+        };
+        samples.push(Sample { name, labels, value });
+    }
+    Scrape { types, samples }
+}
+
+/// Split `k1="v1",k2="v2"` on commas outside quotes (label values may
+/// contain commas in principle, even though the session's never do).
+fn split_label_pairs(inner: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for c in inner.chars() {
+        match c {
+            '\\' if in_quotes && !escaped => {
+                escaped = true;
+                cur.push(c);
+            }
+            '"' if !escaped => {
+                in_quotes = !in_quotes;
+                cur.push(c);
+            }
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => {
+                escaped = false;
+                cur.push(c);
+            }
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Family a sample belongs to: histogram sample suffixes stripped when
+/// the bare name has no TYPE of its own.
+fn family_of(types: &BTreeMap<String, String>, sample: &str) -> String {
+    if types.contains_key(sample) {
+        return sample.to_string();
+    }
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample.strip_suffix(suffix) {
+            if types.get(base).map(String::as_str) == Some("histogram") {
+                return base.to_string();
+            }
+        }
+    }
+    panic!("sample {sample} has no # TYPE family");
+}
+
+/// The complete metric schema: every family the session may emit.
+fn schema() -> BTreeSet<&'static str> {
+    [
+        names::REQUESTS_TOTAL,
+        names::REQUEST_BYTES_TOTAL,
+        names::RESPONSE_BYTES_TOTAL,
+        names::NET_RETRIES_TOTAL,
+        names::NET_DROPS_TOTAL,
+        names::DEDUP_POSTS_TOTAL,
+        names::ROUNDS_TOTAL,
+        names::PROGRESS_FAILOVERS_TOTAL,
+        names::INITIATOR_FAILOVERS_TOTAL,
+        names::REKEY_MESSAGES_TOTAL,
+        names::MERGED_GROUPS_TOTAL,
+        names::REASSIGNED_NODES_TOTAL,
+        names::DEADLINE_EXCEEDED_TOTAL,
+        names::FANIN_MESSAGES_TOTAL,
+        names::MONITOR_REPOSTS_TOTAL,
+        names::MONITOR_ABORTS_TOTAL,
+        names::MONITOR_MERGE_SIGNALS_TOTAL,
+        names::LIVE_NODES,
+        names::CURRENT_ROUND,
+        names::CONTROLLER_WAITING_POLLS,
+        names::CONTROLLER_PEAK_WAITING_POLLS,
+        names::CONTROLLER_INFO,
+        names::REQUEST_DURATION_SECONDS,
+        names::ROUND_DURATION_SECONDS,
+        names::FANIN_DURATION_SECONDS,
+    ]
+    .into_iter()
+    .collect()
+}
+
+/// Scrape one controller through the real endpoint and return the text.
+fn scrape(transport: &InProcTransport) -> String {
+    let resp = transport
+        .call(proto::METRICS, &safe_agg::json::Value::obj())
+        .expect("metrics endpoint answers");
+    resp.str_of("text").expect("metrics response carries text").to_string()
+}
+
+/// Schema conformance of one scrape.
+fn check_schema(s: &Scrape) {
+    let allowed_labels: BTreeSet<&str> = ["path", "shard", "class", "le"].into_iter().collect();
+    let known = schema();
+    for (family, kind) in &s.types {
+        assert!(
+            family.starts_with("safe_"),
+            "family {family} missing the safe_ prefix"
+        );
+        assert!(known.contains(family.as_str()), "family {family} not in the schema");
+        assert!(
+            matches!(kind.as_str(), "counter" | "gauge" | "histogram"),
+            "family {family} has unknown kind {kind}"
+        );
+    }
+    for sample in &s.samples {
+        let fam = family_of(&s.types, &sample.name);
+        assert!(known.contains(fam.as_str()), "sample {} outside the schema", sample.name);
+        for key in sample.labels.keys() {
+            assert!(
+                allowed_labels.contains(key.as_str()),
+                "sample {} carries undocumented label {key}",
+                sample.name
+            );
+        }
+        if let Some(class) = sample.labels.get("class") {
+            let path = sample.labels.get("path").expect("class label implies path label");
+            assert_eq!(
+                class,
+                safe_agg::metrics::path_class(path),
+                "sample {}: class label disagrees with path_class({path})",
+                sample.name
+            );
+        }
+    }
+}
+
+/// Histogram internal invariants of one scrape.
+fn check_histograms(s: &Scrape) {
+    // Group bucket samples by (family, labels-minus-le).
+    type SeriesKey = (String, BTreeMap<String, String>);
+    let mut buckets: BTreeMap<SeriesKey, Vec<(f64, f64)>> = BTreeMap::new();
+    let mut sums: BTreeMap<SeriesKey, f64> = BTreeMap::new();
+    let mut counts: BTreeMap<SeriesKey, f64> = BTreeMap::new();
+    for sample in &s.samples {
+        if let Some(base) = sample.name.strip_suffix("_bucket") {
+            if s.types.get(base).map(String::as_str) != Some("histogram") {
+                continue;
+            }
+            let mut labels = sample.labels.clone();
+            let le = labels.remove("le").expect("bucket sample has le");
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+            buckets.entry((base.to_string(), labels)).or_default().push((le, sample.value));
+        } else if let Some(base) = sample.name.strip_suffix("_sum") {
+            if s.types.get(base).map(String::as_str) == Some("histogram") {
+                sums.insert((base.to_string(), sample.labels.clone()), sample.value);
+            }
+        } else if let Some(base) = sample.name.strip_suffix("_count") {
+            if s.types.get(base).map(String::as_str) == Some("histogram") {
+                counts.insert((base.to_string(), sample.labels.clone()), sample.value);
+            }
+        }
+    }
+    assert!(!buckets.is_empty(), "scrape rendered no histogram series");
+    for (key, series) in &mut buckets {
+        series.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let last = series.last().expect("non-empty bucket series");
+        assert!(
+            last.0.is_infinite(),
+            "{}: histogram is missing its +Inf bucket",
+            key.0
+        );
+        for pair in series.windows(2) {
+            assert!(
+                pair[0].1 <= pair[1].1,
+                "{}: buckets not cumulative (le {} has {} > le {}'s {})",
+                key.0,
+                pair[0].0,
+                pair[0].1,
+                pair[1].0,
+                pair[1].1
+            );
+        }
+        let count = counts.get(key).unwrap_or_else(|| panic!("{}: missing _count", key.0));
+        assert_eq!(last.1, *count, "{}: +Inf bucket != _count", key.0);
+        let sum = sums.get(key).unwrap_or_else(|| panic!("{}: missing _sum", key.0));
+        assert!(*sum >= 0.0, "{}: negative duration sum {sum}", key.0);
+    }
+}
+
+/// Monotonicity of counters (and histogram buckets/counts) between two
+/// successive scrapes of the same session.
+fn check_monotone(earlier: &Scrape, later: &Scrape) {
+    let later_by_series: BTreeMap<(String, BTreeMap<String, String>), f64> = later
+        .samples
+        .iter()
+        .map(|s| ((s.name.clone(), s.labels.clone()), s.value))
+        .collect();
+    for sample in &earlier.samples {
+        let fam = family_of(&earlier.types, &sample.name);
+        let monotone = earlier.types.get(&fam).map(String::as_str) == Some("counter")
+            || sample.name.ends_with("_bucket")
+            || sample.name.ends_with("_count");
+        if !monotone {
+            continue;
+        }
+        if let Some(&lv) = later_by_series.get(&(sample.name.clone(), sample.labels.clone())) {
+            assert!(
+                lv >= sample.value,
+                "{}{:?} went backwards: {} -> {}",
+                sample.name,
+                sample.labels,
+                sample.value,
+                lv
+            );
+        }
+    }
+}
+
+fn cfg(n: usize, groups: usize, runtime: RuntimeKind, shards: usize) -> SessionConfig {
+    SessionConfig {
+        n_nodes: n,
+        groups,
+        features: 2,
+        mode: CipherMode::None,
+        rsa_bits: 512,
+        profile: DeviceProfile::instant(),
+        poll_time: Duration::from_secs(10),
+        aggregation_timeout: Duration::from_secs(60),
+        progress_timeout: Duration::from_secs(2),
+        monitor_interval: Duration::from_millis(20),
+        merge_floor: true,
+        seed: Some(5),
+        runtime,
+        shards,
+        ..Default::default()
+    }
+}
+
+fn inputs(n: usize, rounds: usize) -> Vec<Vec<Vec<f64>>> {
+    (0..rounds)
+        .map(|r| (1..=n).map(|i| vec![(i * (r + 1)) as f64, 0.5 * i as f64]).collect())
+        .collect()
+}
+
+/// Run a session while a side thread scrapes shard 0 continuously;
+/// return every snapshot in order (initial, live…, one per controller at
+/// the end) plus the per-round messages the engine reported.
+fn run_and_scrape(cfg: SessionConfig, rounds: usize) -> (Vec<String>, Vec<u64>) {
+    let n = cfg.n_nodes;
+    let session = SafeSession::new(cfg).expect("session builds");
+    let snapshots = Arc::new(Mutex::new(Vec::new()));
+    let first = session.plane_controllers().remove(0);
+    let live = InProcTransport::new(first.1.clone());
+    snapshots.lock().unwrap().push(scrape(&live));
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = {
+        let stop = stop.clone();
+        let snapshots = snapshots.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                snapshots.lock().unwrap().push(scrape(&live));
+                std::thread::sleep(Duration::from_millis(15));
+            }
+        })
+    };
+    let results = session.run_rounds(&inputs(n, rounds), &ChurnSchedule::none());
+    stop.store(true, Ordering::SeqCst);
+    scraper.join().unwrap();
+    let results = results.expect("rounds complete");
+
+    let mut all = std::mem::take(&mut *snapshots.lock().unwrap());
+    // Final quiescent scrape of every plane controller, parent included.
+    for (_, ctrl) in session.plane_controllers() {
+        all.push(scrape(&InProcTransport::new(ctrl)));
+    }
+    (all, results.iter().map(|r| r.metrics.messages).collect())
+}
+
+fn conformance(runtime: RuntimeKind, shards: usize) {
+    let n = 10;
+    let rounds = 2;
+    let (snapshots, _) = run_and_scrape(cfg(n, 2, runtime, shards), rounds);
+    assert!(snapshots.len() >= 3, "expected initial + live + final scrapes");
+    let parsed: Vec<Scrape> = snapshots.iter().map(|s| parse_exposition(s)).collect();
+    for s in &parsed {
+        check_schema(s);
+    }
+    // The final scrapes have seen whole rounds — full histogram checks
+    // there (early scrapes may predate any latency observation).
+    let last = parsed.last().unwrap();
+    check_histograms(last);
+    for pair in parsed.windows(2) {
+        check_monotone(&pair[0], &pair[1]);
+    }
+    // The round counters must reflect the finished run.
+    let rounds_sample = last
+        .samples
+        .iter()
+        .find(|s| s.name == names::ROUNDS_TOTAL)
+        .expect("rounds counter scraped");
+    assert_eq!(rounds_sample.value, rounds as f64);
+    // Request counters carry the documented labels and cover the chain.
+    assert!(
+        last.samples.iter().any(|s| {
+            s.name == names::REQUESTS_TOTAL
+                && s.labels.get("class").map(String::as_str) == Some("chain")
+        }),
+        "no chain-class request series scraped"
+    );
+    // Latency histograms exist for the learner paths on every runtime.
+    assert!(
+        last.samples.iter().any(|s| {
+            s.name == format!("{}_count", names::REQUEST_DURATION_SECONDS)
+                && s.labels.get("class").map(String::as_str) == Some("chain")
+                && s.value > 0.0
+        }),
+        "no chain-path latency observed"
+    );
+}
+
+#[test]
+fn scrape_conforms_under_event_runtime() {
+    conformance(RuntimeKind::Events, 1);
+}
+
+#[test]
+fn scrape_conforms_under_thread_runtime() {
+    conformance(RuntimeKind::Threads, 1);
+}
+
+#[test]
+fn scrape_conforms_on_sharded_plane() {
+    let n = 10;
+    let (snapshots, _) = run_and_scrape(cfg(n, 2, RuntimeKind::Events, 2), 2);
+    let parsed: Vec<Scrape> = snapshots.iter().map(|s| parse_exposition(s)).collect();
+    for s in &parsed {
+        check_schema(s);
+    }
+    check_histograms(parsed.last().unwrap());
+    for pair in parsed.windows(2) {
+        check_monotone(&pair[0], &pair[1]);
+    }
+    // The sharded plane labels series per source: both shards and the
+    // fan-in parent must appear on the final scrape.
+    let last = parsed.last().unwrap();
+    let shard_labels: BTreeSet<&str> = last
+        .samples
+        .iter()
+        .filter(|s| s.name == names::REQUESTS_TOTAL)
+        .filter_map(|s| s.labels.get("shard").map(String::as_str))
+        .collect();
+    for want in ["0", "1", "parent"] {
+        assert!(shard_labels.contains(want), "no request series labeled shard={want}");
+    }
+    // And the fan-in tier recorded traffic plus its latency histogram.
+    assert!(
+        last.samples.iter().any(|s| s.name == names::FANIN_MESSAGES_TOTAL && s.value > 0.0),
+        "fan-in counter empty on a K=2 plane"
+    );
+}
+
+/// Regression for the monitor special-case: the §5.3 monitor hammers
+/// `progress_check` throughout the round, its traffic is scrape-visible
+/// as monitor-class series, and the engine's class-level filtering keeps
+/// it out of the `4n + 2f (+g)` accounting exactly.
+#[test]
+fn monitor_traffic_never_perturbs_the_formula() {
+    let n = 8;
+    let g = 2u64;
+    let mut c = cfg(n, g as usize, RuntimeKind::Events, 1);
+    // An aggressive monitor: ~1 ping per ms, generous progress window so
+    // none of the pings escalates into a repost.
+    c.monitor_interval = Duration::from_millis(1);
+    c.progress_timeout = Duration::from_secs(10);
+    let session = SafeSession::new(c).expect("session builds");
+    let results = session
+        .run_rounds(&inputs(n, 2), &ChurnSchedule::none())
+        .expect("rounds complete");
+
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.metrics.messages,
+            4 * n as u64 + g,
+            "round {}: monitor traffic leaked into the formula count",
+            i + 1
+        );
+        assert_eq!(r.metrics.progress_failovers, 0);
+        assert!(
+            r.metrics.per_path.keys().all(|p| safe_agg::metrics::path_class(p) != "monitor"),
+            "round {}: monitor-class path leaked into per_path: {:?}",
+            i + 1,
+            r.metrics.per_path
+        );
+    }
+
+    // The filtering was non-vacuous: the registry saw plenty of monitor
+    // traffic even though the round accounting saw none.
+    let ctrl = session.plane_controllers().remove(0).1;
+    let text = scrape(&InProcTransport::new(ctrl));
+    let s = parse_exposition(&text);
+    let monitor_requests: f64 = s
+        .samples
+        .iter()
+        .filter(|smp| {
+            smp.name == names::REQUESTS_TOTAL
+                && smp.labels.get("class").map(String::as_str) == Some("monitor")
+        })
+        .map(|smp| smp.value)
+        .sum();
+    assert!(
+        monitor_requests > 0.0,
+        "monitor never pinged — the regression test lost its subject"
+    );
+}

@@ -248,6 +248,127 @@ fn sharded_plane_agrees_under_poisson_churn() {
     );
 }
 
+/// Scraped-registry reconciliation: after a run, every mirrored
+/// `safe_requests_total` / byte / fault counter series must equal the
+/// `MessageStats` source it mirrors *bit-for-bit* — per path, per mirror
+/// label — on both runtimes and on a K=2 sharded plane. The mirror is a
+/// scrape-time collector, so this holds the observability plane to the
+/// same accounting the formula tests pin, with no tolerance.
+#[test]
+fn registry_counters_reconcile_with_message_stats() {
+    use safe_agg::metrics::{names, path_class};
+    let n = 12;
+    let rounds = inputs_for(n, 2);
+    let churn = ChurnSchedule::poisson(7, n, 2, 0.12, 0.6);
+    for (runtime, shards) in [
+        (RuntimeKind::Threads, 1),
+        (RuntimeKind::Events, 1),
+        (RuntimeKind::Threads, 2),
+        (RuntimeKind::Events, 2),
+    ] {
+        let mut c = cfg(n, 3, CipherMode::None, runtime);
+        c.shards = shards;
+        let session = SafeSession::new(c).unwrap();
+        session.run_rounds(&rounds, &churn).unwrap();
+
+        let registry = session.session_metrics().registry().clone();
+        registry.collect();
+        let sources = session.stats_by_mirror_label();
+        assert_eq!(sources.len(), if shards > 1 { shards + 1 } else { 1 });
+        for (label, stats) in &sources {
+            let per_path = stats.per_path_stats();
+            assert!(
+                shards > 1 || !per_path.is_empty(),
+                "{runtime:?} K={shards}: source {label} recorded nothing"
+            );
+            for (path, st) in &per_path {
+                let labels =
+                    [("path", path.as_str()), ("shard", label.as_str()), ("class", path_class(path))];
+                assert_eq!(
+                    registry.counter_value(names::REQUESTS_TOTAL, &labels),
+                    Some(st.messages),
+                    "{runtime:?} K={shards}: requests diverge for {path} on shard {label}"
+                );
+                assert_eq!(
+                    registry.counter_value(names::REQUEST_BYTES_TOTAL, &labels),
+                    Some(st.bytes_sent),
+                    "{runtime:?} K={shards}: request bytes diverge for {path} on shard {label}"
+                );
+                assert_eq!(
+                    registry.counter_value(names::RESPONSE_BYTES_TOTAL, &labels),
+                    Some(st.bytes_received),
+                    "{runtime:?} K={shards}: response bytes diverge for {path} on shard {label}"
+                );
+            }
+            let fault_labels = [("shard", label.as_str())];
+            assert_eq!(
+                registry.counter_value(names::NET_RETRIES_TOTAL, &fault_labels),
+                Some(stats.retries())
+            );
+            assert_eq!(
+                registry.counter_value(names::NET_DROPS_TOTAL, &fault_labels),
+                Some(stats.drops())
+            );
+            assert_eq!(
+                registry.counter_value(names::DEDUP_POSTS_TOTAL, &fault_labels),
+                Some(stats.dedup_posts())
+            );
+        }
+        // No phantom series either: everything scraped traces back to a
+        // (source, path) pair, so total scraped == total recorded.
+        let scraped_total: u64 = registry
+            .counter_series(names::REQUESTS_TOTAL)
+            .into_iter()
+            .map(|(_, v)| v)
+            .sum();
+        let recorded_total: u64 =
+            sources.iter().map(|(_, s)| s.total()).sum();
+        assert_eq!(
+            scraped_total, recorded_total,
+            "{runtime:?} K={shards}: scraped requests != recorded messages"
+        );
+    }
+}
+
+/// The deterministic (non-monitor) slice of the scraped registry is
+/// itself executor-invariant: threads and events agree on every
+/// per-path request count the schedule determines. Monitor-class series
+/// are timing-dependent by design and excluded, mirroring the engine's
+/// class-level filtering.
+#[test]
+fn registry_per_path_counters_agree_across_runtimes() {
+    use safe_agg::metrics::{names, path_class};
+    let n = 12;
+    let rounds = inputs_for(n, 2);
+    let churn = ChurnSchedule::poisson(7, n, 2, 0.12, 0.6);
+    let totals = |runtime| {
+        let session = SafeSession::new(cfg(n, 3, CipherMode::None, runtime)).unwrap();
+        session.run_rounds(&rounds, &churn).unwrap();
+        let registry = session.session_metrics().registry().clone();
+        registry.collect();
+        let mut by_path: BTreeMap<String, u64> = BTreeMap::new();
+        for (labels, v) in registry.counter_series(names::REQUESTS_TOTAL) {
+            let path = labels
+                .iter()
+                .find(|(k, _)| k == "path")
+                .map(|(_, v)| v.clone())
+                .expect("request series carries a path label");
+            if path_class(&path) == "monitor" {
+                continue;
+            }
+            *by_path.entry(path).or_insert(0) += v;
+        }
+        by_path
+    };
+    let threads = totals(RuntimeKind::Threads);
+    let events = totals(RuntimeKind::Events);
+    assert_eq!(threads, events, "non-monitor registry traffic diverges across runtimes");
+    assert!(
+        threads.keys().any(|p| path_class(p) == "chain"),
+        "differential saw no chain traffic: {threads:?}"
+    );
+}
+
 /// A failure-free single round under both runtimes lands exactly on the
 /// paper's `4n (+ g)` floor — the differential holds at the formula
 /// level, not just relative to each other.
